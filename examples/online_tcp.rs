@@ -1,0 +1,53 @@
+//! Online serving demo: start the TCP server, spawn a fleet of
+//! simulated mobile devices, and print the per-device outcomes — the
+//! deployment shape of the paper's system.
+//!
+//! Run: `cargo run --release --example online_tcp [devices]`
+
+use aigc_edge::config::{default_artifacts_dir, ExperimentConfig};
+use aigc_edge::server::{serve, Client, Response, ServerConfig};
+use aigc_edge::util::Pcg64;
+
+fn main() -> anyhow::Result<()> {
+    let devices: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(8);
+    let dir = default_artifacts_dir();
+    let mut cfg = ExperimentConfig::paper();
+    cfg.pso.particles = 8;
+    cfg.pso.iterations = 10;
+    let server = serve(dir, cfg, ServerConfig { epoch_ms: 300, max_batch: 32 }, "127.0.0.1:0")?;
+    let addr = server.addr;
+    println!("server on {addr}; spawning {devices} devices");
+
+    let handles: Vec<_> = (0..devices)
+        .map(|i| {
+            std::thread::spawn(move || {
+                let mut rng = Pcg64::seeded(900 + i as u64);
+                // paper distributions, scaled down so the demo runs fast
+                let deadline = rng.uniform_in(2.5, 6.0);
+                let eta = rng.uniform_in(5.0, 10.0);
+                let mut client = Client::connect(addr).expect("connect");
+                let t0 = std::time::Instant::now();
+                let resp = client.generate(deadline, eta).expect("generate");
+                (i, deadline, eta, resp, t0.elapsed().as_secs_f64())
+            })
+        })
+        .collect();
+
+    println!("{:>3}  {:>8}  {:>6}  {:>22}  {:>8}", "dev", "deadline", "eta", "response", "rtt_s");
+    for h in handles {
+        let (i, deadline, eta, resp, rtt) = h.join().unwrap();
+        let shown = match &resp {
+            Response::Done { steps, gen_ms, quality, .. } => {
+                format!("{steps} steps, {gen_ms:.0}ms, FID {quality:.1}")
+            }
+            Response::Outage => "OUTAGE".to_string(),
+            Response::Error(e) => format!("ERR {e}"),
+        };
+        println!("{i:>3}  {deadline:>8.2}  {eta:>6.2}  {shown:>22}  {rtt:>8.2}");
+    }
+
+    let mut client = Client::connect(addr)?;
+    let _ = client.generate(3.0, 7.0)?;
+    println!("\nserver metrics:\n{}", client.stats()?);
+    Ok(())
+}

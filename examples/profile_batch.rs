@@ -1,0 +1,18 @@
+//! Fig. 1a on this machine: measure the real batch denoising delay per
+//! bucket on the PJRT runtime and fit g(X) = aX + b.
+//!
+//! Run: `cargo run --release --example profile_batch [reps]`
+
+use aigc_edge::bench;
+use aigc_edge::config::default_artifacts_dir;
+use aigc_edge::runtime::ArtifactStore;
+
+fn main() -> anyhow::Result<()> {
+    aigc_edge::coordinator::pin_xla_single_threaded();
+    let reps: usize =
+        std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(20);
+    let store = ArtifactStore::load(&default_artifacts_dir())?;
+    println!("platform: {} (paper measured on an RTX 3050; shapes, not absolutes, transfer)", store.platform());
+    bench::fig1a(&store, reps);
+    Ok(())
+}

@@ -1,0 +1,206 @@
+"""AOT compile path: train → calibrate → lower to HLO-text artifacts.
+
+Runs ONCE at ``make artifacts``; the Rust coordinator is self-contained
+afterwards. Per batch-size bucket X this emits
+``artifacts/denoise_bX.hlo.txt`` — one DDIM step over a batch of X
+heterogeneous denoising tasks, with the *trained weights and the ᾱ table
+baked in as HLO constants* (so the Rust side feeds only latents and
+per-row timestep indices).
+
+Interchange format is HLO **text**, not a serialized ``HloModuleProto``:
+jax ≥ 0.5 emits protos with 64-bit instruction ids which the ``xla``
+crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the
+text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import calibrate as calibrate_mod
+from . import data
+from .model import (
+    DATA_DIM,
+    HIDDEN_DIM,
+    NUM_TRAIN_STEPS,
+    Params,
+    alpha_bar_schedule,
+    ddim_step,
+)
+from .train import DEFAULT_TRAIN_ITERS, train
+
+# Batch-size buckets: the Rust runtime pads a scheduled batch X_n up to
+# the nearest bucket. Dense near the small sizes where the marginal cost
+# `a` matters most; the top bucket bounds K per batch.
+DEFAULT_BUCKETS = [1, 2, 4, 8, 12, 16, 20, 24, 32]
+
+SEED = 0
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO MLIR → XlaComputation → HLO text (see module docstring).
+
+    The default HLO printer ELIDES large constants as ``{...}`` — fatal
+    here, since the trained weights are baked in as constants (the text
+    parser would silently reload garbage; every output becomes NaN). Use
+    explicit print options with ``print_large_constants=True``.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    opts = xc._xla.HloPrintOptions()
+    opts.print_large_constants = True
+    # jax's HLO printer emits source_end_line/... metadata attributes the
+    # 0.5.1-era text parser rejects — drop metadata entirely.
+    opts.print_metadata = False
+    text = comp.get_hlo_module().to_string(opts)
+    assert "{...}" not in text, "HLO printer elided a constant"
+    return text
+
+
+def load_or_train(out_dir: str, iters: int, seed: int = SEED) -> Params:
+    """Train the ε-predictor, or reuse the cached weights if the training
+    configuration is unchanged."""
+    cache = os.path.join(out_dir, "weights.npz")
+    tag = f"seed={seed} iters={iters} d={DATA_DIM} h={HIDDEN_DIM}"
+    if os.path.exists(cache):
+        blob = np.load(cache)
+        if str(blob.get("tag")) == tag:
+            print(f"[aot] reusing cached weights ({tag})")
+            return Params(**{k: jnp.asarray(blob[k]) for k in Params._fields})
+    params = train(seed=seed, iters=iters)
+    np.savez(
+        cache, tag=tag, **{k: np.asarray(getattr(params, k)) for k in Params._fields}
+    )
+    print(f"[aot] wrote {cache}")
+    return params
+
+
+def lower_bucket(params: Params, alpha_bar: jax.Array, batch: int) -> str:
+    """Lower one DDIM step at batch size `batch`, weights baked as constants."""
+
+    def step(x, t_cur, t_prev):
+        return (ddim_step(params, alpha_bar, x, t_cur, t_prev),)
+
+    spec_x = jax.ShapeDtypeStruct((batch, DATA_DIM), jnp.float32)
+    spec_t = jax.ShapeDtypeStruct((batch,), jnp.int32)
+    lowered = jax.jit(step).lower(spec_x, spec_t, spec_t)
+    return to_hlo_text(lowered)
+
+
+def write_golden(params: Params, alpha_bar: jax.Array, buckets: list[int], out_dir: str) -> dict:
+    """Golden vectors for the Rust runtime's numeric round-trip tests.
+
+    Per bucket B, layout (little-endian):
+      f32 x[B*D] | i32 t_cur[B] | i32 t_prev[B] | f32 expected[B*D]
+    where `expected` is the in-process model's output for those inputs.
+    """
+    golden = {}
+    for b in buckets:
+        key = jax.random.PRNGKey(10_000 + b)
+        x = jax.random.normal(key, (b, DATA_DIM), jnp.float32)
+        t_cur = jnp.linspace(NUM_TRAIN_STEPS, 50, b).round().astype(jnp.int32)
+        t_prev = (t_cur - jnp.linspace(100, 50, b).round().astype(jnp.int32)).clip(0)
+        expected = ddim_step(params, alpha_bar, x, t_cur, t_prev)
+        name = f"golden_b{b}.bin"
+        with open(os.path.join(out_dir, name), "wb") as f:
+            f.write(np.asarray(x, "<f4").tobytes())
+            f.write(np.asarray(t_cur, "<i4").tobytes())
+            f.write(np.asarray(t_prev, "<i4").tobytes())
+            f.write(np.asarray(expected, "<f4").tobytes())
+        golden[str(b)] = name
+        print(f"[aot] golden bucket {b:3d} -> {name}")
+    return golden
+
+
+def write_moments(out_dir: str) -> str:
+    """Target-distribution moments for Rust-side Fréchet-distance checks:
+    little-endian f32 [mu (d) | cov (d*d) row-major]."""
+    mu, cov = data.true_moments()
+    path = os.path.join(out_dir, "moments.bin")
+    buf = np.concatenate([np.asarray(mu, np.float32).ravel(), np.asarray(cov, np.float32).ravel()])
+    buf.astype("<f4").tofile(path)
+    return path
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out", default="../artifacts", help="artifacts directory")
+    parser.add_argument("--buckets", default=",".join(map(str, DEFAULT_BUCKETS)))
+    parser.add_argument("--train-iters", type=int, default=DEFAULT_TRAIN_ITERS)
+    parser.add_argument(
+        "--skip-calibration",
+        action="store_true",
+        help="skip the quality-vs-steps measurement (quick artifact rebuilds)",
+    )
+    parser.add_argument("--calib-samples", type=int, default=calibrate_mod.DEFAULT_NUM_SAMPLES)
+    args = parser.parse_args()
+
+    out_dir = args.out
+    os.makedirs(out_dir, exist_ok=True)
+    buckets = sorted({int(b) for b in args.buckets.split(",") if b})
+
+    params = load_or_train(out_dir, args.train_iters)
+    alpha_bar = alpha_bar_schedule()
+
+    hlo_files = {}
+    for b in buckets:
+        text = lower_bucket(params, alpha_bar, b)
+        name = f"denoise_b{b}.hlo.txt"
+        path = os.path.join(out_dir, name)
+        with open(path, "w") as f:
+            f.write(text)
+        digest = hashlib.sha256(text.encode()).hexdigest()[:16]
+        hlo_files[b] = {"file": name, "sha256_16": digest, "bytes": len(text)}
+        print(f"[aot] bucket {b:3d} -> {name} ({len(text)} chars)")
+
+    quality_path = os.path.join(out_dir, "quality.json")
+    if args.skip_calibration and os.path.exists(quality_path):
+        print("[aot] keeping existing quality.json")
+    else:
+        result = calibrate_mod.calibrate(params, num_samples=args.calib_samples)
+        calibrate_mod.write_quality_json(result, quality_path)
+
+    moments_path = write_moments(out_dir)
+    print(f"[aot] wrote {moments_path}")
+    golden = write_golden(params, alpha_bar, buckets, out_dir)
+
+    manifest = {
+        "data_dim": DATA_DIM,
+        "hidden_dim": HIDDEN_DIM,
+        "num_train_steps": NUM_TRAIN_STEPS,
+        "seed": SEED,
+        "train_iters": args.train_iters,
+        "buckets": buckets,
+        "hlo": {str(b): hlo_files[b] for b in buckets},
+        "quality": "quality.json",
+        "moments": "moments.bin",
+        "golden": golden,
+        "io": {
+            "inputs": [
+                {"name": "x", "shape": ["B", DATA_DIM], "dtype": "f32"},
+                {"name": "t_cur", "shape": ["B"], "dtype": "i32"},
+                {"name": "t_prev", "shape": ["B"], "dtype": "i32"},
+            ],
+            "outputs": [{"name": "x_next", "shape": ["B", DATA_DIM], "dtype": "f32"}],
+            "tuple_output": True,
+        },
+    }
+    manifest_path = os.path.join(out_dir, "manifest.json")
+    with open(manifest_path, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"[aot] wrote {manifest_path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,119 @@
+"""Quality-vs-steps calibration — the reproduction of Fig. 1b.
+
+Measures the generated-content quality of the trained model as a
+function of the DDIM step budget T, then fits the paper's power law
+
+    q(T) = c · T^(−d) + e                                   (Fig. 1b)
+
+Quality metric: the **Fréchet distance** between the Gaussian moments of
+generated samples and the exact moments of the target mixture —
+identical to the FID formula with identity features (DESIGN.md §5):
+
+    FD² = ‖μ₁ − μ₂‖² + tr(Σ₁ + Σ₂ − 2·(Σ₁Σ₂)^{1/2})
+
+The measured curve and the fit are written to ``artifacts/quality.json``,
+which the Rust side loads as its `TableQuality` / `PowerLaw` models.
+"""
+
+from __future__ import annotations
+
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data
+from .model import Params, ddim_sample
+
+DEFAULT_STEP_GRID = [1, 2, 3, 4, 5, 6, 8, 10, 12, 16, 20, 24, 32, 40, 50]
+DEFAULT_NUM_SAMPLES = 2048
+
+
+def frechet_distance(mu1, cov1, mu2, cov2) -> float:
+    """FD between two Gaussians, via the eigendecomposition form of the
+    matrix square root (covariances are symmetric PSD)."""
+    mu1, cov1, mu2, cov2 = (np.asarray(a, np.float64) for a in (mu1, cov1, mu2, cov2))
+    diff = mu1 - mu2
+    # sqrtm(cov1 @ cov2) trace via symmetric factorization:
+    # tr sqrt(C1 C2) = tr sqrt(S C2 S) with C1 = S S (S = C1^{1/2}, symmetric).
+    vals1, vecs1 = np.linalg.eigh(cov1)
+    s1 = (vecs1 * np.sqrt(np.clip(vals1, 0, None))) @ vecs1.T
+    inner = s1 @ cov2 @ s1
+    vals = np.linalg.eigvalsh(inner)
+    tr_sqrt = np.sum(np.sqrt(np.clip(vals, 0, None)))
+    fd2 = diff @ diff + np.trace(cov1) + np.trace(cov2) - 2.0 * tr_sqrt
+    return float(np.sqrt(max(fd2, 0.0)))
+
+
+def sample_moments(x) -> tuple[np.ndarray, np.ndarray]:
+    x = np.asarray(x, np.float64)
+    mu = x.mean(axis=0)
+    xc = x - mu
+    cov = xc.T @ xc / max(x.shape[0] - 1, 1)
+    return mu, cov
+
+
+def measure_quality(params: Params, steps: int, num_samples: int, seed: int = 7) -> float:
+    """FD between DDIM(steps) samples and the exact target moments."""
+    samples = ddim_sample(params, jax.random.PRNGKey(seed), num_samples, steps)
+    mu_g, cov_g = sample_moments(samples)
+    mu_t, cov_t = data.true_moments()
+    return frechet_distance(mu_g, cov_g, np.asarray(mu_t), np.asarray(cov_t))
+
+
+def fit_power_law(ts: list[int], qs: list[float]) -> tuple[float, float, float]:
+    """Least-squares fit of q(T) = c·T^(−d) + e.
+
+    d is grid-searched (the problem is linear in (c, e) for fixed d),
+    matching how the paper fits Fig. 1b.
+    """
+    t = np.asarray(ts, np.float64)
+    q = np.asarray(qs, np.float64)
+    best = (np.inf, 1.0, 1.0, 0.0)
+    for d in np.linspace(0.05, 4.0, 396):
+        basis = t**(-d)
+        a_mat = np.stack([basis, np.ones_like(basis)], axis=1)
+        coef, *_ = np.linalg.lstsq(a_mat, q, rcond=None)
+        resid = a_mat @ coef - q
+        sse = float(resid @ resid)
+        if sse < best[0]:
+            best = (sse, float(coef[0]), float(d), float(coef[1]))
+    _, c, d, e = best
+    return c, d, e
+
+
+def calibrate(
+    params: Params,
+    step_grid: list[int] | None = None,
+    num_samples: int = DEFAULT_NUM_SAMPLES,
+) -> dict:
+    """Measure the full quality curve and fit the power law."""
+    step_grid = step_grid or DEFAULT_STEP_GRID
+    # T = 0 baseline: pure x_T noise, never denoised — the quality a
+    # service that misses its deadline entirely delivers ("outage FID").
+    noise = jax.random.normal(jax.random.PRNGKey(99), (num_samples, data.DATA_DIM))
+    mu_n, cov_n = sample_moments(noise)
+    mu_t, cov_t = data.true_moments()
+    fd_noise = frechet_distance(mu_n, cov_n, np.asarray(mu_t), np.asarray(cov_t))
+    print(f"[calibrate] T=  0  FD={fd_noise:8.4f} (outage baseline)")
+    curve = []
+    for t in step_grid:
+        fd = measure_quality(params, t, num_samples)
+        curve.append({"steps": t, "fd": fd})
+        print(f"[calibrate] T={t:3d}  FD={fd:8.4f}")
+    c, d, e = fit_power_law([p["steps"] for p in curve], [p["fd"] for p in curve])
+    print(f"[calibrate] power-law fit: q(T) = {c:.4f} * T^(-{d:.4f}) + {e:.4f}")
+    return {
+        "metric": "frechet_distance_identity_features",
+        "num_samples": num_samples,
+        "fd_noise": fd_noise,
+        "curve": curve,
+        "power_law": {"c": c, "d": d, "e": e},
+    }
+
+
+def write_quality_json(result: dict, path: str) -> None:
+    with open(path, "w") as f:
+        json.dump(result, f, indent=2)
+    print(f"[calibrate] wrote {path}")

@@ -1,0 +1,11 @@
+"""Layer-1 Pallas kernels for the batch-denoising compute hot path.
+
+Every kernel here runs under ``interpret=True`` (the CPU PJRT plugin
+cannot execute Mosaic custom-calls), and has a pure-jnp oracle in
+:mod:`ref` that pytest checks it against.
+"""
+
+from .matmul import blocked_matmul, linear
+from .ddim_update import ddim_update
+
+__all__ = ["blocked_matmul", "linear", "ddim_update"]

@@ -1,0 +1,131 @@
+"""Blocked Pallas matmul — the MXU-shaped linear-layer kernel.
+
+The paper's GPU hot-spot is the UNet's dense compute inside each
+denoising step. Here every linear layer of the ε-predictor goes through
+this kernel. The TPU adaptation (DESIGN.md §Hardware-Adaptation): the
+CUDA threadblock tiling becomes a ``BlockSpec`` HBM↔VMEM schedule, with
+(block_m × block_k) and (block_k × block_n) panels resident in VMEM and
+an MXU-systolic ``jnp.dot`` per block.
+
+The batch dimension (number of denoising tasks packed into one batch,
+``X_n`` in the paper) is the M axis, so per-step latency is affine in
+the batch size — the empirical Eq. (4) ``g(X) = aX + b``.
+
+``interpret=True`` everywhere: the CPU PJRT plugin executes the kernel
+as plain HLO; real-TPU lowering would emit a Mosaic custom-call.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# MXU-friendly default tiles. f32 sublane×lane is (8, 128); the MXU
+# systolic array is 128×128, so 128-multiples keep it saturated. For the
+# small shapes used by the d=64 denoiser we shrink the block to the
+# (padded) problem size instead of forcing a 128 pad.
+DEFAULT_BLOCK_M = 128
+DEFAULT_BLOCK_N = 128
+DEFAULT_BLOCK_K = 128
+
+_SUBLANE = 8
+_LANE = 128
+
+
+def _round_up(value: int, multiple: int) -> int:
+    return ((value + multiple - 1) // multiple) * multiple
+
+
+def _pick_block(dim: int, preferred: int, multiple: int) -> int:
+    """Largest tile ≤ preferred that is a multiple of `multiple` and
+    covers `dim` if the whole (padded) axis fits in one block."""
+    padded = _round_up(max(dim, 1), multiple)
+    return min(padded, preferred)
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref):
+    """Grid = (m_blocks, n_blocks, k_steps); the output block is revisited
+    across the K axis (its index_map ignores ``kk``), so it stays resident
+    in VMEM and serves as the accumulator — the canonical Pallas matmul
+    schedule."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    ).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_m", "block_n", "block_k", "interpret")
+)
+def blocked_matmul(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    block_m: int = DEFAULT_BLOCK_M,
+    block_n: int = DEFAULT_BLOCK_N,
+    block_k: int = DEFAULT_BLOCK_K,
+    interpret: bool = True,
+) -> jax.Array:
+    """Compute ``x @ w`` with an explicitly tiled Pallas kernel.
+
+    Arbitrary (M, K) x (K, N) shapes are supported: inputs are padded up
+    to tile multiples, the kernel runs on the padded problem, and the
+    result is sliced back. Padding with zeros is exact for matmul.
+    """
+    if x.ndim != 2 or w.ndim != 2:
+        raise ValueError(f"blocked_matmul expects 2-D operands, got {x.shape} @ {w.shape}")
+    m, k = x.shape
+    k2, n = w.shape
+    if k != k2:
+        raise ValueError(f"contraction mismatch: {x.shape} @ {w.shape}")
+
+    bm = _pick_block(m, block_m, _SUBLANE)
+    bn = _pick_block(n, block_n, _LANE)
+    bk = _pick_block(k, block_k, _LANE)
+
+    mp, kp, np_ = _round_up(m, bm), _round_up(k, bk), _round_up(n, bn)
+    xp = jnp.pad(x, ((0, mp - m), (0, kp - k))) if (mp != m or kp != k) else x
+    wp = jnp.pad(w, ((0, kp - k), (0, np_ - n))) if (kp != k or np_ != n) else w
+
+    k_steps = kp // bk
+    grid = (mp // bm, np_ // bn, k_steps)
+
+    out = pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), x.dtype),
+        interpret=interpret,
+    )(xp, wp)
+    return out[:m, :n]
+
+
+def linear(x: jax.Array, w: jax.Array, b: jax.Array, *, interpret: bool = True) -> jax.Array:
+    """Dense layer ``x @ w + b`` on the Pallas matmul."""
+    return blocked_matmul(x, w, interpret=interpret) + b
+
+
+def vmem_bytes(block_m: int, block_n: int, block_k: int, dtype_bytes: int = 4) -> int:
+    """Static VMEM footprint estimate for one grid step (DESIGN.md §Perf):
+    an X panel, a W panel, the output block, and the f32 accumulator."""
+    return dtype_bytes * (
+        block_m * block_k + block_k * block_n + block_m * block_n
+    ) + 4 * block_m * block_n
+
+
+def mxu_utilization(m: int, n: int, k: int, block_m: int = DEFAULT_BLOCK_M) -> float:
+    """Fraction of MXU rows doing useful work for a given batch size M —
+    the quantity that decides the paper's marginal cost `a`."""
+    eff_m = min(_round_up(max(m, 1), _SUBLANE), block_m)
+    return m / eff_m

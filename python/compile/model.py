@@ -1,0 +1,172 @@
+"""Layer-2 JAX model: the ε-predictor + DDIM step used for batch denoising.
+
+The paper's generator is DDIM pretrained on CIFAR-10 (a UNet). Offline,
+without CIFAR-10 or a pretrained checkpoint, we substitute the smallest
+model that preserves the paper's *system* behaviour (DESIGN.md §5): an
+MLP ε-predictor over a d=64 synthetic "image" distribution (4-mode
+Gaussian mixture), trained at build time by :mod:`train`. All dense
+compute goes through the Layer-1 Pallas kernels.
+
+The exported computation is :func:`ddim_step`: **one denoising step over
+a batch of heterogeneous tasks** — each row carries its own current /
+previous timestep index, because a batch mixes tasks from different
+services at different denoising depths. This is the unit the Rust
+coordinator schedules (one `ddim_step` execution = one batch `n`, its
+latency = g(X_n)).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ddim_update, linear
+
+# ---------------------------------------------------------------------------
+# Dimensions (kept deliberately small: training must finish in seconds on
+# CPU at `make artifacts` time; the *system* behaviour, not model capacity,
+# is what the reproduction exercises).
+# ---------------------------------------------------------------------------
+DATA_DIM = 64          # d: flattened synthetic "image"
+HIDDEN_DIM = 256       # MLP width
+TIME_EMB_DIM = 64      # sinusoidal time-embedding width
+NUM_TRAIN_STEPS = 1000  # diffusion discretization T (DDIM subsamples it)
+
+
+class Params(NamedTuple):
+    """ε-predictor parameters (a pytree; NamedTuple keeps HLO arg order stable)."""
+
+    w_in: jax.Array    # (DATA_DIM, HIDDEN_DIM)
+    b_in: jax.Array    # (HIDDEN_DIM,)
+    w_t: jax.Array     # (TIME_EMB_DIM, HIDDEN_DIM)
+    b_t: jax.Array     # (HIDDEN_DIM,)
+    w_mid: jax.Array   # (HIDDEN_DIM, HIDDEN_DIM)
+    b_mid: jax.Array   # (HIDDEN_DIM,)
+    w_out: jax.Array   # (HIDDEN_DIM, DATA_DIM)
+    b_out: jax.Array   # (DATA_DIM,)
+
+
+def init_params(key: jax.Array) -> Params:
+    """He-initialised MLP parameters."""
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+
+    def he(k, fan_in, shape):
+        return jax.random.normal(k, shape, jnp.float32) * math.sqrt(2.0 / fan_in)
+
+    return Params(
+        w_in=he(k1, DATA_DIM, (DATA_DIM, HIDDEN_DIM)),
+        b_in=jnp.zeros((HIDDEN_DIM,), jnp.float32),
+        w_t=he(k2, TIME_EMB_DIM, (TIME_EMB_DIM, HIDDEN_DIM)),
+        b_t=jnp.zeros((HIDDEN_DIM,), jnp.float32),
+        w_mid=he(k3, HIDDEN_DIM, (HIDDEN_DIM, HIDDEN_DIM)),
+        b_mid=jnp.zeros((HIDDEN_DIM,), jnp.float32),
+        w_out=he(k4, HIDDEN_DIM, (HIDDEN_DIM, DATA_DIM)),
+        b_out=jnp.zeros((DATA_DIM,), jnp.float32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Noise schedule — cosine ᾱ (Nichol & Dhariwal), clipped away from 0/1 so
+# the DDIM x̂₀ division is always well-conditioned.
+# ---------------------------------------------------------------------------
+def alpha_bar_schedule(num_steps: int = NUM_TRAIN_STEPS) -> jax.Array:
+    """ᾱ_t for t = 0..num_steps (index 0 is the clean-data end, ᾱ≈1)."""
+    t = jnp.arange(num_steps + 1, dtype=jnp.float32) / num_steps
+    f = jnp.cos((t + 0.008) / 1.008 * jnp.pi / 2.0) ** 2
+    ab = f / f[0]
+    return jnp.clip(ab, 1e-4, 0.9999)
+
+
+def time_embedding(t_norm: jax.Array, dim: int = TIME_EMB_DIM) -> jax.Array:
+    """Sinusoidal embedding of normalised timestep ``t ∈ [0, 1]``, shape (B, dim)."""
+    half = dim // 2
+    freqs = jnp.exp(jnp.linspace(0.0, math.log(1000.0), half))
+    ang = t_norm[:, None] * freqs[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def eps_predictor(
+    params: Params, x: jax.Array, t_norm: jax.Array, *, interpret: bool = True
+) -> jax.Array:
+    """Predict the noise ε̂ in ``x`` at (per-row) normalised timestep ``t_norm``.
+
+    Every matmul is the Layer-1 blocked Pallas kernel, so the whole step
+    lowers into one HLO module with explicit tiling.
+    """
+    temb = time_embedding(t_norm)
+    h = linear(x, params.w_in, params.b_in, interpret=interpret) + linear(
+        temb, params.w_t, params.b_t, interpret=interpret
+    )
+    h = jax.nn.silu(h)
+    h = jax.nn.silu(linear(h, params.w_mid, params.b_mid, interpret=interpret))
+    return linear(h, params.w_out, params.b_out, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ddim_step(
+    params: Params,
+    alpha_bar: jax.Array,
+    x: jax.Array,
+    t_cur: jax.Array,
+    t_prev: jax.Array,
+    *,
+    interpret: bool = True,
+) -> jax.Array:
+    """One DDIM denoising step over a heterogeneous batch.
+
+    Args:
+      params: trained ε-predictor weights.
+      alpha_bar: ``(NUM_TRAIN_STEPS + 1,)`` schedule table.
+      x: ``(B, DATA_DIM)`` latents; row i is a task from some service.
+      t_cur: ``(B,)`` int32 current timestep index per row (1..T).
+      t_prev: ``(B,)`` int32 target timestep index per row (< t_cur; 0 = clean).
+
+    Returns:
+      ``(B, DATA_DIM)`` latents advanced by one step.
+    """
+    ab_cur = alpha_bar[t_cur]
+    ab_prev = alpha_bar[t_prev]
+    t_norm = t_cur.astype(jnp.float32) / NUM_TRAIN_STEPS
+    eps = eps_predictor(params, x, t_norm, interpret=interpret)
+    return ddim_update(
+        x,
+        eps,
+        jnp.sqrt(ab_cur),
+        jnp.sqrt(1.0 - ab_cur),
+        jnp.sqrt(ab_prev),
+        jnp.sqrt(1.0 - ab_prev),
+        interpret=interpret,
+    )
+
+
+def ddim_timesteps(num_steps: int, num_train: int = NUM_TRAIN_STEPS) -> jnp.ndarray:
+    """The DDIM sub-sequence for a budget of ``num_steps`` denoising steps:
+    a uniform grid ``num_train → 0`` with ``num_steps + 1`` knots."""
+    return jnp.linspace(num_train, 0, num_steps + 1).round().astype(jnp.int32)
+
+
+def ddim_sample(
+    params: Params,
+    key: jax.Array,
+    num_samples: int,
+    num_steps: int,
+    *,
+    interpret: bool = True,
+) -> jax.Array:
+    """Generate ``num_samples`` datapoints with a ``num_steps``-step DDIM chain.
+
+    Used by calibration (quality-vs-steps curve) and tests; the serving
+    path instead advances one `ddim_step` per scheduled batch.
+    """
+    ab = alpha_bar_schedule()
+    ts = ddim_timesteps(num_steps)
+    x = jax.random.normal(key, (num_samples, DATA_DIM), jnp.float32)
+    for i in range(num_steps):
+        t_cur = jnp.full((num_samples,), ts[i], jnp.int32)
+        t_prev = jnp.full((num_samples,), ts[i + 1], jnp.int32)
+        x = ddim_step(params, ab, x, t_cur, t_prev, interpret=interpret)
+    return x

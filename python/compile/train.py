@@ -1,0 +1,106 @@
+"""Build-time diffusion training for the ε-predictor.
+
+Runs once inside ``make artifacts`` (seconds on CPU, deterministic
+seed), producing the weights that :mod:`aot` bakes into the HLO
+artifacts. Python never trains — or runs — on the serving path.
+
+The training loop uses the plain-jnp forward pass (not the Pallas
+kernels) for speed under jit; the pytest suite separately asserts the
+Pallas forward is numerically identical, so the exported artifacts (which
+DO use the kernels) match the trained weights.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from . import data
+from .model import (
+    NUM_TRAIN_STEPS,
+    Params,
+    alpha_bar_schedule,
+    init_params,
+    time_embedding,
+)
+
+LEARNING_RATE = 2e-3
+ADAM_B1 = 0.9
+ADAM_B2 = 0.999
+ADAM_EPS = 1e-8
+BATCH_SIZE = 256
+DEFAULT_TRAIN_ITERS = 4000
+
+
+def eps_predictor_jnp(params: Params, x: jax.Array, t_norm: jax.Array) -> jax.Array:
+    """Pure-jnp twin of :func:`model.eps_predictor` (same math, XLA-fused)."""
+    temb = time_embedding(t_norm)
+    h = x @ params.w_in + params.b_in + temb @ params.w_t + params.b_t
+    h = jax.nn.silu(h)
+    h = jax.nn.silu(h @ params.w_mid + params.b_mid)
+    return h @ params.w_out + params.b_out
+
+
+class AdamState(NamedTuple):
+    step: jax.Array
+    mu: Params
+    nu: Params
+
+
+def adam_init(params: Params) -> AdamState:
+    zeros = jax.tree.map(jnp.zeros_like, params)
+    return AdamState(step=jnp.zeros((), jnp.int32), mu=zeros, nu=zeros)
+
+
+def adam_update(params: Params, grads: Params, state: AdamState) -> tuple[Params, AdamState]:
+    step = state.step + 1
+    mu = jax.tree.map(lambda m, g: ADAM_B1 * m + (1 - ADAM_B1) * g, state.mu, grads)
+    nu = jax.tree.map(lambda v, g: ADAM_B2 * v + (1 - ADAM_B2) * g * g, state.nu, grads)
+    bc1 = 1 - ADAM_B1 ** step.astype(jnp.float32)
+    bc2 = 1 - ADAM_B2 ** step.astype(jnp.float32)
+    new_params = jax.tree.map(
+        lambda p, m, v: p - LEARNING_RATE * (m / bc1) / (jnp.sqrt(v / bc2) + ADAM_EPS),
+        params,
+        mu,
+        nu,
+    )
+    return new_params, AdamState(step=step, mu=mu, nu=nu)
+
+
+def diffusion_loss(params: Params, alpha_bar: jax.Array, key: jax.Array) -> jax.Array:
+    """Standard ε-prediction MSE at uniformly sampled timesteps."""
+    k_data, k_t, k_noise = jax.random.split(key, 3)
+    x0 = data.sample(k_data, BATCH_SIZE)
+    t = jax.random.randint(k_t, (BATCH_SIZE,), 1, NUM_TRAIN_STEPS + 1)
+    eps = jax.random.normal(k_noise, x0.shape, jnp.float32)
+    ab = alpha_bar[t][:, None]
+    x_t = jnp.sqrt(ab) * x0 + jnp.sqrt(1.0 - ab) * eps
+    pred = eps_predictor_jnp(params, x_t, t.astype(jnp.float32) / NUM_TRAIN_STEPS)
+    return jnp.mean((pred - eps) ** 2)
+
+
+# NOTE: no buffer donation here — adam_init builds mu/nu with zeros_like,
+# and XLA shares the zero constant across them, so donating the optimizer
+# state would donate one buffer twice.
+@jax.jit
+def _train_step(params: Params, opt: AdamState, alpha_bar: jax.Array, key: jax.Array):
+    loss, grads = jax.value_and_grad(diffusion_loss)(params, alpha_bar, key)
+    params, opt = adam_update(params, grads, opt)
+    return params, opt, loss
+
+
+def train(seed: int = 0, iters: int = DEFAULT_TRAIN_ITERS, log_every: int = 500) -> Params:
+    """Train the ε-predictor; deterministic for a fixed seed."""
+    key = jax.random.PRNGKey(seed)
+    params = init_params(key)
+    opt = adam_init(params)
+    ab = alpha_bar_schedule()
+    for i in range(iters):
+        key, sub = jax.random.split(key)
+        params, opt, loss = _train_step(params, opt, ab, sub)
+        if log_every and (i % log_every == 0 or i == iters - 1):
+            print(f"[train] iter {i:5d} loss {float(loss):.4f}")
+    return params

@@ -1,0 +1,86 @@
+"""Calibration correctness: Fréchet distance + power-law fit (Fig. 1b path)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.calibrate import fit_power_law, frechet_distance, sample_moments
+
+
+class TestFrechetDistance:
+    def test_identity_is_zero(self):
+        mu = np.arange(8.0)
+        cov = np.eye(8) * 2.0
+        assert frechet_distance(mu, cov, mu, cov) == pytest.approx(0.0, abs=1e-6)
+
+    def test_mean_shift_only(self):
+        """With equal covariances, FD reduces to the mean distance."""
+        cov = np.eye(4)
+        a = np.zeros(4)
+        b = np.array([3.0, 0.0, 0.0, 0.0])
+        assert frechet_distance(a, cov, b, cov) == pytest.approx(3.0, rel=1e-6)
+
+    def test_isotropic_covariances_closed_form(self):
+        """FD² between N(0, s²I) and N(0, t²I) in dim d is d·(s−t)²."""
+        d, s, t = 6, 2.0, 0.5
+        fd = frechet_distance(np.zeros(d), s**2 * np.eye(d), np.zeros(d), t**2 * np.eye(d))
+        assert fd == pytest.approx(np.sqrt(d) * (s - t), rel=1e-6)
+
+    def test_symmetry(self):
+        rng = np.random.default_rng(0)
+        a_raw = rng.normal(size=(5, 5))
+        b_raw = rng.normal(size=(5, 5))
+        cov_a = a_raw @ a_raw.T + np.eye(5)
+        cov_b = b_raw @ b_raw.T + np.eye(5)
+        mu_a, mu_b = rng.normal(size=5), rng.normal(size=5)
+        assert frechet_distance(mu_a, cov_a, mu_b, cov_b) == pytest.approx(
+            frechet_distance(mu_b, cov_b, mu_a, cov_a), rel=1e-9
+        )
+
+    @settings(max_examples=25, deadline=None)
+    @given(seed=st.integers(0, 10_000), d=st.integers(2, 12))
+    def test_nonnegative(self, seed, d):
+        rng = np.random.default_rng(seed)
+        a_raw = rng.normal(size=(d, d))
+        b_raw = rng.normal(size=(d, d))
+        fd = frechet_distance(
+            rng.normal(size=d),
+            a_raw @ a_raw.T + 0.1 * np.eye(d),
+            rng.normal(size=d),
+            b_raw @ b_raw.T + 0.1 * np.eye(d),
+        )
+        assert fd >= 0.0
+
+    def test_sample_moments(self):
+        rng = np.random.default_rng(1)
+        xs = rng.normal(loc=3.0, scale=2.0, size=(50_000, 3))
+        mu, cov = sample_moments(xs)
+        np.testing.assert_allclose(mu, [3.0] * 3, atol=0.05)
+        np.testing.assert_allclose(cov, 4.0 * np.eye(3), atol=0.15)
+
+
+class TestPowerLawFit:
+    def test_recovers_exact_power_law(self):
+        ts = [1, 2, 3, 4, 6, 8, 12, 16, 24, 32, 48]
+        c0, d0, e0 = 120.0, 0.8, 15.0
+        qs = [c0 * t ** (-d0) + e0 for t in ts]
+        c, d, e = fit_power_law(ts, qs)
+        assert c == pytest.approx(c0, rel=0.05)
+        assert d == pytest.approx(d0, rel=0.05)
+        assert e == pytest.approx(e0, rel=0.05)
+
+    def test_noisy_fit_monotone_prediction(self):
+        rng = np.random.default_rng(2)
+        ts = list(range(1, 50, 3))
+        qs = [300.0 * t**-1.2 + 20.0 + rng.normal(0, 1.0) for t in ts]
+        c, d, e = fit_power_law(ts, qs)
+        pred = [c * t ** (-d) + e for t in ts]
+        assert all(b <= a + 1e-9 for a, b in zip(pred, pred[1:]))
+        assert d > 0
+
+    def test_fit_on_flat_curve(self):
+        """A constant curve must fit with c ≈ 0 (no spurious decay)."""
+        ts = [1, 2, 4, 8, 16, 32]
+        c, d, e = fit_power_law(ts, [50.0] * len(ts))
+        assert abs(c) < 1e-6
+        assert e == pytest.approx(50.0, rel=1e-6)

@@ -1,0 +1,130 @@
+//! Ablations over the design choices DESIGN.md calls out (not in the
+//! paper): the T* search, PSO budget, fixed batch sizes, and the
+//! bucket-granularity of the compiled artifacts.
+
+use aigc_edge::bandwidth::{EqualAllocator, PsoAllocator, PsoConfig};
+use aigc_edge::bench::TableWriter;
+use aigc_edge::config::ExperimentConfig;
+use aigc_edge::delay::BatchDelayModel;
+use aigc_edge::quality::PowerLawQuality;
+use aigc_edge::scheduler::{BatchScheduler, FixedSizeBatching, Stacking, StackingConfig};
+use aigc_edge::sim::solve_joint;
+use aigc_edge::trace::generate;
+
+fn main() {
+    let cfg = ExperimentConfig::paper();
+    let delay = BatchDelayModel::paper();
+    let quality = PowerLawQuality::paper();
+    let reps = std::env::var("BENCH_REPS").ok().and_then(|s| s.parse().ok()).unwrap_or(3);
+
+    // ---- A1: T* search cap ----
+    // STACKING's quality as the T* grid is truncated: a tiny grid can't
+    // balance step counts; past the feasible maximum extra grid is waste.
+    let mut t1 = TableWriter::new("A1 — STACKING T* search cap", &["t_star_max", "mean FID", "solve ms"])
+        .with_csv("ablation_tstar");
+    let mut prev_q = f64::INFINITY;
+    for cap in [1u32, 2, 4, 8, 16, 32, 64] {
+        let sched = Stacking::new(StackingConfig { t_star_max: Some(cap), max_steps: 1000, ..Default::default() });
+        let mut acc = 0.0;
+        let t0 = std::time::Instant::now();
+        for seed in 0..reps {
+            let w = generate(&cfg.scenario, cfg.seed + seed as u64);
+            acc += solve_joint(&w, &sched, &EqualAllocator, &delay, &quality).outcome.mean_quality();
+        }
+        let q = acc / reps as f64;
+        t1.row(&[cap.to_string(), format!("{q:.3}"), format!("{:.1}", t0.elapsed().as_secs_f64() * 1e3 / reps as f64)]);
+        if cap >= 32 {
+            assert!(q <= prev_q + 0.5, "larger T* grid should not hurt");
+        }
+        prev_q = q;
+    }
+    t1.finish();
+
+    // ---- A2: PSO budget ----
+    let mut t2 = TableWriter::new(
+        "A2 — PSO budget (particles x iterations)",
+        &["particles", "iters", "mean FID", "inner evals"],
+    )
+    .with_csv("ablation_pso");
+    for (p, it) in [(4, 6), (8, 12), (16, 24), (24, 40)] {
+        let alloc = PsoAllocator::new(PsoConfig { particles: p, iterations: it, patience: 0, ..Default::default() });
+        let mut acc = 0.0;
+        let mut evals = 0usize;
+        for seed in 0..reps {
+            let w = generate(&cfg.scenario, cfg.seed + seed as u64);
+            let sol = solve_joint(&w, &Stacking::default(), &alloc, &delay, &quality);
+            acc += sol.outcome.mean_quality();
+            evals += sol.inner_evals;
+        }
+        t2.row(&[
+            p.to_string(),
+            it.to_string(),
+            format!("{:.3}", acc / reps as f64),
+            (evals / reps).to_string(),
+        ]);
+    }
+    t2.finish();
+
+    // ---- A3: fixed batch size sweep (why ⌊K/2⌋ isn't enough) ----
+    let mut t3 =
+        TableWriter::new("A3 — fixed batch size", &["batch", "mean FID"]).with_csv("ablation_fixed_size");
+    let mut fixed_results = Vec::new();
+    for size in [2u32, 5, 10, 15, 20] {
+        let sched = FixedSizeBatching::new(size);
+        let mut acc = 0.0;
+        for seed in 0..reps {
+            let w = generate(&cfg.scenario, cfg.seed + seed as u64);
+            acc += solve_joint(&w, &sched, &EqualAllocator, &delay, &quality).outcome.mean_quality();
+        }
+        fixed_results.push(acc / reps as f64);
+        t3.row(&[size.to_string(), format!("{:.3}", acc / reps as f64)]);
+    }
+    t3.finish();
+    // STACKING beats every fixed size
+    let mut stacking_acc = 0.0;
+    for seed in 0..reps {
+        let w = generate(&cfg.scenario, cfg.seed + seed as u64);
+        stacking_acc +=
+            solve_joint(&w, &Stacking::default(), &EqualAllocator, &delay, &quality).outcome.mean_quality();
+    }
+    let stacking_q = stacking_acc / reps as f64;
+    println!("STACKING (same allocator): {stacking_q:.3}");
+    for (i, q) in fixed_results.iter().enumerate() {
+        assert!(stacking_q <= q + 1e-9, "fixed size #{i} beat STACKING");
+    }
+
+    // ---- A4: delay-model regimes (b/a ratio) ----
+    // The paper's insight needs b >> a; sweep the ratio to show when
+    // batching stops paying.
+    let mut t4 = TableWriter::new(
+        "A4 — delay regime sweep g(X)=aX+b (stacking vs single-instance)",
+        &["a", "b", "stacking FID", "single FID"],
+    )
+    .with_csv("ablation_delay_regime");
+    for (a, b) in [(0.0240, 0.3543), (0.1, 0.1), (0.3, 0.01)] {
+        let d = BatchDelayModel::new(a, b);
+        let mut sq = 0.0;
+        let mut gq = 0.0;
+        for seed in 0..reps {
+            let w = generate(&cfg.scenario, cfg.seed + seed as u64);
+            sq += solve_joint(&w, &Stacking::default(), &EqualAllocator, &d, &quality).outcome.mean_quality();
+            gq += solve_joint(
+                &w,
+                &aigc_edge::scheduler::SingleInstance::default(),
+                &EqualAllocator,
+                &d,
+                &quality,
+            )
+            .outcome
+            .mean_quality();
+        }
+        t4.row(&[
+            format!("{a}"),
+            format!("{b}"),
+            format!("{:.2}", sq / reps as f64),
+            format!("{:.2}", gq / reps as f64),
+        ]);
+    }
+    t4.finish();
+    println!("\nablations OK");
+}

@@ -1,0 +1,27 @@
+//! Fig. 1a — denoising delay vs batch size, measured on the real PJRT
+//! runtime, with the aX+b fit printed against the paper's constants.
+//! (`harness = false`: criterion is not in the offline vendored set.)
+
+use aigc_edge::bench;
+use aigc_edge::config::default_artifacts_dir;
+use aigc_edge::runtime::ArtifactStore;
+
+fn main() {
+    // single-threaded XLA: on a many-core CPU the tiny model's per-task
+    // compute is otherwise parallelized away and the slope `a` vanishes
+    aigc_edge::coordinator::pin_xla_single_threaded();
+    let reps = std::env::var("BENCH_REPS").ok().and_then(|s| s.parse().ok()).unwrap_or(20);
+    let store = ArtifactStore::load(&default_artifacts_dir())
+        .expect("artifacts missing — run `make artifacts`");
+    let rows = bench::fig1a(&store, reps);
+    // Shape assertions (the figure's claims):
+    // delay grows with batch size, but per-task delay falls.
+    let first = rows.first().unwrap();
+    let last = rows.last().unwrap();
+    assert!(last.1 > first.1, "total delay must grow with batch size");
+    assert!(
+        (last.1 / last.0 as f64) < (first.1 / first.0 as f64),
+        "per-task delay must fall with batch size (amortization)"
+    );
+    println!("\nfig1a OK");
+}

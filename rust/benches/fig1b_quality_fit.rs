@@ -1,0 +1,20 @@
+//! Fig. 1b — FID-like quality vs denoising steps: the measured
+//! calibration curve plus the power-law fit, paper vs rust re-fit.
+
+use aigc_edge::bench;
+use aigc_edge::config::ExperimentConfig;
+
+fn main() {
+    let cfg = ExperimentConfig::paper();
+    let rows = bench::fig1b(&cfg);
+    // Shape assertions: steep early gains, flat tail.
+    let q1 = rows.first().unwrap().1;
+    let mid = rows[rows.len() / 2].1;
+    let qend = rows.last().unwrap().1;
+    assert!(q1 > 2.0 * mid, "early steps must dominate quality gains");
+    assert!(mid > qend, "curve must keep (slowly) improving");
+    let early_gain = q1 - mid;
+    let late_gain = mid - qend;
+    assert!(early_gain > 3.0 * late_gain, "diminishing returns expected");
+    println!("\nfig1b OK");
+}

@@ -1,0 +1,34 @@
+//! Fig. 2b — mean FID vs number of services, five schemes.
+//! BENCH_REPS controls seeds per point (default 3).
+
+use aigc_edge::bench;
+use aigc_edge::config::ExperimentConfig;
+
+fn main() {
+    let reps = std::env::var("BENCH_REPS").ok().and_then(|s| s.parse().ok()).unwrap_or(3);
+    let mut cfg = ExperimentConfig::paper();
+    // moderate PSO budget: the sweep runs 8 K-values x 5 schemes x reps
+    cfg.pso.particles = 12;
+    cfg.pso.iterations = 16;
+    cfg.pso.patience = 8;
+    let ks = [5, 10, 15, 20, 25, 30, 35, 40];
+    let rows = bench::fig2b(&cfg, &ks, reps);
+
+    // The figure's claims:
+    for (k, vals) in &rows {
+        // proposed (index 0) is the best scheme everywhere
+        for (i, v) in vals.iter().enumerate() {
+            assert!(vals[0] <= v * 1.02 + 1e-9, "K={k}: scheme {i} beats proposed");
+        }
+    }
+    // mean FID grows with K for every scheme (quality degrades with load)
+    let first = &rows[0].1;
+    let last = &rows[rows.len() - 1].1;
+    assert!(last[0] > first[0], "proposed should degrade with K");
+    // single-instance (index 1) collapses much faster than proposed
+    assert!(
+        (last[1] - first[1]) > 2.0 * (last[0] - first[0]),
+        "single-instance must collapse fastest"
+    );
+    println!("\nfig2b OK");
+}

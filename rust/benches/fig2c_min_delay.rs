@@ -1,0 +1,36 @@
+//! Fig. 2c — mean FID vs minimum delay requirement (τmax = 20 s, K = 20),
+//! five schemes. BENCH_REPS controls seeds per point (default 3).
+
+use aigc_edge::bench;
+use aigc_edge::config::ExperimentConfig;
+
+fn main() {
+    let reps = std::env::var("BENCH_REPS").ok().and_then(|s| s.parse().ok()).unwrap_or(3);
+    let mut cfg = ExperimentConfig::paper();
+    cfg.pso.particles = 12;
+    cfg.pso.iterations = 16;
+    cfg.pso.patience = 8;
+    let taus = [3.0, 5.0, 7.0, 9.0, 11.0, 13.0, 15.0, 17.0, 19.0];
+    let rows = bench::fig2c(&cfg, &taus, reps);
+
+    for (tau, vals) in &rows {
+        for (i, v) in vals.iter().enumerate() {
+            assert!(vals[0] <= v * 1.02 + 1e-9, "tau_min={tau}: scheme {i} beats proposed");
+        }
+    }
+    // proposed improves as the minimum deadline loosens
+    let proposed: Vec<f64> = rows.iter().map(|r| r.1[0]).collect();
+    assert!(
+        proposed.first().unwrap() > proposed.last().unwrap(),
+        "quality should improve with looser deadlines: {proposed:?}"
+    );
+    // the PSO-vs-equal gap (index 4 is equal-bandwidth) is larger at
+    // tighter tau_min
+    let gap_tight = rows[0].1[4] - rows[0].1[0];
+    let gap_loose = rows[rows.len() - 1].1[4] - rows[rows.len() - 1].1[0];
+    assert!(
+        gap_tight >= gap_loose - 0.5,
+        "bandwidth-allocation gain should be largest under tight deadlines"
+    );
+    println!("\nfig2c OK");
+}

@@ -1,0 +1,108 @@
+//! Micro-benchmarks of the request-path hot spots (the §Perf numbers in
+//! EXPERIMENTS.md): STACKING solve, PSO objective eval, PJRT execution
+//! per bucket, artifact load. harness=false — plain Instant timing with
+//! warmup and median-of-N.
+
+use aigc_edge::bandwidth::EqualAllocator;
+use aigc_edge::config::{default_artifacts_dir, ExperimentConfig};
+use aigc_edge::delay::BatchDelayModel;
+use aigc_edge::quality::PowerLawQuality;
+use aigc_edge::runtime::{ArtifactStore, BatchInput, DenoiseExecutor};
+use aigc_edge::scheduler::{BatchScheduler, Stacking};
+use aigc_edge::sim::{gen_budgets, solve_joint};
+use aigc_edge::trace::generate;
+use aigc_edge::util::Pcg64;
+
+fn median_of<F: FnMut() -> ()>(n: usize, mut f: F) -> f64 {
+    let mut times: Vec<f64> = (0..n)
+        .map(|_| {
+            let t0 = std::time::Instant::now();
+            f();
+            t0.elapsed().as_secs_f64()
+        })
+        .collect();
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    times[n / 2]
+}
+
+fn main() {
+    let cfg = ExperimentConfig::paper();
+    let delay = BatchDelayModel::paper();
+    let quality = PowerLawQuality::paper();
+    let reps = std::env::var("BENCH_REPS").ok().and_then(|s| s.parse().ok()).unwrap_or(15);
+
+    // ---- STACKING solve (the PSO inner objective) ----
+    for k in [10usize, 20, 40] {
+        let mut scenario = cfg.scenario.clone();
+        scenario.num_services = k;
+        let w = generate(&scenario, 1);
+        let services = gen_budgets(&w, &vec![w.total_bandwidth_hz / k as f64; k]);
+        let sched = Stacking::default();
+        // warmup
+        let _ = sched.schedule(&services, &delay, &quality);
+        let t = median_of(reps, || {
+            let _ = sched.schedule(&services, &delay, &quality);
+        });
+        println!("stacking_solve K={k:<3}           {:>10.3} ms", t * 1e3);
+    }
+
+    // ---- full joint solve (PSO outer) ----
+    {
+        let w = generate(&cfg.scenario, 1);
+        let mut c = cfg.clone();
+        c.pso.particles = 8;
+        c.pso.iterations = 10;
+        let alloc = aigc_edge::bandwidth::PsoAllocator::new(aigc_edge::bandwidth::PsoConfig {
+            particles: c.pso.particles,
+            iterations: c.pso.iterations,
+            patience: 0,
+            ..Default::default()
+        });
+        let t = median_of(5, || {
+            let _ = solve_joint(&w, &Stacking::default(), &alloc, &delay, &quality);
+        });
+        println!("joint_solve K=20 (8x10 pso)     {:>10.3} ms", t * 1e3);
+        let t_eq = median_of(reps, || {
+            let _ = solve_joint(&w, &Stacking::default(), &EqualAllocator, &delay, &quality);
+        });
+        println!("joint_solve K=20 (equal)        {:>10.3} ms", t_eq * 1e3);
+    }
+
+    // ---- PJRT execution per bucket ----
+    let dir = default_artifacts_dir();
+    if dir.join("manifest.json").exists() {
+        let t_load = {
+            let t0 = std::time::Instant::now();
+            let s = ArtifactStore::load(&dir).unwrap();
+            let dt = t0.elapsed().as_secs_f64();
+            drop(s);
+            dt
+        };
+        println!("artifact_load+compile (9 hlo)   {:>10.1} ms", t_load * 1e3);
+        let store = ArtifactStore::load(&dir).unwrap();
+        let mut exec = DenoiseExecutor::new(&store);
+        let dim = exec.data_dim();
+        let mut rng = Pcg64::seeded(5);
+        for bucket in [1u32, 8, 32] {
+            let latents: Vec<Vec<f32>> = (0..bucket as usize)
+                .map(|_| (0..dim).map(|_| rng.normal() as f32).collect())
+                .collect();
+            let batch: Vec<BatchInput> = latents
+                .iter()
+                .map(|l| BatchInput { latent: l, t_cur: 500, t_prev: 450 })
+                .collect();
+            let _ = exec.step(&batch).unwrap(); // warmup
+            let t = median_of(reps, || {
+                let _ = exec.step(&batch).unwrap();
+            });
+            println!(
+                "pjrt_step bucket={bucket:<3}            {:>10.3} ms ({:.3} ms/task)",
+                t * 1e3,
+                t * 1e3 / bucket as f64
+            );
+        }
+    } else {
+        println!("(artifacts missing — skipping PJRT micro-benches)");
+    }
+    println!("\nmicro_hotpath OK");
+}

@@ -1,0 +1,184 @@
+//! Bandwidth allocation — problem (P1) of the paper.
+//!
+//! Given per-device links and the batch-denoising inner solver, choose
+//! `B_k` with `Σ B_k ≤ B`, `B_k > 0` (Eqs. 9–10) to minimize the inner
+//! objective `Q*(B_1..B_K)`. The paper uses PSO; [`PsoAllocator`] is a
+//! full particle-swarm implementation whose particles live on the
+//! simplex `{B : Σ B_k = B, B_k ≥ B_min}` (allocating less than the full
+//! band is never optimal — transmission delay is strictly decreasing in
+//! bandwidth).
+//!
+//! Baselines: [`EqualAllocator`] (the paper's comparison scheme) and
+//! [`ProportionalAllocator`] (inverse-spectral-efficiency weighting — a
+//! natural heuristic included for ablations).
+
+pub mod pso;
+
+pub use pso::{PsoAllocator, PsoConfig};
+
+use crate::channel::Link;
+
+/// An allocation problem instance: total band `total_hz` split across
+/// `links.len()` devices.
+#[derive(Debug, Clone)]
+pub struct AllocationProblem {
+    pub total_hz: f64,
+    pub links: Vec<Link>,
+    /// Smallest allocation a device may receive (keeps (10) strict).
+    pub min_hz: f64,
+}
+
+impl AllocationProblem {
+    pub fn new(total_hz: f64, links: Vec<Link>) -> Self {
+        assert!(total_hz > 0.0 && !links.is_empty());
+        // 0.1% of an equal share keeps every B_k strictly positive while
+        // letting PSO starve hopeless links almost completely.
+        let min_hz = 1e-3 * total_hz / links.len() as f64;
+        Self { total_hz, links, min_hz }
+    }
+
+    pub fn k(&self) -> usize {
+        self.links.len()
+    }
+}
+
+/// A bandwidth allocator proposes `B_k` for the problem; the objective
+/// (mean quality after the inner batch-denoising solve) is evaluated by
+/// the caller-provided closure so allocators stay decoupled from the
+/// scheduler.
+pub trait Allocator {
+    fn name(&self) -> &'static str;
+
+    /// Produce an allocation (Hz per device). Implementations must
+    /// return a vector satisfying Σ B_k ≤ total and B_k ≥ min_hz.
+    fn allocate(
+        &self,
+        problem: &AllocationProblem,
+        objective: &mut dyn FnMut(&[f64]) -> f64,
+    ) -> Vec<f64>;
+}
+
+/// Equal split — the paper's "equal bandwidth allocation" baseline.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct EqualAllocator;
+
+impl Allocator for EqualAllocator {
+    fn name(&self) -> &'static str {
+        "equal"
+    }
+
+    fn allocate(
+        &self,
+        problem: &AllocationProblem,
+        _objective: &mut dyn FnMut(&[f64]) -> f64,
+    ) -> Vec<f64> {
+        vec![problem.total_hz / problem.k() as f64; problem.k()]
+    }
+}
+
+/// Weight each device by 1/η_k so all devices see (roughly) equal
+/// transmission delay for equal content size.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ProportionalAllocator;
+
+impl Allocator for ProportionalAllocator {
+    fn name(&self) -> &'static str {
+        "proportional-inverse-eta"
+    }
+
+    fn allocate(
+        &self,
+        problem: &AllocationProblem,
+        _objective: &mut dyn FnMut(&[f64]) -> f64,
+    ) -> Vec<f64> {
+        let weights: Vec<f64> =
+            problem.links.iter().map(|l| 1.0 / l.spectral_efficiency).collect();
+        let total_w: f64 = weights.iter().sum();
+        weights.iter().map(|w| problem.total_hz * w / total_w).collect()
+    }
+}
+
+/// Project an arbitrary non-negative vector onto the simplex
+/// `{B : Σ B_k = total, B_k ≥ min_hz}` by clamping and rescaling the
+/// free mass. Used by PSO after every position update.
+pub fn project_to_simplex(b: &mut [f64], total: f64, min_hz: f64) {
+    let k = b.len() as f64;
+    debug_assert!(total > min_hz * k, "infeasible simplex");
+    let free_total = total - min_hz * k;
+    // shift to the "excess over minimum" coordinates, clamp at 0
+    let mut sum = 0.0;
+    for v in b.iter_mut() {
+        *v = (*v - min_hz).max(0.0);
+        sum += *v;
+    }
+    if sum <= 0.0 {
+        // degenerate: spread evenly
+        for v in b.iter_mut() {
+            *v = min_hz + free_total / k;
+        }
+        return;
+    }
+    let scale = free_total / sum;
+    for v in b.iter_mut() {
+        *v = min_hz + *v * scale;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::approx_eq;
+
+    fn problem(etas: &[f64]) -> AllocationProblem {
+        AllocationProblem::new(40_000.0, etas.iter().map(|&e| Link::new(e)).collect())
+    }
+
+    #[test]
+    fn equal_split_sums_to_total() {
+        let p = problem(&[5.0, 7.0, 9.0, 10.0]);
+        let alloc = EqualAllocator.allocate(&p, &mut |_| 0.0);
+        assert!(approx_eq(alloc.iter().sum::<f64>(), 40_000.0, 1e-9));
+        assert!(alloc.iter().all(|&b| approx_eq(b, 10_000.0, 1e-9)));
+    }
+
+    #[test]
+    fn proportional_favors_weak_links() {
+        let p = problem(&[5.0, 10.0]);
+        let alloc = ProportionalAllocator.allocate(&p, &mut |_| 0.0);
+        assert!(alloc[0] > alloc[1]);
+        // exact 2:1 split
+        assert!(approx_eq(alloc[0] / alloc[1], 2.0, 1e-9));
+        assert!(approx_eq(alloc.iter().sum::<f64>(), 40_000.0, 1e-9));
+        // equal tx delay: B_k * eta_k equal
+        assert!(approx_eq(alloc[0] * 5.0, alloc[1] * 10.0, 1e-6));
+    }
+
+    #[test]
+    fn projection_preserves_total_and_min() {
+        let mut b = vec![100.0, 0.0, 5000.0, -50.0];
+        project_to_simplex(&mut b, 40_000.0, 10.0);
+        assert!(approx_eq(b.iter().sum::<f64>(), 40_000.0, 1e-6));
+        assert!(b.iter().all(|&v| v >= 10.0 - 1e-12));
+        // ordering of positive mass is preserved
+        assert!(b[2] > b[0]);
+    }
+
+    #[test]
+    fn projection_degenerate_all_below_min() {
+        let mut b = vec![0.0, 0.0, 0.0];
+        project_to_simplex(&mut b, 300.0, 1.0);
+        assert!(approx_eq(b.iter().sum::<f64>(), 300.0, 1e-9));
+        assert!(b.iter().all(|&v| approx_eq(v, 100.0, 1e-9)));
+    }
+
+    #[test]
+    fn projection_is_idempotent() {
+        let mut b = vec![15_000.0, 5_000.0, 20_000.0];
+        project_to_simplex(&mut b, 40_000.0, 10.0);
+        let snapshot = b.clone();
+        project_to_simplex(&mut b, 40_000.0, 10.0);
+        for (x, y) in b.iter().zip(&snapshot) {
+            assert!(approx_eq(*x, *y, 1e-9));
+        }
+    }
+}

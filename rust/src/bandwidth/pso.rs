@@ -1,0 +1,267 @@
+//! Particle swarm optimization over the bandwidth simplex — the paper's
+//! solver for problem (P1) [Kennedy & Eberhart, 1995].
+//!
+//! Standard global-best PSO with inertia, cognitive and social terms;
+//! positions are re-projected onto the feasible simplex after every
+//! move. The objective (the inner (P2) solve) is expensive, so the
+//! swarm is deliberately small and the iteration budget explicit; both
+//! are ablated in `benches/ablations.rs`.
+
+use std::collections::HashMap;
+
+use crate::util::Pcg64;
+
+use super::{project_to_simplex, AllocationProblem, Allocator};
+
+/// Quantized-position objective memo (see `PsoConfig::cache_quantum_hz`).
+struct ObjectiveCache {
+    quantum: f64,
+    map: HashMap<Vec<u64>, f64>,
+    pub hits: usize,
+}
+
+impl ObjectiveCache {
+    fn new(quantum: f64) -> Self {
+        Self { quantum, map: HashMap::new(), hits: 0 }
+    }
+
+    fn eval(&mut self, pos: &[f64], objective: &mut dyn FnMut(&[f64]) -> f64) -> f64 {
+        if self.quantum <= 0.0 {
+            return objective(pos);
+        }
+        let key: Vec<u64> = pos.iter().map(|&b| (b / self.quantum).round() as u64).collect();
+        if let Some(&v) = self.map.get(&key) {
+            self.hits += 1;
+            return v;
+        }
+        let v = objective(pos);
+        self.map.insert(key, v);
+        v
+    }
+}
+
+/// PSO hyper-parameters. `Default` is the classic (ω, c1, c2) =
+/// (0.729, 1.494, 1.494) constriction setting.
+#[derive(Debug, Clone, Copy)]
+pub struct PsoConfig {
+    pub particles: usize,
+    pub iterations: usize,
+    /// Inertia weight ω.
+    pub inertia: f64,
+    /// Cognitive coefficient c₁ (pull toward each particle's own best).
+    pub cognitive: f64,
+    /// Social coefficient c₂ (pull toward the global best).
+    pub social: f64,
+    pub seed: u64,
+    /// Stop early after this many iterations without global-best
+    /// improvement (0 disables early stopping).
+    pub patience: usize,
+    /// Memoize objective values on a quantized position grid (Hz). The
+    /// inner (P2) solve is step-quantized anyway — allocations closer
+    /// than the grid almost always schedule identically — so late-stage
+    /// converged swarms stop paying for re-evaluations. 0 disables.
+    pub cache_quantum_hz: f64,
+}
+
+impl Default for PsoConfig {
+    fn default() -> Self {
+        Self {
+            particles: 24,
+            iterations: 40,
+            inertia: 0.729,
+            cognitive: 1.494,
+            social: 1.494,
+            seed: 0x9e3779b9,
+            patience: 12,
+            cache_quantum_hz: 0.0, // measured: <1% hit rate on converging swarms — off
+        }
+    }
+}
+
+/// The PSO bandwidth allocator.
+#[derive(Debug, Clone, Default)]
+pub struct PsoAllocator {
+    pub config: PsoConfig,
+}
+
+impl PsoAllocator {
+    pub fn new(config: PsoConfig) -> Self {
+        Self { config }
+    }
+}
+
+struct Particle {
+    pos: Vec<f64>,
+    vel: Vec<f64>,
+    best_pos: Vec<f64>,
+    best_val: f64,
+}
+
+impl Allocator for PsoAllocator {
+    fn name(&self) -> &'static str {
+        "pso"
+    }
+
+    fn allocate(
+        &self,
+        problem: &AllocationProblem,
+        objective: &mut dyn FnMut(&[f64]) -> f64,
+    ) -> Vec<f64> {
+        let cfg = self.config;
+        let k = problem.k();
+        let total = problem.total_hz;
+        let min_hz = problem.min_hz;
+        let mut rng = Pcg64::new(cfg.seed, 0x50_50);
+        let mut cache = ObjectiveCache::new(cfg.cache_quantum_hz);
+
+        // ---- initialize swarm ----
+        // Particle 0 starts at the equal split (a strong prior: it is the
+        // paper's baseline), the rest at random simplex points.
+        let mut particles: Vec<Particle> = Vec::with_capacity(cfg.particles);
+        let mut global_best_pos = vec![total / k as f64; k];
+        let mut global_best_val = f64::INFINITY;
+        for p in 0..cfg.particles.max(1) {
+            let mut pos = if p == 0 {
+                vec![total / k as f64; k]
+            } else {
+                // exponential draws normalized → uniform on the simplex
+                let raw: Vec<f64> = (0..k).map(|_| rng.exponential(1.0)).collect();
+                let sum: f64 = raw.iter().sum();
+                raw.into_iter().map(|r| r / sum * total).collect()
+            };
+            project_to_simplex(&mut pos, total, min_hz);
+            let vel = vec![0.0; k];
+            let val = cache.eval(&pos, objective);
+            if val < global_best_val {
+                global_best_val = val;
+                global_best_pos.clone_from(&pos);
+            }
+            particles.push(Particle { best_pos: pos.clone(), best_val: val, pos, vel });
+        }
+
+        // ---- iterate ----
+        let vel_cap = 0.25 * total; // per-dimension velocity clamp
+        let mut stall = 0usize;
+        for _ in 0..cfg.iterations {
+            let mut improved = false;
+            for p in particles.iter_mut() {
+                for d in 0..k {
+                    let r1 = rng.uniform();
+                    let r2 = rng.uniform();
+                    let v = cfg.inertia * p.vel[d]
+                        + cfg.cognitive * r1 * (p.best_pos[d] - p.pos[d])
+                        + cfg.social * r2 * (global_best_pos[d] - p.pos[d]);
+                    p.vel[d] = v.clamp(-vel_cap, vel_cap);
+                    p.pos[d] += p.vel[d];
+                }
+                project_to_simplex(&mut p.pos, total, min_hz);
+                let val = cache.eval(&p.pos, objective);
+                if val < p.best_val {
+                    p.best_val = val;
+                    p.best_pos.clone_from(&p.pos);
+                }
+                if val < global_best_val {
+                    global_best_val = val;
+                    global_best_pos.clone_from(&p.pos);
+                    improved = true;
+                }
+            }
+            if improved {
+                stall = 0;
+            } else {
+                stall += 1;
+                if cfg.patience > 0 && stall >= cfg.patience {
+                    break;
+                }
+            }
+        }
+        global_best_pos
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::channel::Link;
+    use crate::util::approx_eq;
+
+    fn problem(k: usize) -> AllocationProblem {
+        AllocationProblem::new(
+            40_000.0,
+            (0..k).map(|i| Link::new(5.0 + (i as f64) * 0.5)).collect(),
+        )
+    }
+
+    #[test]
+    fn stays_feasible() {
+        let p = problem(8);
+        let mut evals = 0usize;
+        let alloc = PsoAllocator::default().allocate(&p, &mut |b| {
+            evals += 1;
+            b.iter().map(|x| x * x).sum::<f64>() // convex dummy
+        });
+        assert!(approx_eq(alloc.iter().sum::<f64>(), 40_000.0, 1e-6));
+        assert!(alloc.iter().all(|&b| b >= p.min_hz - 1e-9));
+        assert!(evals > 0);
+    }
+
+    #[test]
+    fn minimizes_convex_quadratic_near_equal_split() {
+        // min Σ B_k² on the simplex → equal split.
+        let p = problem(5);
+        let alloc =
+            PsoAllocator::default().allocate(&p, &mut |b| b.iter().map(|x| x * x).sum::<f64>());
+        for &b in &alloc {
+            assert!(approx_eq(b, 8_000.0, 0.02 * 8_000.0), "alloc={alloc:?}");
+        }
+    }
+
+    #[test]
+    fn finds_skewed_optimum() {
+        // Objective rewards giving everything to device 0:
+        // f(B) = -B_0. Optimum: B_0 = total − (k−1)·min.
+        let p = problem(4);
+        let alloc = PsoAllocator::default().allocate(&p, &mut |b| -b[0]);
+        let expect = 40_000.0 - 3.0 * p.min_hz;
+        assert!(alloc[0] > 0.95 * expect, "alloc={alloc:?}");
+    }
+
+    #[test]
+    fn beats_equal_split_on_asymmetric_objective() {
+        use crate::bandwidth::EqualAllocator;
+        // Weighted delay objective: Σ w_k / B_k with very uneven weights —
+        // the shape (P1) takes when one deadline is tight.
+        let w = [100.0, 1.0, 1.0, 1.0];
+        let mut obj = move |b: &[f64]| -> f64 { b.iter().zip(&w).map(|(x, wk)| wk / x).sum() };
+        let p = problem(4);
+        let pso_alloc = PsoAllocator::default().allocate(&p, &mut obj);
+        let eq_alloc = EqualAllocator.allocate(&p, &mut obj);
+        assert!(obj(&pso_alloc) < obj(&eq_alloc), "{:?}", pso_alloc);
+        // analytic optimum: B_k ∝ √w_k → B_0/B_1 = 10
+        assert!(pso_alloc[0] / pso_alloc[1] > 4.0, "{:?}", pso_alloc);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let p = problem(6);
+        let mut obj = |b: &[f64]| b.iter().map(|x| (x - 1000.0).abs()).sum::<f64>();
+        let a = PsoAllocator::default().allocate(&p, &mut obj);
+        let b = PsoAllocator::default().allocate(&p, &mut obj);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn early_stop_costs_fewer_evals() {
+        let p = problem(4);
+        let count_evals = |patience: usize| {
+            let mut evals = 0usize;
+            let cfg = PsoConfig { patience, iterations: 200, ..Default::default() };
+            PsoAllocator::new(cfg).allocate(&p, &mut |_| {
+                evals += 1;
+                1.0 // flat objective: never improves
+            });
+            evals
+        };
+        assert!(count_evals(3) < count_evals(0));
+    }
+}

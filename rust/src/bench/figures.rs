@@ -1,0 +1,333 @@
+//! One function per paper figure. Each prints the paper-shaped table
+//! and returns the rows for assertions in tests/benches.
+
+use crate::bandwidth::{Allocator, EqualAllocator, PsoAllocator, PsoConfig};
+use crate::config::ExperimentConfig;
+use crate::coordinator::{profile_batch_delay, ProfileConfig};
+use crate::delay::BatchDelayModel;
+use crate::quality::{PowerLawQuality, QualityModel, TableQuality};
+use crate::runtime::ArtifactStore;
+use crate::scheduler::{
+    BatchScheduler, FixedSizeBatching, GreedyBatching, SingleInstance, Stacking,
+};
+use crate::sim::solve_joint;
+use crate::trace::{generate, sweeps};
+use crate::util::fit_power_law;
+
+use super::TableWriter;
+
+/// The five schemes of Fig. 2 (proposed + four baselines).
+pub struct Scheme {
+    pub name: &'static str,
+    pub scheduler: Box<dyn BatchScheduler>,
+    pub use_pso: bool,
+}
+
+/// Build the paper's comparison set. PSO settings are scaled down via
+/// `pso_cfg` for quick runs.
+pub fn schemes() -> Vec<Scheme> {
+    vec![
+        Scheme { name: "proposed", scheduler: Box::new(Stacking::default()), use_pso: true },
+        Scheme {
+            name: "single-instance",
+            scheduler: Box::new(SingleInstance::default()),
+            use_pso: true,
+        },
+        Scheme { name: "greedy", scheduler: Box::new(GreedyBatching), use_pso: true },
+        Scheme { name: "fixed-size", scheduler: Box::new(FixedSizeBatching::default()), use_pso: true },
+        Scheme {
+            name: "equal-bandwidth",
+            scheduler: Box::new(Stacking::default()),
+            use_pso: false,
+        },
+    ]
+}
+
+fn make_allocator(use_pso: bool, pso: PsoConfig) -> Box<dyn Allocator> {
+    if use_pso {
+        Box::new(PsoAllocator::new(pso))
+    } else {
+        Box::new(EqualAllocator)
+    }
+}
+
+fn pso_config(cfg: &ExperimentConfig) -> PsoConfig {
+    PsoConfig {
+        particles: cfg.pso.particles,
+        iterations: cfg.pso.iterations,
+        patience: cfg.pso.patience,
+        ..Default::default()
+    }
+}
+
+/// Mean quality of one scheme on one scenario, averaged over seeds.
+fn scheme_mean_quality(
+    scheme: &Scheme,
+    cfg: &ExperimentConfig,
+    scenario: &crate::config::ScenarioConfig,
+    quality: &dyn QualityModel,
+    delay: &BatchDelayModel,
+    reps: usize,
+) -> f64 {
+    let allocator = make_allocator(scheme.use_pso, pso_config(cfg));
+    let mut acc = 0.0;
+    for rep in 0..reps {
+        let workload = generate(scenario, cfg.seed + rep as u64);
+        let sol = solve_joint(&workload, scheme.scheduler.as_ref(), allocator.as_ref(), delay, quality);
+        acc += sol.outcome.mean_quality();
+    }
+    acc / reps as f64
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 1a — denoising delay vs batch size (measured on this machine)
+// ---------------------------------------------------------------------------
+
+/// Rows: (batch size, measured seconds, fitted seconds). Also prints the
+/// fitted constants next to the paper's.
+pub fn fig1a(store: &ArtifactStore, reps: usize) -> Vec<(u32, f64, f64)> {
+    let fit = profile_batch_delay(store, ProfileConfig { reps, ..Default::default() })
+        .expect("profiling failed");
+    let model = fit.model();
+    let mut table = TableWriter::new(
+        "Fig. 1a — denoising delay vs batch size (PJRT CPU, this machine)",
+        &["batch X", "measured s", "fit aX+b s"],
+    )
+    .with_csv("fig1a_batch_delay");
+    let mut rows = Vec::new();
+    for &(x, measured) in &fit.samples {
+        let fitted = model.g(x);
+        table.row(&[x.to_string(), format!("{measured:.5}"), format!("{fitted:.5}")]);
+        rows.push((x, measured, fitted));
+    }
+    table.finish();
+    println!(
+        "fit: a = {:.5} s/task, b = {:.5} s/batch (R² = {:.4});  paper (RTX 3050): a = 0.0240, b = 0.3543",
+        model.a, model.b, fit.fit.r2
+    );
+    println!(
+        "amortization: per-task cost {:.4}s at X=1 -> {:.4}s at X={}",
+        model.per_task(1),
+        model.per_task(store.max_bucket()),
+        store.max_bucket()
+    );
+    rows
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 1b — quality vs denoising steps (measured at `make artifacts`)
+// ---------------------------------------------------------------------------
+
+/// Rows: (steps, measured FD, rust power-law fit). Prints the rust-side
+/// re-fit against the python fit stored in quality.json.
+pub fn fig1b(cfg: &ExperimentConfig) -> Vec<(u32, f64, f64)> {
+    let table_quality = TableQuality::from_quality_json(&cfg.quality_json_path())
+        .expect("quality.json missing — run `make artifacts`");
+    let python_fit = PowerLawQuality::from_quality_json(&cfg.quality_json_path()).unwrap();
+    let pts = table_quality.points();
+    let xs: Vec<f64> = pts.iter().map(|p| p.0 as f64).collect();
+    let ys: Vec<f64> = pts.iter().map(|p| p.1).collect();
+    let rust_fit = fit_power_law(&xs, &ys);
+
+    let mut table = TableWriter::new(
+        "Fig. 1b — quality (Fréchet distance) vs denoising steps",
+        &["steps T", "measured FD", "fit c*T^-d+e"],
+    )
+    .with_csv("fig1b_quality");
+    let mut rows = Vec::new();
+    for &(t, fd) in pts {
+        let fitted = rust_fit.eval(t as f64);
+        table.row(&[t.to_string(), format!("{fd:.4}"), format!("{fitted:.4}")]);
+        rows.push((t, fd, fitted));
+    }
+    table.finish();
+    println!(
+        "rust re-fit: c = {:.3}, d = {:.3}, e = {:.3} (R² = {:.4}); python fit: c = {:.3}, d = {:.3}, e = {:.3}",
+        rust_fit.c, rust_fit.d, rust_fit.e, rust_fit.r2, python_fit.c, python_fit.d, python_fit.e
+    );
+    rows
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 2a — end-to-end delay illustration (K = 10, proposed algorithm)
+// ---------------------------------------------------------------------------
+
+/// Rows: (service, deadline, gen done, tx delay, e2e, steps).
+pub fn fig2a(cfg: &ExperimentConfig) -> Vec<(usize, f64, f64, f64, f64, u32)> {
+    let mut scenario = cfg.scenario.clone();
+    scenario.num_services = 10;
+    let workload = generate(&scenario, cfg.seed);
+    let delay = BatchDelayModel::new(cfg.delay.a, cfg.delay.b);
+    let quality = PowerLawQuality::paper();
+    let sol = solve_joint(
+        &workload,
+        &Stacking::default(),
+        &PsoAllocator::new(pso_config(cfg)),
+        &delay,
+        &quality,
+    );
+    let mut table = TableWriter::new(
+        "Fig. 2a — end-to-end delay, K = 10, proposed algorithm",
+        &["svc", "deadline s", "gen s", "tx s", "e2e s", "steps", "slack s"],
+    )
+    .with_csv("fig2a_schedule");
+    let mut rows = Vec::new();
+    let mut sorted: Vec<_> = sol.outcome.services.iter().collect();
+    sorted.sort_by(|a, b| a.deadline.partial_cmp(&b.deadline).unwrap());
+    for s in sorted {
+        table.row(&[
+            s.id.to_string(),
+            format!("{:.2}", s.deadline),
+            format!("{:.2}", s.gen_delay),
+            format!("{:.2}", s.tx_delay),
+            format!("{:.2}", s.e2e_delay),
+            s.steps.to_string(),
+            format!("{:.2}", s.deadline - s.e2e_delay),
+        ]);
+        rows.push((s.id, s.deadline, s.gen_delay, s.tx_delay, s.e2e_delay, s.steps));
+    }
+    table.finish();
+    println!(
+        "mean FID {:.2}; outages {}; makespan {:.2}s; batches {}",
+        sol.outcome.mean_quality(),
+        sol.outcome.outages(),
+        sol.outcome.schedule.makespan(),
+        sol.outcome.schedule.batches.len()
+    );
+    rows
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 2b — mean FID vs number of services
+// ---------------------------------------------------------------------------
+
+/// Rows: (K, [per-scheme mean FID in `schemes()` order]).
+pub fn fig2b(cfg: &ExperimentConfig, ks: &[usize], reps: usize) -> Vec<(usize, Vec<f64>)> {
+    let delay = BatchDelayModel::new(cfg.delay.a, cfg.delay.b);
+    let quality = PowerLawQuality::paper();
+    let schemes = schemes();
+    let mut headers: Vec<&str> = vec!["K"];
+    headers.extend(schemes.iter().map(|s| s.name));
+    let mut table =
+        TableWriter::new("Fig. 2b — mean FID vs number of services", &headers).with_csv("fig2b_service_sweep");
+    let mut rows = Vec::new();
+    for &k in ks {
+        let scenario = sweeps::with_num_services(&cfg.scenario, k);
+        let mut cells = vec![k.to_string()];
+        let mut vals = Vec::new();
+        for scheme in &schemes {
+            let q = scheme_mean_quality(scheme, cfg, &scenario, &quality, &delay, reps);
+            cells.push(format!("{q:.2}"));
+            vals.push(q);
+        }
+        table.row(&cells);
+        rows.push((k, vals));
+    }
+    table.finish();
+    rows
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 2c — mean FID vs minimum delay requirement (τmax = 20 s, K = 20)
+// ---------------------------------------------------------------------------
+
+/// Rows: (τmin, [per-scheme mean FID]).
+pub fn fig2c(cfg: &ExperimentConfig, taus: &[f64], reps: usize) -> Vec<(f64, Vec<f64>)> {
+    let delay = BatchDelayModel::new(cfg.delay.a, cfg.delay.b);
+    let quality = PowerLawQuality::paper();
+    let schemes = schemes();
+    let mut headers: Vec<&str> = vec!["tau_min"];
+    headers.extend(schemes.iter().map(|s| s.name));
+    let mut table = TableWriter::new(
+        "Fig. 2c — mean FID vs minimum delay requirement (tau_max = 20 s)",
+        &headers,
+    )
+    .with_csv("fig2c_min_delay");
+    let mut rows = Vec::new();
+    for &tau in taus {
+        let scenario = sweeps::with_min_deadline(&cfg.scenario, tau);
+        let mut cells = vec![format!("{tau:.0}")];
+        let mut vals = Vec::new();
+        for scheme in &schemes {
+            let q = scheme_mean_quality(scheme, cfg, &scenario, &quality, &delay, reps);
+            cells.push(format!("{q:.2}"));
+            vals.push(q);
+        }
+        table.row(&cells);
+        rows.push((tau, vals));
+    }
+    table.finish();
+    rows
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick_cfg() -> ExperimentConfig {
+        let mut cfg = ExperimentConfig::paper();
+        cfg.pso.particles = 6;
+        cfg.pso.iterations = 6;
+        cfg.pso.patience = 3;
+        cfg
+    }
+
+    #[test]
+    fn fig2b_shape_proposed_wins_and_single_collapses() {
+        let cfg = quick_cfg();
+        let rows = fig2b(&cfg, &[5, 20, 35], 1);
+        for (k, vals) in &rows {
+            let proposed = vals[0];
+            // proposed is the minimum of all schemes (within tolerance)
+            for (i, v) in vals.iter().enumerate() {
+                assert!(proposed <= v * 1.05 + 1e-9, "K={k}: scheme {i} beats proposed ({v} < {proposed})");
+            }
+        }
+        // single-instance degrades much faster with K than proposed
+        let first = &rows[0].1;
+        let last = &rows[rows.len() - 1].1;
+        let proposed_growth = last[0] / first[0];
+        let single_growth = last[1] / first[1].max(1e-9);
+        assert!(
+            single_growth > proposed_growth,
+            "single-instance should degrade faster: {single_growth} vs {proposed_growth}"
+        );
+    }
+
+    #[test]
+    fn fig2c_shape_quality_improves_with_looser_min_deadline() {
+        let cfg = quick_cfg();
+        let rows = fig2c(&cfg, &[3.0, 11.0, 19.0], 1);
+        // proposed mean FID is non-increasing as tau_min loosens
+        let proposed: Vec<f64> = rows.iter().map(|r| r.1[0]).collect();
+        assert!(
+            proposed.windows(2).all(|w| w[1] <= w[0] * 1.05),
+            "proposed not improving: {proposed:?}"
+        );
+    }
+
+    #[test]
+    fn fig2a_all_services_meet_deadlines() {
+        let cfg = quick_cfg();
+        let rows = fig2a(&cfg);
+        assert_eq!(rows.len(), 10);
+        for (id, deadline, _gen, _tx, e2e, steps) in rows {
+            assert!(steps > 0, "svc {id} outage");
+            assert!(e2e <= deadline + 1e-9, "svc {id} misses deadline");
+        }
+    }
+
+    #[test]
+    fn fig1b_monotone_measured_curve() {
+        let cfg = ExperimentConfig::paper();
+        if !cfg.quality_json_path().exists() {
+            return;
+        }
+        let rows = fig1b(&cfg);
+        assert!(rows.len() >= 5);
+        // measured FD decreases with steps
+        for w in rows.windows(2) {
+            assert!(w[1].1 <= w[0].1 * 1.05, "curve not decreasing: {rows:?}");
+        }
+    }
+}

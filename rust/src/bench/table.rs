@@ -1,0 +1,117 @@
+//! Aligned-table printing + CSV mirroring for benchmark results.
+
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+/// Collects rows, prints an aligned table, writes a CSV copy.
+pub struct TableWriter {
+    title: String,
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+    csv_path: Option<PathBuf>,
+}
+
+impl TableWriter {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Self {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+            csv_path: None,
+        }
+    }
+
+    /// Also mirror to `results/<name>.csv` under the repo root.
+    pub fn with_csv(mut self, name: &str) -> Self {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("results");
+        let _ = std::fs::create_dir_all(&dir);
+        self.csv_path = Some(dir.join(format!("{name}.csv")));
+        self
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn rowf(&mut self, cells: &[&dyn std::fmt::Display]) {
+        self.row(&cells.iter().map(|c| c.to_string()).collect::<Vec<_>>());
+    }
+
+    /// Print the table and flush the CSV. Returns the rendered text.
+    pub fn finish(self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (w, cell) in widths.iter_mut().zip(row) {
+                *w = (*w).max(cell.len());
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("\n== {} ==\n", self.title));
+        let fmt_row = |cells: &[String]| -> String {
+            cells
+                .iter()
+                .zip(&widths)
+                .map(|(c, w)| format!("{c:>w$}", w = w))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        out.push_str(&fmt_row(&self.headers));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        print!("{out}");
+        if let Some(path) = &self.csv_path {
+            let mut csv = String::new();
+            csv.push_str(&self.headers.join(","));
+            csv.push('\n');
+            for row in &self.rows {
+                csv.push_str(&row.join(","));
+                csv.push('\n');
+            }
+            if let Ok(mut f) = std::fs::File::create(path) {
+                let _ = f.write_all(csv.as_bytes());
+                println!("(csv: {})", path.display());
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = TableWriter::new("demo", &["K", "mean FID"]);
+        t.row(&["5".into(), "31.4".into()]);
+        t.row(&["40".into(), "123.45".into()]);
+        let text = t.finish();
+        assert!(text.contains("demo"));
+        assert!(text.contains("mean FID"));
+        assert!(text.contains("123.45"));
+    }
+
+    #[test]
+    #[should_panic(expected = "arity")]
+    fn rejects_wrong_arity() {
+        let mut t = TableWriter::new("x", &["a", "b"]);
+        t.row(&["only-one".into()]);
+    }
+
+    #[test]
+    fn csv_mirror_written() {
+        let mut t = TableWriter::new("csv test", &["x"]).with_csv("_test_table");
+        t.row(&["1".into()]);
+        t.finish();
+        let path = Path::new(env!("CARGO_MANIFEST_DIR")).join("results/_test_table.csv");
+        let content = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(content, "x\n1\n");
+        let _ = std::fs::remove_file(path);
+    }
+}

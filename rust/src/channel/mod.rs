@@ -1,0 +1,181 @@
+//! Wireless downlink model — Section II-B of the paper.
+//!
+//! Frequency non-selective channels, constant during a transmission:
+//!   spectral efficiency  η_k = log2(1 + p̄·h_k / N₀)     (Eq. 8)
+//!   rate                 r_k = B_k · η_k
+//!   transmission delay   D^ct_k = S / r_k                 (Eq. 11)
+//!
+//! The simulation section of the paper draws η_k uniformly in
+//! [5, 10] bit/s/Hz; [`ChannelGenerator`] supports both that direct draw
+//! and a physical Rayleigh-fading draw through Eq. (8).
+
+use crate::util::Pcg64;
+
+/// Per-device downlink state.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Link {
+    /// Spectral efficiency η_k in bit/s/Hz.
+    pub spectral_efficiency: f64,
+}
+
+impl Link {
+    pub fn new(spectral_efficiency: f64) -> Self {
+        assert!(spectral_efficiency > 0.0);
+        Self { spectral_efficiency }
+    }
+
+    /// Transmission rate in bit/s for an allocated bandwidth in Hz (Eq. 8).
+    #[inline]
+    pub fn rate(&self, bandwidth_hz: f64) -> f64 {
+        bandwidth_hz * self.spectral_efficiency
+    }
+
+    /// Transmission delay in seconds for `content_bits` over `bandwidth_hz`
+    /// (Eq. 11). Infinite for zero bandwidth.
+    #[inline]
+    pub fn tx_delay(&self, content_bits: f64, bandwidth_hz: f64) -> f64 {
+        if bandwidth_hz <= 0.0 {
+            return f64::INFINITY;
+        }
+        content_bits / self.rate(bandwidth_hz)
+    }
+
+    /// Minimum bandwidth needed to deliver `content_bits` within
+    /// `deadline_s` seconds.
+    pub fn min_bandwidth(&self, content_bits: f64, deadline_s: f64) -> f64 {
+        assert!(deadline_s > 0.0);
+        content_bits / (self.spectral_efficiency * deadline_s)
+    }
+}
+
+/// Spectral efficiency from the physical SNR (Eq. 8):
+/// η = log2(1 + p̄·h/N₀).
+pub fn spectral_efficiency(tx_power_per_hz: f64, channel_gain: f64, noise_psd: f64) -> f64 {
+    assert!(noise_psd > 0.0);
+    (1.0 + tx_power_per_hz * channel_gain / noise_psd).log2()
+}
+
+/// How the generator draws per-device links.
+#[derive(Debug, Clone, Copy)]
+pub enum FadingModel {
+    /// Draw η_k ~ U[lo, hi] directly — the paper's simulation setting
+    /// (η ∈ [5, 10] bit/s/Hz).
+    UniformEfficiency { lo: f64, hi: f64 },
+    /// Rayleigh fading: gain h = |g|², g ~ CN(0, mean_gain), pushed
+    /// through Eq. (8). Produces a long-tailed η distribution.
+    Rayleigh { tx_power_per_hz: f64, mean_gain: f64, noise_psd: f64 },
+}
+
+/// Seeded generator of per-device [`Link`]s.
+#[derive(Debug, Clone)]
+pub struct ChannelGenerator {
+    pub model: FadingModel,
+    rng: Pcg64,
+}
+
+impl ChannelGenerator {
+    pub fn new(model: FadingModel, seed: u64) -> Self {
+        Self { model, rng: Pcg64::new(seed, 0xC4A17) }
+    }
+
+    /// The paper's simulation draw: η ~ U[5, 10].
+    pub fn paper(seed: u64) -> Self {
+        Self::new(FadingModel::UniformEfficiency { lo: 5.0, hi: 10.0 }, seed)
+    }
+
+    pub fn draw(&mut self) -> Link {
+        match self.model {
+            FadingModel::UniformEfficiency { lo, hi } => Link::new(self.rng.uniform_in(lo, hi)),
+            FadingModel::Rayleigh { tx_power_per_hz, mean_gain, noise_psd } => {
+                // |CN(0, σ²)|² is exponential with mean σ².
+                let h = self.rng.exponential(1.0 / mean_gain);
+                // Clamp so a deep fade cannot produce η = 0 (the paper's
+                // model keeps all links usable).
+                let eta = spectral_efficiency(tx_power_per_hz, h, noise_psd).max(0.1);
+                Link::new(eta)
+            }
+        }
+    }
+
+    pub fn draw_n(&mut self, n: usize) -> Vec<Link> {
+        (0..n).map(|_| self.draw()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::approx_eq;
+
+    #[test]
+    fn rate_and_delay() {
+        let link = Link::new(8.0); // bit/s/Hz
+        // 2 kHz * 8 b/s/Hz = 16 kb/s
+        assert!(approx_eq(link.rate(2_000.0), 16_000.0, 1e-9));
+        // 24 kbit over 16 kb/s = 1.5 s
+        assert!(approx_eq(link.tx_delay(24_000.0, 2_000.0), 1.5, 1e-9));
+    }
+
+    #[test]
+    fn zero_bandwidth_is_infinite_delay() {
+        let link = Link::new(5.0);
+        assert!(link.tx_delay(1000.0, 0.0).is_infinite());
+    }
+
+    #[test]
+    fn min_bandwidth_inverts_tx_delay() {
+        let link = Link::new(6.5);
+        let bits = 24_000.0;
+        let deadline = 2.0;
+        let bw = link.min_bandwidth(bits, deadline);
+        assert!(approx_eq(link.tx_delay(bits, bw), deadline, 1e-9));
+    }
+
+    #[test]
+    fn spectral_efficiency_formula() {
+        // log2(1 + 1*1/1) = 1
+        assert!(approx_eq(spectral_efficiency(1.0, 1.0, 1.0), 1.0, 1e-12));
+        // log2(1 + 3) = 2
+        assert!(approx_eq(spectral_efficiency(3.0, 1.0, 1.0), 2.0, 1e-12));
+        // monotone in gain
+        assert!(
+            spectral_efficiency(1.0, 10.0, 1.0) > spectral_efficiency(1.0, 1.0, 1.0)
+        );
+    }
+
+    #[test]
+    fn paper_draw_in_range() {
+        let mut gen = ChannelGenerator::paper(123);
+        for _ in 0..1000 {
+            let link = gen.draw();
+            assert!(
+                (5.0..10.0).contains(&link.spectral_efficiency),
+                "eta={}",
+                link.spectral_efficiency
+            );
+        }
+    }
+
+    #[test]
+    fn paper_draw_deterministic() {
+        let a: Vec<f64> =
+            ChannelGenerator::paper(7).draw_n(10).iter().map(|l| l.spectral_efficiency).collect();
+        let b: Vec<f64> =
+            ChannelGenerator::paper(7).draw_n(10).iter().map(|l| l.spectral_efficiency).collect();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn rayleigh_mean_efficiency_reasonable() {
+        let mut gen = ChannelGenerator::new(
+            FadingModel::Rayleigh { tx_power_per_hz: 100.0, mean_gain: 1.0, noise_psd: 1.0 },
+            42,
+        );
+        let links = gen.draw_n(4000);
+        let mean: f64 =
+            links.iter().map(|l| l.spectral_efficiency).sum::<f64>() / links.len() as f64;
+        // E[log2(1+100h)], h~Exp(1): around log2(100) ≈ 6.6 minus Jensen gap
+        assert!(mean > 4.0 && mean < 8.0, "mean eta = {mean}");
+        assert!(links.iter().all(|l| l.spectral_efficiency >= 0.1));
+    }
+}

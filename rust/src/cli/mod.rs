@@ -1,0 +1,146 @@
+//! Hand-rolled CLI (no `clap` in the vendored crate set).
+//!
+//! Subcommands:
+//!   `serve    [--addr A] [--config F] [--epoch-ms N]` — TCP serving
+//!   `simulate [--config F] [--scheduler S] [--allocator A] [--seed N]`
+//!   `profile  [--reps N]` — Fig. 1a measurement
+//!   `figures  [--which 1a|1b|2a|2b|2c|all] [--reps N]`
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+/// Parsed command line: subcommand + `--key value` flags.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Args {
+    pub command: String,
+    pub flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Result<Self> {
+        let mut iter = args.into_iter();
+        let command = iter.next().unwrap_or_else(|| "help".to_string());
+        let mut flags = BTreeMap::new();
+        while let Some(arg) = iter.next() {
+            let key = arg
+                .strip_prefix("--")
+                .with_context(|| format!("expected --flag, got '{arg}'"))?;
+            if key.is_empty() {
+                bail!("empty flag name");
+            }
+            // `--flag=value` or `--flag value`
+            if let Some((k, v)) = key.split_once('=') {
+                flags.insert(k.to_string(), v.to_string());
+            } else {
+                let value = iter.next().with_context(|| format!("--{key} needs a value"))?;
+                flags.insert(key.to_string(), value);
+            }
+        }
+        Ok(Self { command, flags })
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(String::as_str)
+    }
+
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{key} must be an integer")),
+        }
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> Result<u64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{key} must be an integer")),
+        }
+    }
+
+    /// Error on flags not in the allowed set (typo guard).
+    pub fn expect_only(&self, allowed: &[&str]) -> Result<()> {
+        for key in self.flags.keys() {
+            if !allowed.contains(&key.as_str()) {
+                bail!(
+                    "unknown flag --{key} for '{}' (allowed: {})",
+                    self.command,
+                    allowed.iter().map(|a| format!("--{a}")).collect::<Vec<_>>().join(", ")
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+pub const USAGE: &str = "\
+aigc-edge — batch denoising for AIGC serving at the wireless edge
+
+USAGE:
+  aigc-edge serve    [--addr 127.0.0.1:7878] [--config file.toml] [--epoch-ms 200]
+  aigc-edge simulate [--config file.toml] [--scheduler stacking|single|greedy|fixed]
+                     [--allocator pso|equal|proportional] [--seed N]
+  aigc-edge profile  [--reps 20]
+  aigc-edge figures  [--which all|1a|1b|2a|2b|2c] [--reps 3]
+  aigc-edge help
+";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Result<Args> {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn parses_subcommand_and_flags() {
+        let a = parse("simulate --seed 42 --scheduler stacking").unwrap();
+        assert_eq!(a.command, "simulate");
+        assert_eq!(a.get("seed"), Some("42"));
+        assert_eq!(a.get("scheduler"), Some("stacking"));
+    }
+
+    #[test]
+    fn parses_equals_form() {
+        let a = parse("serve --addr=0.0.0.0:9000").unwrap();
+        assert_eq!(a.get("addr"), Some("0.0.0.0:9000"));
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(parse("serve --addr").is_err());
+    }
+
+    #[test]
+    fn non_flag_is_error() {
+        assert!(parse("serve addr").is_err());
+    }
+
+    #[test]
+    fn defaults_to_help() {
+        let a = Args::parse(std::iter::empty()).unwrap();
+        assert_eq!(a.command, "help");
+    }
+
+    #[test]
+    fn typed_getters() {
+        let a = parse("x --n 7").unwrap();
+        assert_eq!(a.get_usize("n", 1).unwrap(), 7);
+        assert_eq!(a.get_usize("missing", 3).unwrap(), 3);
+        assert!(parse("x --n seven").unwrap().get_usize("n", 1).is_err());
+    }
+
+    #[test]
+    fn expect_only_catches_typos() {
+        let a = parse("serve --adr 1").unwrap();
+        assert!(a.expect_only(&["addr"]).is_err());
+        let b = parse("serve --addr 1").unwrap();
+        assert!(b.expect_only(&["addr"]).is_ok());
+    }
+}

@@ -1,0 +1,362 @@
+//! Typed experiment/serving configuration with validation and presets.
+//!
+//! Two presets:
+//! * [`ExperimentConfig::paper`] — Section IV of the paper: K = 20,
+//!   deadlines ~ U[7, 20] s, B = 40 kHz, η ~ U[5, 10] b/s/Hz, the RTX
+//!   3050 delay constants, power-law quality in the DDIM/CIFAR-10
+//!   regime, S = 24 kbit (a CIFAR-sized JPEG).
+//! * [`ExperimentConfig::measured`] — same scenario driven by the
+//!   constants measured on *this* machine's PJRT runtime and the quality
+//!   curve calibrated at `make artifacts` time (loaded from
+//!   `artifacts/`).
+//!
+//! Configs also load from TOML-subset files (see `config/toml.rs`).
+
+pub mod toml;
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use self::toml::{parse, TomlDoc};
+
+/// Which quality model drives scheduling.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum QualityModelKind {
+    /// Power law with the paper-regime constants.
+    PaperPowerLaw,
+    /// Power law re-fitted by `make artifacts` (artifacts/quality.json).
+    CalibratedPowerLaw,
+    /// Interpolated measured curve (artifacts/quality.json) — exercises
+    /// STACKING's quality-function agnosticism.
+    CalibratedTable,
+}
+
+/// Full experiment configuration (the union of scenario, models and
+/// solver settings; sub-structs keep call-sites narrow).
+#[derive(Debug, Clone)]
+pub struct ExperimentConfig {
+    pub scenario: ScenarioConfig,
+    pub delay: DelayConfig,
+    pub quality: QualityModelKind,
+    pub pso: PsoSettings,
+    pub stacking: StackingSettings,
+    /// Directory holding the AOT artifacts (HLO, quality.json, …).
+    pub artifacts_dir: PathBuf,
+    pub seed: u64,
+}
+
+/// The wireless/workload scenario (Section IV defaults).
+#[derive(Debug, Clone)]
+pub struct ScenarioConfig {
+    /// Number of devices/services K.
+    pub num_services: usize,
+    /// Deadline distribution τ_k ~ U[lo, hi] seconds.
+    pub deadline_lo: f64,
+    pub deadline_hi: f64,
+    /// Total downlink bandwidth B in Hz.
+    pub total_bandwidth_hz: f64,
+    /// Spectral efficiency draw η ~ U[lo, hi] bit/s/Hz.
+    pub eta_lo: f64,
+    pub eta_hi: f64,
+    /// Content size S in bits (identical across services — same model).
+    pub content_bits: f64,
+}
+
+/// Delay model source.
+#[derive(Debug, Clone)]
+pub struct DelayConfig {
+    /// a (s/task) and b (s/batch) of g(X) = aX + b.
+    pub a: f64,
+    pub b: f64,
+}
+
+/// PSO solver settings (subset of `bandwidth::PsoConfig`, kept here so
+/// config files don't depend on solver internals).
+#[derive(Debug, Clone, Copy)]
+pub struct PsoSettings {
+    pub particles: usize,
+    pub iterations: usize,
+    pub patience: usize,
+}
+
+/// STACKING settings.
+#[derive(Debug, Clone, Copy)]
+pub struct StackingSettings {
+    /// 0 = derive from budgets.
+    pub t_star_max: u32,
+    pub max_steps: u32,
+}
+
+impl ExperimentConfig {
+    /// The paper's Section-IV setup.
+    pub fn paper() -> Self {
+        Self {
+            scenario: ScenarioConfig {
+                num_services: 20,
+                deadline_lo: 7.0,
+                deadline_hi: 20.0,
+                total_bandwidth_hz: 40_000.0,
+                eta_lo: 5.0,
+                eta_hi: 10.0,
+                content_bits: 24_000.0,
+            },
+            delay: DelayConfig { a: 0.0240, b: 0.3543 },
+            quality: QualityModelKind::PaperPowerLaw,
+            pso: PsoSettings { particles: 24, iterations: 40, patience: 12 },
+            stacking: StackingSettings { t_star_max: 0, max_steps: 1000 },
+            artifacts_dir: default_artifacts_dir(),
+            seed: 2025,
+        }
+    }
+
+    /// Paper scenario but with models measured on this machine
+    /// (delay constants must be profiled at runtime; quality comes from
+    /// artifacts/quality.json).
+    pub fn measured() -> Self {
+        let mut cfg = Self::paper();
+        cfg.quality = QualityModelKind::CalibratedPowerLaw;
+        cfg
+    }
+
+    /// Load from a TOML-subset file; unspecified keys keep the paper
+    /// defaults.
+    pub fn from_file(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {path:?}"))?;
+        Self::from_toml_text(&text)
+    }
+
+    /// Parse from TOML text (see `from_file`).
+    pub fn from_toml_text(text: &str) -> Result<Self> {
+        let doc = parse(text).map_err(|e| anyhow::anyhow!("{e}"))?;
+        let mut cfg = Self::paper();
+        apply_doc(&mut cfg, &doc)?;
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Check invariants; every constructor funnels through here.
+    pub fn validate(&self) -> Result<()> {
+        let s = &self.scenario;
+        if s.num_services == 0 {
+            bail!("scenario.num_services must be >= 1");
+        }
+        if !(s.deadline_lo > 0.0 && s.deadline_hi >= s.deadline_lo) {
+            bail!("deadline range invalid: [{}, {}]", s.deadline_lo, s.deadline_hi);
+        }
+        if s.total_bandwidth_hz <= 0.0 {
+            bail!("total bandwidth must be positive");
+        }
+        if !(s.eta_lo > 0.0 && s.eta_hi >= s.eta_lo) {
+            bail!("eta range invalid: [{}, {}]", s.eta_lo, s.eta_hi);
+        }
+        if s.content_bits <= 0.0 {
+            bail!("content size must be positive");
+        }
+        if self.delay.a < 0.0 || self.delay.b < 0.0 {
+            bail!("delay constants must be non-negative");
+        }
+        if self.pso.particles == 0 || self.pso.iterations == 0 {
+            bail!("pso needs at least one particle and one iteration");
+        }
+        if self.stacking.max_steps == 0 {
+            bail!("stacking.max_steps must be >= 1");
+        }
+        Ok(())
+    }
+
+    pub fn quality_json_path(&self) -> PathBuf {
+        self.artifacts_dir.join("quality.json")
+    }
+
+    pub fn manifest_path(&self) -> PathBuf {
+        self.artifacts_dir.join("manifest.json")
+    }
+}
+
+/// artifacts/ next to the workspace root (works from the repo and from
+/// `target/...` binaries).
+pub fn default_artifacts_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn apply_doc(cfg: &mut ExperimentConfig, doc: &TomlDoc) -> Result<()> {
+    for (key, value) in doc {
+        let ok = match key.as_str() {
+            "seed" => set_u64(&mut cfg.seed, value),
+            "artifacts_dir" => {
+                if let Some(s) = value.as_str() {
+                    cfg.artifacts_dir = PathBuf::from(s);
+                    true
+                } else {
+                    false
+                }
+            }
+            "quality.model" => match value.as_str() {
+                Some("paper") => {
+                    cfg.quality = QualityModelKind::PaperPowerLaw;
+                    true
+                }
+                Some("calibrated") => {
+                    cfg.quality = QualityModelKind::CalibratedPowerLaw;
+                    true
+                }
+                Some("table") => {
+                    cfg.quality = QualityModelKind::CalibratedTable;
+                    true
+                }
+                _ => false,
+            },
+            "scenario.num_services" => set_usize(&mut cfg.scenario.num_services, value),
+            "scenario.deadline_lo" => set_f64(&mut cfg.scenario.deadline_lo, value),
+            "scenario.deadline_hi" => set_f64(&mut cfg.scenario.deadline_hi, value),
+            "scenario.total_bandwidth_hz" => {
+                set_f64(&mut cfg.scenario.total_bandwidth_hz, value)
+            }
+            "scenario.eta_lo" => set_f64(&mut cfg.scenario.eta_lo, value),
+            "scenario.eta_hi" => set_f64(&mut cfg.scenario.eta_hi, value),
+            "scenario.content_bits" => set_f64(&mut cfg.scenario.content_bits, value),
+            "delay.a" => set_f64(&mut cfg.delay.a, value),
+            "delay.b" => set_f64(&mut cfg.delay.b, value),
+            "pso.particles" => set_usize(&mut cfg.pso.particles, value),
+            "pso.iterations" => set_usize(&mut cfg.pso.iterations, value),
+            "pso.patience" => set_usize(&mut cfg.pso.patience, value),
+            "stacking.t_star_max" => set_u32(&mut cfg.stacking.t_star_max, value),
+            "stacking.max_steps" => set_u32(&mut cfg.stacking.max_steps, value),
+            _ => bail!("unknown config key '{key}'"),
+        };
+        if !ok {
+            bail!("config key '{key}' has the wrong type: {value:?}");
+        }
+    }
+    Ok(())
+}
+
+fn set_f64(slot: &mut f64, v: &toml::TomlValue) -> bool {
+    v.as_f64().map(|x| *slot = x).is_some()
+}
+
+fn set_usize(slot: &mut usize, v: &toml::TomlValue) -> bool {
+    v.as_i64().filter(|&x| x >= 0).map(|x| *slot = x as usize).is_some()
+}
+
+fn set_u32(slot: &mut u32, v: &toml::TomlValue) -> bool {
+    v.as_i64().filter(|&x| x >= 0).map(|x| *slot = x as u32).is_some()
+}
+
+fn set_u64(slot: &mut u64, v: &toml::TomlValue) -> bool {
+    v.as_i64().filter(|&x| x >= 0).map(|x| *slot = x as u64).is_some()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_preset_is_valid() {
+        ExperimentConfig::paper().validate().unwrap();
+    }
+
+    #[test]
+    fn toml_overrides_apply() {
+        let cfg = ExperimentConfig::from_toml_text(
+            r#"
+            seed = 99
+            [scenario]
+            num_services = 10
+            deadline_lo = 3.0
+            [delay]
+            a = 0.05
+            [quality]
+            model = "table"
+            [pso]
+            particles = 8
+            "#,
+        )
+        .unwrap();
+        assert_eq!(cfg.seed, 99);
+        assert_eq!(cfg.scenario.num_services, 10);
+        assert_eq!(cfg.scenario.deadline_lo, 3.0);
+        assert_eq!(cfg.scenario.deadline_hi, 20.0); // default kept
+        assert_eq!(cfg.delay.a, 0.05);
+        assert_eq!(cfg.quality, QualityModelKind::CalibratedTable);
+        assert_eq!(cfg.pso.particles, 8);
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        let err = ExperimentConfig::from_toml_text("nope = 1").unwrap_err();
+        assert!(err.to_string().contains("nope"));
+    }
+
+    #[test]
+    fn wrong_type_rejected() {
+        let err = ExperimentConfig::from_toml_text("[scenario]\nnum_services = \"x\"")
+            .unwrap_err();
+        assert!(err.to_string().contains("wrong type"));
+    }
+
+    #[test]
+    fn invalid_ranges_rejected() {
+        assert!(ExperimentConfig::from_toml_text("[scenario]\nnum_services = 0").is_err());
+        assert!(
+            ExperimentConfig::from_toml_text("[scenario]\ndeadline_lo = 9.0\ndeadline_hi = 3.0")
+                .is_err()
+        );
+        assert!(ExperimentConfig::from_toml_text("[scenario]\neta_lo = -1.0").is_err());
+        assert!(ExperimentConfig::from_toml_text("[pso]\nparticles = 0").is_err());
+    }
+
+    #[test]
+    fn quality_model_names() {
+        for (name, kind) in [
+            ("paper", QualityModelKind::PaperPowerLaw),
+            ("calibrated", QualityModelKind::CalibratedPowerLaw),
+            ("table", QualityModelKind::CalibratedTable),
+        ] {
+            let cfg = ExperimentConfig::from_toml_text(&format!(
+                "[quality]\nmodel = \"{name}\""
+            ))
+            .unwrap();
+            assert_eq!(cfg.quality, kind);
+        }
+        assert!(ExperimentConfig::from_toml_text("[quality]\nmodel = \"bogus\"").is_err());
+    }
+}
+
+#[cfg(test)]
+mod preset_file_tests {
+    use super::*;
+
+    /// The checked-in configs/ presets must always load and validate.
+    #[test]
+    fn shipped_config_files_are_valid() {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("configs");
+        let mut seen = 0;
+        for entry in std::fs::read_dir(&dir).expect("configs/ directory") {
+            let path = entry.unwrap().path();
+            if path.extension().and_then(|e| e.to_str()) == Some("toml") {
+                let cfg = ExperimentConfig::from_file(&path)
+                    .unwrap_or_else(|e| panic!("{path:?}: {e:#}"));
+                cfg.validate().unwrap();
+                seen += 1;
+            }
+        }
+        assert!(seen >= 3, "expected at least 3 preset configs, found {seen}");
+    }
+
+    #[test]
+    fn paper_toml_matches_paper_preset() {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("configs/paper.toml");
+        let from_file = ExperimentConfig::from_file(&dir).unwrap();
+        let preset = ExperimentConfig::paper();
+        assert_eq!(from_file.scenario.num_services, preset.scenario.num_services);
+        assert_eq!(from_file.scenario.deadline_lo, preset.scenario.deadline_lo);
+        assert_eq!(from_file.scenario.total_bandwidth_hz, preset.scenario.total_bandwidth_hz);
+        assert_eq!(from_file.delay.a, preset.delay.a);
+        assert_eq!(from_file.delay.b, preset.delay.b);
+        assert_eq!(from_file.quality, preset.quality);
+        assert_eq!(from_file.seed, preset.seed);
+    }
+}

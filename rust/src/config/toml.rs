@@ -1,0 +1,233 @@
+//! Minimal TOML-subset parser (no `serde`/`toml` in the vendored set).
+//!
+//! Supports the subset the config files use: `[section]` headers,
+//! `key = value` with integer / float / boolean / string / homogeneous
+//! scalar arrays, comments (`#`), and blank lines. Keys are flattened to
+//! `"section.key"`.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// A scalar (or scalar-array) TOML value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TomlValue {
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Str(String),
+    Array(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(f) => Some(*f),
+            TomlValue::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            TomlValue::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+}
+
+/// Parse error with line number.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TomlError {
+    pub line: usize,
+    pub message: String,
+}
+
+impl fmt::Display for TomlError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "toml error on line {}: {}", self.line, self.message)
+    }
+}
+
+impl std::error::Error for TomlError {}
+
+/// Parsed document: flattened `"section.key" -> value`.
+pub type TomlDoc = BTreeMap<String, TomlValue>;
+
+/// Parse a TOML-subset document.
+pub fn parse(text: &str) -> Result<TomlDoc, TomlError> {
+    let mut doc = TomlDoc::new();
+    let mut section = String::new();
+    for (idx, raw) in text.lines().enumerate() {
+        let lineno = idx + 1;
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let name = rest
+                .strip_suffix(']')
+                .ok_or_else(|| TomlError { line: lineno, message: "unclosed section".into() })?
+                .trim();
+            if name.is_empty() {
+                return Err(TomlError { line: lineno, message: "empty section name".into() });
+            }
+            section = name.to_string();
+            continue;
+        }
+        let eq = line.find('=').ok_or_else(|| TomlError {
+            line: lineno,
+            message: format!("expected key = value, got '{line}'"),
+        })?;
+        let key = line[..eq].trim();
+        if key.is_empty() {
+            return Err(TomlError { line: lineno, message: "empty key".into() });
+        }
+        let value = parse_value(line[eq + 1..].trim(), lineno)?;
+        let full_key =
+            if section.is_empty() { key.to_string() } else { format!("{section}.{key}") };
+        doc.insert(full_key, value);
+    }
+    Ok(doc)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // A '#' inside a quoted string does not start a comment.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(text: &str, line: usize) -> Result<TomlValue, TomlError> {
+    let err = |m: String| TomlError { line, message: m };
+    if text.is_empty() {
+        return Err(err("empty value".into()));
+    }
+    if let Some(rest) = text.strip_prefix('"') {
+        let inner = rest
+            .strip_suffix('"')
+            .ok_or_else(|| err("unterminated string".into()))?;
+        return Ok(TomlValue::Str(inner.replace("\\\"", "\"").replace("\\\\", "\\")));
+    }
+    if let Some(rest) = text.strip_prefix('[') {
+        let inner =
+            rest.strip_suffix(']').ok_or_else(|| err("unterminated array".into()))?.trim();
+        if inner.is_empty() {
+            return Ok(TomlValue::Array(vec![]));
+        }
+        let items: Result<Vec<TomlValue>, TomlError> =
+            inner.split(',').map(|s| parse_value(s.trim(), line)).collect();
+        return Ok(TomlValue::Array(items?));
+    }
+    match text {
+        "true" => return Ok(TomlValue::Bool(true)),
+        "false" => return Ok(TomlValue::Bool(false)),
+        _ => {}
+    }
+    if !text.contains('.') && !text.contains('e') && !text.contains('E') {
+        if let Ok(i) = text.replace('_', "").parse::<i64>() {
+            return Ok(TomlValue::Int(i));
+        }
+    }
+    if let Ok(f) = text.replace('_', "").parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    Err(err(format!("cannot parse value '{text}'")))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_scalars() {
+        let doc = parse(
+            r#"
+            # top comment
+            seed = 7
+            [scenario]
+            num_services = 20          # trailing comment
+            deadline_lo = 7.0
+            name = "paper"
+            batched = true
+            buckets = [1, 2, 4]
+            "#,
+        )
+        .unwrap();
+        assert_eq!(doc["seed"], TomlValue::Int(7));
+        assert_eq!(doc["scenario.num_services"], TomlValue::Int(20));
+        assert_eq!(doc["scenario.deadline_lo"], TomlValue::Float(7.0));
+        assert_eq!(doc["scenario.name"].as_str(), Some("paper"));
+        assert_eq!(doc["scenario.batched"].as_bool(), Some(true));
+        let arr = match &doc["scenario.buckets"] {
+            TomlValue::Array(a) => a.clone(),
+            _ => panic!(),
+        };
+        assert_eq!(arr.len(), 3);
+    }
+
+    #[test]
+    fn hash_inside_string_not_comment() {
+        let doc = parse("label = \"a # b\"").unwrap();
+        assert_eq!(doc["label"].as_str(), Some("a # b"));
+    }
+
+    #[test]
+    fn underscored_numbers() {
+        let doc = parse("bw = 40_000").unwrap();
+        assert_eq!(doc["bw"].as_i64(), Some(40_000));
+    }
+
+    #[test]
+    fn scientific_floats() {
+        let doc = parse("x = 1.5e3").unwrap();
+        assert_eq!(doc["x"].as_f64(), Some(1500.0));
+    }
+
+    #[test]
+    fn negative_numbers() {
+        let doc = parse("a = -3\nb = -0.5").unwrap();
+        assert_eq!(doc["a"].as_i64(), Some(-3));
+        assert_eq!(doc["b"].as_f64(), Some(-0.5));
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let err = parse("ok = 1\nbroken").unwrap_err();
+        assert_eq!(err.line, 2);
+        let err = parse("[unclosed").unwrap_err();
+        assert_eq!(err.line, 1);
+        let err = parse("x = ").unwrap_err();
+        assert_eq!(err.line, 1);
+    }
+
+    #[test]
+    fn int_vs_float_distinction() {
+        let doc = parse("i = 3\nf = 3.0").unwrap();
+        assert_eq!(doc["i"], TomlValue::Int(3));
+        assert_eq!(doc["f"], TomlValue::Float(3.0));
+        // as_f64 coerces ints
+        assert_eq!(doc["i"].as_f64(), Some(3.0));
+        // as_i64 does not coerce floats
+        assert_eq!(doc["f"].as_i64(), None);
+    }
+}

@@ -1,0 +1,265 @@
+//! The epoch-based serving engine.
+//!
+//! One epoch = one (P0) solve + real execution:
+//!  1. take the epoch's requests (deadline + channel per device);
+//!  2. allocate bandwidth (outer (P1), PSO by default);
+//!  3. plan batch denoising (inner (P2), STACKING by default);
+//!  4. execute the plan's batches in order on the PJRT artifacts,
+//!     carrying each service's latent row forward;
+//!  5. account simulated transmission delay per the channel model and
+//!     report per-request outcomes.
+//!
+//! The engine is deliberately synchronous within an epoch — the paper's
+//! system model is a single shared GPU executing batches sequentially
+//! (Eq. 6), so a single worker loop *is* the faithful topology.
+
+use anyhow::{Context, Result};
+
+use crate::bandwidth::{Allocator, PsoAllocator};
+use crate::delay::BatchDelayModel;
+use crate::metrics::Metrics;
+use crate::quality::QualityModel;
+use crate::runtime::{ArtifactStore, BatchInput, DenoiseExecutor};
+use crate::scheduler::{BatchScheduler, Stacking};
+use crate::sim::{gen_budgets, solve_joint};
+use crate::trace::Workload;
+use crate::util::Pcg64;
+
+/// A request as the engine serves it.
+#[derive(Debug, Clone, Copy)]
+pub struct ServedRequest {
+    pub id: usize,
+    pub deadline: f64,
+    /// Steps the plan promised (0 = rejected/outage).
+    pub steps: u32,
+    /// Planned generation delay from the analytical model.
+    pub planned_gen_s: f64,
+    /// Actual wall-clock spent in PJRT executions for this service's
+    /// batches (sum over its batches).
+    pub actual_gen_s: f64,
+    /// Simulated transmission delay under the allocated bandwidth.
+    pub tx_s: f64,
+    /// Quality the model predicts for `steps`.
+    pub predicted_quality: f64,
+}
+
+/// Outcome of serving one epoch.
+#[derive(Debug)]
+pub struct EngineReport {
+    pub requests: Vec<ServedRequest>,
+    /// Generated latents, one row per request (empty row if outage).
+    pub latents: Vec<Vec<f32>>,
+    /// Total wall-clock of the execution phase.
+    pub exec_wall_s: f64,
+    /// Number of batches executed.
+    pub batches: usize,
+    /// Mean predicted quality (the (P0) objective).
+    pub mean_quality: f64,
+}
+
+/// Engine construction parameters.
+pub struct EngineConfig {
+    pub delay: BatchDelayModel,
+    /// Seed for the initial noise latents.
+    pub seed: u64,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        Self { delay: BatchDelayModel::paper(), seed: 7 }
+    }
+}
+
+/// The serving engine. Owns the executor; borrows scheduler/allocator
+/// per epoch so callers can swap policies between epochs (as the
+/// benches do).
+pub struct Engine<'a> {
+    store: &'a ArtifactStore,
+    executor: DenoiseExecutor<'a>,
+    config: EngineConfig,
+    pub metrics: Metrics,
+}
+
+impl<'a> Engine<'a> {
+    pub fn new(store: &'a ArtifactStore, config: EngineConfig) -> Self {
+        Self { store, executor: DenoiseExecutor::new(store), config, metrics: Metrics::new() }
+    }
+
+    /// Serve one epoch of requests described by `workload`.
+    pub fn serve_epoch(
+        &mut self,
+        workload: &Workload,
+        scheduler: &dyn BatchScheduler,
+        allocator: &dyn Allocator,
+        quality: &dyn QualityModel,
+    ) -> Result<EngineReport> {
+        let k = workload.k();
+        self.metrics.add("requests", k as u64);
+
+        // ---- plan (P1) ∘ (P2) ----
+        let plan_start = std::time::Instant::now();
+        let solution = solve_joint(workload, scheduler, allocator, &self.config.delay, quality);
+        self.metrics.record_latency("plan", plan_start.elapsed().as_secs_f64());
+        let outcome = &solution.outcome;
+        let services = gen_budgets(workload, &outcome.allocation_hz);
+        debug_assert_eq!(services.len(), k);
+        let schedule = &outcome.schedule;
+
+        // ---- per-service DDIM timestep grids ----
+        // Service k with T_k planned steps follows the uniform DDIM
+        // sub-sequence of length T_k (same grid as model.ddim_timesteps).
+        let n_train = self.store.manifest().num_train_steps as f64;
+        let grids: Vec<Vec<i32>> = schedule
+            .steps
+            .iter()
+            .map(|&t_k| {
+                (0..=t_k)
+                    .map(|i| {
+                        if t_k == 0 {
+                            0
+                        } else {
+                            (n_train * (1.0 - i as f64 / t_k as f64)).round() as i32
+                        }
+                    })
+                    .collect()
+            })
+            .collect();
+
+        // ---- latent state ----
+        let dim = self.store.manifest().data_dim;
+        let mut rng = Pcg64::seeded(self.config.seed);
+        let mut latents: Vec<Vec<f32>> = (0..k)
+            .map(|_| (0..dim).map(|_| rng.normal() as f32).collect())
+            .collect();
+        let mut actual_gen = vec![0.0f64; k];
+
+        // ---- execute the plan ----
+        let exec_start = std::time::Instant::now();
+        let mut executed_batches = 0usize;
+        for batch in &schedule.batches {
+            // Split oversized batches across the top bucket (the planner
+            // may batch more than the largest compiled executable).
+            let top = self.store.max_bucket() as usize;
+            for chunk in batch.tasks.chunks(top) {
+                let inputs: Vec<BatchInput> = chunk
+                    .iter()
+                    .map(|t| {
+                        let grid = &grids[t.service];
+                        let s = t.step as usize; // 1-based
+                        BatchInput {
+                            latent: &latents[t.service],
+                            t_cur: grid[s - 1],
+                            t_prev: grid[s],
+                        }
+                    })
+                    .collect();
+                let out = self.executor.step(&inputs).context("batch execution")?;
+                self.metrics.record_latency("batch_exec", out.exec_seconds);
+                self.metrics.add("tasks", chunk.len() as u64);
+                self.metrics.set_gauge("last_bucket", out.bucket as f64);
+                for (task, latent) in chunk.iter().zip(out.latents) {
+                    latents[task.service] = latent;
+                    actual_gen[task.service] += out.exec_seconds;
+                }
+                executed_batches += 1;
+            }
+        }
+        let exec_wall_s = exec_start.elapsed().as_secs_f64();
+        self.metrics.record_latency("epoch_exec", exec_wall_s);
+
+        // ---- assemble report ----
+        let requests: Vec<ServedRequest> = (0..k)
+            .map(|i| ServedRequest {
+                id: workload.devices[i].id,
+                deadline: workload.devices[i].deadline,
+                steps: schedule.steps[i],
+                planned_gen_s: schedule.completion[i],
+                actual_gen_s: actual_gen[i],
+                tx_s: outcome.services[i].tx_delay,
+                predicted_quality: outcome.services[i].quality,
+            })
+            .collect();
+        let outages = requests.iter().filter(|r| r.steps == 0).count();
+        self.metrics.add("outages", outages as u64);
+        let latents_out: Vec<Vec<f32>> = (0..k)
+            .map(|i| if schedule.steps[i] > 0 { latents[i].clone() } else { Vec::new() })
+            .collect();
+        Ok(EngineReport {
+            requests,
+            latents: latents_out,
+            exec_wall_s,
+            batches: executed_batches,
+            mean_quality: outcome.mean_quality(),
+        })
+    }
+
+    /// Default-policy convenience: STACKING + PSO.
+    pub fn serve_epoch_default(
+        &mut self,
+        workload: &Workload,
+        quality: &dyn QualityModel,
+    ) -> Result<EngineReport> {
+        self.serve_epoch(workload, &Stacking::default(), &PsoAllocator::default(), quality)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bandwidth::EqualAllocator;
+    use crate::config::{default_artifacts_dir, ExperimentConfig};
+    use crate::quality::PowerLawQuality;
+    use crate::trace::generate;
+
+    fn store() -> Option<ArtifactStore> {
+        let dir = default_artifacts_dir();
+        dir.join("manifest.json").exists().then(|| ArtifactStore::load(&dir).unwrap())
+    }
+
+    #[test]
+    fn serves_epoch_end_to_end() {
+        let Some(store) = store() else { return };
+        let mut cfg = ExperimentConfig::paper();
+        cfg.scenario.num_services = 6;
+        // Short deadlines keep the test fast (few steps).
+        cfg.scenario.deadline_lo = 2.0;
+        cfg.scenario.deadline_hi = 4.0;
+        let workload = generate(&cfg.scenario, 3);
+        let mut engine = Engine::new(&store, EngineConfig::default());
+        let quality = PowerLawQuality::paper();
+        let report = engine
+            .serve_epoch(&workload, &Stacking::default(), &EqualAllocator, &quality)
+            .unwrap();
+        assert_eq!(report.requests.len(), 6);
+        for r in &report.requests {
+            assert!(r.steps > 0, "unexpected outage: {r:?}");
+            assert!(r.tx_s > 0.0);
+            assert!(r.actual_gen_s > 0.0);
+        }
+        for (r, latent) in report.requests.iter().zip(&report.latents) {
+            assert_eq!(latent.len(), store.manifest().data_dim);
+            assert!(latent.iter().all(|v| v.is_finite()), "{:?}", r.id);
+        }
+        assert!(report.batches > 0);
+        assert_eq!(engine.metrics.counter("requests"), 6);
+        assert_eq!(engine.metrics.counter("outages"), 0);
+        assert!(engine.metrics.counter("tasks") > 0);
+    }
+
+    #[test]
+    fn infeasible_request_reported_as_outage() {
+        let Some(store) = store() else { return };
+        let mut cfg = ExperimentConfig::paper();
+        cfg.scenario.num_services = 3;
+        let mut workload = generate(&cfg.scenario, 4);
+        workload.devices[0].deadline = 0.01; // cannot even transmit
+        let mut engine = Engine::new(&store, EngineConfig::default());
+        let quality = PowerLawQuality::paper();
+        let report = engine
+            .serve_epoch(&workload, &Stacking::default(), &EqualAllocator, &quality)
+            .unwrap();
+        assert_eq!(report.requests[0].steps, 0);
+        assert!(report.latents[0].is_empty());
+        assert_eq!(engine.metrics.counter("outages"), 1);
+    }
+}

@@ -1,0 +1,15 @@
+//! The online serving coordinator — the Layer-3 engine that turns the
+//! paper's offline optimization into a running service.
+//!
+//! Requests arrive with a deadline and a channel estimate; the engine
+//! groups an epoch of requests, solves the joint problem (bandwidth via
+//! PSO, batch denoising via STACKING), then drives the plan against the
+//! *real* PJRT artifacts batch by batch, maintaining each service's
+//! latent state. Transmission is simulated against the channel model
+//! (no radio on this testbed); generation is real compute.
+
+pub mod engine;
+pub mod profiler;
+
+pub use engine::{Engine, EngineConfig, EngineReport, ServedRequest};
+pub use profiler::{pin_xla_single_threaded, profile_batch_delay, ProfileConfig};

@@ -1,0 +1,175 @@
+//! Batch denoising delay model — Eq. (4) of the paper:
+//!
+//! `g(X) = a·X + b·‖X‖₀`
+//!
+//! i.e. affine in the batch size with a fixed per-batch cost `b`
+//! (weight/activation streaming, kernel launch) and a marginal per-task
+//! cost `a`. `g(0) = 0`. Fig. 1a measures a = 0.0240 s, b = 0.3543 s on
+//! an RTX 3050; `examples/profile_batch.rs` re-measures both on this
+//! machine's PJRT runtime and [`DelayFit`] re-fits them.
+
+use crate::util::{fit_linear, LinearFit};
+
+/// The affine batch-delay model.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BatchDelayModel {
+    /// Marginal per-task seconds (slope).
+    pub a: f64,
+    /// Fixed per-batch seconds (intercept), charged iff the batch is
+    /// non-empty (the ℓ₀ term).
+    pub b: f64,
+}
+
+impl BatchDelayModel {
+    pub fn new(a: f64, b: f64) -> Self {
+        assert!(a >= 0.0 && b >= 0.0, "negative delay constants");
+        Self { a, b }
+    }
+
+    /// The paper's measured constants (DDIM on CIFAR-10, RTX 3050).
+    pub fn paper() -> Self {
+        Self::new(0.0240, 0.3543)
+    }
+
+    /// Denoising delay of a batch with `x` tasks (Eq. 4). `g(0) = 0`.
+    #[inline]
+    pub fn g(&self, x: u32) -> f64 {
+        if x == 0 {
+            0.0
+        } else {
+            self.a * x as f64 + self.b
+        }
+    }
+
+    /// Per-task cost at batch size `x` — the amortization batching buys.
+    pub fn per_task(&self, x: u32) -> f64 {
+        assert!(x > 0);
+        self.g(x) / x as f64
+    }
+
+    /// Largest batch size whose delay fits in `budget` seconds
+    /// (0 if even a singleton batch does not fit).
+    pub fn max_batch_within(&self, budget: f64) -> u32 {
+        if budget < self.g(1) {
+            return 0;
+        }
+        if self.a == 0.0 {
+            return u32::MAX;
+        }
+        // epsilon guards the exact-boundary case against float rounding
+        (((budget - self.b) / self.a) + 1e-9).floor() as u32
+    }
+
+    /// Time for one service to run `steps` sequential singleton batches —
+    /// the single-instance (no batching) reference point.
+    pub fn single_instance_delay(&self, steps: u32) -> f64 {
+        steps as f64 * self.g(1)
+    }
+}
+
+/// Fit the model from measured (batch size, seconds) samples — the
+/// Fig. 1a procedure.
+#[derive(Debug, Clone)]
+pub struct DelayFit {
+    pub fit: LinearFit,
+    pub samples: Vec<(u32, f64)>,
+}
+
+impl DelayFit {
+    /// Least-squares `y = a·x + b` over the measurements. Requires at
+    /// least two distinct batch sizes.
+    pub fn from_samples(samples: &[(u32, f64)]) -> Self {
+        let xs: Vec<f64> = samples.iter().map(|s| s.0 as f64).collect();
+        let ys: Vec<f64> = samples.iter().map(|s| s.1).collect();
+        let fit = fit_linear(&xs, &ys);
+        Self { fit, samples: samples.to_vec() }
+    }
+
+    /// The fitted model (slope/intercept clamped to be non-negative:
+    /// measurement noise on a flat curve may produce slightly negative
+    /// estimates).
+    pub fn model(&self) -> BatchDelayModel {
+        BatchDelayModel::new(self.fit.a.max(0.0), self.fit.b.max(0.0))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::approx_eq;
+
+    #[test]
+    fn paper_constants() {
+        let m = BatchDelayModel::paper();
+        assert!(approx_eq(m.g(1), 0.3783, 1e-9));
+        assert!(approx_eq(m.g(20), 0.0240 * 20.0 + 0.3543, 1e-9));
+        assert_eq!(m.g(0), 0.0);
+    }
+
+    #[test]
+    fn batching_amortizes_fixed_cost() {
+        let m = BatchDelayModel::paper();
+        // Per-task cost strictly decreasing in batch size.
+        let mut prev = m.per_task(1);
+        for x in 2..=32 {
+            let cur = m.per_task(x);
+            assert!(cur < prev, "per-task not decreasing at X={x}");
+            prev = cur;
+        }
+        // The b >> a regime the paper exploits: one 20-batch beats
+        // 20 singletons by ~an order of magnitude.
+        assert!(20.0 * m.g(1) > 8.0 * m.g(20));
+    }
+
+    #[test]
+    fn max_batch_within_budget() {
+        let m = BatchDelayModel::new(0.1, 0.5);
+        assert_eq!(m.max_batch_within(0.05), 0); // can't fit even X=1
+        assert_eq!(m.max_batch_within(0.6), 1);
+        assert_eq!(m.max_batch_within(1.5), 10);
+        // exact boundary
+        assert_eq!(m.max_batch_within(0.5 + 0.1 * 7.0), 7);
+    }
+
+    #[test]
+    fn single_instance_is_linear_in_steps() {
+        let m = BatchDelayModel::paper();
+        assert!(approx_eq(m.single_instance_delay(10), 10.0 * m.g(1), 1e-12));
+    }
+
+    #[test]
+    fn fit_recovers_paper_constants_from_exact_samples() {
+        let m = BatchDelayModel::paper();
+        let samples: Vec<(u32, f64)> = (1..=32).map(|x| (x, m.g(x))).collect();
+        let fit = DelayFit::from_samples(&samples);
+        assert!(approx_eq(fit.fit.a, m.a, 1e-9));
+        assert!(approx_eq(fit.fit.b, m.b, 1e-9));
+        assert!(fit.fit.r2 > 0.999_999);
+    }
+
+    #[test]
+    fn fit_with_noise_close() {
+        let m = BatchDelayModel::new(0.05, 0.2);
+        let mut rng = crate::util::Pcg64::seeded(17);
+        let samples: Vec<(u32, f64)> =
+            (1..=32).map(|x| (x, m.g(x) * (1.0 + 0.01 * rng.normal()))).collect();
+        let fit = DelayFit::from_samples(&samples).model();
+        assert!(approx_eq(fit.a, m.a, 0.05));
+        assert!(approx_eq(fit.b, m.b, 0.05));
+    }
+
+    #[test]
+    fn fit_clamps_negative_noise_estimates() {
+        // All-equal y: slope 0 exactly; tiny negative slope from noise
+        // must clamp to zero rather than panic.
+        let samples = vec![(1u32, 0.5), (2, 0.5), (3, 0.4999)];
+        let m = DelayFit::from_samples(&samples).model();
+        assert!(m.a >= 0.0 && m.b >= 0.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn negative_constants_rejected() {
+        BatchDelayModel::new(-0.1, 0.3);
+    }
+}

@@ -1,0 +1,33 @@
+//! # aigc-edge
+//!
+//! A production-grade reproduction of *"Batch Denoising for AIGC Service
+//! Provisioning in Wireless Edge Networks"* (Xu, Guo, Teng, Liu, Feng —
+//! CS.DC 2025): an edge server runs a diffusion model for K mobile
+//! devices with heterogeneous deadlines, jointly optimizing **batch
+//! denoising** (the STACKING algorithm) and **downlink bandwidth
+//! allocation** (PSO).
+//!
+//! Three-layer architecture (see DESIGN.md):
+//! * **L1** Pallas kernels + **L2** JAX DDIM step — compiled AOT by
+//!   `make artifacts` into HLO-text executables, one per batch-size
+//!   bucket.
+//! * **L3** (this crate) — the serving coordinator: schedulers,
+//!   bandwidth allocators, the wireless/delay models, an offline
+//!   simulator for the paper's figures, and an online engine that
+//!   executes the real artifacts through PJRT.
+
+pub mod bandwidth;
+pub mod bench;
+pub mod channel;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod metrics;
+pub mod delay;
+pub mod quality;
+pub mod runtime;
+pub mod scheduler;
+pub mod server;
+pub mod sim;
+pub mod trace;
+pub mod util;

@@ -1,0 +1,175 @@
+//! `aigc-edge` — leader entrypoint.
+//!
+//! See `cli::USAGE` for subcommands. The binary is self-contained once
+//! `make artifacts` has produced the AOT executables: Python never runs
+//! on any path below.
+
+use anyhow::{bail, Context, Result};
+
+use aigc_edge::bandwidth::{Allocator, EqualAllocator, ProportionalAllocator, PsoAllocator};
+use aigc_edge::bench;
+use aigc_edge::cli::{Args, USAGE};
+use aigc_edge::config::ExperimentConfig;
+use aigc_edge::coordinator::{profile_batch_delay, ProfileConfig};
+use aigc_edge::delay::BatchDelayModel;
+use aigc_edge::quality::{PowerLawQuality, QualityModel, TableQuality};
+use aigc_edge::runtime::ArtifactStore;
+use aigc_edge::scheduler::{
+    BatchScheduler, FixedSizeBatching, GreedyBatching, SingleInstance, Stacking, StackingConfig,
+};
+
+/// Build the STACKING scheduler from config (0 = derive T* bound).
+fn stacking_from(cfg: &ExperimentConfig) -> Stacking {
+    Stacking::new(StackingConfig {
+        t_star_max: (cfg.stacking.t_star_max > 0).then_some(cfg.stacking.t_star_max),
+        max_steps: cfg.stacking.max_steps,
+        ..Default::default()
+    })
+}
+use aigc_edge::server::{serve, ServerConfig};
+use aigc_edge::sim::solve_joint;
+use aigc_edge::trace::generate;
+
+fn main() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1))?;
+    match args.command.as_str() {
+        "serve" => cmd_serve(&args),
+        "simulate" => cmd_simulate(&args),
+        "profile" => cmd_profile(&args),
+        "figures" => cmd_figures(&args),
+        "help" | "--help" | "-h" => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        other => bail!("unknown command '{other}'\n{USAGE}"),
+    }
+}
+
+fn load_config(args: &Args) -> Result<ExperimentConfig> {
+    match args.get("config") {
+        Some(path) => ExperimentConfig::from_file(std::path::Path::new(path)),
+        None => Ok(ExperimentConfig::paper()),
+    }
+}
+
+fn quality_model(cfg: &ExperimentConfig) -> Result<Box<dyn QualityModel>> {
+    use aigc_edge::config::QualityModelKind::*;
+    Ok(match cfg.quality {
+        PaperPowerLaw => Box::new(PowerLawQuality::paper()),
+        CalibratedPowerLaw => {
+            Box::new(PowerLawQuality::from_quality_json(&cfg.quality_json_path())?)
+        }
+        CalibratedTable => Box::new(TableQuality::from_quality_json(&cfg.quality_json_path())?),
+    })
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    args.expect_only(&["addr", "config", "epoch-ms", "max-batch"])?;
+    let cfg = load_config(args)?;
+    let addr = args.get_or("addr", "127.0.0.1:7878");
+    let server_cfg = ServerConfig {
+        epoch_ms: args.get_u64("epoch-ms", 200)?,
+        max_batch: args.get_usize("max-batch", 32)?,
+    };
+    let artifacts_dir = cfg.artifacts_dir.clone();
+    let server = serve(artifacts_dir, cfg, server_cfg, &addr)?;
+    println!("listening on {} — protocol: GEN <deadline_s> <eta> | STATS | QUIT", server.addr);
+    // Run until killed.
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+fn cmd_simulate(args: &Args) -> Result<()> {
+    args.expect_only(&["config", "scheduler", "allocator", "seed"])?;
+    let mut cfg = load_config(args)?;
+    cfg.seed = args.get_u64("seed", cfg.seed)?;
+    let scheduler: Box<dyn BatchScheduler> = match args.get_or("scheduler", "stacking").as_str() {
+        "stacking" => Box::new(stacking_from(&cfg)),
+        "single" => Box::new(SingleInstance::default()),
+        "greedy" => Box::new(GreedyBatching),
+        "fixed" => Box::new(FixedSizeBatching::default()),
+        other => bail!("unknown scheduler '{other}'"),
+    };
+    let allocator: Box<dyn Allocator> = match args.get_or("allocator", "pso").as_str() {
+        "pso" => Box::new(PsoAllocator::default()),
+        "equal" => Box::new(EqualAllocator),
+        "proportional" => Box::new(ProportionalAllocator),
+        other => bail!("unknown allocator '{other}'"),
+    };
+    let quality = quality_model(&cfg)?;
+    let delay = BatchDelayModel::new(cfg.delay.a, cfg.delay.b);
+    let workload = generate(&cfg.scenario, cfg.seed);
+    let sol = solve_joint(&workload, scheduler.as_ref(), allocator.as_ref(), &delay, quality.as_ref());
+
+    println!(
+        "scenario: K={} deadlines U[{}, {}]s B={} Hz",
+        cfg.scenario.num_services,
+        cfg.scenario.deadline_lo,
+        cfg.scenario.deadline_hi,
+        cfg.scenario.total_bandwidth_hz
+    );
+    println!("scheduler={} allocator={}", scheduler.name(), allocator.name());
+    println!(
+        "mean FID {:.3} | outages {} | mean steps {:.1} | makespan {:.2}s | inner evals {}",
+        sol.outcome.mean_quality(),
+        sol.outcome.outages(),
+        sol.outcome.mean_steps(),
+        sol.outcome.schedule.makespan(),
+        sol.inner_evals
+    );
+    for s in &sol.outcome.services {
+        println!(
+            "  svc {:>2}: deadline {:>5.2}s steps {:>3} gen {:>5.2}s tx {:>4.2}s e2e {:>5.2}s {}",
+            s.id,
+            s.deadline,
+            s.steps,
+            s.gen_delay,
+            s.tx_delay,
+            s.e2e_delay,
+            if s.met { "ok" } else { "OUTAGE" }
+        );
+    }
+    Ok(())
+}
+
+fn cmd_profile(args: &Args) -> Result<()> {
+    args.expect_only(&["reps", "config"])?;
+    let cfg = load_config(args)?;
+    let reps = args.get_usize("reps", 20)?;
+    let store = ArtifactStore::load(&cfg.artifacts_dir).context("loading artifacts")?;
+    println!("platform: {}", store.platform());
+    let fit = profile_batch_delay(&store, ProfileConfig { reps, ..Default::default() })?;
+    let model = fit.model();
+    println!("g(X) = aX + b fit over buckets {:?}", store.buckets());
+    for (x, s) in &fit.samples {
+        println!("  X={x:>3}: {:.5}s (fit {:.5}s)", s, model.g(*x));
+    }
+    println!("a = {:.6} s/task, b = {:.6} s/batch, R² = {:.4}", model.a, model.b, fit.fit.r2);
+    Ok(())
+}
+
+fn cmd_figures(args: &Args) -> Result<()> {
+    args.expect_only(&["which", "reps", "config"])?;
+    let cfg = load_config(args)?;
+    let which = args.get_or("which", "all");
+    let reps = args.get_usize("reps", 3)?;
+    let want = |name: &str| which == "all" || which == name;
+    if want("1a") {
+        let store = ArtifactStore::load(&cfg.artifacts_dir).context("loading artifacts")?;
+        bench::fig1a(&store, reps.max(5));
+    }
+    if want("1b") {
+        bench::fig1b(&cfg);
+    }
+    if want("2a") {
+        bench::fig2a(&cfg);
+    }
+    if want("2b") {
+        bench::fig2b(&cfg, &[5, 10, 15, 20, 25, 30, 35, 40], reps);
+    }
+    if want("2c") {
+        bench::fig2c(&cfg, &[3.0, 5.0, 7.0, 9.0, 11.0, 13.0, 15.0, 17.0, 19.0], reps);
+    }
+    Ok(())
+}

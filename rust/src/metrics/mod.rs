@@ -1,0 +1,208 @@
+//! Lightweight serving metrics: counters, gauges and latency recorders.
+//!
+//! The hot path records into pre-registered slots (no allocation, no
+//! locking beyond one mutex acquire); `Report::render` formats the
+//! snapshot the way the examples and the server's `STATS` command print
+//! it.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::util::stats::{percentile, Welford};
+
+/// A latency series: streaming moments plus a bounded sample reservoir
+/// for percentiles.
+#[derive(Debug, Default)]
+pub struct LatencyRecorder {
+    welford: Welford,
+    samples: Vec<f64>,
+    max_samples: usize,
+}
+
+impl LatencyRecorder {
+    pub fn new(max_samples: usize) -> Self {
+        Self { welford: Welford::new(), samples: Vec::new(), max_samples: max_samples.max(16) }
+    }
+
+    pub fn record(&mut self, seconds: f64) {
+        self.welford.push(seconds);
+        if self.samples.len() < self.max_samples {
+            self.samples.push(seconds);
+        } else {
+            // Reservoir sampling keeps percentiles unbiased under load.
+            let n = self.welford.count();
+            let idx = (n as usize * 2654435761) % self.welford.count() as usize;
+            if idx < self.max_samples {
+                self.samples[idx] = seconds;
+            }
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.welford.count()
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.welford.mean()
+    }
+
+    pub fn p50(&self) -> f64 {
+        percentile(&self.samples, 50.0)
+    }
+
+    pub fn p95(&self) -> f64 {
+        percentile(&self.samples, 95.0)
+    }
+
+    pub fn p99(&self) -> f64 {
+        percentile(&self.samples, 99.0)
+    }
+}
+
+/// A named metrics registry.
+#[derive(Default)]
+pub struct Metrics {
+    inner: Mutex<Inner>,
+    started: Option<Instant>,
+}
+
+#[derive(Default)]
+struct Inner {
+    counters: BTreeMap<&'static str, u64>,
+    gauges: BTreeMap<&'static str, f64>,
+    latencies: BTreeMap<&'static str, LatencyRecorder>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self { inner: Mutex::new(Inner::default()), started: Some(Instant::now()) }
+    }
+
+    pub fn inc(&self, name: &'static str) {
+        self.add(name, 1);
+    }
+
+    pub fn add(&self, name: &'static str, delta: u64) {
+        let mut inner = self.inner.lock().unwrap();
+        *inner.counters.entry(name).or_insert(0) += delta;
+    }
+
+    pub fn set_gauge(&self, name: &'static str, value: f64) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.gauges.insert(name, value);
+    }
+
+    pub fn record_latency(&self, name: &'static str, seconds: f64) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.latencies.entry(name).or_insert_with(|| LatencyRecorder::new(4096)).record(seconds);
+    }
+
+    pub fn counter(&self, name: &'static str) -> u64 {
+        self.inner.lock().unwrap().counters.get(name).copied().unwrap_or(0)
+    }
+
+    pub fn gauge(&self, name: &'static str) -> Option<f64> {
+        self.inner.lock().unwrap().gauges.get(name).copied()
+    }
+
+    pub fn latency_mean(&self, name: &'static str) -> Option<f64> {
+        self.inner.lock().unwrap().latencies.get(name).map(|l| l.mean())
+    }
+
+    /// Render a human-readable snapshot.
+    pub fn render(&self) -> String {
+        let inner = self.inner.lock().unwrap();
+        let mut out = String::new();
+        if let Some(started) = self.started {
+            out.push_str(&format!("uptime_s: {:.1}\n", started.elapsed().as_secs_f64()));
+        }
+        for (name, v) in &inner.counters {
+            out.push_str(&format!("counter {name}: {v}\n"));
+        }
+        for (name, v) in &inner.gauges {
+            out.push_str(&format!("gauge {name}: {v:.6}\n"));
+        }
+        for (name, l) in &inner.latencies {
+            out.push_str(&format!(
+                "latency {name}: n={} mean={:.2}ms p50={:.2}ms p95={:.2}ms p99={:.2}ms\n",
+                l.count(),
+                l.mean() * 1e3,
+                l.p50() * 1e3,
+                l.p95() * 1e3,
+                l.p99() * 1e3,
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_gauges() {
+        let m = Metrics::new();
+        m.inc("requests");
+        m.add("requests", 4);
+        m.set_gauge("batch_size", 12.0);
+        assert_eq!(m.counter("requests"), 5);
+        assert_eq!(m.counter("missing"), 0);
+        assert_eq!(m.gauge("batch_size"), Some(12.0));
+    }
+
+    #[test]
+    fn latency_percentiles() {
+        let mut r = LatencyRecorder::new(128);
+        for i in 1..=100 {
+            r.record(i as f64 / 1000.0);
+        }
+        assert_eq!(r.count(), 100);
+        assert!((r.mean() - 0.0505).abs() < 1e-9);
+        assert!((r.p50() - 0.0505).abs() < 0.001);
+        assert!(r.p95() > 0.09 && r.p95() <= 0.1);
+    }
+
+    #[test]
+    fn reservoir_bounded() {
+        let mut r = LatencyRecorder::new(64);
+        for i in 0..10_000 {
+            r.record(i as f64);
+        }
+        assert_eq!(r.count(), 10_000);
+        assert!(r.samples.len() <= 64);
+    }
+
+    #[test]
+    fn render_contains_all_series() {
+        let m = Metrics::new();
+        m.inc("a");
+        m.set_gauge("g", 1.5);
+        m.record_latency("lat", 0.010);
+        let s = m.render();
+        assert!(s.contains("counter a: 1"));
+        assert!(s.contains("gauge g"));
+        assert!(s.contains("latency lat"));
+    }
+
+    #[test]
+    fn thread_safe() {
+        let m = std::sync::Arc::new(Metrics::new());
+        let handles: Vec<_> = (0..8)
+            .map(|_| {
+                let m = m.clone();
+                std::thread::spawn(move || {
+                    for _ in 0..1000 {
+                        m.inc("n");
+                        m.record_latency("l", 0.001);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(m.counter("n"), 8000);
+    }
+}

@@ -1,0 +1,246 @@
+//! Content-quality models: FID (lower = better) as a function of the
+//! number of denoising steps `T_k` — the objective of problem (P0).
+//!
+//! Two implementations:
+//! * [`PowerLawQuality`] — the paper's fitted form `q(T) = c·T^(−d) + e`
+//!   (Fig. 1b). The `paper` preset uses constants in the regime the
+//!   paper reports for DDIM/CIFAR-10; the `measured` preset is re-fitted
+//!   by `python/compile/calibrate.py` on the build-time model.
+//! * [`TableQuality`] — piecewise-linear interpolation of the *measured*
+//!   curve from `artifacts/quality.json`; no functional form assumed
+//!   (the STACKING algorithm is agnostic to it, which this implementation
+//!   exercises).
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::{parse, Json};
+use crate::util::PowerLawFit;
+
+/// A quality model maps a step count to an FID-like score (lower = better).
+pub trait QualityModel: Send + Sync {
+    /// Quality after `steps` denoising steps. `steps == 0` must return
+    /// the outage quality.
+    fn quality(&self, steps: u32) -> f64;
+
+    /// Quality charged to a service that never completes (deadline
+    /// violated with zero steps, or dropped).
+    fn outage(&self) -> f64 {
+        self.quality(0)
+    }
+}
+
+/// The paper's power-law model.
+#[derive(Debug, Clone)]
+pub struct PowerLawQuality {
+    pub c: f64,
+    pub d: f64,
+    pub e: f64,
+    /// Multiplier over q(1) charged for outages (paper counts outages as
+    /// sharply degraded mean FID; q(0) itself is unbounded).
+    pub outage_factor: f64,
+}
+
+impl PowerLawQuality {
+    pub fn new(c: f64, d: f64, e: f64) -> Self {
+        Self { c, d, e, outage_factor: 1.5 }
+    }
+
+    /// Constants in the DDIM-on-CIFAR-10 regime of the paper's Fig. 1b:
+    /// FID ≈ 306 at T=1 falling to ≈ 13 by T≈50, power-law decay.
+    pub fn paper() -> Self {
+        Self::new(293.0, 1.1, 13.0)
+    }
+
+    /// From the power-law fit the build-time calibration produced.
+    pub fn from_fit(fit: &PowerLawFit) -> Self {
+        Self::new(fit.c, fit.d, fit.e)
+    }
+
+    /// Load the `power_law` section of `artifacts/quality.json`.
+    pub fn from_quality_json(path: &Path) -> Result<Self> {
+        let doc = load_quality_json(path)?;
+        let pl = doc.required("power_law")?;
+        Ok(Self::new(
+            pl.required("c")?.as_f64().context("c")?,
+            pl.required("d")?.as_f64().context("d")?,
+            pl.required("e")?.as_f64().context("e")?,
+        ))
+    }
+}
+
+impl QualityModel for PowerLawQuality {
+    fn quality(&self, steps: u32) -> f64 {
+        if steps == 0 {
+            return self.outage();
+        }
+        self.c * (steps as f64).powf(-self.d) + self.e
+    }
+
+    fn outage(&self) -> f64 {
+        self.outage_factor * (self.c + self.e)
+    }
+}
+
+/// Piecewise-linear interpolation of a measured (steps, quality) curve.
+#[derive(Debug, Clone)]
+pub struct TableQuality {
+    /// Sorted by steps, strictly increasing step values.
+    points: Vec<(u32, f64)>,
+    outage: f64,
+}
+
+impl TableQuality {
+    /// Build from measured points; `outage` is the score charged at T=0.
+    pub fn new(mut points: Vec<(u32, f64)>, outage: f64) -> Self {
+        assert!(!points.is_empty(), "empty quality table");
+        points.sort_by_key(|p| p.0);
+        points.dedup_by_key(|p| p.0);
+        assert!(points[0].0 >= 1, "table must start at steps >= 1");
+        Self { points, outage }
+    }
+
+    /// Load the measured curve from `artifacts/quality.json`.
+    pub fn from_quality_json(path: &Path) -> Result<Self> {
+        let doc = load_quality_json(path)?;
+        let curve = doc.required("curve")?.as_arr().context("curve not an array")?;
+        let mut points = Vec::with_capacity(curve.len());
+        for p in curve {
+            let steps = p.required("steps")?.as_usize().context("steps")? as u32;
+            let fd = p.required("fd")?.as_f64().context("fd")?;
+            points.push((steps, fd));
+        }
+        // Outage: worst measured quality, scaled (see PowerLawQuality).
+        let worst = points.iter().map(|p| p.1).fold(f64::NEG_INFINITY, f64::max);
+        Ok(Self::new(points, 1.5 * worst))
+    }
+
+    pub fn points(&self) -> &[(u32, f64)] {
+        &self.points
+    }
+}
+
+impl QualityModel for TableQuality {
+    fn quality(&self, steps: u32) -> f64 {
+        if steps == 0 {
+            return self.outage;
+        }
+        let pts = &self.points;
+        if steps <= pts[0].0 {
+            // Below the measured range: connect linearly from (0, outage).
+            let (s0, q0) = pts[0];
+            if steps == s0 {
+                return q0;
+            }
+            let w = steps as f64 / s0 as f64;
+            return self.outage * (1.0 - w) + q0 * w;
+        }
+        if steps >= pts[pts.len() - 1].0 {
+            // Beyond the measured range quality has flattened (Fig. 1b).
+            return pts[pts.len() - 1].1;
+        }
+        let idx = pts.partition_point(|p| p.0 <= steps);
+        let (s_lo, q_lo) = pts[idx - 1];
+        let (s_hi, q_hi) = pts[idx];
+        if steps == s_lo {
+            return q_lo;
+        }
+        let w = (steps - s_lo) as f64 / (s_hi - s_lo) as f64;
+        q_lo * (1.0 - w) + q_hi * w
+    }
+
+    fn outage(&self) -> f64 {
+        self.outage
+    }
+}
+
+fn load_quality_json(path: &Path) -> Result<Json> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading {path:?} (run `make artifacts` first)"))?;
+    parse(&text).map_err(|e| anyhow::anyhow!("parsing {path:?}: {e}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::approx_eq;
+
+    #[test]
+    fn power_law_monotone_decreasing() {
+        let q = PowerLawQuality::paper();
+        let mut prev = q.quality(1);
+        for t in 2..=100 {
+            let cur = q.quality(t);
+            assert!(cur < prev, "q not decreasing at T={t}");
+            prev = cur;
+        }
+    }
+
+    #[test]
+    fn power_law_paper_regime() {
+        let q = PowerLawQuality::paper();
+        assert!(q.quality(1) > 250.0 && q.quality(1) < 350.0);
+        assert!(q.quality(50) < 25.0);
+        assert!(q.outage() > q.quality(1));
+    }
+
+    #[test]
+    fn power_law_zero_steps_is_outage() {
+        let q = PowerLawQuality::paper();
+        assert_eq!(q.quality(0), q.outage());
+    }
+
+    #[test]
+    fn table_interpolates_exactly_at_knots() {
+        let t = TableQuality::new(vec![(1, 100.0), (4, 40.0), (16, 10.0)], 200.0);
+        assert!(approx_eq(t.quality(1), 100.0, 1e-12));
+        assert!(approx_eq(t.quality(4), 40.0, 1e-12));
+        assert!(approx_eq(t.quality(16), 10.0, 1e-12));
+    }
+
+    #[test]
+    fn table_interpolates_between_knots() {
+        let t = TableQuality::new(vec![(1, 100.0), (3, 40.0)], 200.0);
+        assert!(approx_eq(t.quality(2), 70.0, 1e-12));
+    }
+
+    #[test]
+    fn table_flat_beyond_range_and_outage_below() {
+        let t = TableQuality::new(vec![(2, 50.0), (8, 10.0)], 111.0);
+        assert_eq!(t.quality(100), 10.0);
+        assert_eq!(t.quality(0), 111.0);
+        // steps=1 is between (0, outage) and (2, 50): midpoint
+        assert!(approx_eq(t.quality(1), (111.0 + 50.0) / 2.0, 1e-12));
+    }
+
+    #[test]
+    fn table_unsorted_input_ok() {
+        let t = TableQuality::new(vec![(8, 10.0), (2, 50.0)], 99.0);
+        assert_eq!(t.quality(2), 50.0);
+        assert_eq!(t.quality(8), 10.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn table_rejects_empty() {
+        TableQuality::new(vec![], 1.0);
+    }
+
+    #[test]
+    fn loads_real_artifacts_if_present() {
+        let path = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/quality.json");
+        if !path.exists() {
+            return; // artifacts not built in this checkout
+        }
+        let pl = PowerLawQuality::from_quality_json(&path).unwrap();
+        let tb = TableQuality::from_quality_json(&path).unwrap();
+        // Both models must agree reasonably on the measured range.
+        for t in [1u32, 2, 4, 8, 16, 32] {
+            let a = pl.quality(t);
+            let b = tb.quality(t);
+            assert!((a - b).abs() / b < 0.35, "T={t}: power={a} table={b}");
+        }
+        assert!(pl.d > 0.0);
+    }
+}

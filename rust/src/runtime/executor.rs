@@ -1,0 +1,183 @@
+//! Batch execution of the denoising step through PJRT.
+//!
+//! A scheduled batch `n` (from STACKING or a baseline) contains `X_n`
+//! heterogeneous tasks: latents at possibly different timesteps. The
+//! executor pads the batch to the nearest compiled bucket, builds the
+//! three input literals (x, t_cur, t_prev), executes, and returns the
+//! advanced latents. Padding rows replay row 0's inputs (any valid
+//! timestep pair works — padded outputs are discarded).
+
+use anyhow::{bail, Context, Result};
+
+use super::ArtifactStore;
+
+/// One task's inputs within a batch.
+#[derive(Debug, Clone)]
+pub struct BatchInput<'a> {
+    /// Latent row, length = manifest.data_dim.
+    pub latent: &'a [f32],
+    /// Current timestep index (1..=num_train_steps).
+    pub t_cur: i32,
+    /// Target timestep index (0..t_cur).
+    pub t_prev: i32,
+}
+
+/// The advanced latents, one row per input task (padding removed).
+#[derive(Debug, Clone)]
+pub struct StepOutput {
+    pub latents: Vec<Vec<f32>>,
+    /// Bucket actually executed (≥ the requested batch size).
+    pub bucket: u32,
+    /// Wall-clock seconds of the PJRT execution alone.
+    pub exec_seconds: f64,
+}
+
+/// Executes denoising batches against an [`ArtifactStore`].
+pub struct DenoiseExecutor<'a> {
+    store: &'a ArtifactStore,
+    /// Scratch for the padded input batch (reused across calls — the
+    /// request path allocates nothing beyond PJRT's own buffers).
+    x_scratch: Vec<f32>,
+    t_cur_scratch: Vec<i32>,
+    t_prev_scratch: Vec<i32>,
+}
+
+impl<'a> DenoiseExecutor<'a> {
+    pub fn new(store: &'a ArtifactStore) -> Self {
+        let top = store.max_bucket() as usize;
+        let dim = store.manifest().data_dim;
+        Self {
+            store,
+            x_scratch: vec![0.0; top * dim],
+            t_cur_scratch: vec![0; top],
+            t_prev_scratch: vec![0; top],
+        }
+    }
+
+    pub fn data_dim(&self) -> usize {
+        self.store.manifest().data_dim
+    }
+
+    /// Execute one denoising step for a batch of tasks.
+    pub fn step(&mut self, tasks: &[BatchInput<'_>]) -> Result<StepOutput> {
+        if tasks.is_empty() {
+            bail!("empty batch");
+        }
+        let dim = self.data_dim();
+        let n = tasks.len() as u32;
+        let bucket = self
+            .store
+            .bucket_for(n)
+            .with_context(|| format!("batch of {n} exceeds top bucket {}", self.store.max_bucket()))?;
+        let bs = bucket as usize;
+
+        for (i, task) in tasks.iter().enumerate() {
+            if task.latent.len() != dim {
+                bail!("task {i}: latent len {} != data_dim {dim}", task.latent.len());
+            }
+            if task.t_prev < 0 || task.t_cur <= task.t_prev {
+                bail!("task {i}: invalid timestep pair ({}, {})", task.t_cur, task.t_prev);
+            }
+            self.x_scratch[i * dim..(i + 1) * dim].copy_from_slice(task.latent);
+            self.t_cur_scratch[i] = task.t_cur;
+            self.t_prev_scratch[i] = task.t_prev;
+        }
+        // Padding rows: replay row 0 (valid inputs, outputs discarded).
+        for i in tasks.len()..bs {
+            self.x_scratch.copy_within(0..dim, i * dim);
+            self.t_cur_scratch[i] = self.t_cur_scratch[0];
+            self.t_prev_scratch[i] = self.t_prev_scratch[0];
+        }
+
+        let x_lit = xla::Literal::vec1(&self.x_scratch[..bs * dim])
+            .reshape(&[bs as i64, dim as i64])
+            .context("reshape x")?;
+        let t_cur_lit = xla::Literal::vec1(&self.t_cur_scratch[..bs]);
+        let t_prev_lit = xla::Literal::vec1(&self.t_prev_scratch[..bs]);
+
+        let exe = self.store.executable(bucket).context("missing executable")?;
+        let start = std::time::Instant::now();
+        let result = exe
+            .execute::<xla::Literal>(&[x_lit, t_cur_lit, t_prev_lit])
+            .context("PJRT execute")?;
+        let lit = result[0][0].to_literal_sync().context("fetch result")?;
+        let exec_seconds = start.elapsed().as_secs_f64();
+
+        // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
+        let out = lit.to_tuple1().context("unwrap tuple")?;
+        let flat: Vec<f32> = out.to_vec().context("result to_vec")?;
+        if flat.len() != bs * dim {
+            bail!("result length {} != {}", flat.len(), bs * dim);
+        }
+        let latents =
+            tasks.iter().enumerate().map(|(i, _)| flat[i * dim..(i + 1) * dim].to_vec()).collect();
+        Ok(StepOutput { latents, bucket, exec_seconds })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::default_artifacts_dir;
+    use crate::runtime::ArtifactStore;
+
+    fn store() -> Option<ArtifactStore> {
+        let dir = default_artifacts_dir();
+        dir.join("manifest.json").exists().then(|| ArtifactStore::load(&dir).unwrap())
+    }
+
+    #[test]
+    fn rejects_bad_inputs() {
+        let Some(store) = store() else { return };
+        let mut exec = DenoiseExecutor::new(&store);
+        assert!(exec.step(&[]).is_err());
+        let short = vec![0.0f32; 3];
+        assert!(exec
+            .step(&[BatchInput { latent: &short, t_cur: 10, t_prev: 5 }])
+            .is_err());
+        let ok_len = vec![0.0f32; exec.data_dim()];
+        // t_prev >= t_cur
+        assert!(exec
+            .step(&[BatchInput { latent: &ok_len, t_cur: 5, t_prev: 5 }])
+            .is_err());
+    }
+
+    #[test]
+    fn executes_singleton_batch() {
+        let Some(store) = store() else { return };
+        let mut exec = DenoiseExecutor::new(&store);
+        let latent = vec![0.1f32; exec.data_dim()];
+        let out = exec
+            .step(&[BatchInput { latent: &latent, t_cur: 1000, t_prev: 900 }])
+            .unwrap();
+        assert_eq!(out.latents.len(), 1);
+        assert_eq!(out.latents[0].len(), exec.data_dim());
+        assert_eq!(out.bucket, 1);
+        assert!(out.latents[0].iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn padding_matches_unpadded_rows() {
+        // A 3-task batch runs in the 4-bucket; each row must equal the
+        // same task run alone (bucketing must not change numerics).
+        let Some(store) = store() else { return };
+        let mut exec = DenoiseExecutor::new(&store);
+        let dim = exec.data_dim();
+        let latents: Vec<Vec<f32>> =
+            (0..3).map(|i| (0..dim).map(|j| ((i * dim + j) % 17) as f32 * 0.05 - 0.4).collect()).collect();
+        let ts = [(1000, 800), (600, 400), (200, 0)];
+        let batch: Vec<BatchInput> = latents
+            .iter()
+            .zip(&ts)
+            .map(|(l, &(c, p))| BatchInput { latent: l, t_cur: c, t_prev: p })
+            .collect();
+        let out = exec.step(&batch).unwrap();
+        assert_eq!(out.bucket, 4);
+        for (i, (l, &(c, p))) in latents.iter().zip(&ts).enumerate() {
+            let single = exec.step(&[BatchInput { latent: l, t_cur: c, t_prev: p }]).unwrap();
+            for (a, b) in out.latents[i].iter().zip(&single.latents[0]) {
+                assert!((a - b).abs() < 2e-3, "row {i}: {a} vs {b}");
+            }
+        }
+    }
+}

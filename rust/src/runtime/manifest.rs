@@ -1,0 +1,139 @@
+//! Typed view of `artifacts/manifest.json` — the contract between the
+//! Python AOT pipeline and this runtime (pinned on the Python side by
+//! `python/tests/test_aot.py::TestManifestContract`).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::{parse, Json};
+
+/// Parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    /// Latent dimensionality D (f32 row per denoising task).
+    pub data_dim: usize,
+    /// Diffusion training discretization (timestep indices are 0..=N).
+    pub num_train_steps: usize,
+    /// Batch-size buckets, ascending.
+    pub buckets: Vec<u32>,
+    /// bucket -> HLO text file name (relative to the artifacts dir).
+    pub hlo_files: BTreeMap<u32, String>,
+    /// bucket -> golden test-vector file name (optional).
+    pub golden_files: BTreeMap<u32, String>,
+    /// File with target-distribution moments (mu then cov, f32 LE).
+    pub moments_file: Option<String>,
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {path:?} (run `make artifacts`)"))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Self> {
+        let doc = parse(text).map_err(|e| anyhow::anyhow!("manifest: {e}"))?;
+        let data_dim = doc.required("data_dim")?.as_usize().context("data_dim")?;
+        let num_train_steps =
+            doc.required("num_train_steps")?.as_usize().context("num_train_steps")?;
+        let buckets: Vec<u32> = doc
+            .required("buckets")?
+            .as_arr()
+            .context("buckets not an array")?
+            .iter()
+            .map(|b| b.as_usize().map(|v| v as u32).context("bucket not an integer"))
+            .collect::<Result<_>>()?;
+        if buckets.is_empty() {
+            bail!("manifest has no buckets");
+        }
+        if buckets.windows(2).any(|w| w[0] >= w[1]) {
+            bail!("buckets must be strictly ascending: {buckets:?}");
+        }
+        let hlo = doc.required("hlo")?;
+        let mut hlo_files = BTreeMap::new();
+        for &b in &buckets {
+            let entry = hlo
+                .get(&b.to_string())
+                .with_context(|| format!("missing hlo entry for bucket {b}"))?;
+            let file = entry.required("file")?.as_str().context("hlo file")?;
+            hlo_files.insert(b, file.to_string());
+        }
+        let mut golden_files = BTreeMap::new();
+        if let Some(Json::Obj(map)) = doc.get("golden") {
+            for (k, v) in map {
+                if let (Ok(bucket), Some(file)) = (k.parse::<u32>(), v.as_str()) {
+                    golden_files.insert(bucket, file.to_string());
+                }
+            }
+        }
+        let moments_file = doc.get("moments").and_then(|m| m.as_str()).map(str::to_string);
+        Ok(Self { data_dim, num_train_steps, buckets, hlo_files, golden_files, moments_file })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+        "data_dim": 64,
+        "num_train_steps": 1000,
+        "buckets": [1, 2, 4],
+        "hlo": {
+            "1": {"file": "denoise_b1.hlo.txt"},
+            "2": {"file": "denoise_b2.hlo.txt"},
+            "4": {"file": "denoise_b4.hlo.txt"}
+        },
+        "golden": {"1": "golden_b1.bin", "2": "golden_b2.bin"},
+        "moments": "moments.bin"
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.data_dim, 64);
+        assert_eq!(m.num_train_steps, 1000);
+        assert_eq!(m.buckets, vec![1, 2, 4]);
+        assert_eq!(m.hlo_files[&2], "denoise_b2.hlo.txt");
+        assert_eq!(m.golden_files.len(), 2);
+        assert_eq!(m.moments_file.as_deref(), Some("moments.bin"));
+    }
+
+    #[test]
+    fn rejects_missing_bucket_entry() {
+        let bad = SAMPLE.replace("\"4\": {\"file\": \"denoise_b4.hlo.txt\"}", "\"9\": {\"file\": \"x\"}");
+        let err = Manifest::parse(&bad).unwrap_err();
+        assert!(err.to_string().contains("bucket 4"), "{err}");
+    }
+
+    #[test]
+    fn rejects_unsorted_buckets() {
+        let bad = SAMPLE.replace("[1, 2, 4]", "[2, 1, 4]");
+        assert!(Manifest::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn golden_and_moments_optional() {
+        let minimal = r#"{
+            "data_dim": 8, "num_train_steps": 100, "buckets": [1],
+            "hlo": {"1": {"file": "f.hlo.txt"}}
+        }"#;
+        let m = Manifest::parse(minimal).unwrap();
+        assert!(m.golden_files.is_empty());
+        assert!(m.moments_file.is_none());
+    }
+
+    #[test]
+    fn loads_real_manifest_if_present() {
+        let path = crate::config::default_artifacts_dir().join("manifest.json");
+        if !path.exists() {
+            return;
+        }
+        let m = Manifest::load(&path).unwrap();
+        assert_eq!(m.data_dim, 64);
+        assert!(m.buckets.contains(&1));
+        assert_eq!(m.hlo_files.len(), m.buckets.len());
+    }
+}

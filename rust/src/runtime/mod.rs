@@ -1,0 +1,110 @@
+//! PJRT runtime: loads the AOT artifacts and executes real denoising
+//! batches — the request-path compute engine (Python is never here).
+//!
+//! `make artifacts` emits one HLO-text executable per batch-size bucket
+//! (`denoise_bX.hlo.txt`); [`ArtifactStore`] compiles each once at
+//! startup, and [`DenoiseExecutor`] runs a heterogeneous batch by
+//! padding it up to the nearest bucket.
+
+pub mod executor;
+pub mod manifest;
+
+pub use executor::{BatchInput, DenoiseExecutor, StepOutput};
+pub use manifest::Manifest;
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// Compiled executables per batch-size bucket plus model metadata.
+pub struct ArtifactStore {
+    client: xla::PjRtClient,
+    executables: BTreeMap<u32, xla::PjRtLoadedExecutable>,
+    manifest: Manifest,
+}
+
+impl ArtifactStore {
+    /// Load `manifest.json` from `dir`, compile every bucket's HLO on the
+    /// PJRT CPU client. One-time startup cost (measured in
+    /// `benches/micro_hotpath.rs`).
+    pub fn load(dir: &Path) -> Result<Self> {
+        let manifest = Manifest::load(&dir.join("manifest.json"))?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let mut executables = BTreeMap::new();
+        for (&bucket, file) in &manifest.hlo_files {
+            let path = dir.join(file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("non-utf8 artifact path")?,
+            )
+            .with_context(|| format!("parsing HLO text {path:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .with_context(|| format!("compiling bucket {bucket}"))?;
+            executables.insert(bucket, exe);
+        }
+        Ok(Self { client, executables, manifest })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Available buckets, ascending.
+    pub fn buckets(&self) -> Vec<u32> {
+        self.executables.keys().copied().collect()
+    }
+
+    /// Smallest bucket that fits `batch` tasks (None if above the top
+    /// bucket — the coordinator must split such batches).
+    pub fn bucket_for(&self, batch: u32) -> Option<u32> {
+        self.executables.range(batch..).next().map(|(&b, _)| b)
+    }
+
+    /// Largest supported batch size.
+    pub fn max_bucket(&self) -> u32 {
+        self.executables.keys().next_back().copied().unwrap_or(0)
+    }
+
+    pub(crate) fn executable(&self, bucket: u32) -> Option<&xla::PjRtLoadedExecutable> {
+        self.executables.get(&bucket)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::default_artifacts_dir;
+
+    fn store() -> Option<ArtifactStore> {
+        let dir = default_artifacts_dir();
+        if dir.join("manifest.json").exists() {
+            Some(ArtifactStore::load(&dir).expect("artifacts load"))
+        } else {
+            None // `make artifacts` not run in this checkout
+        }
+    }
+
+    #[test]
+    fn loads_all_buckets() {
+        let Some(store) = store() else { return };
+        assert!(!store.buckets().is_empty());
+        assert_eq!(store.buckets(), store.manifest().buckets);
+    }
+
+    #[test]
+    fn bucket_for_rounds_up() {
+        let Some(store) = store() else { return };
+        // buckets include 1,2,4,8,...: 3 → 4, 5 → 8
+        assert_eq!(store.bucket_for(1), Some(1));
+        assert_eq!(store.bucket_for(3), Some(4));
+        assert_eq!(store.bucket_for(5), Some(8));
+        assert_eq!(store.bucket_for(store.max_bucket()), Some(store.max_bucket()));
+        assert_eq!(store.bucket_for(store.max_bucket() + 1), None);
+    }
+}

@@ -1,0 +1,119 @@
+//! Fixed-size batching baseline: batches of ⌊K/2⌋, tighter deadlines
+//! first, shrinking only when fewer services remain.
+
+use crate::delay::BatchDelayModel;
+use crate::quality::QualityModel;
+
+use super::types::{Batch, BatchScheduler, Schedule, Service, TaskRef};
+
+#[derive(Debug, Clone, Copy, Default)]
+pub struct FixedSizeBatching {
+    /// Batch size; 0 means the paper's default ⌊K/2⌋.
+    pub batch_size: u32,
+}
+
+impl FixedSizeBatching {
+    pub fn new(batch_size: u32) -> Self {
+        Self { batch_size }
+    }
+}
+
+impl BatchScheduler for FixedSizeBatching {
+    fn name(&self) -> &'static str {
+        "fixed-size-batching"
+    }
+
+    fn schedule(
+        &self,
+        services: &[Service],
+        delay: &BatchDelayModel,
+        _quality: &dyn QualityModel,
+    ) -> Schedule {
+        let max_steps = 1000u32;
+        let size = if self.batch_size == 0 {
+            ((services.len() / 2) as u32).max(1)
+        } else {
+            self.batch_size
+        };
+        let mut schedule = Schedule::empty(services.len());
+        let mut tau: Vec<f64> = services.iter().map(|s| s.gen_budget).collect();
+        let mut active: Vec<usize> = (0..services.len()).collect();
+        let mut now = 0.0;
+
+        while !active.is_empty() {
+            // Prioritize tighter remaining budgets.
+            active.sort_by(|&x, &y| tau[x].partial_cmp(&tau[y]).unwrap());
+            let x_n = (size as usize).min(active.len());
+            let gx = delay.g(x_n as u32);
+            // Discard services in this batch window that cannot fit it.
+            let violating: Vec<usize> =
+                active[..x_n].iter().copied().filter(|&k| tau[k] < gx).collect();
+            if !violating.is_empty() {
+                active.retain(|k| !violating.contains(k));
+                continue;
+            }
+            let packed: Vec<usize> = active[..x_n].to_vec();
+            let tasks: Vec<TaskRef> = packed
+                .iter()
+                .map(|&k| {
+                    schedule.steps[k] += 1;
+                    TaskRef { service: k, step: schedule.steps[k] }
+                })
+                .collect();
+            // Time passes for everyone.
+            for &k in &active {
+                tau[k] -= gx;
+            }
+            for &k in &packed {
+                schedule.completion[k] = now + gx;
+            }
+            schedule.batches.push(Batch { start: now, duration: gx, tasks });
+            now += gx;
+            active.retain(|&k| tau[k] >= 0.0 && schedule.steps[k] < max_steps && tau[k] >= delay.g(1));
+        }
+        schedule
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quality::PowerLawQuality;
+    use crate::scheduler::validate::validate_schedule;
+
+    #[test]
+    fn default_size_is_half_k() {
+        let delay = BatchDelayModel::paper();
+        let svcs: Vec<Service> = (0..10).map(|i| Service::new(i, 8.0)).collect();
+        let s = FixedSizeBatching::default().schedule(&svcs, &delay, &PowerLawQuality::paper());
+        assert!(s.batches.iter().all(|b| b.size() <= 5));
+        assert!(s.batches.iter().any(|b| b.size() == 5));
+        validate_schedule(&s, &svcs, &delay).unwrap();
+    }
+
+    #[test]
+    fn explicit_size_respected() {
+        let delay = BatchDelayModel::paper();
+        let svcs: Vec<Service> = (0..9).map(|i| Service::new(i, 6.0)).collect();
+        let s = FixedSizeBatching::new(3).schedule(&svcs, &delay, &PowerLawQuality::paper());
+        assert!(s.batches.iter().all(|b| b.size() <= 3));
+        validate_schedule(&s, &svcs, &delay).unwrap();
+    }
+
+    #[test]
+    fn tight_service_prioritized() {
+        let delay = BatchDelayModel::paper();
+        let mut svcs = vec![Service::new(0, 1.2)];
+        svcs.extend((1..8).map(|i| Service::new(i, 12.0)));
+        let s = FixedSizeBatching::default().schedule(&svcs, &delay, &PowerLawQuality::paper());
+        assert!(s.steps[0] >= 1, "steps={:?}", s.steps);
+        validate_schedule(&s, &svcs, &delay).unwrap();
+    }
+
+    #[test]
+    fn empty_input() {
+        let s =
+            FixedSizeBatching::default().schedule(&[], &BatchDelayModel::paper(), &PowerLawQuality::paper());
+        assert!(s.batches.is_empty());
+    }
+}

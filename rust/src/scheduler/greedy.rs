@@ -1,0 +1,110 @@
+//! Greedy batching baseline: every active service's next task goes into
+//! one maximal batch, every round. Maximizes amortization but burns the
+//! budget of tight-deadline services on batches sized by loose ones.
+
+use crate::delay::BatchDelayModel;
+use crate::quality::QualityModel;
+
+use super::types::{Batch, BatchScheduler, Schedule, Service, TaskRef};
+
+#[derive(Debug, Clone, Copy, Default)]
+pub struct GreedyBatching;
+
+impl BatchScheduler for GreedyBatching {
+    fn name(&self) -> &'static str {
+        "greedy-batching"
+    }
+
+    fn schedule(
+        &self,
+        services: &[Service],
+        delay: &BatchDelayModel,
+        _quality: &dyn QualityModel,
+    ) -> Schedule {
+        let max_steps = 1000u32;
+        let mut schedule = Schedule::empty(services.len());
+        let mut tau: Vec<f64> = services.iter().map(|s| s.gen_budget).collect();
+        let mut active: Vec<usize> = (0..services.len()).collect();
+        let mut now = 0.0;
+
+        loop {
+            // Terminate services that cannot fit the upcoming batch: the
+            // batch is sized by everyone still active.
+            loop {
+                let gx = delay.g(active.len() as u32);
+                let before = active.len();
+                active.retain(|&k| tau[k] >= gx && schedule.steps[k] < max_steps);
+                if active.len() == before {
+                    break;
+                }
+            }
+            if active.is_empty() {
+                break;
+            }
+            let gx = delay.g(active.len() as u32);
+            let tasks: Vec<TaskRef> = active
+                .iter()
+                .map(|&k| {
+                    schedule.steps[k] += 1;
+                    TaskRef { service: k, step: schedule.steps[k] }
+                })
+                .collect();
+            for &k in &active {
+                tau[k] -= gx;
+                schedule.completion[k] = now + gx;
+            }
+            schedule.batches.push(Batch { start: now, duration: gx, tasks });
+            now += gx;
+        }
+        schedule
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quality::PowerLawQuality;
+    use crate::scheduler::validate::validate_schedule;
+
+    #[test]
+    fn equal_budgets_full_batches() {
+        let delay = BatchDelayModel::paper();
+        let svcs: Vec<Service> = (0..10).map(|i| Service::new(i, 6.0)).collect();
+        let s = GreedyBatching.schedule(&svcs, &delay, &PowerLawQuality::paper());
+        assert!(s.batches.iter().all(|b| b.size() == 10));
+        let t = s.steps[0];
+        assert!(t > 0);
+        assert!(s.steps.iter().all(|&x| x == t));
+        validate_schedule(&s, &svcs, &delay).unwrap();
+    }
+
+    #[test]
+    fn tight_service_dropped_early() {
+        let delay = BatchDelayModel::paper();
+        // g(11) ≈ 0.62: the 0.5-budget service cannot fit even one batch
+        // sized by all 11 services — greedy gives it zero steps, while a
+        // smarter scheduler would start with a small batch.
+        let mut svcs = vec![Service::new(0, 0.5)];
+        svcs.extend((1..11).map(|i| Service::new(i, 10.0)));
+        let s = GreedyBatching.schedule(&svcs, &delay, &PowerLawQuality::paper());
+        assert_eq!(s.steps[0], 0, "steps={:?}", s.steps);
+        validate_schedule(&s, &svcs, &delay).unwrap();
+    }
+
+    #[test]
+    fn shrinks_batches_as_services_finish() {
+        let delay = BatchDelayModel::paper();
+        let svcs = vec![Service::new(0, 1.0), Service::new(1, 5.0)];
+        let s = GreedyBatching.schedule(&svcs, &delay, &PowerLawQuality::paper());
+        let sizes: Vec<u32> = s.batches.iter().map(|b| b.size()).collect();
+        assert!(sizes.windows(2).all(|w| w[1] <= w[0]), "sizes={sizes:?}");
+        assert!(s.steps[1] > s.steps[0]);
+        validate_schedule(&s, &svcs, &delay).unwrap();
+    }
+
+    #[test]
+    fn empty_input() {
+        let s = GreedyBatching.schedule(&[], &BatchDelayModel::paper(), &PowerLawQuality::paper());
+        assert!(s.batches.is_empty());
+    }
+}

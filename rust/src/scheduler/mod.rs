@@ -1,0 +1,113 @@
+//! Batch-denoising schedulers — problem (P2) of the paper.
+//!
+//! * [`Stacking`] — the paper's contribution (Algorithm 1).
+//! * [`SingleInstance`] / [`GreedyBatching`] / [`FixedSizeBatching`] —
+//!   the three comparison baselines of Section IV.
+//! * [`validate_schedule`] — machine-checks the constraint system
+//!   (Eqs. 1, 2, 6, 7, 14) on any schedule.
+
+pub mod fixed_size;
+pub mod greedy;
+pub mod single_instance;
+pub mod stacking;
+pub mod types;
+pub mod validate;
+
+pub use fixed_size::FixedSizeBatching;
+pub use greedy::GreedyBatching;
+pub use single_instance::SingleInstance;
+pub use stacking::{Stacking, StackingConfig};
+pub use types::{Batch, BatchScheduler, Schedule, Service, TaskRef};
+pub use validate::{validate_schedule, ScheduleError};
+
+/// All schedulers compared in the paper's Fig. 2, in presentation order.
+pub fn all_schedulers() -> Vec<Box<dyn BatchScheduler>> {
+    vec![
+        Box::new(Stacking::default()),
+        Box::new(SingleInstance::default()),
+        Box::new(GreedyBatching),
+        Box::new(FixedSizeBatching::default()),
+    ]
+}
+
+#[cfg(test)]
+mod proptests {
+    use super::*;
+    use crate::delay::BatchDelayModel;
+    use crate::prop_assert;
+    use crate::quality::PowerLawQuality;
+    use crate::util::prop::forall;
+
+    fn random_services(g: &mut crate::util::prop::Gen) -> Vec<Service> {
+        let k = g.usize_in(1, 24);
+        (0..k).map(|i| Service::new(i, g.f64_in(-0.5, 20.0))).collect()
+    }
+
+    fn random_delay(g: &mut crate::util::prop::Gen) -> BatchDelayModel {
+        BatchDelayModel::new(g.f64_in(0.005, 0.2), g.f64_in(0.05, 1.0))
+    }
+
+    /// Every scheduler must emit a constraint-satisfying schedule for any
+    /// workload — the central invariant of the whole system.
+    #[test]
+    fn all_schedulers_produce_valid_schedules() {
+        forall("schedulers produce valid schedules", 120, |g| {
+            let services = random_services(g);
+            let delay = random_delay(g);
+            let quality = PowerLawQuality::paper();
+            for sched in all_schedulers() {
+                let s = sched.schedule(&services, &delay, &quality);
+                let v = validate_schedule(&s, &services, &delay);
+                prop_assert!(
+                    g,
+                    v.is_ok(),
+                    "{}: {:?} (services={:?}, delay={:?})",
+                    sched.name(),
+                    v,
+                    services,
+                    delay
+                );
+                prop_assert!(
+                    g,
+                    s.steps.len() == services.len(),
+                    "{}: steps len mismatch",
+                    sched.name()
+                );
+            }
+            true
+        });
+    }
+
+    /// STACKING must never be worse than greedy or fixed-size batching:
+    /// both are within its search space (greedy ≈ huge T*, and the
+    /// T*-search keeps the best).
+    #[test]
+    fn stacking_dominates_naive_batching() {
+        forall("stacking <= greedy & fixed", 60, |g| {
+            let services = random_services(g);
+            let delay = random_delay(g);
+            let quality = PowerLawQuality::paper();
+            let st = Stacking::default().schedule(&services, &delay, &quality).mean_quality(&quality);
+            let gr = GreedyBatching.schedule(&services, &delay, &quality).mean_quality(&quality);
+            // allow microscopic numeric slack
+            prop_assert!(g, st <= gr * 1.02 + 1e-9, "stacking {st} > greedy {gr}");
+            true
+        });
+    }
+
+    /// Relaxing every deadline must not degrade STACKING's objective.
+    #[test]
+    fn stacking_monotone_in_budget() {
+        forall("stacking monotone in budgets", 40, |g| {
+            let services = random_services(g);
+            let delay = random_delay(g);
+            let quality = PowerLawQuality::paper();
+            let widened: Vec<Service> =
+                services.iter().map(|s| Service::new(s.id, s.gen_budget + g.f64_in(0.5, 5.0))).collect();
+            let base = Stacking::default().schedule(&services, &delay, &quality).mean_quality(&quality);
+            let wide = Stacking::default().schedule(&widened, &delay, &quality).mean_quality(&quality);
+            prop_assert!(g, wide <= base + 1e-9, "widened {wide} > base {base}");
+            true
+        });
+    }
+}

@@ -1,0 +1,120 @@
+//! Single-instance baseline [14]: no batching at all.
+//!
+//! Services are sorted by ascending delay requirement and processed one
+//! at a time; each denoising task runs as a singleton batch (cost
+//! g(1)). A service keeps denoising until its own remaining budget
+//! cannot fit another task, then the server moves to the next service.
+//! Services whose budget expires while waiting are dropped (outage).
+
+use crate::delay::BatchDelayModel;
+use crate::quality::QualityModel;
+
+use super::types::{Batch, BatchScheduler, Schedule, Service, TaskRef};
+
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SingleInstance {
+    /// Optional step cap per service (defaults to 1000, the DDIM
+    /// training discretization).
+    pub max_steps: u32,
+}
+
+impl SingleInstance {
+    pub fn new(max_steps: u32) -> Self {
+        Self { max_steps }
+    }
+
+    fn cap(&self) -> u32 {
+        if self.max_steps == 0 {
+            1000
+        } else {
+            self.max_steps
+        }
+    }
+}
+
+impl BatchScheduler for SingleInstance {
+    fn name(&self) -> &'static str {
+        "single-instance"
+    }
+
+    fn schedule(
+        &self,
+        services: &[Service],
+        delay: &BatchDelayModel,
+        _quality: &dyn QualityModel,
+    ) -> Schedule {
+        let mut order: Vec<usize> = (0..services.len()).collect();
+        order.sort_by(|&x, &y| {
+            services[x].gen_budget.partial_cmp(&services[y].gen_budget).unwrap()
+        });
+
+        let g1 = delay.g(1);
+        let mut now = 0.0;
+        let mut schedule = Schedule::empty(services.len());
+        for &k in &order {
+            // Wall clock has advanced while this service waited; its
+            // remaining budget is gen_budget − now.
+            let mut step = 0u32;
+            while step < self.cap() && now + g1 <= services[k].gen_budget {
+                step += 1;
+                schedule.batches.push(Batch {
+                    start: now,
+                    duration: g1,
+                    tasks: vec![TaskRef { service: k, step }],
+                });
+                now += g1;
+            }
+            schedule.steps[k] = step;
+            schedule.completion[k] = if step > 0 { now } else { 0.0 };
+        }
+        schedule
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quality::PowerLawQuality;
+    use crate::scheduler::validate::validate_schedule;
+
+    #[test]
+    fn first_service_hogs_the_gpu() {
+        let delay = BatchDelayModel::paper();
+        let svcs: Vec<Service> = (0..5).map(|i| Service::new(i, 4.0)).collect();
+        let s = SingleInstance::default().schedule(&svcs, &delay, &PowerLawQuality::paper());
+        // Equal budgets: the first processed service exhausts nearly the
+        // whole window, starving the rest — the pathology in Fig. 2b.
+        assert!(s.steps[0] > 0);
+        assert_eq!(s.steps[4], 0, "steps={:?}", s.steps);
+        validate_schedule(&s, &svcs, &delay).unwrap();
+    }
+
+    #[test]
+    fn tightest_deadline_first() {
+        let delay = BatchDelayModel::paper();
+        let svcs = vec![Service::new(0, 10.0), Service::new(1, 1.0)];
+        let s = SingleInstance::default().schedule(&svcs, &delay, &PowerLawQuality::paper());
+        // Service 1 (tight) is processed first and completes ~2 steps;
+        // service 0 then uses the remaining window.
+        assert!(s.steps[1] >= 1);
+        assert!(s.steps[0] >= 1);
+        validate_schedule(&s, &svcs, &delay).unwrap();
+    }
+
+    #[test]
+    fn respects_cap() {
+        let delay = BatchDelayModel::paper();
+        let svcs = vec![Service::new(0, 100.0)];
+        let s = SingleInstance::new(7).schedule(&svcs, &delay, &PowerLawQuality::paper());
+        assert_eq!(s.steps[0], 7);
+    }
+
+    #[test]
+    fn all_batches_are_singletons() {
+        let delay = BatchDelayModel::paper();
+        let svcs: Vec<Service> = (0..4).map(|i| Service::new(i, 3.0 + i as f64)).collect();
+        let s = SingleInstance::default().schedule(&svcs, &delay, &PowerLawQuality::paper());
+        assert!(s.batches.iter().all(|b| b.size() == 1));
+        validate_schedule(&s, &svcs, &delay).unwrap();
+    }
+}

@@ -1,0 +1,522 @@
+//! The STACKING algorithm (Algorithm 1) — the paper's core contribution.
+//!
+//! Two empirical insights drive it (Figs. 1a/1b):
+//!  1. `b ≫ a` in `g(X) = aX + b`: the fixed per-batch cost dominates,
+//!     so batches should be as large as possible;
+//!  2. early denoising steps improve quality far more than later ones,
+//!     so step counts should be *balanced* across services.
+//!
+//! The algorithm iterates a clustering → packing → batching loop under
+//! an auxiliary target `T*` (the desired per-service step count), then
+//! grid-searches `T*` and keeps the best objective. It never evaluates
+//! the quality function inside the loop — only at the end — which is
+//! what makes it agnostic to the quality model's form.
+
+use crate::delay::BatchDelayModel;
+use crate::quality::QualityModel;
+
+use super::types::{Batch, BatchScheduler, Schedule, Service, TaskRef};
+
+/// Tunables for [`Stacking`]. `Default` reproduces the paper's setup.
+#[derive(Debug, Clone, Copy)]
+pub struct StackingConfig {
+    /// Upper bound of the `T*` grid search. `None` derives it from the
+    /// largest generation budget: ⌈max τ'_k / (a+b)⌉ (no service can
+    /// exceed that many steps even alone).
+    pub t_star_max: Option<u32>,
+    /// Hard cap on per-service steps (a DDIM chain cannot exceed the
+    /// training discretization; also bounds runaway loops for huge
+    /// budgets).
+    pub max_steps: u32,
+    /// Coarse-to-fine `T*` search: evaluate every `stride`-th `T*`, then
+    /// refine the `stride − 1` neighbours around the coarse winner.
+    /// 1 = exhaustive (the paper's grid). Measured in §Perf: stride 4
+    /// gives ~2.4× fewer trials with no mean-FID change on the paper
+    /// scenario (the objective is near-unimodal in `T*`).
+    pub t_star_stride: u32,
+}
+
+impl Default for StackingConfig {
+    fn default() -> Self {
+        Self { t_star_max: None, max_steps: 1000, t_star_stride: 4 }
+    }
+}
+
+/// The STACKING scheduler.
+#[derive(Debug, Clone, Default)]
+pub struct Stacking {
+    pub config: StackingConfig,
+}
+
+impl Stacking {
+    pub fn new(config: StackingConfig) -> Self {
+        Self { config }
+    }
+
+    fn derive_t_star_max(&self, services: &[Service], delay: &BatchDelayModel) -> u32 {
+        if let Some(cap) = self.config.t_star_max {
+            return cap.max(1);
+        }
+        let per_task = delay.a + delay.b;
+        let max_budget = services.iter().map(|s| s.gen_budget).fold(0.0_f64, f64::max);
+        let bound = (max_budget / per_task).ceil() as u32;
+        bound.clamp(1, self.config.max_steps)
+    }
+}
+
+/// Result of one clustering→packing→batching round (internal).
+struct Round {
+    start: f64,
+    duration: f64,
+    /// Executed tasks (empty in dry runs).
+    tasks: Vec<TaskRef>,
+    /// Number of tasks executed (valid in dry runs too).
+    size: u32,
+}
+
+/// Mutable per-run state for one `T*` trial.
+struct Trial<'a> {
+    delay: &'a BatchDelayModel,
+    max_steps: u32,
+    /// Remaining generation budget τ'_k (Eq. 15 subtracts each batch).
+    tau: Vec<f64>,
+    /// Completed steps T^c_k.
+    done: Vec<u32>,
+    /// Still-active service indices (positions into `services`).
+    active: Vec<usize>,
+    /// Scratch: services that finished during the current packing pass.
+    drained: Vec<bool>,
+    /// Scratch: T^e_k per service, recomputed once per round (the sort
+    /// comparator otherwise re-derives it O(K log K) times — §Perf).
+    t_extra_cache: Vec<u32>,
+}
+
+impl<'a> Trial<'a> {
+    fn new(services: &[Service], delay: &'a BatchDelayModel, max_steps: u32) -> Self {
+        let tau: Vec<f64> = services.iter().map(|s| s.gen_budget).collect();
+        // Services whose budget cannot fit even a singleton batch are
+        // outages from the start.
+        let active =
+            (0..services.len()).filter(|&k| tau[k] >= delay.g(1)).collect();
+        Self {
+            delay,
+            max_steps,
+            tau,
+            done: vec![0; services.len()],
+            active,
+            drained: vec![false; services.len()],
+            t_extra_cache: vec![0; services.len()],
+        }
+    }
+
+    /// T^e_k (Eq. 16): tasks service k can still complete, assuming the
+    /// best case of it running in minimal batches.
+    #[inline]
+    fn t_extra(&self, k: usize) -> u32 {
+        let per = self.delay.a + self.delay.b;
+        let raw = (self.tau[k] / per).floor();
+        if raw <= 0.0 {
+            0
+        } else {
+            (raw as u32).min(self.max_steps.saturating_sub(self.done[k]))
+        }
+    }
+
+    /// T'_k (Eq. 17): ideal final step count. Hot paths read
+    /// `done[k] + t_extra_cache[k]` instead (see `round`); kept for
+    /// tests/documentation of the paper's quantity.
+    #[inline]
+    #[allow(dead_code)]
+    fn t_ideal(&self, k: usize) -> u32 {
+        self.done[k] + self.t_extra(k)
+    }
+
+    /// One clustering → packing → batching round. Returns the executed
+    /// batch, or `None` when no progress is possible (drained services
+    /// are removed from `active` as a side effect).
+    fn round(&mut self, t_star: u32, now: f64, record: bool) -> Option<Round> {
+        let delay = *self.delay;
+        // Refresh the per-round T^e cache, then drop services that can no
+        // longer run any task (their T_k is whatever they completed) or
+        // that hit the step cap.
+        let mut active = std::mem::take(&mut self.active);
+        for &k in &active {
+            self.t_extra_cache[k] = self.t_extra(k);
+        }
+        {
+            let cache = &self.t_extra_cache;
+            active.retain(|&k| cache[k] > 0);
+        }
+        if active.is_empty() {
+            self.active = active;
+            return None;
+        }
+
+        // -------- Clustering (Eqs. 16–18) --------
+        // Sort ascending by T'_k; F = {k : T'_k ≤ T*}.
+        {
+            let cache = &self.t_extra_cache;
+            let done = &self.done;
+            let tau = &self.tau;
+            active.sort_by(|&x, &y| {
+                let tx = done[x] + cache[x];
+                let ty = done[y] + cache[y];
+                tx.cmp(&ty)
+                    .then(tau[x].partial_cmp(&tau[y]).unwrap_or(std::cmp::Ordering::Equal))
+            });
+        }
+        self.active = active;
+        let f_len = {
+            let cache = &self.t_extra_cache;
+            let done = &self.done;
+            self.active.iter().filter(|&&k| done[k] + cache[k] <= t_star).count()
+        };
+        let k_len = self.active.len();
+
+        // -------- Packing (Eqs. 19–20) --------
+        let mut x_n: usize = if f_len > 0 {
+            // Case 1: prioritize F; optionally grow the batch with the
+            // strictest K\F services, as long as no service in F loses a
+            // step: need T^e_k · (a·X + b) ≤ τ'_k for all k ∈ F, i.e.
+            // X ≤ (τ'^min − b·T^{e(max)}) / (a·T^{e(max)}).
+            let te_max = self.active[..f_len]
+                .iter()
+                .map(|&k| self.t_extra_cache[k])
+                .max()
+                .unwrap_or(0) as f64;
+            let tau_min = self.active[..f_len]
+                .iter()
+                .map(|&k| self.tau[k])
+                .fold(f64::INFINITY, f64::min);
+            let cap = if te_max > 0.0 {
+                ((tau_min - delay.b * te_max) / (delay.a * te_max)).floor().max(0.0) as usize
+            } else {
+                f_len
+            };
+            f_len.max(cap.min(k_len))
+        } else {
+            // Case 2: no starving services; batch as large as possible
+            // while every service can still reach T*:
+            // (a·X + b)·T* ≤ (a+b)·T'_k  for all k, bounded by the min T'.
+            let t_prime_min = self
+                .active
+                .iter()
+                .map(|&k| self.done[k] + self.t_extra_cache[k])
+                .min()
+                .unwrap() as f64;
+            let t_star_f = t_star as f64;
+            let cap = (((delay.a + delay.b) * t_prime_min - delay.b * t_star_f)
+                / (delay.a * t_star_f))
+                .floor()
+                .max(1.0) as usize;
+            cap.min(k_len)
+        };
+        x_n = x_n.clamp(1, k_len);
+
+        // -------- Batching --------
+        // Pack the first X_n services (ascending T'_k). Any packed
+        // service whose remaining budget is below the (shrinking) batch
+        // delay has finished: remove it from the batch AND from K.
+        // (In-place retain + a drained mark; the old two-vec partition +
+        // per-drop O(n) active scan showed up in the §Perf profile.)
+        let mut packed: Vec<usize> = self.active[..x_n].to_vec();
+        let mut any_drained = false;
+        loop {
+            let gx = delay.g(packed.len() as u32);
+            let before = packed.len();
+            let (tau, drained) = (&self.tau, &mut self.drained);
+            packed.retain(|&k| {
+                if tau[k] >= gx {
+                    true
+                } else {
+                    // Completed: mark for removal from the active set.
+                    drained[k] = true;
+                    any_drained = true;
+                    false
+                }
+            });
+            if packed.len() == before || packed.is_empty() {
+                break;
+            }
+        }
+        if any_drained {
+            let drained = &self.drained;
+            self.active.retain(|&k| !drained[k]);
+        }
+        if packed.is_empty() {
+            // Everyone we tried to pack was drained; the next round will
+            // re-cluster the remainder.
+            return if self.active.is_empty() {
+                None
+            } else {
+                Some(Round { start: now, duration: 0.0, tasks: Vec::new(), size: 0 })
+            };
+        }
+
+        let gx = delay.g(packed.len() as u32);
+        let tasks: Vec<TaskRef> = if record {
+            packed
+                .iter()
+                .map(|&k| {
+                    self.done[k] += 1;
+                    TaskRef { service: k, step: self.done[k] }
+                })
+                .collect()
+        } else {
+            // Dry run: only step counts matter for the (P2) objective;
+            // skip the per-task allocation (§Perf: most T* trials lose
+            // and their schedules are thrown away).
+            for &k in &packed {
+                self.done[k] += 1;
+            }
+            Vec::new()
+        };
+
+        // Time passes for every remaining service (Eq. 15).
+        for &k in &self.active {
+            self.tau[k] -= gx;
+        }
+        // Drop services that overran their budget (deadline violation) or
+        // finished the step cap; their T_k stays at `done`.
+        self.active.retain(|&k| self.tau[k] >= 0.0 && self.done[k] < self.max_steps);
+
+        Some(Round { start: now, duration: gx, tasks, size: packed.len() as u32 })
+    }
+
+    /// Run the full clustering-packing-batching loop for one `T*`.
+    /// `record = false` computes only the per-service step counts (the
+    /// objective); `record = true` additionally materializes batches and
+    /// completion times.
+    fn run(mut self, t_star: u32, num_services: usize, record: bool) -> Schedule {
+        let mut batches: Vec<Batch> = Vec::new();
+        let mut now = 0.0;
+        let mut completion = vec![0.0; num_services];
+        // Bound: every non-empty batch advances ≥1 task and tasks are
+        // bounded by num_services * max_steps.
+        let max_rounds = num_services * self.max_steps as usize + 8;
+        for _ in 0..max_rounds {
+            match self.round(t_star, now, record) {
+                None => break,
+                Some(round) => {
+                    if round.size == 0 {
+                        continue; // services drained during packing
+                    }
+                    now = round.start + round.duration;
+                    if record {
+                        for t in &round.tasks {
+                            completion[t.service] = now;
+                        }
+                        batches.push(Batch {
+                            start: round.start,
+                            duration: round.duration,
+                            tasks: round.tasks,
+                        });
+                    }
+                }
+            }
+        }
+        let steps = self.done;
+        // Completion time only meaningful for the *final* step of each
+        // service — it already is: the last batch containing the service
+        // set it.
+        Schedule { batches, steps, completion }
+    }
+}
+
+impl BatchScheduler for Stacking {
+    fn name(&self) -> &'static str {
+        "stacking"
+    }
+
+    fn schedule(
+        &self,
+        services: &[Service],
+        delay: &BatchDelayModel,
+        quality: &dyn QualityModel,
+    ) -> Schedule {
+        if services.is_empty() {
+            return Schedule::empty(0);
+        }
+        let t_star_max = self.derive_t_star_max(services, delay);
+        let stride = self.config.t_star_stride.max(1);
+        let mut best: Option<(f64, u32)> = None;
+        // Dry-run trials: only step counts are computed; the winning T*
+        // is re-run once with full recording (§Perf).
+        let try_t_star = |t_star: u32, best: &mut Option<(f64, u32)>| {
+            let trial = Trial::new(services, delay, self.config.max_steps);
+            let schedule = trial.run(t_star, services.len(), false);
+            let q = schedule.mean_quality(quality);
+            let better = match best {
+                None => true,
+                Some((best_q, _)) => q < *best_q - 1e-12,
+            };
+            if better {
+                *best = Some((q, t_star));
+            }
+        };
+        // Coarse pass.
+        let mut t_star = 1;
+        while t_star <= t_star_max {
+            try_t_star(t_star, &mut best);
+            t_star += stride;
+        }
+        // Fine pass around the coarse winner.
+        if stride > 1 {
+            let center = best.as_ref().map(|(_, t)| *t).unwrap_or(1);
+            let lo = center.saturating_sub(stride - 1).max(1);
+            let hi = (center + stride - 1).min(t_star_max);
+            for t in lo..=hi {
+                if (t as i64 - 1) % stride as i64 != 0 {
+                    try_t_star(t, &mut best);
+                }
+            }
+        }
+        let (_, winner) = best.expect("at least one T* trial");
+        Trial::new(services, delay, self.config.max_steps).run(winner, services.len(), true)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quality::PowerLawQuality;
+    use crate::scheduler::validate::validate_schedule;
+
+    fn paper_delay() -> BatchDelayModel {
+        BatchDelayModel::paper()
+    }
+
+    fn quality() -> PowerLawQuality {
+        PowerLawQuality::paper()
+    }
+
+    fn services_with_budgets(budgets: &[f64]) -> Vec<Service> {
+        budgets.iter().enumerate().map(|(i, &b)| Service::new(i, b)).collect()
+    }
+
+    #[test]
+    fn empty_input() {
+        let s = Stacking::default().schedule(&[], &paper_delay(), &quality());
+        assert_eq!(s.batches.len(), 0);
+    }
+
+    #[test]
+    fn single_service_uses_full_budget() {
+        let delay = paper_delay();
+        let svcs = services_with_budgets(&[5.0]);
+        let s = Stacking::default().schedule(&svcs, &delay, &quality());
+        // Alone, every batch is size 1: floor(5.0 / g(1)) steps.
+        let expect = (5.0 / delay.g(1)).floor() as u32;
+        assert_eq!(s.steps[0], expect);
+        validate_schedule(&s, &svcs, &delay).unwrap();
+    }
+
+    #[test]
+    fn infeasible_service_gets_zero_steps() {
+        let delay = paper_delay();
+        let svcs = services_with_budgets(&[0.1, 5.0]); // 0.1 < g(1)
+        let s = Stacking::default().schedule(&svcs, &delay, &quality());
+        assert_eq!(s.steps[0], 0);
+        assert!(s.steps[1] > 0);
+        validate_schedule(&s, &svcs, &delay).unwrap();
+    }
+
+    #[test]
+    fn negative_budget_handled() {
+        let delay = paper_delay();
+        let svcs = services_with_budgets(&[-1.0, 4.0]);
+        let s = Stacking::default().schedule(&svcs, &delay, &quality());
+        assert_eq!(s.steps[0], 0);
+        validate_schedule(&s, &svcs, &delay).unwrap();
+    }
+
+    #[test]
+    fn equal_budgets_equal_steps() {
+        let delay = paper_delay();
+        let svcs = services_with_budgets(&[8.0; 10]);
+        let s = Stacking::default().schedule(&svcs, &delay, &quality());
+        let t0 = s.steps[0];
+        assert!(t0 > 0);
+        assert!(s.steps.iter().all(|&t| t == t0), "steps={:?}", s.steps);
+        validate_schedule(&s, &svcs, &delay).unwrap();
+    }
+
+    #[test]
+    fn batching_beats_sequential_for_many_services() {
+        // With K=20 and τ' = 8 s, batch denoising must yield far more
+        // total steps than single-instance could (Fig. 2b's premise).
+        let delay = paper_delay();
+        let svcs = services_with_budgets(&[8.0; 20]);
+        let s = Stacking::default().schedule(&svcs, &delay, &quality());
+        let total: u32 = s.steps.iter().sum();
+        // Single instance within 8 s: floor(8/0.3783) ≈ 21 tasks TOTAL.
+        assert!(total > 100, "total steps = {total}");
+        validate_schedule(&s, &svcs, &delay).unwrap();
+    }
+
+    #[test]
+    fn tight_services_not_starved() {
+        // One very tight and several loose services: the tight one must
+        // still complete at least one step (clustering prioritizes it).
+        let delay = paper_delay();
+        let mut budgets = vec![1.0]; // fits ~2 singleton tasks
+        budgets.extend(std::iter::repeat(15.0).take(9));
+        let svcs = services_with_budgets(&budgets);
+        let s = Stacking::default().schedule(&svcs, &delay, &quality());
+        assert!(s.steps[0] >= 1, "tight service starved: {:?}", s.steps);
+        validate_schedule(&s, &svcs, &delay).unwrap();
+    }
+
+    #[test]
+    fn heterogeneous_budgets_monotone_steps() {
+        // More budget must never mean fewer steps (weak monotonicity over
+        // the sorted order) — a fairness sanity check on the packing.
+        let delay = paper_delay();
+        let budgets: Vec<f64> = (1..=12).map(|i| i as f64 * 1.5).collect();
+        let svcs = services_with_budgets(&budgets);
+        let s = Stacking::default().schedule(&svcs, &delay, &quality());
+        for w in s.steps.windows(2) {
+            assert!(w[1] + 2 >= w[0], "steps={:?}", s.steps);
+        }
+        validate_schedule(&s, &svcs, &delay).unwrap();
+    }
+
+    #[test]
+    fn respects_max_steps_cap() {
+        let delay = paper_delay();
+        let svcs = services_with_budgets(&[500.0]);
+        let cfg = StackingConfig { t_star_max: Some(40), max_steps: 25, ..Default::default() };
+        let s = Stacking::new(cfg).schedule(&svcs, &delay, &quality());
+        assert_eq!(s.steps[0], 25);
+        validate_schedule(&s, &svcs, &delay).unwrap();
+    }
+
+    #[test]
+    fn better_than_greedy_under_tight_mix() {
+        // The motivating scenario: mixed deadlines. STACKING must beat
+        // all-in-one-batch greedy on mean quality.
+        use crate::scheduler::greedy::GreedyBatching;
+        let delay = paper_delay();
+        let q = quality();
+        let budgets = [1.5, 2.0, 3.0, 4.0, 6.0, 8.0, 10.0, 12.0, 15.0, 18.0];
+        let svcs = services_with_budgets(&budgets);
+        let stacking = Stacking::default().schedule(&svcs, &delay, &q);
+        let greedy = GreedyBatching.schedule(&svcs, &delay, &q);
+        assert!(
+            stacking.mean_quality(&q) <= greedy.mean_quality(&q) + 1e-9,
+            "stacking {} vs greedy {}",
+            stacking.mean_quality(&q),
+            greedy.mean_quality(&q)
+        );
+        validate_schedule(&stacking, &svcs, &delay).unwrap();
+    }
+
+    #[test]
+    fn deterministic() {
+        let delay = paper_delay();
+        let svcs = services_with_budgets(&[3.0, 7.0, 11.0, 13.0]);
+        let a = Stacking::default().schedule(&svcs, &delay, &quality());
+        let b = Stacking::default().schedule(&svcs, &delay, &quality());
+        assert_eq!(a, b);
+    }
+}

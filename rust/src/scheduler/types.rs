@@ -1,0 +1,185 @@
+//! Core data types for batch-denoising scheduling (problem (P2)).
+
+use crate::delay::BatchDelayModel;
+use crate::quality::QualityModel;
+
+/// A service as seen by the generation-phase scheduler: bandwidth
+/// allocation has already fixed its transmission delay, leaving a
+/// generation budget τ'_k = τ_k − D^ct_k (Eq. 14).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Service {
+    /// Stable id; indexes into `Schedule::steps`.
+    pub id: usize,
+    /// Generation budget τ'_k in seconds. May be ≤ 0 (infeasible after
+    /// transmission: the service can complete zero steps).
+    pub gen_budget: f64,
+}
+
+impl Service {
+    pub fn new(id: usize, gen_budget: f64) -> Self {
+        Self { id, gen_budget }
+    }
+}
+
+/// One denoising task: step `step` (1-based) of service `service`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct TaskRef {
+    pub service: usize,
+    pub step: u32,
+}
+
+/// One executed batch `n`: starts at `start`, runs for `duration`
+/// (= g(|tasks|)), and advances every listed task by one step.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Batch {
+    pub start: f64,
+    pub duration: f64,
+    pub tasks: Vec<TaskRef>,
+}
+
+impl Batch {
+    pub fn size(&self) -> u32 {
+        self.tasks.len() as u32
+    }
+
+    pub fn end(&self) -> f64 {
+        self.start + self.duration
+    }
+}
+
+/// A complete batch-denoising plan: the solution of (P2) for one set of
+/// generation budgets. `steps[k]` is T_k (0 = outage), `completion[k]`
+/// is D^cg_k (0 for zero steps).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Schedule {
+    pub batches: Vec<Batch>,
+    pub steps: Vec<u32>,
+    pub completion: Vec<f64>,
+}
+
+impl Schedule {
+    pub fn empty(num_services: usize) -> Self {
+        Self { batches: Vec::new(), steps: vec![0; num_services], completion: vec![0.0; num_services] }
+    }
+
+    /// Total wall-clock time of the generation phase.
+    pub fn makespan(&self) -> f64 {
+        self.batches.last().map(Batch::end).unwrap_or(0.0)
+    }
+
+    /// Total number of executed denoising tasks.
+    pub fn total_tasks(&self) -> usize {
+        self.batches.iter().map(|b| b.tasks.len()).sum()
+    }
+
+    /// Mean quality over all services — the objective of (P2)
+    /// (services with zero steps are charged the outage quality).
+    pub fn mean_quality(&self, quality: &dyn QualityModel) -> f64 {
+        if self.steps.is_empty() {
+            return 0.0;
+        }
+        self.steps.iter().map(|&t| quality.quality(t)).sum::<f64>() / self.steps.len() as f64
+    }
+
+    /// Number of services that completed zero steps.
+    pub fn outages(&self) -> usize {
+        self.steps.iter().filter(|&&t| t == 0).count()
+    }
+
+    /// GPU busy fraction: Σ g(X_n) is the makespan by construction, so
+    /// this reports the fraction of task-time vs. fixed overhead.
+    pub fn amortization_ratio(&self, delay: &BatchDelayModel) -> f64 {
+        let total: f64 = self.batches.iter().map(|b| delay.g(b.size())).sum();
+        if total == 0.0 {
+            return 0.0;
+        }
+        let task_time: f64 = self.batches.iter().map(|b| delay.a * b.size() as f64).sum();
+        task_time / total
+    }
+}
+
+/// Common interface for STACKING and the three baselines.
+pub trait BatchScheduler: Send + Sync {
+    fn name(&self) -> &'static str;
+
+    /// Solve (P2): choose batches and per-service step counts that
+    /// minimize mean quality subject to each service's generation budget.
+    fn schedule(
+        &self,
+        services: &[Service],
+        delay: &BatchDelayModel,
+        quality: &dyn QualityModel,
+    ) -> Schedule;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quality::PowerLawQuality;
+    use crate::util::approx_eq;
+
+    fn two_batch_schedule() -> Schedule {
+        Schedule {
+            batches: vec![
+                Batch {
+                    start: 0.0,
+                    duration: 0.4,
+                    tasks: vec![TaskRef { service: 0, step: 1 }, TaskRef { service: 1, step: 1 }],
+                },
+                Batch { start: 0.4, duration: 0.38, tasks: vec![TaskRef { service: 0, step: 2 }] },
+            ],
+            steps: vec![2, 1, 0],
+            completion: vec![0.78, 0.4, 0.0],
+        }
+    }
+
+    #[test]
+    fn makespan_and_totals() {
+        let s = two_batch_schedule();
+        assert!(approx_eq(s.makespan(), 0.78, 1e-12));
+        assert_eq!(s.total_tasks(), 3);
+        assert_eq!(s.outages(), 1);
+    }
+
+    #[test]
+    fn empty_schedule() {
+        let s = Schedule::empty(3);
+        assert_eq!(s.makespan(), 0.0);
+        assert_eq!(s.total_tasks(), 0);
+        assert_eq!(s.outages(), 3);
+    }
+
+    #[test]
+    fn mean_quality_counts_outages() {
+        let s = two_batch_schedule();
+        let q = PowerLawQuality::paper();
+        let expect = (q.quality(2) + q.quality(1) + q.outage()) / 3.0;
+        assert!(approx_eq(s.mean_quality(&q), expect, 1e-12));
+    }
+
+    #[test]
+    fn amortization_ratio_increases_with_batching() {
+        let delay = BatchDelayModel::paper();
+        let batched = Schedule {
+            batches: vec![Batch {
+                start: 0.0,
+                duration: delay.g(10),
+                tasks: (0..10).map(|k| TaskRef { service: k, step: 1 }).collect(),
+            }],
+            steps: vec![1; 10],
+            completion: vec![delay.g(10); 10],
+        };
+        let sequential = Schedule {
+            batches: (0..10)
+                .map(|k| Batch {
+                    start: k as f64 * delay.g(1),
+                    duration: delay.g(1),
+                    tasks: vec![TaskRef { service: k, step: 1 }],
+                })
+                .collect(),
+            steps: vec![1; 10],
+            completion: (1..=10).map(|i| i as f64 * delay.g(1)).collect(),
+        };
+        assert!(batched.amortization_ratio(&delay) > sequential.amortization_ratio(&delay));
+    }
+}

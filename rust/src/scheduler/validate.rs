@@ -1,0 +1,265 @@
+//! Machine-checkable validation of the paper's constraints on any
+//! produced [`Schedule`] — used by unit tests, property tests, and the
+//! simulator's debug assertions.
+//!
+//! Checks constraints (1), (2), (6), (7) of (P0) and the generation-
+//! budget form of the deadline (14), plus internal consistency between
+//! recorded durations and the delay model.
+
+use std::collections::HashMap;
+
+use thiserror::Error;
+
+use crate::delay::BatchDelayModel;
+
+use super::types::{Schedule, Service};
+
+/// A constraint violation, tagged with the paper's equation number.
+#[derive(Debug, Error, PartialEq)]
+pub enum ScheduleError {
+    #[error("eq(2): service {service} step {step} executed {count} times (must be exactly 1)")]
+    StepMultiplicity { service: usize, step: u32, count: usize },
+    #[error("eq(2): service {service} reports T_k={steps} but executed steps {executed:?}")]
+    StepsMismatch { service: usize, steps: u32, executed: Vec<u32> },
+    #[error("eq(6): batch {n} starts at {start:.6} before batch {prev} ends at {end:.6}")]
+    BatchOverlap { n: usize, prev: usize, start: f64, end: f64 },
+    #[error("eq(7): service {service} step {step} starts at {start:.6} before step {prev_step} completes at {end:.6}")]
+    DependencyViolated { service: usize, step: u32, prev_step: u32, start: f64, end: f64 },
+    #[error("eq(14): service {service} finishes generation at {finish:.6} > budget {budget:.6}")]
+    BudgetExceeded { service: usize, finish: f64, budget: f64 },
+    #[error("batch {n} duration {duration:.6} != g({size}) = {expected:.6}")]
+    DurationMismatch { n: usize, duration: f64, size: u32, expected: f64 },
+    #[error("batch {n} contains service {service} more than once")]
+    DuplicateInBatch { n: usize, service: usize },
+    #[error("completion[{service}]={recorded:.6} but last batch of the service ends at {actual:.6}")]
+    CompletionMismatch { service: usize, recorded: f64, actual: f64 },
+}
+
+const EPS: f64 = 1e-9;
+
+/// Validate a schedule against the constraint system. Returns the first
+/// violation found, or `Ok(())`.
+pub fn validate_schedule(
+    schedule: &Schedule,
+    services: &[Service],
+    delay: &BatchDelayModel,
+) -> Result<(), ScheduleError> {
+    // ---- durations consistent with g(X), batches sequential (6) ----
+    let mut prev_end = 0.0;
+    for (n, batch) in schedule.batches.iter().enumerate() {
+        let expected = delay.g(batch.size());
+        if (batch.duration - expected).abs() > EPS {
+            return Err(ScheduleError::DurationMismatch {
+                n,
+                duration: batch.duration,
+                size: batch.size(),
+                expected,
+            });
+        }
+        if n > 0 && batch.start + EPS < prev_end {
+            return Err(ScheduleError::BatchOverlap {
+                n,
+                prev: n - 1,
+                start: batch.start,
+                end: prev_end,
+            });
+        }
+        prev_end = batch.end();
+        // no duplicate service within one batch
+        let mut seen = Vec::with_capacity(batch.tasks.len());
+        for t in &batch.tasks {
+            if seen.contains(&t.service) {
+                return Err(ScheduleError::DuplicateInBatch { n, service: t.service });
+            }
+            seen.push(t.service);
+        }
+    }
+
+    // ---- per-service execution map ----
+    // (service, step) -> (start, end)
+    let mut exec: HashMap<(usize, u32), (f64, f64)> = HashMap::new();
+    let mut counts: HashMap<(usize, u32), usize> = HashMap::new();
+    for batch in &schedule.batches {
+        for t in &batch.tasks {
+            *counts.entry((t.service, t.step)).or_insert(0) += 1;
+            exec.insert((t.service, t.step), (batch.start, batch.end()));
+        }
+    }
+    for (&(service, step), &count) in &counts {
+        if count != 1 {
+            return Err(ScheduleError::StepMultiplicity { service, step, count });
+        }
+    }
+
+    for (k, svc) in services.iter().enumerate() {
+        let t_k = schedule.steps[k];
+        // (2): steps 1..=T_k each executed exactly once, nothing beyond.
+        let mut executed: Vec<u32> =
+            exec.keys().filter(|(s, _)| *s == k).map(|(_, step)| *step).collect();
+        executed.sort_unstable();
+        let expected: Vec<u32> = (1..=t_k).collect();
+        if executed != expected {
+            return Err(ScheduleError::StepsMismatch { service: k, steps: t_k, executed });
+        }
+        // (7): dependency order.
+        for step in 2..=t_k {
+            let (start, _) = exec[&(k, step)];
+            let (_, prev_end) = exec[&(k, step - 1)];
+            if start + EPS < prev_end {
+                return Err(ScheduleError::DependencyViolated {
+                    service: k,
+                    step,
+                    prev_step: step - 1,
+                    start,
+                    end: prev_end,
+                });
+            }
+        }
+        // (14): generation completes within the budget.
+        if t_k > 0 {
+            let finish = exec[&(k, t_k)].1;
+            if finish > svc.gen_budget + EPS {
+                return Err(ScheduleError::BudgetExceeded {
+                    service: k,
+                    finish,
+                    budget: svc.gen_budget,
+                });
+            }
+            let recorded = schedule.completion[k];
+            if (recorded - finish).abs() > EPS {
+                return Err(ScheduleError::CompletionMismatch {
+                    service: k,
+                    recorded,
+                    actual: finish,
+                });
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scheduler::types::{Batch, TaskRef};
+
+    fn delay() -> BatchDelayModel {
+        BatchDelayModel::new(0.1, 0.5)
+    }
+
+    fn service(budget: f64) -> Vec<Service> {
+        vec![Service::new(0, budget)]
+    }
+
+    fn singleton_batch(start: f64, service: usize, step: u32) -> Batch {
+        Batch { start, duration: 0.6, tasks: vec![TaskRef { service, step }] }
+    }
+
+    #[test]
+    fn accepts_valid_schedule() {
+        let s = Schedule {
+            batches: vec![singleton_batch(0.0, 0, 1), singleton_batch(0.6, 0, 2)],
+            steps: vec![2],
+            completion: vec![1.2],
+        };
+        validate_schedule(&s, &service(2.0), &delay()).unwrap();
+    }
+
+    #[test]
+    fn rejects_duplicate_step() {
+        let s = Schedule {
+            batches: vec![singleton_batch(0.0, 0, 1), singleton_batch(0.6, 0, 1)],
+            steps: vec![1],
+            completion: vec![1.2],
+        };
+        let err = validate_schedule(&s, &service(5.0), &delay()).unwrap_err();
+        assert!(matches!(err, ScheduleError::StepMultiplicity { .. }));
+    }
+
+    #[test]
+    fn rejects_overlapping_batches() {
+        let s = Schedule {
+            batches: vec![singleton_batch(0.0, 0, 1), singleton_batch(0.3, 0, 2)],
+            steps: vec![2],
+            completion: vec![0.9],
+        };
+        let err = validate_schedule(&s, &service(5.0), &delay()).unwrap_err();
+        assert!(matches!(err, ScheduleError::BatchOverlap { .. }));
+    }
+
+    #[test]
+    fn rejects_dependency_violation() {
+        // step 2 in the first batch, step 1 in the second
+        let s = Schedule {
+            batches: vec![singleton_batch(0.0, 0, 2), singleton_batch(0.6, 0, 1)],
+            steps: vec![2],
+            completion: vec![1.2],
+        };
+        let err = validate_schedule(&s, &service(5.0), &delay()).unwrap_err();
+        assert!(matches!(err, ScheduleError::DependencyViolated { .. }));
+    }
+
+    #[test]
+    fn rejects_budget_overrun() {
+        let s = Schedule {
+            batches: vec![singleton_batch(0.0, 0, 1)],
+            steps: vec![1],
+            completion: vec![0.6],
+        };
+        let err = validate_schedule(&s, &service(0.5), &delay()).unwrap_err();
+        assert!(matches!(err, ScheduleError::BudgetExceeded { .. }));
+    }
+
+    #[test]
+    fn rejects_wrong_duration() {
+        let s = Schedule {
+            batches: vec![Batch {
+                start: 0.0,
+                duration: 0.7, // g(1) = 0.6
+                tasks: vec![TaskRef { service: 0, step: 1 }],
+            }],
+            steps: vec![1],
+            completion: vec![0.7],
+        };
+        let err = validate_schedule(&s, &service(5.0), &delay()).unwrap_err();
+        assert!(matches!(err, ScheduleError::DurationMismatch { .. }));
+    }
+
+    #[test]
+    fn rejects_steps_gap() {
+        // reports T_k = 2 but only step 2 executed
+        let s = Schedule {
+            batches: vec![singleton_batch(0.0, 0, 2)],
+            steps: vec![2],
+            completion: vec![0.6],
+        };
+        let err = validate_schedule(&s, &service(5.0), &delay()).unwrap_err();
+        assert!(matches!(err, ScheduleError::StepsMismatch { .. }));
+    }
+
+    #[test]
+    fn rejects_duplicate_service_in_batch() {
+        let s = Schedule {
+            batches: vec![Batch {
+                start: 0.0,
+                duration: 0.7, // g(2) = 0.7
+                tasks: vec![TaskRef { service: 0, step: 1 }, TaskRef { service: 0, step: 2 }],
+            }],
+            steps: vec![2],
+            completion: vec![0.7],
+        };
+        let err = validate_schedule(&s, &service(5.0), &delay()).unwrap_err();
+        assert!(matches!(err, ScheduleError::DuplicateInBatch { .. }));
+    }
+
+    #[test]
+    fn rejects_completion_mismatch() {
+        let s = Schedule {
+            batches: vec![singleton_batch(0.0, 0, 1)],
+            steps: vec![1],
+            completion: vec![0.9], // actual end is 0.6
+        };
+        let err = validate_schedule(&s, &service(5.0), &delay()).unwrap_err();
+        assert!(matches!(err, ScheduleError::CompletionMismatch { .. }));
+    }
+}

@@ -1,0 +1,318 @@
+//! TCP front-end: a line-oriented protocol for submitting AIGC requests
+//! to the serving engine (std::net — the vendored crate set has no
+//! tokio; one OS thread per connection plus a single GPU-worker thread
+//! matches the paper's single-shared-model topology anyway).
+//!
+//! Protocol (one request per line, UTF-8):
+//!   `GEN <deadline_s> <eta_bits_per_s_per_hz>`  → queued for the next
+//!        epoch; response `DONE <steps> <gen_ms> <tx_ms> <quality>` once
+//!        the epoch executes (or `OUTAGE` if infeasible).
+//!   `STATS` → multi-line metrics snapshot terminated by `.`.
+//!   `QUIT`  → closes the connection.
+
+pub mod protocol;
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+pub use protocol::{parse_request, Command, Response};
+
+use crate::bandwidth::PsoAllocator;
+use crate::channel::Link;
+use crate::config::ExperimentConfig;
+use crate::coordinator::{Engine, EngineConfig};
+use crate::quality::PowerLawQuality;
+use crate::runtime::ArtifactStore;
+use crate::scheduler::Stacking;
+use crate::trace::{DeviceRequest, Workload};
+
+/// One queued request with its reply channel.
+struct Pending {
+    deadline: f64,
+    eta: f64,
+    reply: Sender<Response>,
+}
+
+/// Server handle: spawned threads stop when dropped (best effort).
+pub struct Server {
+    pub addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept_handle: Option<std::thread::JoinHandle<()>>,
+    worker_handle: Option<std::thread::JoinHandle<()>>,
+}
+
+/// Epoching policy: the worker drains the queue every `epoch_ms` (or as
+/// soon as `max_batch` requests are waiting).
+#[derive(Debug, Clone, Copy)]
+pub struct ServerConfig {
+    pub epoch_ms: u64,
+    pub max_batch: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        Self { epoch_ms: 200, max_batch: 32 }
+    }
+}
+
+/// Start the server on `addr` (use port 0 for an ephemeral port).
+///
+/// The PJRT client is not `Send` (`Rc` internals), so the
+/// [`ArtifactStore`] is created *inside* the GPU-worker thread from
+/// `artifacts_dir`; compilation happens once at worker startup.
+pub fn serve(
+    artifacts_dir: std::path::PathBuf,
+    cfg: ExperimentConfig,
+    server_cfg: ServerConfig,
+    addr: &str,
+) -> Result<Server> {
+    let listener = TcpListener::bind(addr).context("bind")?;
+    let local = listener.local_addr()?;
+    listener.set_nonblocking(true)?;
+    let stop = Arc::new(AtomicBool::new(false));
+
+    let (queue_tx, queue_rx) = channel::<Pending>();
+    let metrics_text = Arc::new(Mutex::new(String::new()));
+
+    // ---- GPU worker: owns the PJRT store, drains the queue into epochs ----
+    let worker_stop = stop.clone();
+    let worker_metrics = metrics_text.clone();
+    let (ready_tx, ready_rx) = channel::<Result<()>>();
+    let worker = std::thread::Builder::new()
+        .name("gpu-worker".into())
+        .spawn(move || {
+            let store = match ArtifactStore::load(&artifacts_dir) {
+                Ok(s) => {
+                    let _ = ready_tx.send(Ok(()));
+                    s
+                }
+                Err(e) => {
+                    let _ = ready_tx.send(Err(e));
+                    return;
+                }
+            };
+            gpu_worker(&store, cfg, server_cfg, queue_rx, worker_stop, worker_metrics)
+        })
+        .context("spawn worker")?;
+    ready_rx
+        .recv_timeout(Duration::from_secs(120))
+        .context("worker startup timeout")?
+        .context("loading artifacts")?;
+
+    // ---- acceptor ----
+    let accept_stop = stop.clone();
+    let acceptor = std::thread::Builder::new()
+        .name("acceptor".into())
+        .spawn(move || {
+            while !accept_stop.load(Ordering::Relaxed) {
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        let tx = queue_tx.clone();
+                        let metrics = metrics_text.clone();
+                        let _ = std::thread::Builder::new()
+                            .name("conn".into())
+                            .spawn(move || handle_conn(stream, tx, metrics));
+                    }
+                    Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(Duration::from_millis(10));
+                    }
+                    Err(_) => break,
+                }
+            }
+        })
+        .context("spawn acceptor")?;
+
+    Ok(Server { addr: local, stop, accept_handle: Some(acceptor), worker_handle: Some(worker) })
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.accept_handle.take() {
+            let _ = h.join();
+        }
+        if let Some(h) = self.worker_handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn gpu_worker(
+    store: &ArtifactStore,
+    cfg: ExperimentConfig,
+    server_cfg: ServerConfig,
+    queue: Receiver<Pending>,
+    stop: Arc<AtomicBool>,
+    metrics_text: Arc<Mutex<String>>,
+) {
+    let mut engine = Engine::new(store, EngineConfig::default());
+    let quality = PowerLawQuality::paper();
+    let scheduler = Stacking::default();
+    let allocator = PsoAllocator::default();
+    while !stop.load(Ordering::Relaxed) {
+        // Collect an epoch.
+        let mut epoch: Vec<Pending> = Vec::new();
+        let deadline = std::time::Instant::now() + Duration::from_millis(server_cfg.epoch_ms);
+        while epoch.len() < server_cfg.max_batch {
+            let now = std::time::Instant::now();
+            if now >= deadline && !epoch.is_empty() {
+                break;
+            }
+            let timeout = if epoch.is_empty() {
+                Duration::from_millis(50)
+            } else {
+                deadline.saturating_duration_since(now)
+            };
+            match queue.recv_timeout(timeout) {
+                Ok(p) => epoch.push(p),
+                Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {
+                    if !epoch.is_empty() {
+                        break;
+                    }
+                    if stop.load(Ordering::Relaxed) {
+                        return;
+                    }
+                }
+                Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => return,
+            }
+        }
+        if epoch.is_empty() {
+            continue;
+        }
+        // Build a workload from the epoch's requests.
+        let devices: Vec<DeviceRequest> = epoch
+            .iter()
+            .enumerate()
+            .map(|(i, p)| DeviceRequest {
+                id: i,
+                deadline: p.deadline,
+                link: Link::new(p.eta),
+            })
+            .collect();
+        let workload = Workload {
+            devices,
+            total_bandwidth_hz: cfg.scenario.total_bandwidth_hz,
+            content_bits: cfg.scenario.content_bits,
+        };
+        match engine.serve_epoch(&workload, &scheduler, &allocator, &quality) {
+            Ok(report) => {
+                for (pending, req) in epoch.iter().zip(&report.requests) {
+                    let resp = if req.steps == 0 {
+                        Response::Outage
+                    } else {
+                        Response::Done {
+                            steps: req.steps,
+                            gen_ms: req.planned_gen_s * 1e3,
+                            tx_ms: req.tx_s * 1e3,
+                            quality: req.predicted_quality,
+                        }
+                    };
+                    let _ = pending.reply.send(resp);
+                }
+                *metrics_text.lock().unwrap() = engine.metrics.render();
+            }
+            Err(e) => {
+                for pending in &epoch {
+                    let _ = pending.reply.send(Response::Error(format!("{e:#}")));
+                }
+            }
+        }
+    }
+}
+
+fn handle_conn(stream: TcpStream, queue: Sender<Pending>, metrics_text: Arc<Mutex<String>>) {
+    let peer = stream.peer_addr().ok();
+    let mut writer = match stream.try_clone() {
+        Ok(w) => w,
+        Err(_) => return,
+    };
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let Ok(line) = line else { break };
+        match parse_request(&line) {
+            Ok(Command::Gen { deadline_s, eta }) => {
+                let (tx, rx) = channel();
+                if queue.send(Pending { deadline: deadline_s, eta, reply: tx }).is_err() {
+                    let _ = writeln!(writer, "ERR server shutting down");
+                    break;
+                }
+                match rx.recv_timeout(Duration::from_secs(120)) {
+                    Ok(resp) => {
+                        let _ = writeln!(writer, "{}", resp.render());
+                    }
+                    Err(_) => {
+                        let _ = writeln!(writer, "ERR timeout");
+                    }
+                }
+            }
+            Ok(Command::Stats) => {
+                let snapshot = metrics_text.lock().unwrap().clone();
+                let _ = write!(writer, "{snapshot}");
+                let _ = writeln!(writer, ".");
+            }
+            Ok(Command::Quit) => break,
+            Err(msg) => {
+                let _ = writeln!(writer, "ERR {msg}");
+            }
+        }
+    }
+    log::debug!("connection closed: {peer:?}");
+}
+
+/// Blocking client for the line protocol (used by examples and tests).
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    pub fn connect(addr: std::net::SocketAddr) -> Result<Self> {
+        let stream = TcpStream::connect(addr).context("connect")?;
+        let writer = stream.try_clone()?;
+        Ok(Self { reader: BufReader::new(stream), writer })
+    }
+
+    /// Submit a generation request and wait for the epoch to serve it.
+    pub fn generate(&mut self, deadline_s: f64, eta: f64) -> Result<Response> {
+        writeln!(self.writer, "GEN {deadline_s} {eta}")?;
+        let mut line = String::new();
+        self.reader.read_line(&mut line)?;
+        Response::parse(line.trim()).map_err(|e| anyhow::anyhow!(e))
+    }
+
+    pub fn stats(&mut self) -> Result<String> {
+        writeln!(self.writer, "STATS")?;
+        let mut out = String::new();
+        loop {
+            let mut line = String::new();
+            let n = self.reader.read_line(&mut line)?;
+            if n == 0 || line.trim() == "." {
+                break;
+            }
+            out.push_str(&line);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Full server round-trips live in rust/tests/server_e2e.rs (they
+    // need the compiled artifacts); protocol-only tests are in
+    // protocol.rs.
+
+    #[test]
+    fn server_config_defaults_sane() {
+        let cfg = ServerConfig::default();
+        assert!(cfg.epoch_ms >= 10);
+        assert!(cfg.max_batch >= 1);
+    }
+}

@@ -1,0 +1,132 @@
+//! Wire protocol parsing/rendering for the TCP front-end.
+
+/// A parsed client command.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Command {
+    /// `GEN <deadline_s> <eta>` — request one content generation.
+    Gen { deadline_s: f64, eta: f64 },
+    /// `STATS` — metrics snapshot.
+    Stats,
+    /// `QUIT` — close the connection.
+    Quit,
+}
+
+/// A server response line.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Response {
+    Done { steps: u32, gen_ms: f64, tx_ms: f64, quality: f64 },
+    Outage,
+    Error(String),
+}
+
+/// Parse one request line.
+pub fn parse_request(line: &str) -> Result<Command, String> {
+    let mut parts = line.split_whitespace();
+    match parts.next() {
+        Some("GEN") => {
+            let deadline_s: f64 = parts
+                .next()
+                .ok_or("GEN needs <deadline_s> <eta>")?
+                .parse()
+                .map_err(|_| "bad deadline".to_string())?;
+            let eta: f64 = parts
+                .next()
+                .ok_or("GEN needs <deadline_s> <eta>")?
+                .parse()
+                .map_err(|_| "bad eta".to_string())?;
+            if parts.next().is_some() {
+                return Err("trailing arguments".into());
+            }
+            if !(deadline_s > 0.0) || !(eta > 0.0) {
+                return Err("deadline and eta must be positive".into());
+            }
+            Ok(Command::Gen { deadline_s, eta })
+        }
+        Some("STATS") => Ok(Command::Stats),
+        Some("QUIT") => Ok(Command::Quit),
+        Some(other) => Err(format!("unknown command '{other}'")),
+        None => Err("empty line".into()),
+    }
+}
+
+impl Response {
+    pub fn render(&self) -> String {
+        match self {
+            Response::Done { steps, gen_ms, tx_ms, quality } => {
+                format!("DONE {steps} {gen_ms:.3} {tx_ms:.3} {quality:.4}")
+            }
+            Response::Outage => "OUTAGE".to_string(),
+            Response::Error(msg) => format!("ERR {msg}"),
+        }
+    }
+
+    pub fn parse(line: &str) -> Result<Response, String> {
+        let mut parts = line.split_whitespace();
+        match parts.next() {
+            Some("DONE") => {
+                let nums: Vec<&str> = parts.collect();
+                if nums.len() != 4 {
+                    return Err(format!("DONE expects 4 fields, got {}", nums.len()));
+                }
+                Ok(Response::Done {
+                    steps: nums[0].parse().map_err(|_| "bad steps")?,
+                    gen_ms: nums[1].parse().map_err(|_| "bad gen_ms")?,
+                    tx_ms: nums[2].parse().map_err(|_| "bad tx_ms")?,
+                    quality: nums[3].parse().map_err(|_| "bad quality")?,
+                })
+            }
+            Some("OUTAGE") => Ok(Response::Outage),
+            Some("ERR") => Ok(Response::Error(line[3..].trim().to_string())),
+            _ => Err(format!("unparseable response '{line}'")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_gen() {
+        assert_eq!(
+            parse_request("GEN 10.5 7.25").unwrap(),
+            Command::Gen { deadline_s: 10.5, eta: 7.25 }
+        );
+    }
+
+    #[test]
+    fn rejects_malformed_gen() {
+        assert!(parse_request("GEN").is_err());
+        assert!(parse_request("GEN 5").is_err());
+        assert!(parse_request("GEN five six").is_err());
+        assert!(parse_request("GEN 5 6 7").is_err());
+        assert!(parse_request("GEN -1 5").is_err());
+        assert!(parse_request("GEN 5 0").is_err());
+    }
+
+    #[test]
+    fn parses_control_commands() {
+        assert_eq!(parse_request("STATS").unwrap(), Command::Stats);
+        assert_eq!(parse_request("QUIT").unwrap(), Command::Quit);
+        assert!(parse_request("NOPE").is_err());
+        assert!(parse_request("").is_err());
+    }
+
+    #[test]
+    fn response_roundtrip() {
+        let r = Response::Done { steps: 12, gen_ms: 345.678, tx_ms: 12.5, quality: 31.4159 };
+        let parsed = Response::parse(&r.render()).unwrap();
+        match parsed {
+            Response::Done { steps, gen_ms, tx_ms, quality } => {
+                assert_eq!(steps, 12);
+                assert!((gen_ms - 345.678).abs() < 1e-3);
+                assert!((tx_ms - 12.5).abs() < 1e-3);
+                assert!((quality - 31.4159).abs() < 1e-3);
+            }
+            _ => panic!(),
+        }
+        assert_eq!(Response::parse("OUTAGE").unwrap(), Response::Outage);
+        assert!(matches!(Response::parse("ERR boom").unwrap(), Response::Error(_)));
+        assert!(Response::parse("GARBAGE").is_err());
+    }
+}

@@ -1,0 +1,103 @@
+//! The joint generation-and-transmission solver — problem (P0) via the
+//! (P1) ∘ (P2) decomposition of Section III-A.
+//!
+//! Outer loop: a bandwidth [`Allocator`] proposes `B_1..B_K`; for each
+//! proposal the inner [`BatchScheduler`] solves (P2) on the induced
+//! generation budgets and reports the mean quality `Q*`, which the
+//! allocator minimizes.
+
+use crate::bandwidth::{AllocationProblem, Allocator};
+use crate::delay::BatchDelayModel;
+use crate::quality::QualityModel;
+use crate::scheduler::BatchScheduler;
+use crate::trace::Workload;
+
+use super::{evaluate, gen_budgets, Outcome};
+
+/// Result of a joint solve.
+#[derive(Debug, Clone)]
+pub struct JointSolution {
+    pub outcome: Outcome,
+    /// Number of inner (P2) solves the outer search performed.
+    pub inner_evals: usize,
+}
+
+/// Solve (P0): outer bandwidth search with inner batch-denoising solve.
+pub fn solve_joint(
+    workload: &Workload,
+    scheduler: &dyn BatchScheduler,
+    allocator: &dyn Allocator,
+    delay: &BatchDelayModel,
+    quality: &dyn QualityModel,
+) -> JointSolution {
+    let problem = AllocationProblem::new(workload.total_bandwidth_hz, workload.links());
+    let mut inner_evals = 0usize;
+    let allocation = {
+        let mut objective = |alloc: &[f64]| -> f64 {
+            inner_evals += 1;
+            let services = gen_budgets(workload, alloc);
+            scheduler.schedule(&services, delay, quality).mean_quality(quality)
+        };
+        allocator.allocate(&problem, &mut objective)
+    };
+    let outcome = evaluate(workload, &allocation, scheduler, delay, quality);
+    JointSolution { outcome, inner_evals }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bandwidth::{EqualAllocator, PsoAllocator, PsoConfig};
+    use crate::config::ExperimentConfig;
+    use crate::quality::PowerLawQuality;
+    use crate::scheduler::Stacking;
+    use crate::trace::generate;
+
+    fn fast_pso() -> PsoAllocator {
+        PsoAllocator::new(PsoConfig { particles: 8, iterations: 10, patience: 5, ..Default::default() })
+    }
+
+    #[test]
+    fn pso_no_worse_than_equal() {
+        let mut cfg = ExperimentConfig::paper();
+        // Tight deadlines + small band make bandwidth allocation matter.
+        cfg.scenario.deadline_lo = 3.0;
+        cfg.scenario.total_bandwidth_hz = 15_000.0;
+        let w = generate(&cfg.scenario, 3);
+        let delay = crate::delay::BatchDelayModel::paper();
+        let q = PowerLawQuality::paper();
+        let sched = Stacking::default();
+        let pso = solve_joint(&w, &sched, &fast_pso(), &delay, &q);
+        let eq = solve_joint(&w, &sched, &EqualAllocator, &delay, &q);
+        assert!(
+            pso.outcome.mean_quality() <= eq.outcome.mean_quality() + 1e-9,
+            "pso {} vs equal {}",
+            pso.outcome.mean_quality(),
+            eq.outcome.mean_quality()
+        );
+        assert!(pso.inner_evals > eq.inner_evals);
+    }
+
+    #[test]
+    fn equal_allocator_single_eval() {
+        let cfg = ExperimentConfig::paper();
+        let w = generate(&cfg.scenario, 4);
+        let delay = crate::delay::BatchDelayModel::paper();
+        let q = PowerLawQuality::paper();
+        let sol = solve_joint(&w, &Stacking::default(), &EqualAllocator, &delay, &q);
+        assert_eq!(sol.inner_evals, 0); // equal split ignores the objective
+        assert_eq!(sol.outcome.allocation_hz.len(), w.k());
+    }
+
+    #[test]
+    fn allocation_feasible() {
+        let cfg = ExperimentConfig::paper();
+        let w = generate(&cfg.scenario, 5);
+        let delay = crate::delay::BatchDelayModel::paper();
+        let q = PowerLawQuality::paper();
+        let sol = solve_joint(&w, &Stacking::default(), &fast_pso(), &delay, &q);
+        let total: f64 = sol.outcome.allocation_hz.iter().sum();
+        assert!(total <= w.total_bandwidth_hz * (1.0 + 1e-9));
+        assert!(sol.outcome.allocation_hz.iter().all(|&b| b > 0.0));
+    }
+}

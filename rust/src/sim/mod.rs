@@ -1,0 +1,196 @@
+//! Scenario simulator: evaluates a complete solution (bandwidth
+//! allocation + batch-denoising schedule) against the system model of
+//! Section II, producing the per-service end-to-end outcomes behind
+//! Figs. 2a–2c.
+
+pub mod joint;
+
+pub use joint::{solve_joint, JointSolution};
+
+use crate::delay::BatchDelayModel;
+use crate::quality::QualityModel;
+use crate::scheduler::{BatchScheduler, Schedule, Service};
+use crate::trace::Workload;
+
+/// Outcome of one service.
+#[derive(Debug, Clone, Copy)]
+pub struct ServiceOutcome {
+    pub id: usize,
+    pub deadline: f64,
+    /// Steps completed T_k (0 = outage).
+    pub steps: u32,
+    /// Content generation delay D^cg_k (Eq. 5).
+    pub gen_delay: f64,
+    /// Transmission delay D^ct_k (Eq. 11).
+    pub tx_delay: f64,
+    /// End-to-end D^e2e_k (Eq. 12). For an outage this is 0 (nothing
+    /// delivered) but `met` is false.
+    pub e2e_delay: f64,
+    /// FID-like quality actually delivered.
+    pub quality: f64,
+    /// Deadline satisfied with non-zero steps.
+    pub met: bool,
+}
+
+/// Outcome of a whole scenario.
+#[derive(Debug, Clone)]
+pub struct Outcome {
+    pub services: Vec<ServiceOutcome>,
+    pub schedule: Schedule,
+    pub allocation_hz: Vec<f64>,
+}
+
+impl Outcome {
+    /// The (P0) objective: mean quality across services.
+    pub fn mean_quality(&self) -> f64 {
+        if self.services.is_empty() {
+            return 0.0;
+        }
+        self.services.iter().map(|s| s.quality).sum::<f64>() / self.services.len() as f64
+    }
+
+    pub fn outages(&self) -> usize {
+        self.services.iter().filter(|s| !s.met).count()
+    }
+
+    pub fn mean_steps(&self) -> f64 {
+        if self.services.is_empty() {
+            return 0.0;
+        }
+        self.services.iter().map(|s| s.steps as f64).sum::<f64>() / self.services.len() as f64
+    }
+
+    pub fn max_e2e(&self) -> f64 {
+        self.services.iter().map(|s| s.e2e_delay).fold(0.0, f64::max)
+    }
+}
+
+/// Generation budgets τ'_k = τ_k − D^ct_k for a given allocation (Eq. 14).
+pub fn gen_budgets(workload: &Workload, allocation_hz: &[f64]) -> Vec<Service> {
+    assert_eq!(allocation_hz.len(), workload.k());
+    workload
+        .devices
+        .iter()
+        .zip(allocation_hz)
+        .map(|(dev, &bw)| {
+            let tx = dev.link.tx_delay(workload.content_bits, bw);
+            Service::new(dev.id, dev.deadline - tx)
+        })
+        .collect()
+}
+
+/// Run one scheduler under one allocation and assemble the outcome.
+pub fn evaluate(
+    workload: &Workload,
+    allocation_hz: &[f64],
+    scheduler: &dyn BatchScheduler,
+    delay: &BatchDelayModel,
+    quality: &dyn QualityModel,
+) -> Outcome {
+    let services = gen_budgets(workload, allocation_hz);
+    let schedule = scheduler.schedule(&services, delay, quality);
+    debug_assert!(
+        crate::scheduler::validate_schedule(&schedule, &services, delay).is_ok(),
+        "scheduler {} produced an invalid schedule",
+        scheduler.name()
+    );
+    let outcomes = workload
+        .devices
+        .iter()
+        .zip(allocation_hz)
+        .map(|(dev, &bw)| {
+            let steps = schedule.steps[dev.id];
+            let gen_delay = schedule.completion[dev.id];
+            let tx_delay = dev.link.tx_delay(workload.content_bits, bw);
+            let (e2e, met) = if steps > 0 {
+                let e2e = gen_delay + tx_delay;
+                (e2e, e2e <= dev.deadline + 1e-9)
+            } else {
+                (0.0, false)
+            };
+            ServiceOutcome {
+                id: dev.id,
+                deadline: dev.deadline,
+                steps,
+                gen_delay,
+                tx_delay,
+                e2e_delay: e2e,
+                quality: quality.quality(steps),
+                met,
+            }
+        })
+        .collect();
+    Outcome { services: outcomes, schedule, allocation_hz: allocation_hz.to_vec() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ExperimentConfig;
+    use crate::quality::PowerLawQuality;
+    use crate::scheduler::{GreedyBatching, Stacking};
+    use crate::trace::generate;
+
+    fn setup() -> (Workload, BatchDelayModel, PowerLawQuality) {
+        let cfg = ExperimentConfig::paper();
+        (generate(&cfg.scenario, 7), BatchDelayModel::paper(), PowerLawQuality::paper())
+    }
+
+    fn equal_alloc(w: &Workload) -> Vec<f64> {
+        vec![w.total_bandwidth_hz / w.k() as f64; w.k()]
+    }
+
+    #[test]
+    fn budgets_subtract_tx_delay() {
+        let (w, _, _) = setup();
+        let alloc = equal_alloc(&w);
+        let services = gen_budgets(&w, &alloc);
+        for (svc, dev) in services.iter().zip(&w.devices) {
+            let tx = dev.link.tx_delay(w.content_bits, alloc[dev.id]);
+            assert!((svc.gen_budget - (dev.deadline - tx)).abs() < 1e-12);
+            assert!(svc.gen_budget < dev.deadline);
+        }
+    }
+
+    #[test]
+    fn all_met_services_within_deadline() {
+        let (w, delay, quality) = setup();
+        let out = evaluate(&w, &equal_alloc(&w), &Stacking::default(), &delay, &quality);
+        for s in &out.services {
+            if s.met {
+                assert!(s.e2e_delay <= s.deadline + 1e-9, "{s:?}");
+                assert!(s.steps > 0);
+            }
+        }
+        // Paper scenario at K=20 is comfortably feasible: no outages.
+        assert_eq!(out.outages(), 0, "{:?}", out.services);
+    }
+
+    #[test]
+    fn quality_matches_steps() {
+        let (w, delay, quality) = setup();
+        let out = evaluate(&w, &equal_alloc(&w), &GreedyBatching, &delay, &quality);
+        for s in &out.services {
+            assert!((s.quality - quality.quality(s.steps)).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn mean_quality_consistent_with_schedule() {
+        let (w, delay, quality) = setup();
+        let out = evaluate(&w, &equal_alloc(&w), &Stacking::default(), &delay, &quality);
+        assert!((out.mean_quality() - out.schedule.mean_quality(&quality)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn starving_bandwidth_causes_outage() {
+        let (w, delay, quality) = setup();
+        // Give device 0 almost nothing: its tx delay exceeds its deadline.
+        let mut alloc = equal_alloc(&w);
+        alloc[0] = 1e-6;
+        let out = evaluate(&w, &alloc, &Stacking::default(), &delay, &quality);
+        assert!(!out.services[0].met);
+        assert_eq!(out.services[0].steps, 0);
+        assert_eq!(out.services[0].quality, quality.outage());
+    }
+}

@@ -1,0 +1,149 @@
+//! Workload generation: the device populations behind every figure.
+//!
+//! A [`Workload`] is K devices, each with a deadline τ_k and a downlink
+//! [`Link`]; generators are seeded so every experiment replays exactly.
+
+use crate::channel::{ChannelGenerator, Link};
+use crate::config::ScenarioConfig;
+use crate::util::Pcg64;
+
+/// One device's service request.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DeviceRequest {
+    pub id: usize,
+    /// End-to-end deadline τ_k in seconds.
+    pub deadline: f64,
+    pub link: Link,
+}
+
+/// A complete scenario instance.
+#[derive(Debug, Clone)]
+pub struct Workload {
+    pub devices: Vec<DeviceRequest>,
+    /// Total downlink bandwidth B in Hz.
+    pub total_bandwidth_hz: f64,
+    /// Content size S in bits.
+    pub content_bits: f64,
+}
+
+impl Workload {
+    pub fn k(&self) -> usize {
+        self.devices.len()
+    }
+
+    pub fn links(&self) -> Vec<Link> {
+        self.devices.iter().map(|d| d.link).collect()
+    }
+
+    pub fn deadlines(&self) -> Vec<f64> {
+        self.devices.iter().map(|d| d.deadline).collect()
+    }
+}
+
+/// Draw a workload from a scenario config (deadlines ~ U[lo, hi],
+/// η ~ U[eta_lo, eta_hi] — the paper's Section IV distributions).
+pub fn generate(scenario: &ScenarioConfig, seed: u64) -> Workload {
+    let mut rng = Pcg64::new(seed, 0x7ace);
+    let mut channels = ChannelGenerator::new(
+        crate::channel::FadingModel::UniformEfficiency {
+            lo: scenario.eta_lo,
+            hi: scenario.eta_hi,
+        },
+        rng.next_u64(),
+    );
+    let devices = (0..scenario.num_services)
+        .map(|id| DeviceRequest {
+            id,
+            deadline: rng.uniform_in(scenario.deadline_lo, scenario.deadline_hi),
+            link: channels.draw(),
+        })
+        .collect();
+    Workload {
+        devices,
+        total_bandwidth_hz: scenario.total_bandwidth_hz,
+        content_bits: scenario.content_bits,
+    }
+}
+
+/// Variations used by the figure sweeps.
+pub mod sweeps {
+    use super::*;
+
+    /// Fig. 2b: vary the number of services, all else per `base`.
+    pub fn with_num_services(base: &ScenarioConfig, k: usize) -> ScenarioConfig {
+        let mut s = base.clone();
+        s.num_services = k;
+        s
+    }
+
+    /// Fig. 2c: vary the minimum delay requirement, max fixed at
+    /// `base.deadline_hi`.
+    pub fn with_min_deadline(base: &ScenarioConfig, lo: f64) -> ScenarioConfig {
+        let mut s = base.clone();
+        s.deadline_lo = lo;
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ExperimentConfig;
+
+    fn scenario() -> ScenarioConfig {
+        ExperimentConfig::paper().scenario
+    }
+
+    #[test]
+    fn respects_distributions() {
+        let w = generate(&scenario(), 1);
+        assert_eq!(w.k(), 20);
+        for d in &w.devices {
+            assert!((7.0..20.0).contains(&d.deadline));
+            assert!((5.0..10.0).contains(&d.link.spectral_efficiency));
+        }
+        assert_eq!(w.total_bandwidth_hz, 40_000.0);
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = generate(&scenario(), 42);
+        let b = generate(&scenario(), 42);
+        assert_eq!(a.devices, b.devices);
+        let c = generate(&scenario(), 43);
+        assert_ne!(a.devices, c.devices);
+    }
+
+    #[test]
+    fn ids_are_dense() {
+        let w = generate(&scenario(), 5);
+        for (i, d) in w.devices.iter().enumerate() {
+            assert_eq!(d.id, i);
+        }
+    }
+
+    #[test]
+    fn sweeps_change_one_axis() {
+        let base = scenario();
+        let k = sweeps::with_num_services(&base, 35);
+        assert_eq!(k.num_services, 35);
+        assert_eq!(k.deadline_lo, base.deadline_lo);
+        let d = sweeps::with_min_deadline(&base, 3.0);
+        assert_eq!(d.deadline_lo, 3.0);
+        assert_eq!(d.num_services, base.num_services);
+    }
+
+    #[test]
+    fn deadline_spread_covers_range() {
+        let mut lo_seen = f64::INFINITY;
+        let mut hi_seen = f64::NEG_INFINITY;
+        for seed in 0..50 {
+            for d in generate(&scenario(), seed).devices {
+                lo_seen = lo_seen.min(d.deadline);
+                hi_seen = hi_seen.max(d.deadline);
+            }
+        }
+        assert!(lo_seen < 8.0, "lo={lo_seen}");
+        assert!(hi_seen > 19.0, "hi={hi_seen}");
+    }
+}

@@ -1,0 +1,215 @@
+//! Least-squares fitting — the two model fits in the paper's Fig. 1.
+//!
+//! * [`fit_linear`]: `y = a·x + b`, the batch-delay model of Eq. (4)
+//!   (Fig. 1a: a = 0.0240, b = 0.3543 on the authors' RTX 3050).
+//! * [`fit_power_law`]: `y = c·x^(−d) + e`, the quality-vs-steps model
+//!   (Fig. 1b). Linear in (c, e) for fixed d, so d is grid-searched —
+//!   the same procedure `python/compile/calibrate.py` uses, kept in both
+//!   languages so either side can re-fit measured curves.
+
+/// Result of a linear fit `y = a·x + b`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LinearFit {
+    pub a: f64,
+    pub b: f64,
+    /// Coefficient of determination on the training points.
+    pub r2: f64,
+}
+
+/// Result of a power-law fit `y = c·x^(−d) + e`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PowerLawFit {
+    pub c: f64,
+    pub d: f64,
+    pub e: f64,
+    pub r2: f64,
+}
+
+fn r_squared(ys: &[f64], preds: &[f64]) -> f64 {
+    let n = ys.len() as f64;
+    let mean = ys.iter().sum::<f64>() / n;
+    let ss_tot: f64 = ys.iter().map(|y| (y - mean) * (y - mean)).sum();
+    let ss_res: f64 = ys.iter().zip(preds).map(|(y, p)| (y - p) * (y - p)).sum();
+    if ss_tot <= 0.0 {
+        if ss_res <= 1e-24 {
+            1.0
+        } else {
+            0.0
+        }
+    } else {
+        1.0 - ss_res / ss_tot
+    }
+}
+
+/// Ordinary least squares for `y = a·x + b`.
+///
+/// # Panics
+/// Panics if fewer than two points or all x identical.
+pub fn fit_linear(xs: &[f64], ys: &[f64]) -> LinearFit {
+    assert_eq!(xs.len(), ys.len());
+    assert!(xs.len() >= 2, "linear fit needs >= 2 points");
+    let n = xs.len() as f64;
+    let sx: f64 = xs.iter().sum();
+    let sy: f64 = ys.iter().sum();
+    let sxx: f64 = xs.iter().map(|x| x * x).sum();
+    let sxy: f64 = xs.iter().zip(ys).map(|(x, y)| x * y).sum();
+    let denom = n * sxx - sx * sx;
+    assert!(denom.abs() > 1e-12, "degenerate x values");
+    let a = (n * sxy - sx * sy) / denom;
+    let b = (sy - a * sx) / n;
+    let preds: Vec<f64> = xs.iter().map(|x| a * x + b).collect();
+    LinearFit { a, b, r2: r_squared(ys, &preds) }
+}
+
+/// Solve the 2×2 normal equations for `y ≈ c·basis + e`.
+fn solve_c_e(basis: &[f64], ys: &[f64]) -> Option<(f64, f64)> {
+    let n = basis.len() as f64;
+    let sb: f64 = basis.iter().sum();
+    let sbb: f64 = basis.iter().map(|b| b * b).sum();
+    let sy: f64 = ys.iter().sum();
+    let sby: f64 = basis.iter().zip(ys).map(|(b, y)| b * y).sum();
+    let det = n * sbb - sb * sb;
+    if det.abs() < 1e-12 {
+        return None;
+    }
+    let c = (n * sby - sb * sy) / det;
+    let e = (sy - c * sb) / n;
+    Some((c, e))
+}
+
+/// Fit `y = c·x^(−d) + e` by grid-searching d and solving (c, e) exactly.
+///
+/// `xs` must be strictly positive.
+pub fn fit_power_law(xs: &[f64], ys: &[f64]) -> PowerLawFit {
+    assert_eq!(xs.len(), ys.len());
+    assert!(xs.len() >= 3, "power-law fit needs >= 3 points");
+    assert!(xs.iter().all(|&x| x > 0.0), "power-law fit needs x > 0");
+
+    let mut best = PowerLawFit { c: 0.0, d: 1.0, e: 0.0, r2: f64::NEG_INFINITY };
+    let mut best_sse = f64::INFINITY;
+    let mut basis = vec![0.0; xs.len()];
+    // Same grid as the python fitter: d ∈ [0.05, 4.0] step 0.01.
+    let mut d = 0.05;
+    while d <= 4.0 + 1e-9 {
+        for (slot, &x) in basis.iter_mut().zip(xs) {
+            *slot = x.powf(-d);
+        }
+        if let Some((c, e)) = solve_c_e(&basis, ys) {
+            let sse: f64 = basis
+                .iter()
+                .zip(ys)
+                .map(|(b, y)| {
+                    let r = c * b + e - y;
+                    r * r
+                })
+                .sum();
+            if sse < best_sse {
+                best_sse = sse;
+                let preds: Vec<f64> = basis.iter().map(|b| c * b + e).collect();
+                best = PowerLawFit { c, d, e, r2: r_squared(ys, &preds) };
+            }
+        }
+        d += 0.01;
+    }
+    best
+}
+
+impl PowerLawFit {
+    /// Evaluate the fitted curve at `x` (> 0).
+    pub fn eval(&self, x: f64) -> f64 {
+        self.c * x.powf(-self.d) + self.e
+    }
+}
+
+impl LinearFit {
+    /// Evaluate the fitted line at `x`.
+    pub fn eval(&self, x: f64) -> f64 {
+        self.a * x + self.b
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::approx_eq;
+
+    #[test]
+    fn linear_exact_recovery() {
+        let xs: Vec<f64> = (1..=32).map(|x| x as f64).collect();
+        let ys: Vec<f64> = xs.iter().map(|x| 0.0240 * x + 0.3543).collect();
+        let fit = fit_linear(&xs, &ys);
+        assert!(approx_eq(fit.a, 0.0240, 1e-9));
+        assert!(approx_eq(fit.b, 0.3543, 1e-9));
+        assert!(fit.r2 > 0.999_999);
+    }
+
+    #[test]
+    fn linear_noisy_r2_reasonable() {
+        let mut rng = crate::util::Pcg64::seeded(1);
+        let xs: Vec<f64> = (1..=64).map(|x| x as f64).collect();
+        let ys: Vec<f64> = xs.iter().map(|x| 2.0 * x + 1.0 + 0.1 * rng.normal()).collect();
+        let fit = fit_linear(&xs, &ys);
+        assert!(approx_eq(fit.a, 2.0, 1e-2));
+        assert!(approx_eq(fit.b, 1.0, 0.1));
+        assert!(fit.r2 > 0.999);
+    }
+
+    #[test]
+    #[should_panic]
+    fn linear_rejects_single_point() {
+        fit_linear(&[1.0], &[2.0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn linear_rejects_degenerate_x() {
+        fit_linear(&[3.0, 3.0, 3.0], &[1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn power_law_exact_recovery() {
+        // The paper-like curve: FID(T) = 300·T^-1.2 + 20.
+        let xs: Vec<f64> = [1, 2, 3, 4, 6, 8, 12, 16, 24, 32, 48]
+            .iter()
+            .map(|&x| x as f64)
+            .collect();
+        let ys: Vec<f64> = xs.iter().map(|x| 300.0 * x.powf(-1.2) + 20.0).collect();
+        let fit = fit_power_law(&xs, &ys);
+        assert!(approx_eq(fit.c, 300.0, 0.03), "{fit:?}");
+        assert!(approx_eq(fit.d, 1.2, 0.02), "{fit:?}");
+        assert!(approx_eq(fit.e, 20.0, 0.05), "{fit:?}");
+        assert!(fit.r2 > 0.9999);
+    }
+
+    #[test]
+    fn power_law_matches_python_fit() {
+        // Cross-check against python/compile/calibrate.py on the measured
+        // curve (values from artifacts/quality.json of the reference run).
+        let ts: [f64; 15] =
+            [1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 8.0, 10.0, 12.0, 16.0, 20.0, 24.0, 32.0, 40.0, 50.0];
+        let c0 = 100.054;
+        let d0 = 1.03;
+        let e0 = 6.16;
+        let qs: Vec<f64> = ts.iter().map(|t| c0 * t.powf(-d0) + e0).collect();
+        let fit = fit_power_law(&ts, &qs);
+        assert!(approx_eq(fit.c, c0, 0.02), "{fit:?}");
+        assert!(approx_eq(fit.d, d0, 0.02), "{fit:?}");
+        assert!(approx_eq(fit.e, e0, 0.05), "{fit:?}");
+    }
+
+    #[test]
+    fn power_law_flat_curve_has_zero_c() {
+        let xs = [1.0, 2.0, 4.0, 8.0, 16.0];
+        let fit = fit_power_law(&xs, &[5.0; 5]);
+        assert!(fit.c.abs() < 1e-9, "{fit:?}");
+        assert!(approx_eq(fit.e, 5.0, 1e-9));
+    }
+
+    #[test]
+    fn eval_roundtrip() {
+        let f = PowerLawFit { c: 10.0, d: 0.5, e: 1.0, r2: 1.0 };
+        assert!(approx_eq(f.eval(4.0), 10.0 / 2.0 + 1.0, 1e-12));
+        let l = LinearFit { a: 2.0, b: 3.0, r2: 1.0 };
+        assert!(approx_eq(l.eval(5.0), 13.0, 1e-12));
+    }
+}

@@ -1,0 +1,388 @@
+//! Dense symmetric linear algebra for the Rust-side quality metric.
+//!
+//! The end-to-end example computes the Fréchet distance between the
+//! moments of *actually served* generations and the target distribution
+//! (the same metric `python/compile/calibrate.py` uses). That needs
+//! `tr sqrt(Σ₁Σ₂)`, computed here via a cyclic Jacobi eigensolver — no
+//! LAPACK in the vendored crate set.
+
+/// A dense, row-major, square symmetric matrix.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SymMat {
+    pub n: usize,
+    pub data: Vec<f64>, // n * n, row-major
+}
+
+impl SymMat {
+    pub fn zeros(n: usize) -> Self {
+        Self { n, data: vec![0.0; n * n] }
+    }
+
+    pub fn identity(n: usize) -> Self {
+        let mut m = Self::zeros(n);
+        for i in 0..n {
+            m.data[i * n + i] = 1.0;
+        }
+        m
+    }
+
+    pub fn from_rows(rows: &[Vec<f64>]) -> Self {
+        let n = rows.len();
+        let mut data = Vec::with_capacity(n * n);
+        for r in rows {
+            assert_eq!(r.len(), n, "not square");
+            data.extend_from_slice(r);
+        }
+        Self { n, data }
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        self.data[i * self.n + j]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f64) {
+        self.data[i * self.n + j] = v;
+    }
+
+    /// Matrix product (general, O(n³)).
+    pub fn matmul(&self, other: &SymMat) -> SymMat {
+        assert_eq!(self.n, other.n);
+        let n = self.n;
+        let mut out = SymMat::zeros(n);
+        for i in 0..n {
+            for k in 0..n {
+                let aik = self.get(i, k);
+                if aik == 0.0 {
+                    continue;
+                }
+                for j in 0..n {
+                    out.data[i * n + j] += aik * other.get(k, j);
+                }
+            }
+        }
+        out
+    }
+
+    pub fn trace(&self) -> f64 {
+        (0..self.n).map(|i| self.get(i, i)).sum()
+    }
+
+    pub fn transpose(&self) -> SymMat {
+        let n = self.n;
+        let mut out = SymMat::zeros(n);
+        for i in 0..n {
+            for j in 0..n {
+                out.set(j, i, self.get(i, j));
+            }
+        }
+        out
+    }
+
+    /// Maximum absolute asymmetry |A - Aᵀ|∞ — sanity checks.
+    pub fn asymmetry(&self) -> f64 {
+        let mut worst: f64 = 0.0;
+        for i in 0..self.n {
+            for j in (i + 1)..self.n {
+                worst = worst.max((self.get(i, j) - self.get(j, i)).abs());
+            }
+        }
+        worst
+    }
+}
+
+/// Eigendecomposition of a symmetric matrix by the cyclic Jacobi method.
+/// Returns (eigenvalues, eigenvectors-as-columns). O(n³) per sweep,
+/// converges quadratically; fine for the d=64 moment matrices used here.
+pub fn jacobi_eigh(a: &SymMat, max_sweeps: usize) -> (Vec<f64>, SymMat) {
+    let n = a.n;
+    let mut m = a.clone();
+    let mut v = SymMat::identity(n);
+
+    for _ in 0..max_sweeps {
+        let mut off: f64 = 0.0;
+        for i in 0..n {
+            for j in (i + 1)..n {
+                off += m.get(i, j) * m.get(i, j);
+            }
+        }
+        if off.sqrt() < 1e-12 {
+            break;
+        }
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let apq = m.get(p, q);
+                if apq.abs() < 1e-300 {
+                    continue;
+                }
+                let app = m.get(p, p);
+                let aqq = m.get(q, q);
+                let theta = (aqq - app) / (2.0 * apq);
+                let t = if theta >= 0.0 {
+                    1.0 / (theta + (1.0 + theta * theta).sqrt())
+                } else {
+                    1.0 / (theta - (1.0 + theta * theta).sqrt())
+                };
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = t * c;
+
+                // Rotate rows/cols p and q of m.
+                for k in 0..n {
+                    let mkp = m.get(k, p);
+                    let mkq = m.get(k, q);
+                    m.set(k, p, c * mkp - s * mkq);
+                    m.set(k, q, s * mkp + c * mkq);
+                }
+                for k in 0..n {
+                    let mpk = m.get(p, k);
+                    let mqk = m.get(q, k);
+                    m.set(p, k, c * mpk - s * mqk);
+                    m.set(q, k, s * mpk + c * mqk);
+                }
+                // Accumulate eigenvectors.
+                for k in 0..n {
+                    let vkp = v.get(k, p);
+                    let vkq = v.get(k, q);
+                    v.set(k, p, c * vkp - s * vkq);
+                    v.set(k, q, s * vkp + c * vkq);
+                }
+            }
+        }
+    }
+    let eigvals: Vec<f64> = (0..n).map(|i| m.get(i, i)).collect();
+    (eigvals, v)
+}
+
+/// Symmetric PSD matrix square root via eigendecomposition
+/// (negative eigenvalues — numerical noise — are clamped to zero).
+pub fn sym_sqrt(a: &SymMat) -> SymMat {
+    let n = a.n;
+    let (vals, vecs) = jacobi_eigh(a, 30);
+    // sqrt = V diag(sqrt(λ)) Vᵀ
+    let mut out = SymMat::zeros(n);
+    for k in 0..n {
+        let s = vals[k].max(0.0).sqrt();
+        if s == 0.0 {
+            continue;
+        }
+        for i in 0..n {
+            let vik = vecs.get(i, k) * s;
+            if vik == 0.0 {
+                continue;
+            }
+            for j in 0..n {
+                out.data[i * n + j] += vik * vecs.get(j, k);
+            }
+        }
+    }
+    out
+}
+
+/// Fréchet distance between two Gaussians (μ₁,Σ₁), (μ₂,Σ₂):
+/// `FD² = ‖μ₁−μ₂‖² + tr(Σ₁+Σ₂−2·(Σ₁Σ₂)^{1/2})`.
+/// Uses the symmetric factorization `tr sqrt(Σ₁Σ₂) = tr sqrt(S Σ₂ S)`
+/// with `S = Σ₁^{1/2}`, so the Jacobi solver only ever sees symmetric
+/// matrices.
+pub fn frechet_distance(mu1: &[f64], cov1: &SymMat, mu2: &[f64], cov2: &SymMat) -> f64 {
+    assert_eq!(mu1.len(), mu2.len());
+    assert_eq!(cov1.n, mu1.len());
+    assert_eq!(cov2.n, mu2.len());
+    let diff2: f64 = mu1.iter().zip(mu2).map(|(a, b)| (a - b) * (a - b)).sum();
+    let s = sym_sqrt(cov1);
+    let inner = s.matmul(cov2).matmul(&s);
+    let (vals, _) = jacobi_eigh(&inner, 30);
+    let tr_sqrt: f64 = vals.iter().map(|&l| l.max(0.0).sqrt()).sum();
+    let fd2 = diff2 + cov1.trace() + cov2.trace() - 2.0 * tr_sqrt;
+    fd2.max(0.0).sqrt()
+}
+
+/// Sample mean and covariance (unbiased) of row-major samples.
+pub fn sample_moments(samples: &[f64], dim: usize) -> (Vec<f64>, SymMat) {
+    assert!(dim > 0 && samples.len() % dim == 0);
+    let n = samples.len() / dim;
+    assert!(n > 0);
+    let mut mu = vec![0.0; dim];
+    for row in samples.chunks_exact(dim) {
+        for (m, x) in mu.iter_mut().zip(row) {
+            *m += x;
+        }
+    }
+    for m in &mut mu {
+        *m /= n as f64;
+    }
+    let mut cov = SymMat::zeros(dim);
+    let denom = if n > 1 { (n - 1) as f64 } else { 1.0 };
+    for row in samples.chunks_exact(dim) {
+        for i in 0..dim {
+            let di = row[i] - mu[i];
+            for j in i..dim {
+                let dj = row[j] - mu[j];
+                cov.data[i * dim + j] += di * dj / denom;
+            }
+        }
+    }
+    for i in 0..dim {
+        for j in 0..i {
+            cov.data[i * dim + j] = cov.data[j * dim + i];
+        }
+    }
+    (mu, cov)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::approx_eq;
+
+    fn diag(vals: &[f64]) -> SymMat {
+        let mut m = SymMat::zeros(vals.len());
+        for (i, &v) in vals.iter().enumerate() {
+            m.set(i, i, v);
+        }
+        m
+    }
+
+    #[test]
+    fn jacobi_diagonal_passthrough() {
+        let m = diag(&[3.0, 1.0, 2.0]);
+        let (mut vals, _) = jacobi_eigh(&m, 20);
+        vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert!(approx_eq(vals[0], 1.0, 1e-10));
+        assert!(approx_eq(vals[1], 2.0, 1e-10));
+        assert!(approx_eq(vals[2], 3.0, 1e-10));
+    }
+
+    #[test]
+    fn jacobi_known_2x2() {
+        // [[2,1],[1,2]] -> eigenvalues 1, 3
+        let m = SymMat::from_rows(&[vec![2.0, 1.0], vec![1.0, 2.0]]);
+        let (mut vals, vecs) = jacobi_eigh(&m, 20);
+        vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert!(approx_eq(vals[0], 1.0, 1e-10));
+        assert!(approx_eq(vals[1], 3.0, 1e-10));
+        // eigenvectors orthonormal
+        let vtv = vecs.transpose().matmul(&vecs);
+        assert!(approx_eq(vtv.get(0, 0), 1.0, 1e-10));
+        assert!(approx_eq(vtv.get(0, 1), 0.0, 1e-10));
+    }
+
+    #[test]
+    fn jacobi_reconstructs_random_symmetric() {
+        let mut rng = crate::util::Pcg64::seeded(11);
+        let n = 12;
+        let mut a = SymMat::zeros(n);
+        for i in 0..n {
+            for j in i..n {
+                let v = rng.normal();
+                a.set(i, j, v);
+                a.set(j, i, v);
+            }
+        }
+        let (vals, vecs) = jacobi_eigh(&a, 30);
+        // A ≈ V diag(vals) Vᵀ
+        let mut recon = SymMat::zeros(n);
+        for k in 0..n {
+            for i in 0..n {
+                for j in 0..n {
+                    recon.data[i * n + j] += vals[k] * vecs.get(i, k) * vecs.get(j, k);
+                }
+            }
+        }
+        for i in 0..n * n {
+            assert!(approx_eq(recon.data[i], a.data[i], 1e-8), "entry {i}");
+        }
+    }
+
+    #[test]
+    fn sqrt_squares_back() {
+        let mut rng = crate::util::Pcg64::seeded(12);
+        let n = 8;
+        // PSD: B Bᵀ + I
+        let mut b = SymMat::zeros(n);
+        for i in 0..n * n {
+            b.data[i] = rng.normal();
+        }
+        let mut a = b.matmul(&b.transpose());
+        for i in 0..n {
+            a.data[i * n + i] += 1.0;
+        }
+        let s = sym_sqrt(&a);
+        let s2 = s.matmul(&s);
+        for i in 0..n * n {
+            assert!(approx_eq(s2.data[i], a.data[i], 1e-7), "entry {i}");
+        }
+    }
+
+    #[test]
+    fn frechet_identity_zero() {
+        let mu = vec![1.0, -2.0, 0.5];
+        let cov = diag(&[2.0, 1.0, 0.5]);
+        assert!(frechet_distance(&mu, &cov, &mu, &cov) < 1e-7);
+    }
+
+    #[test]
+    fn frechet_mean_shift_only() {
+        let cov = SymMat::identity(4);
+        let a = vec![0.0; 4];
+        let b = vec![3.0, 0.0, 0.0, 0.0];
+        assert!(approx_eq(frechet_distance(&a, &cov, &b, &cov), 3.0, 1e-9));
+    }
+
+    #[test]
+    fn frechet_isotropic_closed_form() {
+        // FD between N(0, s²I) and N(0, t²I) in dim d is √d·|s−t|.
+        let d = 6;
+        let (s, t) = (2.0, 0.5);
+        let mut c1 = SymMat::identity(d);
+        let mut c2 = SymMat::identity(d);
+        for i in 0..d {
+            c1.data[i * d + i] = s * s;
+            c2.data[i * d + i] = t * t;
+        }
+        let z = vec![0.0; d];
+        let fd = frechet_distance(&z, &c1, &z, &c2);
+        assert!(approx_eq(fd, (d as f64).sqrt() * (s - t), 1e-9), "fd={fd}");
+    }
+
+    #[test]
+    fn frechet_matches_python_on_crosscheck() {
+        // Cross-language pin: computed by python/compile/calibrate.py's
+        // frechet_distance for the same inputs.
+        let mu1 = vec![0.0, 0.0];
+        let mu2 = vec![1.0, 1.0];
+        let c1 = SymMat::from_rows(&[vec![1.0, 0.3], vec![0.3, 2.0]]);
+        let c2 = SymMat::from_rows(&[vec![0.5, -0.1], vec![-0.1, 1.5]]);
+        let fd = frechet_distance(&mu1, &c1, &mu2, &c2);
+        // value computed with python/compile/calibrate.py frechet_distance
+        assert!(approx_eq(fd, 1.475_129_079_168, 1e-6), "fd={fd}");
+    }
+
+    #[test]
+    fn moments_of_constant_rows() {
+        let dim = 3;
+        let samples = [1.0, 2.0, 3.0, 1.0, 2.0, 3.0];
+        let (mu, cov) = sample_moments(&samples, dim);
+        assert_eq!(mu, vec![1.0, 2.0, 3.0]);
+        assert!(cov.data.iter().all(|&v| v.abs() < 1e-12));
+    }
+
+    #[test]
+    fn moments_match_known_distribution() {
+        let mut rng = crate::util::Pcg64::seeded(13);
+        let dim = 4;
+        let n = 40_000;
+        let mut samples = Vec::with_capacity(n * dim);
+        for _ in 0..n {
+            for j in 0..dim {
+                samples.push(3.0 + (j as f64 + 1.0) * rng.normal());
+            }
+        }
+        let (mu, cov) = sample_moments(&samples, dim);
+        for j in 0..dim {
+            assert!(approx_eq(mu[j], 3.0, 0.06), "mu[{j}]={}", mu[j]);
+            let var = (j as f64 + 1.0) * (j as f64 + 1.0);
+            assert!((cov.get(j, j) - var).abs() < 0.25 * var, "cov[{j}][{j}]");
+        }
+    }
+}

@@ -1,0 +1,38 @@
+//! Foundation utilities shared across the stack.
+//!
+//! The offline vendored crate set has no `rand`, `serde`, `proptest` or
+//! `nalgebra`, so this module provides the small, well-tested pieces the
+//! rest of the system needs: a PCG PRNG, descriptive statistics,
+//! least-squares fitting (linear and power-law — the two fits in the
+//! paper's Fig. 1), a minimal JSON parser for the artifact manifests, a
+//! symmetric eigensolver for Fréchet-distance checks, and a tiny
+//! property-testing harness.
+
+pub mod fit;
+pub mod json;
+pub mod linalg;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+
+pub use fit::{fit_linear, fit_power_law, LinearFit, PowerLawFit};
+pub use rng::Pcg64;
+
+/// Relative/absolute float comparison used across tests.
+pub fn approx_eq(a: f64, b: f64, tol: f64) -> bool {
+    let diff = (a - b).abs();
+    diff <= tol || diff <= tol * a.abs().max(b.abs())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn approx_eq_absolute_and_relative() {
+        assert!(approx_eq(1.0, 1.0 + 1e-12, 1e-9));
+        assert!(approx_eq(1e12, 1e12 * (1.0 + 1e-10), 1e-9));
+        assert!(!approx_eq(1.0, 1.1, 1e-3));
+        assert!(approx_eq(0.0, 0.0, 1e-12));
+    }
+}

@@ -1,0 +1,133 @@
+//! Failure injection: corrupted artifacts, malformed manifests, bad
+//! protocol input, and infeasible configurations must fail *loudly and
+//! precisely*, never silently (the NaN-elision incident in §Perf is the
+//! motivating war story).
+
+use std::io::Write;
+
+use aigc_edge::config::ExperimentConfig;
+use aigc_edge::runtime::{ArtifactStore, Manifest};
+
+fn tmpdir(name: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("aigc-edge-test-{name}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+#[test]
+fn missing_manifest_is_actionable() {
+    let dir = tmpdir("missing");
+    let Err(err) = ArtifactStore::load(&dir) else { panic!("load should fail") };
+    let msg = format!("{err:#}");
+    assert!(msg.contains("make artifacts"), "error must tell the user what to run: {msg}");
+}
+
+#[test]
+fn manifest_referencing_missing_hlo_fails() {
+    let dir = tmpdir("nohlo");
+    std::fs::write(
+        dir.join("manifest.json"),
+        r#"{"data_dim": 64, "num_train_steps": 1000, "buckets": [1],
+            "hlo": {"1": {"file": "denoise_b1.hlo.txt"}}}"#,
+    )
+    .unwrap();
+    let Err(err) = ArtifactStore::load(&dir) else { panic!("load should fail") };
+    assert!(format!("{err:#}").contains("denoise_b1.hlo.txt"), "{err:#}");
+}
+
+#[test]
+fn corrupt_hlo_text_fails_at_parse() {
+    let dir = tmpdir("corrupt");
+    std::fs::write(
+        dir.join("manifest.json"),
+        r#"{"data_dim": 64, "num_train_steps": 1000, "buckets": [1],
+            "hlo": {"1": {"file": "denoise_b1.hlo.txt"}}}"#,
+    )
+    .unwrap();
+    let mut f = std::fs::File::create(dir.join("denoise_b1.hlo.txt")).unwrap();
+    writeln!(f, "HloModule garbage\nthis is not hlo").unwrap();
+    let Err(err) = ArtifactStore::load(&dir) else { panic!("load should fail") };
+    let msg = format!("{err:#}");
+    assert!(msg.contains("parsing HLO text") || msg.contains("Syntax"), "{msg}");
+}
+
+#[test]
+fn truncated_real_artifact_detected() {
+    // Take the real manifest but truncate one HLO file in a copy.
+    let real = aigc_edge::config::default_artifacts_dir();
+    if !real.join("manifest.json").exists() {
+        return;
+    }
+    let dir = tmpdir("truncated");
+    std::fs::copy(real.join("manifest.json"), dir.join("manifest.json")).unwrap();
+    let manifest = Manifest::load(&real.join("manifest.json")).unwrap();
+    for (bucket, file) in &manifest.hlo_files {
+        let content = std::fs::read_to_string(real.join(file)).unwrap();
+        if *bucket == 1 {
+            // chop mid-instruction
+            std::fs::write(dir.join(file), &content[..content.len() / 2]).unwrap();
+        } else {
+            std::fs::write(dir.join(file), &content).unwrap();
+        }
+    }
+    let Err(err) = ArtifactStore::load(&dir) else { panic!("load should fail") };
+    assert!(format!("{err:#}").contains("parsing HLO text"), "{err:#}");
+}
+
+#[test]
+fn config_rejects_semantic_nonsense() {
+    for bad in [
+        "[scenario]\nnum_services = 0",
+        "[scenario]\ndeadline_lo = -1.0",
+        "[scenario]\ndeadline_lo = 10.0\ndeadline_hi = 5.0",
+        "[scenario]\ntotal_bandwidth_hz = 0",
+        "[scenario]\ncontent_bits = -5.0",
+        "[delay]\na = -0.1",
+        "[stacking]\nmax_steps = 0",
+        "typo_key = 1",
+        "[quality]\nmodel = \"nonexistent\"",
+    ] {
+        assert!(ExperimentConfig::from_toml_text(bad).is_err(), "accepted: {bad}");
+    }
+}
+
+#[test]
+fn zero_bandwidth_service_is_outage_not_panic() {
+    use aigc_edge::delay::BatchDelayModel;
+    use aigc_edge::quality::PowerLawQuality;
+    use aigc_edge::scheduler::Stacking;
+    use aigc_edge::sim::evaluate;
+    use aigc_edge::trace::generate;
+    let cfg = ExperimentConfig::paper();
+    let w = generate(&cfg.scenario, 1);
+    let mut alloc = vec![w.total_bandwidth_hz / w.k() as f64; w.k()];
+    alloc[3] = 0.0; // infinite tx delay
+    let out = evaluate(&w, &alloc, &Stacking::default(), &BatchDelayModel::paper(), &PowerLawQuality::paper());
+    assert_eq!(out.services[3].steps, 0);
+    assert!(!out.services[3].met);
+    assert!(out.services.iter().filter(|s| s.id != 3).all(|s| s.met));
+}
+
+#[test]
+fn nan_and_extreme_budgets_never_panic_schedulers() {
+    use aigc_edge::delay::BatchDelayModel;
+    use aigc_edge::quality::PowerLawQuality;
+    use aigc_edge::scheduler::{all_schedulers, Service};
+    let delay = BatchDelayModel::paper();
+    let quality = PowerLawQuality::paper();
+    let services: Vec<Service> = vec![
+        Service::new(0, f64::NEG_INFINITY),
+        Service::new(1, -1e18),
+        Service::new(2, 0.0),
+        Service::new(3, 1e-12),
+        Service::new(4, 1e6), // huge but finite budget (caps at max_steps)
+    ];
+    for sched in all_schedulers() {
+        let s = sched.schedule(&services, &delay, &quality);
+        assert_eq!(s.steps.len(), services.len(), "{}", sched.name());
+        assert_eq!(s.steps[0], 0);
+        assert_eq!(s.steps[1], 0);
+        assert_eq!(s.steps[2], 0);
+    }
+}

@@ -1,0 +1,123 @@
+//! Integration: the full offline pipeline (workload → PSO bandwidth →
+//! STACKING schedule → outcome) reproduces the paper's qualitative
+//! claims on the Section-IV scenario.
+
+use aigc_edge::bandwidth::{EqualAllocator, PsoAllocator, PsoConfig};
+use aigc_edge::config::ExperimentConfig;
+use aigc_edge::delay::BatchDelayModel;
+use aigc_edge::quality::{PowerLawQuality, QualityModel};
+use aigc_edge::scheduler::{
+    validate_schedule, FixedSizeBatching, GreedyBatching, SingleInstance, Stacking,
+};
+use aigc_edge::sim::{gen_budgets, solve_joint};
+use aigc_edge::trace::{generate, sweeps};
+
+fn fast_pso() -> PsoAllocator {
+    PsoAllocator::new(PsoConfig { particles: 8, iterations: 12, patience: 6, ..Default::default() })
+}
+
+#[test]
+fn paper_scenario_feasible_and_valid() {
+    let cfg = ExperimentConfig::paper();
+    let delay = BatchDelayModel::paper();
+    let quality = PowerLawQuality::paper();
+    for seed in 0..5 {
+        let w = generate(&cfg.scenario, seed);
+        let sol = solve_joint(&w, &Stacking::default(), &fast_pso(), &delay, &quality);
+        assert_eq!(sol.outcome.outages(), 0, "seed {seed}");
+        let services = gen_budgets(&w, &sol.outcome.allocation_hz);
+        validate_schedule(&sol.outcome.schedule, &services, &delay).unwrap();
+        // every service ends within its deadline
+        for s in &sol.outcome.services {
+            assert!(s.met, "seed {seed}: {s:?}");
+        }
+    }
+}
+
+#[test]
+fn proposed_beats_all_baselines_on_mean_quality() {
+    // The paper's headline comparison at K = 20 (Fig. 2b's x = 20 point).
+    let cfg = ExperimentConfig::paper();
+    let delay = BatchDelayModel::paper();
+    let quality = PowerLawQuality::paper();
+    let mut wins = 0;
+    let trials = 3;
+    for seed in 0..trials {
+        let w = generate(&cfg.scenario, 100 + seed);
+        let proposed =
+            solve_joint(&w, &Stacking::default(), &fast_pso(), &delay, &quality).outcome.mean_quality();
+        let single = solve_joint(&w, &SingleInstance::default(), &fast_pso(), &delay, &quality)
+            .outcome
+            .mean_quality();
+        let greedy =
+            solve_joint(&w, &GreedyBatching, &fast_pso(), &delay, &quality).outcome.mean_quality();
+        let fixed = solve_joint(&w, &FixedSizeBatching::default(), &fast_pso(), &delay, &quality)
+            .outcome
+            .mean_quality();
+        assert!(proposed <= single + 1e-9, "seed {seed}: single {single} < proposed {proposed}");
+        assert!(proposed <= greedy + 1e-9, "seed {seed}: greedy {greedy} < proposed {proposed}");
+        assert!(proposed <= fixed + 1e-9, "seed {seed}: fixed {fixed} < proposed {proposed}");
+        // single-instance collapses at K=20: far worse than proposed
+        assert!(single > 2.0 * proposed, "seed {seed}: single-instance did not collapse");
+        if proposed < greedy && proposed < fixed {
+            wins += 1;
+        }
+    }
+    assert!(wins >= 1, "proposed never strictly won in {trials} trials");
+}
+
+#[test]
+fn bandwidth_optimization_gains_grow_with_tight_deadlines() {
+    // Fig. 2c's right-to-left trend: as tau_min tightens, PSO's edge over
+    // equal bandwidth grows.
+    let cfg = ExperimentConfig::paper();
+    let delay = BatchDelayModel::paper();
+    let quality = PowerLawQuality::paper();
+    let gain_at = |tau_min: f64| -> f64 {
+        let scenario = sweeps::with_min_deadline(&cfg.scenario, tau_min);
+        let mut total = 0.0;
+        for seed in 0..3 {
+            let w = generate(&scenario, 200 + seed);
+            let pso =
+                solve_joint(&w, &Stacking::default(), &fast_pso(), &delay, &quality).outcome.mean_quality();
+            let eq = solve_joint(&w, &Stacking::default(), &EqualAllocator, &delay, &quality)
+                .outcome
+                .mean_quality();
+            total += eq - pso; // positive = PSO better (lower FID)
+        }
+        total / 3.0
+    };
+    let tight = gain_at(3.0);
+    let loose = gain_at(15.0);
+    assert!(tight >= -1e-6, "PSO worse than equal under tight deadlines: {tight}");
+    assert!(
+        tight >= loose - 1e-6,
+        "gain should grow as deadlines tighten: tight {tight} vs loose {loose}"
+    );
+}
+
+#[test]
+fn quality_function_agnosticism() {
+    // STACKING must work unchanged under a table quality model with no
+    // closed form (the paper's "operates independently of any specific
+    // form" claim). Build an arbitrary monotone step table.
+    struct Steppy;
+    impl QualityModel for Steppy {
+        fn quality(&self, steps: u32) -> f64 {
+            match steps {
+                0 => 500.0,
+                1..=3 => 300.0,
+                4..=8 => 120.0,
+                9..=15 => 60.0,
+                _ => 25.0,
+            }
+        }
+    }
+    let cfg = ExperimentConfig::paper();
+    let delay = BatchDelayModel::paper();
+    let w = generate(&cfg.scenario, 17);
+    let sol = solve_joint(&w, &Stacking::default(), &EqualAllocator, &delay, &Steppy);
+    assert_eq!(sol.outcome.outages(), 0);
+    let services = gen_budgets(&w, &sol.outcome.allocation_hz);
+    validate_schedule(&sol.outcome.schedule, &services, &delay).unwrap();
+}
