@@ -1,0 +1,55 @@
+//! Fig. 3 — dynamic Poisson arrivals: sweep λ against delivered
+//! quality, outage rate and tail latency through the event-driven
+//! multi-epoch simulator. (`harness = false`: criterion is not in the
+//! offline vendored set.)
+//!
+//! Acceptance properties asserted here:
+//!  * the sweep covers ≥ 10⁴ simulated requests;
+//!  * the whole run is deterministic — same seed, bit-identical rows;
+//!  * load tells: mean FID and outage rate degrade from the lightest to
+//!    the heaviest λ.
+
+use aigc_edge::bench;
+use aigc_edge::config::ExperimentConfig;
+
+fn main() {
+    let cfg = ExperimentConfig::paper();
+    let lambdas = [0.5, 1.0, 2.0, 4.0, 8.0, 12.0, 16.0, 20.0];
+    let horizon_s = std::env::var("BENCH_HORIZON_S")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(200.0);
+
+    let rows = bench::fig3_dynamic(&cfg, &lambdas, horizon_s);
+    let total: usize = rows.iter().map(|r| r.requests).sum();
+    assert!(
+        total >= 10_000,
+        "λ-sweep must cover >= 10^4 simulated requests, got {total}"
+    );
+
+    // Deterministic replay: identical seed -> bit-identical rows.
+    let replay = bench::fig3_dynamic(&cfg, &lambdas, horizon_s);
+    assert_eq!(rows, replay, "dynamic simulation is not deterministic");
+
+    // Shape: overload costs quality and deadline hits.
+    let first = rows.first().unwrap();
+    let last = rows.last().unwrap();
+    assert!(
+        last.mean_quality > first.mean_quality,
+        "mean FID must degrade with load: λ={} -> {:.2}, λ={} -> {:.2}",
+        first.lambda_hz,
+        first.mean_quality,
+        last.lambda_hz,
+        last.mean_quality
+    );
+    assert!(
+        last.outage_rate >= first.outage_rate,
+        "outage rate must not improve with load"
+    );
+    // Every request is accounted for in every row.
+    for r in &rows {
+        assert!(r.served <= r.requests);
+        assert!(r.outage_rate >= 0.0 && r.outage_rate <= 1.0);
+    }
+    println!("\nfig3_dynamic OK ({total} simulated requests)");
+}

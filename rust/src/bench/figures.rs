@@ -10,8 +10,8 @@ use crate::runtime::ArtifactStore;
 use crate::scheduler::{
     BatchScheduler, FixedSizeBatching, GreedyBatching, SingleInstance, Stacking,
 };
-use crate::sim::solve_joint;
-use crate::trace::{generate, sweeps};
+use crate::sim::{simulate_dynamic, solve_joint, DynamicConfig};
+use crate::trace::{generate, sweeps, ArrivalTrace};
 use crate::util::fit_power_law;
 
 use super::TableWriter;
@@ -260,6 +260,75 @@ pub fn fig2c(cfg: &ExperimentConfig, taus: &[f64], reps: usize) -> Vec<(f64, Vec
     rows
 }
 
+// ---------------------------------------------------------------------------
+// Fig. 3 (new, not in the paper) — dynamic arrivals: λ-sweep
+// ---------------------------------------------------------------------------
+
+/// One λ-sweep row of the dynamic-arrival figure.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Fig3Row {
+    pub lambda_hz: f64,
+    pub requests: usize,
+    pub served: usize,
+    pub mean_quality: f64,
+    pub outage_rate: f64,
+    pub p50_e2e_s: f64,
+    pub p99_e2e_s: f64,
+    pub mean_wait_s: f64,
+    pub epochs: usize,
+}
+
+/// Sweep the Poisson arrival rate λ against delivered quality, outage
+/// rate and tail latency under the dynamic (multi-epoch) simulator.
+/// Fully seeded: identical inputs produce bit-identical rows (asserted
+/// by `benches/fig3_dynamic.rs`).
+pub fn fig3_dynamic(cfg: &ExperimentConfig, lambdas: &[f64], horizon_s: f64) -> Vec<Fig3Row> {
+    let delay = BatchDelayModel::new(cfg.delay.a, cfg.delay.b);
+    let quality = PowerLawQuality::paper();
+    let scheduler = Stacking::default();
+    let allocator = EqualAllocator;
+    let dyn_cfg = DynamicConfig::from(&cfg.dynamic);
+    let mut table = TableWriter::new(
+        "Fig. 3 — dynamic Poisson arrivals: quality/outage/latency vs rate",
+        &["lambda", "requests", "served", "mean FID", "outage", "p50 e2e s", "p99 e2e s", "wait s", "epochs"],
+    )
+    .with_csv("fig3_dynamic");
+    let mut rows = Vec::new();
+    for &lambda in lambdas {
+        let mut arrival = cfg.arrival;
+        arrival.process = crate::config::ArrivalProcessKind::Poisson;
+        arrival.rate_hz = lambda;
+        arrival.horizon_s = horizon_s;
+        let trace = ArrivalTrace::generate(&cfg.scenario, &arrival, cfg.seed);
+        let report = simulate_dynamic(&trace, &scheduler, &allocator, &delay, &quality, &dyn_cfg);
+        let row = Fig3Row {
+            lambda_hz: lambda,
+            requests: trace.len(),
+            served: report.served(),
+            mean_quality: report.mean_quality(),
+            outage_rate: report.outage_rate(),
+            p50_e2e_s: report.e2e_percentile(50.0),
+            p99_e2e_s: report.e2e_percentile(99.0),
+            mean_wait_s: report.mean_wait_s(),
+            epochs: report.epochs.len(),
+        };
+        table.row(&[
+            format!("{lambda:.2}"),
+            row.requests.to_string(),
+            row.served.to_string(),
+            format!("{:.2}", row.mean_quality),
+            format!("{:.3}", row.outage_rate),
+            format!("{:.2}", row.p50_e2e_s),
+            format!("{:.2}", row.p99_e2e_s),
+            format!("{:.2}", row.mean_wait_s),
+            row.epochs.to_string(),
+        ]);
+        rows.push(row);
+    }
+    table.finish();
+    rows
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -315,6 +384,25 @@ mod tests {
             assert!(steps > 0, "svc {id} outage");
             assert!(e2e <= deadline + 1e-9, "svc {id} misses deadline");
         }
+    }
+
+    #[test]
+    fn fig3_load_degrades_quality_and_is_deterministic() {
+        let cfg = ExperimentConfig::paper();
+        let lambdas = [0.5, 8.0];
+        let rows = fig3_dynamic(&cfg, &lambdas, 30.0);
+        assert_eq!(rows.len(), 2);
+        assert!(rows.iter().map(|r| r.requests).sum::<usize>() > 100);
+        // overload must cost quality (mean FID grows with λ)
+        assert!(
+            rows[1].mean_quality > rows[0].mean_quality,
+            "λ=8 quality {} vs λ=0.5 {}",
+            rows[1].mean_quality,
+            rows[0].mean_quality
+        );
+        assert!(rows[1].outage_rate >= rows[0].outage_rate);
+        // bit-identical replay
+        assert_eq!(rows, fig3_dynamic(&cfg, &lambdas, 30.0));
     }
 
     #[test]

@@ -3,8 +3,10 @@
 //! Subcommands:
 //!   `serve    [--addr A] [--config F] [--epoch-ms N]` — TCP serving
 //!   `simulate [--config F] [--scheduler S] [--allocator A] [--seed N]`
+//!   `dynamic  [--config F] [--rate L] [--horizon S] [...]` — dynamic
+//!             arrivals through the event-driven multi-epoch simulator
 //!   `profile  [--reps N]` — Fig. 1a measurement
-//!   `figures  [--which 1a|1b|2a|2b|2c|all] [--reps N]`
+//!   `figures  [--which 1a|1b|2a|2b|2c|3|all] [--reps N]`
 
 use std::collections::BTreeMap;
 
@@ -63,6 +65,13 @@ impl Args {
         }
     }
 
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{key} must be a number")),
+        }
+    }
+
     /// Error on flags not in the allowed set (typo guard).
     pub fn expect_only(&self, allowed: &[&str]) -> Result<()> {
         for key in self.flags.keys() {
@@ -85,8 +94,13 @@ USAGE:
   aigc-edge serve    [--addr 127.0.0.1:7878] [--config file.toml] [--epoch-ms 200]
   aigc-edge simulate [--config file.toml] [--scheduler stacking|single|greedy|fixed]
                      [--allocator pso|equal|proportional] [--seed N]
+  aigc-edge dynamic  [--config file.toml] [--process poisson|burst] [--rate 2.0]
+                     [--horizon 300] [--epoch-s 1.0] [--max-batch 32] [--window 30]
+                     [--plan-horizon 2.0] [--no-admission true] [--trace-out f.csv]
+                     [--scheduler stacking|single|greedy|fixed]
+                     [--allocator pso|equal|proportional] [--seed N]
   aigc-edge profile  [--reps 20]
-  aigc-edge figures  [--which all|1a|1b|2a|2b|2c] [--reps 3]
+  aigc-edge figures  [--which all|1a|1b|2a|2b|2c|3] [--reps 3]
   aigc-edge help
 ";
 
@@ -134,6 +148,14 @@ mod tests {
         assert_eq!(a.get_usize("n", 1).unwrap(), 7);
         assert_eq!(a.get_usize("missing", 3).unwrap(), 3);
         assert!(parse("x --n seven").unwrap().get_usize("n", 1).is_err());
+    }
+
+    #[test]
+    fn float_getter() {
+        let a = parse("dynamic --rate 2.5").unwrap();
+        assert_eq!(a.get_f64("rate", 1.0).unwrap(), 2.5);
+        assert_eq!(a.get_f64("missing", 4.0).unwrap(), 4.0);
+        assert!(parse("dynamic --rate fast").unwrap().get_f64("rate", 1.0).is_err());
     }
 
     #[test]

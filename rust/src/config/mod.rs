@@ -41,6 +41,10 @@ pub struct ExperimentConfig {
     pub quality: QualityModelKind,
     pub pso: PsoSettings,
     pub stacking: StackingSettings,
+    /// Arrival process for dynamic (multi-epoch) simulation.
+    pub arrival: ArrivalSettings,
+    /// Epoching/admission settings for dynamic simulation.
+    pub dynamic: DynamicSettings,
     /// Directory holding the AOT artifacts (HLO, quality.json, …).
     pub artifacts_dir: PathBuf,
     pub seed: u64,
@@ -88,6 +92,74 @@ pub struct StackingSettings {
     pub max_steps: u32,
 }
 
+/// Which stochastic process generates request arrivals.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ArrivalProcessKind {
+    /// Homogeneous Poisson at `rate_hz`.
+    Poisson,
+    /// Square-wave-modulated Poisson (diurnal/bursty): `burst_rate_hz`
+    /// for the first `duty` fraction of every `period_s`, `rate_hz`
+    /// otherwise.
+    Burst,
+}
+
+/// Arrival-process settings for the dynamic simulator (`aigc-edge
+/// dynamic`, `fig3_dynamic`). TOML section `[arrival]`.
+#[derive(Debug, Clone, Copy)]
+pub struct ArrivalSettings {
+    pub process: ArrivalProcessKind,
+    /// Poisson rate λ (also the off-peak base rate for `Burst`).
+    pub rate_hz: f64,
+    /// Peak rate during burst windows (`Burst` only).
+    pub burst_rate_hz: f64,
+    /// Burst cycle length in seconds.
+    pub period_s: f64,
+    /// Fraction of every period spent at the burst rate, in (0, 1].
+    pub duty: f64,
+    /// Stop generating arrivals after this instant.
+    pub horizon_s: f64,
+    /// Hard cap on generated requests; 0 = until the horizon.
+    pub max_requests: usize,
+}
+
+impl ArrivalSettings {
+    /// Instantaneous arrival rate at time `t` — the intensity function
+    /// the trace generator thins against.
+    pub fn rate_at(&self, t_s: f64) -> f64 {
+        match self.process {
+            ArrivalProcessKind::Poisson => self.rate_hz,
+            ArrivalProcessKind::Burst => {
+                let phase = t_s.rem_euclid(self.period_s);
+                if phase < self.duty * self.period_s {
+                    self.burst_rate_hz
+                } else {
+                    self.rate_hz
+                }
+            }
+        }
+    }
+}
+
+/// Dynamic-simulation settings (epoching, admission, observability).
+/// TOML section `[dynamic]`.
+#[derive(Debug, Clone, Copy)]
+pub struct DynamicSettings {
+    /// Epoch length in simulated seconds (the re-solve cadence).
+    pub epoch_s: f64,
+    /// Close an epoch early once this many requests are queued.
+    pub max_batch: usize,
+    /// Deadline-aware admission control: reject requests whose residual
+    /// budget cannot fit one denoising step plus best-case transmission.
+    pub admission: bool,
+    /// Sliding window for the time-windowed metrics, seconds.
+    pub window_s: f64,
+    /// Per-epoch planning horizon: clamp each request's deadline to
+    /// `min(residual, plan_horizon_s)` for the epoch solve, so one
+    /// long-deadline request cannot monopolize the GPU (quality vs
+    /// responsiveness knob).
+    pub plan_horizon_s: f64,
+}
+
 impl ExperimentConfig {
     /// The paper's Section-IV setup.
     pub fn paper() -> Self {
@@ -105,6 +177,22 @@ impl ExperimentConfig {
             quality: QualityModelKind::PaperPowerLaw,
             pso: PsoSettings { particles: 24, iterations: 40, patience: 12 },
             stacking: StackingSettings { t_star_max: 0, max_steps: 1000 },
+            arrival: ArrivalSettings {
+                process: ArrivalProcessKind::Poisson,
+                rate_hz: 2.0,
+                burst_rate_hz: 8.0,
+                period_s: 60.0,
+                duty: 0.25,
+                horizon_s: 300.0,
+                max_requests: 0,
+            },
+            dynamic: DynamicSettings {
+                epoch_s: 1.0,
+                max_batch: 32,
+                admission: true,
+                window_s: 30.0,
+                plan_horizon_s: 2.0,
+            },
             artifacts_dir: default_artifacts_dir(),
             seed: 2025,
         }
@@ -163,6 +251,39 @@ impl ExperimentConfig {
         if self.stacking.max_steps == 0 {
             bail!("stacking.max_steps must be >= 1");
         }
+        // NaN compares false against every bound, and an infinite
+        // horizon would make trace generation loop forever — every
+        // rate/duration must be positive AND finite.
+        let pos_finite = |name: &str, v: f64| -> Result<()> {
+            if !(v > 0.0 && v.is_finite()) {
+                bail!("{name} must be positive and finite, got {v}");
+            }
+            Ok(())
+        };
+        let a = &self.arrival;
+        pos_finite("arrival.rate_hz", a.rate_hz)?;
+        if a.process == ArrivalProcessKind::Burst {
+            pos_finite("arrival.burst_rate_hz", a.burst_rate_hz)?;
+            if a.burst_rate_hz < a.rate_hz {
+                bail!(
+                    "arrival.burst_rate_hz ({}) must be >= arrival.rate_hz ({})",
+                    a.burst_rate_hz,
+                    a.rate_hz
+                );
+            }
+            pos_finite("arrival.period_s", a.period_s)?;
+            if !(a.duty > 0.0 && a.duty <= 1.0) {
+                bail!("arrival.duty must be in (0, 1], got {}", a.duty);
+            }
+        }
+        pos_finite("arrival.horizon_s", a.horizon_s)?;
+        let d = &self.dynamic;
+        pos_finite("dynamic.epoch_s", d.epoch_s)?;
+        if d.max_batch == 0 {
+            bail!("dynamic.max_batch must be >= 1");
+        }
+        pos_finite("dynamic.window_s", d.window_s)?;
+        pos_finite("dynamic.plan_horizon_s", d.plan_horizon_s)?;
         Ok(())
     }
 
@@ -224,6 +345,28 @@ fn apply_doc(cfg: &mut ExperimentConfig, doc: &TomlDoc) -> Result<()> {
             "pso.patience" => set_usize(&mut cfg.pso.patience, value),
             "stacking.t_star_max" => set_u32(&mut cfg.stacking.t_star_max, value),
             "stacking.max_steps" => set_u32(&mut cfg.stacking.max_steps, value),
+            "arrival.process" => match value.as_str() {
+                Some("poisson") => {
+                    cfg.arrival.process = ArrivalProcessKind::Poisson;
+                    true
+                }
+                Some("burst") => {
+                    cfg.arrival.process = ArrivalProcessKind::Burst;
+                    true
+                }
+                _ => false,
+            },
+            "arrival.rate_hz" => set_f64(&mut cfg.arrival.rate_hz, value),
+            "arrival.burst_rate_hz" => set_f64(&mut cfg.arrival.burst_rate_hz, value),
+            "arrival.period_s" => set_f64(&mut cfg.arrival.period_s, value),
+            "arrival.duty" => set_f64(&mut cfg.arrival.duty, value),
+            "arrival.horizon_s" => set_f64(&mut cfg.arrival.horizon_s, value),
+            "arrival.max_requests" => set_usize(&mut cfg.arrival.max_requests, value),
+            "dynamic.epoch_s" => set_f64(&mut cfg.dynamic.epoch_s, value),
+            "dynamic.max_batch" => set_usize(&mut cfg.dynamic.max_batch, value),
+            "dynamic.admission" => set_bool(&mut cfg.dynamic.admission, value),
+            "dynamic.window_s" => set_f64(&mut cfg.dynamic.window_s, value),
+            "dynamic.plan_horizon_s" => set_f64(&mut cfg.dynamic.plan_horizon_s, value),
             _ => bail!("unknown config key '{key}'"),
         };
         if !ok {
@@ -247,6 +390,10 @@ fn set_u32(slot: &mut u32, v: &toml::TomlValue) -> bool {
 
 fn set_u64(slot: &mut u64, v: &toml::TomlValue) -> bool {
     v.as_i64().filter(|&x| x >= 0).map(|x| *slot = x as u64).is_some()
+}
+
+fn set_bool(slot: &mut bool, v: &toml::TomlValue) -> bool {
+    v.as_bool().map(|x| *slot = x).is_some()
 }
 
 #[cfg(test)]
@@ -306,6 +453,89 @@ mod tests {
         );
         assert!(ExperimentConfig::from_toml_text("[scenario]\neta_lo = -1.0").is_err());
         assert!(ExperimentConfig::from_toml_text("[pso]\nparticles = 0").is_err());
+    }
+
+    #[test]
+    fn arrival_and_dynamic_sections_apply() {
+        let cfg = ExperimentConfig::from_toml_text(
+            r#"
+            [arrival]
+            process = "burst"
+            rate_hz = 1.5
+            burst_rate_hz = 12.0
+            period_s = 90.0
+            duty = 0.2
+            horizon_s = 600.0
+            max_requests = 5000
+            [dynamic]
+            epoch_s = 0.5
+            max_batch = 16
+            admission = false
+            window_s = 20.0
+            plan_horizon_s = 3.0
+            "#,
+        )
+        .unwrap();
+        assert_eq!(cfg.arrival.process, ArrivalProcessKind::Burst);
+        assert_eq!(cfg.arrival.rate_hz, 1.5);
+        assert_eq!(cfg.arrival.burst_rate_hz, 12.0);
+        assert_eq!(cfg.arrival.max_requests, 5000);
+        assert_eq!(cfg.dynamic.epoch_s, 0.5);
+        assert_eq!(cfg.dynamic.max_batch, 16);
+        assert!(!cfg.dynamic.admission);
+        assert_eq!(cfg.dynamic.window_s, 20.0);
+        assert_eq!(cfg.dynamic.plan_horizon_s, 3.0);
+    }
+
+    #[test]
+    fn arrival_validation_rejects_nonsense() {
+        assert!(ExperimentConfig::from_toml_text("[arrival]\nrate_hz = 0.0").is_err());
+        assert!(ExperimentConfig::from_toml_text(
+            "[arrival]\nprocess = \"burst\"\nrate_hz = 5.0\nburst_rate_hz = 1.0"
+        )
+        .is_err());
+        assert!(ExperimentConfig::from_toml_text(
+            "[arrival]\nprocess = \"burst\"\nduty = 1.5"
+        )
+        .is_err());
+        assert!(ExperimentConfig::from_toml_text("[arrival]\nprocess = \"weibull\"").is_err());
+        assert!(ExperimentConfig::from_toml_text("[dynamic]\nepoch_s = 0.0").is_err());
+        assert!(ExperimentConfig::from_toml_text("[dynamic]\nmax_batch = 0").is_err());
+        assert!(ExperimentConfig::from_toml_text("[dynamic]\nadmission = 3").is_err());
+    }
+
+    #[test]
+    fn non_finite_arrival_and_dynamic_values_rejected() {
+        // NaN/inf slip past `<= 0.0` comparisons; validate() must
+        // reject them explicitly (an infinite horizon would make trace
+        // generation loop forever).
+        let mut cfg = ExperimentConfig::paper();
+        cfg.arrival.horizon_s = f64::INFINITY;
+        assert!(cfg.validate().is_err());
+        let mut cfg = ExperimentConfig::paper();
+        cfg.arrival.rate_hz = f64::NAN;
+        assert!(cfg.validate().is_err());
+        let mut cfg = ExperimentConfig::paper();
+        cfg.dynamic.plan_horizon_s = f64::INFINITY;
+        assert!(cfg.validate().is_err());
+        let mut cfg = ExperimentConfig::paper();
+        cfg.dynamic.window_s = f64::NAN;
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn burst_rate_function_is_periodic() {
+        let mut cfg = ExperimentConfig::paper();
+        cfg.arrival.process = ArrivalProcessKind::Burst;
+        cfg.arrival.rate_hz = 1.0;
+        cfg.arrival.burst_rate_hz = 10.0;
+        cfg.arrival.period_s = 10.0;
+        cfg.arrival.duty = 0.3;
+        assert_eq!(cfg.arrival.rate_at(0.0), 10.0);
+        assert_eq!(cfg.arrival.rate_at(2.9), 10.0);
+        assert_eq!(cfg.arrival.rate_at(3.1), 1.0);
+        assert_eq!(cfg.arrival.rate_at(9.9), 1.0);
+        assert_eq!(cfg.arrival.rate_at(12.9), 10.0);
     }
 
     #[test]

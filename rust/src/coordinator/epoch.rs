@@ -1,0 +1,82 @@
+//! The epoching policy — *when* a batch of queued requests becomes an
+//! epoch and gets one (P0) solve.
+//!
+//! Both front-ends share this exact decision rule so their behaviour
+//! stays comparable by construction:
+//! * the TCP server (`server::serve`) applies it to wall-clock time;
+//! * the dynamic simulator (`sim::dynamic`) applies it to simulated
+//!   time.
+//!
+//! An epoch closes as soon as `max_batch` requests are waiting, or once
+//! it has been open for `epoch_s` seconds with at least one request
+//! queued (an empty epoch never closes — there is nothing to solve).
+
+/// Epoch-closing rule shared by the online server and the simulator.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EpochPolicy {
+    /// Epoch length in seconds: the longest a queued request waits
+    /// before the next solve.
+    pub epoch_s: f64,
+    /// Close early once this many requests are queued.
+    pub max_batch: usize,
+}
+
+impl EpochPolicy {
+    pub fn new(epoch_s: f64, max_batch: usize) -> Self {
+        assert!(epoch_s > 0.0, "epoch length must be positive");
+        assert!(max_batch >= 1, "max_batch must be at least 1");
+        Self { epoch_s, max_batch }
+    }
+
+    /// From the server's millisecond config.
+    pub fn from_millis(epoch_ms: u64, max_batch: usize) -> Self {
+        Self::new(epoch_ms.max(1) as f64 * 1e-3, max_batch)
+    }
+
+    /// Should an epoch that has been open for `open_for_s` seconds with
+    /// `queued` requests waiting close now?
+    pub fn should_close(&self, queued: usize, open_for_s: f64) -> bool {
+        queued >= self.max_batch || (queued > 0 && open_for_s + 1e-12 >= self.epoch_s)
+    }
+
+    /// Latest instant an epoch opened at `opened_at_s` may stay open.
+    pub fn close_deadline(&self, opened_at_s: f64) -> f64 {
+        opened_at_s + self.epoch_s
+    }
+}
+
+impl Default for EpochPolicy {
+    fn default() -> Self {
+        Self { epoch_s: 0.2, max_batch: 32 }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn closes_on_batch_or_timeout_only_with_work() {
+        let p = EpochPolicy::new(1.0, 4);
+        assert!(!p.should_close(0, 10.0), "empty epochs never close");
+        assert!(!p.should_close(1, 0.5));
+        assert!(p.should_close(1, 1.0));
+        assert!(p.should_close(4, 0.0), "full batch closes immediately");
+        assert!(p.should_close(9, 0.0));
+    }
+
+    #[test]
+    fn millis_conversion_and_deadline() {
+        let p = EpochPolicy::from_millis(200, 32);
+        assert!((p.epoch_s - 0.2).abs() < 1e-12);
+        assert!((p.close_deadline(3.0) - 3.2).abs() < 1e-12);
+        // zero ms clamps to something strictly positive
+        assert!(EpochPolicy::from_millis(0, 1).epoch_s > 0.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_zero_batch() {
+        EpochPolicy::new(1.0, 0);
+    }
+}

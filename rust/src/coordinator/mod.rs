@@ -9,7 +9,9 @@
 //! (no radio on this testbed); generation is real compute.
 
 pub mod engine;
+pub mod epoch;
 pub mod profiler;
 
 pub use engine::{Engine, EngineConfig, EngineReport, ServedRequest};
+pub use epoch::EpochPolicy;
 pub use profiler::{pin_xla_single_threaded, profile_batch_delay, ProfileConfig};

@@ -31,3 +31,11 @@ pub mod server;
 pub mod sim;
 pub mod trace;
 pub mod util;
+
+// PJRT bindings: the in-tree stub keeps the crate building and testable
+// without libxla_extension; `--features pjrt` drops the stub so `xla::`
+// paths resolve to the real crate (which must then be supplied — see
+// rust/Cargo.toml).
+#[cfg(not(feature = "pjrt"))]
+#[path = "runtime/xla_stub.rs"]
+pub mod xla;

@@ -9,7 +9,7 @@ use anyhow::{bail, Context, Result};
 use aigc_edge::bandwidth::{Allocator, EqualAllocator, ProportionalAllocator, PsoAllocator};
 use aigc_edge::bench;
 use aigc_edge::cli::{Args, USAGE};
-use aigc_edge::config::ExperimentConfig;
+use aigc_edge::config::{ArrivalProcessKind, ExperimentConfig};
 use aigc_edge::coordinator::{profile_batch_delay, ProfileConfig};
 use aigc_edge::delay::BatchDelayModel;
 use aigc_edge::quality::{PowerLawQuality, QualityModel, TableQuality};
@@ -17,6 +17,8 @@ use aigc_edge::runtime::ArtifactStore;
 use aigc_edge::scheduler::{
     BatchScheduler, FixedSizeBatching, GreedyBatching, SingleInstance, Stacking, StackingConfig,
 };
+use aigc_edge::sim::{simulate_dynamic, Disposition, DynamicConfig};
+use aigc_edge::trace::ArrivalTrace;
 
 /// Build the STACKING scheduler from config (0 = derive T* bound).
 fn stacking_from(cfg: &ExperimentConfig) -> Stacking {
@@ -35,6 +37,7 @@ fn main() -> Result<()> {
     match args.command.as_str() {
         "serve" => cmd_serve(&args),
         "simulate" => cmd_simulate(&args),
+        "dynamic" => cmd_dynamic(&args),
         "profile" => cmd_profile(&args),
         "figures" => cmd_figures(&args),
         "help" | "--help" | "-h" => {
@@ -43,6 +46,27 @@ fn main() -> Result<()> {
         }
         other => bail!("unknown command '{other}'\n{USAGE}"),
     }
+}
+
+/// Scheduler selection shared by `simulate` and `dynamic`.
+fn scheduler_from(args: &Args, cfg: &ExperimentConfig) -> Result<Box<dyn BatchScheduler>> {
+    Ok(match args.get_or("scheduler", "stacking").as_str() {
+        "stacking" => Box::new(stacking_from(cfg)),
+        "single" => Box::new(SingleInstance::default()),
+        "greedy" => Box::new(GreedyBatching),
+        "fixed" => Box::new(FixedSizeBatching::default()),
+        other => bail!("unknown scheduler '{other}'"),
+    })
+}
+
+/// Allocator selection shared by `simulate` and `dynamic`.
+fn allocator_from(args: &Args) -> Result<Box<dyn Allocator>> {
+    Ok(match args.get_or("allocator", "pso").as_str() {
+        "pso" => Box::new(PsoAllocator::default()),
+        "equal" => Box::new(EqualAllocator),
+        "proportional" => Box::new(ProportionalAllocator),
+        other => bail!("unknown allocator '{other}'"),
+    })
 }
 
 fn load_config(args: &Args) -> Result<ExperimentConfig> {
@@ -84,19 +108,8 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     args.expect_only(&["config", "scheduler", "allocator", "seed"])?;
     let mut cfg = load_config(args)?;
     cfg.seed = args.get_u64("seed", cfg.seed)?;
-    let scheduler: Box<dyn BatchScheduler> = match args.get_or("scheduler", "stacking").as_str() {
-        "stacking" => Box::new(stacking_from(&cfg)),
-        "single" => Box::new(SingleInstance::default()),
-        "greedy" => Box::new(GreedyBatching),
-        "fixed" => Box::new(FixedSizeBatching::default()),
-        other => bail!("unknown scheduler '{other}'"),
-    };
-    let allocator: Box<dyn Allocator> = match args.get_or("allocator", "pso").as_str() {
-        "pso" => Box::new(PsoAllocator::default()),
-        "equal" => Box::new(EqualAllocator),
-        "proportional" => Box::new(ProportionalAllocator),
-        other => bail!("unknown allocator '{other}'"),
-    };
+    let scheduler = scheduler_from(args, &cfg)?;
+    let allocator = allocator_from(args)?;
     let quality = quality_model(&cfg)?;
     let delay = BatchDelayModel::new(cfg.delay.a, cfg.delay.b);
     let workload = generate(&cfg.scenario, cfg.seed);
@@ -130,6 +143,128 @@ fn cmd_simulate(args: &Args) -> Result<()> {
             if s.met { "ok" } else { "OUTAGE" }
         );
     }
+    Ok(())
+}
+
+fn cmd_dynamic(args: &Args) -> Result<()> {
+    args.expect_only(&[
+        "config",
+        "process",
+        "rate",
+        "horizon",
+        "epoch-s",
+        "max-batch",
+        "window",
+        "plan-horizon",
+        "no-admission",
+        "trace-out",
+        "scheduler",
+        "allocator",
+        "seed",
+    ])?;
+    let mut cfg = load_config(args)?;
+    cfg.seed = args.get_u64("seed", cfg.seed)?;
+    match args.get("process") {
+        None => {}
+        Some("poisson") => cfg.arrival.process = ArrivalProcessKind::Poisson,
+        Some("burst") => cfg.arrival.process = ArrivalProcessKind::Burst,
+        Some(other) => bail!("unknown arrival process '{other}'"),
+    }
+    cfg.arrival.rate_hz = args.get_f64("rate", cfg.arrival.rate_hz)?;
+    cfg.arrival.horizon_s = args.get_f64("horizon", cfg.arrival.horizon_s)?;
+    cfg.dynamic.epoch_s = args.get_f64("epoch-s", cfg.dynamic.epoch_s)?;
+    cfg.dynamic.max_batch = args.get_usize("max-batch", cfg.dynamic.max_batch)?;
+    cfg.dynamic.window_s = args.get_f64("window", cfg.dynamic.window_s)?;
+    cfg.dynamic.plan_horizon_s = args.get_f64("plan-horizon", cfg.dynamic.plan_horizon_s)?;
+    match args.get("no-admission") {
+        None => {}
+        Some("true") => cfg.dynamic.admission = false,
+        Some("false") => cfg.dynamic.admission = true,
+        Some(other) => bail!("--no-admission must be true or false, got '{other}'"),
+    }
+    cfg.validate()?;
+
+    let scheduler = scheduler_from(args, &cfg)?;
+    let allocator = allocator_from(args)?;
+    let quality = quality_model(&cfg)?;
+    let delay = BatchDelayModel::new(cfg.delay.a, cfg.delay.b);
+    let trace = ArrivalTrace::generate(&cfg.scenario, &cfg.arrival, cfg.seed);
+    if let Some(path) = args.get("trace-out") {
+        std::fs::write(path, trace.to_csv()).with_context(|| format!("writing trace {path}"))?;
+        println!("replayable arrival trace written to {path}");
+    }
+    let dyn_cfg = DynamicConfig::from(&cfg.dynamic);
+    println!(
+        "dynamic scenario: {:?} rate {} Hz over {}s | epoch {}s max-batch {} | plan horizon {}s | admission {}",
+        cfg.arrival.process,
+        cfg.arrival.rate_hz,
+        cfg.arrival.horizon_s,
+        cfg.dynamic.epoch_s,
+        cfg.dynamic.max_batch,
+        cfg.dynamic.plan_horizon_s,
+        cfg.dynamic.admission,
+    );
+    println!(
+        "{} arrivals (empirical rate {:.2} Hz); scheduler={} allocator={}",
+        trace.len(),
+        trace.mean_rate_hz(),
+        scheduler.name(),
+        allocator.name()
+    );
+    let report =
+        simulate_dynamic(&trace, scheduler.as_ref(), allocator.as_ref(), &delay, quality.as_ref(), &dyn_cfg);
+
+    // Windowed view: one row every ~window/3 of simulated time.
+    let mut table = aigc_edge::bench::TableWriter::new(
+        "sliding-window serving metrics (sampled at epoch solves)",
+        &["t s", "queue", "arr/s", "mean FID", "outage", "p50 e2e", "p95 e2e", "p99 e2e"],
+    );
+    let mut next_sample = 0.0;
+    for e in &report.epochs {
+        if e.t_solve_s < next_sample {
+            continue;
+        }
+        next_sample = e.t_solve_s + cfg.dynamic.window_s / 3.0;
+        table.row(&[
+            format!("{:.1}", e.t_solve_s),
+            e.queue_depth.to_string(),
+            format!("{:.2}", e.arrival_rate_hz),
+            format!("{:.1}", e.mean_quality_w),
+            format!("{:.3}", e.outage_rate_w),
+            format!("{:.2}", e.p50_e2e_w),
+            format!("{:.2}", e.p95_e2e_w),
+            format!("{:.2}", e.p99_e2e_w),
+        ]);
+    }
+    table.finish();
+    println!(
+        "served {}/{} ({} rejected on arrival, {} expired in queue) over {} epochs, {:.1}s simulated",
+        report.served(),
+        report.outcomes.len(),
+        report
+            .outcomes
+            .iter()
+            .filter(|o| o.disposition == Disposition::RejectedOnArrival)
+            .count(),
+        report
+            .outcomes
+            .iter()
+            .filter(|o| o.disposition == Disposition::ExpiredInQueue)
+            .count(),
+        report.epochs.len(),
+        report.horizon_s,
+    );
+    println!(
+        "mean FID {:.2} | outage rate {:.3} | e2e p50 {:.2}s p95 {:.2}s p99 {:.2}s | mean wait {:.2}s | throughput {:.2}/s | peak queue {}",
+        report.mean_quality(),
+        report.outage_rate(),
+        report.e2e_percentile(50.0),
+        report.e2e_percentile(95.0),
+        report.e2e_percentile(99.0),
+        report.mean_wait_s(),
+        report.throughput_hz(),
+        report.peak_queue_depth(),
+    );
     Ok(())
 }
 
@@ -170,6 +305,9 @@ fn cmd_figures(args: &Args) -> Result<()> {
     }
     if want("2c") {
         bench::fig2c(&cfg, &[3.0, 5.0, 7.0, 9.0, 11.0, 13.0, 15.0, 17.0, 19.0], reps);
+    }
+    if want("3") {
+        bench::fig3_dynamic(&cfg, &[0.5, 1.0, 2.0, 4.0, 8.0, 12.0, 16.0, 20.0], 200.0);
     }
     Ok(())
 }

@@ -5,6 +5,10 @@
 //! snapshot the way the examples and the server's `STATS` command print
 //! it.
 
+pub mod window;
+
+pub use window::{ServiceWindows, WindowedSeries};
+
 use std::collections::BTreeMap;
 use std::sync::Mutex;
 use std::time::Instant;

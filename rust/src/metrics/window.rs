@@ -1,0 +1,231 @@
+//! Time-windowed aggregates over event streams — the observability
+//! layer for dynamic-arrival serving (`sim::dynamic`, and reusable by
+//! the online server).
+//!
+//! A [`WindowedSeries`] holds timestamped samples and answers
+//! aggregate queries (rate, mean, percentiles, max) over the trailing
+//! `window_s` seconds. Timestamps are expected to be (approximately)
+//! non-decreasing — the simulator and the server both emit
+//! monotonically — and pruning is amortized O(1) per push.
+
+use std::collections::VecDeque;
+
+use crate::util::stats::percentile;
+
+/// A sliding-window series of `(t_s, value)` samples.
+#[derive(Debug, Clone)]
+pub struct WindowedSeries {
+    window_s: f64,
+    points: VecDeque<(f64, f64)>,
+}
+
+impl WindowedSeries {
+    pub fn new(window_s: f64) -> Self {
+        assert!(window_s > 0.0, "window must be positive");
+        Self { window_s, points: VecDeque::new() }
+    }
+
+    pub fn window_s(&self) -> f64 {
+        self.window_s
+    }
+
+    /// Record `value` at time `t_s` and drop samples older than the
+    /// window. Slightly out-of-order timestamps (bounded by the window)
+    /// are tolerated: pruning only ever removes from the front.
+    pub fn push(&mut self, t_s: f64, value: f64) {
+        self.points.push_back((t_s, value));
+        self.prune(t_s);
+    }
+
+    /// Drop samples strictly older than `now_s - window`.
+    pub fn prune(&mut self, now_s: f64) {
+        let cutoff = now_s - self.window_s;
+        while matches!(self.points.front(), Some(&(t, _)) if t < cutoff) {
+            self.points.pop_front();
+        }
+    }
+
+    /// Samples currently inside the window.
+    pub fn count(&self) -> usize {
+        self.points.len()
+    }
+
+    /// Events per second over the window (e.g. arrival rate when every
+    /// event is pushed once).
+    pub fn rate_hz(&self) -> f64 {
+        self.points.len() as f64 / self.window_s
+    }
+
+    /// Mean of the windowed values; 0.0 when empty.
+    pub fn mean(&self) -> f64 {
+        if self.points.is_empty() {
+            return 0.0;
+        }
+        self.points.iter().map(|&(_, v)| v).sum::<f64>() / self.points.len() as f64
+    }
+
+    /// Linear-interpolated percentile of the windowed values (`p` in
+    /// [0, 100]); 0.0 when empty.
+    pub fn percentile(&self, p: f64) -> f64 {
+        let vals: Vec<f64> = self.points.iter().map(|&(_, v)| v).collect();
+        percentile(&vals, p)
+    }
+
+    pub fn max(&self) -> f64 {
+        self.points.iter().map(|&(_, v)| v).fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    /// Most recent value, if any.
+    pub fn last(&self) -> Option<f64> {
+        self.points.back().map(|&(_, v)| v)
+    }
+}
+
+/// The standard window set a dynamic-serving front-end tracks; one
+/// place so the simulator, the CLI and (future) server telemetry agree
+/// on definitions.
+#[derive(Debug, Clone)]
+pub struct ServiceWindows {
+    /// One event per arrival (value unused).
+    pub arrivals: WindowedSeries,
+    /// End-to-end delay of served requests, seconds.
+    pub e2e_s: WindowedSeries,
+    /// Charged quality per resolved request (served or dropped).
+    pub quality: WindowedSeries,
+    /// 1.0 for an outage (dropped or deadline missed), 0.0 otherwise,
+    /// per resolved request.
+    pub outages: WindowedSeries,
+}
+
+impl ServiceWindows {
+    pub fn new(window_s: f64) -> Self {
+        Self {
+            arrivals: WindowedSeries::new(window_s),
+            e2e_s: WindowedSeries::new(window_s),
+            quality: WindowedSeries::new(window_s),
+            outages: WindowedSeries::new(window_s),
+        }
+    }
+
+    pub fn record_arrival(&mut self, t_s: f64) {
+        self.arrivals.push(t_s, 1.0);
+    }
+
+    pub fn record_served(&mut self, t_s: f64, e2e_s: f64, quality: f64, met: bool) {
+        self.e2e_s.push(t_s, e2e_s);
+        self.quality.push(t_s, quality);
+        self.outages.push(t_s, if met { 0.0 } else { 1.0 });
+    }
+
+    pub fn record_dropped(&mut self, t_s: f64, outage_quality: f64) {
+        self.quality.push(t_s, outage_quality);
+        self.outages.push(t_s, 1.0);
+    }
+
+    /// Fraction of resolved requests in the window that were outages.
+    pub fn outage_rate(&self) -> f64 {
+        self.outages.mean()
+    }
+
+    /// Advance every series to `now_s`, dropping stale samples. Call
+    /// before *reading* aggregates at an instant later than the last
+    /// push — pushes prune automatically, reads do not.
+    pub fn prune(&mut self, now_s: f64) {
+        self.arrivals.prune(now_s);
+        self.e2e_s.prune(now_s);
+        self.quality.prune(now_s);
+        self.outages.prune(now_s);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prunes_to_window() {
+        let mut w = WindowedSeries::new(10.0);
+        for t in 0..25 {
+            w.push(t as f64, t as f64);
+        }
+        // window at t=24 keeps t in [14, 24]
+        assert_eq!(w.count(), 11);
+        assert!((w.mean() - 19.0).abs() < 1e-12);
+        assert_eq!(w.last(), Some(24.0));
+        assert_eq!(w.max(), 24.0);
+    }
+
+    #[test]
+    fn rate_counts_events_per_second() {
+        let mut w = WindowedSeries::new(5.0);
+        for i in 0..20 {
+            w.push(10.0 + i as f64 * 0.25, 1.0); // 4 Hz for 5 s
+        }
+        assert!((w.rate_hz() - 4.0).abs() < 0.5, "rate {}", w.rate_hz());
+    }
+
+    #[test]
+    fn percentiles_over_window_only() {
+        let mut w = WindowedSeries::new(4.0);
+        w.push(0.0, 1000.0); // will fall out
+        for t in 10..14 {
+            w.push(t as f64, (t - 9) as f64);
+        }
+        assert_eq!(w.count(), 4);
+        assert!((w.percentile(50.0) - 2.5).abs() < 1e-9);
+        assert!((w.percentile(100.0) - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn tolerates_slightly_out_of_order_pushes() {
+        let mut w = WindowedSeries::new(10.0);
+        w.push(5.0, 1.0);
+        w.push(4.5, 2.0); // earlier than previous — must not panic/lose
+        w.push(6.0, 3.0);
+        assert_eq!(w.count(), 3);
+    }
+
+    #[test]
+    fn empty_series_is_zeroish() {
+        let w = WindowedSeries::new(1.0);
+        assert_eq!(w.count(), 0);
+        assert_eq!(w.mean(), 0.0);
+        assert_eq!(w.percentile(99.0), 0.0);
+        assert_eq!(w.last(), None);
+    }
+
+    #[test]
+    fn service_windows_outage_rate() {
+        let mut s = ServiceWindows::new(100.0);
+        s.record_arrival(0.0);
+        s.record_arrival(1.0);
+        s.record_arrival(2.0);
+        s.record_served(3.0, 1.5, 30.0, true);
+        s.record_served(3.5, 2.0, 40.0, true);
+        s.record_dropped(4.0, 450.0);
+        assert_eq!(s.arrivals.count(), 3);
+        assert!((s.outage_rate() - 1.0 / 3.0).abs() < 1e-12);
+        assert!((s.quality.mean() - (30.0 + 40.0 + 450.0) / 3.0).abs() < 1e-12);
+        assert!((s.e2e_s.percentile(100.0) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn prune_on_read_drops_stale_samples() {
+        let mut s = ServiceWindows::new(10.0);
+        for t in 0..5 {
+            s.record_arrival(t as f64);
+        }
+        assert_eq!(s.arrivals.count(), 5);
+        // Reading much later without new pushes must not report the
+        // old burst as current load.
+        s.prune(100.0);
+        assert_eq!(s.arrivals.count(), 0);
+        assert_eq!(s.arrivals.rate_hz(), 0.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_window_rejected() {
+        WindowedSeries::new(0.0);
+    }
+}

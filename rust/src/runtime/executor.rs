@@ -9,6 +9,9 @@
 
 use anyhow::{bail, Context, Result};
 
+#[cfg(not(feature = "pjrt"))]
+use crate::xla;
+
 use super::ArtifactStore;
 
 /// One task's inputs within a batch.

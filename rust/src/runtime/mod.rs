@@ -17,6 +17,9 @@ use std::path::Path;
 
 use anyhow::{Context, Result};
 
+#[cfg(not(feature = "pjrt"))]
+use crate::xla;
+
 /// Compiled executables per batch-size bucket plus model metadata.
 pub struct ArtifactStore {
     client: xla::PjRtClient,

@@ -372,7 +372,35 @@ impl BatchScheduler for Stacking {
             }
         }
         let (_, winner) = best.expect("at least one T* trial");
-        Trial::new(services, delay, self.config.max_steps).run(winner, services.len(), true)
+        let mut best_schedule =
+            Trial::new(services, delay, self.config.max_steps).run(winner, services.len(), true);
+        let mut best_q = best_schedule.mean_quality(quality);
+
+        // Dominance guard: the clustering/packing heuristic can lose to
+        // a baseline on knife-edge workloads (e.g. several tight budgets
+        // inside [g(1), g(2)) drain together, where serving them one by
+        // one was feasible). Both baselines are in STACKING's search
+        // space conceptually, so keep whichever schedule scores best —
+        // this makes "stacking ≤ greedy/single-instance" hold on *every*
+        // instance (pinned by tests/scheduler_properties.rs) and never
+        // degrades quality.
+        let single = super::single_instance::SingleInstance::new(self.config.max_steps)
+            .schedule(services, delay, quality);
+        let mut consider = |candidate: Schedule| {
+            let q = candidate.mean_quality(quality);
+            if q < best_q - 1e-12 {
+                best_q = q;
+                best_schedule = candidate;
+            }
+        };
+        consider(single);
+        let greedy = super::greedy::GreedyBatching.schedule(services, delay, quality);
+        // Greedy caps steps at 1000 internally; only usable when that
+        // respects this scheduler's configured cap.
+        if greedy.steps.iter().all(|&t| t <= self.config.max_steps) {
+            consider(greedy);
+        }
+        best_schedule
     }
 }
 

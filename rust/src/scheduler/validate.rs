@@ -7,33 +7,65 @@
 //! recorded durations and the delay model.
 
 use std::collections::HashMap;
-
-use thiserror::Error;
+use std::fmt;
 
 use crate::delay::BatchDelayModel;
 
 use super::types::{Schedule, Service};
 
 /// A constraint violation, tagged with the paper's equation number.
-#[derive(Debug, Error, PartialEq)]
+/// (Display/Error are hand-implemented: the offline crate set has no
+/// `thiserror`; messages match the former derive exactly.)
+#[derive(Debug, Clone, PartialEq)]
 pub enum ScheduleError {
-    #[error("eq(2): service {service} step {step} executed {count} times (must be exactly 1)")]
     StepMultiplicity { service: usize, step: u32, count: usize },
-    #[error("eq(2): service {service} reports T_k={steps} but executed steps {executed:?}")]
     StepsMismatch { service: usize, steps: u32, executed: Vec<u32> },
-    #[error("eq(6): batch {n} starts at {start:.6} before batch {prev} ends at {end:.6}")]
     BatchOverlap { n: usize, prev: usize, start: f64, end: f64 },
-    #[error("eq(7): service {service} step {step} starts at {start:.6} before step {prev_step} completes at {end:.6}")]
     DependencyViolated { service: usize, step: u32, prev_step: u32, start: f64, end: f64 },
-    #[error("eq(14): service {service} finishes generation at {finish:.6} > budget {budget:.6}")]
     BudgetExceeded { service: usize, finish: f64, budget: f64 },
-    #[error("batch {n} duration {duration:.6} != g({size}) = {expected:.6}")]
     DurationMismatch { n: usize, duration: f64, size: u32, expected: f64 },
-    #[error("batch {n} contains service {service} more than once")]
     DuplicateInBatch { n: usize, service: usize },
-    #[error("completion[{service}]={recorded:.6} but last batch of the service ends at {actual:.6}")]
     CompletionMismatch { service: usize, recorded: f64, actual: f64 },
 }
+
+impl fmt::Display for ScheduleError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Self::StepMultiplicity { service, step, count } => write!(
+                f,
+                "eq(2): service {service} step {step} executed {count} times (must be exactly 1)"
+            ),
+            Self::StepsMismatch { service, steps, executed } => write!(
+                f,
+                "eq(2): service {service} reports T_k={steps} but executed steps {executed:?}"
+            ),
+            Self::BatchOverlap { n, prev, start, end } => write!(
+                f,
+                "eq(6): batch {n} starts at {start:.6} before batch {prev} ends at {end:.6}"
+            ),
+            Self::DependencyViolated { service, step, prev_step, start, end } => write!(
+                f,
+                "eq(7): service {service} step {step} starts at {start:.6} before step {prev_step} completes at {end:.6}"
+            ),
+            Self::BudgetExceeded { service, finish, budget } => write!(
+                f,
+                "eq(14): service {service} finishes generation at {finish:.6} > budget {budget:.6}"
+            ),
+            Self::DurationMismatch { n, duration, size, expected } => {
+                write!(f, "batch {n} duration {duration:.6} != g({size}) = {expected:.6}")
+            }
+            Self::DuplicateInBatch { n, service } => {
+                write!(f, "batch {n} contains service {service} more than once")
+            }
+            Self::CompletionMismatch { service, recorded, actual } => write!(
+                f,
+                "completion[{service}]={recorded:.6} but last batch of the service ends at {actual:.6}"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for ScheduleError {}
 
 const EPS: f64 = 1e-9;
 

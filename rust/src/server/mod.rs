@@ -26,7 +26,7 @@ pub use protocol::{parse_request, Command, Response};
 use crate::bandwidth::PsoAllocator;
 use crate::channel::Link;
 use crate::config::ExperimentConfig;
-use crate::coordinator::{Engine, EngineConfig};
+use crate::coordinator::{Engine, EngineConfig, EpochPolicy};
 use crate::quality::PowerLawQuality;
 use crate::runtime::ArtifactStore;
 use crate::scheduler::Stacking;
@@ -58,6 +58,13 @@ pub struct ServerConfig {
 impl Default for ServerConfig {
     fn default() -> Self {
         Self { epoch_ms: 200, max_batch: 32 }
+    }
+}
+
+impl ServerConfig {
+    /// The epoch-closing rule, shared verbatim with `sim::dynamic`.
+    pub fn policy(&self) -> EpochPolicy {
+        EpochPolicy::from_millis(self.epoch_ms, self.max_batch)
     }
 }
 
@@ -155,22 +162,32 @@ fn gpu_worker(
     let quality = PowerLawQuality::paper();
     let scheduler = Stacking::default();
     let allocator = PsoAllocator::default();
+    let policy = server_cfg.policy();
     while !stop.load(Ordering::Relaxed) {
-        // Collect an epoch.
+        // Collect an epoch under the shared closing rule. The epoch
+        // opens at the FIRST request (same as sim::dynamic), not at
+        // collection start — otherwise a request arriving after an
+        // idle stretch would close its epoch immediately, unbatched.
         let mut epoch: Vec<Pending> = Vec::new();
-        let deadline = std::time::Instant::now() + Duration::from_millis(server_cfg.epoch_ms);
-        while epoch.len() < server_cfg.max_batch {
-            let now = std::time::Instant::now();
-            if now >= deadline && !epoch.is_empty() {
+        let mut opened = std::time::Instant::now();
+        loop {
+            let open_for = opened.elapsed().as_secs_f64();
+            if policy.should_close(epoch.len(), open_for) {
                 break;
             }
             let timeout = if epoch.is_empty() {
+                // Nothing queued: poll so `stop` is observed promptly.
                 Duration::from_millis(50)
             } else {
-                deadline.saturating_duration_since(now)
+                Duration::from_secs_f64((policy.epoch_s - open_for).max(1e-4))
             };
             match queue.recv_timeout(timeout) {
-                Ok(p) => epoch.push(p),
+                Ok(p) => {
+                    if epoch.is_empty() {
+                        opened = std::time::Instant::now();
+                    }
+                    epoch.push(p);
+                }
                 Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {
                     if !epoch.is_empty() {
                         break;
@@ -227,7 +244,6 @@ fn gpu_worker(
 }
 
 fn handle_conn(stream: TcpStream, queue: Sender<Pending>, metrics_text: Arc<Mutex<String>>) {
-    let peer = stream.peer_addr().ok();
     let mut writer = match stream.try_clone() {
         Ok(w) => w,
         Err(_) => return,
@@ -262,7 +278,6 @@ fn handle_conn(stream: TcpStream, queue: Sender<Pending>, metrics_text: Arc<Mute
             }
         }
     }
-    log::debug!("connection closed: {peer:?}");
 }
 
 /// Blocking client for the line protocol (used by examples and tests).

@@ -19,6 +19,20 @@ pub enum Response {
     Error(String),
 }
 
+impl Command {
+    /// Render the canonical wire form; `parse_request(cmd.render())`
+    /// returns `cmd` for every valid command (f64 `Display` is
+    /// shortest-round-trip, so the floats survive exactly — pinned by
+    /// `tests/protocol_fuzz.rs`).
+    pub fn render(&self) -> String {
+        match self {
+            Command::Gen { deadline_s, eta } => format!("GEN {deadline_s} {eta}"),
+            Command::Stats => "STATS".to_string(),
+            Command::Quit => "QUIT".to_string(),
+        }
+    }
+}
+
 /// Parse one request line.
 pub fn parse_request(line: &str) -> Result<Command, String> {
     let mut parts = line.split_whitespace();
@@ -110,6 +124,15 @@ mod tests {
         assert_eq!(parse_request("QUIT").unwrap(), Command::Quit);
         assert!(parse_request("NOPE").is_err());
         assert!(parse_request("").is_err());
+    }
+
+    #[test]
+    fn command_render_roundtrip() {
+        for cmd in
+            [Command::Gen { deadline_s: 10.25, eta: 7.5 }, Command::Stats, Command::Quit]
+        {
+            assert_eq!(parse_request(&cmd.render()).unwrap(), cmd);
+        }
     }
 
     #[test]

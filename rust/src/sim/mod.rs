@@ -3,8 +3,12 @@
 //! Section II, producing the per-service end-to-end outcomes behind
 //! Figs. 2a–2c.
 
+pub mod dynamic;
 pub mod joint;
 
+pub use dynamic::{
+    simulate_dynamic, Disposition, DynamicConfig, DynamicReport, EpochRecord, RequestOutcome,
+};
 pub use joint::{solve_joint, JointSolution};
 
 use crate::delay::BatchDelayModel;

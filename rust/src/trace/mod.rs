@@ -3,6 +3,10 @@
 //! A [`Workload`] is K devices, each with a deadline τ_k and a downlink
 //! [`Link`]; generators are seeded so every experiment replays exactly.
 
+pub mod arrival;
+
+pub use arrival::{Arrival, ArrivalTrace};
+
 use crate::channel::{ChannelGenerator, Link};
 use crate::config::ScenarioConfig;
 use crate::util::Pcg64;

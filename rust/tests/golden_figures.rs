@@ -1,0 +1,195 @@
+//! Golden regression tests: seeded figure rows pinned to JSON fixtures
+//! under `tests/fixtures/`, so scheduler/allocator refactors cannot
+//! silently shift the paper's results.
+//!
+//! Two fixture classes:
+//!
+//! * **Committed, machine-independent** (`workload_seed7.json`,
+//!   `models_paper.json`): produced by the independent Python port in
+//!   `tools/gen_golden_fixtures.py` (exact u64/IEEE arithmetic, PCG
+//!   port verified against the canonical reference vector). These must
+//!   exist and match tightly.
+//! * **Bless-on-first-run** (`golden_fig2*.json`, `golden_fig3.json`):
+//!   full-pipeline rows (PSO ∘ STACKING, dynamic sweep). On a machine
+//!   where the fixture is absent the test writes it and passes with a
+//!   notice — commit the generated file to pin the numbers. Set
+//!   `GOLDEN_BLESS=1` to intentionally regenerate after a behaviour
+//!   change. Comparison tolerance absorbs libm (`powf`) differences
+//!   across platforms.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+use aigc_edge::config::ExperimentConfig;
+use aigc_edge::delay::BatchDelayModel;
+use aigc_edge::quality::{PowerLawQuality, QualityModel};
+use aigc_edge::trace::generate;
+use aigc_edge::util::json::{parse, Json};
+
+fn fixture_path(name: &str) -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures").join(name)
+}
+
+fn load_fixture(name: &str) -> Json {
+    let path = fixture_path(name);
+    let text = std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("committed fixture {path:?} missing: {e}"));
+    parse(&text).unwrap_or_else(|e| panic!("fixture {path:?} unparseable: {e}"))
+}
+
+// ---------------------------------------------------------------------------
+// committed fixtures
+// ---------------------------------------------------------------------------
+
+#[test]
+fn golden_workload_seed7_matches_python_port() {
+    let fixture = load_fixture("workload_seed7.json");
+    let cfg = ExperimentConfig::paper();
+    let workload = generate(&cfg.scenario, 7);
+    let devices = fixture.get("devices").and_then(Json::as_arr).expect("devices array");
+    assert_eq!(devices.len(), workload.k(), "device count");
+    for (expect, got) in devices.iter().zip(&workload.devices) {
+        let id = expect.get("id").and_then(Json::as_f64).unwrap() as usize;
+        let deadline = expect.get("deadline").and_then(Json::as_f64).unwrap();
+        let eta = expect.get("eta").and_then(Json::as_f64).unwrap();
+        assert_eq!(got.id, id);
+        // identical op-for-op IEEE arithmetic: equality up to printing
+        assert!(
+            (got.deadline - deadline).abs() < 1e-12,
+            "device {id}: deadline {} != {deadline}",
+            got.deadline
+        );
+        assert!(
+            (got.link.spectral_efficiency - eta).abs() < 1e-12,
+            "device {id}: eta {} != {eta}",
+            got.link.spectral_efficiency
+        );
+    }
+}
+
+#[test]
+fn golden_paper_models_match_python_port() {
+    let fixture = load_fixture("models_paper.json");
+    let delay = BatchDelayModel::paper();
+    let quality = PowerLawQuality::paper();
+    let Some(Json::Obj(gs)) = fixture.get("delay_g").map(Clone::clone) else {
+        panic!("delay_g missing")
+    };
+    for (x, v) in &gs {
+        let x: u32 = x.parse().unwrap();
+        let expect = v.as_f64().unwrap();
+        assert!((delay.g(x) - expect).abs() < 1e-12, "g({x}) = {} != {expect}", delay.g(x));
+    }
+    let Some(Json::Obj(qs)) = fixture.get("quality").map(Clone::clone) else {
+        panic!("quality missing")
+    };
+    for (t, v) in &qs {
+        let t: u32 = t.parse().unwrap();
+        let expect = v.as_f64().unwrap();
+        let got = quality.quality(t);
+        // powf goes through libm: allow an ulp-scale relative slack
+        assert!(
+            (got - expect).abs() <= 1e-9 * expect.abs().max(1.0),
+            "q({t}) = {got} != {expect}"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// bless-on-first-run fixtures (full pipeline)
+// ---------------------------------------------------------------------------
+
+/// Compare `rows` against the named fixture, or bless it when absent
+/// (or when `GOLDEN_BLESS=1`). Keys must match exactly; values within
+/// `abs + rel·|expected|`.
+fn check_or_bless(name: &str, rows: &BTreeMap<String, f64>, abs: f64, rel: f64) {
+    let path = fixture_path(name);
+    let bless = std::env::var("GOLDEN_BLESS").is_ok() || !path.exists();
+    if bless {
+        let mut out = String::from("{\n");
+        let entries: Vec<String> =
+            rows.iter().map(|(k, v)| format!("  \"{k}\": {v:?}")).collect();
+        out.push_str(&entries.join(",\n"));
+        out.push_str("\n}\n");
+        std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+        std::fs::write(&path, out).unwrap();
+        eprintln!("golden: blessed {path:?} with {} entries — commit this file", rows.len());
+        return;
+    }
+    let fixture = load_fixture(name);
+    let Json::Obj(map) = &fixture else { panic!("{name}: fixture must be an object") };
+    let expected_keys: Vec<&String> = map.keys().collect();
+    let got_keys: Vec<&String> = rows.keys().collect();
+    assert_eq!(expected_keys, got_keys, "{name}: key set drifted");
+    for (k, v) in rows {
+        let expect = map[k].as_f64().unwrap_or_else(|| panic!("{name}: {k} not a number"));
+        let tol = abs + rel * expect.abs();
+        assert!(
+            (v - expect).abs() <= tol,
+            "{name}: {k} = {v} drifted from golden {expect} (tol {tol})"
+        );
+    }
+}
+
+fn quick_cfg() -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::paper();
+    cfg.pso.particles = 6;
+    cfg.pso.iterations = 6;
+    cfg.pso.patience = 3;
+    cfg
+}
+
+#[test]
+fn golden_fig2a_rows() {
+    let rows = aigc_edge::bench::fig2a(&quick_cfg());
+    let mut flat = BTreeMap::new();
+    for (id, deadline, gen, tx, e2e, steps) in rows {
+        flat.insert(format!("svc{id:02}.deadline"), deadline);
+        flat.insert(format!("svc{id:02}.gen"), gen);
+        flat.insert(format!("svc{id:02}.tx"), tx);
+        flat.insert(format!("svc{id:02}.e2e"), e2e);
+        flat.insert(format!("svc{id:02}.steps"), steps as f64);
+    }
+    check_or_bless("golden_fig2a.json", &flat, 5e-3, 2e-3);
+}
+
+#[test]
+fn golden_fig2b_rows() {
+    let rows = aigc_edge::bench::fig2b(&quick_cfg(), &[5, 20, 35], 1);
+    let mut flat = BTreeMap::new();
+    for (k, vals) in rows {
+        for (i, v) in vals.iter().enumerate() {
+            flat.insert(format!("k{k:02}.scheme{i}"), *v);
+        }
+    }
+    check_or_bless("golden_fig2b.json", &flat, 5e-3, 2e-3);
+}
+
+#[test]
+fn golden_fig2c_rows() {
+    let rows = aigc_edge::bench::fig2c(&quick_cfg(), &[3.0, 11.0, 19.0], 1);
+    let mut flat = BTreeMap::new();
+    for (tau, vals) in rows {
+        for (i, v) in vals.iter().enumerate() {
+            flat.insert(format!("tau{tau:04.1}.scheme{i}"), *v);
+        }
+    }
+    check_or_bless("golden_fig2c.json", &flat, 5e-3, 2e-3);
+}
+
+#[test]
+fn golden_fig3_dynamic_sweep() {
+    let rows = aigc_edge::bench::fig3_dynamic(&ExperimentConfig::paper(), &[1.0, 4.0], 40.0);
+    let mut flat = BTreeMap::new();
+    for r in rows {
+        let tag = format!("lambda{:04.1}", r.lambda_hz);
+        flat.insert(format!("{tag}.requests"), r.requests as f64);
+        flat.insert(format!("{tag}.served"), r.served as f64);
+        flat.insert(format!("{tag}.mean_quality"), r.mean_quality);
+        flat.insert(format!("{tag}.outage_rate"), r.outage_rate);
+        flat.insert(format!("{tag}.p99_e2e"), r.p99_e2e_s);
+        flat.insert(format!("{tag}.mean_wait"), r.mean_wait_s);
+        flat.insert(format!("{tag}.epochs"), r.epochs as f64);
+    }
+    check_or_bless("golden_fig3.json", &flat, 5e-3, 2e-3);
+}

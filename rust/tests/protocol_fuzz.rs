@@ -1,0 +1,141 @@
+//! Round-trip and fuzz properties for the TCP wire protocol
+//! (`server::protocol`): `parse_request ∘ render` is the identity on
+//! valid commands, and no byte salad can panic the parser — malformed
+//! lines always map to an `ERR`/`Error(_)` response.
+
+use aigc_edge::prop_assert;
+use aigc_edge::server::protocol::{parse_request, Command, Response};
+use aigc_edge::util::prop::{forall, Gen};
+
+/// Positive, finite, parseable f64s of many magnitudes.
+fn positive_f64(g: &mut Gen) -> f64 {
+    let exp = g.f64_in(-6.0, 6.0);
+    let mantissa = g.f64_in(0.1, 10.0);
+    mantissa * 10f64.powf(exp)
+}
+
+#[test]
+fn parse_render_identity_on_valid_commands() {
+    forall("parse ∘ render == id (GEN)", 400, |g| {
+        let cmd = Command::Gen { deadline_s: positive_f64(g), eta: positive_f64(g) };
+        let parsed = parse_request(&cmd.render());
+        prop_assert!(g, parsed == Ok(cmd.clone()), "{:?} -> {:?}", cmd.render(), parsed);
+        true
+    });
+    assert_eq!(parse_request(&Command::Stats.render()), Ok(Command::Stats));
+    assert_eq!(parse_request(&Command::Quit.render()), Ok(Command::Quit));
+}
+
+#[test]
+fn response_render_parse_identity() {
+    forall("Response round-trip", 300, |g| {
+        let resp = Response::Done {
+            steps: g.usize_in(1, 1000) as u32,
+            gen_ms: positive_f64(g),
+            tx_ms: positive_f64(g),
+            quality: positive_f64(g),
+        };
+        let parsed = Response::parse(&resp.render());
+        // Done renders with fixed precision, so compare within it.
+        match (parsed, resp) {
+            (
+                Ok(Response::Done { steps: s2, gen_ms: g2, tx_ms: t2, quality: q2 }),
+                Response::Done { steps, gen_ms, tx_ms, quality },
+            ) => {
+                prop_assert!(g, s2 == steps, "steps {s2} != {steps}");
+                prop_assert!(g, (g2 - gen_ms).abs() <= 1e-3 + gen_ms * 1e-9, "gen {g2} vs {gen_ms}");
+                prop_assert!(g, (t2 - tx_ms).abs() <= 1e-3 + tx_ms * 1e-9, "tx {t2} vs {tx_ms}");
+                prop_assert!(g, (q2 - quality).abs() <= 1e-4 + quality * 1e-9, "q {q2} vs {quality}");
+            }
+            (other, resp) => prop_assert!(g, false, "{resp:?} -> {other:?}"),
+        }
+        true
+    });
+    assert_eq!(Response::parse(&Response::Outage.render()), Ok(Response::Outage));
+    assert_eq!(
+        Response::parse(&Response::Error("boom with spaces".into()).render()),
+        Ok(Response::Error("boom with spaces".into()))
+    );
+}
+
+/// Arbitrary line content: printable ASCII, unicode (incl. multibyte
+/// whitespace), embedded separators, near-miss keywords.
+fn fuzz_line(g: &mut Gen) -> String {
+    let alphabet: &[&str] = &[
+        "GEN", "GE", "GENX", "STATS", "QUIT", "DONE", "OUTAGE", "ERR", "-1", "0", "1.5",
+        "nan", "NaN", "inf", "-inf", "1e309", "5", "6.5", " ", "\t", "\u{a0}", "\u{2003}",
+        "日本", "é", "--", ",", "..", "7..2", "+3", "0x10", "", "\u{0}",
+    ];
+    let parts = g.usize_in(0, 8);
+    let mut line = String::new();
+    for _ in 0..parts {
+        line.push_str(g.pick(alphabet));
+        if g.bool() {
+            line.push(' ');
+        }
+    }
+    line
+}
+
+#[test]
+fn fuzzed_lines_never_panic_and_malformed_maps_to_error() {
+    forall("parse_request never panics", 600, |g| {
+        let line = fuzz_line(g);
+        match parse_request(&line) {
+            Ok(cmd) => {
+                // Anything accepted must round-trip to itself.
+                let again = parse_request(&cmd.render());
+                prop_assert!(g, again == Ok(cmd.clone()), "{line:?} -> {cmd:?} -> {again:?}");
+            }
+            Err(msg) => {
+                // The server's reply for a malformed line is an ERR
+                // response; it must render and stay an Error on parse.
+                let rendered = Response::Error(msg.clone()).render();
+                prop_assert!(g, rendered.starts_with("ERR"), "{rendered:?}");
+                let back = Response::parse(&rendered);
+                prop_assert!(
+                    g,
+                    matches!(back, Ok(Response::Error(_))),
+                    "{line:?}: {back:?}"
+                );
+            }
+        }
+        true
+    });
+}
+
+#[test]
+fn fuzzed_response_lines_never_panic() {
+    forall("Response::parse never panics", 600, |g| {
+        let line = fuzz_line(g);
+        // Any outcome is fine — absence of panics and of misparsed
+        // `Done` with non-finite fields is the property.
+        if let Ok(Response::Done { gen_ms, tx_ms, quality, .. }) = Response::parse(&line) {
+            prop_assert!(
+                g,
+                !gen_ms.is_nan() || line.to_lowercase().contains("nan"),
+                "NaN from {line:?}: {gen_ms}"
+            );
+            let _ = (tx_ms, quality);
+        }
+        true
+    });
+}
+
+#[test]
+fn gen_rejects_nonpositive_and_nonfinite() {
+    for bad in [
+        "GEN 0 5",
+        "GEN 5 0",
+        "GEN -1 5",
+        "GEN 5 -2",
+        "GEN nan 5",
+        "GEN 5 nan",
+    ] {
+        assert!(parse_request(bad).is_err(), "accepted {bad:?}");
+    }
+    // inf parses as f64 but violates nothing numeric downstream guards
+    // against except positivity — it is > 0, so it is accepted today;
+    // pin that so a future change is a conscious one.
+    assert!(parse_request("GEN inf 5").is_ok());
+}

@@ -1,0 +1,185 @@
+//! Property suite for the (P2) schedulers: every scheduler must emit
+//! constraint-clean schedules (Eqs. 2, 6, 7, 14 — machine-checked by
+//! `scheduler::validate`) over randomized workloads, and STACKING must
+//! dominate the baselines instance-by-instance.
+//!
+//! Workloads are drawn wider than the paper's Section-IV regime
+//! (including infeasible budgets ≤ 0 and knife-edge budgets near g(1))
+//! so the invariants hold off the happy path too.
+
+use aigc_edge::delay::BatchDelayModel;
+use aigc_edge::prop_assert;
+use aigc_edge::quality::PowerLawQuality;
+use aigc_edge::scheduler::{
+    all_schedulers, validate_schedule, BatchScheduler, FixedSizeBatching, GreedyBatching,
+    Service, SingleInstance, Stacking,
+};
+use aigc_edge::util::prop::{forall, Gen};
+
+fn random_services(g: &mut Gen) -> Vec<Service> {
+    let k = g.usize_in(1, 24);
+    (0..k)
+        .map(|i| {
+            // Mix regimes: infeasible, knife-edge around g(1)/g(2),
+            // and comfortable paper-like budgets.
+            let budget = match g.usize_in(0, 9) {
+                0 => g.f64_in(-2.0, 0.1),
+                1 | 2 => g.f64_in(0.3, 0.9),
+                _ => g.f64_in(1.0, 20.0),
+            };
+            Service::new(i, budget)
+        })
+        .collect()
+}
+
+fn random_delay(g: &mut Gen) -> BatchDelayModel {
+    BatchDelayModel::new(g.f64_in(0.005, 0.2), g.f64_in(0.05, 1.0))
+}
+
+/// Each scheduler × ≥200 random workloads: the schedule must satisfy
+/// the full constraint system.
+#[test]
+fn stacking_always_emits_valid_schedules() {
+    scheduler_validity(&Stacking::default(), "stacking");
+}
+
+#[test]
+fn greedy_always_emits_valid_schedules() {
+    scheduler_validity(&GreedyBatching, "greedy");
+}
+
+#[test]
+fn fixed_size_always_emits_valid_schedules() {
+    scheduler_validity(&FixedSizeBatching::default(), "fixed-size");
+}
+
+#[test]
+fn single_instance_always_emits_valid_schedules() {
+    scheduler_validity(&SingleInstance::default(), "single-instance");
+}
+
+fn scheduler_validity(scheduler: &dyn BatchScheduler, tag: &str) {
+    let quality = PowerLawQuality::paper();
+    forall(&format!("{tag} emits constraint-clean schedules"), 220, |g| {
+        let services = random_services(g);
+        let delay = random_delay(g);
+        let schedule = scheduler.schedule(&services, &delay, &quality);
+        prop_assert!(
+            g,
+            schedule.steps.len() == services.len(),
+            "{tag}: steps arity {} vs {}",
+            schedule.steps.len(),
+            services.len()
+        );
+        prop_assert!(
+            g,
+            schedule.completion.len() == services.len(),
+            "{tag}: completion arity mismatch"
+        );
+        let verdict = validate_schedule(&schedule, &services, &delay);
+        prop_assert!(
+            g,
+            verdict.is_ok(),
+            "{tag}: {:?}\n  services={services:?}\n  delay={delay:?}",
+            verdict
+        );
+        // Infeasible services must be outages, never phantom steps.
+        for (svc, &steps) in services.iter().zip(&schedule.steps) {
+            if svc.gen_budget < delay.g(1) {
+                prop_assert!(
+                    g,
+                    steps == 0,
+                    "{tag}: service {} got {steps} steps on budget {}",
+                    svc.id,
+                    svc.gen_budget
+                );
+            }
+        }
+        true
+    });
+}
+
+/// STACKING's mean quality is at least as good as SingleInstance's on
+/// *every* sampled instance (lower FID = better; the dominance guard in
+/// `Stacking::schedule` makes this exact, not statistical).
+#[test]
+fn stacking_dominates_single_instance_everywhere() {
+    let quality = PowerLawQuality::paper();
+    forall("stacking <= single-instance", 250, |g| {
+        let services = random_services(g);
+        let delay = random_delay(g);
+        let st =
+            Stacking::default().schedule(&services, &delay, &quality).mean_quality(&quality);
+        let si = SingleInstance::default()
+            .schedule(&services, &delay, &quality)
+            .mean_quality(&quality);
+        prop_assert!(g, st <= si + 1e-9, "stacking {st} > single {si}\n  {services:?}");
+        true
+    });
+}
+
+/// Same instance-wise dominance over greedy and fixed-size batching.
+#[test]
+fn stacking_dominates_naive_batching_everywhere() {
+    let quality = PowerLawQuality::paper();
+    forall("stacking <= greedy", 250, |g| {
+        let services = random_services(g);
+        let delay = random_delay(g);
+        let st =
+            Stacking::default().schedule(&services, &delay, &quality).mean_quality(&quality);
+        let gr = GreedyBatching.schedule(&services, &delay, &quality).mean_quality(&quality);
+        prop_assert!(g, st <= gr + 1e-9, "stacking {st} > greedy {gr}\n  {services:?}");
+        true
+    });
+}
+
+/// Schedulers are pure functions of their inputs: same workload, same
+/// schedule (bit-identical) — the invariant every golden fixture and
+/// replayable simulation rests on.
+#[test]
+fn schedulers_are_deterministic() {
+    let quality = PowerLawQuality::paper();
+    forall("schedulers deterministic", 60, |g| {
+        let services = random_services(g);
+        let delay = random_delay(g);
+        for sched in all_schedulers() {
+            let a = sched.schedule(&services, &delay, &quality);
+            let b = sched.schedule(&services, &delay, &quality);
+            prop_assert!(g, a == b, "{} differs across runs", sched.name());
+        }
+        true
+    });
+}
+
+/// Mean quality can never beat the best possible step count allowed by
+/// the budget (floor(budget / g(1)) steps, each run alone) — a sanity
+/// bound no scheduler may violate.
+#[test]
+fn no_scheduler_beats_the_singleton_bound() {
+    let quality = PowerLawQuality::paper();
+    forall("per-service singleton upper bound", 120, |g| {
+        let services = random_services(g);
+        let delay = random_delay(g);
+        for sched in all_schedulers() {
+            let schedule = sched.schedule(&services, &delay, &quality);
+            for (svc, &steps) in services.iter().zip(&schedule.steps) {
+                // small epsilon absorbs float accumulation at exact
+                // budget/g(1) boundaries
+                let bound = if svc.gen_budget <= 0.0 {
+                    0
+                } else {
+                    (svc.gen_budget / delay.g(1) + 1e-6).floor() as u32
+                };
+                prop_assert!(
+                    g,
+                    steps <= bound.max(0),
+                    "{}: service {} did {steps} steps, singleton bound {bound} (budget {})",
+                    sched.name(),
+                    svc.id,
+                    svc.gen_budget
+                );
+            }
+        }
+        true
+    });
+}

@@ -1,0 +1,107 @@
+#!/usr/bin/env python3
+"""Generate the *committed* golden fixtures under rust/tests/fixtures/.
+
+This is an exact, independent port of the deterministic pieces of the
+Rust crate (util::rng::Pcg64, channel::ChannelGenerator,
+trace::generate, delay::BatchDelayModel, quality::PowerLawQuality).
+All arithmetic is IEEE-754 double / wrapping u64, identical op-for-op
+to the Rust side, so the fixtures pin the Rust implementation without
+needing a Rust toolchain to produce them.
+
+Run from the repo root:  python tools/gen_golden_fixtures.py
+"""
+
+import json
+import os
+
+MASK64 = (1 << 64) - 1
+MASK32 = (1 << 32) - 1
+PCG_MULT = 6364136223846793005
+
+
+class Pcg64:
+    """Port of rust/src/util/rng.rs (PCG-XSH-RR 64/32)."""
+
+    def __init__(self, seed, stream):
+        self.state = 0
+        self.inc = ((stream << 1) | 1) & MASK64
+        self.next_u32()
+        self.state = (self.state + seed) & MASK64
+        self.next_u32()
+
+    @classmethod
+    def seeded(cls, seed):
+        return cls(seed, 0xDA3E39CB94B95BDB)
+
+    def next_u32(self):
+        old = self.state
+        self.state = (old * PCG_MULT + self.inc) & MASK64
+        xorshifted = (((old >> 18) ^ old) >> 27) & MASK32
+        rot = (old >> 59) & 31
+        return ((xorshifted >> rot) | (xorshifted << (32 - rot) & MASK32)) & MASK32
+
+    def next_u64(self):
+        hi = self.next_u32()
+        lo = self.next_u32()
+        return ((hi << 32) | lo) & MASK64
+
+    def uniform(self):
+        # (next_u64 >> 11) * 2^-53 — both factors exact in binary64
+        return (self.next_u64() >> 11) * (1.0 / (1 << 53))
+
+    def uniform_in(self, lo, hi):
+        return lo + (hi - lo) * self.uniform()
+
+
+def generate_workload(seed, num_services=20, deadline_lo=7.0, deadline_hi=20.0,
+                      eta_lo=5.0, eta_hi=10.0):
+    """Port of trace::generate with the paper scenario."""
+    rng = Pcg64(seed, 0x7ACE)
+    channel_seed = rng.next_u64()
+    channels = Pcg64(channel_seed, 0xC4A17)
+    devices = []
+    for dev_id in range(num_services):
+        deadline = rng.uniform_in(deadline_lo, deadline_hi)
+        eta = channels.uniform_in(eta_lo, eta_hi)
+        devices.append({"id": dev_id, "deadline": deadline, "eta": eta})
+    return devices
+
+
+def delay_g(x, a=0.0240, b=0.3543):
+    return 0.0 if x == 0 else a * x + b
+
+
+def quality_q(t, c=293.0, d=1.1, e=13.0, outage_factor=1.5):
+    if t == 0:
+        return outage_factor * (c + e)
+    return c * t ** (-d) + e
+
+
+def main():
+    out_dir = os.path.join(os.path.dirname(__file__), "..", "rust", "tests", "fixtures")
+    os.makedirs(out_dir, exist_ok=True)
+
+    fixtures = {
+        "workload_seed7.json": {
+            "description": "trace::generate(paper scenario, seed 7) — pins the PCG64 "
+                           "stream and the Section-IV distributions",
+            "seed": 7,
+            "devices": generate_workload(7),
+        },
+        "models_paper.json": {
+            "description": "BatchDelayModel::paper().g(X) and PowerLawQuality::paper()"
+                           ".quality(T) at reference points",
+            "delay_g": {str(x): delay_g(x) for x in [1, 2, 4, 8, 16, 20, 32]},
+            "quality": {str(t): quality_q(t) for t in [0, 1, 2, 4, 8, 16, 32, 50, 100]},
+        },
+    }
+    for name, payload in fixtures.items():
+        path = os.path.join(out_dir, name)
+        with open(path, "w") as f:
+            json.dump(payload, f, indent=1, sort_keys=True)
+            f.write("\n")
+        print(f"wrote {path}")
+
+
+if __name__ == "__main__":
+    main()

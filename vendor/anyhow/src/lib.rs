@@ -1,0 +1,212 @@
+//! Minimal offline-compatible subset of the `anyhow` error-handling
+//! crate, matching upstream semantics for the surface this workspace
+//! uses:
+//!
+//! * [`Error`] — an opaque error carrying a chain of context messages.
+//!   `{}` displays the outermost message, `{:#}` the whole chain joined
+//!   with `": "` (upstream's alternate format), and `{:?}` a
+//!   `Caused by:` listing.
+//! * [`Result<T>`] — alias with `Error` as the default error type.
+//! * [`Context`] — `.context(..)` / `.with_context(..)` on `Result`
+//!   (any error convertible into [`Error`], including `Error` itself)
+//!   and on `Option`.
+//! * [`anyhow!`] and [`bail!`] macros.
+//!
+//! `From<E: std::error::Error + Send + Sync + 'static>` powers `?`
+//! conversions; as in upstream, `Error` itself deliberately does not
+//! implement `std::error::Error` so that blanket impl stays coherent.
+
+use std::fmt;
+
+/// An error wrapping a chain of messages, outermost first.
+pub struct Error {
+    /// `chain[0]` is the most recent context; the root cause is last.
+    chain: Vec<String>,
+}
+
+/// `Result` with [`Error`] as the default error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    /// Construct from a single message.
+    pub fn new(msg: String) -> Self {
+        Self { chain: vec![msg] }
+    }
+
+    /// Construct from anything displayable (upstream's `Error::msg`).
+    pub fn msg<M: fmt::Display>(msg: M) -> Self {
+        Self::new(msg.to_string())
+    }
+
+    /// Prepend a context message (what `.context(..)` does).
+    pub fn wrap(mut self, msg: String) -> Self {
+        self.chain.insert(0, msg);
+        self
+    }
+
+    /// The outermost message.
+    pub fn to_string_outer(&self) -> &str {
+        &self.chain[0]
+    }
+
+    /// The root cause (innermost message).
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().map(String::as_str).unwrap_or("")
+    }
+
+    /// All messages, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(String::as_str)
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{:#}`: the full chain joined with ": " (upstream format).
+            f.write_str(&self.chain.join(": "))
+        } else {
+            f.write_str(&self.chain[0])
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain[0])?;
+        if self.chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for (i, msg) in self.chain[1..].iter().enumerate() {
+                write!(f, "\n    {i}: {msg}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Self {
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Self { chain }
+    }
+}
+
+/// Attach context to errors, mirroring `anyhow::Context`.
+pub trait Context<T>: Sized {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| e.into().wrap(context.to_string()))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().wrap(f().to_string()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::new(context.to_string()))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::new(f().to_string()))
+    }
+}
+
+/// Build an [`Error`] from a format string or any displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::new(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::new(format!($fmt, $($arg)*))
+    };
+}
+
+/// Early-return with an [`Error`] built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return Err($crate::anyhow!($($t)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "file missing")
+    }
+
+    #[test]
+    fn display_and_alternate_chain() {
+        let e: Error = Err::<(), _>(io_err())
+            .context("reading manifest")
+            .unwrap_err()
+            .wrap("loading artifacts".into());
+        assert_eq!(e.to_string(), "loading artifacts");
+        let full = format!("{e:#}");
+        assert!(full.contains("loading artifacts: reading manifest: file missing"), "{full}");
+    }
+
+    #[test]
+    fn question_mark_converts() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        assert!(inner().unwrap_err().to_string().contains("file missing"));
+    }
+
+    #[test]
+    fn context_on_option_and_anyhow_result() {
+        let none: Option<u32> = None;
+        let e = none.context("missing value").unwrap_err();
+        assert_eq!(e.to_string(), "missing value");
+        let nested: Result<u32> = Err(anyhow!("root"));
+        let e = nested.with_context(|| format!("outer {}", 1)).unwrap_err();
+        assert_eq!(format!("{e:#}"), "outer 1: root");
+    }
+
+    #[test]
+    fn macros() {
+        fn fails(x: i32) -> Result<i32> {
+            if x < 0 {
+                bail!("negative input {x}");
+            }
+            Ok(x)
+        }
+        assert_eq!(fails(3).unwrap(), 3);
+        assert_eq!(fails(-2).unwrap_err().to_string(), "negative input -2");
+        let from_string = anyhow!(String::from("boom"));
+        assert_eq!(from_string.to_string(), "boom");
+        let formatted = anyhow!("x = {}, y = {}", 1, 2);
+        assert_eq!(formatted.to_string(), "x = 1, y = 2");
+    }
+
+    #[test]
+    fn debug_lists_causes() {
+        let e = Error::new("root".into()).wrap("mid".into()).wrap("outer".into());
+        let dbg = format!("{e:?}");
+        assert!(dbg.starts_with("outer"));
+        assert!(dbg.contains("Caused by:"));
+        assert!(dbg.contains("root"));
+    }
+}
