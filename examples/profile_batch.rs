@@ -9,10 +9,12 @@ use aigc_edge::runtime::ArtifactStore;
 
 fn main() -> anyhow::Result<()> {
     aigc_edge::coordinator::pin_xla_single_threaded();
-    let reps: usize =
-        std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(20);
+    let reps: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(20);
     let store = ArtifactStore::load(&default_artifacts_dir())?;
-    println!("platform: {} (paper measured on an RTX 3050; shapes, not absolutes, transfer)", store.platform());
+    println!(
+        "platform: {} (paper measured on an RTX 3050; shapes, not absolutes, transfer)",
+        store.platform()
+    );
     bench::fig1a(&store, reps);
     Ok(())
 }

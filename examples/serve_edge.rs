@@ -26,7 +26,11 @@ fn main() -> anyhow::Result<()> {
 
     let dir = default_artifacts_dir();
     let store = ArtifactStore::load(&dir)?;
-    println!("platform {} | buckets {:?} | serving {epochs} epochs of K={k}", store.platform(), store.buckets());
+    println!(
+        "platform {} | buckets {:?} | serving {epochs} epochs of K={k}",
+        store.platform(),
+        store.buckets()
+    );
 
     let mut cfg = ExperimentConfig::paper();
     cfg.scenario.num_services = k;

@@ -20,19 +20,26 @@ fn main() {
     // ---- A1: T* search cap ----
     // STACKING's quality as the T* grid is truncated: a tiny grid can't
     // balance step counts; past the feasible maximum extra grid is waste.
-    let mut t1 = TableWriter::new("A1 — STACKING T* search cap", &["t_star_max", "mean FID", "solve ms"])
-        .with_csv("ablation_tstar");
+    let mut t1 =
+        TableWriter::new("A1 — STACKING T* search cap", &["t_star_max", "mean FID", "solve ms"])
+            .with_csv("ablation_tstar");
     let mut prev_q = f64::INFINITY;
     for cap in [1u32, 2, 4, 8, 16, 32, 64] {
-        let sched = Stacking::new(StackingConfig { t_star_max: Some(cap), max_steps: 1000, ..Default::default() });
+        let sched = Stacking::new(StackingConfig {
+            t_star_max: Some(cap),
+            max_steps: 1000,
+            ..Default::default()
+        });
         let mut acc = 0.0;
         let t0 = std::time::Instant::now();
         for seed in 0..reps {
             let w = generate(&cfg.scenario, cfg.seed + seed as u64);
-            acc += solve_joint(&w, &sched, &EqualAllocator, &delay, &quality).outcome.mean_quality();
+            acc +=
+                solve_joint(&w, &sched, &EqualAllocator, &delay, &quality).outcome.mean_quality();
         }
         let q = acc / reps as f64;
-        t1.row(&[cap.to_string(), format!("{q:.3}"), format!("{:.1}", t0.elapsed().as_secs_f64() * 1e3 / reps as f64)]);
+        let ms = t0.elapsed().as_secs_f64() * 1e3 / reps as f64;
+        t1.row(&[cap.to_string(), format!("{q:.3}"), format!("{ms:.1}")]);
         if cap >= 32 {
             assert!(q <= prev_q + 0.5, "larger T* grid should not hurt");
         }
@@ -47,7 +54,12 @@ fn main() {
     )
     .with_csv("ablation_pso");
     for (p, it) in [(4, 6), (8, 12), (16, 24), (24, 40)] {
-        let alloc = PsoAllocator::new(PsoConfig { particles: p, iterations: it, patience: 0, ..Default::default() });
+        let alloc = PsoAllocator::new(PsoConfig {
+            particles: p,
+            iterations: it,
+            patience: 0,
+            ..Default::default()
+        });
         let mut acc = 0.0;
         let mut evals = 0usize;
         for seed in 0..reps {
@@ -66,15 +78,16 @@ fn main() {
     t2.finish();
 
     // ---- A3: fixed batch size sweep (why ⌊K/2⌋ isn't enough) ----
-    let mut t3 =
-        TableWriter::new("A3 — fixed batch size", &["batch", "mean FID"]).with_csv("ablation_fixed_size");
+    let mut t3 = TableWriter::new("A3 — fixed batch size", &["batch", "mean FID"])
+        .with_csv("ablation_fixed_size");
     let mut fixed_results = Vec::new();
     for size in [2u32, 5, 10, 15, 20] {
         let sched = FixedSizeBatching::new(size);
         let mut acc = 0.0;
         for seed in 0..reps {
             let w = generate(&cfg.scenario, cfg.seed + seed as u64);
-            acc += solve_joint(&w, &sched, &EqualAllocator, &delay, &quality).outcome.mean_quality();
+            acc +=
+                solve_joint(&w, &sched, &EqualAllocator, &delay, &quality).outcome.mean_quality();
         }
         fixed_results.push(acc / reps as f64);
         t3.row(&[size.to_string(), format!("{:.3}", acc / reps as f64)]);
@@ -84,8 +97,9 @@ fn main() {
     let mut stacking_acc = 0.0;
     for seed in 0..reps {
         let w = generate(&cfg.scenario, cfg.seed + seed as u64);
-        stacking_acc +=
-            solve_joint(&w, &Stacking::default(), &EqualAllocator, &delay, &quality).outcome.mean_quality();
+        stacking_acc += solve_joint(&w, &Stacking::default(), &EqualAllocator, &delay, &quality)
+            .outcome
+            .mean_quality();
     }
     let stacking_q = stacking_acc / reps as f64;
     println!("STACKING (same allocator): {stacking_q:.3}");
@@ -107,7 +121,9 @@ fn main() {
         let mut gq = 0.0;
         for seed in 0..reps {
             let w = generate(&cfg.scenario, cfg.seed + seed as u64);
-            sq += solve_joint(&w, &Stacking::default(), &EqualAllocator, &d, &quality).outcome.mean_quality();
+            sq += solve_joint(&w, &Stacking::default(), &EqualAllocator, &d, &quality)
+                .outcome
+                .mean_quality();
             gq += solve_joint(
                 &w,
                 &aigc_edge::scheduler::SingleInstance::default(),

@@ -91,8 +91,7 @@ impl Allocator for ProportionalAllocator {
         problem: &AllocationProblem,
         _objective: &mut dyn FnMut(&[f64]) -> f64,
     ) -> Vec<f64> {
-        let weights: Vec<f64> =
-            problem.links.iter().map(|l| 1.0 / l.spectral_efficiency).collect();
+        let weights: Vec<f64> = problem.links.iter().map(|l| 1.0 / l.spectral_efficiency).collect();
         let total_w: f64 = weights.iter().sum();
         weights.iter().map(|w| problem.total_hz * w / total_w).collect()
     }

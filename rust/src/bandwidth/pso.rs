@@ -8,6 +8,8 @@
 //! are ablated in `benches/ablations.rs`.
 
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
 
 use crate::util::Pcg64;
 
@@ -61,6 +63,18 @@ pub struct PsoConfig {
     /// than the grid almost always schedule identically — so late-stage
     /// converged swarms stop paying for re-evaluations. 0 disables.
     pub cache_quantum_hz: f64,
+    /// Warm-start the swarm from the previous `allocate` call on this
+    /// allocator: one particle is seeded with the last global-best
+    /// allocation shape (stored as band fractions, re-projected for the
+    /// new device count). Off by default — warm starting makes
+    /// `allocate` stateful across calls, so replaying a run
+    /// bit-identically requires a fresh (or [`PsoAllocator::reset`])
+    /// allocator, and sharing one instance across simulations (e.g.
+    /// every server of `sim::cluster`) carries swarm state between
+    /// them. The equal-split particle 0 is kept either way, so
+    /// per-solve dominance over [`super::EqualAllocator`] is unaffected
+    /// (exercised under dynamics by `tests/pso_dynamics.rs`).
+    pub warm_start: bool,
 }
 
 impl Default for PsoConfig {
@@ -74,19 +88,71 @@ impl Default for PsoConfig {
             seed: 0x9e3779b9,
             patience: 12,
             cache_quantum_hz: 0.0, // measured: <1% hit rate on converging swarms — off
+            warm_start: false,
         }
     }
 }
 
 /// The PSO bandwidth allocator.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug)]
 pub struct PsoAllocator {
     pub config: PsoConfig,
+    /// Last global-best allocation as fractions of the total band
+    /// (`warm_start` only).
+    warm: Mutex<Option<Vec<f64>>>,
+    /// How many `allocate` calls actually seeded a warm particle.
+    warm_uses: AtomicUsize,
+}
+
+impl Default for PsoAllocator {
+    fn default() -> Self {
+        Self::new(PsoConfig::default())
+    }
+}
+
+impl Clone for PsoAllocator {
+    fn clone(&self) -> Self {
+        Self {
+            config: self.config,
+            warm: Mutex::new(self.warm.lock().unwrap().clone()),
+            warm_uses: AtomicUsize::new(self.warm_uses.load(Ordering::Relaxed)),
+        }
+    }
 }
 
 impl PsoAllocator {
     pub fn new(config: PsoConfig) -> Self {
-        Self { config }
+        Self { config, warm: Mutex::new(None), warm_uses: AtomicUsize::new(0) }
+    }
+
+    /// Number of solves that seeded a particle from the previous epoch.
+    pub fn warm_starts(&self) -> usize {
+        self.warm_uses.load(Ordering::Relaxed)
+    }
+
+    /// Forget the carried swarm state (start the next `allocate` cold).
+    pub fn reset(&self) {
+        *self.warm.lock().unwrap() = None;
+        self.warm_uses.store(0, Ordering::Relaxed);
+    }
+
+    /// Adapt stored band fractions to a (possibly different) device
+    /// count: truncate or pad with the mean fraction, renormalize, and
+    /// scale to the new total. Device identities do not persist across
+    /// epochs — the carried signal is the *shape* of the allocation
+    /// (how uneven the band split was), which is what the next swarm
+    /// iteration refines.
+    fn warm_position(fractions: &[f64], k: usize, total: f64) -> Vec<f64> {
+        debug_assert!(!fractions.is_empty());
+        let mean = fractions.iter().sum::<f64>() / fractions.len() as f64;
+        let mut pos: Vec<f64> = (0..k).map(|i| fractions.get(i).copied().unwrap_or(mean)).collect();
+        let sum: f64 = pos.iter().sum();
+        if sum > 0.0 {
+            for v in pos.iter_mut() {
+                *v *= total / sum;
+            }
+        }
+        pos
     }
 }
 
@@ -114,6 +180,18 @@ impl Allocator for PsoAllocator {
         let mut rng = Pcg64::new(cfg.seed, 0x50_50);
         let mut cache = ObjectiveCache::new(cfg.cache_quantum_hz);
 
+        // Warm start (off by default): particle 1 resumes from the last
+        // solve's global best, adapted to this problem's device count.
+        let warm_pos: Option<Vec<f64>> = if cfg.warm_start && cfg.particles >= 2 {
+            let stored = self.warm.lock().unwrap();
+            stored.as_ref().map(|fractions| Self::warm_position(fractions, k, total))
+        } else {
+            None
+        };
+        if warm_pos.is_some() {
+            self.warm_uses.fetch_add(1, Ordering::Relaxed);
+        }
+
         // ---- initialize swarm ----
         // Particle 0 starts at the equal split (a strong prior: it is the
         // paper's baseline), the rest at random simplex points.
@@ -123,6 +201,8 @@ impl Allocator for PsoAllocator {
         for p in 0..cfg.particles.max(1) {
             let mut pos = if p == 0 {
                 vec![total / k as f64; k]
+            } else if p == 1 && warm_pos.is_some() {
+                warm_pos.clone().unwrap()
             } else {
                 // exponential draws normalized → uniform on the simplex
                 let raw: Vec<f64> = (0..k).map(|_| rng.exponential(1.0)).collect();
@@ -174,6 +254,10 @@ impl Allocator for PsoAllocator {
                     break;
                 }
             }
+        }
+        if cfg.warm_start {
+            let fractions: Vec<f64> = global_best_pos.iter().map(|&b| b / total).collect();
+            *self.warm.lock().unwrap() = Some(fractions);
         }
         global_best_pos
     }
@@ -248,6 +332,63 @@ mod tests {
         let a = PsoAllocator::default().allocate(&p, &mut obj);
         let b = PsoAllocator::default().allocate(&p, &mut obj);
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn warm_start_off_keeps_allocate_stateless() {
+        let p = problem(5);
+        let alloc = PsoAllocator::default();
+        let mut obj = |b: &[f64]| b.iter().map(|x| x * x).sum::<f64>();
+        let a = alloc.allocate(&p, &mut obj);
+        let b = alloc.allocate(&p, &mut obj);
+        assert_eq!(a, b, "without warm_start repeated solves must be identical");
+        assert_eq!(alloc.warm_starts(), 0);
+    }
+
+    #[test]
+    fn warm_start_carries_state_across_solves() {
+        let cfg = PsoConfig { warm_start: true, ..Default::default() };
+        let alloc = PsoAllocator::new(cfg);
+        let p = problem(4);
+        let mut obj = |b: &[f64]| -b[0];
+        alloc.allocate(&p, &mut obj);
+        assert_eq!(alloc.warm_starts(), 0, "first solve has nothing to resume");
+        let warmed = alloc.allocate(&p, &mut obj);
+        assert_eq!(alloc.warm_starts(), 1);
+        // warm particle must stay feasible
+        assert!(approx_eq(warmed.iter().sum::<f64>(), 40_000.0, 1e-6));
+        alloc.reset();
+        assert_eq!(alloc.warm_starts(), 0);
+        alloc.allocate(&p, &mut obj);
+        assert_eq!(alloc.warm_starts(), 0, "reset forgets the carried swarm");
+    }
+
+    #[test]
+    fn warm_start_adapts_to_changed_device_count() {
+        let cfg = PsoConfig { warm_start: true, ..Default::default() };
+        let alloc = PsoAllocator::new(cfg);
+        let mut obj = |b: &[f64]| b.iter().map(|x| (x - 9_000.0).abs()).sum::<f64>();
+        alloc.allocate(&problem(3), &mut obj);
+        for k in [6, 2] {
+            let p = problem(k);
+            let a = alloc.allocate(&p, &mut obj);
+            assert_eq!(a.len(), k);
+            assert!(approx_eq(a.iter().sum::<f64>(), 40_000.0, 1e-6));
+            assert!(a.iter().all(|&b| b >= p.min_hz - 1e-9));
+        }
+        assert_eq!(alloc.warm_starts(), 2);
+    }
+
+    #[test]
+    fn warm_fractions_pad_and_truncate() {
+        let pos = PsoAllocator::warm_position(&[0.5, 0.25, 0.25], 2, 100.0);
+        assert_eq!(pos.len(), 2);
+        assert!(approx_eq(pos.iter().sum::<f64>(), 100.0, 1e-9));
+        assert!(pos[0] > pos[1], "relative shape preserved under truncation");
+        let pos = PsoAllocator::warm_position(&[0.6, 0.4], 4, 100.0);
+        assert_eq!(pos.len(), 4);
+        assert!(approx_eq(pos.iter().sum::<f64>(), 100.0, 1e-9));
+        assert!(approx_eq(pos[2], pos[3], 1e-9), "padding uses the mean fraction");
     }
 
     #[test]

@@ -6,11 +6,12 @@ use crate::config::ExperimentConfig;
 use crate::coordinator::{profile_batch_delay, ProfileConfig};
 use crate::delay::BatchDelayModel;
 use crate::quality::{PowerLawQuality, QualityModel, TableQuality};
+use crate::routing::RouterKind;
 use crate::runtime::ArtifactStore;
 use crate::scheduler::{
     BatchScheduler, FixedSizeBatching, GreedyBatching, SingleInstance, Stacking,
 };
-use crate::sim::{simulate_dynamic, solve_joint, DynamicConfig};
+use crate::sim::{simulate_cluster, simulate_dynamic, solve_joint, ClusterConfig, DynamicConfig};
 use crate::trace::{generate, sweeps, ArrivalTrace};
 use crate::util::fit_power_law;
 
@@ -34,7 +35,11 @@ pub fn schemes() -> Vec<Scheme> {
             use_pso: true,
         },
         Scheme { name: "greedy", scheduler: Box::new(GreedyBatching), use_pso: true },
-        Scheme { name: "fixed-size", scheduler: Box::new(FixedSizeBatching::default()), use_pso: true },
+        Scheme {
+            name: "fixed-size",
+            scheduler: Box::new(FixedSizeBatching::default()),
+            use_pso: true,
+        },
         Scheme {
             name: "equal-bandwidth",
             scheduler: Box::new(Stacking::default()),
@@ -73,7 +78,8 @@ fn scheme_mean_quality(
     let mut acc = 0.0;
     for rep in 0..reps {
         let workload = generate(scenario, cfg.seed + rep as u64);
-        let sol = solve_joint(&workload, scheme.scheduler.as_ref(), allocator.as_ref(), delay, quality);
+        let sol =
+            solve_joint(&workload, scheme.scheduler.as_ref(), allocator.as_ref(), delay, quality);
         acc += sol.outcome.mean_quality();
     }
     acc / reps as f64
@@ -208,8 +214,8 @@ pub fn fig2b(cfg: &ExperimentConfig, ks: &[usize], reps: usize) -> Vec<(usize, V
     let schemes = schemes();
     let mut headers: Vec<&str> = vec!["K"];
     headers.extend(schemes.iter().map(|s| s.name));
-    let mut table =
-        TableWriter::new("Fig. 2b — mean FID vs number of services", &headers).with_csv("fig2b_service_sweep");
+    let mut table = TableWriter::new("Fig. 2b — mean FID vs number of services", &headers)
+        .with_csv("fig2b_service_sweep");
     let mut rows = Vec::new();
     for &k in ks {
         let scenario = sweeps::with_num_services(&cfg.scenario, k);
@@ -290,7 +296,10 @@ pub fn fig3_dynamic(cfg: &ExperimentConfig, lambdas: &[f64], horizon_s: f64) -> 
     let dyn_cfg = DynamicConfig::from(&cfg.dynamic);
     let mut table = TableWriter::new(
         "Fig. 3 — dynamic Poisson arrivals: quality/outage/latency vs rate",
-        &["lambda", "requests", "served", "mean FID", "outage", "p50 e2e s", "p99 e2e s", "wait s", "epochs"],
+        &[
+            "lambda", "requests", "served", "mean FID", "outage", "p50 e2e s", "p99 e2e s",
+            "wait s", "epochs",
+        ],
     )
     .with_csv("fig3_dynamic");
     let mut rows = Vec::new();
@@ -329,6 +338,91 @@ pub fn fig3_dynamic(cfg: &ExperimentConfig, lambdas: &[f64], horizon_s: f64) -> 
     rows
 }
 
+// ---------------------------------------------------------------------------
+// Cluster figure (new) — router λ-sweep over a heterogeneous fleet
+// ---------------------------------------------------------------------------
+
+/// One (λ, router) cell of the cluster routing sweep.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FigClusterRow {
+    pub lambda_hz: f64,
+    pub router: RouterKind,
+    pub requests: usize,
+    pub served: usize,
+    pub mean_quality: f64,
+    pub outage_rate: f64,
+    pub p50_e2e_s: f64,
+    pub p99_e2e_s: f64,
+    /// Largest per-server share of the traffic (1/N = perfectly even).
+    pub max_share: f64,
+}
+
+/// Sweep the Poisson arrival rate λ across every routing policy on the
+/// configured fleet (`cfg.cluster`: server count + GPU speed spread).
+/// Each λ reuses one seeded trace, so router columns are directly
+/// comparable and the whole sweep replays bit-identically (asserted by
+/// `benches/fig_cluster.rs` and pinned by `golden_fig_cluster.json`).
+pub fn fig_cluster(cfg: &ExperimentConfig, lambdas: &[f64], horizon_s: f64) -> Vec<FigClusterRow> {
+    let delay = BatchDelayModel::new(cfg.delay.a, cfg.delay.b);
+    let quality = PowerLawQuality::paper();
+    let scheduler = Stacking::default();
+    let allocator = EqualAllocator;
+    let mut table = TableWriter::new(
+        "Cluster — router λ-sweep: fleet quality/outage/latency per policy",
+        &[
+            "lambda", "router", "requests", "served", "mean FID", "outage", "p50 e2e", "p99 e2e",
+            "max share",
+        ],
+    )
+    .with_csv("fig_cluster");
+    let mut rows = Vec::new();
+    for &lambda in lambdas {
+        let mut arrival = cfg.arrival;
+        arrival.process = crate::config::ArrivalProcessKind::Poisson;
+        arrival.rate_hz = lambda;
+        arrival.horizon_s = horizon_s;
+        let trace = ArrivalTrace::generate(&cfg.scenario, &arrival, cfg.seed);
+        for router in RouterKind::all() {
+            let mut settings = cfg.cluster;
+            settings.router = router;
+            let cluster_cfg = ClusterConfig::from_settings(&settings, &cfg.dynamic);
+            let report =
+                simulate_cluster(&trace, &scheduler, &allocator, &delay, &quality, &cluster_cfg);
+            let stats = report.fleet_stats();
+            let max_share = report
+                .servers
+                .iter()
+                .map(|s| s.assigned() as f64 / trace.len().max(1) as f64)
+                .fold(0.0, f64::max);
+            let row = FigClusterRow {
+                lambda_hz: lambda,
+                router,
+                requests: trace.len(),
+                served: report.served(),
+                mean_quality: stats.mean_quality,
+                outage_rate: stats.outage_rate,
+                p50_e2e_s: stats.p50_e2e_s,
+                p99_e2e_s: stats.p99_e2e_s,
+                max_share,
+            };
+            table.row(&[
+                format!("{lambda:.2}"),
+                router.name().to_string(),
+                row.requests.to_string(),
+                row.served.to_string(),
+                format!("{:.2}", row.mean_quality),
+                format!("{:.3}", row.outage_rate),
+                format!("{:.2}", row.p50_e2e_s),
+                format!("{:.2}", row.p99_e2e_s),
+                format!("{:.3}", row.max_share),
+            ]);
+            rows.push(row);
+        }
+    }
+    table.finish();
+    rows
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -349,7 +443,10 @@ mod tests {
             let proposed = vals[0];
             // proposed is the minimum of all schemes (within tolerance)
             for (i, v) in vals.iter().enumerate() {
-                assert!(proposed <= v * 1.05 + 1e-9, "K={k}: scheme {i} beats proposed ({v} < {proposed})");
+                assert!(
+                    proposed <= v * 1.05 + 1e-9,
+                    "K={k}: scheme {i} beats proposed ({v} < {proposed})"
+                );
             }
         }
         // single-instance degrades much faster with K than proposed
@@ -403,6 +500,25 @@ mod tests {
         assert!(rows[1].outage_rate >= rows[0].outage_rate);
         // bit-identical replay
         assert_eq!(rows, fig3_dynamic(&cfg, &lambdas, 30.0));
+    }
+
+    #[test]
+    fn fig_cluster_covers_all_routers_and_replays() {
+        let mut cfg = ExperimentConfig::paper();
+        cfg.cluster.servers = 3;
+        cfg.cluster.speed_min = 0.5;
+        cfg.cluster.speed_max = 1.5;
+        let rows = fig_cluster(&cfg, &[1.0, 6.0], 30.0);
+        assert_eq!(rows.len(), 2 * RouterKind::all().len());
+        for row in &rows {
+            assert!(row.served <= row.requests);
+            assert!((0.0..=1.0).contains(&row.outage_rate));
+            assert!(row.max_share >= 1.0 / 3.0 - 1e-9, "shares must cover the trace");
+        }
+        // a router column is comparable across λ: same trace per λ
+        assert_eq!(rows[0].requests, rows[1].requests);
+        // bit-identical replay
+        assert_eq!(rows, fig_cluster(&cfg, &[1.0, 6.0], 30.0));
     }
 
     #[test]

@@ -5,8 +5,10 @@
 //!   `simulate [--config F] [--scheduler S] [--allocator A] [--seed N]`
 //!   `dynamic  [--config F] [--rate L] [--horizon S] [...]` — dynamic
 //!             arrivals through the event-driven multi-epoch simulator
+//!   `cluster  [--servers N] [--router R] [...]` — the dynamic workload
+//!             sharded across N servers behind a routing policy
 //!   `profile  [--reps N]` — Fig. 1a measurement
-//!   `figures  [--which 1a|1b|2a|2b|2c|3|all] [--reps N]`
+//!   `figures  [--which 1a|1b|2a|2b|2c|3|cluster|all] [--reps N]`
 
 use std::collections::BTreeMap;
 
@@ -99,8 +101,14 @@ USAGE:
                      [--plan-horizon 2.0] [--no-admission true] [--trace-out f.csv]
                      [--scheduler stacking|single|greedy|fixed]
                      [--allocator pso|equal|proportional] [--seed N]
+  aigc-edge cluster  [--config file.toml] [--servers 4] [--router round-robin|jsq|quality]
+                     [--speed-min 1.0] [--speed-max 1.0] [--process poisson|burst]
+                     [--rate 2.0] [--horizon 300] [--epoch-s 1.0] [--max-batch 32]
+                     [--plan-horizon 2.0] [--no-admission true]
+                     [--scheduler stacking|single|greedy|fixed]
+                     [--allocator pso|equal|proportional] [--seed N]
   aigc-edge profile  [--reps 20]
-  aigc-edge figures  [--which all|1a|1b|2a|2b|2c|3] [--reps 3]
+  aigc-edge figures  [--which all|1a|1b|2a|2b|2c|3|cluster] [--reps 3]
   aigc-edge help
 ";
 

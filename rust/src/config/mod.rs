@@ -18,6 +18,8 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Context, Result};
 
+use crate::routing::RouterKind;
+
 use self::toml::{parse, TomlDoc};
 
 /// Which quality model drives scheduling.
@@ -45,6 +47,8 @@ pub struct ExperimentConfig {
     pub arrival: ArrivalSettings,
     /// Epoching/admission settings for dynamic simulation.
     pub dynamic: DynamicSettings,
+    /// Multi-server sharding settings for cluster simulation.
+    pub cluster: ClusterSettings,
     /// Directory holding the AOT artifacts (HLO, quality.json, …).
     pub artifacts_dir: PathBuf,
     pub seed: u64,
@@ -160,6 +164,21 @@ pub struct DynamicSettings {
     pub plan_horizon_s: f64,
 }
 
+/// Multi-server cluster settings (`sim::cluster`). TOML section
+/// `[cluster]`.
+#[derive(Debug, Clone, Copy)]
+pub struct ClusterSettings {
+    /// Number of edge servers behind the router.
+    pub servers: usize,
+    /// Dispatch policy (`round-robin` | `jsq` | `quality`).
+    pub router: RouterKind,
+    /// GPU speed heterogeneity: per-server speed factors are evenly
+    /// spaced in `[speed_min, speed_max]` (1.0 = the reference delay
+    /// model; a single server gets the midpoint).
+    pub speed_min: f64,
+    pub speed_max: f64,
+}
+
 impl ExperimentConfig {
     /// The paper's Section-IV setup.
     pub fn paper() -> Self {
@@ -192,6 +211,12 @@ impl ExperimentConfig {
                 admission: true,
                 window_s: 30.0,
                 plan_horizon_s: 2.0,
+            },
+            cluster: ClusterSettings {
+                servers: 4,
+                router: RouterKind::JoinShortestQueue,
+                speed_min: 1.0,
+                speed_max: 1.0,
             },
             artifacts_dir: default_artifacts_dir(),
             seed: 2025,
@@ -284,6 +309,19 @@ impl ExperimentConfig {
         }
         pos_finite("dynamic.window_s", d.window_s)?;
         pos_finite("dynamic.plan_horizon_s", d.plan_horizon_s)?;
+        let c = &self.cluster;
+        if c.servers == 0 {
+            bail!("cluster.servers must be >= 1");
+        }
+        pos_finite("cluster.speed_min", c.speed_min)?;
+        pos_finite("cluster.speed_max", c.speed_max)?;
+        if c.speed_max < c.speed_min {
+            bail!(
+                "cluster.speed_max ({}) must be >= cluster.speed_min ({})",
+                c.speed_max,
+                c.speed_min
+            );
+        }
         Ok(())
     }
 
@@ -367,6 +405,16 @@ fn apply_doc(cfg: &mut ExperimentConfig, doc: &TomlDoc) -> Result<()> {
             "dynamic.admission" => set_bool(&mut cfg.dynamic.admission, value),
             "dynamic.window_s" => set_f64(&mut cfg.dynamic.window_s, value),
             "dynamic.plan_horizon_s" => set_f64(&mut cfg.dynamic.plan_horizon_s, value),
+            "cluster.servers" => set_usize(&mut cfg.cluster.servers, value),
+            "cluster.router" => match value.as_str().and_then(RouterKind::from_name) {
+                Some(kind) => {
+                    cfg.cluster.router = kind;
+                    true
+                }
+                None => false,
+            },
+            "cluster.speed_min" => set_f64(&mut cfg.cluster.speed_min, value),
+            "cluster.speed_max" => set_f64(&mut cfg.cluster.speed_max, value),
             _ => bail!("unknown config key '{key}'"),
         };
         if !ok {
@@ -502,6 +550,40 @@ mod tests {
         assert!(ExperimentConfig::from_toml_text("[dynamic]\nepoch_s = 0.0").is_err());
         assert!(ExperimentConfig::from_toml_text("[dynamic]\nmax_batch = 0").is_err());
         assert!(ExperimentConfig::from_toml_text("[dynamic]\nadmission = 3").is_err());
+    }
+
+    #[test]
+    fn cluster_section_applies() {
+        let cfg = ExperimentConfig::from_toml_text(
+            r#"
+            [cluster]
+            servers = 6
+            router = "quality"
+            speed_min = 0.5
+            speed_max = 2.0
+            "#,
+        )
+        .unwrap();
+        assert_eq!(cfg.cluster.servers, 6);
+        assert_eq!(cfg.cluster.router, RouterKind::QualityAware);
+        assert_eq!(cfg.cluster.speed_min, 0.5);
+        assert_eq!(cfg.cluster.speed_max, 2.0);
+        // defaults untouched elsewhere
+        assert_eq!(cfg.scenario.num_services, 20);
+    }
+
+    #[test]
+    fn cluster_validation_rejects_nonsense() {
+        assert!(ExperimentConfig::from_toml_text("[cluster]\nservers = 0").is_err());
+        assert!(ExperimentConfig::from_toml_text("[cluster]\nrouter = \"random\"").is_err());
+        assert!(ExperimentConfig::from_toml_text("[cluster]\nspeed_min = 0.0").is_err());
+        assert!(ExperimentConfig::from_toml_text(
+            "[cluster]\nspeed_min = 2.0\nspeed_max = 1.0"
+        )
+        .is_err());
+        let mut cfg = ExperimentConfig::paper();
+        cfg.cluster.speed_max = f64::INFINITY;
+        assert!(cfg.validate().is_err());
     }
 
     #[test]

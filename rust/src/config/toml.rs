@@ -129,8 +129,7 @@ fn parse_value(text: &str, line: usize) -> Result<TomlValue, TomlError> {
         return Ok(TomlValue::Str(inner.replace("\\\"", "\"").replace("\\\\", "\\")));
     }
     if let Some(rest) = text.strip_prefix('[') {
-        let inner =
-            rest.strip_suffix(']').ok_or_else(|| err("unterminated array".into()))?.trim();
+        let inner = rest.strip_suffix(']').ok_or_else(|| err("unterminated array".into()))?.trim();
         if inner.is_empty() {
             return Ok(TomlValue::Array(vec![]));
         }

@@ -22,9 +22,10 @@ pub mod channel;
 pub mod cli;
 pub mod config;
 pub mod coordinator;
-pub mod metrics;
 pub mod delay;
+pub mod metrics;
 pub mod quality;
+pub mod routing;
 pub mod runtime;
 pub mod scheduler;
 pub mod server;

@@ -12,12 +12,16 @@ use aigc_edge::cli::{Args, USAGE};
 use aigc_edge::config::{ArrivalProcessKind, ExperimentConfig};
 use aigc_edge::coordinator::{profile_batch_delay, ProfileConfig};
 use aigc_edge::delay::BatchDelayModel;
+use aigc_edge::metrics::OutcomeStats;
 use aigc_edge::quality::{PowerLawQuality, QualityModel, TableQuality};
+use aigc_edge::routing::RouterKind;
 use aigc_edge::runtime::ArtifactStore;
 use aigc_edge::scheduler::{
     BatchScheduler, FixedSizeBatching, GreedyBatching, SingleInstance, Stacking, StackingConfig,
 };
-use aigc_edge::sim::{simulate_dynamic, Disposition, DynamicConfig};
+use aigc_edge::sim::{
+    simulate_cluster, simulate_dynamic, ClusterConfig, Disposition, DynamicConfig,
+};
 use aigc_edge::trace::ArrivalTrace;
 
 /// Build the STACKING scheduler from config (0 = derive T* bound).
@@ -38,6 +42,7 @@ fn main() -> Result<()> {
         "serve" => cmd_serve(&args),
         "simulate" => cmd_simulate(&args),
         "dynamic" => cmd_dynamic(&args),
+        "cluster" => cmd_cluster(&args),
         "profile" => cmd_profile(&args),
         "figures" => cmd_figures(&args),
         "help" | "--help" | "-h" => {
@@ -113,7 +118,8 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     let quality = quality_model(&cfg)?;
     let delay = BatchDelayModel::new(cfg.delay.a, cfg.delay.b);
     let workload = generate(&cfg.scenario, cfg.seed);
-    let sol = solve_joint(&workload, scheduler.as_ref(), allocator.as_ref(), &delay, quality.as_ref());
+    let sol =
+        solve_joint(&workload, scheduler.as_ref(), allocator.as_ref(), &delay, quality.as_ref());
 
     println!(
         "scenario: K={} deadlines U[{}, {}]s B={} Hz",
@@ -146,23 +152,8 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn cmd_dynamic(args: &Args) -> Result<()> {
-    args.expect_only(&[
-        "config",
-        "process",
-        "rate",
-        "horizon",
-        "epoch-s",
-        "max-batch",
-        "window",
-        "plan-horizon",
-        "no-admission",
-        "trace-out",
-        "scheduler",
-        "allocator",
-        "seed",
-    ])?;
-    let mut cfg = load_config(args)?;
+/// Apply the arrival/epoching flags `dynamic` and `cluster` share.
+fn apply_dynamic_flags(args: &Args, cfg: &mut ExperimentConfig) -> Result<()> {
     cfg.seed = args.get_u64("seed", cfg.seed)?;
     match args.get("process") {
         None => {}
@@ -182,6 +173,27 @@ fn cmd_dynamic(args: &Args) -> Result<()> {
         Some("false") => cfg.dynamic.admission = true,
         Some(other) => bail!("--no-admission must be true or false, got '{other}'"),
     }
+    Ok(())
+}
+
+fn cmd_dynamic(args: &Args) -> Result<()> {
+    args.expect_only(&[
+        "config",
+        "process",
+        "rate",
+        "horizon",
+        "epoch-s",
+        "max-batch",
+        "window",
+        "plan-horizon",
+        "no-admission",
+        "trace-out",
+        "scheduler",
+        "allocator",
+        "seed",
+    ])?;
+    let mut cfg = load_config(args)?;
+    apply_dynamic_flags(args, &mut cfg)?;
     cfg.validate()?;
 
     let scheduler = scheduler_from(args, &cfg)?;
@@ -211,8 +223,14 @@ fn cmd_dynamic(args: &Args) -> Result<()> {
         scheduler.name(),
         allocator.name()
     );
-    let report =
-        simulate_dynamic(&trace, scheduler.as_ref(), allocator.as_ref(), &delay, quality.as_ref(), &dyn_cfg);
+    let report = simulate_dynamic(
+        &trace,
+        scheduler.as_ref(),
+        allocator.as_ref(),
+        &delay,
+        quality.as_ref(),
+        &dyn_cfg,
+    );
 
     // Windowed view: one row every ~window/3 of simulated time.
     let mut table = aigc_edge::bench::TableWriter::new(
@@ -268,6 +286,104 @@ fn cmd_dynamic(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_cluster(args: &Args) -> Result<()> {
+    args.expect_only(&[
+        "config",
+        "servers",
+        "router",
+        "speed-min",
+        "speed-max",
+        "process",
+        "rate",
+        "horizon",
+        "epoch-s",
+        "max-batch",
+        "window",
+        "plan-horizon",
+        "no-admission",
+        "scheduler",
+        "allocator",
+        "seed",
+    ])?;
+    let mut cfg = load_config(args)?;
+    apply_dynamic_flags(args, &mut cfg)?;
+    cfg.cluster.servers = args.get_usize("servers", cfg.cluster.servers)?;
+    if let Some(name) = args.get("router") {
+        cfg.cluster.router = RouterKind::from_name(name)
+            .with_context(|| format!("unknown router '{name}' (round-robin|jsq|quality)"))?;
+    }
+    cfg.cluster.speed_min = args.get_f64("speed-min", cfg.cluster.speed_min)?;
+    cfg.cluster.speed_max = args.get_f64("speed-max", cfg.cluster.speed_max)?;
+    cfg.validate()?;
+
+    let scheduler = scheduler_from(args, &cfg)?;
+    let allocator = allocator_from(args)?;
+    let quality = quality_model(&cfg)?;
+    let delay = BatchDelayModel::new(cfg.delay.a, cfg.delay.b);
+    let trace = ArrivalTrace::generate(&cfg.scenario, &cfg.arrival, cfg.seed);
+    let cluster_cfg = ClusterConfig::from_settings(&cfg.cluster, &cfg.dynamic);
+    println!(
+        "cluster: {} servers (speeds {:?}) router={} | {:?} rate {} Hz over {}s | epoch {}s",
+        cluster_cfg.servers(),
+        cluster_cfg.speeds.iter().map(|s| (s * 100.0).round() / 100.0).collect::<Vec<_>>(),
+        cfg.cluster.router.name(),
+        cfg.arrival.process,
+        cfg.arrival.rate_hz,
+        cfg.arrival.horizon_s,
+        cfg.dynamic.epoch_s,
+    );
+    println!(
+        "{} arrivals (empirical rate {:.2} Hz); scheduler={} allocator={}",
+        trace.len(),
+        trace.mean_rate_hz(),
+        scheduler.name(),
+        allocator.name()
+    );
+    let report = simulate_cluster(
+        &trace,
+        scheduler.as_ref(),
+        allocator.as_ref(),
+        &delay,
+        quality.as_ref(),
+        &cluster_cfg,
+    );
+
+    let mut table = aigc_edge::bench::TableWriter::new(
+        "per-server serving summary",
+        &["server", "speed", "assigned", "served", "mean FID", "outage", "p50 e2e", "p99 e2e"],
+    );
+    let stats_row = |tag: String, speed: String, stats: &OutcomeStats| {
+        vec![
+            tag,
+            speed,
+            stats.count.to_string(),
+            stats.served.to_string(),
+            format!("{:.1}", stats.mean_quality),
+            format!("{:.3}", stats.outage_rate),
+            format!("{:.2}", stats.p50_e2e_s),
+            format!("{:.2}", stats.p99_e2e_s),
+        ]
+    };
+    for s in &report.servers {
+        table.row(&stats_row(s.server.to_string(), format!("{:.2}", s.speed), &s.stats()));
+    }
+    table.row(&stats_row("fleet".into(), "-".into(), &report.fleet_stats()));
+    table.finish();
+    println!(
+        "served {}/{} | mean FID {:.2} | outage rate {:.3} | {} epochs across servers | \
+         {} deferrals | peak queue {} | {:.1}s simulated",
+        report.served(),
+        report.outcomes.len(),
+        report.mean_quality(),
+        report.outage_rate(),
+        report.total_epochs(),
+        report.total_deferrals(),
+        report.peak_queue_depth(),
+        report.horizon_s,
+    );
+    Ok(())
+}
+
 fn cmd_profile(args: &Args) -> Result<()> {
     args.expect_only(&["reps", "config"])?;
     let cfg = load_config(args)?;
@@ -308,6 +424,9 @@ fn cmd_figures(args: &Args) -> Result<()> {
     }
     if want("3") {
         bench::fig3_dynamic(&cfg, &[0.5, 1.0, 2.0, 4.0, 8.0, 12.0, 16.0, 20.0], 200.0);
+    }
+    if want("cluster") {
+        bench::fig_cluster(&cfg, &[0.5, 1.0, 2.0, 4.0, 8.0, 12.0, 16.0, 20.0], 200.0);
     }
     Ok(())
 }

@@ -15,6 +15,76 @@ use std::time::Instant;
 
 use crate::util::stats::{percentile, Welford};
 
+/// One resolved request as the aggregate layer sees it — the common
+/// denominator of `sim::dynamic` outcomes and server-side telemetry.
+#[derive(Debug, Clone, Copy)]
+pub struct ResolvedSample {
+    /// Charged quality (outage quality when dropped).
+    pub quality: f64,
+    /// Served within the deadline.
+    pub met: bool,
+    /// Content was actually delivered.
+    pub served: bool,
+    /// End-to-end delay (meaningful only when served).
+    pub e2e_s: f64,
+    /// Arrival → solving epoch (meaningful only when served).
+    pub wait_s: f64,
+}
+
+/// Aggregates over a set of resolved requests — the standard summary a
+/// serving report prints per server and fleet-wide (`sim::cluster`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct OutcomeStats {
+    pub count: usize,
+    pub served: usize,
+    /// Mean charged quality (the (P0) objective; lower FID = better).
+    pub mean_quality: f64,
+    /// Fraction of requests not served within their deadline.
+    pub outage_rate: f64,
+    pub p50_e2e_s: f64,
+    pub p95_e2e_s: f64,
+    pub p99_e2e_s: f64,
+    /// Mean queueing delay over served requests.
+    pub mean_wait_s: f64,
+}
+
+impl OutcomeStats {
+    /// Compute the summary. Empty input yields all-zero stats.
+    pub fn from_samples(samples: &[ResolvedSample]) -> Self {
+        let count = samples.len();
+        if count == 0 {
+            return Self {
+                count: 0,
+                served: 0,
+                mean_quality: 0.0,
+                outage_rate: 0.0,
+                p50_e2e_s: 0.0,
+                p95_e2e_s: 0.0,
+                p99_e2e_s: 0.0,
+                mean_wait_s: 0.0,
+            };
+        }
+        let served_e2e: Vec<f64> = samples.iter().filter(|s| s.served).map(|s| s.e2e_s).collect();
+        let served = served_e2e.len();
+        let waits: Vec<f64> = samples.iter().filter(|s| s.served).map(|s| s.wait_s).collect();
+        let mean_wait_s = if waits.is_empty() {
+            0.0
+        } else {
+            waits.iter().sum::<f64>() / waits.len() as f64
+        };
+        Self {
+            count,
+            served,
+            mean_quality: samples.iter().map(|s| s.quality).sum::<f64>() / count as f64,
+            outage_rate: samples.iter().filter(|s| !s.met).count() as f64 / count as f64,
+            p50_e2e_s: percentile(&served_e2e, 50.0),
+            p95_e2e_s: percentile(&served_e2e, 95.0),
+            p99_e2e_s: percentile(&served_e2e, 99.0),
+            mean_wait_s,
+        }
+    }
+}
+
 /// A latency series: streaming moments plus a bounded sample reservoir
 /// for percentiles.
 #[derive(Debug, Default)]
@@ -144,6 +214,30 @@ impl Metrics {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn outcome_stats_aggregate() {
+        let samples = [
+            ResolvedSample { quality: 30.0, met: true, served: true, e2e_s: 1.0, wait_s: 0.5 },
+            ResolvedSample { quality: 40.0, met: true, served: true, e2e_s: 3.0, wait_s: 1.5 },
+            ResolvedSample { quality: 450.0, met: false, served: false, e2e_s: 0.0, wait_s: 0.0 },
+        ];
+        let stats = OutcomeStats::from_samples(&samples);
+        assert_eq!(stats.count, 3);
+        assert_eq!(stats.served, 2);
+        assert!((stats.mean_quality - (30.0 + 40.0 + 450.0) / 3.0).abs() < 1e-12);
+        assert!((stats.outage_rate - 1.0 / 3.0).abs() < 1e-12);
+        assert!((stats.p50_e2e_s - 2.0).abs() < 1e-9, "p50 over served only");
+        assert!((stats.mean_wait_s - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn outcome_stats_empty_is_zero() {
+        let stats = OutcomeStats::from_samples(&[]);
+        assert_eq!(stats.count, 0);
+        assert_eq!(stats.mean_quality, 0.0);
+        assert_eq!(stats.p99_e2e_s, 0.0);
+    }
 
     #[test]
     fn counters_and_gauges() {

@@ -1,0 +1,457 @@
+//! Request routing across a fleet of edge servers — the dispatch layer
+//! of `sim::cluster`.
+//!
+//! The paper solves (P0) for a single server; serving heavy traffic
+//! needs N servers and an answer to *which* server denoises each
+//! request. Collaborative distributed diffusion (arXiv:2304.03446) and
+//! 6G MEC offloading (arXiv:2312.06203) both find that this dispatch
+//! decision dominates end-to-end quality under load, so the routing
+//! policy is a first-class, pluggable component here:
+//!
+//! * [`RoundRobinRouter`] — classic cyclic dispatch, skipping failed
+//!   servers (the fairness baseline);
+//! * [`JoinShortestQueueRouter`] — route to the server with the least
+//!   *outstanding denoising work* in seconds (not request count: a
+//!   2×-slow GPU with 3 queued requests is "longer" than a fast GPU
+//!   with 4);
+//! * [`QualityAwareRouter`] — route to the server whose marginal (P0)
+//!   relaxation predicts the most denoising steps (= best FID, since
+//!   quality is monotone in steps) within the request's residual
+//!   deadline, accounting for per-server GPU speed, estimated queue
+//!   wait and a queue-shared transmission estimate.
+//!
+//! Routers see the fleet through [`ServerState`]s — lightweight virtual
+//! queues the splitter advances between arrivals. Every policy is
+//! deterministic: identical traces and fleet configs replay to
+//! bit-identical assignments (asserted by `tests/routing_properties.rs`).
+
+use std::collections::VecDeque;
+
+use crate::delay::BatchDelayModel;
+use crate::trace::{Arrival, ArrivalTrace};
+
+/// Which routing policy a cluster runs. Lives here (not in `config`) so
+/// the policy set and its names stay next to the implementations.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RouterKind {
+    RoundRobin,
+    /// Join-shortest-queue by outstanding denoising work.
+    JoinShortestQueue,
+    /// Marginal-(P0) quality prediction.
+    QualityAware,
+}
+
+impl RouterKind {
+    /// Parse the CLI/TOML name. Accepts the short aliases the README
+    /// documents.
+    pub fn from_name(name: &str) -> Option<Self> {
+        match name {
+            "round-robin" | "rr" => Some(Self::RoundRobin),
+            "jsq" | "shortest-queue" => Some(Self::JoinShortestQueue),
+            "quality" | "quality-aware" => Some(Self::QualityAware),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::RoundRobin => "round-robin",
+            Self::JoinShortestQueue => "jsq",
+            Self::QualityAware => "quality-aware",
+        }
+    }
+
+    /// All policies, in the order the figure sweeps compare them.
+    pub fn all() -> [Self; 3] {
+        [Self::RoundRobin, Self::JoinShortestQueue, Self::QualityAware]
+    }
+
+    /// Instantiate the policy. The delay model parameterizes the
+    /// quality-aware marginal estimate (and the shared per-request
+    /// service estimate all policies charge to a server's virtual
+    /// queue).
+    pub fn build(&self, delay: BatchDelayModel) -> Box<dyn Router> {
+        match self {
+            Self::RoundRobin => Box::new(RoundRobinRouter::default()),
+            Self::JoinShortestQueue => Box::new(JoinShortestQueueRouter),
+            Self::QualityAware => Box::new(QualityAwareRouter::new(delay)),
+        }
+    }
+}
+
+/// One server as the router sees it: a deterministic virtual queue.
+///
+/// The estimator is deliberately simple — a single-server FIFO drain:
+/// routing a request at time `t` with service estimate `s` pushes
+/// `busy_until = max(busy_until, t) + s`; outstanding work at `t` is
+/// `max(0, busy_until − t)`. It is *not* the exact simulator state (the
+/// simulator batches and re-solves per epoch) but it is consistent,
+/// causal, and cheap — the standard virtual-queue trick load balancers
+/// use when the backend's true state is unobservable at dispatch time.
+#[derive(Debug, Clone)]
+pub struct ServerState {
+    pub id: usize,
+    /// GPU speed factor relative to the reference delay model
+    /// (2.0 = denoises twice as fast).
+    pub speed: f64,
+    /// A failed server must never be routed to.
+    pub alive: bool,
+    /// Total requests ever routed here.
+    pub routed: usize,
+    busy_until_s: f64,
+    /// Estimated completion instant of each in-flight request, FIFO.
+    pending: VecDeque<f64>,
+}
+
+impl ServerState {
+    pub fn new(id: usize, speed: f64) -> Self {
+        assert!(speed > 0.0 && speed.is_finite(), "server speed must be positive");
+        Self { id, speed, alive: true, routed: 0, busy_until_s: 0.0, pending: VecDeque::new() }
+    }
+
+    /// Build a fleet from per-server speed factors.
+    pub fn fleet(speeds: &[f64]) -> Vec<Self> {
+        speeds.iter().enumerate().map(|(i, &s)| Self::new(i, s)).collect()
+    }
+
+    /// Drop requests whose estimated completion has passed.
+    pub fn advance(&mut self, now_s: f64) {
+        while matches!(self.pending.front(), Some(&done) if done <= now_s) {
+            self.pending.pop_front();
+        }
+    }
+
+    /// Estimated outstanding denoising work at `now_s`, in seconds.
+    pub fn outstanding_work_s(&self, now_s: f64) -> f64 {
+        (self.busy_until_s - now_s).max(0.0)
+    }
+
+    /// Requests estimated still queued or running at the last `advance`.
+    pub fn queue_len(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// Charge a routed request to the virtual queue.
+    pub fn assign(&mut self, now_s: f64, service_est_s: f64) {
+        self.busy_until_s = self.busy_until_s.max(now_s) + service_est_s;
+        self.pending.push_back(self.busy_until_s);
+        self.routed += 1;
+    }
+}
+
+/// Shared scenario constants a routing decision may consult.
+#[derive(Debug, Clone, Copy)]
+pub struct RouteContext {
+    pub total_bandwidth_hz: f64,
+    pub content_bits: f64,
+}
+
+/// A routing policy: pick the destination server for one arrival.
+///
+/// Contract (asserted by `tests/routing_properties.rs`):
+/// * the returned index is a server with `alive == true`;
+/// * the decision is a pure function of the visible state — identical
+///   replays produce identical assignments;
+/// * implementations may keep internal state (e.g. the round-robin
+///   cursor), hence `&mut self`.
+pub trait Router {
+    fn name(&self) -> &'static str;
+
+    /// Choose a server for `arrival` at its arrival instant. `servers`
+    /// have been advanced to `arrival.t_s`. Panics if no server is
+    /// alive — the cluster layer guarantees at least one.
+    fn route(&mut self, arrival: &Arrival, servers: &[ServerState], ctx: &RouteContext) -> usize;
+}
+
+fn assert_some_alive(servers: &[ServerState]) {
+    assert!(servers.iter().any(|s| s.alive), "routing with every server failed");
+}
+
+/// Cyclic dispatch over alive servers.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RoundRobinRouter {
+    cursor: usize,
+}
+
+impl Router for RoundRobinRouter {
+    fn name(&self) -> &'static str {
+        "round-robin"
+    }
+
+    fn route(&mut self, _arrival: &Arrival, servers: &[ServerState], _ctx: &RouteContext) -> usize {
+        assert_some_alive(servers);
+        let n = servers.len();
+        for probe in 0..n {
+            let idx = (self.cursor + probe) % n;
+            if servers[idx].alive {
+                self.cursor = (idx + 1) % n;
+                return idx;
+            }
+        }
+        unreachable!("assert_some_alive guarantees an alive server");
+    }
+}
+
+/// Route to the alive server with the least outstanding denoising work
+/// (seconds, so slow GPUs count for what their queue actually costs).
+/// Ties break toward the lowest id for determinism.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct JoinShortestQueueRouter;
+
+impl Router for JoinShortestQueueRouter {
+    fn name(&self) -> &'static str {
+        "jsq"
+    }
+
+    fn route(&mut self, arrival: &Arrival, servers: &[ServerState], _ctx: &RouteContext) -> usize {
+        assert_some_alive(servers);
+        let now = arrival.t_s;
+        servers
+            .iter()
+            .filter(|s| s.alive)
+            .min_by(|a, b| {
+                a.outstanding_work_s(now)
+                    .partial_cmp(&b.outstanding_work_s(now))
+                    .unwrap()
+                    .then(a.id.cmp(&b.id))
+            })
+            .unwrap()
+            .id
+    }
+}
+
+/// Marginal-(P0) routing: predict, per server, how many denoising steps
+/// the request could receive within its residual deadline, and route to
+/// the best prediction.
+///
+/// The prediction is the single-request relaxation of (P0): after an
+/// estimated queue wait of `outstanding_work_s` and a transmission of
+/// `S / (η · B / (q+1))` (the band shared with the `q` requests already
+/// queued there), the remaining budget buys
+/// `floor(budget / g_s(1))` singleton denoising steps on a GPU whose
+/// scaled delay is `g_s(X) = g(X) / speed`. Batching amortization makes
+/// the simulator's real outcome strictly better, so the estimate is a
+/// conservative, monotone proxy — and since FID is monotone decreasing
+/// in steps, maximizing predicted steps maximizes predicted admitted
+/// quality. Ties break toward less outstanding work, then lower id.
+#[derive(Debug, Clone)]
+pub struct QualityAwareRouter {
+    delay: BatchDelayModel,
+    /// Cap on the step prediction (matches the schedulers' default
+    /// `max_steps`; past it extra steps buy ~no quality).
+    pub max_steps: u32,
+}
+
+impl QualityAwareRouter {
+    pub fn new(delay: BatchDelayModel) -> Self {
+        Self { delay, max_steps: 1000 }
+    }
+
+    /// Predicted denoising steps for `arrival` on `server` (0 means a
+    /// predicted outage).
+    pub fn predict_steps(
+        &self,
+        arrival: &Arrival,
+        server: &ServerState,
+        ctx: &RouteContext,
+    ) -> u32 {
+        let now = arrival.t_s;
+        let wait = server.outstanding_work_s(now);
+        let share = ctx.total_bandwidth_hz / (server.queue_len() + 1) as f64;
+        let tx = arrival.link.tx_delay(ctx.content_bits, share);
+        let budget = arrival.deadline_s - wait - tx;
+        let scaled = BatchDelayModel::new(self.delay.a / server.speed, self.delay.b / server.speed);
+        if budget < scaled.g(1) {
+            return 0;
+        }
+        // Singleton steps: T · g_s(1) ≤ budget.
+        ((budget / scaled.g(1)).floor() as u32).min(self.max_steps)
+    }
+}
+
+impl Router for QualityAwareRouter {
+    fn name(&self) -> &'static str {
+        "quality-aware"
+    }
+
+    fn route(&mut self, arrival: &Arrival, servers: &[ServerState], ctx: &RouteContext) -> usize {
+        assert_some_alive(servers);
+        let now = arrival.t_s;
+        servers
+            .iter()
+            .filter(|s| s.alive)
+            .max_by(|a, b| {
+                let sa = self.predict_steps(arrival, a, ctx);
+                let sb = self.predict_steps(arrival, b, ctx);
+                sa.cmp(&sb)
+                    // more steps wins; on equal steps prefer the *less*
+                    // loaded server, then the lower id (max_by keeps the
+                    // later element on Equal, so order comparisons to
+                    // favour `a` strictly).
+                    .then_with(|| {
+                        b.outstanding_work_s(now)
+                            .partial_cmp(&a.outstanding_work_s(now))
+                            .unwrap()
+                    })
+                    .then(b.id.cmp(&a.id))
+            })
+            .unwrap()
+            .id
+    }
+}
+
+/// Route every arrival of `trace` in time order, advancing the fleet's
+/// virtual queues between arrivals. Returns the per-arrival server
+/// assignment (indexed by arrival id). Each routed request charges the
+/// destination's virtual queue with the singleton-step service estimate
+/// `g(1) / speed` — the same estimate for every policy, so comparisons
+/// across routers differ only in the dispatch rule.
+pub fn route_trace(
+    trace: &ArrivalTrace,
+    servers: &mut [ServerState],
+    router: &mut dyn Router,
+    delay: &BatchDelayModel,
+) -> Vec<usize> {
+    let ctx = RouteContext {
+        total_bandwidth_hz: trace.total_bandwidth_hz,
+        content_bits: trace.content_bits,
+    };
+    let mut assignment = Vec::with_capacity(trace.len());
+    for arrival in &trace.arrivals {
+        for s in servers.iter_mut() {
+            s.advance(arrival.t_s);
+        }
+        let choice = router.route(arrival, servers, &ctx);
+        assert!(servers[choice].alive, "router {} picked failed server {choice}", router.name());
+        let service_est_s = delay.g(1) / servers[choice].speed;
+        servers[choice].assign(arrival.t_s, service_est_s);
+        assignment.push(choice);
+    }
+    assignment
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::channel::Link;
+    use crate::config::{ArrivalProcessKind, ArrivalSettings, ExperimentConfig};
+
+    fn arrival(id: usize, t_s: f64, deadline_s: f64) -> Arrival {
+        Arrival { id, t_s, deadline_s, link: Link::new(7.0) }
+    }
+
+    fn ctx() -> RouteContext {
+        RouteContext { total_bandwidth_hz: 40_000.0, content_bits: 24_000.0 }
+    }
+
+    fn trace(rate: f64, horizon: f64, seed: u64) -> ArrivalTrace {
+        let cfg = ExperimentConfig::paper();
+        let arrival = ArrivalSettings {
+            process: ArrivalProcessKind::Poisson,
+            rate_hz: rate,
+            burst_rate_hz: rate,
+            period_s: 60.0,
+            duty: 0.5,
+            horizon_s: horizon,
+            max_requests: 0,
+        };
+        ArrivalTrace::generate(&cfg.scenario, &arrival, seed)
+    }
+
+    #[test]
+    fn round_robin_cycles_and_skips_failed() {
+        let mut servers = ServerState::fleet(&[1.0, 1.0, 1.0]);
+        servers[1].alive = false;
+        let mut rr = RoundRobinRouter::default();
+        let picks: Vec<usize> =
+            (0..6).map(|i| rr.route(&arrival(i, i as f64, 10.0), &servers, &ctx())).collect();
+        assert_eq!(picks, vec![0, 2, 0, 2, 0, 2]);
+    }
+
+    #[test]
+    fn jsq_picks_least_outstanding_work() {
+        let mut servers = ServerState::fleet(&[1.0, 1.0]);
+        servers[0].assign(0.0, 5.0); // server 0 busy for 5 s
+        let mut jsq = JoinShortestQueueRouter;
+        assert_eq!(jsq.route(&arrival(0, 1.0, 10.0), &servers, &ctx()), 1);
+        // after the work drains, ties break to the lowest id
+        assert_eq!(jsq.route(&arrival(1, 9.0, 10.0), &servers, &ctx()), 0);
+    }
+
+    #[test]
+    fn virtual_queue_drains_over_time() {
+        let mut s = ServerState::new(0, 1.0);
+        s.assign(0.0, 2.0);
+        s.assign(0.0, 2.0);
+        assert_eq!(s.queue_len(), 2);
+        assert!((s.outstanding_work_s(1.0) - 3.0).abs() < 1e-12);
+        s.advance(2.5);
+        assert_eq!(s.queue_len(), 1, "first request completes at t=2");
+        s.advance(4.0);
+        assert_eq!(s.queue_len(), 0);
+        assert_eq!(s.outstanding_work_s(5.0), 0.0);
+    }
+
+    #[test]
+    fn quality_aware_prefers_fast_idle_server() {
+        let servers = ServerState::fleet(&[0.5, 2.0]);
+        let mut qa = QualityAwareRouter::new(BatchDelayModel::paper());
+        let a = arrival(0, 0.0, 8.0);
+        let fast = qa.predict_steps(&a, &servers[1], &ctx());
+        let slow = qa.predict_steps(&a, &servers[0], &ctx());
+        assert!(fast > slow, "fast {fast} vs slow {slow}");
+        assert_eq!(qa.route(&a, &servers, &ctx()), 1);
+    }
+
+    #[test]
+    fn quality_aware_avoids_backlogged_fast_server() {
+        let mut servers = ServerState::fleet(&[1.0, 2.0]);
+        // Fast server is buried: 20 s of queued work vs a 8 s deadline.
+        servers[1].assign(0.0, 20.0);
+        let mut qa = QualityAwareRouter::new(BatchDelayModel::paper());
+        assert_eq!(qa.route(&arrival(0, 1.0, 8.0), &servers, &ctx()), 0);
+    }
+
+    #[test]
+    fn quality_aware_predicts_outage_past_deadline() {
+        let mut s = ServerState::new(0, 1.0);
+        s.assign(0.0, 50.0);
+        let qa = QualityAwareRouter::new(BatchDelayModel::paper());
+        assert_eq!(qa.predict_steps(&arrival(0, 0.0, 5.0), &s, &ctx()), 0);
+    }
+
+    #[test]
+    fn route_trace_assigns_everyone_deterministically() {
+        let t = trace(5.0, 60.0, 11);
+        for kind in RouterKind::all() {
+            let mut fleet_a = ServerState::fleet(&[0.5, 1.0, 1.5]);
+            let mut fleet_b = ServerState::fleet(&[0.5, 1.0, 1.5]);
+            let delay = BatchDelayModel::paper();
+            let a = route_trace(&t, &mut fleet_a, kind.build(delay).as_mut(), &delay);
+            let b = route_trace(&t, &mut fleet_b, kind.build(delay).as_mut(), &delay);
+            assert_eq!(a.len(), t.len(), "{}: every arrival routed", kind.name());
+            assert_eq!(a, b, "{}: replay must be identical", kind.name());
+            let total: usize = fleet_a.iter().map(|s| s.routed).sum();
+            assert_eq!(total, t.len(), "{}: conservation", kind.name());
+        }
+    }
+
+    #[test]
+    fn router_kind_names_round_trip() {
+        for kind in RouterKind::all() {
+            assert_eq!(RouterKind::from_name(kind.name()), Some(kind));
+        }
+        assert_eq!(RouterKind::from_name("rr"), Some(RouterKind::RoundRobin));
+        assert_eq!(RouterKind::from_name("shortest-queue"), Some(RouterKind::JoinShortestQueue));
+        assert_eq!(RouterKind::from_name("quality"), Some(RouterKind::QualityAware));
+        assert_eq!(RouterKind::from_name("bogus"), None);
+    }
+
+    #[test]
+    #[should_panic(expected = "every server failed")]
+    fn all_failed_fleet_panics() {
+        let mut servers = ServerState::fleet(&[1.0]);
+        servers[0].alive = false;
+        RoundRobinRouter::default().route(&arrival(0, 0.0, 5.0), &servers, &ctx());
+    }
+}

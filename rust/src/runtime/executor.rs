@@ -71,7 +71,9 @@ impl<'a> DenoiseExecutor<'a> {
         let bucket = self
             .store
             .bucket_for(n)
-            .with_context(|| format!("batch of {n} exceeds top bucket {}", self.store.max_bucket()))?;
+            .with_context(|| {
+                format!("batch of {n} exceeds top bucket {}", self.store.max_bucket())
+            })?;
         let bs = bucket as usize;
 
         for (i, task) in tasks.iter().enumerate() {
@@ -166,8 +168,9 @@ mod tests {
         let Some(store) = store() else { return };
         let mut exec = DenoiseExecutor::new(&store);
         let dim = exec.data_dim();
-        let latents: Vec<Vec<f32>> =
-            (0..3).map(|i| (0..dim).map(|j| ((i * dim + j) % 17) as f32 * 0.05 - 0.4).collect()).collect();
+        let latents: Vec<Vec<f32>> = (0..3)
+            .map(|i| (0..dim).map(|j| ((i * dim + j) % 17) as f32 * 0.05 - 0.4).collect())
+            .collect();
         let ts = [(1000, 800), (600, 400), (200, 0)];
         let batch: Vec<BatchInput> = latents
             .iter()

@@ -103,7 +103,8 @@ mod tests {
 
     #[test]
     fn rejects_missing_bucket_entry() {
-        let bad = SAMPLE.replace("\"4\": {\"file\": \"denoise_b4.hlo.txt\"}", "\"9\": {\"file\": \"x\"}");
+        let bad =
+            SAMPLE.replace("\"4\": {\"file\": \"denoise_b4.hlo.txt\"}", "\"9\": {\"file\": \"x\"}");
         let err = Manifest::parse(&bad).unwrap_err();
         assert!(err.to_string().contains("bucket 4"), "{err}");
     }

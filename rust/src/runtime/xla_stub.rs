@@ -40,8 +40,7 @@ impl std::error::Error for XlaError {}
 
 type Result<T> = std::result::Result<T, XlaError>;
 
-const NO_PJRT: &str =
-    "PJRT execution unavailable: built without the `pjrt` feature (stub runtime)";
+const NO_PJRT: &str = "PJRT execution unavailable: built without the `pjrt` feature (stub runtime)";
 
 /// Element types the stub's literals accept (f32/i32 are all the
 /// executor uses).

@@ -69,7 +69,9 @@ impl BatchScheduler for FixedSizeBatching {
             }
             schedule.batches.push(Batch { start: now, duration: gx, tasks });
             now += gx;
-            active.retain(|&k| tau[k] >= 0.0 && schedule.steps[k] < max_steps && tau[k] >= delay.g(1));
+            active.retain(|&k| {
+                tau[k] >= 0.0 && schedule.steps[k] < max_steps && tau[k] >= delay.g(1)
+            });
         }
         schedule
     }
@@ -112,8 +114,11 @@ mod tests {
 
     #[test]
     fn empty_input() {
-        let s =
-            FixedSizeBatching::default().schedule(&[], &BatchDelayModel::paper(), &PowerLawQuality::paper());
+        let s = FixedSizeBatching::default().schedule(
+            &[],
+            &BatchDelayModel::paper(),
+            &PowerLawQuality::paper(),
+        );
         assert!(s.batches.is_empty());
     }
 }

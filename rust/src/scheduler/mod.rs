@@ -87,7 +87,8 @@ mod proptests {
             let services = random_services(g);
             let delay = random_delay(g);
             let quality = PowerLawQuality::paper();
-            let st = Stacking::default().schedule(&services, &delay, &quality).mean_quality(&quality);
+            let st =
+                Stacking::default().schedule(&services, &delay, &quality).mean_quality(&quality);
             let gr = GreedyBatching.schedule(&services, &delay, &quality).mean_quality(&quality);
             // allow microscopic numeric slack
             prop_assert!(g, st <= gr * 1.02 + 1e-9, "stacking {st} > greedy {gr}");
@@ -102,10 +103,15 @@ mod proptests {
             let services = random_services(g);
             let delay = random_delay(g);
             let quality = PowerLawQuality::paper();
-            let widened: Vec<Service> =
-                services.iter().map(|s| Service::new(s.id, s.gen_budget + g.f64_in(0.5, 5.0))).collect();
-            let base = Stacking::default().schedule(&services, &delay, &quality).mean_quality(&quality);
-            let wide = Stacking::default().schedule(&widened, &delay, &quality).mean_quality(&quality);
+            let widened: Vec<Service> = services
+                .iter()
+                .map(|s| Service::new(s.id, s.gen_budget + g.f64_in(0.5, 5.0)))
+                .collect();
+
+            let base =
+                Stacking::default().schedule(&services, &delay, &quality).mean_quality(&quality);
+            let wide =
+                Stacking::default().schedule(&widened, &delay, &quality).mean_quality(&quality);
             prop_assert!(g, wide <= base + 1e-9, "widened {wide} > base {base}");
             true
         });

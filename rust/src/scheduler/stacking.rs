@@ -96,8 +96,7 @@ impl<'a> Trial<'a> {
         let tau: Vec<f64> = services.iter().map(|s| s.gen_budget).collect();
         // Services whose budget cannot fit even a singleton batch are
         // outages from the start.
-        let active =
-            (0..services.len()).filter(|&k| tau[k] >= delay.g(1)).collect();
+        let active = (0..services.len()).filter(|&k| tau[k] >= delay.g(1)).collect();
         Self {
             delay,
             max_steps,

@@ -59,7 +59,11 @@ pub struct Schedule {
 
 impl Schedule {
     pub fn empty(num_services: usize) -> Self {
-        Self { batches: Vec::new(), steps: vec![0; num_services], completion: vec![0.0; num_services] }
+        Self {
+            batches: Vec::new(),
+            steps: vec![0; num_services],
+            completion: vec![0.0; num_services],
+        }
     }
 
     /// Total wall-clock time of the generation phase.

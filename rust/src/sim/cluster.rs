@@ -1,0 +1,416 @@
+//! Multi-server cluster simulation — N independent `sim::dynamic`
+//! server instances behind a pluggable [`Router`].
+//!
+//! This is the first sharding step toward the ROADMAP's
+//! millions-of-users north star: arrivals stream in from one
+//! [`ArrivalTrace`], the routing layer assigns each request to a server
+//! at its arrival instant (using only causally-available state — the
+//! virtual queues in [`crate::routing`]), and every server then runs
+//! the full single-server serving loop on its share: its own
+//! [`EpochPolicy`](crate::coordinator::EpochPolicy) epochs, per-epoch
+//! STACKING + bandwidth (P0) solve, deadline-aware admission and
+//! carry-over queue. GPU heterogeneity is first-class: each server has
+//! a speed factor that scales the batch-delay model (`g_s(X) =
+//! g(X)/speed`).
+//!
+//! The cluster layer owns:
+//! * **arrival splitting** — routing decisions + per-server sub-traces
+//!   (ids re-densified per server, mapped back on merge);
+//! * **cross-server carry-over accounting** — a deferred request stays
+//!   on its server (migration is a ROADMAP follow-up), and the merged
+//!   report reconciles per-server deferral counts against the fleet
+//!   total;
+//! * **merged reporting** — one outcome per trace arrival under its
+//!   original id, plus per-server and fleet-wide
+//!   [`OutcomeStats`](crate::metrics::OutcomeStats).
+//!
+//! Determinism: everything is seeded and clockless, so identical
+//! inputs replay bit-identically; a 1-server cluster at speed 1.0
+//! reproduces [`simulate_dynamic`] exactly (the cluster layer adds zero
+//! bias — asserted by `tests/cluster_dominance.rs`).
+
+use crate::bandwidth::Allocator;
+use crate::delay::BatchDelayModel;
+use crate::metrics::{OutcomeStats, ResolvedSample};
+use crate::quality::QualityModel;
+use crate::routing::{route_trace, RouterKind, ServerState};
+use crate::scheduler::BatchScheduler;
+use crate::trace::{Arrival, ArrivalTrace};
+
+use super::dynamic::{simulate_dynamic, Disposition, DynamicConfig, DynamicReport, RequestOutcome};
+
+/// Evenly-spaced GPU speed factors for an `n`-server fleet in
+/// `[lo, hi]`. A single server gets the midpoint, so a homogeneous
+/// range `[1, 1]` yields exactly 1.0 (the bit-identity case).
+pub fn server_speeds(n: usize, lo: f64, hi: f64) -> Vec<f64> {
+    assert!(n >= 1, "cluster needs at least one server");
+    assert!(lo > 0.0 && hi >= lo, "speed range invalid: [{lo}, {hi}]");
+    if n == 1 {
+        return vec![(lo + hi) / 2.0];
+    }
+    (0..n).map(|i| lo + (hi - lo) * i as f64 / (n - 1) as f64).collect()
+}
+
+/// Settings for one cluster run.
+#[derive(Debug, Clone)]
+pub struct ClusterConfig {
+    /// Per-server GPU speed factors (1.0 = the reference delay model).
+    pub speeds: Vec<f64>,
+    /// Dispatch policy.
+    pub router: RouterKind,
+    /// Per-server serving-loop settings (shared by every server).
+    pub dynamic: DynamicConfig,
+}
+
+impl ClusterConfig {
+    /// Homogeneous fleet of `n` reference-speed servers.
+    pub fn homogeneous(n: usize, router: RouterKind, dynamic: DynamicConfig) -> Self {
+        Self { speeds: server_speeds(n, 1.0, 1.0), router, dynamic }
+    }
+
+    /// The single mapping from config-file settings to the cluster
+    /// simulator's runtime config (used by the CLI and
+    /// `bench::fig_cluster`).
+    pub fn from_settings(
+        c: &crate::config::ClusterSettings,
+        d: &crate::config::DynamicSettings,
+    ) -> Self {
+        Self {
+            speeds: server_speeds(c.servers, c.speed_min, c.speed_max),
+            router: c.router,
+            dynamic: DynamicConfig::from(d),
+        }
+    }
+
+    pub fn servers(&self) -> usize {
+        self.speeds.len()
+    }
+}
+
+/// One server's slice of a cluster run.
+#[derive(Debug, Clone)]
+pub struct ServerReport {
+    pub server: usize,
+    pub speed: f64,
+    /// Global arrival ids this server handled, in arrival order (the
+    /// sub-trace id `i` maps to `assigned_ids[i]`).
+    pub assigned_ids: Vec<usize>,
+    /// The single-server dynamic report over the sub-trace (outcome ids
+    /// are sub-trace-local; the merged view in [`ClusterReport`] uses
+    /// global ids).
+    pub report: DynamicReport,
+}
+
+impl ServerReport {
+    pub fn assigned(&self) -> usize {
+        self.assigned_ids.len()
+    }
+
+    /// Per-server summary over this server's share.
+    pub fn stats(&self) -> OutcomeStats {
+        OutcomeStats::from_samples(&samples(&self.report.outcomes))
+    }
+}
+
+/// Complete result of a cluster run.
+#[derive(Debug, Clone)]
+pub struct ClusterReport {
+    /// One outcome per trace arrival, indexed by (global) arrival id.
+    pub outcomes: Vec<RequestOutcome>,
+    /// Destination server per arrival, indexed by arrival id.
+    pub assignment: Vec<usize>,
+    pub servers: Vec<ServerReport>,
+    /// Total simulated span (max over servers).
+    pub horizon_s: f64,
+}
+
+fn samples(outcomes: &[RequestOutcome]) -> Vec<ResolvedSample> {
+    outcomes
+        .iter()
+        .map(|o| ResolvedSample {
+            quality: o.quality,
+            met: o.met,
+            served: o.disposition == Disposition::Served,
+            e2e_s: o.e2e_s,
+            wait_s: o.wait_s,
+        })
+        .collect()
+}
+
+impl ClusterReport {
+    // The aggregate definitions live in `metrics::OutcomeStats`; the
+    // named accessors below are thin delegates so the fleet objective
+    // can never drift from the printed summary.
+
+    pub fn served(&self) -> usize {
+        self.fleet_stats().served
+    }
+
+    pub fn dropped(&self) -> usize {
+        self.outcomes.len() - self.served()
+    }
+
+    /// The fleet (P0) objective: mean charged quality over every
+    /// request that entered the cluster.
+    pub fn mean_quality(&self) -> f64 {
+        self.fleet_stats().mean_quality
+    }
+
+    pub fn outage_rate(&self) -> f64 {
+        self.fleet_stats().outage_rate
+    }
+
+    /// Fleet-wide summary (quality, outage, e2e percentiles, wait).
+    pub fn fleet_stats(&self) -> OutcomeStats {
+        OutcomeStats::from_samples(&samples(&self.outcomes))
+    }
+
+    /// Deferral (cross-epoch carry-over) events summed over servers.
+    pub fn total_deferrals(&self) -> usize {
+        self.servers
+            .iter()
+            .map(|s| s.report.outcomes.iter().map(|o| o.deferrals as usize).sum::<usize>())
+            .sum()
+    }
+
+    /// Deepest per-epoch queue any single server saw.
+    pub fn peak_queue_depth(&self) -> usize {
+        self.servers.iter().map(|s| s.report.peak_queue_depth()).max().unwrap_or(0)
+    }
+
+    /// Epoch solves summed over servers.
+    pub fn total_epochs(&self) -> usize {
+        self.servers.iter().map(|s| s.report.epochs.len()).sum()
+    }
+}
+
+/// Run the cluster simulation of `trace` under the given policies.
+///
+/// `delay` is the reference (speed-1.0) batch-delay model; each server
+/// runs `simulate_dynamic` under `g(X)/speed`.
+///
+/// The one `allocator` instance is threaded through every server's
+/// (sequential) serving loop. A *stateful* allocator — i.e.
+/// [`PsoConfig::warm_start`](crate::bandwidth::PsoConfig) — therefore
+/// carries swarm state from server k into server k+1's first epoch and
+/// across `simulate_cluster` calls on the same instance; pass a fresh
+/// (or [`reset`](crate::bandwidth::PsoAllocator::reset)) allocator per
+/// run for bit-identical replay, exactly as with `simulate_dynamic`.
+/// Per-server allocator instances are a follow-up alongside server
+/// failure/rebalancing (see ROADMAP).
+pub fn simulate_cluster(
+    trace: &ArrivalTrace,
+    scheduler: &dyn BatchScheduler,
+    allocator: &dyn Allocator,
+    delay: &BatchDelayModel,
+    quality: &dyn QualityModel,
+    cfg: &ClusterConfig,
+) -> ClusterReport {
+    let n = cfg.servers();
+    assert!(n >= 1, "cluster needs at least one server");
+
+    // ---- arrival splitting (the routing layer) ----
+    let mut fleet = ServerState::fleet(&cfg.speeds);
+    let mut router = cfg.router.build(*delay);
+    let assignment = route_trace(trace, &mut fleet, router.as_mut(), delay);
+
+    let mut per_server: Vec<Vec<Arrival>> = vec![Vec::new(); n];
+    let mut assigned_ids: Vec<Vec<usize>> = vec![Vec::new(); n];
+    for (arrival, &server) in trace.arrivals.iter().zip(&assignment) {
+        // Re-densify ids so the sub-trace is a valid ArrivalTrace; the
+        // dense sub-id is the index into assigned_ids[server].
+        let sub = Arrival { id: per_server[server].len(), ..*arrival };
+        per_server[server].push(sub);
+        assigned_ids[server].push(arrival.id);
+    }
+
+    // ---- independent per-server serving loops ----
+    let mut outcomes: Vec<Option<RequestOutcome>> = vec![None; trace.len()];
+    let mut servers = Vec::with_capacity(n);
+    let mut horizon = 0.0f64;
+    for (server, (arrivals, ids)) in per_server.into_iter().zip(assigned_ids).enumerate() {
+        let speed = cfg.speeds[server];
+        let scaled = BatchDelayModel::new(delay.a / speed, delay.b / speed);
+        let sub_trace = ArrivalTrace {
+            arrivals,
+            total_bandwidth_hz: trace.total_bandwidth_hz,
+            content_bits: trace.content_bits,
+        };
+        let report =
+            simulate_dynamic(&sub_trace, scheduler, allocator, &scaled, quality, &cfg.dynamic);
+        horizon = horizon.max(report.horizon_s);
+        // ---- merge: map sub-trace outcomes back to global ids ----
+        for outcome in &report.outcomes {
+            let global = ids[outcome.id];
+            debug_assert!(outcomes[global].is_none(), "request {global} resolved twice");
+            outcomes[global] = Some(RequestOutcome { id: global, ..*outcome });
+        }
+        servers.push(ServerReport { server, speed, assigned_ids: ids, report });
+    }
+
+    let outcomes: Vec<RequestOutcome> =
+        outcomes.into_iter().map(|o| o.expect("every request routed and resolved")).collect();
+    ClusterReport { outcomes, assignment, servers, horizon_s: horizon }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bandwidth::EqualAllocator;
+    use crate::config::{ArrivalProcessKind, ArrivalSettings, ExperimentConfig};
+    use crate::quality::PowerLawQuality;
+    use crate::scheduler::Stacking;
+
+    fn trace(rate: f64, horizon: f64, seed: u64) -> ArrivalTrace {
+        let cfg = ExperimentConfig::paper();
+        let arrival = ArrivalSettings {
+            process: ArrivalProcessKind::Poisson,
+            rate_hz: rate,
+            burst_rate_hz: rate,
+            period_s: 60.0,
+            duty: 0.5,
+            horizon_s: horizon,
+            max_requests: 0,
+        };
+        ArrivalTrace::generate(&cfg.scenario, &arrival, seed)
+    }
+
+    fn run(trace: &ArrivalTrace, cfg: &ClusterConfig) -> ClusterReport {
+        simulate_cluster(
+            trace,
+            &Stacking::default(),
+            &EqualAllocator,
+            &BatchDelayModel::paper(),
+            &PowerLawQuality::paper(),
+            cfg,
+        )
+    }
+
+    #[test]
+    fn every_request_resolved_exactly_once_across_servers() {
+        let t = trace(6.0, 60.0, 1);
+        for router in RouterKind::all() {
+            let cfg = ClusterConfig {
+                speeds: server_speeds(3, 0.5, 1.5),
+                router,
+                dynamic: DynamicConfig::default(),
+            };
+            let report = run(&t, &cfg);
+            assert_eq!(report.outcomes.len(), t.len(), "{}", router.name());
+            assert_eq!(report.assignment.len(), t.len());
+            for (i, o) in report.outcomes.iter().enumerate() {
+                assert_eq!(o.id, i, "{}: outcomes indexed by global id", router.name());
+            }
+            let assigned: usize = report.servers.iter().map(|s| s.assigned()).sum();
+            assert_eq!(assigned, t.len(), "{}: conservation", router.name());
+            assert_eq!(report.served() + report.dropped(), t.len());
+        }
+    }
+
+    #[test]
+    fn deterministic_replay() {
+        let t = trace(8.0, 50.0, 7);
+        let cfg = ClusterConfig {
+            speeds: server_speeds(4, 0.5, 2.0),
+            router: RouterKind::QualityAware,
+            dynamic: DynamicConfig::default(),
+        };
+        let a = run(&t, &cfg);
+        let b = run(&t, &cfg);
+        assert_eq!(a.assignment, b.assignment);
+        for (x, y) in a.outcomes.iter().zip(&b.outcomes) {
+            assert_eq!(x.disposition, y.disposition);
+            assert_eq!(x.steps, y.steps);
+            assert_eq!(x.quality.to_bits(), y.quality.to_bits());
+            assert_eq!(x.e2e_s.to_bits(), y.e2e_s.to_bits());
+        }
+        assert_eq!(a.horizon_s.to_bits(), b.horizon_s.to_bits());
+    }
+
+    #[test]
+    fn sharding_relieves_overload() {
+        // A λ that buries one server is comfortable for four.
+        let t = trace(10.0, 60.0, 3);
+        let dynamic = DynamicConfig::default();
+        let single = ClusterConfig::homogeneous(1, RouterKind::RoundRobin, dynamic);
+        let quad = ClusterConfig::homogeneous(4, RouterKind::RoundRobin, dynamic);
+        let one = run(&t, &single);
+        let four = run(&t, &quad);
+        assert!(
+            four.mean_quality() < one.mean_quality(),
+            "4 servers {} must beat 1 server {}",
+            four.mean_quality(),
+            one.mean_quality()
+        );
+        assert!(four.outage_rate() <= one.outage_rate());
+    }
+
+    #[test]
+    fn fleet_stats_match_outcome_aggregates() {
+        let t = trace(5.0, 40.0, 9);
+        let cfg = ClusterConfig {
+            speeds: server_speeds(2, 0.8, 1.2),
+            router: RouterKind::JoinShortestQueue,
+            dynamic: DynamicConfig::default(),
+        };
+        let report = run(&t, &cfg);
+        let stats = report.fleet_stats();
+        assert_eq!(stats.count, t.len());
+        // against a direct scan of the merged outcomes (the
+        // DynamicReport definitions)
+        let served =
+            report.outcomes.iter().filter(|o| o.disposition == Disposition::Served).count();
+        let mean_q = report.outcomes.iter().map(|o| o.quality).sum::<f64>() / t.len() as f64;
+        let outage = report.outcomes.iter().filter(|o| !o.met).count() as f64 / t.len() as f64;
+        assert_eq!(stats.served, served);
+        assert!((stats.mean_quality - mean_q).abs() < 1e-12);
+        assert!((stats.outage_rate - outage).abs() < 1e-12);
+        // per-server counts partition the fleet
+        let counts: usize = report.servers.iter().map(|s| s.stats().count).sum();
+        assert_eq!(counts, t.len());
+    }
+
+    #[test]
+    fn speeds_are_evenly_spaced_and_midpoint_for_one() {
+        assert_eq!(server_speeds(1, 1.0, 1.0), vec![1.0]);
+        assert_eq!(server_speeds(1, 0.5, 1.5), vec![1.0]);
+        let s = server_speeds(3, 0.5, 1.5);
+        assert_eq!(s.len(), 3);
+        assert!((s[0] - 0.5).abs() < 1e-12);
+        assert!((s[1] - 1.0).abs() < 1e-12);
+        assert!((s[2] - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_trace_is_empty_report() {
+        let t = ArrivalTrace {
+            arrivals: vec![],
+            total_bandwidth_hz: 40_000.0,
+            content_bits: 24_000.0,
+        };
+        let cfg = ClusterConfig::homogeneous(3, RouterKind::RoundRobin, DynamicConfig::default());
+        let report = run(&t, &cfg);
+        assert!(report.outcomes.is_empty());
+        assert_eq!(report.mean_quality(), 0.0);
+        assert_eq!(report.total_epochs(), 0);
+    }
+
+    #[test]
+    fn deferral_accounting_reconciles() {
+        use crate::coordinator::EpochPolicy;
+        let dynamic =
+            DynamicConfig { epoch: EpochPolicy::new(0.25, 4), ..DynamicConfig::default() };
+        let cfg = ClusterConfig {
+            speeds: server_speeds(2, 0.6, 1.0),
+            router: RouterKind::RoundRobin,
+            dynamic,
+        };
+        let report = run(&trace(12.0, 40.0, 6), &cfg);
+        let recorded: usize = report
+            .servers
+            .iter()
+            .map(|s| s.report.epochs.iter().map(|e| e.deferred).sum::<usize>())
+            .sum();
+        assert_eq!(report.total_deferrals(), recorded, "carry-over accounting must reconcile");
+    }
+}

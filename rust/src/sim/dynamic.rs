@@ -618,7 +618,11 @@ mod tests {
 
     #[test]
     fn empty_trace_is_empty_report() {
-        let t = ArrivalTrace { arrivals: vec![], total_bandwidth_hz: 40_000.0, content_bits: 24_000.0 };
+        let t = ArrivalTrace {
+            arrivals: vec![],
+            total_bandwidth_hz: 40_000.0,
+            content_bits: 24_000.0,
+        };
         let report = run(&t, &DynamicConfig::default());
         assert!(report.outcomes.is_empty());
         assert!(report.epochs.is_empty());

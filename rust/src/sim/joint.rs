@@ -54,7 +54,12 @@ mod tests {
     use crate::trace::generate;
 
     fn fast_pso() -> PsoAllocator {
-        PsoAllocator::new(PsoConfig { particles: 8, iterations: 10, patience: 5, ..Default::default() })
+        PsoAllocator::new(PsoConfig {
+            particles: 8,
+            iterations: 10,
+            patience: 5,
+            ..Default::default()
+        })
     }
 
     #[test]

@@ -3,9 +3,11 @@
 //! Section II, producing the per-service end-to-end outcomes behind
 //! Figs. 2a–2c.
 
+pub mod cluster;
 pub mod dynamic;
 pub mod joint;
 
+pub use cluster::{server_speeds, simulate_cluster, ClusterConfig, ClusterReport, ServerReport};
 pub use dynamic::{
     simulate_dynamic, Disposition, DynamicConfig, DynamicReport, EpochRecord, RequestOutcome,
 };

@@ -103,7 +103,12 @@ impl ArrivalTrace {
                 continue;
             }
             let deadline_s = rng.uniform_in(scenario.deadline_lo, scenario.deadline_hi);
-            arrivals.push(Arrival { id: arrivals.len(), t_s: t, deadline_s, link: channels.draw() });
+            arrivals.push(Arrival {
+                id: arrivals.len(),
+                t_s: t,
+                deadline_s,
+                link: channels.draw(),
+            });
         }
         Self {
             arrivals,

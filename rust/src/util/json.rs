@@ -382,8 +382,14 @@ mod tests {
         }"#;
         let v = parse(doc).unwrap();
         assert_eq!(v.get("data_dim").unwrap().as_usize(), Some(64));
-        let buckets: Vec<usize> =
-            v.get("buckets").unwrap().as_arr().unwrap().iter().map(|b| b.as_usize().unwrap()).collect();
+        let buckets: Vec<usize> = v
+            .get("buckets")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|b| b.as_usize().unwrap())
+            .collect();
         assert_eq!(buckets, vec![1, 2, 4]);
         assert_eq!(
             v.get("hlo").unwrap().get("1").unwrap().get("file").unwrap().as_str(),

@@ -1,0 +1,146 @@
+//! Cluster-layer regression tests (ISSUE 2):
+//!
+//! * **zero bias** — an N=1 cluster at reference speed reproduces
+//!   `simulate_dynamic` bit-for-bit, whatever the routing policy: the
+//!   cluster layer adds accounting, never behaviour;
+//! * **routing dominance** — on a heterogeneous-GPU fleet under load,
+//!   quality-aware routing achieves fleet mean quality at least as good
+//!   as blind round-robin (lower FID is better).
+
+use aigc_edge::bandwidth::EqualAllocator;
+use aigc_edge::config::{ArrivalProcessKind, ArrivalSettings, ExperimentConfig};
+use aigc_edge::delay::BatchDelayModel;
+use aigc_edge::quality::PowerLawQuality;
+use aigc_edge::routing::RouterKind;
+use aigc_edge::scheduler::Stacking;
+use aigc_edge::sim::{
+    server_speeds, simulate_cluster, simulate_dynamic, ClusterConfig, ClusterReport, DynamicConfig,
+};
+use aigc_edge::trace::ArrivalTrace;
+
+fn trace(rate: f64, horizon: f64, seed: u64) -> ArrivalTrace {
+    let cfg = ExperimentConfig::paper();
+    let arrival = ArrivalSettings {
+        process: ArrivalProcessKind::Poisson,
+        rate_hz: rate,
+        burst_rate_hz: rate,
+        period_s: 60.0,
+        duty: 0.5,
+        horizon_s: horizon,
+        max_requests: 0,
+    };
+    ArrivalTrace::generate(&cfg.scenario, &arrival, seed)
+}
+
+fn run_cluster(trace: &ArrivalTrace, cfg: &ClusterConfig) -> ClusterReport {
+    simulate_cluster(
+        trace,
+        &Stacking::default(),
+        &EqualAllocator,
+        &BatchDelayModel::paper(),
+        &PowerLawQuality::paper(),
+        cfg,
+    )
+}
+
+#[test]
+fn single_server_cluster_is_bit_identical_to_simulate_dynamic() {
+    let t = trace(4.0, 90.0, 7);
+    let dyn_cfg = DynamicConfig::default();
+    let reference = simulate_dynamic(
+        &t,
+        &Stacking::default(),
+        &EqualAllocator,
+        &BatchDelayModel::paper(),
+        &PowerLawQuality::paper(),
+        &dyn_cfg,
+    );
+    for router in RouterKind::all() {
+        let cluster_cfg = ClusterConfig::homogeneous(1, router, dyn_cfg);
+        assert_eq!(cluster_cfg.speeds, vec![1.0], "speed must be exactly 1.0");
+        let cluster = run_cluster(&t, &cluster_cfg);
+
+        assert_eq!(cluster.outcomes.len(), reference.outcomes.len(), "{}", router.name());
+        for (c, r) in cluster.outcomes.iter().zip(&reference.outcomes) {
+            assert_eq!(c.id, r.id);
+            assert_eq!(c.disposition, r.disposition, "{}: request {}", router.name(), r.id);
+            assert_eq!(c.steps, r.steps);
+            assert_eq!(c.deferrals, r.deferrals);
+            assert_eq!(c.epoch, r.epoch);
+            assert_eq!(c.met, r.met);
+            assert_eq!(c.quality.to_bits(), r.quality.to_bits(), "request {}", r.id);
+            assert_eq!(c.e2e_s.to_bits(), r.e2e_s.to_bits(), "request {}", r.id);
+            assert_eq!(c.wait_s.to_bits(), r.wait_s.to_bits(), "request {}", r.id);
+            assert_eq!(c.resolved_s.to_bits(), r.resolved_s.to_bits(), "request {}", r.id);
+        }
+        assert_eq!(cluster.horizon_s.to_bits(), reference.horizon_s.to_bits());
+        // epoch traces agree too
+        let server = &cluster.servers[0].report;
+        assert_eq!(server.epochs.len(), reference.epochs.len());
+        for (c, r) in server.epochs.iter().zip(&reference.epochs) {
+            assert_eq!(c.t_solve_s.to_bits(), r.t_solve_s.to_bits());
+            assert_eq!(c.queue_depth, r.queue_depth);
+            assert_eq!(c.served, r.served);
+            assert_eq!(c.dropped, r.dropped);
+            assert_eq!(c.makespan_s.to_bits(), r.makespan_s.to_bits());
+        }
+    }
+}
+
+#[test]
+fn quality_aware_routing_dominates_round_robin_on_heterogeneous_fleet() {
+    // Speeds [0.4, 1.0, 1.6]: round-robin blindly hands the 0.4× GPU a
+    // third of the traffic; at λ = 6 Hz that share crawls (about one
+    // denoising step per request inside the plan horizon) while the
+    // 1.6× server idles below capacity. Quality-aware dispatch predicts
+    // the step marginal per server and shifts load accordingly.
+    let t = trace(6.0, 80.0, 11);
+    let speeds = server_speeds(3, 0.4, 1.6);
+    let dynamic = DynamicConfig::default();
+    let rr = run_cluster(
+        &t,
+        &ClusterConfig { speeds: speeds.clone(), router: RouterKind::RoundRobin, dynamic },
+    );
+    let qa = run_cluster(
+        &t,
+        &ClusterConfig { speeds, router: RouterKind::QualityAware, dynamic },
+    );
+    assert!(
+        qa.mean_quality() <= rr.mean_quality() + 1e-6,
+        "quality-aware fleet FID {:.2} must not lose to round-robin {:.2}",
+        qa.mean_quality(),
+        rr.mean_quality()
+    );
+    // and it must do so by actually shifting traffic off the slow GPU
+    assert!(
+        qa.servers[0].assigned() < rr.servers[0].assigned(),
+        "quality-aware sent {} requests to the 0.4x server vs round-robin's {}",
+        qa.servers[0].assigned(),
+        rr.servers[0].assigned()
+    );
+}
+
+#[test]
+fn dominance_holds_across_seeds() {
+    // The λ = 6 Hz heterogeneous dominance above is not a lucky seed:
+    // repeat over several seeded traces.
+    let speeds = server_speeds(3, 0.4, 1.6);
+    let dynamic = DynamicConfig::default();
+    for seed in [1, 2, 3] {
+        let t = trace(6.0, 40.0, seed);
+        let rr = run_cluster(
+            &t,
+            &ClusterConfig { speeds: speeds.clone(), router: RouterKind::RoundRobin, dynamic },
+        );
+        let qa = run_cluster(
+            &t,
+            &ClusterConfig { speeds: speeds.clone(), router: RouterKind::QualityAware, dynamic },
+        );
+        assert!(
+            qa.mean_quality() <= rr.mean_quality() + 1e-6,
+            "seed {seed}: quality-aware {:.2} vs round-robin {:.2}",
+            qa.mean_quality(),
+            rr.mean_quality()
+        );
+    }
+}

@@ -103,7 +103,13 @@ fn zero_bandwidth_service_is_outage_not_panic() {
     let w = generate(&cfg.scenario, 1);
     let mut alloc = vec![w.total_bandwidth_hz / w.k() as f64; w.k()];
     alloc[3] = 0.0; // infinite tx delay
-    let out = evaluate(&w, &alloc, &Stacking::default(), &BatchDelayModel::paper(), &PowerLawQuality::paper());
+    let out = evaluate(
+        &w,
+        &alloc,
+        &Stacking::default(),
+        &BatchDelayModel::paper(),
+        &PowerLawQuality::paper(),
+    );
     assert_eq!(out.services[3].steps, 0);
     assert!(!out.services[3].met);
     assert!(out.services.iter().filter(|s| s.id != 3).all(|s| s.met));

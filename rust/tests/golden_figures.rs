@@ -178,6 +178,31 @@ fn golden_fig2c_rows() {
 }
 
 #[test]
+fn golden_fig_cluster_router_sweep() {
+    // Reuses the committed seed-7 PCG stream (`workload_seed7.json`
+    // pins that generator path) so the fixture stays machine-portable:
+    // the trace marks are exact u64/IEEE arithmetic, only the figure
+    // aggregates need the libm tolerance.
+    let mut cfg = ExperimentConfig::paper();
+    cfg.seed = 7;
+    cfg.cluster.servers = 3;
+    cfg.cluster.speed_min = 0.5;
+    cfg.cluster.speed_max = 1.5;
+    let rows = aigc_edge::bench::fig_cluster(&cfg, &[1.0, 4.0], 40.0);
+    let mut flat = BTreeMap::new();
+    for r in rows {
+        let tag = format!("lambda{:04.1}.{}", r.lambda_hz, r.router.name());
+        flat.insert(format!("{tag}.requests"), r.requests as f64);
+        flat.insert(format!("{tag}.served"), r.served as f64);
+        flat.insert(format!("{tag}.mean_quality"), r.mean_quality);
+        flat.insert(format!("{tag}.outage_rate"), r.outage_rate);
+        flat.insert(format!("{tag}.p99_e2e"), r.p99_e2e_s);
+        flat.insert(format!("{tag}.max_share"), r.max_share);
+    }
+    check_or_bless("golden_fig_cluster.json", &flat, 5e-3, 2e-3);
+}
+
+#[test]
 fn golden_fig3_dynamic_sweep() {
     let rows = aigc_edge::bench::fig3_dynamic(&ExperimentConfig::paper(), &[1.0, 4.0], 40.0);
     let mut flat = BTreeMap::new();

@@ -44,8 +44,9 @@ fn proposed_beats_all_baselines_on_mean_quality() {
     let trials = 3;
     for seed in 0..trials {
         let w = generate(&cfg.scenario, 100 + seed);
-        let proposed =
-            solve_joint(&w, &Stacking::default(), &fast_pso(), &delay, &quality).outcome.mean_quality();
+        let proposed = solve_joint(&w, &Stacking::default(), &fast_pso(), &delay, &quality)
+            .outcome
+            .mean_quality();
         let single = solve_joint(&w, &SingleInstance::default(), &fast_pso(), &delay, &quality)
             .outcome
             .mean_quality();
@@ -78,8 +79,9 @@ fn bandwidth_optimization_gains_grow_with_tight_deadlines() {
         let mut total = 0.0;
         for seed in 0..3 {
             let w = generate(&scenario, 200 + seed);
-            let pso =
-                solve_joint(&w, &Stacking::default(), &fast_pso(), &delay, &quality).outcome.mean_quality();
+            let pso = solve_joint(&w, &Stacking::default(), &fast_pso(), &delay, &quality)
+                .outcome
+                .mean_quality();
             let eq = solve_joint(&w, &Stacking::default(), &EqualAllocator, &delay, &quality)
                 .outcome
                 .mean_quality();

@@ -43,9 +43,11 @@ fn response_render_parse_identity() {
                 Response::Done { steps, gen_ms, tx_ms, quality },
             ) => {
                 prop_assert!(g, s2 == steps, "steps {s2} != {steps}");
-                prop_assert!(g, (g2 - gen_ms).abs() <= 1e-3 + gen_ms * 1e-9, "gen {g2} vs {gen_ms}");
+                let gen_ok = (g2 - gen_ms).abs() <= 1e-3 + gen_ms * 1e-9;
+                prop_assert!(g, gen_ok, "gen {g2} vs {gen_ms}");
                 prop_assert!(g, (t2 - tx_ms).abs() <= 1e-3 + tx_ms * 1e-9, "tx {t2} vs {tx_ms}");
-                prop_assert!(g, (q2 - quality).abs() <= 1e-4 + quality * 1e-9, "q {q2} vs {quality}");
+                let q_ok = (q2 - quality).abs() <= 1e-4 + quality * 1e-9;
+                prop_assert!(g, q_ok, "q {q2} vs {quality}");
             }
             (other, resp) => prop_assert!(g, false, "{resp:?} -> {other:?}"),
         }

@@ -1,0 +1,119 @@
+//! PSO under dynamics (ROADMAP item, ISSUE 2): run `PsoAllocator` on
+//! every epoch of a dynamic trace — with the swarm warm-started from
+//! the previous epoch — and check it never loses to the equal-split
+//! baseline.
+//!
+//! Why the strict comparison is sound at this load: with the paper's
+//! deadlines (7–20 s) and the default 2 s plan horizon, every epoch
+//! solve sees horizon-clamped budgets, so both runs partition arrivals
+//! into identical epochs and serve every request; within one epoch the
+//! swarm's particle 0 *is* the equal split, so the PSO pick can only
+//! match or improve the epoch's mean quality.
+
+use aigc_edge::bandwidth::{Allocator, EqualAllocator, PsoAllocator, PsoConfig};
+use aigc_edge::config::{ArrivalProcessKind, ArrivalSettings, ExperimentConfig, ScenarioConfig};
+use aigc_edge::delay::BatchDelayModel;
+use aigc_edge::quality::PowerLawQuality;
+use aigc_edge::scheduler::Stacking;
+use aigc_edge::sim::{simulate_dynamic, DynamicConfig, DynamicReport};
+use aigc_edge::trace::ArrivalTrace;
+
+fn trace(scenario: &ScenarioConfig, rate: f64, horizon: f64, seed: u64) -> ArrivalTrace {
+    let arrival = ArrivalSettings {
+        process: ArrivalProcessKind::Poisson,
+        rate_hz: rate,
+        burst_rate_hz: rate,
+        period_s: 60.0,
+        duty: 0.5,
+        horizon_s: horizon,
+        max_requests: 0,
+    };
+    ArrivalTrace::generate(scenario, &arrival, seed)
+}
+
+fn warm_pso() -> PsoAllocator {
+    PsoAllocator::new(PsoConfig {
+        particles: 8,
+        iterations: 10,
+        patience: 5,
+        warm_start: true,
+        ..Default::default()
+    })
+}
+
+fn run(trace: &ArrivalTrace, allocator: &dyn Allocator) -> DynamicReport {
+    simulate_dynamic(
+        trace,
+        &Stacking::default(),
+        allocator,
+        &BatchDelayModel::paper(),
+        &PowerLawQuality::paper(),
+        &DynamicConfig::default(),
+    )
+}
+
+#[test]
+fn pso_per_epoch_never_loses_to_equal_and_warm_starts() {
+    let cfg = ExperimentConfig::paper();
+    let t = trace(&cfg.scenario, 1.5, 40.0, 21);
+    assert!(t.len() > 30, "trace too small to exercise multiple epochs");
+
+    let equal = run(&t, &EqualAllocator);
+    let pso_alloc = warm_pso();
+    let pso = run(&t, &pso_alloc);
+
+    assert_eq!(pso.outcomes.len(), equal.outcomes.len());
+    assert_eq!(pso.dropped(), 0, "light load must serve everyone");
+    assert_eq!(equal.dropped(), 0);
+    assert!(
+        pso.mean_quality() <= equal.mean_quality() + 1e-9,
+        "per-epoch PSO (mean FID {:.4}) must not lose to equal split ({:.4})",
+        pso.mean_quality(),
+        equal.mean_quality()
+    );
+    // the swarm resumed from the previous epoch on every re-solve
+    assert!(
+        pso_alloc.warm_starts() >= 10,
+        "expected warm starts across epochs, got {}",
+        pso_alloc.warm_starts()
+    );
+    assert!(pso_alloc.warm_starts() < pso.epochs.len(), "first epoch starts cold");
+}
+
+#[test]
+fn warm_started_runs_replay_bit_identically_with_fresh_allocators() {
+    let cfg = ExperimentConfig::paper();
+    let t = trace(&cfg.scenario, 2.0, 30.0, 5);
+    // Warm starting is stateful across epochs *within* a run; replaying
+    // the run with a fresh allocator must reproduce it exactly.
+    let a = run(&t, &warm_pso());
+    let b = run(&t, &warm_pso());
+    assert_eq!(a.outcomes.len(), b.outcomes.len());
+    for (x, y) in a.outcomes.iter().zip(&b.outcomes) {
+        assert_eq!(x.disposition, y.disposition);
+        assert_eq!(x.steps, y.steps);
+        assert_eq!(x.quality.to_bits(), y.quality.to_bits());
+        assert_eq!(x.e2e_s.to_bits(), y.e2e_s.to_bits());
+    }
+    assert_eq!(a.horizon_s.to_bits(), b.horizon_s.to_bits());
+}
+
+#[test]
+fn pso_stays_competitive_when_bandwidth_is_scarce() {
+    // Tight band + tight deadlines: allocation actually matters, but
+    // serving patterns may diverge across epochs (budgets are no longer
+    // all horizon-clamped), so the comparison gets a small relative
+    // slack instead of strict per-epoch dominance.
+    let mut cfg = ExperimentConfig::paper();
+    cfg.scenario.total_bandwidth_hz = 15_000.0;
+    cfg.scenario.deadline_lo = 3.0;
+    let t = trace(&cfg.scenario, 1.0, 30.0, 13);
+    let equal = run(&t, &EqualAllocator);
+    let pso = run(&t, &warm_pso());
+    assert!(
+        pso.mean_quality() <= equal.mean_quality() * 1.05 + 1e-9,
+        "scarce-band PSO (mean FID {:.4}) should track or beat equal split ({:.4})",
+        pso.mean_quality(),
+        equal.mean_quality()
+    );
+}

@@ -1,0 +1,181 @@
+//! Property suite for the cluster routing layer (ISSUE 2): randomized
+//! traces and fleets through every `Router` policy, asserting the
+//! dispatch invariants the cluster simulator depends on.
+//!
+//! Invariants (each over ≥ 200 randomized traces):
+//! * **conservation** — every arrival is routed exactly once, to a
+//!   valid server index;
+//! * **liveness respect** — no request is ever routed to a server
+//!   marked failed;
+//! * **determinism** — identical seed (trace + fleet + policy) implies
+//!   an identical per-server assignment;
+//! * **JSQ minimality** — join-shortest-queue never routes to a server
+//!   with strictly more outstanding work than some alive alternative.
+
+use aigc_edge::config::{ArrivalProcessKind, ArrivalSettings, ExperimentConfig};
+use aigc_edge::delay::BatchDelayModel;
+use aigc_edge::prop_assert;
+use aigc_edge::routing::{route_trace, RouteContext, RouterKind, ServerState};
+use aigc_edge::trace::ArrivalTrace;
+use aigc_edge::util::prop::{forall, Gen};
+
+/// A random small trace: Poisson or burst, a handful of seconds long.
+fn random_trace(g: &mut Gen) -> ArrivalTrace {
+    let mut scenario = ExperimentConfig::paper().scenario;
+    scenario.deadline_lo = g.f64_in(1.0, 6.0);
+    scenario.deadline_hi = scenario.deadline_lo + g.f64_in(1.0, 15.0);
+    let burst = g.bool();
+    let rate = g.f64_in(0.5, 10.0);
+    let arrival = ArrivalSettings {
+        process: if burst { ArrivalProcessKind::Burst } else { ArrivalProcessKind::Poisson },
+        rate_hz: rate,
+        burst_rate_hz: rate * g.f64_in(1.0, 4.0),
+        period_s: g.f64_in(2.0, 20.0),
+        duty: g.f64_in(0.1, 1.0),
+        horizon_s: g.f64_in(3.0, 15.0),
+        max_requests: 0,
+    };
+    ArrivalTrace::generate(&scenario, &arrival, g.u64())
+}
+
+/// A random fleet: 1–6 servers, heterogeneous speeds, some failed (at
+/// least one alive).
+fn random_fleet(g: &mut Gen) -> Vec<ServerState> {
+    let n = g.usize_in(1, 6);
+    let speeds = g.vec_of(n, |g| g.f64_in(0.3, 2.5));
+    let mut fleet = ServerState::fleet(&speeds);
+    for s in fleet.iter_mut() {
+        if g.f64_in(0.0, 1.0) < 0.3 {
+            s.alive = false;
+        }
+    }
+    let alive = g.usize_in(0, n - 1);
+    fleet[alive].alive = true; // guarantee at least one alive server
+    fleet
+}
+
+fn clone_fleet(fleet: &[ServerState]) -> Vec<ServerState> {
+    fleet.to_vec()
+}
+
+#[test]
+fn every_arrival_routed_exactly_once_and_never_to_failed() {
+    forall("routing conservation + liveness", 250, |g| {
+        let trace = random_trace(g);
+        let fleet = random_fleet(g);
+        let kind = *g.pick(&RouterKind::all());
+        let delay = BatchDelayModel::paper();
+        let mut servers = clone_fleet(&fleet);
+        let assignment = route_trace(&trace, &mut servers, kind.build(delay).as_mut(), &delay);
+        prop_assert!(
+            g,
+            assignment.len() == trace.len(),
+            "{}: {} assignments for {} arrivals",
+            kind.name(),
+            assignment.len(),
+            trace.len()
+        );
+        for (id, &server) in assignment.iter().enumerate() {
+            prop_assert!(g, server < fleet.len(), "{}: server {server} out of range", kind.name());
+            prop_assert!(
+                g,
+                fleet[server].alive,
+                "{}: arrival {id} routed to failed server {server}",
+                kind.name()
+            );
+        }
+        // conservation: per-server routed counts partition the trace
+        let routed: usize = servers.iter().map(|s| s.routed).sum();
+        prop_assert!(
+            g,
+            routed == trace.len(),
+            "{}: routed {routed} != {} arrivals",
+            kind.name(),
+            trace.len()
+        );
+        for s in &servers {
+            prop_assert!(g, s.alive || s.routed == 0, "failed server {} got traffic", s.id);
+        }
+        true
+    });
+}
+
+#[test]
+fn identical_seed_gives_identical_assignment() {
+    forall("routing determinism", 200, |g| {
+        let trace = random_trace(g);
+        let fleet = random_fleet(g);
+        let kind = *g.pick(&RouterKind::all());
+        let delay = BatchDelayModel::paper();
+        let mut fleet_a = clone_fleet(&fleet);
+        let mut fleet_b = clone_fleet(&fleet);
+        let a = route_trace(&trace, &mut fleet_a, kind.build(delay).as_mut(), &delay);
+        let b = route_trace(&trace, &mut fleet_b, kind.build(delay).as_mut(), &delay);
+        prop_assert!(g, a == b, "{}: same inputs, different assignments", kind.name());
+        true
+    });
+}
+
+#[test]
+fn jsq_never_routes_to_a_strictly_longer_queue() {
+    forall("jsq minimality", 200, |g| {
+        let trace = random_trace(g);
+        let mut servers = random_fleet(g);
+        let delay = BatchDelayModel::paper();
+        let mut router = RouterKind::JoinShortestQueue.build(delay);
+        let ctx = RouteContext {
+            total_bandwidth_hz: trace.total_bandwidth_hz,
+            content_bits: trace.content_bits,
+        };
+        for arrival in &trace.arrivals {
+            for s in servers.iter_mut() {
+                s.advance(arrival.t_s);
+            }
+            let choice = router.route(arrival, &servers, &ctx);
+            let chosen_work = servers[choice].outstanding_work_s(arrival.t_s);
+            let min_work = servers
+                .iter()
+                .filter(|s| s.alive)
+                .map(|s| s.outstanding_work_s(arrival.t_s))
+                .fold(f64::INFINITY, f64::min);
+            prop_assert!(
+                g,
+                chosen_work <= min_work + 1e-9,
+                "arrival {}: jsq picked {:.6}s of work, {:.6}s was available",
+                arrival.id,
+                chosen_work,
+                min_work
+            );
+            let est = delay.g(1) / servers[choice].speed;
+            servers[choice].assign(arrival.t_s, est);
+        }
+        true
+    });
+}
+
+#[test]
+fn quality_aware_beats_round_robin_on_predicted_outages() {
+    // Not a per-arrival invariant but a sanity property of the marginal
+    // estimator: on a fleet with one very slow server, quality-aware
+    // sends it less traffic than blind round-robin does.
+    forall("quality-aware shifts load off slow servers", 50, |g| {
+        let trace = random_trace(g);
+        if trace.len() < 20 {
+            return true; // too small to compare shares meaningfully
+        }
+        let speeds = [0.3, 1.5, 1.5];
+        let delay = BatchDelayModel::paper();
+        let mut rr_fleet = ServerState::fleet(&speeds);
+        let mut qa_fleet = ServerState::fleet(&speeds);
+        route_trace(&trace, &mut rr_fleet, RouterKind::RoundRobin.build(delay).as_mut(), &delay);
+        route_trace(&trace, &mut qa_fleet, RouterKind::QualityAware.build(delay).as_mut(), &delay);
+        prop_assert!(
+            g,
+            qa_fleet[0].routed <= rr_fleet[0].routed + 1,
+            "quality-aware sent {} to the 0.3x server, round-robin {}",
+            qa_fleet[0].routed,
+            rr_fleet[0].routed
+        );
+        true
+    });
+}

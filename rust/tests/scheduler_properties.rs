@@ -108,8 +108,7 @@ fn stacking_dominates_single_instance_everywhere() {
     forall("stacking <= single-instance", 250, |g| {
         let services = random_services(g);
         let delay = random_delay(g);
-        let st =
-            Stacking::default().schedule(&services, &delay, &quality).mean_quality(&quality);
+        let st = Stacking::default().schedule(&services, &delay, &quality).mean_quality(&quality);
         let si = SingleInstance::default()
             .schedule(&services, &delay, &quality)
             .mean_quality(&quality);
@@ -125,8 +124,7 @@ fn stacking_dominates_naive_batching_everywhere() {
     forall("stacking <= greedy", 250, |g| {
         let services = random_services(g);
         let delay = random_delay(g);
-        let st =
-            Stacking::default().schedule(&services, &delay, &quality).mean_quality(&quality);
+        let st = Stacking::default().schedule(&services, &delay, &quality).mean_quality(&quality);
         let gr = GreedyBatching.schedule(&services, &delay, &quality).mean_quality(&quality);
         prop_assert!(g, st <= gr + 1e-9, "stacking {st} > greedy {gr}\n  {services:?}");
         true
