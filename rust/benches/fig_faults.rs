@@ -1,0 +1,144 @@
+//! Fault sweep — failure rate × migration policy through the
+//! shared-clock event engine on a heterogeneous 4-server fleet.
+//! (`harness = false`: criterion is not in the offline vendored set.)
+//!
+//! Acceptance properties asserted here (ISSUE 3):
+//!  * the sweep covers ≥ 10⁴ simulated requests;
+//!  * the whole run is deterministic — same seed, bit-identical rows;
+//!  * with an empty fault script and no migration, the event engine
+//!    reproduces `simulate_cluster` fleet stats bit-for-bit;
+//!  * on a heterogeneous fleet with mid-trace failures,
+//!    requeue-on-death strictly beats no-migration on drop count and
+//!    on the deadline-censored post-failure p99 tail at fixed λ.
+
+use aigc_edge::bandwidth::EqualAllocator;
+use aigc_edge::bench;
+use aigc_edge::config::ExperimentConfig;
+use aigc_edge::delay::BatchDelayModel;
+use aigc_edge::faults::{DownInterval, FaultScript, MigrationPolicyKind};
+use aigc_edge::quality::PowerLawQuality;
+use aigc_edge::scheduler::Stacking;
+use aigc_edge::sim::{
+    simulate_cluster, simulate_event_cluster, ClusterConfig, EventClusterConfig,
+};
+use aigc_edge::trace::ArrivalTrace;
+
+fn main() {
+    let mut cfg = ExperimentConfig::paper();
+    cfg.cluster.servers = 4;
+    cfg.cluster.speed_min = 0.5;
+    cfg.cluster.speed_max = 2.0;
+    cfg.arrival.rate_hz = 8.0;
+    let horizon_s: f64 = std::env::var("BENCH_HORIZON_S")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(400.0);
+
+    // ---- failure-rate × migration-policy sweep ----
+    let fault_rates = [0.0, 0.5, 1.0, 2.0];
+    let rows = bench::fig_faults(&cfg, &fault_rates, horizon_s);
+    // Each rate draws its own trace, reused across the policy columns;
+    // count unique arrivals once per rate.
+    let total: usize = rows
+        .iter()
+        .filter(|r| r.policy == MigrationPolicyKind::None)
+        .map(|r| r.requests)
+        .sum();
+    assert!(total >= 10_000, "fault sweep must cover >= 10^4 simulated requests, got {total}");
+
+    // Deterministic replay: identical seed -> bit-identical rows.
+    let replay = bench::fig_faults(&cfg, &fault_rates, horizon_s);
+    assert_eq!(rows, replay, "fault-aware simulation is not deterministic");
+
+    for r in &rows {
+        assert_eq!(r.served + r.dropped, r.requests);
+        assert!(r.lost_to_failure <= r.dropped);
+        if r.fault_rate_per_min == 0.0 {
+            assert_eq!(r.failures, 0);
+            assert_eq!(r.lost_to_failure, 0);
+            // steal-when-idle reacts to idleness, not faults, so it
+            // may legitimately migrate on a fault-free fleet
+            if r.policy != MigrationPolicyKind::StealWhenIdle {
+                assert_eq!(r.migrated, 0);
+            }
+        }
+    }
+
+    // ---- zero-fault bit-identity against the sequential cluster ----
+    let scheduler = Stacking::default();
+    let allocator = EqualAllocator;
+    let delay = BatchDelayModel::new(cfg.delay.a, cfg.delay.b);
+    let quality = PowerLawQuality::paper();
+    let mut arrival = cfg.arrival;
+    arrival.horizon_s = 60.0;
+    let short = ArrivalTrace::generate(&cfg.scenario, &arrival, cfg.seed);
+    let cluster_cfg = ClusterConfig::from_settings(&cfg.cluster, &cfg.dynamic);
+    let seq = simulate_cluster(&short, &scheduler, &allocator, &delay, &quality, &cluster_cfg);
+    let ev = simulate_event_cluster(
+        &short,
+        &scheduler,
+        &allocator,
+        &delay,
+        &quality,
+        &EventClusterConfig::fault_free(&cluster_cfg),
+    );
+    assert_eq!(ev.assignment, seq.assignment, "zero-fault dispatch must match route_trace");
+    let (a, b) = (ev.fleet_stats(), seq.fleet_stats());
+    assert_eq!(a.count, b.count);
+    assert_eq!(a.served, b.served);
+    assert_eq!(a.mean_quality.to_bits(), b.mean_quality.to_bits());
+    assert_eq!(a.outage_rate.to_bits(), b.outage_rate.to_bits());
+    assert_eq!(a.p99_e2e_s.to_bits(), b.p99_e2e_s.to_bits());
+    assert_eq!(ev.horizon_s.to_bits(), seq.horizon_s.to_bits());
+
+    // ---- controlled mid-trace failures: requeue vs none showdown ----
+    // The fastest server (largest JSQ share) dies for good at H/3 and
+    // the second-fastest drops out for a window: without migration
+    // their queued work is lost; with requeue-on-death it re-enters
+    // the router with its residual deadline budget.
+    let mut showdown_arrival = cfg.arrival;
+    showdown_arrival.rate_hz = 6.0;
+    showdown_arrival.horizon_s = horizon_s;
+    let trace = ArrivalTrace::generate(&cfg.scenario, &showdown_arrival, cfg.seed);
+    let script = FaultScript::scheduled(vec![
+        DownInterval::new(3, horizon_s / 3.0, horizon_s + 60.0).unwrap(),
+        DownInterval::new(2, horizon_s / 2.0, horizon_s / 2.0 + 40.0).unwrap(),
+    ])
+    .unwrap();
+    let run = |migration: MigrationPolicyKind| {
+        let event_cfg = EventClusterConfig {
+            speeds: aigc_edge::sim::server_speeds(4, 0.5, 2.0),
+            router: cfg.cluster.router,
+            dynamic: (&cfg.dynamic).into(),
+            faults: script.clone(),
+            migration,
+        };
+        simulate_event_cluster(&trace, &scheduler, &allocator, &delay, &quality, &event_cfg)
+    };
+    let none = run(MigrationPolicyKind::None);
+    let requeue = run(MigrationPolicyKind::RequeueOnDeath);
+    assert!(none.lost_to_failure() > 0, "the scheduled failures must strand queued work");
+    assert!(requeue.migrated() > 0, "requeue must hand stranded work to the survivors");
+    assert!(
+        requeue.dropped() < none.dropped(),
+        "requeue-on-death must strictly beat no-migration on drops: {} vs {}",
+        requeue.dropped(),
+        none.dropped()
+    );
+    let window_s = cfg.dynamic.window_s;
+    let (rs_none, rs_requeue) = (none.recovery_stats(window_s), requeue.recovery_stats(window_s));
+    assert!(
+        rs_requeue.post_failure_p99_s < rs_none.post_failure_p99_s,
+        "requeue must strictly beat no-migration on the censored post-failure p99: {} vs {}",
+        rs_requeue.post_failure_p99_s,
+        rs_none.post_failure_p99_s
+    );
+
+    println!(
+        "\nfig_faults OK ({total} simulated requests; showdown drops {} -> {}, post-failure p99 {:.2}s -> {:.2}s)",
+        none.dropped(),
+        requeue.dropped(),
+        rs_none.post_failure_p99_s,
+        rs_requeue.post_failure_p99_s
+    );
+}

@@ -5,13 +5,17 @@ use crate::bandwidth::{Allocator, EqualAllocator, PsoAllocator, PsoConfig};
 use crate::config::ExperimentConfig;
 use crate::coordinator::{profile_batch_delay, ProfileConfig};
 use crate::delay::BatchDelayModel;
+use crate::faults::{FaultScript, MigrationPolicyKind};
 use crate::quality::{PowerLawQuality, QualityModel, TableQuality};
 use crate::routing::RouterKind;
 use crate::runtime::ArtifactStore;
 use crate::scheduler::{
     BatchScheduler, FixedSizeBatching, GreedyBatching, SingleInstance, Stacking,
 };
-use crate::sim::{simulate_cluster, simulate_dynamic, solve_joint, ClusterConfig, DynamicConfig};
+use crate::sim::{
+    server_speeds, simulate_cluster, simulate_dynamic, simulate_event_cluster, solve_joint,
+    ClusterConfig, DynamicConfig, EventClusterConfig,
+};
 use crate::trace::{generate, sweeps, ArrivalTrace};
 use crate::util::fit_power_law;
 
@@ -423,6 +427,126 @@ pub fn fig_cluster(cfg: &ExperimentConfig, lambdas: &[f64], horizon_s: f64) -> V
     rows
 }
 
+// ---------------------------------------------------------------------------
+// Faults figure (new) — failure rate × migration policy on the event engine
+// ---------------------------------------------------------------------------
+
+/// One (failure-rate, migration-policy) cell of the fault sweep.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FigFaultsRow {
+    /// Injected failure rate, failures per server per minute (0 = no
+    /// faults).
+    pub fault_rate_per_min: f64,
+    pub policy: MigrationPolicyKind,
+    pub requests: usize,
+    pub served: usize,
+    pub dropped: usize,
+    pub lost_to_failure: usize,
+    pub migrated: usize,
+    pub failures: usize,
+    pub mean_quality: f64,
+    pub outage_rate: f64,
+    pub p99_e2e_s: f64,
+    /// Deadline-censored post-failure p99 (`metrics::RecoveryStats`).
+    pub post_failure_p99_s: f64,
+    pub mean_time_to_drain_s: f64,
+}
+
+/// Sweep the injected failure rate across every migration policy on the
+/// configured fleet (`cfg.cluster`), at the configured arrival rate,
+/// through the shared-clock event engine. Each failure rate draws its
+/// own seeded trace and fault script, reused across the policy columns
+/// so cells are directly comparable; the whole sweep replays
+/// bit-identically (asserted by `benches/fig_faults.rs` and pinned by
+/// `golden_fig_faults.json`).
+pub fn fig_faults(
+    cfg: &ExperimentConfig,
+    fault_rates_per_min: &[f64],
+    horizon_s: f64,
+) -> Vec<FigFaultsRow> {
+    let delay = BatchDelayModel::new(cfg.delay.a, cfg.delay.b);
+    let quality = PowerLawQuality::paper();
+    let scheduler = Stacking::default();
+    let allocator = EqualAllocator;
+    let speeds = server_speeds(cfg.cluster.servers, cfg.cluster.speed_min, cfg.cluster.speed_max);
+    let mut table = TableWriter::new(
+        "Faults — failure rate × migration policy: drops/tail/recovery per cell",
+        &[
+            "fail/min", "policy", "requests", "served", "lost", "migrated", "fails", "mean FID",
+            "outage", "p99 e2e", "post p99", "drain s",
+        ],
+    )
+    .with_csv("fig_faults");
+    let mut rows = Vec::new();
+    for (i, &rate) in fault_rates_per_min.iter().enumerate() {
+        let mut arrival = cfg.arrival;
+        arrival.process = crate::config::ArrivalProcessKind::Poisson;
+        arrival.horizon_s = horizon_s;
+        // A distinct seeded trace and script per failure rate: the
+        // sweep covers distinct requests, while the policy columns
+        // inside a rate share both (directly comparable).
+        let trace = ArrivalTrace::generate(&cfg.scenario, &arrival, cfg.seed + i as u64);
+        let faults = if rate <= 0.0 {
+            FaultScript::empty()
+        } else {
+            let mtbf_s = 60.0 / rate;
+            let servers = cfg.cluster.servers;
+            FaultScript::random(servers, horizon_s, mtbf_s, cfg.faults.mttr_s, cfg.seed + i as u64)
+        };
+        for policy in MigrationPolicyKind::all() {
+            let event_cfg = EventClusterConfig {
+                speeds: speeds.clone(),
+                router: cfg.cluster.router,
+                dynamic: DynamicConfig::from(&cfg.dynamic),
+                faults: faults.clone(),
+                migration: policy,
+            };
+            let report = simulate_event_cluster(
+                &trace,
+                &scheduler,
+                &allocator,
+                &delay,
+                &quality,
+                &event_cfg,
+            );
+            let stats = report.fleet_stats();
+            let rs = report.recovery_stats(cfg.dynamic.window_s);
+            let row = FigFaultsRow {
+                fault_rate_per_min: rate,
+                policy,
+                requests: trace.len(),
+                served: report.served(),
+                dropped: report.dropped(),
+                lost_to_failure: report.lost_to_failure(),
+                migrated: report.migrated(),
+                failures: report.failures(),
+                mean_quality: stats.mean_quality,
+                outage_rate: stats.outage_rate,
+                p99_e2e_s: stats.p99_e2e_s,
+                post_failure_p99_s: rs.post_failure_p99_s,
+                mean_time_to_drain_s: rs.mean_time_to_drain_s,
+            };
+            table.row(&[
+                format!("{rate:.2}"),
+                policy.name().to_string(),
+                row.requests.to_string(),
+                row.served.to_string(),
+                row.lost_to_failure.to_string(),
+                row.migrated.to_string(),
+                row.failures.to_string(),
+                format!("{:.2}", row.mean_quality),
+                format!("{:.3}", row.outage_rate),
+                format!("{:.2}", row.p99_e2e_s),
+                format!("{:.2}", row.post_failure_p99_s),
+                format!("{:.2}", row.mean_time_to_drain_s),
+            ]);
+            rows.push(row);
+        }
+    }
+    table.finish();
+    rows
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -519,6 +643,41 @@ mod tests {
         assert_eq!(rows[0].requests, rows[1].requests);
         // bit-identical replay
         assert_eq!(rows, fig_cluster(&cfg, &[1.0, 6.0], 30.0));
+    }
+
+    #[test]
+    fn fig_faults_covers_all_policies_and_replays() {
+        let mut cfg = ExperimentConfig::paper();
+        cfg.cluster.servers = 3;
+        cfg.cluster.speed_min = 0.5;
+        cfg.cluster.speed_max = 1.5;
+        cfg.arrival.rate_hz = 4.0;
+        let rows = fig_faults(&cfg, &[0.0, 2.0], 30.0);
+        assert_eq!(rows.len(), 2 * MigrationPolicyKind::all().len());
+        for row in &rows {
+            assert_eq!(row.served + row.dropped, row.requests);
+            assert!((0.0..=1.0).contains(&row.outage_rate));
+            assert!(row.lost_to_failure <= row.dropped);
+        }
+        // zero fault rate: none and requeue-on-death have no faults to
+        // react to, so their columns are identical and nothing is lost
+        // or migrated (steal-when-idle reacts to idleness, not faults,
+        // and may legitimately move work even fault-free)
+        let zero: Vec<&FigFaultsRow> =
+            rows.iter().filter(|r| r.fault_rate_per_min == 0.0).collect();
+        for r in &zero {
+            assert_eq!(r.failures, 0);
+            assert_eq!(r.lost_to_failure, 0);
+            if r.policy != MigrationPolicyKind::StealWhenIdle {
+                assert_eq!(r.migrated, 0);
+                assert_eq!(r.served, zero[0].served);
+                assert_eq!(r.mean_quality.to_bits(), zero[0].mean_quality.to_bits());
+            }
+        }
+        // the faulted rate actually injects failures
+        assert!(rows.iter().any(|r| r.fault_rate_per_min > 0.0 && r.failures > 0));
+        // bit-identical replay
+        assert_eq!(rows, fig_faults(&cfg, &[0.0, 2.0], 30.0));
     }
 
     #[test]

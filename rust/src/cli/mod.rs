@@ -7,8 +7,10 @@
 //!             arrivals through the event-driven multi-epoch simulator
 //!   `cluster  [--servers N] [--router R] [...]` — the dynamic workload
 //!             sharded across N servers behind a routing policy
+//!   `faults   [--fault-mode M] [--migration P] [...]` — the cluster
+//!             workload under failure injection and live migration
 //!   `profile  [--reps N]` — Fig. 1a measurement
-//!   `figures  [--which 1a|1b|2a|2b|2c|3|cluster|all] [--reps N]`
+//!   `figures  [--which 1a|1b|2a|2b|2c|3|cluster|faults|all] [--reps N]`
 
 use std::collections::BTreeMap;
 
@@ -104,11 +106,15 @@ USAGE:
   aigc-edge cluster  [--config file.toml] [--servers 4] [--router round-robin|jsq|quality]
                      [--speed-min 1.0] [--speed-max 1.0] [--process poisson|burst]
                      [--rate 2.0] [--horizon 300] [--epoch-s 1.0] [--max-batch 32]
-                     [--plan-horizon 2.0] [--no-admission true]
+                     [--plan-horizon 2.0] [--adaptive-horizon true] [--no-admission true]
                      [--scheduler stacking|single|greedy|fixed]
                      [--allocator pso|equal|proportional] [--seed N]
+  aigc-edge faults   [--config file.toml] [cluster flags...]
+                     [--fault-mode none|random|scheduled] [--mtbf 120] [--mttr 15]
+                     [--fault-seed N] [--down \"server:from:until,...\"]
+                     [--migration none|requeue|steal]
   aigc-edge profile  [--reps 20]
-  aigc-edge figures  [--which all|1a|1b|2a|2b|2c|3|cluster] [--reps 3]
+  aigc-edge figures  [--which all|1a|1b|2a|2b|2c|3|cluster|faults] [--reps 3]
   aigc-edge help
 ";
 

@@ -18,6 +18,7 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Context, Result};
 
+use crate::faults::{DownInterval, FaultModeKind, FaultScript, MigrationPolicyKind};
 use crate::routing::RouterKind;
 
 use self::toml::{parse, TomlDoc};
@@ -49,6 +50,10 @@ pub struct ExperimentConfig {
     pub dynamic: DynamicSettings,
     /// Multi-server sharding settings for cluster simulation.
     pub cluster: ClusterSettings,
+    /// Failure-injection settings for the fault-aware event engine.
+    pub faults: FaultSettings,
+    /// Cross-server migration settings (`sim::event`).
+    pub migration: MigrationSettings,
     /// Directory holding the AOT artifacts (HLO, quality.json, …).
     pub artifacts_dir: PathBuf,
     pub seed: u64,
@@ -162,6 +167,10 @@ pub struct DynamicSettings {
     /// long-deadline request cannot monopolize the GPU (quality vs
     /// responsiveness knob).
     pub plan_horizon_s: f64,
+    /// Load-adaptive planning horizon (opt-in): shrink under queue
+    /// growth, stretch when idle. See
+    /// `DynamicConfig::effective_plan_horizon`.
+    pub plan_horizon_adaptive: bool,
 }
 
 /// Multi-server cluster settings (`sim::cluster`). TOML section
@@ -177,6 +186,52 @@ pub struct ClusterSettings {
     /// model; a single server gets the midpoint).
     pub speed_min: f64,
     pub speed_max: f64,
+}
+
+/// Failure-injection settings for the event engine (`sim::event`).
+/// TOML section `[faults]`.
+#[derive(Debug, Clone)]
+pub struct FaultSettings {
+    /// How the fault script is produced (`none` | `random` |
+    /// `scheduled`).
+    pub mode: FaultModeKind,
+    /// Mean time between failures per server, seconds (`random` mode).
+    pub mtbf_s: f64,
+    /// Mean time to recovery, seconds (`random` mode).
+    pub mttr_s: f64,
+    /// Seed for the random fault process; 0 = derive from the
+    /// experiment seed.
+    pub seed: u64,
+    /// Explicit down intervals (`scheduled` mode) — TOML/CLI spec
+    /// `"server:from_s:until_s,..."`.
+    pub down: Vec<DownInterval>,
+}
+
+impl FaultSettings {
+    /// Materialize the fault script for an `n`-server fleet over
+    /// `horizon_s` of arrivals. `fallback_seed` (the experiment seed)
+    /// drives `random` mode when `seed` is 0.
+    pub fn script(&self, servers: usize, horizon_s: f64, fallback_seed: u64) -> Result<FaultScript> {
+        let script = match self.mode {
+            FaultModeKind::None => FaultScript::empty(),
+            FaultModeKind::Random => {
+                let seed = if self.seed == 0 { fallback_seed } else { self.seed };
+                FaultScript::random(servers, horizon_s, self.mtbf_s, self.mttr_s, seed)
+            }
+            FaultModeKind::Scheduled => FaultScript::scheduled(self.down.clone())?,
+        };
+        script.validate_servers(servers)?;
+        Ok(script)
+    }
+}
+
+/// Cross-server migration settings (`sim::event`). TOML section
+/// `[migration]`.
+#[derive(Debug, Clone, Copy)]
+pub struct MigrationSettings {
+    /// What happens to a dead/overloaded server's queued requests
+    /// (`none` | `requeue` | `steal`).
+    pub policy: MigrationPolicyKind,
 }
 
 impl ExperimentConfig {
@@ -211,6 +266,7 @@ impl ExperimentConfig {
                 admission: true,
                 window_s: 30.0,
                 plan_horizon_s: 2.0,
+                plan_horizon_adaptive: false,
             },
             cluster: ClusterSettings {
                 servers: 4,
@@ -218,6 +274,14 @@ impl ExperimentConfig {
                 speed_min: 1.0,
                 speed_max: 1.0,
             },
+            faults: FaultSettings {
+                mode: FaultModeKind::None,
+                mtbf_s: 120.0,
+                mttr_s: 15.0,
+                seed: 0,
+                down: Vec::new(),
+            },
+            migration: MigrationSettings { policy: MigrationPolicyKind::RequeueOnDeath },
             artifacts_dir: default_artifacts_dir(),
             seed: 2025,
         }
@@ -322,6 +386,18 @@ impl ExperimentConfig {
                 c.speed_min
             );
         }
+        let f = &self.faults;
+        pos_finite("faults.mtbf_s", f.mtbf_s)?;
+        pos_finite("faults.mttr_s", f.mttr_s)?;
+        for d in &f.down {
+            d.validate()?;
+        }
+        if f.mode == FaultModeKind::Scheduled {
+            // Interval sanity (overlaps, server bounds) is checked
+            // against the actual fleet when the script materializes;
+            // here we catch the obviously-broken combination early.
+            FaultScript::scheduled(f.down.clone())?.validate_servers(c.servers)?;
+        }
         Ok(())
     }
 
@@ -405,16 +481,43 @@ fn apply_doc(cfg: &mut ExperimentConfig, doc: &TomlDoc) -> Result<()> {
             "dynamic.admission" => set_bool(&mut cfg.dynamic.admission, value),
             "dynamic.window_s" => set_f64(&mut cfg.dynamic.window_s, value),
             "dynamic.plan_horizon_s" => set_f64(&mut cfg.dynamic.plan_horizon_s, value),
+            "dynamic.plan_horizon_adaptive" => {
+                set_bool(&mut cfg.dynamic.plan_horizon_adaptive, value)
+            }
             "cluster.servers" => set_usize(&mut cfg.cluster.servers, value),
-            "cluster.router" => match value.as_str().and_then(RouterKind::from_name) {
-                Some(kind) => {
-                    cfg.cluster.router = kind;
+            "cluster.router" => match value.as_str() {
+                Some(name) => {
+                    cfg.cluster.router = RouterKind::from_name(name)?;
                     true
                 }
                 None => false,
             },
             "cluster.speed_min" => set_f64(&mut cfg.cluster.speed_min, value),
             "cluster.speed_max" => set_f64(&mut cfg.cluster.speed_max, value),
+            "faults.mode" => match value.as_str() {
+                Some(name) => {
+                    cfg.faults.mode = FaultModeKind::from_name(name)?;
+                    true
+                }
+                None => false,
+            },
+            "faults.mtbf_s" => set_f64(&mut cfg.faults.mtbf_s, value),
+            "faults.mttr_s" => set_f64(&mut cfg.faults.mttr_s, value),
+            "faults.seed" => set_u64(&mut cfg.faults.seed, value),
+            "faults.down" => match value.as_str() {
+                Some(spec) => {
+                    cfg.faults.down = FaultScript::parse_spec(spec)?;
+                    true
+                }
+                None => false,
+            },
+            "migration.policy" => match value.as_str() {
+                Some(name) => {
+                    cfg.migration.policy = MigrationPolicyKind::from_name(name)?;
+                    true
+                }
+                None => false,
+            },
             _ => bail!("unknown config key '{key}'"),
         };
         if !ok {
@@ -603,6 +706,72 @@ mod tests {
         let mut cfg = ExperimentConfig::paper();
         cfg.dynamic.window_s = f64::NAN;
         assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn faults_and_migration_sections_apply() {
+        let cfg = ExperimentConfig::from_toml_text(
+            r#"
+            [dynamic]
+            plan_horizon_adaptive = true
+            [faults]
+            mode = "scheduled"
+            mtbf_s = 90.0
+            mttr_s = 20.0
+            seed = 41
+            down = "1:10:25,0:40:60"
+            [migration]
+            policy = "steal"
+            "#,
+        )
+        .unwrap();
+        assert!(cfg.dynamic.plan_horizon_adaptive);
+        assert_eq!(cfg.faults.mode, FaultModeKind::Scheduled);
+        assert_eq!(cfg.faults.mtbf_s, 90.0);
+        assert_eq!(cfg.faults.mttr_s, 20.0);
+        assert_eq!(cfg.faults.seed, 41);
+        assert_eq!(cfg.faults.down.len(), 2);
+        assert_eq!(cfg.faults.down[0].server, 1);
+        assert_eq!(cfg.migration.policy, MigrationPolicyKind::StealWhenIdle);
+        // materializes into a validated script for the configured fleet
+        let script = cfg.faults.script(cfg.cluster.servers, 300.0, cfg.seed).unwrap();
+        assert_eq!(script.downs().len(), 2);
+    }
+
+    #[test]
+    fn faults_validation_rejects_nonsense() {
+        assert!(ExperimentConfig::from_toml_text("[faults]\nmode = \"weibull\"").is_err());
+        assert!(ExperimentConfig::from_toml_text("[faults]\nmtbf_s = 0.0").is_err());
+        assert!(ExperimentConfig::from_toml_text("[faults]\nmttr_s = -2.0").is_err());
+        assert!(ExperimentConfig::from_toml_text("[faults]\ndown = \"1:9:3\"").is_err());
+        assert!(ExperimentConfig::from_toml_text("[migration]\npolicy = \"teleport\"").is_err());
+        // scheduled intervals must fit the configured fleet
+        let err = ExperimentConfig::from_toml_text(
+            "[cluster]\nservers = 2\n[faults]\nmode = \"scheduled\"\ndown = \"5:1:2\"",
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("server 5"), "{err}");
+        // the parser errors list the valid names
+        let err = ExperimentConfig::from_toml_text("[migration]\npolicy = \"teleport\"")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("requeue"), "{err}");
+    }
+
+    #[test]
+    fn random_fault_seed_zero_derives_from_experiment_seed() {
+        let mut cfg = ExperimentConfig::paper();
+        cfg.faults.mode = FaultModeKind::Random;
+        cfg.faults.seed = 0;
+        let a = cfg.faults.script(4, 500.0, 7).unwrap();
+        let b = cfg.faults.script(4, 500.0, 7).unwrap();
+        assert_eq!(a, b);
+        let c = cfg.faults.script(4, 500.0, 8).unwrap();
+        assert_ne!(a, c, "fallback seed must drive the process");
+        cfg.faults.seed = 99;
+        let d = cfg.faults.script(4, 500.0, 7).unwrap();
+        assert_ne!(a, d, "explicit seed overrides the fallback");
     }
 
     #[test]

@@ -1,0 +1,470 @@
+//! Failure traces and migration policy — the fault model for the
+//! shared-clock cluster engine (`sim::event`).
+//!
+//! The paper's joint optimization assumes servers that stay up; a
+//! production edge fleet does not. Collaborative distributed diffusion
+//! (arXiv:2304.03446) and 6G MEC offloading (arXiv:2312.06203) both
+//! treat dynamic server availability and task re-offloading as
+//! first-class, so this module makes them first-class here:
+//!
+//! * [`FaultScript`] — a deterministic failure trace: per-server down
+//!   intervals, either **scheduled** explicitly or drawn from a
+//!   **seeded** alternating-renewal process (exponential up-times with
+//!   mean `mtbf_s`, exponential down-times with mean `mttr_s`).
+//!   Identical seeds replay bit-identically, like every other
+//!   stochastic component in the system.
+//! * [`MigrationPolicy`] — what happens to a dead (or overloaded)
+//!   server's queued requests: lose them with the server
+//!   ([`NoMigration`]), hand them back through the
+//!   [`Router`](crate::routing::Router) with their elapsed deadline
+//!   budget preserved ([`RequeueOnDeath`]), or additionally let solve
+//!   carry-overs re-enter the router whenever an idle sibling exists
+//!   ([`StealWhenIdle`]).
+//!
+//! Every name parser here returns an error listing the valid names, so
+//! a CLI/TOML typo is diagnosable without reading the source.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::Pcg64;
+
+/// One contiguous outage of one server: down at `from_s`, recovered at
+/// `until_s` (which may exceed the trace horizon — the server then
+/// simply never comes back).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DownInterval {
+    pub server: usize,
+    pub from_s: f64,
+    pub until_s: f64,
+}
+
+impl DownInterval {
+    pub fn new(server: usize, from_s: f64, until_s: f64) -> Result<Self> {
+        let d = Self { server, from_s, until_s };
+        d.validate()?;
+        Ok(d)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if !(self.from_s >= 0.0 && self.from_s.is_finite()) {
+            bail!(
+                "down interval for server {}: from_s must be finite and >= 0, got {}",
+                self.server,
+                self.from_s
+            );
+        }
+        if !(self.until_s > self.from_s && self.until_s.is_finite()) {
+            bail!(
+                "down interval for server {}: until_s ({}) must be finite and > from_s ({})",
+                self.server,
+                self.until_s,
+                self.from_s
+            );
+        }
+        Ok(())
+    }
+
+    pub fn duration_s(&self) -> f64 {
+        self.until_s - self.from_s
+    }
+}
+
+/// Whether a fault event takes a server down or brings it back.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    Down,
+    Up,
+}
+
+/// One scheduled availability transition.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultEvent {
+    pub t_s: f64,
+    pub server: usize,
+    pub kind: FaultKind,
+}
+
+/// A deterministic per-server failure trace: the complete set of down
+/// intervals a cluster run injects. Intervals never overlap per server
+/// (validated on construction), so the induced event sequence is a
+/// well-formed alternation of Down/Up per server.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct FaultScript {
+    /// Sorted by `(from_s, server)`.
+    downs: Vec<DownInterval>,
+}
+
+impl FaultScript {
+    /// No failures: the event engine degenerates to an all-alive fleet.
+    pub fn empty() -> Self {
+        Self { downs: Vec::new() }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.downs.is_empty()
+    }
+
+    pub fn downs(&self) -> &[DownInterval] {
+        &self.downs
+    }
+
+    /// Build from explicit intervals; rejects malformed or per-server
+    /// overlapping intervals.
+    pub fn scheduled(mut downs: Vec<DownInterval>) -> Result<Self> {
+        for d in &downs {
+            d.validate()?;
+        }
+        let key = |d: &DownInterval| (d.from_s, d.server);
+        downs.sort_by(|a, b| key(a).partial_cmp(&key(b)).unwrap());
+        let mut last_until: BTreeMap<usize, f64> = BTreeMap::new();
+        for d in &downs {
+            if let Some(&until) = last_until.get(&d.server) {
+                if d.from_s < until {
+                    bail!(
+                        "server {} has overlapping down intervals (down at {} before recovery at {until})",
+                        d.server,
+                        d.from_s
+                    );
+                }
+            }
+            last_until.insert(d.server, d.until_s);
+        }
+        Ok(Self { downs })
+    }
+
+    /// Seeded alternating-renewal failures for every server: up-times
+    /// are Exp(mean `mtbf_s`), down-times Exp(mean `mttr_s`), drawn on
+    /// an independent PCG stream per server. Failures starting past
+    /// `horizon_s` are not generated (a recovery may land past it).
+    pub fn random(servers: usize, horizon_s: f64, mtbf_s: f64, mttr_s: f64, seed: u64) -> Self {
+        assert!(mtbf_s > 0.0 && mtbf_s.is_finite(), "mtbf_s must be positive and finite");
+        assert!(mttr_s > 0.0 && mttr_s.is_finite(), "mttr_s must be positive and finite");
+        assert!(horizon_s >= 0.0 && horizon_s.is_finite(), "horizon_s must be finite");
+        let mut downs = Vec::new();
+        for server in 0..servers {
+            let mut rng = Pcg64::new(seed, 0xFA17_0000 + server as u64);
+            let mut t = rng.exponential(1.0 / mtbf_s);
+            while t < horizon_s {
+                let outage = rng.exponential(1.0 / mttr_s);
+                downs.push(DownInterval { server, from_s: t, until_s: t + outage });
+                t += outage + rng.exponential(1.0 / mtbf_s);
+            }
+        }
+        Self::scheduled(downs).expect("renewal intervals are disjoint by construction")
+    }
+
+    /// Parse the CLI/TOML interval spec:
+    /// `server:from_s:until_s[,server:from_s:until_s...]`.
+    pub fn parse_spec(spec: &str) -> Result<Vec<DownInterval>> {
+        let mut out = Vec::new();
+        for part in spec.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+            let fields: Vec<&str> = part.split(':').collect();
+            if fields.len() != 3 {
+                bail!("down interval '{part}': expected server:from_s:until_s");
+            }
+            let ctx = |what: &str| format!("down interval '{part}': bad {what}");
+            let server: usize = fields[0].parse().with_context(|| ctx("server index"))?;
+            let from_s: f64 = fields[1].parse().with_context(|| ctx("from_s"))?;
+            let until_s: f64 = fields[2].parse().with_context(|| ctx("until_s"))?;
+            out.push(DownInterval::new(server, from_s, until_s)?);
+        }
+        Ok(out)
+    }
+
+    /// Check every interval names a server inside an `n`-server fleet.
+    pub fn validate_servers(&self, n: usize) -> Result<()> {
+        for d in &self.downs {
+            if d.server >= n {
+                bail!(
+                    "fault script names server {} but the fleet has {n} servers (0..={})",
+                    d.server,
+                    n - 1
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// The induced availability transitions, time-sorted. At equal
+    /// instants recoveries sort before failures (so back-to-back
+    /// intervals on one server never yield a spuriously all-dead
+    /// ordering), then lower server ids first.
+    pub fn events(&self) -> Vec<FaultEvent> {
+        let mut ev = Vec::with_capacity(self.downs.len() * 2);
+        for d in &self.downs {
+            ev.push(FaultEvent { t_s: d.from_s, server: d.server, kind: FaultKind::Down });
+            ev.push(FaultEvent { t_s: d.until_s, server: d.server, kind: FaultKind::Up });
+        }
+        ev.sort_by(|a, b| {
+            a.t_s
+                .partial_cmp(&b.t_s)
+                .unwrap()
+                .then((a.kind == FaultKind::Down).cmp(&(b.kind == FaultKind::Down)))
+                .then(a.server.cmp(&b.server))
+        });
+        ev
+    }
+
+    /// Total scheduled downtime summed over servers.
+    pub fn total_downtime_s(&self) -> f64 {
+        self.downs.iter().map(DownInterval::duration_s).sum()
+    }
+}
+
+/// How the fault script is produced. Lives here (not in `config`) so
+/// the mode set and its names stay next to the implementations.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultModeKind {
+    /// No failures injected.
+    None,
+    /// Seeded alternating-renewal failures ([`FaultScript::random`]).
+    Random,
+    /// Explicit down intervals ([`FaultScript::scheduled`]).
+    Scheduled,
+}
+
+impl FaultModeKind {
+    /// Parse the CLI/TOML name; the error lists the valid names.
+    pub fn from_name(name: &str) -> Result<Self> {
+        match name {
+            "none" | "off" => Ok(Self::None),
+            "random" => Ok(Self::Random),
+            "scheduled" => Ok(Self::Scheduled),
+            other => bail!("unknown fault mode '{other}' (valid: none|off, random, scheduled)"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::None => "none",
+            Self::Random => "random",
+            Self::Scheduled => "scheduled",
+        }
+    }
+
+    pub fn all() -> [Self; 3] {
+        [Self::None, Self::Random, Self::Scheduled]
+    }
+}
+
+/// What the cluster engine does with requests stranded on a dead (or
+/// overloaded) server. Implementations are deliberately tiny decision
+/// predicates: the mechanics (hand-off through the router with the
+/// elapsed deadline budget preserved) live in `sim::event`, so every
+/// policy shares one audited migration path.
+pub trait MigrationPolicy {
+    fn name(&self) -> &'static str;
+
+    /// Re-route a dead server's queued requests through the router
+    /// (`false`: they are lost with the server).
+    fn requeue_on_death(&self) -> bool;
+
+    /// Hand a solve's carry-overs back to the router whenever an idle
+    /// alive sibling exists (`false`: carry-overs stay local).
+    fn steal_when_idle(&self) -> bool;
+}
+
+/// Queued requests die with their server (the ablation baseline).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct NoMigration;
+
+impl MigrationPolicy for NoMigration {
+    fn name(&self) -> &'static str {
+        "none"
+    }
+
+    fn requeue_on_death(&self) -> bool {
+        false
+    }
+
+    fn steal_when_idle(&self) -> bool {
+        false
+    }
+}
+
+/// A dead server's queue is handed back to the router at the failure
+/// instant; deferred work otherwise stays put.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RequeueOnDeath;
+
+impl MigrationPolicy for RequeueOnDeath {
+    fn name(&self) -> &'static str {
+        "requeue-on-death"
+    }
+
+    fn requeue_on_death(&self) -> bool {
+        true
+    }
+
+    fn steal_when_idle(&self) -> bool {
+        false
+    }
+}
+
+/// Requeue-on-death plus work stealing: carry-overs re-enter the
+/// router whenever a sibling's queue has drained, so an overloaded
+/// server sheds deferred work to idle capacity.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StealWhenIdle;
+
+impl MigrationPolicy for StealWhenIdle {
+    fn name(&self) -> &'static str {
+        "steal-when-idle"
+    }
+
+    fn requeue_on_death(&self) -> bool {
+        true
+    }
+
+    fn steal_when_idle(&self) -> bool {
+        true
+    }
+}
+
+/// Which migration policy a cluster runs (config/CLI surface for the
+/// [`MigrationPolicy`] implementations).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MigrationPolicyKind {
+    None,
+    RequeueOnDeath,
+    StealWhenIdle,
+}
+
+impl MigrationPolicyKind {
+    /// Parse the CLI/TOML name; the error lists the valid names.
+    pub fn from_name(name: &str) -> Result<Self> {
+        match name {
+            "none" | "off" => Ok(Self::None),
+            "requeue" | "requeue-on-death" => Ok(Self::RequeueOnDeath),
+            "steal" | "steal-when-idle" => Ok(Self::StealWhenIdle),
+            other => {
+                bail!("unknown migration policy '{other}' (valid: none|off, requeue|requeue-on-death, steal|steal-when-idle)")
+            }
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::None => "none",
+            Self::RequeueOnDeath => "requeue-on-death",
+            Self::StealWhenIdle => "steal-when-idle",
+        }
+    }
+
+    /// All policies, in the order the fault sweeps compare them.
+    pub fn all() -> [Self; 3] {
+        [Self::None, Self::RequeueOnDeath, Self::StealWhenIdle]
+    }
+
+    pub fn build(&self) -> Box<dyn MigrationPolicy> {
+        match self {
+            Self::None => Box::new(NoMigration),
+            Self::RequeueOnDeath => Box::new(RequeueOnDeath),
+            Self::StealWhenIdle => Box::new(StealWhenIdle),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn down(server: usize, from: f64, until: f64) -> DownInterval {
+        DownInterval::new(server, from, until).unwrap()
+    }
+
+    #[test]
+    fn scheduled_sorts_and_rejects_overlap() {
+        let script =
+            FaultScript::scheduled(vec![down(1, 30.0, 40.0), down(0, 10.0, 20.0)]).unwrap();
+        assert_eq!(script.downs()[0].server, 0);
+        assert_eq!(script.downs()[1].server, 1);
+        assert!((script.total_downtime_s() - 20.0).abs() < 1e-12);
+        let overlap = FaultScript::scheduled(vec![down(2, 5.0, 15.0), down(2, 10.0, 20.0)]);
+        assert!(overlap.unwrap_err().to_string().contains("overlapping"));
+        // back-to-back intervals on one server are fine
+        assert!(FaultScript::scheduled(vec![down(2, 5.0, 15.0), down(2, 15.0, 20.0)]).is_ok());
+    }
+
+    #[test]
+    fn interval_validation_rejects_nonsense() {
+        assert!(DownInterval::new(0, -1.0, 5.0).is_err());
+        assert!(DownInterval::new(0, 5.0, 5.0).is_err());
+        assert!(DownInterval::new(0, 5.0, 1.0).is_err());
+        assert!(DownInterval::new(0, 0.0, f64::INFINITY).is_err());
+        assert!(DownInterval::new(0, f64::NAN, 1.0).is_err());
+    }
+
+    #[test]
+    fn events_are_time_sorted_with_up_before_down_on_ties() {
+        let script =
+            FaultScript::scheduled(vec![down(0, 10.0, 20.0), down(1, 20.0, 30.0)]).unwrap();
+        let ev = script.events();
+        assert_eq!(ev.len(), 4);
+        assert!(ev.windows(2).all(|w| w[0].t_s <= w[1].t_s));
+        // at t = 20 the recovery of server 0 precedes the failure of 1
+        assert_eq!(ev[1], FaultEvent { t_s: 20.0, server: 0, kind: FaultKind::Up });
+        assert_eq!(ev[2], FaultEvent { t_s: 20.0, server: 1, kind: FaultKind::Down });
+    }
+
+    #[test]
+    fn random_is_seeded_disjoint_and_roughly_calibrated() {
+        let a = FaultScript::random(4, 2000.0, 60.0, 10.0, 7);
+        let b = FaultScript::random(4, 2000.0, 60.0, 10.0, 7);
+        assert_eq!(a, b, "identical seeds must replay bit-identically");
+        assert_ne!(a, FaultScript::random(4, 2000.0, 60.0, 10.0, 8));
+        assert!(!a.is_empty());
+        // disjoint per server by construction (scheduled() re-validates)
+        FaultScript::scheduled(a.downs().to_vec()).unwrap();
+        // ~2000/70 ≈ 28.6 failures per server expected; loose 3σ bounds
+        let per_server = a.downs().len() as f64 / 4.0;
+        assert!((10.0..60.0).contains(&per_server), "failures/server = {per_server}");
+        let mean_outage = a.total_downtime_s() / a.downs().len() as f64;
+        assert!((4.0..25.0).contains(&mean_outage), "mean outage = {mean_outage}");
+    }
+
+    #[test]
+    fn spec_parses_and_rejects_malformed() {
+        let downs = FaultScript::parse_spec("1:10:25, 0:40:60").unwrap();
+        assert_eq!(downs.len(), 2);
+        assert_eq!(downs[0], down(1, 10.0, 25.0));
+        assert_eq!(downs[1], down(0, 40.0, 60.0));
+        assert!(FaultScript::parse_spec("").unwrap().is_empty());
+        assert!(FaultScript::parse_spec("1:10").is_err());
+        assert!(FaultScript::parse_spec("x:1:2").is_err());
+        assert!(FaultScript::parse_spec("1:abc:2").is_err());
+        assert!(FaultScript::parse_spec("1:5:2").is_err());
+    }
+
+    #[test]
+    fn validate_servers_bounds_indices() {
+        let script = FaultScript::scheduled(vec![down(3, 1.0, 2.0)]).unwrap();
+        assert!(script.validate_servers(4).is_ok());
+        let err = script.validate_servers(3).unwrap_err().to_string();
+        assert!(err.contains("server 3") && err.contains("3 servers"), "{err}");
+    }
+
+    #[test]
+    fn kind_parsers_round_trip_and_list_valid_names() {
+        for kind in MigrationPolicyKind::all() {
+            assert_eq!(MigrationPolicyKind::from_name(kind.name()).unwrap(), kind);
+            assert_eq!(kind.build().name(), kind.name());
+        }
+        for mode in FaultModeKind::all() {
+            assert_eq!(FaultModeKind::from_name(mode.name()).unwrap(), mode);
+        }
+        let err = MigrationPolicyKind::from_name("bogus").unwrap_err().to_string();
+        assert!(err.contains("requeue-on-death") && err.contains("steal-when-idle"), "{err}");
+        let err = FaultModeKind::from_name("bogus").unwrap_err().to_string();
+        assert!(err.contains("random") && err.contains("scheduled"), "{err}");
+    }
+
+    #[test]
+    fn policy_predicates_match_the_documented_matrix() {
+        assert!(!NoMigration.requeue_on_death() && !NoMigration.steal_when_idle());
+        assert!(RequeueOnDeath.requeue_on_death() && !RequeueOnDeath.steal_when_idle());
+        assert!(StealWhenIdle.requeue_on_death() && StealWhenIdle.steal_when_idle());
+    }
+}

@@ -23,6 +23,7 @@ pub mod cli;
 pub mod config;
 pub mod coordinator;
 pub mod delay;
+pub mod faults;
 pub mod metrics;
 pub mod quality;
 pub mod routing;

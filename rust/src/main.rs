@@ -12,6 +12,7 @@ use aigc_edge::cli::{Args, USAGE};
 use aigc_edge::config::{ArrivalProcessKind, ExperimentConfig};
 use aigc_edge::coordinator::{profile_batch_delay, ProfileConfig};
 use aigc_edge::delay::BatchDelayModel;
+use aigc_edge::faults::{FaultModeKind, FaultScript, MigrationPolicyKind};
 use aigc_edge::metrics::OutcomeStats;
 use aigc_edge::quality::{PowerLawQuality, QualityModel, TableQuality};
 use aigc_edge::routing::RouterKind;
@@ -20,7 +21,8 @@ use aigc_edge::scheduler::{
     BatchScheduler, FixedSizeBatching, GreedyBatching, SingleInstance, Stacking, StackingConfig,
 };
 use aigc_edge::sim::{
-    simulate_cluster, simulate_dynamic, ClusterConfig, Disposition, DynamicConfig,
+    simulate_cluster, simulate_dynamic, simulate_event_cluster, ClusterConfig, Disposition,
+    DynamicConfig, EventClusterConfig,
 };
 use aigc_edge::trace::ArrivalTrace;
 
@@ -43,6 +45,7 @@ fn main() -> Result<()> {
         "simulate" => cmd_simulate(&args),
         "dynamic" => cmd_dynamic(&args),
         "cluster" => cmd_cluster(&args),
+        "faults" => cmd_faults(&args),
         "profile" => cmd_profile(&args),
         "figures" => cmd_figures(&args),
         "help" | "--help" | "-h" => {
@@ -167,12 +170,29 @@ fn apply_dynamic_flags(args: &Args, cfg: &mut ExperimentConfig) -> Result<()> {
     cfg.dynamic.max_batch = args.get_usize("max-batch", cfg.dynamic.max_batch)?;
     cfg.dynamic.window_s = args.get_f64("window", cfg.dynamic.window_s)?;
     cfg.dynamic.plan_horizon_s = args.get_f64("plan-horizon", cfg.dynamic.plan_horizon_s)?;
+    match args.get("adaptive-horizon") {
+        None => {}
+        Some("true") => cfg.dynamic.plan_horizon_adaptive = true,
+        Some("false") => cfg.dynamic.plan_horizon_adaptive = false,
+        Some(other) => bail!("--adaptive-horizon must be true or false, got '{other}'"),
+    }
     match args.get("no-admission") {
         None => {}
         Some("true") => cfg.dynamic.admission = false,
         Some("false") => cfg.dynamic.admission = true,
         Some(other) => bail!("--no-admission must be true or false, got '{other}'"),
     }
+    Ok(())
+}
+
+/// Apply the fleet flags `cluster` and `faults` share.
+fn apply_cluster_flags(args: &Args, cfg: &mut ExperimentConfig) -> Result<()> {
+    cfg.cluster.servers = args.get_usize("servers", cfg.cluster.servers)?;
+    if let Some(name) = args.get("router") {
+        cfg.cluster.router = RouterKind::from_name(name)?;
+    }
+    cfg.cluster.speed_min = args.get_f64("speed-min", cfg.cluster.speed_min)?;
+    cfg.cluster.speed_max = args.get_f64("speed-max", cfg.cluster.speed_max)?;
     Ok(())
 }
 
@@ -186,6 +206,7 @@ fn cmd_dynamic(args: &Args) -> Result<()> {
         "max-batch",
         "window",
         "plan-horizon",
+        "adaptive-horizon",
         "no-admission",
         "trace-out",
         "scheduler",
@@ -300,6 +321,7 @@ fn cmd_cluster(args: &Args) -> Result<()> {
         "max-batch",
         "window",
         "plan-horizon",
+        "adaptive-horizon",
         "no-admission",
         "scheduler",
         "allocator",
@@ -307,13 +329,7 @@ fn cmd_cluster(args: &Args) -> Result<()> {
     ])?;
     let mut cfg = load_config(args)?;
     apply_dynamic_flags(args, &mut cfg)?;
-    cfg.cluster.servers = args.get_usize("servers", cfg.cluster.servers)?;
-    if let Some(name) = args.get("router") {
-        cfg.cluster.router = RouterKind::from_name(name)
-            .with_context(|| format!("unknown router '{name}' (round-robin|jsq|quality)"))?;
-    }
-    cfg.cluster.speed_min = args.get_f64("speed-min", cfg.cluster.speed_min)?;
-    cfg.cluster.speed_max = args.get_f64("speed-max", cfg.cluster.speed_max)?;
+    apply_cluster_flags(args, &mut cfg)?;
     cfg.validate()?;
 
     let scheduler = scheduler_from(args, &cfg)?;
@@ -384,6 +400,153 @@ fn cmd_cluster(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_faults(args: &Args) -> Result<()> {
+    args.expect_only(&[
+        "config",
+        "servers",
+        "router",
+        "speed-min",
+        "speed-max",
+        "process",
+        "rate",
+        "horizon",
+        "epoch-s",
+        "max-batch",
+        "window",
+        "plan-horizon",
+        "adaptive-horizon",
+        "no-admission",
+        "scheduler",
+        "allocator",
+        "seed",
+        "migration",
+        "fault-mode",
+        "mtbf",
+        "mttr",
+        "fault-seed",
+        "down",
+    ])?;
+    let mut cfg = load_config(args)?;
+    apply_dynamic_flags(args, &mut cfg)?;
+    apply_cluster_flags(args, &mut cfg)?;
+    if let Some(name) = args.get("fault-mode") {
+        cfg.faults.mode = FaultModeKind::from_name(name)?;
+    }
+    cfg.faults.mtbf_s = args.get_f64("mtbf", cfg.faults.mtbf_s)?;
+    cfg.faults.mttr_s = args.get_f64("mttr", cfg.faults.mttr_s)?;
+    cfg.faults.seed = args.get_u64("fault-seed", cfg.faults.seed)?;
+    if let Some(spec) = args.get("down") {
+        // an explicit interval list implies scheduled mode
+        cfg.faults.down = FaultScript::parse_spec(spec)?;
+        cfg.faults.mode = FaultModeKind::Scheduled;
+    }
+    if let Some(name) = args.get("migration") {
+        cfg.migration.policy = MigrationPolicyKind::from_name(name)?;
+    }
+    cfg.validate()?;
+
+    let scheduler = scheduler_from(args, &cfg)?;
+    let allocator = allocator_from(args)?;
+    let quality = quality_model(&cfg)?;
+    let delay = BatchDelayModel::new(cfg.delay.a, cfg.delay.b);
+    let trace = ArrivalTrace::generate(&cfg.scenario, &cfg.arrival, cfg.seed);
+    let faults = cfg.faults.script(cfg.cluster.servers, cfg.arrival.horizon_s, cfg.seed)?;
+    let event_cfg = EventClusterConfig {
+        speeds: aigc_edge::sim::server_speeds(
+            cfg.cluster.servers,
+            cfg.cluster.speed_min,
+            cfg.cluster.speed_max,
+        ),
+        router: cfg.cluster.router,
+        dynamic: DynamicConfig::from(&cfg.dynamic),
+        faults,
+        migration: cfg.migration.policy,
+    };
+    println!(
+        "faults: {} servers router={} | mode={} ({} outages, {:.1}s scheduled downtime) | migration={}",
+        event_cfg.servers(),
+        cfg.cluster.router.name(),
+        cfg.faults.mode.name(),
+        event_cfg.faults.downs().len(),
+        event_cfg.faults.total_downtime_s(),
+        cfg.migration.policy.name(),
+    );
+    println!(
+        "{} arrivals ({:?} rate {} Hz over {}s); scheduler={} allocator={}",
+        trace.len(),
+        cfg.arrival.process,
+        cfg.arrival.rate_hz,
+        cfg.arrival.horizon_s,
+        scheduler.name(),
+        allocator.name()
+    );
+    let report = simulate_event_cluster(
+        &trace,
+        scheduler.as_ref(),
+        allocator.as_ref(),
+        &delay,
+        quality.as_ref(),
+        &event_cfg,
+    );
+
+    let mut table = aigc_edge::bench::TableWriter::new(
+        "per-server serving summary (under failure injection)",
+        &[
+            "server", "speed", "down s", "assigned", "resolved", "served", "mean FID", "outage",
+            "p99 e2e",
+        ],
+    );
+    for s in &report.servers {
+        let stats = report.server_stats(s.server);
+        table.row(&[
+            s.server.to_string(),
+            format!("{:.2}", s.speed),
+            format!("{:.1}", s.downtime_s),
+            s.assigned_ids.len().to_string(),
+            stats.count.to_string(),
+            stats.served.to_string(),
+            format!("{:.1}", stats.mean_quality),
+            format!("{:.3}", stats.outage_rate),
+            format!("{:.2}", stats.p99_e2e_s),
+        ]);
+    }
+    let fleet = report.fleet_stats();
+    table.row(&[
+        "fleet".into(),
+        "-".into(),
+        "-".into(),
+        report.outcomes.len().to_string(),
+        fleet.count.to_string(),
+        fleet.served.to_string(),
+        format!("{:.1}", fleet.mean_quality),
+        format!("{:.3}", fleet.outage_rate),
+        format!("{:.2}", fleet.p99_e2e_s),
+    ]);
+    table.finish();
+    println!(
+        "served {}/{} | mean FID {:.2} | outage rate {:.3} | {} failures | {} migrated | \
+         {} lost to failure | {:.1}s simulated",
+        report.served(),
+        report.outcomes.len(),
+        report.mean_quality(),
+        report.outage_rate(),
+        report.failures(),
+        report.migrated(),
+        report.lost_to_failure(),
+        report.horizon_s,
+    );
+    let rs = report.recovery_stats(cfg.dynamic.window_s);
+    println!(
+        "recovery: mean time-to-drain {:.2}s | post-failure p99 (deadline-censored) {:.2}s | \
+         post-failure outage {:.3} over {} requests",
+        rs.mean_time_to_drain_s,
+        rs.post_failure_p99_s,
+        rs.post_failure_outage_rate,
+        rs.post_failure_count,
+    );
+    Ok(())
+}
+
 fn cmd_profile(args: &Args) -> Result<()> {
     args.expect_only(&["reps", "config"])?;
     let cfg = load_config(args)?;
@@ -427,6 +590,9 @@ fn cmd_figures(args: &Args) -> Result<()> {
     }
     if want("cluster") {
         bench::fig_cluster(&cfg, &[0.5, 1.0, 2.0, 4.0, 8.0, 12.0, 16.0, 20.0], 200.0);
+    }
+    if want("faults") {
+        bench::fig_faults(&cfg, &[0.0, 0.5, 1.0, 2.0], 200.0);
     }
     Ok(())
 }

@@ -85,6 +85,96 @@ impl OutcomeStats {
     }
 }
 
+/// One resolved request as the recovery layer sees it — the inputs
+/// [`RecoveryStats`] needs, decoupled from `sim` types so the metrics
+/// layer stays leaf-level.
+#[derive(Debug, Clone, Copy)]
+pub struct RecoverySample {
+    pub arrival_s: f64,
+    /// Instant the request left the system (completion or drop).
+    pub resolved_s: f64,
+    /// End-to-end delay (meaningful only when served).
+    pub e2e_s: f64,
+    /// Relative deadline τ — the censored delay charged when dropped.
+    pub deadline_s: f64,
+    pub served: bool,
+    pub met: bool,
+}
+
+/// Post-failure recovery aggregates for a fault-injected cluster run
+/// (`sim::event`): how long failures take to drain and what they cost
+/// the latency tail.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RecoveryStats {
+    /// Server failures that fired during the run.
+    pub failures: usize,
+    /// Requests successfully handed to another server.
+    pub migrated: usize,
+    /// Requests dropped because their server died unmigrated.
+    pub lost_to_failure: usize,
+    /// Mean over failures of the time until every request that was in
+    /// the system at the failure instant had left it (0 when a failure
+    /// found an empty system).
+    pub mean_time_to_drain_s: f64,
+    /// Deadline-censored p99 delay over requests a failure could have
+    /// touched — in the system at the failure instant or arriving
+    /// within the window after it. Served requests charge their e2e,
+    /// dropped ones their deadline (the user waited at least that and
+    /// got nothing) — so dropping requests can never flatter the tail.
+    pub post_failure_p99_s: f64,
+    /// Outage rate over the same post-failure windows.
+    pub post_failure_outage_rate: f64,
+    /// Requests inside any post-failure window.
+    pub post_failure_count: usize,
+}
+
+impl RecoveryStats {
+    /// Compute the aggregates. `window_s` bounds the post-failure
+    /// observation window after each failure instant. Empty inputs
+    /// yield all-zero stats.
+    pub fn compute(
+        failure_times: &[f64],
+        window_s: f64,
+        migrated: usize,
+        lost_to_failure: usize,
+        samples: &[RecoverySample],
+    ) -> Self {
+        let mut drain_sum = 0.0;
+        for &f in failure_times {
+            let drain = samples
+                .iter()
+                .filter(|s| s.arrival_s <= f && s.resolved_s > f)
+                .map(|s| s.resolved_s - f)
+                .fold(0.0, f64::max);
+            drain_sum += drain;
+        }
+        let mean_time_to_drain_s =
+            if failure_times.is_empty() { 0.0 } else { drain_sum / failure_times.len() as f64 };
+        let post: Vec<&RecoverySample> = samples
+            .iter()
+            .filter(|s| {
+                failure_times.iter().any(|&f| s.resolved_s >= f && s.arrival_s <= f + window_s)
+            })
+            .collect();
+        let censored: Vec<f64> =
+            post.iter().map(|s| if s.served { s.e2e_s } else { s.deadline_s }).collect();
+        let post_failure_outage_rate = if post.is_empty() {
+            0.0
+        } else {
+            post.iter().filter(|s| !s.met).count() as f64 / post.len() as f64
+        };
+        Self {
+            failures: failure_times.len(),
+            migrated,
+            lost_to_failure,
+            mean_time_to_drain_s,
+            post_failure_p99_s: percentile(&censored, 99.0),
+            post_failure_outage_rate,
+            post_failure_count: post.len(),
+        }
+    }
+}
+
 /// A latency series: streaming moments plus a bounded sample reservoir
 /// for percentiles.
 #[derive(Debug, Default)]
@@ -237,6 +327,48 @@ mod tests {
         assert_eq!(stats.count, 0);
         assert_eq!(stats.mean_quality, 0.0);
         assert_eq!(stats.p99_e2e_s, 0.0);
+    }
+
+    #[test]
+    fn recovery_stats_drain_and_censored_tail() {
+        let s = |arrival: f64, resolved: f64, e2e: f64, deadline: f64, served: bool| {
+            RecoverySample {
+                arrival_s: arrival,
+                resolved_s: resolved,
+                e2e_s: e2e,
+                deadline_s: deadline,
+                served,
+                met: served,
+            }
+        };
+        let samples = [
+            s(0.0, 2.0, 2.0, 10.0, true),   // in-system at the failure, drains at 2.0
+            s(0.5, 4.0, 3.5, 10.0, true),   // in-system, drains at 4.0
+            s(1.5, 3.0, 1.5, 10.0, true),   // post-failure window, served fast
+            s(2.0, 2.5, 0.0, 12.0, false),  // post-failure drop: charged its deadline
+            s(50.0, 51.0, 1.0, 10.0, true), // far outside every window
+        ];
+        let stats = RecoveryStats::compute(&[1.0], 30.0, 3, 1, &samples);
+        assert_eq!(stats.failures, 1);
+        assert_eq!(stats.migrated, 3);
+        assert_eq!(stats.lost_to_failure, 1);
+        // requests 0 and 1 were in-system at t = 1.0; the last leaves at 4.0
+        assert!((stats.mean_time_to_drain_s - 3.0).abs() < 1e-12);
+        // the failure's window touches everything in-system at t = 1
+        // or arriving before t = 31: all but the far-out last sample —
+        // and the censored drop charges its 12 s deadline
+        assert_eq!(stats.post_failure_count, 4);
+        assert!(stats.post_failure_p99_s > 3.5 && stats.post_failure_p99_s <= 12.0);
+        assert!((stats.post_failure_outage_rate - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn recovery_stats_empty_inputs_are_zero() {
+        let stats = RecoveryStats::compute(&[], 30.0, 0, 0, &[]);
+        assert_eq!(stats.failures, 0);
+        assert_eq!(stats.mean_time_to_drain_s, 0.0);
+        assert_eq!(stats.post_failure_p99_s, 0.0);
+        assert_eq!(stats.post_failure_count, 0);
     }
 
     #[test]

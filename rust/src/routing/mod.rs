@@ -43,13 +43,15 @@ pub enum RouterKind {
 
 impl RouterKind {
     /// Parse the CLI/TOML name. Accepts the short aliases the README
-    /// documents.
-    pub fn from_name(name: &str) -> Option<Self> {
+    /// documents; the error lists the valid names.
+    pub fn from_name(name: &str) -> anyhow::Result<Self> {
         match name {
-            "round-robin" | "rr" => Some(Self::RoundRobin),
-            "jsq" | "shortest-queue" => Some(Self::JoinShortestQueue),
-            "quality" | "quality-aware" => Some(Self::QualityAware),
-            _ => None,
+            "round-robin" | "rr" => Ok(Self::RoundRobin),
+            "jsq" | "shortest-queue" => Ok(Self::JoinShortestQueue),
+            "quality" | "quality-aware" => Ok(Self::QualityAware),
+            other => anyhow::bail!(
+                "unknown router '{other}' (valid: round-robin|rr, jsq|shortest-queue, quality|quality-aware)"
+            ),
         }
     }
 
@@ -439,12 +441,14 @@ mod tests {
     #[test]
     fn router_kind_names_round_trip() {
         for kind in RouterKind::all() {
-            assert_eq!(RouterKind::from_name(kind.name()), Some(kind));
+            assert_eq!(RouterKind::from_name(kind.name()).unwrap(), kind);
         }
-        assert_eq!(RouterKind::from_name("rr"), Some(RouterKind::RoundRobin));
-        assert_eq!(RouterKind::from_name("shortest-queue"), Some(RouterKind::JoinShortestQueue));
-        assert_eq!(RouterKind::from_name("quality"), Some(RouterKind::QualityAware));
-        assert_eq!(RouterKind::from_name("bogus"), None);
+        assert_eq!(RouterKind::from_name("rr").unwrap(), RouterKind::RoundRobin);
+        assert_eq!(RouterKind::from_name("shortest-queue").unwrap(), RouterKind::JoinShortestQueue);
+        assert_eq!(RouterKind::from_name("quality").unwrap(), RouterKind::QualityAware);
+        let err = RouterKind::from_name("bogus").unwrap_err().to_string();
+        assert!(err.contains("round-robin") && err.contains("jsq"), "{err}");
+        assert!(err.contains("quality-aware"), "{err}");
     }
 
     #[test]

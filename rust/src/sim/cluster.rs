@@ -124,7 +124,7 @@ pub struct ClusterReport {
     pub horizon_s: f64,
 }
 
-fn samples(outcomes: &[RequestOutcome]) -> Vec<ResolvedSample> {
+pub(crate) fn samples(outcomes: &[RequestOutcome]) -> Vec<ResolvedSample> {
     outcomes
         .iter()
         .map(|o| ResolvedSample {

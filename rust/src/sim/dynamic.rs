@@ -50,6 +50,30 @@ pub struct DynamicConfig {
     /// starves — the fundamental static→dynamic tension. Smaller values
     /// trade per-request quality for responsiveness.
     pub plan_horizon_s: f64,
+    /// Load-adaptive planning horizon (opt-in): scale `plan_horizon_s`
+    /// by queue pressure — shrink when the queue outgrows the batch
+    /// cap, stretch (up to 2×) when it idles. See
+    /// [`effective_plan_horizon`](Self::effective_plan_horizon).
+    pub plan_horizon_adaptive: bool,
+}
+
+impl DynamicConfig {
+    /// The planning horizon an epoch solve actually uses, given the
+    /// queue depth at the solve instant. With `plan_horizon_adaptive`
+    /// off this is `plan_horizon_s` unconditionally (bit-identical to
+    /// the pre-adaptive behaviour). With it on, the horizon is
+    /// `plan_horizon_s · 2/(1 + depth/max_batch)`, clamped to
+    /// `[0.25, 2] × plan_horizon_s`: monotone non-increasing in depth,
+    /// equal to the static value at exactly one full batch, stretched
+    /// toward 2× when idle and floored at 0.25× under deep backlog.
+    pub fn effective_plan_horizon(&self, queue_depth: usize) -> f64 {
+        if !self.plan_horizon_adaptive {
+            return self.plan_horizon_s;
+        }
+        let load = queue_depth as f64 / self.epoch.max_batch as f64;
+        let factor = (2.0 / (1.0 + load)).clamp(0.25, 2.0);
+        self.plan_horizon_s * factor
+    }
 }
 
 impl Default for DynamicConfig {
@@ -59,6 +83,7 @@ impl Default for DynamicConfig {
             admission: true,
             window_s: 30.0,
             plan_horizon_s: 2.0,
+            plan_horizon_adaptive: false,
         }
     }
 }
@@ -72,6 +97,7 @@ impl From<&crate::config::DynamicSettings> for DynamicConfig {
             admission: d.admission,
             window_s: d.window_s,
             plan_horizon_s: d.plan_horizon_s,
+            plan_horizon_adaptive: d.plan_horizon_adaptive,
         }
     }
 }
@@ -85,6 +111,9 @@ pub enum Disposition {
     RejectedOnArrival,
     /// Carried over at least one epoch, then became infeasible.
     ExpiredInQueue,
+    /// Stranded on a failed server and not migrated (`sim::event` with
+    /// a fault script; never produced by `simulate_dynamic` itself).
+    LostToFailure,
 }
 
 /// Per-request outcome of a dynamic run.
@@ -230,6 +259,13 @@ struct Queued {
 }
 
 /// Run the dynamic simulation of `trace` under the given policies.
+///
+/// MIRROR CONTRACT: `sim::event` replays this loop's epoch semantics
+/// op-for-op (ingest rules, admission, solve, resolve, carry-over) so
+/// its zero-fault case stays bit-identical to the cluster layer. Any
+/// behavioural change here must be mirrored in
+/// `sim::event::Engine::{solve_server, open_after_solve}` and
+/// `ServerSim::ingest` — `tests/event_equivalence.rs` is the guard.
 pub fn simulate_dynamic(
     trace: &ArrivalTrace,
     scheduler: &dyn BatchScheduler,
@@ -367,13 +403,14 @@ pub fn simulate_dynamic(
         // Deadlines are clamped to the planning horizon so this epoch's
         // schedule cannot monopolize the GPU against future arrivals;
         // `met` stays conservative (met under the clamp ⇒ met for
-        // real).
+        // real). The horizon itself may adapt to queue pressure.
+        let plan_horizon = cfg.effective_plan_horizon(queue_depth);
         let devices: Vec<DeviceRequest> = admitted
             .iter()
             .enumerate()
             .map(|(i, q)| DeviceRequest {
                 id: i,
-                deadline: (q.abs_deadline_s - t0).min(cfg.plan_horizon_s),
+                deadline: (q.abs_deadline_s - t0).min(plan_horizon),
                 link: q.link,
             })
             .collect();
@@ -629,5 +666,47 @@ mod tests {
         assert_eq!(report.mean_quality(), 0.0);
         assert_eq!(report.outage_rate(), 0.0);
         assert_eq!(report.throughput_hz(), 0.0);
+    }
+
+    #[test]
+    fn adaptive_plan_horizon_is_monotone_bounded_and_off_by_default() {
+        let off = DynamicConfig::default();
+        assert!(!off.plan_horizon_adaptive, "adaptive horizon must be opt-in");
+        for depth in [0, 1, 32, 500] {
+            assert_eq!(off.effective_plan_horizon(depth), off.plan_horizon_s);
+        }
+        let cfg = DynamicConfig { plan_horizon_adaptive: true, ..DynamicConfig::default() };
+        // monotone non-increasing in queue depth
+        let horizons: Vec<f64> = (0..200).map(|d| cfg.effective_plan_horizon(d)).collect();
+        assert!(
+            horizons.windows(2).all(|w| w[1] <= w[0] + 1e-15),
+            "horizon must shrink as the queue grows"
+        );
+        // stretched when idle, static value at one full batch, floored deep
+        assert!((cfg.effective_plan_horizon(0) - 2.0 * cfg.plan_horizon_s).abs() < 1e-12);
+        let full = cfg.effective_plan_horizon(cfg.epoch.max_batch);
+        assert!((full - cfg.plan_horizon_s).abs() < 1e-12, "one full batch keeps the static value");
+        let deep = cfg.effective_plan_horizon(100 * cfg.epoch.max_batch);
+        assert!((deep - 0.25 * cfg.plan_horizon_s).abs() < 1e-12, "deep backlog hits the floor");
+        for depth in 0..500 {
+            let h = cfg.effective_plan_horizon(depth);
+            assert!(h >= 0.25 * cfg.plan_horizon_s - 1e-12, "below floor at {depth}: {h}");
+            assert!(h <= 2.0 * cfg.plan_horizon_s + 1e-12, "above ceiling at {depth}: {h}");
+        }
+    }
+
+    #[test]
+    fn adaptive_horizon_changes_behaviour_under_pressure_only() {
+        // Light load never fills an epoch past the batch cap, so the
+        // adaptive horizon only stretches — everyone is still served.
+        let t = trace(0.5, 60.0, 2);
+        let adaptive = DynamicConfig { plan_horizon_adaptive: true, ..DynamicConfig::default() };
+        let report = run(&t, &adaptive);
+        assert_eq!(report.dropped(), 0, "adaptive horizon must not drop under light load");
+        // Under pressure the shrunken horizon keeps epochs short: the
+        // peak per-epoch makespan must not exceed the stretched bound.
+        let heavy = run(&trace(15.0, 40.0, 3), &adaptive);
+        let max_makespan = heavy.epochs.iter().map(|e| e.makespan_s).fold(0.0, f64::max);
+        assert!(max_makespan <= 2.0 * adaptive.plan_horizon_s + 1.0, "makespan {max_makespan}");
     }
 }

@@ -1,0 +1,1255 @@
+//! Fault-aware shared-clock cluster engine — one discrete-event loop
+//! over the whole fleet, replacing `simulate_cluster`'s per-server
+//! sequential replay.
+//!
+//! `sim::cluster` routes every arrival up front and then replays each
+//! server's serving loop to completion, one server at a time. That is
+//! exact for an all-alive fleet (per-server loops are independent once
+//! dispatch is fixed) but cannot express anything that happens *between*
+//! servers mid-trace: failures, recoveries, or work moving across the
+//! fleet. This engine runs the same per-server epoch semantics —
+//! op-for-op identical to [`simulate_dynamic`](super::simulate_dynamic);
+//! the zero-fault case reproduces
+//! [`simulate_cluster`](super::simulate_cluster) bit-for-bit
+//! (asserted by `tests/event_equivalence.rs`) — but under one shared
+//! wall clock with an explicit, totally-ordered event stream:
+//!
+//! * **arrival** events route each request at its arrival instant
+//!   through the live fleet (a failed server is skipped the moment it
+//!   fails — the router's availability view is no longer stale);
+//! * **epoch** events (per-server, naturally staggered: every server's
+//!   epochs open and close on its own queue) freeze an epoch's
+//!   membership at its close and run the (P0) solve once the GPU frees;
+//! * **failure/recovery** events from a [`FaultScript`] toggle server
+//!   availability; a dying server's queued-but-unsolved requests are
+//!   handed to the configured [`MigrationPolicy`].
+//!
+//! Migration preserves the elapsed deadline budget: a re-routed request
+//! keeps its original arrival id, arrival instant and absolute
+//! deadline, so waiting on a dead server is never forgiven. A solve
+//! that has already committed (the batch is on the GPU) is atomic —
+//! failures strand queued work, not in-flight work.
+//!
+//! Event ordering is total and deterministic: time-ascending, and at
+//! equal instants fault events first, then arrivals, then per-server
+//! epoch events by ascending server id. Identical inputs replay
+//! bit-identically (asserted by `tests/migration_properties.rs`).
+//!
+//! Like `simulate_cluster`, the one `allocator` instance is shared by
+//! every solve; a *stateful* allocator (PSO `warm_start`) sees solves
+//! in shared-clock order here vs per-server order there, so the two
+//! engines only coincide bit-for-bit under stateless allocators.
+
+use std::collections::VecDeque;
+
+use crate::bandwidth::Allocator;
+use crate::channel::Link;
+use crate::coordinator::EpochPolicy;
+use crate::delay::BatchDelayModel;
+use crate::faults::{FaultEvent, FaultKind, FaultScript, MigrationPolicy, MigrationPolicyKind};
+use crate::metrics::{OutcomeStats, RecoverySample, RecoveryStats, ServiceWindows};
+use crate::quality::QualityModel;
+use crate::routing::{RouteContext, Router, RouterKind, ServerState};
+use crate::scheduler::BatchScheduler;
+use crate::trace::{Arrival, ArrivalTrace, DeviceRequest, Workload};
+
+use super::cluster::{samples, ClusterConfig};
+use super::dynamic::{Disposition, DynamicConfig, EpochRecord, RequestOutcome};
+use super::solve_joint;
+
+/// Sentinel in [`EventReport::assignment`] for a request that was never
+/// dispatched to any server (the whole fleet was down from its arrival
+/// until its deadline).
+pub const UNROUTED: usize = usize::MAX;
+
+/// Settings for one fault-aware cluster run.
+#[derive(Debug, Clone)]
+pub struct EventClusterConfig {
+    /// Per-server GPU speed factors (1.0 = the reference delay model).
+    pub speeds: Vec<f64>,
+    /// Dispatch policy.
+    pub router: RouterKind,
+    /// Per-server serving-loop settings (shared by every server).
+    pub dynamic: DynamicConfig,
+    /// Failure trace to inject (empty = all-alive).
+    pub faults: FaultScript,
+    /// What happens to a dead/overloaded server's queued requests.
+    pub migration: MigrationPolicyKind,
+}
+
+impl EventClusterConfig {
+    /// The zero-fault configuration equivalent to `cluster` — the
+    /// bit-identity case against
+    /// [`simulate_cluster`](super::simulate_cluster).
+    pub fn fault_free(cluster: &ClusterConfig) -> Self {
+        Self {
+            speeds: cluster.speeds.clone(),
+            router: cluster.router,
+            dynamic: cluster.dynamic,
+            faults: FaultScript::empty(),
+            migration: MigrationPolicyKind::None,
+        }
+    }
+
+    pub fn servers(&self) -> usize {
+        self.speeds.len()
+    }
+}
+
+/// Why a request moved between servers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MigrationReason {
+    /// Its server died with the request still queued.
+    DeadServer,
+    /// A carry-over handed back to the router because an idle sibling
+    /// existed at the solve instant.
+    StealWhenIdle,
+    /// Re-dispatched from the unroutable pool when a server recovered.
+    Recovery,
+}
+
+/// One hand-off of a request through the router after its initial
+/// dispatch (or, for `to: None`, a failed hand-off that parked it).
+#[derive(Debug, Clone, Copy)]
+pub struct MigrationRecord {
+    /// Global arrival id — migration never renames a request.
+    pub id: usize,
+    /// Server it left (`None`: it was parked unroutable).
+    pub from: Option<usize>,
+    /// Server it landed on (`None`: no server was alive; parked).
+    pub to: Option<usize>,
+    pub t_s: f64,
+    pub reason: MigrationReason,
+}
+
+/// One server's slice of a fault-aware cluster run.
+#[derive(Debug, Clone)]
+pub struct EventServerReport {
+    pub server: usize,
+    pub speed: f64,
+    /// Global ids first dispatched here, in dispatch order.
+    pub assigned_ids: Vec<usize>,
+    /// Global ids this server resolved (served or dropped), in
+    /// resolution order — under migration this differs from
+    /// `assigned_ids`.
+    pub resolved_ids: Vec<usize>,
+    pub epochs: Vec<EpochRecord>,
+    /// Total time this server spent failed.
+    pub downtime_s: f64,
+}
+
+/// Complete result of a fault-aware cluster run.
+#[derive(Debug, Clone)]
+pub struct EventReport {
+    /// One outcome per trace arrival, indexed by (global) arrival id.
+    pub outcomes: Vec<RequestOutcome>,
+    /// First dispatch destination per arrival ([`UNROUTED`] when the
+    /// request never reached any server).
+    pub assignment: Vec<usize>,
+    pub servers: Vec<EventServerReport>,
+    /// Every post-dispatch hand-off, in hand-off order.
+    pub migrations: Vec<MigrationRecord>,
+    /// Availability transitions that actually fired during the run.
+    pub fault_log: Vec<FaultEvent>,
+    /// Total simulated span.
+    pub horizon_s: f64,
+}
+
+impl EventReport {
+    pub fn served(&self) -> usize {
+        self.fleet_stats().served
+    }
+
+    pub fn dropped(&self) -> usize {
+        self.outcomes.len() - self.served()
+    }
+
+    /// The fleet (P0) objective: mean charged quality over every
+    /// request that entered the cluster.
+    pub fn mean_quality(&self) -> f64 {
+        self.fleet_stats().mean_quality
+    }
+
+    pub fn outage_rate(&self) -> f64 {
+        self.fleet_stats().outage_rate
+    }
+
+    /// Fleet-wide summary (quality, outage, e2e percentiles, wait).
+    pub fn fleet_stats(&self) -> OutcomeStats {
+        OutcomeStats::from_samples(&samples(&self.outcomes))
+    }
+
+    /// Summary over the requests one server resolved.
+    pub fn server_stats(&self, server: usize) -> OutcomeStats {
+        let outcomes: Vec<RequestOutcome> =
+            self.servers[server].resolved_ids.iter().map(|&id| self.outcomes[id]).collect();
+        OutcomeStats::from_samples(&samples(&outcomes))
+    }
+
+    /// Requests dropped because their server died (no or failed
+    /// migration).
+    pub fn lost_to_failure(&self) -> usize {
+        self.outcomes.iter().filter(|o| o.disposition == Disposition::LostToFailure).count()
+    }
+
+    /// Successful hand-offs that actually changed servers.
+    pub fn migrated(&self) -> usize {
+        self.migrations.iter().filter(|m| m.to.is_some() && m.to != m.from).count()
+    }
+
+    pub fn failures(&self) -> usize {
+        self.fault_log.iter().filter(|e| e.kind == FaultKind::Down).count()
+    }
+
+    /// Epoch solves summed over servers.
+    pub fn total_epochs(&self) -> usize {
+        self.servers.iter().map(|s| s.epochs.len()).sum()
+    }
+
+    /// Deepest per-epoch queue any single server saw.
+    pub fn peak_queue_depth(&self) -> usize {
+        self.servers
+            .iter()
+            .map(|s| s.epochs.iter().map(|e| e.queue_depth).max().unwrap_or(0))
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Deferral (cross-epoch carry-over) events summed over requests.
+    pub fn total_deferrals(&self) -> usize {
+        self.outcomes.iter().map(|o| o.deferrals as usize).sum()
+    }
+
+    /// Post-failure recovery aggregates (time-to-drain, censored p99
+    /// tail over the `window_s` after each failure, migration counts).
+    pub fn recovery_stats(&self, window_s: f64) -> RecoveryStats {
+        let failures: Vec<f64> = self
+            .fault_log
+            .iter()
+            .filter(|e| e.kind == FaultKind::Down)
+            .map(|e| e.t_s)
+            .collect();
+        let samples: Vec<RecoverySample> = self
+            .outcomes
+            .iter()
+            .map(|o| RecoverySample {
+                arrival_s: o.arrival_s,
+                resolved_s: o.resolved_s,
+                e2e_s: o.e2e_s,
+                deadline_s: o.deadline_s,
+                served: o.disposition == Disposition::Served,
+                met: o.met,
+            })
+            .collect();
+        let migrated = self.migrated();
+        let lost = self.lost_to_failure();
+        RecoveryStats::compute(&failures, window_s, migrated, lost, &samples)
+    }
+}
+
+/// One request queued somewhere in the fleet.
+#[derive(Debug, Clone, Copy)]
+struct Pending {
+    /// Global arrival id — preserved across migrations.
+    id: usize,
+    /// Original arrival instant — preserved across migrations.
+    arrival_s: f64,
+    /// When it entered its *current* server's stream (= `arrival_s`
+    /// until migrated).
+    enqueued_s: f64,
+    /// Absolute deadline — preserved across migrations (elapsed budget
+    /// is never refunded).
+    abs_deadline_s: f64,
+    /// Relative deadline τ.
+    deadline_s: f64,
+    link: Link,
+    deferrals: u32,
+    /// Already counted in the current server's arrival window (reset
+    /// when migrating to a different server, so per-server windows see
+    /// each request at most once).
+    recorded: bool,
+}
+
+impl Pending {
+    fn from_arrival(a: &Arrival) -> Self {
+        Self {
+            id: a.id,
+            arrival_s: a.t_s,
+            enqueued_s: a.t_s,
+            abs_deadline_s: a.t_s + a.deadline_s,
+            deadline_s: a.deadline_s,
+            link: a.link,
+            deferrals: 0,
+            recorded: false,
+        }
+    }
+}
+
+/// One server's epoch under construction (or frozen, awaiting its
+/// solve).
+#[derive(Debug, Clone)]
+struct Epoch {
+    open_s: f64,
+    /// Scheduled close (timer), pulled earlier on batch-fill.
+    close_s: f64,
+    /// Membership frozen: no further joins; solve at
+    /// `max(close_s, gpu_free_s)`.
+    closed: bool,
+    queue: Vec<Pending>,
+}
+
+/// One server's live serving-loop state.
+struct ServerSim {
+    id: usize,
+    speed: f64,
+    /// Speed-scaled delay model `g_s(X) = g(X)/speed`.
+    delay: BatchDelayModel,
+    alive: bool,
+    epoch: Option<Epoch>,
+    /// Requests routed here while the current epoch was frozen; they
+    /// seed the next epoch, exactly like simulate_dynamic's
+    /// not-yet-ingested trace arrivals.
+    backlog: VecDeque<Pending>,
+    gpu_free_s: f64,
+    windows: ServiceWindows,
+    epochs: Vec<EpochRecord>,
+    assigned_ids: Vec<usize>,
+    resolved_ids: Vec<usize>,
+    down_since: Option<f64>,
+    downtime_s: f64,
+}
+
+impl ServerSim {
+    fn new(id: usize, speed: f64, reference: &BatchDelayModel, window_s: f64) -> Self {
+        Self {
+            id,
+            speed,
+            delay: BatchDelayModel::new(reference.a / speed, reference.b / speed),
+            alive: true,
+            epoch: None,
+            backlog: VecDeque::new(),
+            gpu_free_s: 0.0,
+            windows: ServiceWindows::new(window_s),
+            epochs: Vec::new(),
+            assigned_ids: Vec::new(),
+            resolved_ids: Vec::new(),
+            down_since: None,
+            downtime_s: 0.0,
+        }
+    }
+
+    /// Count a request in this server's arrival window, at most once
+    /// per server (simulate_dynamic records at first epoch entry and
+    /// never re-records carry-overs).
+    fn note_arrival(windows: &mut ServiceWindows, p: &mut Pending) {
+        if !p.recorded {
+            windows.record_arrival(p.enqueued_s);
+            p.recorded = true;
+        }
+    }
+
+    /// Route a request into this server's stream at instant `t`,
+    /// replaying simulate_dynamic's ingest rules: join an open epoch
+    /// (unconditionally at `t ≤ open`, with the batch-close check past
+    /// it), or wait in the backlog while an epoch is frozen.
+    fn ingest(&mut self, mut p: Pending, t: f64, policy: &EpochPolicy) {
+        match self.epoch.as_mut() {
+            None => {
+                Self::note_arrival(&mut self.windows, &mut p);
+                let e = Epoch {
+                    open_s: t,
+                    close_s: policy.close_deadline(t),
+                    closed: false,
+                    queue: vec![p],
+                };
+                self.epoch = Some(e);
+            }
+            Some(e) if !e.closed => {
+                Self::note_arrival(&mut self.windows, &mut p);
+                e.queue.push(p);
+                if t > e.open_s && policy.should_close(e.queue.len(), t - e.open_s) {
+                    e.close_s = t;
+                    e.closed = true;
+                }
+            }
+            Some(_) => self.backlog.push_back(p),
+        }
+    }
+
+    /// The instant this server next needs the shared clock: its epoch
+    /// timer (building) or its solve instant (frozen). Dead or idle
+    /// servers have no events.
+    fn next_event_time(&self) -> Option<f64> {
+        if !self.alive {
+            return None;
+        }
+        match &self.epoch {
+            Some(e) if !e.closed => Some(e.close_s),
+            Some(e) => Some(e.close_s.max(self.gpu_free_s)),
+            None => None,
+        }
+    }
+
+    /// No queued work and a free GPU at `t` — a steal target.
+    fn is_idle(&self, t: f64) -> bool {
+        self.epoch.is_none() && self.backlog.is_empty() && self.gpu_free_s <= t
+    }
+}
+
+struct Engine<'a> {
+    trace: &'a ArrivalTrace,
+    scheduler: &'a dyn BatchScheduler,
+    allocator: &'a dyn Allocator,
+    /// Reference (speed-1.0) delay model — parameterizes routing's
+    /// shared service estimate, exactly as in `route_trace`.
+    delay: &'a BatchDelayModel,
+    quality: &'a dyn QualityModel,
+    dynamic: DynamicConfig,
+    policy: Box<dyn MigrationPolicy>,
+    router: Box<dyn Router>,
+    /// The router's virtual-queue view of the fleet (liveness is kept
+    /// current by fault events — the non-stale part of the view).
+    states: Vec<ServerState>,
+    ctx: RouteContext,
+    servers: Vec<ServerSim>,
+    fault_events: Vec<FaultEvent>,
+    next_fault: usize,
+    next_arrival: usize,
+    /// Requests with no alive server to go to, waiting for a recovery.
+    unroutable: VecDeque<Pending>,
+    outcomes: Vec<Option<RequestOutcome>>,
+    assignment: Vec<usize>,
+    migrations: Vec<MigrationRecord>,
+    fault_log: Vec<FaultEvent>,
+    horizon: f64,
+    outage_q: f64,
+}
+
+fn better(cand: (f64, u8, usize), best: Option<(f64, u8, usize)>) -> bool {
+    match best {
+        None => true,
+        Some(b) => cand.0 < b.0 || (cand.0 == b.0 && (cand.1, cand.2) < (b.1, b.2)),
+    }
+}
+
+impl Engine<'_> {
+    fn run(&mut self) {
+        loop {
+            let work_left = self.next_arrival < self.trace.len()
+                || self.servers.iter().any(|s| s.epoch.is_some())
+                || !self.unroutable.is_empty();
+            if !work_left {
+                break;
+            }
+            // Earliest event wins; ties break fault < arrival < server,
+            // then ascending server id — a fixed total order, so replay
+            // is bit-identical.
+            let mut best: Option<(f64, u8, usize)> = None;
+            if self.next_fault < self.fault_events.len() {
+                let c = (self.fault_events[self.next_fault].t_s, 0u8, 0usize);
+                if better(c, best) {
+                    best = Some(c);
+                }
+            }
+            if self.next_arrival < self.trace.len() {
+                let c = (self.trace.arrivals[self.next_arrival].t_s, 1u8, 0usize);
+                if better(c, best) {
+                    best = Some(c);
+                }
+            }
+            for s in &self.servers {
+                if let Some(t) = s.next_event_time() {
+                    let c = (t, 2u8, s.id);
+                    if better(c, best) {
+                        best = Some(c);
+                    }
+                }
+            }
+            let Some((_, class, idx)) = best else {
+                // Only parked unroutable requests remain and no
+                // recovery can ever free them.
+                self.drain_unroutable();
+                break;
+            };
+            match class {
+                0 => self.handle_fault(),
+                1 => self.handle_arrival(),
+                _ => self.handle_server_event(idx),
+            }
+        }
+        debug_assert!(self.unroutable.is_empty());
+        debug_assert!(self.servers.iter().all(|s| s.backlog.is_empty()));
+    }
+
+    fn handle_fault(&mut self) {
+        let ev = self.fault_events[self.next_fault];
+        self.next_fault += 1;
+        match ev.kind {
+            FaultKind::Down => self.kill_server(ev.server, ev.t_s),
+            FaultKind::Up => self.revive_server(ev.server, ev.t_s),
+        }
+    }
+
+    fn kill_server(&mut self, s: usize, t: f64) {
+        if !self.servers[s].alive {
+            return;
+        }
+        self.states[s].alive = false;
+        self.servers[s].alive = false;
+        self.servers[s].down_since = Some(t);
+        self.fault_log.push(FaultEvent { t_s: t, server: s, kind: FaultKind::Down });
+        // Orphan the queued-but-unsolved work: the current epoch
+        // (building or frozen-awaiting-solve) and the backlog, in
+        // queue order. In-flight committed solves stand.
+        let mut orphans: Vec<Pending> = Vec::new();
+        if let Some(e) = self.servers[s].epoch.take() {
+            orphans.extend(e.queue);
+        }
+        orphans.extend(self.servers[s].backlog.drain(..));
+        let requeue = self.policy.requeue_on_death();
+        for p in orphans {
+            if requeue {
+                self.reroute(p, t, MigrationReason::DeadServer, Some(s));
+            } else {
+                self.resolve_lost(p, t, Some(s));
+            }
+        }
+    }
+
+    fn revive_server(&mut self, s: usize, t: f64) {
+        if self.servers[s].alive {
+            return;
+        }
+        self.states[s].alive = true;
+        self.servers[s].alive = true;
+        if let Some(since) = self.servers[s].down_since.take() {
+            self.servers[s].downtime_s += t - since;
+        }
+        self.fault_log.push(FaultEvent { t_s: t, server: s, kind: FaultKind::Up });
+        // Capacity returned: everything parked unroutable re-enters
+        // the router with whatever deadline budget it has left. A
+        // request whose deadline already passed during the outage
+        // expired at that deadline, not at the (possibly much later)
+        // recovery instant.
+        let parked: Vec<Pending> = self.unroutable.drain(..).collect();
+        for p in parked {
+            if p.abs_deadline_s <= t {
+                self.resolve_lost(p, p.abs_deadline_s, None);
+            } else {
+                self.reroute(p, t, MigrationReason::Recovery, None);
+            }
+        }
+    }
+
+    fn handle_arrival(&mut self) {
+        let a = self.trace.arrivals[self.next_arrival];
+        self.next_arrival += 1;
+        for st in self.states.iter_mut() {
+            st.advance(a.t_s);
+        }
+        if !self.states.iter().any(|st| st.alive) {
+            // The whole fleet is down: park until a recovery.
+            self.unroutable.push_back(Pending::from_arrival(&a));
+            return;
+        }
+        let choice = self.router.route(&a, &self.states, &self.ctx);
+        let name = self.router.name();
+        assert!(self.states[choice].alive, "router {name} picked failed server {choice}");
+        let service_est_s = self.delay.g(1) / self.states[choice].speed;
+        self.states[choice].assign(a.t_s, service_est_s);
+        self.assignment[a.id] = choice;
+        self.servers[choice].assigned_ids.push(a.id);
+        let epoch_policy = self.dynamic.epoch;
+        self.servers[choice].ingest(Pending::from_arrival(&a), a.t_s, &epoch_policy);
+    }
+
+    /// Hand a request back through the router at instant `t`, with its
+    /// elapsed deadline budget preserved.
+    fn reroute(&mut self, p: Pending, t: f64, reason: MigrationReason, from: Option<usize>) {
+        for st in self.states.iter_mut() {
+            st.advance(t);
+        }
+        if !self.states.iter().any(|st| st.alive) {
+            self.migrations.push(MigrationRecord { id: p.id, from, to: None, t_s: t, reason });
+            self.unroutable.push_back(p);
+            return;
+        }
+        // The router sees the *residual* budget — migration never
+        // refunds elapsed time.
+        let view = Arrival { id: p.id, t_s: t, deadline_s: p.abs_deadline_s - t, link: p.link };
+        let choice = self.router.route(&view, &self.states, &self.ctx);
+        let name = self.router.name();
+        assert!(self.states[choice].alive, "router {name} picked failed server {choice}");
+        let service_est_s = self.delay.g(1) / self.states[choice].speed;
+        self.states[choice].assign(t, service_est_s);
+        self.migrations.push(MigrationRecord { id: p.id, from, to: Some(choice), t_s: t, reason });
+        if self.assignment[p.id] == UNROUTED {
+            self.assignment[p.id] = choice;
+            self.servers[choice].assigned_ids.push(p.id);
+        }
+        let epoch_policy = self.dynamic.epoch;
+        let landed = Pending { enqueued_s: t, recorded: false, ..p };
+        self.servers[choice].ingest(landed, t, &epoch_policy);
+    }
+
+    /// Hand a solve's carry-over to the router under steal-when-idle.
+    /// Unlike a death hand-off, the source is still alive, so the
+    /// router may keep the request home — that is a local carry-over,
+    /// not a migration (no record, no fresh virtual-queue charge).
+    fn steal_hand_off(&mut self, p: Pending, t: f64, from: usize) {
+        for st in self.states.iter_mut() {
+            st.advance(t);
+        }
+        let reason = MigrationReason::StealWhenIdle;
+        if !self.states.iter().any(|st| st.alive) {
+            let record = MigrationRecord { id: p.id, from: Some(from), to: None, t_s: t, reason };
+            self.migrations.push(record);
+            self.unroutable.push_back(p);
+            return;
+        }
+        let view = Arrival { id: p.id, t_s: t, deadline_s: p.abs_deadline_s - t, link: p.link };
+        let choice = self.router.route(&view, &self.states, &self.ctx);
+        let name = self.router.name();
+        assert!(self.states[choice].alive, "router {name} picked failed server {choice}");
+        let epoch_policy = self.dynamic.epoch;
+        if choice == from {
+            self.servers[from].ingest(Pending { enqueued_s: t, ..p }, t, &epoch_policy);
+            return;
+        }
+        let service_est_s = self.delay.g(1) / self.states[choice].speed;
+        self.states[choice].assign(t, service_est_s);
+        let record = MigrationRecord {
+            id: p.id,
+            from: Some(from),
+            to: Some(choice),
+            t_s: t,
+            reason,
+        };
+        self.migrations.push(record);
+        let landed = Pending { enqueued_s: t, recorded: false, ..p };
+        self.servers[choice].ingest(landed, t, &epoch_policy);
+    }
+
+    fn handle_server_event(&mut self, idx: usize) {
+        let ready = match self.servers[idx].epoch.as_mut() {
+            Some(e) if !e.closed => {
+                // The epoch timer fired with no batch-fill: freeze
+                // membership at the scheduled close.
+                e.closed = true;
+                false
+            }
+            Some(_) => true,
+            None => unreachable!("server event with no epoch"),
+        };
+        if ready {
+            self.solve_server(idx);
+        }
+    }
+
+    /// One frozen epoch's (P0) solve — simulate_dynamic's loop body,
+    /// op-for-op, against this server's speed-scaled delay model.
+    fn solve_server(&mut self, idx: usize) {
+        let cfg = self.dynamic;
+        let e = self.servers[idx].epoch.take().expect("closed epoch to solve");
+        debug_assert!(e.closed);
+        let t0 = e.close_s.max(self.servers[idx].gpu_free_s);
+        let epoch_index = self.servers[idx].epochs.len();
+        let queue_depth = e.queue.len();
+        let scaled = self.servers[idx].delay;
+
+        // ---- admission control ----
+        let mut admitted: Vec<Pending> = Vec::new();
+        let mut dropped_now = 0usize;
+        for q in e.queue {
+            let residual = q.abs_deadline_s - t0;
+            let min_tx = if cfg.admission {
+                q.link.tx_delay(self.trace.content_bits, self.trace.total_bandwidth_hz)
+            } else {
+                0.0
+            };
+            if residual < scaled.g(1) + min_tx {
+                let disposition = if q.deferrals == 0 {
+                    Disposition::RejectedOnArrival
+                } else {
+                    Disposition::ExpiredInQueue
+                };
+                self.servers[idx].windows.record_dropped(t0, self.outage_q);
+                let outcome = RequestOutcome {
+                    id: q.id,
+                    arrival_s: q.arrival_s,
+                    deadline_s: q.deadline_s,
+                    disposition,
+                    steps: 0,
+                    quality: self.outage_q,
+                    e2e_s: 0.0,
+                    wait_s: t0 - q.arrival_s,
+                    deferrals: q.deferrals,
+                    epoch: epoch_index,
+                    met: false,
+                    resolved_s: t0,
+                };
+                self.resolve(q.id, outcome, idx);
+                self.horizon = self.horizon.max(t0);
+                dropped_now += 1;
+            } else {
+                admitted.push(q);
+            }
+        }
+
+        if admitted.is_empty() {
+            self.servers[idx].windows.prune(t0);
+            let rec = self.epoch_rec(idx, epoch_index, t0, queue_depth, 0, 0, 0, dropped_now, 0.0);
+            self.servers[idx].epochs.push(rec);
+            self.open_after_solve(idx, t0, Vec::new());
+            return;
+        }
+
+        // ---- one (P0) solve over residual deadlines ----
+        let plan_horizon = cfg.effective_plan_horizon(queue_depth);
+        let devices: Vec<DeviceRequest> = admitted
+            .iter()
+            .enumerate()
+            .map(|(i, q)| DeviceRequest {
+                id: i,
+                deadline: (q.abs_deadline_s - t0).min(plan_horizon),
+                link: q.link,
+            })
+            .collect();
+        let workload = Workload {
+            devices,
+            total_bandwidth_hz: self.trace.total_bandwidth_hz,
+            content_bits: self.trace.content_bits,
+        };
+        let sol = solve_joint(&workload, self.scheduler, self.allocator, &scaled, self.quality);
+        let makespan = sol.outcome.schedule.makespan();
+
+        // ---- resolve served requests; collect carry-overs ----
+        let mut served_now = 0usize;
+        let mut deferred: Vec<Pending> = Vec::new();
+        for (i, q) in admitted.into_iter().enumerate() {
+            let svc = sol.outcome.services[i];
+            if svc.steps > 0 {
+                let completion = t0 + svc.e2e_delay;
+                let e2e = completion - q.arrival_s;
+                let met = svc.met;
+                self.servers[idx].windows.record_served(t0, e2e, svc.quality, met);
+                let outcome = RequestOutcome {
+                    id: q.id,
+                    arrival_s: q.arrival_s,
+                    deadline_s: q.deadline_s,
+                    disposition: Disposition::Served,
+                    steps: svc.steps,
+                    quality: svc.quality,
+                    e2e_s: e2e,
+                    wait_s: t0 - q.arrival_s,
+                    deferrals: q.deferrals,
+                    epoch: epoch_index,
+                    met,
+                    resolved_s: completion,
+                };
+                self.resolve(q.id, outcome, idx);
+                self.horizon = self.horizon.max(completion);
+                served_now += 1;
+            } else {
+                deferred.push(Pending { deferrals: q.deferrals + 1, ..q });
+            }
+        }
+
+        self.servers[idx].gpu_free_s = t0 + makespan;
+        self.horizon = self.horizon.max(self.servers[idx].gpu_free_s);
+        self.servers[idx].windows.prune(t0);
+        let admitted_n = served_now + deferred.len();
+        let rec = self.epoch_rec(
+            idx,
+            epoch_index,
+            t0,
+            queue_depth,
+            admitted_n,
+            served_now,
+            deferred.len(),
+            dropped_now,
+            makespan,
+        );
+        self.servers[idx].epochs.push(rec);
+
+        // ---- carry-over placement: local, or stolen to idle capacity ----
+        if !deferred.is_empty()
+            && self.policy.steal_when_idle()
+            && self.servers.iter().any(|s| s.id != idx && s.alive && s.is_idle(t0))
+        {
+            self.open_after_solve(idx, t0, Vec::new());
+            for p in deferred {
+                self.steal_hand_off(p, t0, idx);
+            }
+        } else {
+            self.open_after_solve(idx, t0, deferred);
+        }
+    }
+
+    /// Open the server's next epoch after a solve at `t0`, replaying
+    /// simulate_dynamic's epoch-opening rules over the carry-overs and
+    /// the backlog of requests routed here while the epoch was frozen.
+    fn open_after_solve(&mut self, idx: usize, t0: f64, deferred: Vec<Pending>) {
+        let policy = self.dynamic.epoch;
+        let s = &mut self.servers[idx];
+        debug_assert!(s.epoch.is_none());
+        if !deferred.is_empty() {
+            // Carry-overs have been waiting since the solve: the next
+            // epoch opens immediately (simulate_dynamic: open = clock)
+            // and already-routed requests join it unconditionally,
+            // like backlogged trace arrivals with t ≤ open.
+            let mut e = Epoch {
+                open_s: t0,
+                close_s: policy.close_deadline(t0),
+                closed: false,
+                queue: deferred,
+            };
+            while let Some(mut p) = s.backlog.pop_front() {
+                debug_assert!(p.enqueued_s <= t0);
+                ServerSim::note_arrival(&mut s.windows, &mut p);
+                e.queue.push(p);
+            }
+            s.epoch = Some(e);
+            return;
+        }
+        let Some(first) = s.backlog.front().copied() else { return };
+        // No carry-overs: the epoch opens with the earliest waiting
+        // request — simulate_dynamic's "open = next arrival" rule.
+        let open = first.enqueued_s;
+        let mut e = Epoch {
+            open_s: open,
+            close_s: policy.close_deadline(open),
+            closed: false,
+            queue: Vec::new(),
+        };
+        while let Some(p) = s.backlog.front().copied() {
+            if p.enqueued_s > open {
+                break;
+            }
+            let mut p = s.backlog.pop_front().unwrap();
+            ServerSim::note_arrival(&mut s.windows, &mut p);
+            e.queue.push(p);
+        }
+        // Later waiters replay the timed ingest loop: join up to the
+        // close, with the batch rule possibly freezing the epoch early
+        // (any leftovers then seed the epoch after next).
+        while !e.closed {
+            let Some(p) = s.backlog.front().copied() else { break };
+            if p.enqueued_s > e.close_s {
+                e.closed = true;
+                break;
+            }
+            let mut p = s.backlog.pop_front().unwrap();
+            ServerSim::note_arrival(&mut s.windows, &mut p);
+            e.queue.push(p);
+            if policy.should_close(e.queue.len(), p.enqueued_s - open) {
+                e.close_s = p.enqueued_s;
+                e.closed = true;
+            }
+        }
+        s.epoch = Some(e);
+    }
+
+    fn epoch_rec(
+        &self,
+        idx: usize,
+        index: usize,
+        t0: f64,
+        queue_depth: usize,
+        admitted: usize,
+        served: usize,
+        deferred: usize,
+        dropped: usize,
+        makespan_s: f64,
+    ) -> EpochRecord {
+        let w = &self.servers[idx].windows;
+        EpochRecord {
+            index,
+            t_solve_s: t0,
+            queue_depth,
+            admitted,
+            served,
+            deferred,
+            dropped,
+            makespan_s,
+            arrival_rate_hz: w.arrivals.rate_hz(),
+            mean_quality_w: w.quality.mean(),
+            outage_rate_w: w.outage_rate(),
+            p50_e2e_w: w.e2e_s.percentile(50.0),
+            p95_e2e_w: w.e2e_s.percentile(95.0),
+            p99_e2e_w: w.e2e_s.percentile(99.0),
+        }
+    }
+
+    fn resolve(&mut self, id: usize, outcome: RequestOutcome, server: usize) {
+        debug_assert!(self.outcomes[id].is_none(), "request {id} resolved twice");
+        self.outcomes[id] = Some(outcome);
+        self.servers[server].resolved_ids.push(id);
+    }
+
+    /// Drop a request its dead server stranded (no migration, or no
+    /// alive target anywhere).
+    fn resolve_lost(&mut self, p: Pending, t: f64, server: Option<usize>) {
+        if let Some(s) = server {
+            self.servers[s].windows.record_dropped(t, self.outage_q);
+        }
+        let epoch = server.map(|s| self.servers[s].epochs.len()).unwrap_or(0);
+        let outcome = RequestOutcome {
+            id: p.id,
+            arrival_s: p.arrival_s,
+            deadline_s: p.deadline_s,
+            disposition: Disposition::LostToFailure,
+            steps: 0,
+            quality: self.outage_q,
+            e2e_s: 0.0,
+            wait_s: t - p.arrival_s,
+            deferrals: p.deferrals,
+            epoch,
+            met: false,
+            resolved_s: t,
+        };
+        debug_assert!(self.outcomes[p.id].is_none(), "request {} resolved twice", p.id);
+        self.outcomes[p.id] = Some(outcome);
+        if let Some(s) = server {
+            self.servers[s].resolved_ids.push(p.id);
+        }
+        self.horizon = self.horizon.max(t);
+    }
+
+    /// No server will ever come back for these: they expire at their
+    /// absolute deadlines.
+    fn drain_unroutable(&mut self) {
+        let parked: Vec<Pending> = self.unroutable.drain(..).collect();
+        for p in parked {
+            self.resolve_lost(p, p.abs_deadline_s, None);
+        }
+    }
+
+    fn finish(self) -> EventReport {
+        let horizon = self.horizon;
+        let fault_events = self.fault_events;
+        let outcomes: Vec<RequestOutcome> =
+            self.outcomes.into_iter().map(|o| o.expect("every request routed and resolved")).collect();
+        let servers = self
+            .servers
+            .into_iter()
+            .map(|s| {
+                // A server still down at the end was down until the
+                // simulated span ended — or until its scheduled
+                // recovery, if the run finished before that event
+                // ever fired.
+                let tail = s
+                    .down_since
+                    .map(|since| {
+                        let recovery = fault_events
+                            .iter()
+                            .filter(|e| e.server == s.id && e.kind == FaultKind::Up)
+                            .map(|e| e.t_s)
+                            .find(|&t| t >= since)
+                            .unwrap_or(f64::INFINITY);
+                        horizon.min(recovery).max(since) - since
+                    })
+                    .unwrap_or(0.0);
+                EventServerReport {
+                    server: s.id,
+                    speed: s.speed,
+                    assigned_ids: s.assigned_ids,
+                    resolved_ids: s.resolved_ids,
+                    epochs: s.epochs,
+                    downtime_s: s.downtime_s + tail,
+                }
+            })
+            .collect();
+        EventReport {
+            outcomes,
+            assignment: self.assignment,
+            servers,
+            migrations: self.migrations,
+            fault_log: self.fault_log,
+            horizon_s: horizon,
+        }
+    }
+}
+
+/// Run the fault-aware shared-clock cluster simulation of `trace`.
+///
+/// `delay` is the reference (speed-1.0) batch-delay model; each server
+/// solves under `g(X)/speed`. With an empty [`FaultScript`] and
+/// [`MigrationPolicyKind::None`] this reproduces
+/// [`simulate_cluster`](super::simulate_cluster) bit-for-bit
+/// (stateless allocators; see the module docs for the warm-start
+/// caveat).
+pub fn simulate_event_cluster(
+    trace: &ArrivalTrace,
+    scheduler: &dyn BatchScheduler,
+    allocator: &dyn Allocator,
+    delay: &BatchDelayModel,
+    quality: &dyn QualityModel,
+    cfg: &EventClusterConfig,
+) -> EventReport {
+    let n_servers = cfg.servers();
+    assert!(n_servers >= 1, "cluster needs at least one server");
+    cfg.faults.validate_servers(n_servers).expect("fault script must fit the fleet");
+
+    let mut engine = Engine {
+        trace,
+        scheduler,
+        allocator,
+        delay,
+        quality,
+        dynamic: cfg.dynamic,
+        policy: cfg.migration.build(),
+        router: cfg.router.build(*delay),
+        states: ServerState::fleet(&cfg.speeds),
+        ctx: RouteContext {
+            total_bandwidth_hz: trace.total_bandwidth_hz,
+            content_bits: trace.content_bits,
+        },
+        servers: cfg
+            .speeds
+            .iter()
+            .enumerate()
+            .map(|(i, &speed)| ServerSim::new(i, speed, delay, cfg.dynamic.window_s))
+            .collect(),
+        fault_events: cfg.faults.events(),
+        next_fault: 0,
+        next_arrival: 0,
+        unroutable: VecDeque::new(),
+        outcomes: vec![None; trace.len()],
+        assignment: vec![UNROUTED; trace.len()],
+        migrations: Vec::new(),
+        fault_log: Vec::new(),
+        horizon: 0.0,
+        outage_q: quality.outage(),
+    };
+    engine.run();
+    engine.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bandwidth::EqualAllocator;
+    use crate::config::{ArrivalProcessKind, ArrivalSettings, ExperimentConfig};
+    use crate::faults::DownInterval;
+    use crate::quality::PowerLawQuality;
+    use crate::scheduler::Stacking;
+    use crate::sim::cluster::{server_speeds, simulate_cluster};
+
+    fn trace(rate: f64, horizon: f64, seed: u64) -> ArrivalTrace {
+        let cfg = ExperimentConfig::paper();
+        let arrival = ArrivalSettings {
+            process: ArrivalProcessKind::Poisson,
+            rate_hz: rate,
+            burst_rate_hz: rate,
+            period_s: 60.0,
+            duty: 0.5,
+            horizon_s: horizon,
+            max_requests: 0,
+        };
+        ArrivalTrace::generate(&cfg.scenario, &arrival, seed)
+    }
+
+    fn run(trace: &ArrivalTrace, cfg: &EventClusterConfig) -> EventReport {
+        simulate_event_cluster(
+            trace,
+            &Stacking::default(),
+            &EqualAllocator,
+            &BatchDelayModel::paper(),
+            &PowerLawQuality::paper(),
+            cfg,
+        )
+    }
+
+    fn cfg(
+        speeds: Vec<f64>,
+        faults: FaultScript,
+        migration: MigrationPolicyKind,
+    ) -> EventClusterConfig {
+        EventClusterConfig {
+            speeds,
+            router: RouterKind::JoinShortestQueue,
+            dynamic: DynamicConfig::default(),
+            faults,
+            migration,
+        }
+    }
+
+    fn down(server: usize, from: f64, until: f64) -> DownInterval {
+        DownInterval::new(server, from, until).unwrap()
+    }
+
+    #[test]
+    fn zero_fault_engine_matches_sequential_cluster_bitwise() {
+        let t = trace(6.0, 50.0, 7);
+        for router in RouterKind::all() {
+            let cluster = ClusterConfig {
+                speeds: server_speeds(3, 0.5, 1.5),
+                router,
+                dynamic: DynamicConfig::default(),
+            };
+            let seq = simulate_cluster(
+                &t,
+                &Stacking::default(),
+                &EqualAllocator,
+                &BatchDelayModel::paper(),
+                &PowerLawQuality::paper(),
+                &cluster,
+            );
+            let ev = run(&t, &EventClusterConfig::fault_free(&cluster));
+            assert_eq!(ev.assignment, seq.assignment, "{}", router.name());
+            assert_eq!(ev.horizon_s.to_bits(), seq.horizon_s.to_bits(), "{}", router.name());
+            for (a, b) in ev.outcomes.iter().zip(&seq.outcomes) {
+                assert_eq!(a.id, b.id);
+                assert_eq!(a.disposition, b.disposition, "request {}", a.id);
+                assert_eq!(a.steps, b.steps, "request {}", a.id);
+                assert_eq!(a.quality.to_bits(), b.quality.to_bits(), "request {}", a.id);
+                assert_eq!(a.e2e_s.to_bits(), b.e2e_s.to_bits(), "request {}", a.id);
+                assert_eq!(a.resolved_s.to_bits(), b.resolved_s.to_bits(), "request {}", a.id);
+                assert_eq!(a.epoch, b.epoch, "request {}", a.id);
+                assert_eq!(a.deferrals, b.deferrals, "request {}", a.id);
+            }
+            assert!(ev.migrations.is_empty() && ev.fault_log.is_empty());
+        }
+    }
+
+    #[test]
+    fn faulted_run_conserves_and_replays() {
+        let t = trace(5.0, 60.0, 3);
+        for policy in MigrationPolicyKind::all() {
+            let script = FaultScript::random(3, 60.0, 25.0, 8.0, 11);
+            let c = cfg(server_speeds(3, 0.5, 1.5), script, policy);
+            let a = run(&t, &c);
+            assert_eq!(a.outcomes.len(), t.len(), "{}", policy.name());
+            for (i, o) in a.outcomes.iter().enumerate() {
+                assert_eq!(o.id, i, "{}", policy.name());
+            }
+            assert_eq!(a.served() + a.dropped(), t.len());
+            // resolved exactly once across servers (+ unrouted drops)
+            let mut counts = vec![0usize; t.len()];
+            for s in &a.servers {
+                for &id in &s.resolved_ids {
+                    counts[id] += 1;
+                }
+            }
+            assert!(counts.iter().all(|&c| c <= 1), "{}: double resolution", policy.name());
+            // bit-identical replay
+            let b = run(&t, &c);
+            assert_eq!(a.migrations.len(), b.migrations.len());
+            assert_eq!(a.assignment, b.assignment);
+            for (x, y) in a.outcomes.iter().zip(&b.outcomes) {
+                assert_eq!(x.disposition, y.disposition);
+                assert_eq!(x.quality.to_bits(), y.quality.to_bits());
+                assert_eq!(x.resolved_s.to_bits(), y.resolved_s.to_bits());
+            }
+            assert_eq!(a.horizon_s.to_bits(), b.horizon_s.to_bits());
+        }
+    }
+
+    #[test]
+    fn no_migration_loses_the_dead_servers_queue() {
+        // Deterministic by construction: four simultaneous arrivals at
+        // t = 14.9 split 2/2 under JSQ (ties to the lower id), then
+        // server 1 dies at t = 15 with its epoch still open — exactly
+        // two requests are stranded.
+        let mk = |id, t| Arrival { id, t_s: t, deadline_s: 20.0, link: Link::new(7.0) };
+        let arrivals = vec![mk(0, 1.0), mk(1, 14.9), mk(2, 14.9), mk(3, 14.9), mk(4, 14.9)];
+        let t = ArrivalTrace { arrivals, total_bandwidth_hz: 40_000.0, content_bits: 24_000.0 };
+        let script = FaultScript::scheduled(vec![down(1, 15.0, 1000.0)]).unwrap();
+        let none = run(&t, &cfg(vec![1.0, 1.0], script.clone(), MigrationPolicyKind::None));
+        assert_eq!(none.lost_to_failure(), 2, "the dead server's open epoch is lost");
+        assert_eq!(none.migrated(), 0);
+        assert_eq!(none.served(), 3);
+        let requeue = run(&t, &cfg(vec![1.0, 1.0], script, MigrationPolicyKind::RequeueOnDeath));
+        assert_eq!(requeue.lost_to_failure(), 0, "requeue must not strand anything");
+        assert_eq!(requeue.migrated(), 2, "both orphans move to the surviving server");
+        assert_eq!(requeue.served(), 5, "migration recovers the stranded requests");
+        // migrated requests keep their identity and deadlines
+        for m in &requeue.migrations {
+            assert_eq!(m.from, Some(1));
+            assert_eq!(m.to, Some(0));
+            assert_eq!(m.reason, MigrationReason::DeadServer);
+            let o = &requeue.outcomes[m.id];
+            assert_eq!(o.id, m.id);
+            assert_eq!(o.arrival_s.to_bits(), t.arrivals[m.id].t_s.to_bits());
+            assert_eq!(o.deadline_s.to_bits(), t.arrivals[m.id].deadline_s.to_bits());
+        }
+    }
+
+    #[test]
+    fn whole_fleet_outage_parks_and_recovers() {
+        let arrivals = vec![
+            Arrival { id: 0, t_s: 1.0, deadline_s: 30.0, link: Link::new(7.0) },
+            Arrival { id: 1, t_s: 2.0, deadline_s: 30.0, link: Link::new(7.0) },
+        ];
+        let t = ArrivalTrace { arrivals, total_bandwidth_hz: 40_000.0, content_bits: 24_000.0 };
+        let script = FaultScript::scheduled(vec![down(0, 0.5, 10.0)]).unwrap();
+        let report = run(&t, &cfg(vec![1.0], script, MigrationPolicyKind::RequeueOnDeath));
+        assert_eq!(report.outcomes.len(), 2);
+        // both arrivals landed while no server was alive, then were
+        // re-dispatched at the recovery and served within deadline
+        assert_eq!(report.served(), 2, "{:?}", report.outcomes);
+        for o in &report.outcomes {
+            assert!(o.resolved_s >= 10.0, "served only after the recovery: {o:?}");
+            assert!(o.met, "{o:?}");
+        }
+        assert_eq!(report.migrations.len(), 2);
+        assert!(report.migrations.iter().all(|m| m.reason == MigrationReason::Recovery));
+        // the recovery stats see exactly one failure
+        let rs = report.recovery_stats(30.0);
+        assert_eq!(rs.failures, 1);
+        assert_eq!(rs.migrated, 2);
+    }
+
+    #[test]
+    fn permanent_total_outage_drops_everything_as_lost() {
+        let arrivals = vec![Arrival { id: 0, t_s: 1.0, deadline_s: 5.0, link: Link::new(7.0) }];
+        let t = ArrivalTrace { arrivals, total_bandwidth_hz: 40_000.0, content_bits: 24_000.0 };
+        let script = FaultScript::scheduled(vec![down(0, 0.0, 1e9)]).unwrap();
+        let report = run(&t, &cfg(vec![1.0], script, MigrationPolicyKind::RequeueOnDeath));
+        assert_eq!(report.outcomes.len(), 1);
+        assert_eq!(report.outcomes[0].disposition, Disposition::LostToFailure);
+        assert_eq!(report.assignment[0], UNROUTED);
+        assert_eq!(report.served(), 0);
+    }
+
+    #[test]
+    fn steal_when_idle_migrates_carry_overs_under_skew() {
+        // A slow and a fast server: the slow one defers under pressure
+        // while the fast one drains — stealing should move work.
+        let t = trace(10.0, 50.0, 9);
+        let epoch = EpochPolicy::new(0.25, 4);
+        let dynamic = DynamicConfig { epoch, ..DynamicConfig::default() };
+        let c = EventClusterConfig {
+            speeds: vec![0.3, 2.0],
+            router: RouterKind::RoundRobin,
+            dynamic,
+            faults: FaultScript::empty(),
+            migration: MigrationPolicyKind::StealWhenIdle,
+        };
+        let report = run(&t, &c);
+        assert_eq!(report.outcomes.len(), t.len());
+        // conservation still holds under stealing
+        assert_eq!(report.served() + report.dropped(), t.len());
+        // replay is bit-identical
+        let again = run(&t, &c);
+        assert_eq!(report.migrations.len(), again.migrations.len());
+        for (x, y) in report.outcomes.iter().zip(&again.outcomes) {
+            assert_eq!(x.quality.to_bits(), y.quality.to_bits());
+        }
+    }
+
+    #[test]
+    fn empty_trace_is_empty_report() {
+        let t = ArrivalTrace {
+            arrivals: vec![],
+            total_bandwidth_hz: 40_000.0,
+            content_bits: 24_000.0,
+        };
+        let script = FaultScript::scheduled(vec![down(0, 1.0, 2.0)]).unwrap();
+        let report = run(&t, &cfg(vec![1.0, 1.0], script, MigrationPolicyKind::RequeueOnDeath));
+        assert!(report.outcomes.is_empty());
+        assert_eq!(report.total_epochs(), 0);
+        assert_eq!(report.mean_quality(), 0.0);
+    }
+}

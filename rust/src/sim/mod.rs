@@ -5,11 +5,16 @@
 
 pub mod cluster;
 pub mod dynamic;
+pub mod event;
 pub mod joint;
 
 pub use cluster::{server_speeds, simulate_cluster, ClusterConfig, ClusterReport, ServerReport};
 pub use dynamic::{
     simulate_dynamic, Disposition, DynamicConfig, DynamicReport, EpochRecord, RequestOutcome,
+};
+pub use event::{
+    simulate_event_cluster, EventClusterConfig, EventReport, EventServerReport, MigrationReason,
+    MigrationRecord, UNROUTED,
 };
 pub use joint::{solve_joint, JointSolution};
 

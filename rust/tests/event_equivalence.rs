@@ -1,0 +1,171 @@
+//! Equivalence guard for the shared-clock event engine (ISSUE 3): with
+//! an empty `FaultScript` and `MigrationPolicy::None`, `sim::event`
+//! must reproduce `simulate_cluster` **bit-for-bit** on the seed-7
+//! stream — the same regression style as PR 2's N=1 dominance test.
+//!
+//! The comparison is exhaustive: per-request outcomes (disposition,
+//! steps, bit-level quality/delay/resolution instants), the dispatch
+//! assignment, per-server epoch traces, and the fleet aggregates.
+
+use aigc_edge::bandwidth::EqualAllocator;
+use aigc_edge::config::{ArrivalProcessKind, ArrivalSettings, ExperimentConfig};
+use aigc_edge::delay::BatchDelayModel;
+use aigc_edge::quality::PowerLawQuality;
+use aigc_edge::routing::RouterKind;
+use aigc_edge::scheduler::Stacking;
+use aigc_edge::sim::{
+    server_speeds, simulate_cluster, simulate_event_cluster, ClusterConfig, ClusterReport,
+    DynamicConfig, EpochRecord, EventClusterConfig, EventReport,
+};
+use aigc_edge::trace::ArrivalTrace;
+
+fn seed7_trace(rate: f64, horizon: f64) -> ArrivalTrace {
+    let cfg = ExperimentConfig::paper();
+    let arrival = ArrivalSettings {
+        process: ArrivalProcessKind::Poisson,
+        rate_hz: rate,
+        burst_rate_hz: rate,
+        period_s: 60.0,
+        duty: 0.5,
+        horizon_s: horizon,
+        max_requests: 0,
+    };
+    ArrivalTrace::generate(&cfg.scenario, &arrival, 7)
+}
+
+fn run_both(trace: &ArrivalTrace, cluster: &ClusterConfig) -> (ClusterReport, EventReport) {
+    let scheduler = Stacking::default();
+    let delay = BatchDelayModel::paper();
+    let quality = PowerLawQuality::paper();
+    let seq = simulate_cluster(trace, &scheduler, &EqualAllocator, &delay, &quality, cluster);
+    let ev = simulate_event_cluster(
+        trace,
+        &scheduler,
+        &EqualAllocator,
+        &delay,
+        &quality,
+        &EventClusterConfig::fault_free(cluster),
+    );
+    (seq, ev)
+}
+
+fn assert_epochs_identical(tag: &str, seq: &[EpochRecord], ev: &[EpochRecord]) {
+    assert_eq!(seq.len(), ev.len(), "{tag}: epoch count");
+    for (a, b) in seq.iter().zip(ev) {
+        assert_eq!(a.index, b.index, "{tag}");
+        assert_eq!(a.t_solve_s.to_bits(), b.t_solve_s.to_bits(), "{tag} epoch {}", a.index);
+        assert_eq!(a.queue_depth, b.queue_depth, "{tag} epoch {}", a.index);
+        assert_eq!(a.admitted, b.admitted, "{tag} epoch {}", a.index);
+        assert_eq!(a.served, b.served, "{tag} epoch {}", a.index);
+        assert_eq!(a.deferred, b.deferred, "{tag} epoch {}", a.index);
+        assert_eq!(a.dropped, b.dropped, "{tag} epoch {}", a.index);
+        assert_eq!(a.makespan_s.to_bits(), b.makespan_s.to_bits(), "{tag} epoch {}", a.index);
+        assert_eq!(a.arrival_rate_hz.to_bits(), b.arrival_rate_hz.to_bits(), "{tag}");
+        assert_eq!(a.mean_quality_w.to_bits(), b.mean_quality_w.to_bits(), "{tag}");
+        assert_eq!(a.outage_rate_w.to_bits(), b.outage_rate_w.to_bits(), "{tag}");
+        assert_eq!(a.p50_e2e_w.to_bits(), b.p50_e2e_w.to_bits(), "{tag}");
+        assert_eq!(a.p95_e2e_w.to_bits(), b.p95_e2e_w.to_bits(), "{tag}");
+        assert_eq!(a.p99_e2e_w.to_bits(), b.p99_e2e_w.to_bits(), "{tag}");
+    }
+}
+
+fn assert_reports_identical(tag: &str, seq: &ClusterReport, ev: &EventReport) {
+    assert_eq!(ev.assignment, seq.assignment, "{tag}: dispatch assignment");
+    assert_eq!(ev.outcomes.len(), seq.outcomes.len(), "{tag}");
+    for (a, b) in ev.outcomes.iter().zip(&seq.outcomes) {
+        assert_eq!(a.id, b.id, "{tag}");
+        assert_eq!(a.disposition, b.disposition, "{tag} request {}", a.id);
+        assert_eq!(a.steps, b.steps, "{tag} request {}", a.id);
+        assert_eq!(a.deferrals, b.deferrals, "{tag} request {}", a.id);
+        assert_eq!(a.epoch, b.epoch, "{tag} request {}", a.id);
+        assert_eq!(a.met, b.met, "{tag} request {}", a.id);
+        assert_eq!(a.quality.to_bits(), b.quality.to_bits(), "{tag} request {}", a.id);
+        assert_eq!(a.e2e_s.to_bits(), b.e2e_s.to_bits(), "{tag} request {}", a.id);
+        assert_eq!(a.wait_s.to_bits(), b.wait_s.to_bits(), "{tag} request {}", a.id);
+        assert_eq!(a.resolved_s.to_bits(), b.resolved_s.to_bits(), "{tag} request {}", a.id);
+    }
+    assert_eq!(ev.horizon_s.to_bits(), seq.horizon_s.to_bits(), "{tag}: horizon");
+    // fleet aggregates bit-for-bit (the ISSUE acceptance criterion)
+    let (s, e) = (seq.fleet_stats(), ev.fleet_stats());
+    assert_eq!(s.count, e.count, "{tag}");
+    assert_eq!(s.served, e.served, "{tag}");
+    assert_eq!(s.mean_quality.to_bits(), e.mean_quality.to_bits(), "{tag}");
+    assert_eq!(s.outage_rate.to_bits(), e.outage_rate.to_bits(), "{tag}");
+    assert_eq!(s.p50_e2e_s.to_bits(), e.p50_e2e_s.to_bits(), "{tag}");
+    assert_eq!(s.p95_e2e_s.to_bits(), e.p95_e2e_s.to_bits(), "{tag}");
+    assert_eq!(s.p99_e2e_s.to_bits(), e.p99_e2e_s.to_bits(), "{tag}");
+    assert_eq!(s.mean_wait_s.to_bits(), e.mean_wait_s.to_bits(), "{tag}");
+    // per-server epoch traces
+    for (srv_seq, srv_ev) in seq.servers.iter().zip(&ev.servers) {
+        assert_eq!(srv_seq.assigned_ids, srv_ev.assigned_ids, "{tag} server {}", srv_seq.server);
+        let tag = format!("{tag} server {}", srv_seq.server);
+        assert_epochs_identical(&tag, &srv_seq.report.epochs, &srv_ev.epochs);
+    }
+    // the zero-fault engine must not invent migrations or faults
+    assert!(ev.migrations.is_empty(), "{tag}");
+    assert!(ev.fault_log.is_empty(), "{tag}");
+    assert_eq!(ev.lost_to_failure(), 0, "{tag}");
+}
+
+#[test]
+fn seed7_heterogeneous_fleet_every_router() {
+    let trace = seed7_trace(6.0, 60.0);
+    for router in RouterKind::all() {
+        let cluster = ClusterConfig {
+            speeds: server_speeds(3, 0.5, 1.5),
+            router,
+            dynamic: DynamicConfig::default(),
+        };
+        let (seq, ev) = run_both(&trace, &cluster);
+        assert_reports_identical(router.name(), &seq, &ev);
+    }
+}
+
+#[test]
+fn seed7_single_server_and_overload() {
+    // N = 1 collapses both engines onto simulate_dynamic; overload
+    // exercises admission drops, deferrals and backlogged epochs.
+    for (n, rate) in [(1usize, 4.0), (2, 12.0)] {
+        let trace = seed7_trace(rate, 45.0);
+        let cluster = ClusterConfig::homogeneous(
+            n,
+            RouterKind::RoundRobin,
+            DynamicConfig::default(),
+        );
+        let (seq, ev) = run_both(&trace, &cluster);
+        assert_reports_identical(&format!("n={n} rate={rate}"), &seq, &ev);
+    }
+}
+
+#[test]
+fn seed7_small_epochs_force_carry_over_paths() {
+    // Tiny epochs + small batches exercise the backlog/carry-over
+    // epoch-opening rules, the trickiest part of the replay.
+    let trace = seed7_trace(10.0, 40.0);
+    let dynamic = DynamicConfig {
+        epoch: aigc_edge::coordinator::EpochPolicy::new(0.25, 4),
+        ..DynamicConfig::default()
+    };
+    let cluster = ClusterConfig {
+        speeds: server_speeds(2, 0.6, 1.0),
+        router: RouterKind::QualityAware,
+        dynamic,
+    };
+    let (seq, ev) = run_both(&trace, &cluster);
+    assert_reports_identical("small-epochs", &seq, &ev);
+}
+
+#[test]
+fn adaptive_horizon_preserves_equivalence() {
+    // The adaptive planning horizon is computed identically in both
+    // engines, so equivalence must survive turning it on.
+    let trace = seed7_trace(8.0, 40.0);
+    let dynamic = DynamicConfig { plan_horizon_adaptive: true, ..DynamicConfig::default() };
+    let cluster = ClusterConfig {
+        speeds: server_speeds(3, 0.5, 2.0),
+        router: RouterKind::JoinShortestQueue,
+        dynamic,
+    };
+    let (seq, ev) = run_both(&trace, &cluster);
+    assert_reports_identical("adaptive-horizon", &seq, &ev);
+}

@@ -203,6 +203,35 @@ fn golden_fig_cluster_router_sweep() {
 }
 
 #[test]
+fn golden_fig_faults_sweep() {
+    // Seed-7 stream like the cluster fixture; a modest heterogeneous
+    // fleet under one no-fault and one faulted rate, across all three
+    // migration policies.
+    let mut cfg = ExperimentConfig::paper();
+    cfg.seed = 7;
+    cfg.cluster.servers = 3;
+    cfg.cluster.speed_min = 0.5;
+    cfg.cluster.speed_max = 1.5;
+    cfg.arrival.rate_hz = 5.0;
+    let rows = aigc_edge::bench::fig_faults(&cfg, &[0.0, 2.0], 40.0);
+    let mut flat = BTreeMap::new();
+    for r in rows {
+        let tag = format!("rate{:04.1}.{}", r.fault_rate_per_min, r.policy.name());
+        flat.insert(format!("{tag}.requests"), r.requests as f64);
+        flat.insert(format!("{tag}.served"), r.served as f64);
+        flat.insert(format!("{tag}.lost"), r.lost_to_failure as f64);
+        flat.insert(format!("{tag}.migrated"), r.migrated as f64);
+        flat.insert(format!("{tag}.failures"), r.failures as f64);
+        flat.insert(format!("{tag}.mean_quality"), r.mean_quality);
+        flat.insert(format!("{tag}.outage_rate"), r.outage_rate);
+        flat.insert(format!("{tag}.p99_e2e"), r.p99_e2e_s);
+        flat.insert(format!("{tag}.post_p99"), r.post_failure_p99_s);
+        flat.insert(format!("{tag}.drain"), r.mean_time_to_drain_s);
+    }
+    check_or_bless("golden_fig_faults.json", &flat, 5e-3, 2e-3);
+}
+
+#[test]
 fn golden_fig3_dynamic_sweep() {
     let rows = aigc_edge::bench::fig3_dynamic(&ExperimentConfig::paper(), &[1.0, 4.0], 40.0);
     let mut flat = BTreeMap::new();

@@ -1,0 +1,223 @@
+//! Property suite for the fault-aware cluster engine (ISSUE 3):
+//! randomized traces, fleets, fault scripts and migration policies
+//! through `sim::event`, asserting the conservation invariants
+//! migration must never break.
+//!
+//! Invariants (each over ≥ 200 randomized runs):
+//! * **conservation** — every arrival resolves exactly once, on at
+//!   most one server, whatever dies mid-trace;
+//! * **identity preservation** — a migrated request keeps its original
+//!   arrival id, arrival instant and deadline, and its delays are
+//!   charged from the *original* arrival (elapsed budget preserved);
+//! * **determinism** — identical seeds (trace + fleet + faults +
+//!   policy) replay bit-identically;
+//! * **zero-fault degeneration** — an empty script with no migration
+//!   reproduces `simulate_cluster` fleet stats bit-for-bit.
+
+use aigc_edge::bandwidth::EqualAllocator;
+use aigc_edge::config::{ArrivalProcessKind, ArrivalSettings, ExperimentConfig};
+use aigc_edge::delay::BatchDelayModel;
+use aigc_edge::faults::{FaultScript, MigrationPolicyKind};
+use aigc_edge::prop_assert;
+use aigc_edge::quality::PowerLawQuality;
+use aigc_edge::routing::RouterKind;
+use aigc_edge::scheduler::Stacking;
+use aigc_edge::sim::{
+    simulate_cluster, simulate_event_cluster, ClusterConfig, Disposition, DynamicConfig,
+    EventClusterConfig, EventReport, UNROUTED,
+};
+use aigc_edge::trace::ArrivalTrace;
+use aigc_edge::util::prop::{forall, Gen};
+
+/// A random small trace: Poisson or burst, a handful of seconds long.
+fn random_trace(g: &mut Gen) -> ArrivalTrace {
+    let mut scenario = ExperimentConfig::paper().scenario;
+    scenario.deadline_lo = g.f64_in(1.0, 6.0);
+    scenario.deadline_hi = scenario.deadline_lo + g.f64_in(1.0, 12.0);
+    let burst = g.bool();
+    let rate = g.f64_in(0.5, 8.0);
+    let arrival = ArrivalSettings {
+        process: if burst { ArrivalProcessKind::Burst } else { ArrivalProcessKind::Poisson },
+        rate_hz: rate,
+        burst_rate_hz: rate * g.f64_in(1.0, 3.0),
+        period_s: g.f64_in(2.0, 15.0),
+        duty: g.f64_in(0.1, 1.0),
+        horizon_s: g.f64_in(3.0, 12.0),
+        max_requests: 0,
+    };
+    ArrivalTrace::generate(&scenario, &arrival, g.u64())
+}
+
+/// A random fault script over the trace span (sometimes empty).
+fn random_faults(g: &mut Gen, servers: usize, horizon_s: f64) -> FaultScript {
+    if g.f64_in(0.0, 1.0) < 0.15 {
+        return FaultScript::empty();
+    }
+    let mtbf = g.f64_in(2.0, 30.0);
+    let mttr = g.f64_in(0.5, 10.0);
+    FaultScript::random(servers, horizon_s * 1.2, mtbf, mttr, g.u64())
+}
+
+fn random_config(g: &mut Gen, faults: FaultScript) -> EventClusterConfig {
+    let n = g.usize_in(1, 5);
+    let speeds = g.vec_of(n, |g| g.f64_in(0.3, 2.5));
+    let router = *g.pick(&RouterKind::all());
+    let migration = *g.pick(&MigrationPolicyKind::all());
+    EventClusterConfig { speeds, router, dynamic: DynamicConfig::default(), faults, migration }
+}
+
+fn run(trace: &ArrivalTrace, cfg: &EventClusterConfig) -> EventReport {
+    simulate_event_cluster(
+        trace,
+        &Stacking::default(),
+        &EqualAllocator,
+        &BatchDelayModel::paper(),
+        &PowerLawQuality::paper(),
+        cfg,
+    )
+}
+
+#[test]
+fn no_request_lost_or_double_served_across_failures() {
+    forall("fault conservation", 200, |g: &mut Gen| {
+        let trace = random_trace(g);
+        let faults = random_faults(g, 5, trace.duration_s());
+        let mut cfg = random_config(g, faults);
+        // the script may name servers the fleet doesn't have; clamp it
+        cfg.faults = FaultScript::scheduled(
+            cfg.faults.downs().iter().copied().filter(|d| d.server < cfg.servers()).collect(),
+        )
+        .unwrap();
+        let report = run(&trace, &cfg);
+        prop_assert!(g, report.outcomes.len() == trace.len(), "outcome count");
+        prop_assert!(
+            g,
+            report.served() + report.dropped() == trace.len(),
+            "served {} + dropped {} != {}",
+            report.served(),
+            report.dropped(),
+            trace.len()
+        );
+        // every id resolved exactly once, and by at most one server
+        let mut counts = vec![0usize; trace.len()];
+        for s in &report.servers {
+            for &id in &s.resolved_ids {
+                counts[id] += 1;
+            }
+        }
+        for (id, o) in report.outcomes.iter().enumerate() {
+            prop_assert!(g, o.id == id, "outcome {id} holds id {}", o.id);
+            prop_assert!(g, counts[id] <= 1, "request {id} resolved by {} servers", counts[id]);
+            // a request no server resolved can only be a fleet-wide
+            // outage loss (parked unroutable until it expired)
+            if counts[id] == 0 {
+                prop_assert!(g, o.disposition == Disposition::LostToFailure, "request {id}");
+            }
+            // never dispatched anywhere => lost to a fleet-wide outage
+            if report.assignment[id] == UNROUTED {
+                prop_assert!(g, o.disposition == Disposition::LostToFailure, "unrouted {id}");
+            }
+        }
+        true
+    });
+}
+
+#[test]
+fn migrated_requests_keep_identity_and_budget() {
+    forall("migration identity", 200, |g: &mut Gen| {
+        let trace = random_trace(g);
+        let n = g.usize_in(2, 4);
+        let speeds = g.vec_of(n, |g| g.f64_in(0.4, 2.0));
+        let (mtbf, mttr) = (g.f64_in(2.0, 15.0), g.f64_in(0.5, 6.0));
+        let faults = FaultScript::random(n, trace.duration_s() * 1.2, mtbf, mttr, g.u64());
+        let cfg = EventClusterConfig {
+            speeds,
+            router: *g.pick(&RouterKind::all()),
+            dynamic: DynamicConfig::default(),
+            faults,
+            migration: MigrationPolicyKind::RequeueOnDeath,
+        };
+        let report = run(&trace, &cfg);
+        for m in &report.migrations {
+            prop_assert!(g, m.id < trace.len(), "migration names request {}", m.id);
+            let o = &report.outcomes[m.id];
+            let a = &trace.arrivals[m.id];
+            prop_assert!(g, o.id == m.id, "id preserved");
+            prop_assert!(g, o.arrival_s.to_bits() == a.t_s.to_bits(), "arrival preserved");
+            prop_assert!(g, o.deadline_s.to_bits() == a.deadline_s.to_bits(), "deadline preserved");
+            // the hand-off instant respects causality
+            prop_assert!(g, m.t_s >= a.t_s - 1e-12, "migrated before arriving");
+            if let Some(to) = m.to {
+                prop_assert!(g, to < cfg.servers(), "target in fleet");
+            }
+        }
+        // delays are charged from the original arrival: a served
+        // request's e2e spans arrival -> resolution exactly
+        for o in &report.outcomes {
+            if o.disposition == Disposition::Served {
+                let span = o.resolved_s - o.arrival_s;
+                prop_assert!(g, (span - o.e2e_s).abs() < 1e-9, "e2e {} vs span {span}", o.e2e_s);
+            }
+        }
+        true
+    });
+}
+
+#[test]
+fn replay_is_seed_identical_under_faults() {
+    forall("fault replay", 60, |g: &mut Gen| {
+        let trace = random_trace(g);
+        let faults = random_faults(g, 3, trace.duration_s());
+        let mut cfg = random_config(g, faults);
+        cfg.faults = FaultScript::scheduled(
+            cfg.faults.downs().iter().copied().filter(|d| d.server < cfg.servers()).collect(),
+        )
+        .unwrap();
+        let a = run(&trace, &cfg);
+        let b = run(&trace, &cfg);
+        prop_assert!(g, a.assignment == b.assignment, "assignment replay");
+        prop_assert!(g, a.migrations.len() == b.migrations.len(), "migration replay");
+        for (x, y) in a.outcomes.iter().zip(&b.outcomes) {
+            prop_assert!(g, x.disposition == y.disposition, "disposition replay {}", x.id);
+            prop_assert!(g, x.quality.to_bits() == y.quality.to_bits(), "quality replay {}", x.id);
+            prop_assert!(
+                g,
+                x.resolved_s.to_bits() == y.resolved_s.to_bits(),
+                "resolution replay {}",
+                x.id
+            );
+        }
+        prop_assert!(g, a.horizon_s.to_bits() == b.horizon_s.to_bits(), "horizon replay");
+        true
+    });
+}
+
+#[test]
+fn zero_fault_none_policy_degenerates_to_simulate_cluster() {
+    forall("zero-fault degeneration", 60, |g: &mut Gen| {
+        let trace = random_trace(g);
+        let n = g.usize_in(1, 4);
+        let cluster = ClusterConfig {
+            speeds: g.vec_of(n, |g| g.f64_in(0.4, 2.0)),
+            router: *g.pick(&RouterKind::all()),
+            dynamic: DynamicConfig::default(),
+        };
+        let seq = simulate_cluster(
+            &trace,
+            &Stacking::default(),
+            &EqualAllocator,
+            &BatchDelayModel::paper(),
+            &PowerLawQuality::paper(),
+            &cluster,
+        );
+        let ev = run(&trace, &EventClusterConfig::fault_free(&cluster));
+        let (s, e) = (seq.fleet_stats(), ev.fleet_stats());
+        prop_assert!(g, s.count == e.count, "count");
+        prop_assert!(g, s.served == e.served, "served");
+        prop_assert!(g, s.mean_quality.to_bits() == e.mean_quality.to_bits(), "quality");
+        prop_assert!(g, s.outage_rate.to_bits() == e.outage_rate.to_bits(), "outage");
+        prop_assert!(g, s.p99_e2e_s.to_bits() == e.p99_e2e_s.to_bits(), "p99");
+        prop_assert!(g, ev.assignment == seq.assignment, "assignment");
+        true
+    });
+}
