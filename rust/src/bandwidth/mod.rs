@@ -58,6 +58,70 @@ pub trait Allocator {
     ) -> Vec<f64>;
 }
 
+/// Per-server allocator instances for the cluster engines.
+///
+/// `simulate_cluster` and `sim::event` historically threaded one
+/// allocator through every server's serving loop, which made a
+/// *stateful* allocator (PSO `warm_start`) share swarm state across
+/// the fleet — and made the two engines diverge bitwise under warm
+/// starts, because they order solves differently (per-server vs
+/// shared-clock). A pool gives each server its own instance, so PSO
+/// warm-start state is per server: each server's solve sequence is
+/// identical in both engines and replay from fresh pools is
+/// bit-identical (`tests/pipeline_properties.rs`).
+///
+/// A pool of one ([`AllocatorPool::shared`]) reproduces the legacy
+/// shared-instance behaviour exactly.
+pub struct AllocatorPool {
+    allocators: Vec<Box<dyn Allocator>>,
+}
+
+impl AllocatorPool {
+    /// One allocator per server, built by `factory(server_id)`.
+    pub fn per_server(servers: usize, factory: impl Fn(usize) -> Box<dyn Allocator>) -> Self {
+        assert!(servers >= 1, "pool needs at least one allocator");
+        Self { allocators: (0..servers).map(factory).collect() }
+    }
+
+    /// A single instance every server shares (the legacy semantics —
+    /// only observable with stateful allocators).
+    pub fn shared(allocator: Box<dyn Allocator>) -> Self {
+        Self { allocators: vec![allocator] }
+    }
+
+    pub fn len(&self) -> usize {
+        self.allocators.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.allocators.is_empty()
+    }
+
+    /// The allocator serving `server`. A shared pool (size 1) returns
+    /// its one instance for every server; a per-server pool indexes
+    /// exactly — out-of-range panics rather than silently aliasing
+    /// warm-start state across servers.
+    pub fn get(&self, server: usize) -> &dyn Allocator {
+        if self.allocators.len() == 1 {
+            return &*self.allocators[0];
+        }
+        &*self.allocators[server]
+    }
+
+    /// Per-server references for an `n`-server fleet — the shape the
+    /// simulation engines consume. The pool must be shared (size 1) or
+    /// sized exactly to the fleet.
+    pub fn refs(&self, n: usize) -> Vec<&dyn Allocator> {
+        assert!(
+            self.allocators.len() == 1 || self.allocators.len() == n,
+            "pool has {} allocators for {} servers (need 1 shared or exactly one per server)",
+            self.allocators.len(),
+            n
+        );
+        (0..n).map(|s| self.get(s)).collect()
+    }
+}
+
 /// Equal split — the paper's "equal bandwidth allocation" baseline.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct EqualAllocator;
@@ -150,6 +214,50 @@ mod tests {
         assert!(approx_eq(alloc.iter().sum::<f64>(), 40_000.0, 1e-9));
         // equal tx delay: B_k * eta_k equal
         assert!(approx_eq(alloc[0] * 5.0, alloc[1] * 10.0, 1e-6));
+    }
+
+    #[test]
+    fn pool_per_server_hands_out_distinct_instances() {
+        let pool = AllocatorPool::per_server(3, |_| Box::new(PsoAllocator::default()));
+        assert_eq!(pool.len(), 3);
+        let a = pool.get(0) as *const dyn Allocator as *const ();
+        let b = pool.get(1) as *const dyn Allocator as *const ();
+        assert!(a != b, "per-server pools must not alias instances");
+        assert_eq!(pool.refs(3).len(), 3);
+    }
+
+    #[test]
+    fn pool_shared_aliases_one_instance_for_every_server() {
+        let pool = AllocatorPool::shared(Box::new(EqualAllocator));
+        assert_eq!(pool.len(), 1);
+        let a = pool.get(0) as *const dyn Allocator as *const ();
+        let b = pool.get(7) as *const dyn Allocator as *const ();
+        assert!(a == b, "a shared pool serves the same instance to everyone");
+        assert_eq!(pool.refs(4).len(), 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "pool has 2 allocators for 4 servers")]
+    fn undersized_per_server_pool_is_rejected_not_aliased() {
+        let pool = AllocatorPool::per_server(2, |_| Box::new(EqualAllocator));
+        pool.refs(4);
+    }
+
+    #[test]
+    fn pooled_warm_start_state_is_isolated_per_server() {
+        let pool = AllocatorPool::per_server(2, |_| {
+            Box::new(PsoAllocator::new(PsoConfig { warm_start: true, ..Default::default() }))
+        });
+        let p = problem(&[5.0, 7.0, 9.0]);
+        let mut obj = |b: &[f64]| b.iter().map(|x| x * x).sum::<f64>();
+        // two solves on server 0, none on server 1: only server 0's
+        // instance may have carried swarm state
+        pool.get(0).allocate(&p, &mut obj);
+        pool.get(0).allocate(&p, &mut obj);
+        let first_on_1 = pool.get(1).allocate(&p, &mut obj);
+        let cold = PsoAllocator::new(PsoConfig { warm_start: true, ..Default::default() })
+            .allocate(&p, &mut obj);
+        assert_eq!(first_on_1, cold, "server 1's allocator must still be cold");
     }
 
     #[test]

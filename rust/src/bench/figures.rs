@@ -3,7 +3,7 @@
 
 use crate::bandwidth::{Allocator, EqualAllocator, PsoAllocator, PsoConfig};
 use crate::config::ExperimentConfig;
-use crate::coordinator::{profile_batch_delay, ProfileConfig};
+use crate::coordinator::{profile_batch_delay, ProfileConfig, SolveMode};
 use crate::delay::BatchDelayModel;
 use crate::faults::{FaultScript, MigrationPolicyKind};
 use crate::quality::{PowerLawQuality, QualityModel, TableQuality};
@@ -547,6 +547,126 @@ pub fn fig_faults(
     rows
 }
 
+// ---------------------------------------------------------------------------
+// Pipeline figure (new) — solve latency × mode × router view on the event
+// engine
+// ---------------------------------------------------------------------------
+
+/// One (solve-latency, mode, router) cell of the pipeline sweep.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FigPipelineRow {
+    pub solve_latency_s: f64,
+    pub mode: SolveMode,
+    pub router: RouterKind,
+    pub requests: usize,
+    pub served: usize,
+    pub mean_quality: f64,
+    pub outage_rate: f64,
+    /// Mean deadline-censored end-to-end delay (drops charge their
+    /// deadline) — the drop-robust delay aggregate.
+    pub mean_e2e_censored_s: f64,
+    /// p99 of the deadline-censored end-to-end delays.
+    pub p99_e2e_censored_s: f64,
+    /// Fleet solve-overlap fraction: hidden solve time / total solve
+    /// time over the whole run (0 at zero latency or synchronous).
+    pub solve_overlap: f64,
+}
+
+/// Sweep the per-epoch solve latency across both lifecycle modes
+/// (synchronous vs pipelined) and both fleet views (virtual-queue JSQ
+/// vs the live-state router) on the configured fleet, under the
+/// configured *bursty* arrival process through the zero-fault event
+/// engine. Quantifies (a) how much solve latency pipelining hides and
+/// what that saves end-to-end, and (b) the stale-virtual-queue vs
+/// live-view routing gap. Each solve latency draws its own seeded
+/// trace, shared by its four cells, so columns are directly
+/// comparable; the whole sweep replays bit-identically (asserted by
+/// `benches/fig_pipeline.rs` and pinned by `golden_fig_pipeline.json`).
+pub fn fig_pipeline(
+    cfg: &ExperimentConfig,
+    solve_latencies: &[f64],
+    horizon_s: f64,
+) -> Vec<FigPipelineRow> {
+    let delay = BatchDelayModel::new(cfg.delay.a, cfg.delay.b);
+    let quality = PowerLawQuality::paper();
+    let scheduler = Stacking::default();
+    let allocator = EqualAllocator;
+    let speeds = server_speeds(cfg.cluster.servers, cfg.cluster.speed_min, cfg.cluster.speed_max);
+    let routers = [RouterKind::JoinShortestQueue, RouterKind::LiveState];
+    let mut table = TableWriter::new(
+        "Pipeline — solve latency × mode × router view: delay/overlap per cell",
+        &[
+            "solve s", "mode", "router", "requests", "served", "mean FID", "outage",
+            "mean e2e*", "p99 e2e*", "overlap",
+        ],
+    )
+    .with_csv("fig_pipeline");
+    let mut rows = Vec::new();
+    for (i, &latency) in solve_latencies.iter().enumerate() {
+        let mut arrival = cfg.arrival;
+        arrival.process = crate::config::ArrivalProcessKind::Burst;
+        arrival.horizon_s = horizon_s;
+        // A distinct seeded trace per solve latency: the sweep covers
+        // distinct requests, while the mode/router cells inside a
+        // latency share one (directly comparable).
+        let trace = ArrivalTrace::generate(&cfg.scenario, &arrival, cfg.seed + i as u64);
+        for mode in SolveMode::all() {
+            for router in routers {
+                let mut dynamic = DynamicConfig::from(&cfg.dynamic);
+                dynamic.solve_latency_s = latency;
+                dynamic.solve_mode = mode;
+                let event_cfg = EventClusterConfig {
+                    speeds: speeds.clone(),
+                    router,
+                    dynamic,
+                    faults: FaultScript::empty(),
+                    migration: MigrationPolicyKind::None,
+                };
+                let report = simulate_event_cluster(
+                    &trace,
+                    &scheduler,
+                    &allocator,
+                    &delay,
+                    &quality,
+                    &event_cfg,
+                );
+                let stats = report.fleet_stats();
+                let total_solve = report.total_epochs() as f64 * latency;
+                let solve_overlap =
+                    if total_solve > 0.0 { report.solve_hidden_s() / total_solve } else { 0.0 };
+                let row = FigPipelineRow {
+                    solve_latency_s: latency,
+                    mode,
+                    router,
+                    requests: trace.len(),
+                    served: report.served(),
+                    mean_quality: stats.mean_quality,
+                    outage_rate: stats.outage_rate,
+                    mean_e2e_censored_s: report.mean_e2e_censored_s(),
+                    p99_e2e_censored_s: report.e2e_censored_percentile(99.0),
+                    solve_overlap,
+                };
+                table.row(&[
+                    format!("{latency:.2}"),
+                    mode.name().to_string(),
+                    router.name().to_string(),
+                    row.requests.to_string(),
+                    row.served.to_string(),
+                    format!("{:.2}", row.mean_quality),
+                    format!("{:.3}", row.outage_rate),
+                    format!("{:.2}", row.mean_e2e_censored_s),
+                    format!("{:.2}", row.p99_e2e_censored_s),
+                    format!("{:.3}", row.solve_overlap),
+                ]);
+                rows.push(row);
+            }
+        }
+    }
+    table.finish();
+    println!("(* deadline-censored: dropped requests charge their relative deadline)");
+    rows
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -678,6 +798,58 @@ mod tests {
         assert!(rows.iter().any(|r| r.fault_rate_per_min > 0.0 && r.failures > 0));
         // bit-identical replay
         assert_eq!(rows, fig_faults(&cfg, &[0.0, 2.0], 30.0));
+    }
+
+    #[test]
+    fn fig_pipeline_covers_cells_hides_latency_and_replays() {
+        let mut cfg = ExperimentConfig::paper();
+        cfg.cluster.servers = 2;
+        cfg.cluster.speed_min = 0.5;
+        cfg.cluster.speed_max = 1.5;
+        cfg.arrival.rate_hz = 3.0;
+        cfg.arrival.burst_rate_hz = 12.0;
+        let rows = fig_pipeline(&cfg, &[0.0, 0.3], 30.0);
+        assert_eq!(rows.len(), 2 * SolveMode::all().len() * 2);
+        for row in &rows {
+            assert!(row.served <= row.requests);
+            assert!((0.0..=1.0).contains(&row.outage_rate));
+            assert!((0.0..=1.0).contains(&row.solve_overlap));
+            if row.mode == SolveMode::Synchronous || row.solve_latency_s == 0.0 {
+                assert_eq!(row.solve_overlap, 0.0, "{row:?}");
+            }
+        }
+        // zero solve latency: the two modes are bit-identical per router
+        let zero: Vec<&FigPipelineRow> =
+            rows.iter().filter(|r| r.solve_latency_s == 0.0).collect();
+        for r in &zero {
+            let twin = zero
+                .iter()
+                .find(|t| t.router == r.router && t.mode != r.mode)
+                .expect("both modes present");
+            assert_eq!(r.served, twin.served);
+            assert_eq!(r.mean_e2e_censored_s.to_bits(), twin.mean_e2e_censored_s.to_bits());
+            assert_eq!(r.mean_quality.to_bits(), twin.mean_quality.to_bits());
+        }
+        // nonzero latency under burst load: pipelining hides some solve
+        // time and the hidden time buys delay
+        let find = |mode: SolveMode, router: RouterKind| {
+            rows.iter()
+                .find(|r| r.solve_latency_s > 0.0 && r.mode == mode && r.router == router)
+                .unwrap()
+        };
+        for router in [RouterKind::JoinShortestQueue, RouterKind::LiveState] {
+            let pipelined = find(SolveMode::Pipelined, router);
+            let sync = find(SolveMode::Synchronous, router);
+            assert!(pipelined.solve_overlap > 0.0, "{router:?}: nothing hidden");
+            assert!(
+                pipelined.mean_e2e_censored_s < sync.mean_e2e_censored_s,
+                "{router:?}: pipelined {} vs synchronous {}",
+                pipelined.mean_e2e_censored_s,
+                sync.mean_e2e_censored_s
+            );
+        }
+        // bit-identical replay
+        assert_eq!(rows, fig_pipeline(&cfg, &[0.0, 0.3], 30.0));
     }
 
     #[test]

@@ -10,7 +10,7 @@
 //!   `faults   [--fault-mode M] [--migration P] [...]` — the cluster
 //!             workload under failure injection and live migration
 //!   `profile  [--reps N]` — Fig. 1a measurement
-//!   `figures  [--which 1a|1b|2a|2b|2c|3|cluster|faults|all] [--reps N]`
+//!   `figures  [--which 1a|1b|2a|2b|2c|3|cluster|faults|pipeline|all] [--reps N]`
 
 use std::collections::BTreeMap;
 
@@ -100,13 +100,18 @@ USAGE:
                      [--allocator pso|equal|proportional] [--seed N]
   aigc-edge dynamic  [--config file.toml] [--process poisson|burst] [--rate 2.0]
                      [--horizon 300] [--epoch-s 1.0] [--max-batch 32] [--window 30]
-                     [--plan-horizon 2.0] [--no-admission true] [--trace-out f.csv]
+                     [--plan-horizon 2.0] [--solve-latency 0.0]
+                     [--solve-mode pipelined|synchronous]
+                     [--no-admission true] [--trace-out f.csv]
                      [--scheduler stacking|single|greedy|fixed]
                      [--allocator pso|equal|proportional] [--seed N]
-  aigc-edge cluster  [--config file.toml] [--servers 4] [--router round-robin|jsq|quality]
+  aigc-edge cluster  [--config file.toml] [--servers 4]
+                     [--router round-robin|jsq|quality|live]
                      [--speed-min 1.0] [--speed-max 1.0] [--process poisson|burst]
                      [--rate 2.0] [--horizon 300] [--epoch-s 1.0] [--max-batch 32]
-                     [--plan-horizon 2.0] [--adaptive-horizon true] [--no-admission true]
+                     [--plan-horizon 2.0] [--adaptive-horizon true]
+                     [--solve-latency 0.0] [--solve-mode pipelined|synchronous]
+                     [--no-admission true] [--warm-start true]
                      [--scheduler stacking|single|greedy|fixed]
                      [--allocator pso|equal|proportional] [--seed N]
   aigc-edge faults   [--config file.toml] [cluster flags...]
@@ -114,7 +119,7 @@ USAGE:
                      [--fault-seed N] [--down \"server:from:until,...\"]
                      [--migration none|requeue|steal]
   aigc-edge profile  [--reps 20]
-  aigc-edge figures  [--which all|1a|1b|2a|2b|2c|3|cluster|faults] [--reps 3]
+  aigc-edge figures  [--which all|1a|1b|2a|2b|2c|3|cluster|faults|pipeline] [--reps 3]
   aigc-edge help
 ";
 

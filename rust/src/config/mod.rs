@@ -18,6 +18,7 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Context, Result};
 
+use crate::coordinator::SolveMode;
 use crate::faults::{DownInterval, FaultModeKind, FaultScript, MigrationPolicyKind};
 use crate::routing::RouterKind;
 
@@ -171,6 +172,14 @@ pub struct DynamicSettings {
     /// growth, stretch when idle. See
     /// `DynamicConfig::effective_plan_horizon`.
     pub plan_horizon_adaptive: bool,
+    /// CPU cost of one epoch's (P1)∘(P2) solve, seconds (TOML key
+    /// `solve_latency` or `solve_latency_s`). 0 keeps the
+    /// pre-pipeline semantics bit-identical in either solve mode.
+    pub solve_latency_s: f64,
+    /// Epoch-solve lifecycle: `pipelined` (default — epoch n+1 solves
+    /// on CPU while epoch n's batch executes) or `synchronous` (the
+    /// paper's solve-then-execute loop).
+    pub solve_mode: SolveMode,
 }
 
 /// Multi-server cluster settings (`sim::cluster`). TOML section
@@ -267,6 +276,8 @@ impl ExperimentConfig {
                 window_s: 30.0,
                 plan_horizon_s: 2.0,
                 plan_horizon_adaptive: false,
+                solve_latency_s: 0.0,
+                solve_mode: SolveMode::Pipelined,
             },
             cluster: ClusterSettings {
                 servers: 4,
@@ -373,6 +384,13 @@ impl ExperimentConfig {
         }
         pos_finite("dynamic.window_s", d.window_s)?;
         pos_finite("dynamic.plan_horizon_s", d.plan_horizon_s)?;
+        if !(d.solve_latency_s >= 0.0 && d.solve_latency_s.is_finite()) {
+            bail!(
+                "dynamic.solve_latency must be finite and >= 0 seconds \
+                 (0 keeps the pre-pipeline solve-instant semantics), got {}",
+                d.solve_latency_s
+            );
+        }
         let c = &self.cluster;
         if c.servers == 0 {
             bail!("cluster.servers must be >= 1");
@@ -484,6 +502,16 @@ fn apply_doc(cfg: &mut ExperimentConfig, doc: &TomlDoc) -> Result<()> {
             "dynamic.plan_horizon_adaptive" => {
                 set_bool(&mut cfg.dynamic.plan_horizon_adaptive, value)
             }
+            "dynamic.solve_latency" | "dynamic.solve_latency_s" => {
+                set_f64(&mut cfg.dynamic.solve_latency_s, value)
+            }
+            "dynamic.solve_mode" => match value.as_str() {
+                Some(name) => {
+                    cfg.dynamic.solve_mode = SolveMode::from_name(name)?;
+                    true
+                }
+                None => false,
+            },
             "cluster.servers" => set_usize(&mut cfg.cluster.servers, value),
             "cluster.router" => match value.as_str() {
                 Some(name) => {
@@ -653,6 +681,54 @@ mod tests {
         assert!(ExperimentConfig::from_toml_text("[dynamic]\nepoch_s = 0.0").is_err());
         assert!(ExperimentConfig::from_toml_text("[dynamic]\nmax_batch = 0").is_err());
         assert!(ExperimentConfig::from_toml_text("[dynamic]\nadmission = 3").is_err());
+    }
+
+    #[test]
+    fn solve_latency_and_mode_apply_with_defaults() {
+        // defaults: zero latency (bit-identical semantics), pipelined
+        let cfg = ExperimentConfig::paper();
+        assert_eq!(cfg.dynamic.solve_latency_s, 0.0);
+        assert_eq!(cfg.dynamic.solve_mode, SolveMode::Pipelined);
+        let cfg = ExperimentConfig::from_toml_text(
+            "[dynamic]\nsolve_latency = 0.25\nsolve_mode = \"synchronous\"",
+        )
+        .unwrap();
+        assert_eq!(cfg.dynamic.solve_latency_s, 0.25);
+        assert_eq!(cfg.dynamic.solve_mode, SolveMode::Synchronous);
+        // the `_s`-suffixed alias matches the section's other keys
+        let cfg = ExperimentConfig::from_toml_text("[dynamic]\nsolve_latency_s = 0.5").unwrap();
+        assert_eq!(cfg.dynamic.solve_latency_s, 0.5);
+    }
+
+    #[test]
+    fn solve_latency_and_mode_validation_errors_list_valid_values() {
+        let err = ExperimentConfig::from_toml_text("[dynamic]\nsolve_mode = \"eager\"")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("synchronous") && err.contains("pipelined"), "{err}");
+        let err = ExperimentConfig::from_toml_text("[dynamic]\nsolve_latency = -0.1")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains(">= 0"), "{err}");
+        let mut cfg = ExperimentConfig::paper();
+        cfg.dynamic.solve_latency_s = f64::INFINITY;
+        assert!(cfg.validate().is_err());
+        let mut cfg = ExperimentConfig::paper();
+        cfg.dynamic.solve_latency_s = f64::NAN;
+        assert!(cfg.validate().is_err());
+        // zero is explicitly legal: it is the bit-identity case
+        assert!(ExperimentConfig::from_toml_text("[dynamic]\nsolve_latency = 0.0").is_ok());
+    }
+
+    #[test]
+    fn live_router_parses_and_bad_router_error_lists_it() {
+        let cfg = ExperimentConfig::from_toml_text("[cluster]\nrouter = \"live\"").unwrap();
+        assert_eq!(cfg.cluster.router, RouterKind::LiveState);
+        let err = ExperimentConfig::from_toml_text("[cluster]\nrouter = \"random\"")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("live"), "router error must list the live policy: {err}");
+        assert!(err.contains("round-robin") && err.contains("jsq"), "{err}");
     }
 
     #[test]

@@ -1,0 +1,264 @@
+//! The per-server epoch lifecycle — *when* a frozen epoch's (P0) solve
+//! runs relative to the GPU, and what that solve costs.
+//!
+//! The paper's serving loop is synchronous: the epoch closes, the
+//! (P1)∘(P2) solve runs, and only then does the batch start — the GPU
+//! idles through every solve. Accelerating-MEG (arXiv:2407.07245) shows
+//! the real win at the edge is hiding that planning latency behind
+//! generation, so the lifecycle is now explicit:
+//!
+//! ```text
+//! Building ──freeze──▶ PlanPending ──solve done──▶ Solved
+//!                                                    │ GPU frees
+//!                                                    ▼
+//!                          Closed ◀──batch done── Executing
+//! ```
+//!
+//! * **Building** — the epoch is open; arrivals join until the
+//!   time-or-batch rule ([`EpochPolicy`](super::EpochPolicy)) freezes
+//!   membership.
+//! * **PlanPending** — membership frozen, the solve is running on CPU.
+//!   Under [`SolveMode::Pipelined`] it starts at the freeze instant —
+//!   typically while the *previous* epoch's batch still occupies the
+//!   GPU; under [`SolveMode::Synchronous`] it waits for the GPU.
+//! * **Solved** — the plan is ready; the batch starts once the GPU
+//!   frees (pipelined mode only; a synchronous solve ends with the GPU
+//!   already free).
+//! * **Executing → Closed** — the batch occupies the GPU for its
+//!   makespan, then the epoch retires.
+//!
+//! [`SolveTiming::compute`] is the single timing rule both simulation
+//! engines (`sim::dynamic`, `sim::event`) share, so their pipelines can
+//! never drift apart — `tests/pipeline_equivalence.rs` holds them to
+//! bit-identity. With `solve_latency_s = 0` the two modes coincide
+//! exactly with the pre-pipeline engines (the batch starts at
+//! `max(close, gpu_free)`), which keeps every historical replay
+//! bit-identical.
+
+/// Where an epoch's (P0) solve runs relative to the GPU timeline.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SolveMode {
+    /// The paper's loop: the solve occupies the gap between batches —
+    /// it begins once the epoch is frozen *and* the GPU is free, and
+    /// the batch starts only after it finishes. Nonzero solve latency
+    /// is charged serially (the GPU idles through it).
+    Synchronous,
+    /// Decoupled: the solve begins on CPU at the epoch freeze, while
+    /// the previous epoch's batch may still be executing on GPU. Solve
+    /// latency is still charged, but hidden behind GPU execution
+    /// whenever the GPU is busy past the freeze.
+    Pipelined,
+}
+
+impl SolveMode {
+    /// Parse the CLI/TOML name; the error lists the valid names
+    /// (PR-3 parser convention).
+    pub fn from_name(name: &str) -> anyhow::Result<Self> {
+        match name {
+            "synchronous" | "sync" => Ok(Self::Synchronous),
+            "pipelined" | "pipeline" => Ok(Self::Pipelined),
+            other => anyhow::bail!(
+                "unknown solve mode '{other}' (valid: synchronous|sync, pipelined|pipeline)"
+            ),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Synchronous => "synchronous",
+            Self::Pipelined => "pipelined",
+        }
+    }
+
+    /// Both modes, synchronous first (the baseline a sweep compares
+    /// against).
+    pub fn all() -> [Self; 2] {
+        [Self::Synchronous, Self::Pipelined]
+    }
+}
+
+/// The lifecycle phase of one epoch. `Building` is the open,
+/// pre-freeze state; the four post-freeze phases are the pipeline
+/// proper.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum EpochPhase {
+    /// Open: arrivals still join.
+    Building,
+    /// Membership frozen; the solve is running (or queued) on CPU.
+    PlanPending,
+    /// Plan ready; waiting for the GPU to free.
+    Solved,
+    /// The batch occupies the GPU.
+    Executing,
+    /// Batch complete; the epoch has retired.
+    Closed,
+}
+
+impl EpochPhase {
+    /// The next phase in the only legal order. `Closed` is absorbing.
+    pub fn advance(self) -> Self {
+        match self {
+            Self::Building => Self::PlanPending,
+            Self::PlanPending => Self::Solved,
+            Self::Solved => Self::Executing,
+            Self::Executing | Self::Closed => Self::Closed,
+        }
+    }
+}
+
+/// Deterministic timing of one frozen epoch's solve + batch under a
+/// [`SolveMode`] — the single rule both simulation engines share.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SolveTiming {
+    /// Instant the (P1)∘(P2) solve starts on CPU.
+    pub solve_begin_s: f64,
+    /// Instant the plan is ready (`solve_begin + solve_latency`).
+    pub solve_end_s: f64,
+    /// Instant the batch starts on GPU (`max(solve_end, gpu_free)`).
+    /// Residual deadlines are evaluated here: the plan targets the
+    /// start instant, which the engine knows exactly.
+    pub batch_start_s: f64,
+    /// Solve time that overlapped GPU execution — the hidden latency
+    /// (always 0 in synchronous mode, where the solve waits for an
+    /// idle GPU).
+    pub hidden_s: f64,
+}
+
+impl SolveTiming {
+    /// Timing for an epoch frozen at `close_s` on a server whose GPU
+    /// frees at `gpu_free_s`, with a solve costing `solve_latency_s`
+    /// CPU seconds. With `solve_latency_s = 0` both modes yield
+    /// `batch_start = max(close, gpu_free)` — the pre-pipeline solve
+    /// instant, bit-for-bit.
+    pub fn compute(close_s: f64, gpu_free_s: f64, solve_latency_s: f64, mode: SolveMode) -> Self {
+        debug_assert!(solve_latency_s >= 0.0 && solve_latency_s.is_finite());
+        let solve_begin_s = match mode {
+            SolveMode::Pipelined => close_s,
+            SolveMode::Synchronous => close_s.max(gpu_free_s),
+        };
+        let solve_end_s = solve_begin_s + solve_latency_s;
+        let batch_start_s = solve_end_s.max(gpu_free_s);
+        let hidden_s = (gpu_free_s.min(solve_end_s) - solve_begin_s).clamp(0.0, solve_latency_s);
+        Self { solve_begin_s, solve_end_s, batch_start_s, hidden_s }
+    }
+
+    /// The lifecycle phase at instant `t_s`, given the batch's
+    /// makespan. Intervals are half-open on the right, so a boundary
+    /// instant belongs to the later phase.
+    pub fn phase_at(&self, t_s: f64, makespan_s: f64) -> EpochPhase {
+        if t_s < self.solve_end_s {
+            EpochPhase::PlanPending
+        } else if t_s < self.batch_start_s {
+            EpochPhase::Solved
+        } else if t_s < self.batch_start_s + makespan_s {
+            EpochPhase::Executing
+        } else {
+            EpochPhase::Closed
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_latency_reproduces_the_pre_pipeline_instant_in_both_modes() {
+        for (close, gpu_free) in [(1.0, 0.0), (2.0, 5.0), (3.5, 3.5), (0.0, 0.0)] {
+            for mode in SolveMode::all() {
+                let t = SolveTiming::compute(close, gpu_free, 0.0, mode);
+                assert_eq!(
+                    t.batch_start_s.to_bits(),
+                    close.max(gpu_free).to_bits(),
+                    "{mode:?} close={close} gpu={gpu_free}"
+                );
+                assert_eq!(t.hidden_s, 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn pipelined_hides_solve_behind_a_busy_gpu() {
+        // GPU busy until 5.0; epoch freezes at 2.0; solve costs 1.0.
+        let p = SolveTiming::compute(2.0, 5.0, 1.0, SolveMode::Pipelined);
+        assert_eq!(p.solve_begin_s, 2.0);
+        assert_eq!(p.solve_end_s, 3.0);
+        assert_eq!(p.batch_start_s, 5.0, "fully hidden: batch starts the instant the GPU frees");
+        assert_eq!(p.hidden_s, 1.0);
+        let s = SolveTiming::compute(2.0, 5.0, 1.0, SolveMode::Synchronous);
+        assert_eq!(s.solve_begin_s, 5.0);
+        assert_eq!(s.batch_start_s, 6.0, "synchronous charges the solve after the GPU frees");
+        assert_eq!(s.hidden_s, 0.0);
+    }
+
+    #[test]
+    fn pipelined_partial_overlap_and_idle_gpu() {
+        // GPU frees mid-solve: only the busy part is hidden.
+        let t = SolveTiming::compute(2.0, 2.4, 1.0, SolveMode::Pipelined);
+        assert_eq!(t.batch_start_s, 3.0);
+        assert!((t.hidden_s - 0.4).abs() < 1e-12);
+        // Idle GPU: nothing to hide behind, both modes pay in full.
+        let p = SolveTiming::compute(2.0, 1.0, 1.0, SolveMode::Pipelined);
+        let s = SolveTiming::compute(2.0, 1.0, 1.0, SolveMode::Synchronous);
+        assert_eq!(p.batch_start_s.to_bits(), s.batch_start_s.to_bits());
+        assert_eq!(p.hidden_s, 0.0);
+    }
+
+    #[test]
+    fn pipelined_batch_never_starts_later_than_synchronous() {
+        // max(close + L, gpu) <= max(close, gpu) + L, for every input —
+        // the per-epoch dominance the delay savings build on.
+        let grid = [0.0, 0.3, 1.0, 2.7, 5.0, 9.9];
+        for &close in &grid {
+            for &gpu in &grid {
+                for latency in [0.0, 0.1, 1.0, 4.0] {
+                    let p = SolveTiming::compute(close, gpu, latency, SolveMode::Pipelined);
+                    let s = SolveTiming::compute(close, gpu, latency, SolveMode::Synchronous);
+                    assert!(p.batch_start_s <= s.batch_start_s, "close={close} gpu={gpu}");
+                    assert!(p.hidden_s <= latency && p.hidden_s >= 0.0);
+                    // the hidden time is exactly the saving
+                    assert!(
+                        (s.batch_start_s - p.batch_start_s - p.hidden_s).abs() < 1e-12,
+                        "saving must equal the hidden solve time"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn phase_order_is_the_only_legal_one() {
+        let mut phase = EpochPhase::Building;
+        let expected = [
+            EpochPhase::PlanPending,
+            EpochPhase::Solved,
+            EpochPhase::Executing,
+            EpochPhase::Closed,
+            EpochPhase::Closed, // absorbing
+        ];
+        for want in expected {
+            phase = phase.advance();
+            assert_eq!(phase, want);
+        }
+    }
+
+    #[test]
+    fn phase_at_walks_the_machine() {
+        let t = SolveTiming::compute(2.0, 5.0, 1.0, SolveMode::Pipelined);
+        assert_eq!(t.phase_at(2.5, 4.0), EpochPhase::PlanPending);
+        assert_eq!(t.phase_at(3.5, 4.0), EpochPhase::Solved);
+        assert_eq!(t.phase_at(5.0, 4.0), EpochPhase::Executing);
+        assert_eq!(t.phase_at(9.0, 4.0), EpochPhase::Closed);
+    }
+
+    #[test]
+    fn solve_mode_names_round_trip_and_errors_list_valid_values() {
+        for mode in SolveMode::all() {
+            assert_eq!(SolveMode::from_name(mode.name()).unwrap(), mode);
+        }
+        assert_eq!(SolveMode::from_name("sync").unwrap(), SolveMode::Synchronous);
+        assert_eq!(SolveMode::from_name("pipeline").unwrap(), SolveMode::Pipelined);
+        let err = SolveMode::from_name("eager").unwrap_err().to_string();
+        assert!(err.contains("synchronous") && err.contains("pipelined"), "{err}");
+    }
+}

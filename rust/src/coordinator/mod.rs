@@ -10,8 +10,10 @@
 
 pub mod engine;
 pub mod epoch;
+pub mod lifecycle;
 pub mod profiler;
 
 pub use engine::{Engine, EngineConfig, EngineReport, ServedRequest};
 pub use epoch::EpochPolicy;
+pub use lifecycle::{EpochPhase, SolveMode, SolveTiming};
 pub use profiler::{pin_xla_single_threaded, profile_batch_delay, ProfileConfig};

@@ -6,11 +6,13 @@
 
 use anyhow::{bail, Context, Result};
 
-use aigc_edge::bandwidth::{Allocator, EqualAllocator, ProportionalAllocator, PsoAllocator};
+use aigc_edge::bandwidth::{
+    Allocator, AllocatorPool, EqualAllocator, ProportionalAllocator, PsoAllocator, PsoConfig,
+};
 use aigc_edge::bench;
 use aigc_edge::cli::{Args, USAGE};
 use aigc_edge::config::{ArrivalProcessKind, ExperimentConfig};
-use aigc_edge::coordinator::{profile_batch_delay, ProfileConfig};
+use aigc_edge::coordinator::{profile_batch_delay, ProfileConfig, SolveMode};
 use aigc_edge::delay::BatchDelayModel;
 use aigc_edge::faults::{FaultModeKind, FaultScript, MigrationPolicyKind};
 use aigc_edge::metrics::OutcomeStats;
@@ -21,8 +23,8 @@ use aigc_edge::scheduler::{
     BatchScheduler, FixedSizeBatching, GreedyBatching, SingleInstance, Stacking, StackingConfig,
 };
 use aigc_edge::sim::{
-    simulate_cluster, simulate_dynamic, simulate_event_cluster, ClusterConfig, Disposition,
-    DynamicConfig, EventClusterConfig,
+    simulate_cluster_pooled, simulate_dynamic, simulate_event_cluster_pooled, ClusterConfig,
+    Disposition, DynamicConfig, EventClusterConfig,
 };
 use aigc_edge::trace::ArrivalTrace;
 
@@ -73,7 +75,31 @@ fn allocator_from(args: &Args) -> Result<Box<dyn Allocator>> {
         "pso" => Box::new(PsoAllocator::default()),
         "equal" => Box::new(EqualAllocator),
         "proportional" => Box::new(ProportionalAllocator),
-        other => bail!("unknown allocator '{other}'"),
+        other => bail!("unknown allocator '{other}' (valid: pso, equal, proportional)"),
+    })
+}
+
+/// Allocator-pool selection for the cluster engines: PSO gets one
+/// instance per server (warm-start state stays on its server —
+/// `--warm-start true` enables the carry); the stateless baselines
+/// share one instance, which is equivalent.
+fn allocator_pool_from(args: &Args, servers: usize) -> Result<AllocatorPool> {
+    let warm_start = match args.get("warm-start") {
+        None | Some("false") => false,
+        Some("true") => true,
+        Some(other) => bail!("--warm-start must be true or false, got '{other}'"),
+    };
+    let name = args.get_or("allocator", "pso");
+    if warm_start && name != "pso" {
+        bail!("--warm-start only applies to --allocator pso (got '{name}')");
+    }
+    Ok(match name.as_str() {
+        "pso" => AllocatorPool::per_server(servers, |_| {
+            Box::new(PsoAllocator::new(PsoConfig { warm_start, ..Default::default() }))
+        }),
+        "equal" => AllocatorPool::shared(Box::new(EqualAllocator)),
+        "proportional" => AllocatorPool::shared(Box::new(ProportionalAllocator)),
+        other => bail!("unknown allocator '{other}' (valid: pso, equal, proportional)"),
     })
 }
 
@@ -170,6 +196,10 @@ fn apply_dynamic_flags(args: &Args, cfg: &mut ExperimentConfig) -> Result<()> {
     cfg.dynamic.max_batch = args.get_usize("max-batch", cfg.dynamic.max_batch)?;
     cfg.dynamic.window_s = args.get_f64("window", cfg.dynamic.window_s)?;
     cfg.dynamic.plan_horizon_s = args.get_f64("plan-horizon", cfg.dynamic.plan_horizon_s)?;
+    cfg.dynamic.solve_latency_s = args.get_f64("solve-latency", cfg.dynamic.solve_latency_s)?;
+    if let Some(name) = args.get("solve-mode") {
+        cfg.dynamic.solve_mode = SolveMode::from_name(name)?;
+    }
     match args.get("adaptive-horizon") {
         None => {}
         Some("true") => cfg.dynamic.plan_horizon_adaptive = true,
@@ -207,6 +237,8 @@ fn cmd_dynamic(args: &Args) -> Result<()> {
         "window",
         "plan-horizon",
         "adaptive-horizon",
+        "solve-latency",
+        "solve-mode",
         "no-admission",
         "trace-out",
         "scheduler",
@@ -228,13 +260,16 @@ fn cmd_dynamic(args: &Args) -> Result<()> {
     }
     let dyn_cfg = DynamicConfig::from(&cfg.dynamic);
     println!(
-        "dynamic scenario: {:?} rate {} Hz over {}s | epoch {}s max-batch {} | plan horizon {}s | admission {}",
+        "dynamic scenario: {:?} rate {} Hz over {}s | epoch {}s max-batch {} | plan horizon {}s | \
+         solve {} @ {}s | admission {}",
         cfg.arrival.process,
         cfg.arrival.rate_hz,
         cfg.arrival.horizon_s,
         cfg.dynamic.epoch_s,
         cfg.dynamic.max_batch,
         cfg.dynamic.plan_horizon_s,
+        cfg.dynamic.solve_mode.name(),
+        cfg.dynamic.solve_latency_s,
         cfg.dynamic.admission,
     );
     println!(
@@ -304,6 +339,15 @@ fn cmd_dynamic(args: &Args) -> Result<()> {
         report.throughput_hz(),
         report.peak_queue_depth(),
     );
+    if cfg.dynamic.solve_latency_s > 0.0 && !report.epochs.is_empty() {
+        let total = report.epochs.len() as f64 * cfg.dynamic.solve_latency_s;
+        println!(
+            "solve overlap: {:.1}% of {:.1}s total solve time hidden behind GPU execution ({})",
+            100.0 * report.solve_hidden_s() / total,
+            total,
+            cfg.dynamic.solve_mode.name(),
+        );
+    }
     Ok(())
 }
 
@@ -322,7 +366,10 @@ fn cmd_cluster(args: &Args) -> Result<()> {
         "window",
         "plan-horizon",
         "adaptive-horizon",
+        "solve-latency",
+        "solve-mode",
         "no-admission",
+        "warm-start",
         "scheduler",
         "allocator",
         "seed",
@@ -333,13 +380,14 @@ fn cmd_cluster(args: &Args) -> Result<()> {
     cfg.validate()?;
 
     let scheduler = scheduler_from(args, &cfg)?;
-    let allocator = allocator_from(args)?;
+    let pool = allocator_pool_from(args, cfg.cluster.servers)?;
     let quality = quality_model(&cfg)?;
     let delay = BatchDelayModel::new(cfg.delay.a, cfg.delay.b);
     let trace = ArrivalTrace::generate(&cfg.scenario, &cfg.arrival, cfg.seed);
     let cluster_cfg = ClusterConfig::from_settings(&cfg.cluster, &cfg.dynamic);
     println!(
-        "cluster: {} servers (speeds {:?}) router={} | {:?} rate {} Hz over {}s | epoch {}s",
+        "cluster: {} servers (speeds {:?}) router={} | {:?} rate {} Hz over {}s | epoch {}s | \
+         solve {} @ {}s",
         cluster_cfg.servers(),
         cluster_cfg.speeds.iter().map(|s| (s * 100.0).round() / 100.0).collect::<Vec<_>>(),
         cfg.cluster.router.name(),
@@ -347,22 +395,78 @@ fn cmd_cluster(args: &Args) -> Result<()> {
         cfg.arrival.rate_hz,
         cfg.arrival.horizon_s,
         cfg.dynamic.epoch_s,
+        cfg.dynamic.solve_mode.name(),
+        cfg.dynamic.solve_latency_s,
     );
     println!(
-        "{} arrivals (empirical rate {:.2} Hz); scheduler={} allocator={}",
+        "{} arrivals (empirical rate {:.2} Hz); scheduler={} allocator={} ({} instance{})",
         trace.len(),
         trace.mean_rate_hz(),
         scheduler.name(),
-        allocator.name()
+        pool.get(0).name(),
+        pool.len(),
+        if pool.len() == 1 { "" } else { "s" }
     );
-    let report = simulate_cluster(
-        &trace,
-        scheduler.as_ref(),
-        allocator.as_ref(),
-        &delay,
-        quality.as_ref(),
-        &cluster_cfg,
-    );
+    // The live-state router reads views only the event engine
+    // publishes — through the sequential engine it would silently
+    // degenerate to virtual JSQ. The zero-fault event engine is
+    // bit-identical to `simulate_cluster` for every virtual-view
+    // policy (tests/pipeline_equivalence.rs), so live routing runs
+    // there and everything else keeps the sequential path.
+    let view = if cfg.cluster.router == RouterKind::LiveState {
+        let event_cfg = EventClusterConfig {
+            speeds: cluster_cfg.speeds.clone(),
+            router: cfg.cluster.router,
+            dynamic: cluster_cfg.dynamic,
+            faults: FaultScript::empty(),
+            migration: MigrationPolicyKind::None,
+        };
+        let report = simulate_event_cluster_pooled(
+            &trace,
+            scheduler.as_ref(),
+            &pool,
+            &delay,
+            quality.as_ref(),
+            &event_cfg,
+        );
+        ClusterView {
+            rows: report
+                .servers
+                .iter()
+                .map(|s| (s.server, s.speed, report.server_stats(s.server)))
+                .collect(),
+            fleet: report.fleet_stats(),
+            served: report.served(),
+            total: report.outcomes.len(),
+            mean_quality: report.mean_quality(),
+            outage_rate: report.outage_rate(),
+            epochs: report.total_epochs(),
+            deferrals: report.total_deferrals(),
+            peak_queue: report.peak_queue_depth(),
+            horizon_s: report.horizon_s,
+        }
+    } else {
+        let report = simulate_cluster_pooled(
+            &trace,
+            scheduler.as_ref(),
+            &pool,
+            &delay,
+            quality.as_ref(),
+            &cluster_cfg,
+        );
+        ClusterView {
+            rows: report.servers.iter().map(|s| (s.server, s.speed, s.stats())).collect(),
+            fleet: report.fleet_stats(),
+            served: report.served(),
+            total: report.outcomes.len(),
+            mean_quality: report.mean_quality(),
+            outage_rate: report.outage_rate(),
+            epochs: report.total_epochs(),
+            deferrals: report.total_deferrals(),
+            peak_queue: report.peak_queue_depth(),
+            horizon_s: report.horizon_s,
+        }
+    };
 
     let mut table = aigc_edge::bench::TableWriter::new(
         "per-server serving summary",
@@ -380,24 +484,41 @@ fn cmd_cluster(args: &Args) -> Result<()> {
             format!("{:.2}", stats.p99_e2e_s),
         ]
     };
-    for s in &report.servers {
-        table.row(&stats_row(s.server.to_string(), format!("{:.2}", s.speed), &s.stats()));
+    for (server, speed, stats) in &view.rows {
+        table.row(&stats_row(server.to_string(), format!("{speed:.2}"), stats));
     }
-    table.row(&stats_row("fleet".into(), "-".into(), &report.fleet_stats()));
+    table.row(&stats_row("fleet".into(), "-".into(), &view.fleet));
     table.finish();
     println!(
         "served {}/{} | mean FID {:.2} | outage rate {:.3} | {} epochs across servers | \
          {} deferrals | peak queue {} | {:.1}s simulated",
-        report.served(),
-        report.outcomes.len(),
-        report.mean_quality(),
-        report.outage_rate(),
-        report.total_epochs(),
-        report.total_deferrals(),
-        report.peak_queue_depth(),
-        report.horizon_s,
+        view.served,
+        view.total,
+        view.mean_quality,
+        view.outage_rate,
+        view.epochs,
+        view.deferrals,
+        view.peak_queue,
+        view.horizon_s,
     );
     Ok(())
+}
+
+/// The engine-agnostic slice of a cluster run that `cmd_cluster`
+/// prints — filled from either the sequential or the event engine's
+/// report, so the two paths cannot drift apart field-by-field.
+struct ClusterView {
+    /// Per-server (id, speed, resolved-request stats).
+    rows: Vec<(usize, f64, OutcomeStats)>,
+    fleet: OutcomeStats,
+    served: usize,
+    total: usize,
+    mean_quality: f64,
+    outage_rate: f64,
+    epochs: usize,
+    deferrals: usize,
+    peak_queue: usize,
+    horizon_s: f64,
 }
 
 fn cmd_faults(args: &Args) -> Result<()> {
@@ -415,7 +536,10 @@ fn cmd_faults(args: &Args) -> Result<()> {
         "window",
         "plan-horizon",
         "adaptive-horizon",
+        "solve-latency",
+        "solve-mode",
         "no-admission",
+        "warm-start",
         "scheduler",
         "allocator",
         "seed",
@@ -446,7 +570,7 @@ fn cmd_faults(args: &Args) -> Result<()> {
     cfg.validate()?;
 
     let scheduler = scheduler_from(args, &cfg)?;
-    let allocator = allocator_from(args)?;
+    let pool = allocator_pool_from(args, cfg.cluster.servers)?;
     let quality = quality_model(&cfg)?;
     let delay = BatchDelayModel::new(cfg.delay.a, cfg.delay.b);
     let trace = ArrivalTrace::generate(&cfg.scenario, &cfg.arrival, cfg.seed);
@@ -472,18 +596,20 @@ fn cmd_faults(args: &Args) -> Result<()> {
         cfg.migration.policy.name(),
     );
     println!(
-        "{} arrivals ({:?} rate {} Hz over {}s); scheduler={} allocator={}",
+        "{} arrivals ({:?} rate {} Hz over {}s); scheduler={} allocator={} ({} instance{})",
         trace.len(),
         cfg.arrival.process,
         cfg.arrival.rate_hz,
         cfg.arrival.horizon_s,
         scheduler.name(),
-        allocator.name()
+        pool.get(0).name(),
+        pool.len(),
+        if pool.len() == 1 { "" } else { "s" }
     );
-    let report = simulate_event_cluster(
+    let report = simulate_event_cluster_pooled(
         &trace,
         scheduler.as_ref(),
-        allocator.as_ref(),
+        &pool,
         &delay,
         quality.as_ref(),
         &event_cfg,
@@ -593,6 +719,9 @@ fn cmd_figures(args: &Args) -> Result<()> {
     }
     if want("faults") {
         bench::fig_faults(&cfg, &[0.0, 0.5, 1.0, 2.0], 200.0);
+    }
+    if want("pipeline") {
+        bench::fig_pipeline(&cfg, &[0.0, 0.1, 0.25, 0.5], 200.0);
     }
     Ok(())
 }

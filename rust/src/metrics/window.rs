@@ -56,6 +56,11 @@ impl WindowedSeries {
         self.points.len() as f64 / self.window_s
     }
 
+    /// Sum of the windowed values; 0.0 when empty.
+    pub fn sum(&self) -> f64 {
+        self.points.iter().map(|&(_, v)| v).sum()
+    }
+
     /// Mean of the windowed values; 0.0 when empty.
     pub fn mean(&self) -> f64 {
         if self.points.is_empty() {
@@ -95,6 +100,10 @@ pub struct ServiceWindows {
     /// 1.0 for an outage (dropped or deadline missed), 0.0 otherwise,
     /// per resolved request.
     pub outages: WindowedSeries,
+    /// Solve latency charged per epoch solve, seconds.
+    pub solve_total_s: WindowedSeries,
+    /// Portion of each solve hidden behind GPU execution, seconds.
+    pub solve_hidden_s: WindowedSeries,
 }
 
 impl ServiceWindows {
@@ -104,6 +113,8 @@ impl ServiceWindows {
             e2e_s: WindowedSeries::new(window_s),
             quality: WindowedSeries::new(window_s),
             outages: WindowedSeries::new(window_s),
+            solve_total_s: WindowedSeries::new(window_s),
+            solve_hidden_s: WindowedSeries::new(window_s),
         }
     }
 
@@ -122,6 +133,26 @@ impl ServiceWindows {
         self.outages.push(t_s, 1.0);
     }
 
+    /// Record one epoch solve: its charged CPU latency and the part of
+    /// it that overlapped GPU execution (the pipeline's hidden time).
+    pub fn record_solve(&mut self, t_s: f64, total_s: f64, hidden_s: f64) {
+        debug_assert!((0.0..=total_s).contains(&hidden_s) || total_s == 0.0);
+        self.solve_total_s.push(t_s, total_s);
+        self.solve_hidden_s.push(t_s, hidden_s);
+    }
+
+    /// Solve-overlap gauge: time the solve was hidden behind GPU
+    /// execution / total solve time, over the trailing window. 0 when
+    /// no solve cost was charged (e.g. `solve_latency_s = 0`).
+    pub fn solve_overlap_fraction(&self) -> f64 {
+        let total = self.solve_total_s.sum();
+        if total <= 0.0 {
+            0.0
+        } else {
+            self.solve_hidden_s.sum() / total
+        }
+    }
+
     /// Fraction of resolved requests in the window that were outages.
     pub fn outage_rate(&self) -> f64 {
         self.outages.mean()
@@ -135,6 +166,8 @@ impl ServiceWindows {
         self.e2e_s.prune(now_s);
         self.quality.prune(now_s);
         self.outages.prune(now_s);
+        self.solve_total_s.prune(now_s);
+        self.solve_hidden_s.prune(now_s);
     }
 }
 
@@ -207,6 +240,30 @@ mod tests {
         assert!((s.outage_rate() - 1.0 / 3.0).abs() < 1e-12);
         assert!((s.quality.mean() - (30.0 + 40.0 + 450.0) / 3.0).abs() < 1e-12);
         assert!((s.e2e_s.percentile(100.0) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn solve_overlap_fraction_tracks_hidden_over_total() {
+        let mut s = ServiceWindows::new(100.0);
+        assert_eq!(s.solve_overlap_fraction(), 0.0, "no solves yet");
+        s.record_solve(1.0, 0.5, 0.5); // fully hidden
+        s.record_solve(2.0, 0.5, 0.0); // fully exposed
+        assert!((s.solve_overlap_fraction() - 0.5).abs() < 1e-12);
+        s.record_solve(3.0, 1.0, 0.25);
+        assert!((s.solve_overlap_fraction() - 0.75 / 2.0).abs() < 1e-12);
+        // zero-latency solves contribute nothing and never divide by 0
+        let mut z = ServiceWindows::new(100.0);
+        z.record_solve(1.0, 0.0, 0.0);
+        assert_eq!(z.solve_overlap_fraction(), 0.0);
+    }
+
+    #[test]
+    fn solve_overlap_is_windowed() {
+        let mut s = ServiceWindows::new(10.0);
+        s.record_solve(0.0, 1.0, 1.0);
+        assert_eq!(s.solve_overlap_fraction(), 1.0);
+        s.record_solve(50.0, 1.0, 0.0); // pushes the old sample out
+        assert_eq!(s.solve_overlap_fraction(), 0.0, "stale hidden time must age out");
     }
 
     #[test]

@@ -18,10 +18,18 @@
 //!   relaxation predicts the most denoising steps (= best FID, since
 //!   quality is monotone in steps) within the request's residual
 //!   deadline, accounting for per-server GPU speed, estimated queue
-//!   wait and a queue-shared transmission estimate.
+//!   wait and a queue-shared transmission estimate;
+//! * [`LiveStateRouter`] — route on the *true* per-server state (real
+//!   queue depth + the exact instant the GPU frees) instead of the
+//!   virtual-queue estimate. Du et al. (arXiv:2301.03220) motivate
+//!   dispatching on live server state; `bench::fig_pipeline` measures
+//!   the stale-vs-live gap.
 //!
 //! Routers see the fleet through [`ServerState`]s — lightweight virtual
-//! queues the splitter advances between arrivals. Every policy is
+//! queues the splitter advances between arrivals. The event engine
+//! (`sim::event`) additionally publishes a [`LiveView`] per server at
+//! every dispatch instant; outside it the live view is absent and the
+//! live router falls back to the virtual estimate. Every policy is
 //! deterministic: identical traces and fleet configs replay to
 //! bit-identical assignments (asserted by `tests/routing_properties.rs`).
 
@@ -39,6 +47,10 @@ pub enum RouterKind {
     JoinShortestQueue,
     /// Marginal-(P0) quality prediction.
     QualityAware,
+    /// Dispatch on the true per-server queue depth and `gpu_free`
+    /// published by the event engine ([`LiveView`]); degenerates to
+    /// the virtual-queue JSQ estimate where no live view exists.
+    LiveState,
 }
 
 impl RouterKind {
@@ -49,8 +61,9 @@ impl RouterKind {
             "round-robin" | "rr" => Ok(Self::RoundRobin),
             "jsq" | "shortest-queue" => Ok(Self::JoinShortestQueue),
             "quality" | "quality-aware" => Ok(Self::QualityAware),
+            "live" | "live-state" => Ok(Self::LiveState),
             other => anyhow::bail!(
-                "unknown router '{other}' (valid: round-robin|rr, jsq|shortest-queue, quality|quality-aware)"
+                "unknown router '{other}' (valid: round-robin|rr, jsq|shortest-queue, quality|quality-aware, live|live-state)"
             ),
         }
     }
@@ -60,25 +73,50 @@ impl RouterKind {
             Self::RoundRobin => "round-robin",
             Self::JoinShortestQueue => "jsq",
             Self::QualityAware => "quality-aware",
+            Self::LiveState => "live",
         }
     }
 
-    /// All policies, in the order the figure sweeps compare them.
+    /// The virtual-view policies, in the order the figure sweeps
+    /// compare them. [`Self::LiveState`] is deliberately excluded:
+    /// these three behave bit-identically across every engine (the
+    /// equivalence suites iterate this set), whereas the live router
+    /// reads event-engine state that the sequential cluster cannot
+    /// provide. Use [`Self::with_live`] to sweep all four.
     pub fn all() -> [Self; 3] {
         [Self::RoundRobin, Self::JoinShortestQueue, Self::QualityAware]
     }
 
+    /// Every policy including the live-state router.
+    pub fn with_live() -> [Self; 4] {
+        [Self::RoundRobin, Self::JoinShortestQueue, Self::QualityAware, Self::LiveState]
+    }
+
     /// Instantiate the policy. The delay model parameterizes the
-    /// quality-aware marginal estimate (and the shared per-request
-    /// service estimate all policies charge to a server's virtual
-    /// queue).
+    /// quality-aware marginal estimate and the live router's per-step
+    /// cost (and the shared per-request service estimate all policies
+    /// charge to a server's virtual queue).
     pub fn build(&self, delay: BatchDelayModel) -> Box<dyn Router> {
         match self {
             Self::RoundRobin => Box::new(RoundRobinRouter::default()),
             Self::JoinShortestQueue => Box::new(JoinShortestQueueRouter),
             Self::QualityAware => Box::new(QualityAwareRouter::new(delay)),
+            Self::LiveState => Box::new(LiveStateRouter::new(delay)),
         }
     }
+}
+
+/// The true, engine-observed state of one server at a dispatch
+/// instant — what the event engine knows and the virtual queue only
+/// estimates. Published by `sim::event` before every routing decision;
+/// absent everywhere else.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LiveView {
+    /// Requests actually waiting on the server (open/frozen epoch
+    /// queue plus backlog), excluding the batch already on the GPU.
+    pub queue_depth: usize,
+    /// Exact instant the GPU frees from the batch it is executing.
+    pub gpu_free_s: f64,
 }
 
 /// One server as the router sees it: a deterministic virtual queue.
@@ -100,6 +138,11 @@ pub struct ServerState {
     pub alive: bool,
     /// Total requests ever routed here.
     pub routed: usize,
+    /// The engine-published true state at the current dispatch instant
+    /// (`sim::event` refreshes this before every routing decision;
+    /// `None` outside the event engine). Virtual-view policies ignore
+    /// it, so publishing it never perturbs their decisions.
+    pub live: Option<LiveView>,
     busy_until_s: f64,
     /// Estimated completion instant of each in-flight request, FIFO.
     pending: VecDeque<f64>,
@@ -108,7 +151,15 @@ pub struct ServerState {
 impl ServerState {
     pub fn new(id: usize, speed: f64) -> Self {
         assert!(speed > 0.0 && speed.is_finite(), "server speed must be positive");
-        Self { id, speed, alive: true, routed: 0, busy_until_s: 0.0, pending: VecDeque::new() }
+        Self {
+            id,
+            speed,
+            alive: true,
+            routed: 0,
+            live: None,
+            busy_until_s: 0.0,
+            pending: VecDeque::new(),
+        }
     }
 
     /// Build a fleet from per-server speed factors.
@@ -302,6 +353,65 @@ impl Router for QualityAwareRouter {
     }
 }
 
+/// Route on the *true* per-server state at dispatch time: the exact
+/// residual GPU busy time plus a per-queued-request singleton-step
+/// estimate on the server's scaled delay model.
+///
+/// The virtual-queue routers charge a fixed `g(1)/speed` per routed
+/// request and drain it on a FIFO clock — causal, but stale: a slow
+/// server whose epochs defer work looks emptier than it is. The live
+/// router reads the engine's [`LiveView`] (real queue depth, real
+/// `gpu_free`) instead, so pile-ups are visible the moment they form.
+/// Where no live view is published (the sequential cluster's
+/// `route_trace`), it falls back to the virtual outstanding-work
+/// estimate — i.e. it degenerates to [`JoinShortestQueueRouter`].
+/// Ties break toward the lowest id for determinism.
+#[derive(Debug, Clone)]
+pub struct LiveStateRouter {
+    delay: BatchDelayModel,
+}
+
+impl LiveStateRouter {
+    pub fn new(delay: BatchDelayModel) -> Self {
+        Self { delay }
+    }
+
+    /// Estimated time until `server` could start denoising one more
+    /// request at `now_s`: true residual GPU busy time plus one
+    /// singleton step per actually-queued request.
+    pub fn backlog_s(&self, server: &ServerState, now_s: f64) -> f64 {
+        match server.live {
+            Some(view) => {
+                let busy = (view.gpu_free_s - now_s).max(0.0);
+                busy + view.queue_depth as f64 * self.delay.g(1) / server.speed
+            }
+            None => server.outstanding_work_s(now_s),
+        }
+    }
+}
+
+impl Router for LiveStateRouter {
+    fn name(&self) -> &'static str {
+        "live"
+    }
+
+    fn route(&mut self, arrival: &Arrival, servers: &[ServerState], _ctx: &RouteContext) -> usize {
+        assert_some_alive(servers);
+        let now = arrival.t_s;
+        servers
+            .iter()
+            .filter(|s| s.alive)
+            .min_by(|a, b| {
+                self.backlog_s(a, now)
+                    .partial_cmp(&self.backlog_s(b, now))
+                    .unwrap()
+                    .then(a.id.cmp(&b.id))
+            })
+            .unwrap()
+            .id
+    }
+}
+
 /// Route every arrival of `trace` in time order, advancing the fleet's
 /// virtual queues between arrivals. Returns the per-arrival server
 /// assignment (indexed by arrival id). Each routed request charges the
@@ -440,15 +550,53 @@ mod tests {
 
     #[test]
     fn router_kind_names_round_trip() {
-        for kind in RouterKind::all() {
+        for kind in RouterKind::with_live() {
             assert_eq!(RouterKind::from_name(kind.name()).unwrap(), kind);
         }
         assert_eq!(RouterKind::from_name("rr").unwrap(), RouterKind::RoundRobin);
         assert_eq!(RouterKind::from_name("shortest-queue").unwrap(), RouterKind::JoinShortestQueue);
         assert_eq!(RouterKind::from_name("quality").unwrap(), RouterKind::QualityAware);
+        assert_eq!(RouterKind::from_name("live-state").unwrap(), RouterKind::LiveState);
         let err = RouterKind::from_name("bogus").unwrap_err().to_string();
         assert!(err.contains("round-robin") && err.contains("jsq"), "{err}");
-        assert!(err.contains("quality-aware"), "{err}");
+        assert!(err.contains("quality-aware") && err.contains("live"), "{err}");
+    }
+
+    #[test]
+    fn live_router_reads_the_published_view_over_the_virtual_queue() {
+        let mut servers = ServerState::fleet(&[1.0, 1.0]);
+        // Virtual queues say server 0 is empty and server 1 is buried…
+        servers[1].assign(0.0, 50.0);
+        // …but the live views say the opposite: 0 has a deep real
+        // queue and a busy GPU, 1 is idle.
+        servers[0].live = Some(LiveView { queue_depth: 12, gpu_free_s: 9.0 });
+        servers[1].live = Some(LiveView { queue_depth: 0, gpu_free_s: 0.0 });
+        let mut live = LiveStateRouter::new(BatchDelayModel::paper());
+        assert_eq!(live.route(&arrival(0, 1.0, 10.0), &servers, &ctx()), 1);
+        // JSQ, blind to the live view, still trusts the stale estimate
+        let mut jsq = JoinShortestQueueRouter;
+        assert_eq!(jsq.route(&arrival(0, 1.0, 10.0), &servers, &ctx()), 0);
+    }
+
+    #[test]
+    fn live_router_without_views_degenerates_to_virtual_jsq() {
+        let t = trace(5.0, 60.0, 11);
+        let delay = BatchDelayModel::paper();
+        let mut live_fleet = ServerState::fleet(&[0.5, 1.0, 1.5]);
+        let mut jsq_fleet = ServerState::fleet(&[0.5, 1.0, 1.5]);
+        let live = route_trace(&t, &mut live_fleet, &mut LiveStateRouter::new(delay), &delay);
+        let jsq = route_trace(&t, &mut jsq_fleet, &mut JoinShortestQueueRouter, &delay);
+        assert_eq!(live, jsq, "no live views published: identical dispatch");
+    }
+
+    #[test]
+    fn live_router_skips_failed_servers() {
+        let mut servers = ServerState::fleet(&[1.0, 1.0]);
+        servers[0].live = Some(LiveView { queue_depth: 0, gpu_free_s: 0.0 });
+        servers[1].live = Some(LiveView { queue_depth: 5, gpu_free_s: 4.0 });
+        servers[0].alive = false;
+        let mut live = LiveStateRouter::new(BatchDelayModel::paper());
+        assert_eq!(live.route(&arrival(0, 1.0, 10.0), &servers, &ctx()), 1);
     }
 
     #[test]

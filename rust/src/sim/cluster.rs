@@ -29,7 +29,7 @@
 //! reproduces [`simulate_dynamic`] exactly (the cluster layer adds zero
 //! bias — asserted by `tests/cluster_dominance.rs`).
 
-use crate::bandwidth::Allocator;
+use crate::bandwidth::{Allocator, AllocatorPool};
 use crate::delay::BatchDelayModel;
 use crate::metrics::{OutcomeStats, ResolvedSample};
 use crate::quality::QualityModel;
@@ -184,7 +184,8 @@ impl ClusterReport {
     }
 }
 
-/// Run the cluster simulation of `trace` under the given policies.
+/// Run the cluster simulation of `trace` under the given policies with
+/// one shared allocator instance (the legacy entry point).
 ///
 /// `delay` is the reference (speed-1.0) batch-delay model; each server
 /// runs `simulate_dynamic` under `g(X)/speed`.
@@ -195,9 +196,9 @@ impl ClusterReport {
 /// carries swarm state from server k into server k+1's first epoch and
 /// across `simulate_cluster` calls on the same instance; pass a fresh
 /// (or [`reset`](crate::bandwidth::PsoAllocator::reset)) allocator per
-/// run for bit-identical replay, exactly as with `simulate_dynamic`.
-/// Per-server allocator instances are a follow-up alongside server
-/// failure/rebalancing (see ROADMAP).
+/// run for bit-identical replay, exactly as with `simulate_dynamic` —
+/// or use [`simulate_cluster_pooled`] for per-server instances that
+/// keep warm-start state on its server.
 pub fn simulate_cluster(
     trace: &ArrivalTrace,
     scheduler: &dyn BatchScheduler,
@@ -206,8 +207,38 @@ pub fn simulate_cluster(
     quality: &dyn QualityModel,
     cfg: &ClusterConfig,
 ) -> ClusterReport {
+    let allocators = vec![allocator; cfg.servers().max(1)];
+    run_cluster(trace, scheduler, allocators, delay, quality, cfg)
+}
+
+/// [`simulate_cluster`] with per-server allocator instances from an
+/// [`AllocatorPool`]. With per-server warm-start PSO this engine and
+/// `sim::event`'s zero-fault case coincide bitwise (each server's
+/// solve sequence is identical in both), which a shared stateful
+/// allocator cannot guarantee — `tests/pipeline_properties.rs` pins
+/// this.
+pub fn simulate_cluster_pooled(
+    trace: &ArrivalTrace,
+    scheduler: &dyn BatchScheduler,
+    pool: &AllocatorPool,
+    delay: &BatchDelayModel,
+    quality: &dyn QualityModel,
+    cfg: &ClusterConfig,
+) -> ClusterReport {
+    run_cluster(trace, scheduler, pool.refs(cfg.servers().max(1)), delay, quality, cfg)
+}
+
+fn run_cluster(
+    trace: &ArrivalTrace,
+    scheduler: &dyn BatchScheduler,
+    allocators: Vec<&dyn Allocator>,
+    delay: &BatchDelayModel,
+    quality: &dyn QualityModel,
+    cfg: &ClusterConfig,
+) -> ClusterReport {
     let n = cfg.servers();
     assert!(n >= 1, "cluster needs at least one server");
+    assert_eq!(allocators.len(), n, "one allocator reference per server");
 
     // ---- arrival splitting (the routing layer) ----
     let mut fleet = ServerState::fleet(&cfg.speeds);
@@ -236,8 +267,14 @@ pub fn simulate_cluster(
             total_bandwidth_hz: trace.total_bandwidth_hz,
             content_bits: trace.content_bits,
         };
-        let report =
-            simulate_dynamic(&sub_trace, scheduler, allocator, &scaled, quality, &cfg.dynamic);
+        let report = simulate_dynamic(
+            &sub_trace,
+            scheduler,
+            allocators[server],
+            &scaled,
+            quality,
+            &cfg.dynamic,
+        );
         horizon = horizon.max(report.horizon_s);
         // ---- merge: map sub-trace outcomes back to global ids ----
         for outcome in &report.outcomes {

@@ -13,7 +13,13 @@
 //!    best-case transmission;
 //! 4. one (P1) ∘ (P2) solve runs over the queue with *residual*
 //!    deadlines, the GPU executes the plan (simulated time advances by
-//!    the schedule makespan);
+//!    the schedule makespan). The solve itself costs
+//!    `solve_latency_s` CPU seconds under the explicit epoch lifecycle
+//!    ([`SolveTiming`]): pipelined mode (default) starts it at the
+//!    epoch freeze — hidden behind the previous batch whenever the GPU
+//!    is still busy — while synchronous mode replays the paper's
+//!    solve-then-execute loop. Zero latency keeps the historical
+//!    semantics bit-identical in either mode;
 //! 5. **carry-over**: a request the solve left at zero steps stays
 //!    queued and spans epochs until it is served or its deadline makes
 //!    it infeasible.
@@ -22,7 +28,7 @@
 //! bit-identically, which the `fig3_dynamic` bench asserts.
 
 use crate::bandwidth::Allocator;
-use crate::coordinator::EpochPolicy;
+use crate::coordinator::{EpochPolicy, SolveMode, SolveTiming};
 use crate::delay::BatchDelayModel;
 use crate::metrics::ServiceWindows;
 use crate::quality::QualityModel;
@@ -55,6 +61,13 @@ pub struct DynamicConfig {
     /// cap, stretch (up to 2×) when it idles. See
     /// [`effective_plan_horizon`](Self::effective_plan_horizon).
     pub plan_horizon_adaptive: bool,
+    /// CPU cost of one epoch's (P1)∘(P2) solve, seconds. Zero keeps
+    /// the pre-pipeline semantics bit-identical in either mode.
+    pub solve_latency_s: f64,
+    /// Where the solve runs relative to the GPU: pipelined (the
+    /// default — epoch n+1 solves while epoch n executes) or the
+    /// paper's synchronous loop. See [`SolveMode`].
+    pub solve_mode: SolveMode,
 }
 
 impl DynamicConfig {
@@ -84,6 +97,8 @@ impl Default for DynamicConfig {
             window_s: 30.0,
             plan_horizon_s: 2.0,
             plan_horizon_adaptive: false,
+            solve_latency_s: 0.0,
+            solve_mode: SolveMode::Pipelined,
         }
     }
 }
@@ -98,6 +113,8 @@ impl From<&crate::config::DynamicSettings> for DynamicConfig {
             window_s: d.window_s,
             plan_horizon_s: d.plan_horizon_s,
             plan_horizon_adaptive: d.plan_horizon_adaptive,
+            solve_latency_s: d.solve_latency_s,
+            solve_mode: d.solve_mode,
         }
     }
 }
@@ -159,6 +176,9 @@ pub struct EpochRecord {
     pub dropped: usize,
     /// Generation-phase makespan of this epoch's schedule.
     pub makespan_s: f64,
+    /// Solve time hidden behind GPU execution (0 unless pipelined with
+    /// nonzero `solve_latency_s` and a busy GPU at the freeze).
+    pub solve_hidden_s: f64,
     // ---- sliding-window aggregates at t_solve (window = config) ----
     pub arrival_rate_hz: f64,
     pub mean_quality_w: f64,
@@ -166,6 +186,9 @@ pub struct EpochRecord {
     pub p50_e2e_w: f64,
     pub p95_e2e_w: f64,
     pub p99_e2e_w: f64,
+    /// Windowed solve-overlap gauge: hidden solve time / total solve
+    /// time over the trailing window (0 when no solve cost is charged).
+    pub solve_overlap_w: f64,
 }
 
 /// Complete result of a dynamic run.
@@ -245,6 +268,42 @@ impl DynamicReport {
     pub fn peak_queue_depth(&self) -> usize {
         self.epochs.iter().map(|e| e.queue_depth).max().unwrap_or(0)
     }
+
+    /// Total solve time hidden behind GPU execution, summed over
+    /// epochs. Divide by `epochs.len() × solve_latency_s` for the
+    /// run-wide overlap fraction.
+    pub fn solve_hidden_s(&self) -> f64 {
+        self.epochs.iter().map(|e| e.solve_hidden_s).sum()
+    }
+
+    /// Mean deadline-censored end-to-end delay (see
+    /// [`censored_delays`]) — the drop-robust delay aggregate the
+    /// pipeline comparisons use. 0.0 for an empty run.
+    pub fn mean_e2e_censored_s(&self) -> f64 {
+        mean_censored_delay(&self.outcomes)
+    }
+}
+
+/// Deadline-censored end-to-end delays, one per outcome: served
+/// requests charge their e2e, dropped ones their relative deadline
+/// (the user waited at least that and got nothing) — so dropping
+/// requests can never flatter a delay aggregate. The single censoring
+/// definition every report and sweep shares.
+pub fn censored_delays(outcomes: &[RequestOutcome]) -> Vec<f64> {
+    outcomes
+        .iter()
+        .map(|o| if o.disposition == Disposition::Served { o.e2e_s } else { o.deadline_s })
+        .collect()
+}
+
+/// Mean of [`censored_delays`]; 0.0 for an empty set. Both engines'
+/// reports delegate here so the aggregate can never drift between
+/// them.
+pub fn mean_censored_delay(outcomes: &[RequestOutcome]) -> f64 {
+    if outcomes.is_empty() {
+        return 0.0;
+    }
+    censored_delays(outcomes).iter().sum::<f64>() / outcomes.len() as f64
 }
 
 /// One queued request during simulation.
@@ -261,11 +320,14 @@ struct Queued {
 /// Run the dynamic simulation of `trace` under the given policies.
 ///
 /// MIRROR CONTRACT: `sim::event` replays this loop's epoch semantics
-/// op-for-op (ingest rules, admission, solve, resolve, carry-over) so
-/// its zero-fault case stays bit-identical to the cluster layer. Any
-/// behavioural change here must be mirrored in
+/// op-for-op (ingest rules, solve-lifecycle timing via
+/// [`SolveTiming::compute`], admission, solve, resolve, carry-over) so
+/// its zero-fault case stays bit-identical to the cluster layer — at
+/// every solve latency and mode, not just the zero-latency default.
+/// Any behavioural change here must be mirrored in
 /// `sim::event::Engine::{solve_server, open_after_solve}` and
-/// `ServerSim::ingest` — `tests/event_equivalence.rs` is the guard.
+/// `ServerSim::ingest` — `tests/event_equivalence.rs` and
+/// `tests/pipeline_equivalence.rs` are the guards.
 pub fn simulate_dynamic(
     trace: &ArrivalTrace,
     scheduler: &dyn BatchScheduler,
@@ -330,8 +392,13 @@ pub fn simulate_dynamic(
         }
         debug_assert!(!queue.is_empty());
 
-        // The solve happens once the epoch closes AND the GPU is free.
-        let t0 = close.max(gpu_free);
+        // The epoch is frozen at `close`; the lifecycle rule decides
+        // when its solve runs (pipelined: immediately, overlapped with
+        // the in-flight batch; synchronous: once the GPU frees) and
+        // when the batch starts. Residual deadlines are evaluated at
+        // the batch start — the instant the plan targets.
+        let timing = SolveTiming::compute(close, gpu_free, cfg.solve_latency_s, cfg.solve_mode);
+        let t0 = timing.batch_start_s;
         let epoch_index = epochs.len();
         let queue_depth = queue.len();
 
@@ -377,8 +444,11 @@ pub fn simulate_dynamic(
         }
 
         if admitted.is_empty() {
-            // Everyone in this epoch was dropped; move on.
+            // Everyone in this epoch was dropped; move on. The solve
+            // still ran (admission is part of planning), so its cost
+            // and overlap are charged like any other epoch's.
             clock = t0;
+            windows.record_solve(t0, cfg.solve_latency_s, timing.hidden_s);
             windows.prune(t0);
             epochs.push(EpochRecord {
                 index: epoch_index,
@@ -389,12 +459,14 @@ pub fn simulate_dynamic(
                 deferred: 0,
                 dropped: dropped_now,
                 makespan_s: 0.0,
+                solve_hidden_s: timing.hidden_s,
                 arrival_rate_hz: windows.arrivals.rate_hz(),
                 mean_quality_w: windows.quality.mean(),
                 outage_rate_w: windows.outage_rate(),
                 p50_e2e_w: windows.e2e_s.percentile(50.0),
                 p95_e2e_w: windows.e2e_s.percentile(95.0),
                 p99_e2e_w: windows.e2e_s.percentile(99.0),
+                solve_overlap_w: windows.solve_overlap_fraction(),
             });
             continue;
         }
@@ -459,6 +531,7 @@ pub fn simulate_dynamic(
         gpu_free = t0 + makespan;
         clock = t0;
         horizon = horizon.max(gpu_free);
+        windows.record_solve(t0, cfg.solve_latency_s, timing.hidden_s);
         windows.prune(t0);
         epochs.push(EpochRecord {
             index: epoch_index,
@@ -469,12 +542,14 @@ pub fn simulate_dynamic(
             deferred: deferred_now,
             dropped: dropped_now,
             makespan_s: makespan,
+            solve_hidden_s: timing.hidden_s,
             arrival_rate_hz: windows.arrivals.rate_hz(),
             mean_quality_w: windows.quality.mean(),
             outage_rate_w: windows.outage_rate(),
             p50_e2e_w: windows.e2e_s.percentile(50.0),
             p95_e2e_w: windows.e2e_s.percentile(95.0),
             p99_e2e_w: windows.e2e_s.percentile(99.0),
+            solve_overlap_w: windows.solve_overlap_fraction(),
         });
     }
 
@@ -693,6 +768,48 @@ mod tests {
             assert!(h >= 0.25 * cfg.plan_horizon_s - 1e-12, "below floor at {depth}: {h}");
             assert!(h <= 2.0 * cfg.plan_horizon_s + 1e-12, "above ceiling at {depth}: {h}");
         }
+    }
+
+    #[test]
+    fn zero_solve_latency_modes_are_bit_identical() {
+        let t = trace(6.0, 60.0, 7);
+        let pipelined =
+            run(&t, &DynamicConfig { solve_mode: SolveMode::Pipelined, ..Default::default() });
+        let sync =
+            run(&t, &DynamicConfig { solve_mode: SolveMode::Synchronous, ..Default::default() });
+        for (a, b) in pipelined.outcomes.iter().zip(&sync.outcomes) {
+            assert_eq!(a.disposition, b.disposition);
+            assert_eq!(a.e2e_s.to_bits(), b.e2e_s.to_bits());
+            assert_eq!(a.resolved_s.to_bits(), b.resolved_s.to_bits());
+        }
+        assert_eq!(pipelined.horizon_s.to_bits(), sync.horizon_s.to_bits());
+        for (a, b) in pipelined.epochs.iter().zip(&sync.epochs) {
+            assert_eq!(a.t_solve_s.to_bits(), b.t_solve_s.to_bits());
+            assert_eq!(a.solve_hidden_s, 0.0);
+            assert_eq!(b.solve_hidden_s, 0.0);
+            assert_eq!(a.solve_overlap_w, 0.0);
+        }
+    }
+
+    #[test]
+    fn pipelined_solve_hides_latency_under_backlog() {
+        // Overload keeps the GPU busy past every epoch close, so the
+        // pipelined solve overlaps execution while the synchronous one
+        // idles the GPU — strictly later batches, strictly more delay.
+        let t = trace(8.0, 60.0, 7);
+        let base = DynamicConfig { solve_latency_s: 0.3, ..Default::default() };
+        let pipelined = run(&t, &DynamicConfig { solve_mode: SolveMode::Pipelined, ..base });
+        let sync = run(&t, &DynamicConfig { solve_mode: SolveMode::Synchronous, ..base });
+        assert!(pipelined.solve_hidden_s() > 0.0, "backlog must hide some solve time");
+        assert_eq!(sync.solve_hidden_s(), 0.0, "synchronous solves are never hidden");
+        assert!(
+            pipelined.mean_e2e_censored_s() < sync.mean_e2e_censored_s(),
+            "pipelined {} vs synchronous {}",
+            pipelined.mean_e2e_censored_s(),
+            sync.mean_e2e_censored_s()
+        );
+        // the windowed gauge reports the hiding
+        assert!(pipelined.epochs.iter().any(|e| e.solve_overlap_w > 0.0));
     }
 
     #[test]

@@ -35,21 +35,44 @@
 //! epoch events by ascending server id. Identical inputs replay
 //! bit-identically (asserted by `tests/migration_properties.rs`).
 //!
-//! Like `simulate_cluster`, the one `allocator` instance is shared by
-//! every solve; a *stateful* allocator (PSO `warm_start`) sees solves
-//! in shared-clock order here vs per-server order there, so the two
-//! engines only coincide bit-for-bit under stateless allocators.
+//! **Pipelined epoch lifecycle.** Each server's epoch walks the
+//! explicit state machine of [`crate::coordinator::lifecycle`]
+//! (`Building → PlanPending → Solved → Executing → Closed`): under the
+//! default [`SolveMode::Pipelined`], epoch n+1's (P1)∘(P2) solve runs
+//! on CPU from the freeze instant — overlapped with epoch n's batch on
+//! the GPU — so nonzero `solve_latency_s` is hidden whenever the GPU
+//! is backlogged. [`SolveMode::Synchronous`] replays the paper's
+//! solve-then-execute loop. Zero solve latency keeps both modes
+//! bit-identical to the pre-pipeline engine
+//! (`tests/pipeline_equivalence.rs`). A server dying before its batch
+//! starts (any phase up to `Solved`) strands the queued epoch exactly
+//! as before; a committed batch (`Executing`) is atomic.
+//!
+//! **Dispatch state.** Before every routing decision the engine
+//! publishes each server's true queue depth and `gpu_free` as a
+//! [`LiveView`], so [`RouterKind::LiveState`] dispatches on live state
+//! while the virtual-view policies (which ignore the view) stay
+//! bit-identical to `simulate_cluster`; `bench::fig_pipeline`
+//! quantifies the stale-vs-live gap.
+//!
+//! **Allocators.** Solves draw per-server allocator instances from an
+//! [`AllocatorPool`] (`simulate_event_cluster_pooled`), so PSO
+//! warm-start state is per server and the shared-clock solve order no
+//! longer interleaves swarm state across the fleet — with per-server
+//! pools the engines coincide bitwise even under warm starts. The
+//! legacy `simulate_event_cluster` entry point shares one instance
+//! fleet-wide, as before.
 
 use std::collections::VecDeque;
 
-use crate::bandwidth::Allocator;
+use crate::bandwidth::{Allocator, AllocatorPool};
 use crate::channel::Link;
-use crate::coordinator::EpochPolicy;
+use crate::coordinator::{EpochPhase, EpochPolicy, SolveMode, SolveTiming};
 use crate::delay::BatchDelayModel;
 use crate::faults::{FaultEvent, FaultKind, FaultScript, MigrationPolicy, MigrationPolicyKind};
 use crate::metrics::{OutcomeStats, RecoverySample, RecoveryStats, ServiceWindows};
 use crate::quality::QualityModel;
-use crate::routing::{RouteContext, Router, RouterKind, ServerState};
+use crate::routing::{LiveView, RouteContext, Router, RouterKind, ServerState};
 use crate::scheduler::BatchScheduler;
 use crate::trace::{Arrival, ArrivalTrace, DeviceRequest, Workload};
 
@@ -220,6 +243,28 @@ impl EventReport {
         self.outcomes.iter().map(|o| o.deferrals as usize).sum()
     }
 
+    /// Mean deadline-censored end-to-end delay (served requests charge
+    /// their e2e, dropped ones their relative deadline — see
+    /// [`super::dynamic::censored_delays`]) — the drop-robust delay
+    /// aggregate the pipeline sweep compares on. 0.0 for an empty run.
+    pub fn mean_e2e_censored_s(&self) -> f64 {
+        super::dynamic::mean_censored_delay(&self.outcomes)
+    }
+
+    /// Percentile of the deadline-censored end-to-end delays.
+    pub fn e2e_censored_percentile(&self, p: f64) -> f64 {
+        crate::util::stats::percentile(&super::dynamic::censored_delays(&self.outcomes), p)
+    }
+
+    /// Total solve time hidden behind GPU execution, summed over every
+    /// server's epochs.
+    pub fn solve_hidden_s(&self) -> f64 {
+        self.servers
+            .iter()
+            .map(|s| s.epochs.iter().map(|e| e.solve_hidden_s).sum::<f64>())
+            .sum()
+    }
+
     /// Post-failure recovery aggregates (time-to-drain, censored p99
     /// tail over the `window_s` after each failure, migration counts).
     pub fn recovery_stats(&self, window_s: f64) -> RecoveryStats {
@@ -285,17 +330,32 @@ impl Pending {
     }
 }
 
-/// One server's epoch under construction (or frozen, awaiting its
-/// solve).
+/// One server's epoch walking the lifecycle state machine
+/// ([`EpochPhase`]): `Building` while arrivals may still join, then
+/// frozen (`PlanPending` onward) with its solve/batch instants fixed
+/// by [`SolveTiming`].
 #[derive(Debug, Clone)]
 struct Epoch {
     open_s: f64,
-    /// Scheduled close (timer), pulled earlier on batch-fill.
+    /// Scheduled close (timer), pulled earlier on batch-fill. Once
+    /// frozen this is the solve-lifecycle anchor.
     close_s: f64,
-    /// Membership frozen: no further joins; solve at
-    /// `max(close_s, gpu_free_s)`.
-    closed: bool,
+    /// Lifecycle phase. `Building` = open; anything later = membership
+    /// frozen, no further joins.
+    phase: EpochPhase,
     queue: Vec<Pending>,
+}
+
+impl Epoch {
+    fn frozen(&self) -> bool {
+        self.phase != EpochPhase::Building
+    }
+
+    fn freeze(&mut self, close_s: f64) {
+        debug_assert!(!self.frozen());
+        self.close_s = close_s;
+        self.phase = self.phase.advance();
+    }
 }
 
 /// One server's live serving-loop state.
@@ -304,6 +364,10 @@ struct ServerSim {
     speed: f64,
     /// Speed-scaled delay model `g_s(X) = g(X)/speed`.
     delay: BatchDelayModel,
+    /// Solve-lifecycle settings (shared fleet-wide from the dynamic
+    /// config; copied here so timing never needs the engine).
+    solve_latency_s: f64,
+    solve_mode: SolveMode,
     alive: bool,
     epoch: Option<Epoch>,
     /// Requests routed here while the current epoch was frozen; they
@@ -320,16 +384,18 @@ struct ServerSim {
 }
 
 impl ServerSim {
-    fn new(id: usize, speed: f64, reference: &BatchDelayModel, window_s: f64) -> Self {
+    fn new(id: usize, speed: f64, reference: &BatchDelayModel, dynamic: &DynamicConfig) -> Self {
         Self {
             id,
             speed,
             delay: BatchDelayModel::new(reference.a / speed, reference.b / speed),
+            solve_latency_s: dynamic.solve_latency_s,
+            solve_mode: dynamic.solve_mode,
             alive: true,
             epoch: None,
             backlog: VecDeque::new(),
             gpu_free_s: 0.0,
-            windows: ServiceWindows::new(window_s),
+            windows: ServiceWindows::new(dynamic.window_s),
             epochs: Vec::new(),
             assigned_ids: Vec::new(),
             resolved_ids: Vec::new(),
@@ -359,35 +425,50 @@ impl ServerSim {
                 let e = Epoch {
                     open_s: t,
                     close_s: policy.close_deadline(t),
-                    closed: false,
+                    phase: EpochPhase::Building,
                     queue: vec![p],
                 };
                 self.epoch = Some(e);
             }
-            Some(e) if !e.closed => {
+            Some(e) if !e.frozen() => {
                 Self::note_arrival(&mut self.windows, &mut p);
                 e.queue.push(p);
                 if t > e.open_s && policy.should_close(e.queue.len(), t - e.open_s) {
-                    e.close_s = t;
-                    e.closed = true;
+                    e.freeze(t);
                 }
             }
             Some(_) => self.backlog.push_back(p),
         }
     }
 
+    /// The frozen epoch's solve/batch instants under this server's
+    /// lifecycle settings. `gpu_free_s` cannot change between the
+    /// freeze and the batch start (this server's GPU is serial), so
+    /// the timing is fixed the moment the epoch freezes.
+    fn solve_timing(&self, e: &Epoch) -> SolveTiming {
+        debug_assert!(e.frozen());
+        SolveTiming::compute(e.close_s, self.gpu_free_s, self.solve_latency_s, self.solve_mode)
+    }
+
     /// The instant this server next needs the shared clock: its epoch
-    /// timer (building) or its solve instant (frozen). Dead or idle
-    /// servers have no events.
+    /// timer (building) or its batch start (frozen — under the
+    /// pipelined lifecycle the solve itself runs earlier, overlapped
+    /// with the in-flight batch). Dead or idle servers have no events.
     fn next_event_time(&self) -> Option<f64> {
         if !self.alive {
             return None;
         }
         match &self.epoch {
-            Some(e) if !e.closed => Some(e.close_s),
-            Some(e) => Some(e.close_s.max(self.gpu_free_s)),
+            Some(e) if !e.frozen() => Some(e.close_s),
+            Some(e) => Some(self.solve_timing(e).batch_start_s),
             None => None,
         }
+    }
+
+    /// Requests actually waiting on this server (open/frozen epoch
+    /// plus backlog) — the live queue depth the router may read.
+    fn queued(&self) -> usize {
+        self.epoch.as_ref().map(|e| e.queue.len()).unwrap_or(0) + self.backlog.len()
     }
 
     /// No queued work and a free GPU at `t` — a steal target.
@@ -399,7 +480,9 @@ impl ServerSim {
 struct Engine<'a> {
     trace: &'a ArrivalTrace,
     scheduler: &'a dyn BatchScheduler,
-    allocator: &'a dyn Allocator,
+    /// One allocator per server (a shared pool repeats one instance) —
+    /// PSO warm-start state is per server, not fleet-wide.
+    allocators: Vec<&'a dyn Allocator>,
     /// Reference (speed-1.0) delay model — parameterizes routing's
     /// shared service estimate, exactly as in `route_trace`.
     delay: &'a BatchDelayModel,
@@ -541,12 +624,21 @@ impl Engine<'_> {
         }
     }
 
+    /// Bring the router's fleet view to instant `t`: advance the
+    /// virtual queues and publish each server's true queue depth and
+    /// `gpu_free` as its [`LiveView`]. Virtual-view policies ignore
+    /// the live half, so publishing it never perturbs them.
+    fn refresh_states(&mut self, t: f64) {
+        for (st, srv) in self.states.iter_mut().zip(&self.servers) {
+            st.advance(t);
+            st.live = Some(LiveView { queue_depth: srv.queued(), gpu_free_s: srv.gpu_free_s });
+        }
+    }
+
     fn handle_arrival(&mut self) {
         let a = self.trace.arrivals[self.next_arrival];
         self.next_arrival += 1;
-        for st in self.states.iter_mut() {
-            st.advance(a.t_s);
-        }
+        self.refresh_states(a.t_s);
         if !self.states.iter().any(|st| st.alive) {
             // The whole fleet is down: park until a recovery.
             self.unroutable.push_back(Pending::from_arrival(&a));
@@ -566,9 +658,7 @@ impl Engine<'_> {
     /// Hand a request back through the router at instant `t`, with its
     /// elapsed deadline budget preserved.
     fn reroute(&mut self, p: Pending, t: f64, reason: MigrationReason, from: Option<usize>) {
-        for st in self.states.iter_mut() {
-            st.advance(t);
-        }
+        self.refresh_states(t);
         if !self.states.iter().any(|st| st.alive) {
             self.migrations.push(MigrationRecord { id: p.id, from, to: None, t_s: t, reason });
             self.unroutable.push_back(p);
@@ -597,9 +687,7 @@ impl Engine<'_> {
     /// router may keep the request home — that is a local carry-over,
     /// not a migration (no record, no fresh virtual-queue charge).
     fn steal_hand_off(&mut self, p: Pending, t: f64, from: usize) {
-        for st in self.states.iter_mut() {
-            st.advance(t);
-        }
+        self.refresh_states(t);
         let reason = MigrationReason::StealWhenIdle;
         if !self.states.iter().any(|st| st.alive) {
             let record = MigrationRecord { id: p.id, from: Some(from), to: None, t_s: t, reason };
@@ -632,10 +720,12 @@ impl Engine<'_> {
 
     fn handle_server_event(&mut self, idx: usize) {
         let ready = match self.servers[idx].epoch.as_mut() {
-            Some(e) if !e.closed => {
+            Some(e) if !e.frozen() => {
                 // The epoch timer fired with no batch-fill: freeze
-                // membership at the scheduled close.
-                e.closed = true;
+                // membership at the scheduled close. The solve instant
+                // and batch start are fixed from here (`SolveTiming`).
+                let close = e.close_s;
+                e.freeze(close);
                 false
             }
             Some(_) => true,
@@ -647,12 +737,24 @@ impl Engine<'_> {
     }
 
     /// One frozen epoch's (P0) solve — simulate_dynamic's loop body,
-    /// op-for-op, against this server's speed-scaled delay model.
+    /// op-for-op, against this server's speed-scaled delay model. The
+    /// engine reaches this event at the epoch's *batch start*; the
+    /// solve itself ran during `[solve_begin, solve_end]` (overlapped
+    /// with the previous batch under the pipelined mode), so the plan
+    /// is evaluated against residual deadlines at the batch start —
+    /// the instant it targets.
     fn solve_server(&mut self, idx: usize) {
         let cfg = self.dynamic;
-        let e = self.servers[idx].epoch.take().expect("closed epoch to solve");
-        debug_assert!(e.closed);
-        let t0 = e.close_s.max(self.servers[idx].gpu_free_s);
+        let mut e = self.servers[idx].epoch.take().expect("frozen epoch to solve");
+        let timing = self.servers[idx].solve_timing(&e);
+        // Walk the remaining lifecycle explicitly: the solve finished
+        // (PlanPending → Solved) and the batch is now starting
+        // (Solved → Executing); it retires Closed once committed.
+        e.phase = e.phase.advance();
+        debug_assert_eq!(e.phase, EpochPhase::Solved);
+        e.phase = e.phase.advance();
+        debug_assert_eq!(e.phase, EpochPhase::Executing);
+        let t0 = timing.batch_start_s;
         let epoch_index = self.servers[idx].epochs.len();
         let queue_depth = e.queue.len();
         let scaled = self.servers[idx].delay;
@@ -697,8 +799,21 @@ impl Engine<'_> {
         }
 
         if admitted.is_empty() {
-            self.servers[idx].windows.prune(t0);
-            let rec = self.epoch_rec(idx, epoch_index, t0, queue_depth, 0, 0, 0, dropped_now, 0.0);
+            let w = &mut self.servers[idx].windows;
+            w.record_solve(t0, cfg.solve_latency_s, timing.hidden_s);
+            w.prune(t0);
+            let rec = self.epoch_rec(
+                idx,
+                epoch_index,
+                t0,
+                queue_depth,
+                0,
+                0,
+                0,
+                dropped_now,
+                0.0,
+                timing.hidden_s,
+            );
             self.servers[idx].epochs.push(rec);
             self.open_after_solve(idx, t0, Vec::new());
             return;
@@ -720,7 +835,8 @@ impl Engine<'_> {
             total_bandwidth_hz: self.trace.total_bandwidth_hz,
             content_bits: self.trace.content_bits,
         };
-        let sol = solve_joint(&workload, self.scheduler, self.allocator, &scaled, self.quality);
+        let sol =
+            solve_joint(&workload, self.scheduler, self.allocators[idx], &scaled, self.quality);
         let makespan = sol.outcome.schedule.makespan();
 
         // ---- resolve served requests; collect carry-overs ----
@@ -757,7 +873,9 @@ impl Engine<'_> {
 
         self.servers[idx].gpu_free_s = t0 + makespan;
         self.horizon = self.horizon.max(self.servers[idx].gpu_free_s);
-        self.servers[idx].windows.prune(t0);
+        let w = &mut self.servers[idx].windows;
+        w.record_solve(t0, cfg.solve_latency_s, timing.hidden_s);
+        w.prune(t0);
         let admitted_n = served_now + deferred.len();
         let rec = self.epoch_rec(
             idx,
@@ -769,6 +887,7 @@ impl Engine<'_> {
             deferred.len(),
             dropped_now,
             makespan,
+            timing.hidden_s,
         );
         self.servers[idx].epochs.push(rec);
 
@@ -801,7 +920,7 @@ impl Engine<'_> {
             let mut e = Epoch {
                 open_s: t0,
                 close_s: policy.close_deadline(t0),
-                closed: false,
+                phase: EpochPhase::Building,
                 queue: deferred,
             };
             while let Some(mut p) = s.backlog.pop_front() {
@@ -819,7 +938,7 @@ impl Engine<'_> {
         let mut e = Epoch {
             open_s: open,
             close_s: policy.close_deadline(open),
-            closed: false,
+            phase: EpochPhase::Building,
             queue: Vec::new(),
         };
         while let Some(p) = s.backlog.front().copied() {
@@ -833,23 +952,24 @@ impl Engine<'_> {
         // Later waiters replay the timed ingest loop: join up to the
         // close, with the batch rule possibly freezing the epoch early
         // (any leftovers then seed the epoch after next).
-        while !e.closed {
+        while !e.frozen() {
             let Some(p) = s.backlog.front().copied() else { break };
             if p.enqueued_s > e.close_s {
-                e.closed = true;
+                let close = e.close_s;
+                e.freeze(close);
                 break;
             }
             let mut p = s.backlog.pop_front().unwrap();
             ServerSim::note_arrival(&mut s.windows, &mut p);
             e.queue.push(p);
             if policy.should_close(e.queue.len(), p.enqueued_s - open) {
-                e.close_s = p.enqueued_s;
-                e.closed = true;
+                e.freeze(p.enqueued_s);
             }
         }
         s.epoch = Some(e);
     }
 
+    #[allow(clippy::too_many_arguments)]
     fn epoch_rec(
         &self,
         idx: usize,
@@ -861,6 +981,7 @@ impl Engine<'_> {
         deferred: usize,
         dropped: usize,
         makespan_s: f64,
+        solve_hidden_s: f64,
     ) -> EpochRecord {
         let w = &self.servers[idx].windows;
         EpochRecord {
@@ -872,12 +993,14 @@ impl Engine<'_> {
             deferred,
             dropped,
             makespan_s,
+            solve_hidden_s,
             arrival_rate_hz: w.arrivals.rate_hz(),
             mean_quality_w: w.quality.mean(),
             outage_rate_w: w.outage_rate(),
             p50_e2e_w: w.e2e_s.percentile(50.0),
             p95_e2e_w: w.e2e_s.percentile(95.0),
             p99_e2e_w: w.e2e_s.percentile(99.0),
+            solve_overlap_w: w.solve_overlap_fraction(),
         }
     }
 
@@ -971,14 +1094,16 @@ impl Engine<'_> {
     }
 }
 
-/// Run the fault-aware shared-clock cluster simulation of `trace`.
+/// Run the fault-aware shared-clock cluster simulation of `trace` with
+/// one shared allocator instance (the legacy entry point).
 ///
 /// `delay` is the reference (speed-1.0) batch-delay model; each server
 /// solves under `g(X)/speed`. With an empty [`FaultScript`] and
 /// [`MigrationPolicyKind::None`] this reproduces
 /// [`simulate_cluster`](super::simulate_cluster) bit-for-bit
-/// (stateless allocators; see the module docs for the warm-start
-/// caveat).
+/// (stateless allocators; per-server instances via
+/// [`simulate_event_cluster_pooled`] extend the bit-identity to
+/// warm-start PSO).
 pub fn simulate_event_cluster(
     trace: &ArrivalTrace,
     scheduler: &dyn BatchScheduler,
@@ -987,14 +1112,40 @@ pub fn simulate_event_cluster(
     quality: &dyn QualityModel,
     cfg: &EventClusterConfig,
 ) -> EventReport {
+    let allocators = vec![allocator; cfg.servers().max(1)];
+    run_event_cluster(trace, scheduler, allocators, delay, quality, cfg)
+}
+
+/// [`simulate_event_cluster`] with per-server allocator instances from
+/// an [`AllocatorPool`] — PSO warm-start state stays on its server.
+pub fn simulate_event_cluster_pooled(
+    trace: &ArrivalTrace,
+    scheduler: &dyn BatchScheduler,
+    pool: &AllocatorPool,
+    delay: &BatchDelayModel,
+    quality: &dyn QualityModel,
+    cfg: &EventClusterConfig,
+) -> EventReport {
+    run_event_cluster(trace, scheduler, pool.refs(cfg.servers().max(1)), delay, quality, cfg)
+}
+
+fn run_event_cluster(
+    trace: &ArrivalTrace,
+    scheduler: &dyn BatchScheduler,
+    allocators: Vec<&dyn Allocator>,
+    delay: &BatchDelayModel,
+    quality: &dyn QualityModel,
+    cfg: &EventClusterConfig,
+) -> EventReport {
     let n_servers = cfg.servers();
     assert!(n_servers >= 1, "cluster needs at least one server");
+    assert_eq!(allocators.len(), n_servers, "one allocator reference per server");
     cfg.faults.validate_servers(n_servers).expect("fault script must fit the fleet");
 
     let mut engine = Engine {
         trace,
         scheduler,
-        allocator,
+        allocators,
         delay,
         quality,
         dynamic: cfg.dynamic,
@@ -1009,7 +1160,7 @@ pub fn simulate_event_cluster(
             .speeds
             .iter()
             .enumerate()
-            .map(|(i, &speed)| ServerSim::new(i, speed, delay, cfg.dynamic.window_s))
+            .map(|(i, &speed)| ServerSim::new(i, speed, delay, &cfg.dynamic))
             .collect(),
         fault_events: cfg.faults.events(),
         next_fault: 0,
@@ -1251,5 +1402,103 @@ mod tests {
         assert!(report.outcomes.is_empty());
         assert_eq!(report.total_epochs(), 0);
         assert_eq!(report.mean_quality(), 0.0);
+    }
+
+    #[test]
+    fn zero_solve_latency_modes_match_bitwise_even_under_faults() {
+        let t = trace(5.0, 50.0, 3);
+        let script = FaultScript::random(3, 50.0, 20.0, 8.0, 11);
+        for policy in MigrationPolicyKind::all() {
+            let mut c = cfg(server_speeds(3, 0.5, 1.5), script.clone(), policy);
+            c.dynamic.solve_mode = SolveMode::Pipelined;
+            let pipelined = run(&t, &c);
+            c.dynamic.solve_mode = SolveMode::Synchronous;
+            let sync = run(&t, &c);
+            assert_eq!(pipelined.assignment, sync.assignment, "{}", policy.name());
+            for (a, b) in pipelined.outcomes.iter().zip(&sync.outcomes) {
+                assert_eq!(a.disposition, b.disposition, "{} request {}", policy.name(), a.id);
+                assert_eq!(a.resolved_s.to_bits(), b.resolved_s.to_bits(), "{}", policy.name());
+                assert_eq!(a.quality.to_bits(), b.quality.to_bits(), "{}", policy.name());
+            }
+            assert_eq!(pipelined.horizon_s.to_bits(), sync.horizon_s.to_bits());
+            assert_eq!(pipelined.solve_hidden_s(), 0.0, "nothing to hide at zero latency");
+        }
+    }
+
+    #[test]
+    fn pipelined_hides_solve_latency_and_beats_synchronous_under_load() {
+        let t = trace(10.0, 60.0, 9);
+        let mut c = cfg(vec![1.0, 1.0], FaultScript::empty(), MigrationPolicyKind::None);
+        c.dynamic.solve_latency_s = 0.3;
+        c.dynamic.solve_mode = SolveMode::Pipelined;
+        let pipelined = run(&t, &c);
+        c.dynamic.solve_mode = SolveMode::Synchronous;
+        let sync = run(&t, &c);
+        assert!(pipelined.solve_hidden_s() > 0.0, "overload must hide some solve time");
+        assert_eq!(sync.solve_hidden_s(), 0.0, "synchronous solves are never hidden");
+        assert!(
+            pipelined.mean_e2e_censored_s() < sync.mean_e2e_censored_s(),
+            "pipelined {} vs synchronous {}",
+            pipelined.mean_e2e_censored_s(),
+            sync.mean_e2e_censored_s()
+        );
+        // the per-window gauge surfaces the hiding on at least one server
+        let gauge_fired =
+            pipelined.servers.iter().any(|s| s.epochs.iter().any(|e| e.solve_overlap_w > 0.0));
+        assert!(gauge_fired, "the windowed overlap gauge must report the hiding");
+    }
+
+    #[test]
+    fn live_router_serves_conserves_and_replays() {
+        let t = trace(8.0, 50.0, 5);
+        let c = EventClusterConfig {
+            speeds: server_speeds(3, 0.5, 2.0),
+            router: RouterKind::LiveState,
+            dynamic: DynamicConfig::default(),
+            faults: FaultScript::empty(),
+            migration: MigrationPolicyKind::None,
+        };
+        let a = run(&t, &c);
+        assert_eq!(a.outcomes.len(), t.len());
+        assert_eq!(a.served() + a.dropped(), t.len());
+        assert!(a.assignment.iter().all(|&s| s < 3));
+        let b = run(&t, &c);
+        assert_eq!(a.assignment, b.assignment, "live routing must replay bit-identically");
+        assert_eq!(a.horizon_s.to_bits(), b.horizon_s.to_bits());
+    }
+
+    #[test]
+    fn pooled_per_server_allocators_replay_bitwise() {
+        use crate::bandwidth::{AllocatorPool, PsoAllocator, PsoConfig};
+        let t = trace(6.0, 40.0, 2);
+        let c = cfg(server_speeds(2, 0.8, 1.2), FaultScript::empty(), MigrationPolicyKind::None);
+        let fresh_pool = || {
+            AllocatorPool::per_server(2, |_| {
+                Box::new(PsoAllocator::new(PsoConfig {
+                    particles: 6,
+                    iterations: 6,
+                    patience: 3,
+                    warm_start: true,
+                    ..Default::default()
+                })) as Box<dyn crate::bandwidth::Allocator>
+            })
+        };
+        let run_pooled = |pool: &AllocatorPool| {
+            simulate_event_cluster_pooled(
+                &t,
+                &Stacking::default(),
+                pool,
+                &BatchDelayModel::paper(),
+                &PowerLawQuality::paper(),
+                &c,
+            )
+        };
+        let a = run_pooled(&fresh_pool());
+        let b = run_pooled(&fresh_pool());
+        for (x, y) in a.outcomes.iter().zip(&b.outcomes) {
+            assert_eq!(x.quality.to_bits(), y.quality.to_bits());
+            assert_eq!(x.resolved_s.to_bits(), y.resolved_s.to_bits());
+        }
+        assert_eq!(a.horizon_s.to_bits(), b.horizon_s.to_bits());
     }
 }

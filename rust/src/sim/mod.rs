@@ -8,13 +8,17 @@ pub mod dynamic;
 pub mod event;
 pub mod joint;
 
-pub use cluster::{server_speeds, simulate_cluster, ClusterConfig, ClusterReport, ServerReport};
+pub use cluster::{
+    server_speeds, simulate_cluster, simulate_cluster_pooled, ClusterConfig, ClusterReport,
+    ServerReport,
+};
 pub use dynamic::{
-    simulate_dynamic, Disposition, DynamicConfig, DynamicReport, EpochRecord, RequestOutcome,
+    censored_delays, mean_censored_delay, simulate_dynamic, Disposition, DynamicConfig,
+    DynamicReport, EpochRecord, RequestOutcome,
 };
 pub use event::{
-    simulate_event_cluster, EventClusterConfig, EventReport, EventServerReport, MigrationReason,
-    MigrationRecord, UNROUTED,
+    simulate_event_cluster, simulate_event_cluster_pooled, EventClusterConfig, EventReport,
+    EventServerReport, MigrationReason, MigrationRecord, UNROUTED,
 };
 pub use joint::{solve_joint, JointSolution};
 

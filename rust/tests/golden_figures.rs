@@ -232,6 +232,34 @@ fn golden_fig_faults_sweep() {
 }
 
 #[test]
+fn golden_fig_pipeline_sweep() {
+    // Seed-7 stream like the cluster fixture; a modest heterogeneous
+    // fleet across one zero and one nonzero solve latency, both modes
+    // and both fleet views.
+    let mut cfg = ExperimentConfig::paper();
+    cfg.seed = 7;
+    cfg.cluster.servers = 3;
+    cfg.cluster.speed_min = 0.5;
+    cfg.cluster.speed_max = 1.5;
+    cfg.arrival.rate_hz = 3.0;
+    cfg.arrival.burst_rate_hz = 10.0;
+    let rows = aigc_edge::bench::fig_pipeline(&cfg, &[0.0, 0.25], 40.0);
+    let mut flat = BTreeMap::new();
+    for r in rows {
+        let tag =
+            format!("solve{:04.2}.{}.{}", r.solve_latency_s, r.mode.name(), r.router.name());
+        flat.insert(format!("{tag}.requests"), r.requests as f64);
+        flat.insert(format!("{tag}.served"), r.served as f64);
+        flat.insert(format!("{tag}.mean_quality"), r.mean_quality);
+        flat.insert(format!("{tag}.outage_rate"), r.outage_rate);
+        flat.insert(format!("{tag}.mean_e2e_censored"), r.mean_e2e_censored_s);
+        flat.insert(format!("{tag}.p99_e2e_censored"), r.p99_e2e_censored_s);
+        flat.insert(format!("{tag}.solve_overlap"), r.solve_overlap);
+    }
+    check_or_bless("golden_fig_pipeline.json", &flat, 5e-3, 2e-3);
+}
+
+#[test]
 fn golden_fig3_dynamic_sweep() {
     let rows = aigc_edge::bench::fig3_dynamic(&ExperimentConfig::paper(), &[1.0, 4.0], 40.0);
     let mut flat = BTreeMap::new();

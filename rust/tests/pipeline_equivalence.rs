@@ -1,0 +1,317 @@
+//! Equivalence guard for the pipelined epoch lifecycle (ISSUE 4): with
+//! `solve_latency_s = 0`, the refactored engines must reproduce the
+//! pre-pipeline semantics **bit-for-bit** on the seed-7 stream — in
+//! both lifecycle modes, for every virtual-view router, on N = 1 and
+//! heterogeneous fleets, with faults off and on.
+//!
+//! Three identities are pinned:
+//! * pipelined ≡ synchronous inside the event engine at zero latency
+//!   (the lifecycle refactor moves no batch), including under fault
+//!   scripts and every migration policy;
+//! * the zero-fault event engine ≡ `simulate_cluster` ≡ (at N = 1)
+//!   `simulate_dynamic`, per request and per epoch record — and not
+//!   just at zero latency: the two engines share `SolveTiming`, so the
+//!   mirror holds at every (latency, mode) pair;
+//! * the live-state router is mode-invariant at zero latency too.
+
+use aigc_edge::bandwidth::EqualAllocator;
+use aigc_edge::config::{ArrivalProcessKind, ArrivalSettings, ExperimentConfig};
+use aigc_edge::coordinator::SolveMode;
+use aigc_edge::delay::BatchDelayModel;
+use aigc_edge::faults::{FaultScript, MigrationPolicyKind};
+use aigc_edge::quality::PowerLawQuality;
+use aigc_edge::routing::RouterKind;
+use aigc_edge::scheduler::Stacking;
+use aigc_edge::sim::{
+    server_speeds, simulate_cluster, simulate_dynamic, simulate_event_cluster, ClusterConfig,
+    DynamicConfig, EpochRecord, EventClusterConfig, EventReport, RequestOutcome,
+};
+use aigc_edge::trace::ArrivalTrace;
+
+fn seed7_trace(rate: f64, horizon: f64) -> ArrivalTrace {
+    let cfg = ExperimentConfig::paper();
+    let arrival = ArrivalSettings {
+        process: ArrivalProcessKind::Poisson,
+        rate_hz: rate,
+        burst_rate_hz: rate,
+        period_s: 60.0,
+        duty: 0.5,
+        horizon_s: horizon,
+        max_requests: 0,
+    };
+    ArrivalTrace::generate(&cfg.scenario, &arrival, 7)
+}
+
+fn run_event(trace: &ArrivalTrace, cfg: &EventClusterConfig) -> EventReport {
+    simulate_event_cluster(
+        trace,
+        &Stacking::default(),
+        &EqualAllocator,
+        &BatchDelayModel::paper(),
+        &PowerLawQuality::paper(),
+        cfg,
+    )
+}
+
+fn assert_outcomes_identical(tag: &str, a: &[RequestOutcome], b: &[RequestOutcome]) {
+    assert_eq!(a.len(), b.len(), "{tag}: outcome count");
+    for (x, y) in a.iter().zip(b) {
+        assert_eq!(x.id, y.id, "{tag}");
+        assert_eq!(x.disposition, y.disposition, "{tag} request {}", x.id);
+        assert_eq!(x.steps, y.steps, "{tag} request {}", x.id);
+        assert_eq!(x.deferrals, y.deferrals, "{tag} request {}", x.id);
+        assert_eq!(x.epoch, y.epoch, "{tag} request {}", x.id);
+        assert_eq!(x.met, y.met, "{tag} request {}", x.id);
+        assert_eq!(x.quality.to_bits(), y.quality.to_bits(), "{tag} request {}", x.id);
+        assert_eq!(x.e2e_s.to_bits(), y.e2e_s.to_bits(), "{tag} request {}", x.id);
+        assert_eq!(x.wait_s.to_bits(), y.wait_s.to_bits(), "{tag} request {}", x.id);
+        assert_eq!(x.resolved_s.to_bits(), y.resolved_s.to_bits(), "{tag} request {}", x.id);
+    }
+}
+
+fn assert_epochs_identical(tag: &str, a: &[EpochRecord], b: &[EpochRecord]) {
+    assert_eq!(a.len(), b.len(), "{tag}: epoch count");
+    for (x, y) in a.iter().zip(b) {
+        assert_eq!(x.index, y.index, "{tag}");
+        assert_eq!(x.t_solve_s.to_bits(), y.t_solve_s.to_bits(), "{tag} epoch {}", x.index);
+        assert_eq!(x.queue_depth, y.queue_depth, "{tag} epoch {}", x.index);
+        assert_eq!(x.admitted, y.admitted, "{tag} epoch {}", x.index);
+        assert_eq!(x.served, y.served, "{tag} epoch {}", x.index);
+        assert_eq!(x.deferred, y.deferred, "{tag} epoch {}", x.index);
+        assert_eq!(x.dropped, y.dropped, "{tag} epoch {}", x.index);
+        assert_eq!(x.makespan_s.to_bits(), y.makespan_s.to_bits(), "{tag} epoch {}", x.index);
+        assert_eq!(
+            x.solve_hidden_s.to_bits(),
+            y.solve_hidden_s.to_bits(),
+            "{tag} epoch {}",
+            x.index
+        );
+        assert_eq!(
+            x.solve_overlap_w.to_bits(),
+            y.solve_overlap_w.to_bits(),
+            "{tag} epoch {}",
+            x.index
+        );
+    }
+}
+
+fn event_cfg(
+    speeds: Vec<f64>,
+    router: RouterKind,
+    dynamic: DynamicConfig,
+    faults: FaultScript,
+    migration: MigrationPolicyKind,
+) -> EventClusterConfig {
+    EventClusterConfig { speeds, router, dynamic, faults, migration }
+}
+
+fn with_mode(mode: SolveMode, latency: f64) -> DynamicConfig {
+    DynamicConfig { solve_mode: mode, solve_latency_s: latency, ..DynamicConfig::default() }
+}
+
+/// Zero solve latency, zero faults: pipelined ≡ synchronous ≡ the
+/// sequential cluster, for every virtual-view router, on N = 1 and a
+/// heterogeneous fleet — the ISSUE 4 bit-identity criterion.
+#[test]
+fn seed7_zero_latency_all_routers_all_fleets() {
+    let trace = seed7_trace(6.0, 60.0);
+    for speeds in [vec![1.0], server_speeds(3, 0.5, 1.5)] {
+        for router in RouterKind::all() {
+            let tag = format!("{} x{}", router.name(), speeds.len());
+            let pipelined = run_event(
+                &trace,
+                &event_cfg(
+                    speeds.clone(),
+                    router,
+                    with_mode(SolveMode::Pipelined, 0.0),
+                    FaultScript::empty(),
+                    MigrationPolicyKind::None,
+                ),
+            );
+            let sync = run_event(
+                &trace,
+                &event_cfg(
+                    speeds.clone(),
+                    router,
+                    with_mode(SolveMode::Synchronous, 0.0),
+                    FaultScript::empty(),
+                    MigrationPolicyKind::None,
+                ),
+            );
+            assert_eq!(pipelined.assignment, sync.assignment, "{tag}");
+            assert_outcomes_identical(&tag, &pipelined.outcomes, &sync.outcomes);
+            assert_eq!(pipelined.horizon_s.to_bits(), sync.horizon_s.to_bits(), "{tag}");
+
+            // …and both match the pre-pipeline sequential cluster.
+            let cluster = ClusterConfig {
+                speeds: speeds.clone(),
+                router,
+                dynamic: DynamicConfig::default(),
+            };
+            let seq = simulate_cluster(
+                &trace,
+                &Stacking::default(),
+                &EqualAllocator,
+                &BatchDelayModel::paper(),
+                &PowerLawQuality::paper(),
+                &cluster,
+            );
+            assert_eq!(pipelined.assignment, seq.assignment, "{tag}");
+            assert_outcomes_identical(&tag, &pipelined.outcomes, &seq.outcomes);
+            assert_eq!(pipelined.horizon_s.to_bits(), seq.horizon_s.to_bits(), "{tag}");
+            for (srv_ev, srv_seq) in pipelined.servers.iter().zip(&seq.servers) {
+                let tag = format!("{tag} server {}", srv_ev.server);
+                assert_epochs_identical(&tag, &srv_ev.epochs, &srv_seq.report.epochs);
+            }
+        }
+    }
+}
+
+/// N = 1 at zero latency: the pipelined engine is bit-identical to
+/// `simulate_dynamic` itself, including epoch records.
+#[test]
+fn seed7_single_server_matches_simulate_dynamic() {
+    let trace = seed7_trace(6.0, 60.0);
+    for mode in SolveMode::all() {
+        let dynamic = with_mode(mode, 0.0);
+        let ev = run_event(
+            &trace,
+            &event_cfg(
+                vec![1.0],
+                RouterKind::RoundRobin,
+                dynamic,
+                FaultScript::empty(),
+                MigrationPolicyKind::None,
+            ),
+        );
+        let dy = simulate_dynamic(
+            &trace,
+            &Stacking::default(),
+            &EqualAllocator,
+            &BatchDelayModel::paper(),
+            &PowerLawQuality::paper(),
+            &dynamic,
+        );
+        let tag = format!("N=1 {}", mode.name());
+        assert_outcomes_identical(&tag, &ev.outcomes, &dy.outcomes);
+        assert_epochs_identical(&tag, &ev.servers[0].epochs, &dy.epochs);
+        assert_eq!(ev.horizon_s.to_bits(), dy.horizon_s.to_bits(), "{tag}");
+    }
+}
+
+/// Zero latency under failure injection: the lifecycle refactor must
+/// not move a single fault, migration or resolution in either mode —
+/// across scheduled and random scripts and every migration policy.
+#[test]
+fn seed7_zero_latency_with_faults_mode_invariant() {
+    let trace = seed7_trace(5.0, 60.0);
+    let scripts = [
+        FaultScript::random(3, 60.0, 25.0, 8.0, 11),
+        FaultScript::parse_spec("1:10:25,0:40:55").map(|d| FaultScript::scheduled(d).unwrap())
+            .unwrap(),
+    ];
+    for script in scripts {
+        for policy in MigrationPolicyKind::all() {
+            let tag = format!("faults {}", policy.name());
+            let pipelined = run_event(
+                &trace,
+                &event_cfg(
+                    server_speeds(3, 0.5, 1.5),
+                    RouterKind::JoinShortestQueue,
+                    with_mode(SolveMode::Pipelined, 0.0),
+                    script.clone(),
+                    policy,
+                ),
+            );
+            let sync = run_event(
+                &trace,
+                &event_cfg(
+                    server_speeds(3, 0.5, 1.5),
+                    RouterKind::JoinShortestQueue,
+                    with_mode(SolveMode::Synchronous, 0.0),
+                    script.clone(),
+                    policy,
+                ),
+            );
+            assert_eq!(pipelined.assignment, sync.assignment, "{tag}");
+            assert_outcomes_identical(&tag, &pipelined.outcomes, &sync.outcomes);
+            assert_eq!(pipelined.migrations.len(), sync.migrations.len(), "{tag}");
+            assert_eq!(pipelined.fault_log.len(), sync.fault_log.len(), "{tag}");
+            assert_eq!(pipelined.horizon_s.to_bits(), sync.horizon_s.to_bits(), "{tag}");
+        }
+    }
+}
+
+/// The live-state router is mode-invariant at zero latency too: both
+/// lifecycles publish identical live views at identical instants.
+#[test]
+fn seed7_zero_latency_live_router_mode_invariant() {
+    let trace = seed7_trace(6.0, 60.0);
+    let pipelined = run_event(
+        &trace,
+        &event_cfg(
+            server_speeds(3, 0.5, 1.5),
+            RouterKind::LiveState,
+            with_mode(SolveMode::Pipelined, 0.0),
+            FaultScript::empty(),
+            MigrationPolicyKind::None,
+        ),
+    );
+    let sync = run_event(
+        &trace,
+        &event_cfg(
+            server_speeds(3, 0.5, 1.5),
+            RouterKind::LiveState,
+            with_mode(SolveMode::Synchronous, 0.0),
+            FaultScript::empty(),
+            MigrationPolicyKind::None,
+        ),
+    );
+    assert_eq!(pipelined.assignment, sync.assignment, "live");
+    assert_outcomes_identical("live", &pipelined.outcomes, &sync.outcomes);
+    assert_eq!(pipelined.horizon_s.to_bits(), sync.horizon_s.to_bits());
+}
+
+/// The mirror contract extends past zero latency: the event engine and
+/// the sequential cluster share `SolveTiming`, so the zero-fault case
+/// stays bit-identical at every (latency, mode) pair — and so does
+/// `simulate_dynamic` at N = 1.
+#[test]
+fn seed7_nonzero_latency_engines_stay_mirrored() {
+    let trace = seed7_trace(6.0, 50.0);
+    for mode in SolveMode::all() {
+        for latency in [0.1, 0.35] {
+            let dynamic = with_mode(mode, latency);
+            for router in [RouterKind::JoinShortestQueue, RouterKind::QualityAware] {
+                let tag = format!("{} {} L={latency}", router.name(), mode.name());
+                let ev = run_event(
+                    &trace,
+                    &event_cfg(
+                        server_speeds(3, 0.5, 1.5),
+                        router,
+                        dynamic,
+                        FaultScript::empty(),
+                        MigrationPolicyKind::None,
+                    ),
+                );
+                let cluster =
+                    ClusterConfig { speeds: server_speeds(3, 0.5, 1.5), router, dynamic };
+                let seq = simulate_cluster(
+                    &trace,
+                    &Stacking::default(),
+                    &EqualAllocator,
+                    &BatchDelayModel::paper(),
+                    &PowerLawQuality::paper(),
+                    &cluster,
+                );
+                assert_eq!(ev.assignment, seq.assignment, "{tag}");
+                assert_outcomes_identical(&tag, &ev.outcomes, &seq.outcomes);
+                assert_eq!(ev.horizon_s.to_bits(), seq.horizon_s.to_bits(), "{tag}");
+                for (srv_ev, srv_seq) in ev.servers.iter().zip(&seq.servers) {
+                    let tag = format!("{tag} server {}", srv_ev.server);
+                    assert_epochs_identical(&tag, &srv_ev.epochs, &srv_seq.report.epochs);
+                }
+            }
+        }
+    }
+}
