@@ -105,12 +105,13 @@ fn main() {
         DownInterval::new(2, horizon_s / 2.0, horizon_s / 2.0 + 40.0).unwrap(),
     ])
     .unwrap();
+    let showdown_speeds = aigc_edge::sim::server_speeds(4, 0.5, 2.0);
     let run = |migration: MigrationPolicyKind| {
         let event_cfg = EventClusterConfig {
-            speeds: aigc_edge::sim::server_speeds(4, 0.5, 2.0),
+            speeds: &showdown_speeds,
             router: cfg.cluster.router,
             dynamic: (&cfg.dynamic).into(),
-            faults: script.clone(),
+            faults: &script,
             migration,
         };
         simulate_event_cluster(&trace, &scheduler, &allocator, &delay, &quality, &event_cfg)

@@ -1,0 +1,48 @@
+//! CI perf smoke for the parallel solve fabric (`util::exec`): runs
+//! the three tracked hot loops (per-epoch PSO solve, per-server
+//! cluster epochs, sweep cells) at threads = 1 vs auto.
+//!
+//! The **bit-identity assert is blocking** — a parallel output that
+//! diverges from serial is a determinism bug, never noise. The
+//! wall-clock numbers are emitted to `BENCH_pr5.json` (uploaded as a
+//! CI artifact) with a **soft** speedup threshold: shared CI runners
+//! can be throttled to one effective core, so a hard gate would flake.
+//! On a quiet ≥4-core machine (`aigc-edge perf`, full sizes) the PSO
+//! solve and the sweep each clear 2×.
+
+use aigc_edge::bench::perf::{bench_json, default_bench_path, run_perf, PerfOptions};
+use aigc_edge::config::ExperimentConfig;
+use aigc_edge::util::resolve_threads;
+
+fn main() {
+    let cfg = ExperimentConfig::paper();
+    let opts = PerfOptions { threads: 0, quick: true };
+    let auto = resolve_threads(opts.threads);
+    println!("perf_smoke: serial (1 thread) vs parallel ({auto} threads), quick sizes");
+    let rows = run_perf(&cfg, &opts);
+    for r in &rows {
+        println!(
+            "  {:<14} serial {:.4}s  parallel {:.4}s  speedup {:.2}x  bit-identical {}",
+            r.loop_name,
+            r.serial_s,
+            r.parallel_s,
+            r.speedup(),
+            r.bit_identical
+        );
+        // BLOCKING: the fabric's whole contract is bitwise replay.
+        assert!(r.bit_identical, "{}: parallel output diverged from serial", r.loop_name);
+        // SOFT: report, don't gate — runner capacity varies.
+        if auto >= 4 && r.speedup() < 1.2 {
+            println!(
+                "  warning: {} speedup {:.2}x < 1.2x at {auto} threads (shared runner?)",
+                r.loop_name,
+                r.speedup()
+            );
+        }
+    }
+    let path = default_bench_path();
+    std::fs::write(&path, bench_json(&rows, &opts))
+        .unwrap_or_else(|e| panic!("writing {}: {e}", path.display()));
+    println!("perf_smoke: wrote {}", path.display());
+    println!("perf_smoke OK — parallel ≡ serial bitwise on all {} tracked loops", rows.len());
+}

@@ -46,7 +46,12 @@ impl AllocationProblem {
 /// (mean quality after the inner batch-denoising solve) is evaluated by
 /// the caller-provided closure so allocators stay decoupled from the
 /// scheduler.
-pub trait Allocator {
+///
+/// `Send + Sync` is a supertrait: the engines fan independent solves
+/// out across threads (`util::exec`), so allocator instances must be
+/// shareable. Every implementation in-tree is plain data or guards its
+/// state behind a `Mutex` (PSO warm start).
+pub trait Allocator: Send + Sync {
     fn name(&self) -> &'static str;
 
     /// Produce an allocation (Hz per device). Implementations must
@@ -56,6 +61,40 @@ pub trait Allocator {
         problem: &AllocationProblem,
         objective: &mut dyn FnMut(&[f64]) -> f64,
     ) -> Vec<f64>;
+
+    /// Parallel-capable entry point: the objective is a pure `Fn`, so
+    /// implementations may evaluate candidate allocations concurrently
+    /// (PSO fans its particle fitness out through `util::exec`; the
+    /// result is bit-identical to the serial path at any thread
+    /// count). The default falls back to [`Self::allocate`].
+    fn allocate_par(
+        &self,
+        problem: &AllocationProblem,
+        objective: &(dyn Fn(&[f64]) -> f64 + Sync),
+    ) -> Vec<f64> {
+        self.allocate(problem, &mut |b| objective(b))
+    }
+
+    /// True when concurrent solves on *one instance* cannot observe
+    /// each other — i.e. `allocate` reads no carried state. The
+    /// engines only fan per-server solves out in parallel when every
+    /// involved allocator is replay-safe or the instances are pairwise
+    /// distinct; otherwise they fall back to the serial solve order so
+    /// stateful sharing (legacy shared warm-start PSO) replays exactly.
+    fn parallel_replay_safe(&self) -> bool {
+        true
+    }
+}
+
+/// True when every allocator reference points at a distinct instance —
+/// per-server solves touching distinct (even stateful) instances can
+/// run concurrently without changing any per-server solve sequence.
+pub fn distinct_instances(allocators: &[&dyn Allocator]) -> bool {
+    let mut ptrs: Vec<*const ()> =
+        allocators.iter().map(|a| *a as *const dyn Allocator as *const ()).collect();
+    ptrs.sort();
+    ptrs.dedup();
+    ptrs.len() == allocators.len()
 }
 
 /// Per-server allocator instances for the cluster engines.
@@ -258,6 +297,26 @@ mod tests {
         let cold = PsoAllocator::new(PsoConfig { warm_start: true, ..Default::default() })
             .allocate(&p, &mut obj);
         assert_eq!(first_on_1, cold, "server 1's allocator must still be cold");
+    }
+
+    #[test]
+    fn replay_safety_and_instance_distinctness() {
+        // Stateless allocators are always safe to solve concurrently.
+        assert!(EqualAllocator.parallel_replay_safe());
+        assert!(ProportionalAllocator.parallel_replay_safe());
+        assert!(PsoAllocator::default().parallel_replay_safe());
+        // Warm-start PSO carries swarm state across solves on one
+        // instance — concurrent solves on it would be order-dependent.
+        let warm = PsoAllocator::new(PsoConfig { warm_start: true, ..Default::default() });
+        assert!(!warm.parallel_replay_safe());
+        // Distinct instances are fine even when stateful.
+        let pool = AllocatorPool::per_server(3, |_| {
+            Box::new(PsoAllocator::new(PsoConfig { warm_start: true, ..Default::default() }))
+        });
+        assert!(distinct_instances(&pool.refs(3)));
+        let shared = AllocatorPool::shared(Box::new(EqualAllocator));
+        assert!(!distinct_instances(&shared.refs(3)));
+        assert!(distinct_instances(&shared.refs(1)));
     }
 
     #[test]

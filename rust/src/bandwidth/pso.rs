@@ -6,11 +6,31 @@
 //! move. The objective (the inner (P2) solve) is expensive, so the
 //! swarm is deliberately small and the iteration budget explicit; both
 //! are ablated in `benches/ablations.rs`.
+//!
+//! **Deterministic parallel fitness.** The swarm uses a *synchronous*
+//! update discipline: every particle draws its velocity randomness from
+//! its **own** PCG stream (`seed`, stream `0x50_50 + p`), positions for
+//! iteration *n* are fixed before any of iteration *n*'s objective
+//! evaluations run, and personal/global bests are folded in ascending
+//! particle order once all evaluations return. Evaluation order
+//! therefore cannot influence the trajectory, so fanning the fitness
+//! evaluations out across threads (`PsoConfig::threads`, via
+//! [`crate::util::exec::par_map`]) is **bit-identical** to the serial
+//! loop at any thread count — pinned by `tests/exec_determinism.rs`.
+//! (The classic asynchronous variant, which updates the global best
+//! mid-sweep, serializes every evaluation behind the previous one and
+//! cannot be parallelized without changing its results.)
+//!
+//! **Zero-alloc hot path.** Position/velocity/best buffers live in a
+//! per-allocator scratch reused across `allocate` calls (epochs), so a
+//! steady-state solve allocates O(1) amortized — pinned by
+//! `tests/hotpath_alloc.rs`.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
+use crate::util::exec::{par_map, resolve_threads};
 use crate::util::Pcg64;
 
 use super::{project_to_simplex, AllocationProblem, Allocator};
@@ -27,17 +47,38 @@ impl ObjectiveCache {
         Self { quantum, map: HashMap::new(), hits: 0 }
     }
 
+    fn disabled(&self) -> bool {
+        self.quantum <= 0.0
+    }
+
+    fn key(&self, pos: &[f64]) -> Vec<u64> {
+        pos.iter().map(|&b| (b / self.quantum).round() as u64).collect()
+    }
+
+    fn get(&mut self, key: &[u64]) -> Option<f64> {
+        match self.map.get(key) {
+            Some(&v) => {
+                self.hits += 1;
+                Some(v)
+            }
+            None => None,
+        }
+    }
+
+    fn insert(&mut self, key: Vec<u64>, v: f64) {
+        self.map.insert(key, v);
+    }
+
     fn eval(&mut self, pos: &[f64], objective: &mut dyn FnMut(&[f64]) -> f64) -> f64 {
-        if self.quantum <= 0.0 {
+        if self.disabled() {
             return objective(pos);
         }
-        let key: Vec<u64> = pos.iter().map(|&b| (b / self.quantum).round() as u64).collect();
-        if let Some(&v) = self.map.get(&key) {
-            self.hits += 1;
+        let key = self.key(pos);
+        if let Some(v) = self.get(&key) {
             return v;
         }
         let v = objective(pos);
-        self.map.insert(key, v);
+        self.insert(key, v);
         v
     }
 }
@@ -75,6 +116,14 @@ pub struct PsoConfig {
     /// per-solve dominance over [`super::EqualAllocator`] is unaffected
     /// (exercised under dynamics by `tests/pso_dynamics.rs`).
     pub warm_start: bool,
+    /// Fitness-evaluation fan-out: worker threads for the per-iteration
+    /// objective evaluations (0 = auto from `available_parallelism`,
+    /// 1 = serial). Any value yields bit-identical allocations — the
+    /// swarm update is evaluation-order-free by construction — so this
+    /// is a pure performance knob. Parallelism engages only through
+    /// [`Allocator::allocate_par`] (the objective must be `Sync`); the
+    /// `FnMut` entry point always runs serially.
+    pub threads: usize,
 }
 
 impl Default for PsoConfig {
@@ -89,6 +138,7 @@ impl Default for PsoConfig {
             patience: 12,
             cache_quantum_hz: 0.0, // measured: <1% hit rate on converging swarms — off
             warm_start: false,
+            threads: 1,
         }
     }
 }
@@ -102,6 +152,13 @@ pub struct PsoAllocator {
     warm: Mutex<Option<Vec<f64>>>,
     /// How many `allocate` calls actually seeded a warm particle.
     warm_uses: AtomicUsize,
+    /// Reusable swarm buffers (positions/velocities/bests/streams),
+    /// carried across `allocate` calls so steady-state epoch solves
+    /// stop allocating. Pure cache: contents are fully re-initialized
+    /// per solve, so reuse never changes a result. `None` while a
+    /// solve on another thread has the buffers checked out (that solve
+    /// builds fresh ones).
+    scratch: Mutex<Option<Swarm>>,
 }
 
 impl Default for PsoAllocator {
@@ -116,13 +173,19 @@ impl Clone for PsoAllocator {
             config: self.config,
             warm: Mutex::new(self.warm.lock().unwrap().clone()),
             warm_uses: AtomicUsize::new(self.warm_uses.load(Ordering::Relaxed)),
+            scratch: Mutex::new(None),
         }
     }
 }
 
 impl PsoAllocator {
     pub fn new(config: PsoConfig) -> Self {
-        Self { config, warm: Mutex::new(None), warm_uses: AtomicUsize::new(0) }
+        Self {
+            config,
+            warm: Mutex::new(None),
+            warm_uses: AtomicUsize::new(0),
+            scratch: Mutex::new(None),
+        }
     }
 
     /// Number of solves that seeded a particle from the previous epoch.
@@ -156,6 +219,7 @@ impl PsoAllocator {
     }
 }
 
+#[derive(Debug)]
 struct Particle {
     pos: Vec<f64>,
     vel: Vec<f64>,
@@ -163,21 +227,121 @@ struct Particle {
     best_val: f64,
 }
 
-impl Allocator for PsoAllocator {
-    fn name(&self) -> &'static str {
-        "pso"
-    }
+/// Reusable per-solve swarm state (see `PsoAllocator::scratch`).
+#[derive(Debug, Default)]
+struct Swarm {
+    particles: Vec<Particle>,
+    /// Objective value per particle for the current round.
+    vals: Vec<f64>,
+    /// One independent PCG stream per particle.
+    rngs: Vec<Pcg64>,
+    global_best_pos: Vec<f64>,
+}
 
-    fn allocate(
-        &self,
-        problem: &AllocationProblem,
-        objective: &mut dyn FnMut(&[f64]) -> f64,
-    ) -> Vec<f64> {
+impl Swarm {
+    /// Size the buffers for `n` particles over `k` dimensions. Every
+    /// slot is overwritten by `init_positions`, so stale contents from
+    /// a previous solve can never leak.
+    fn reset(&mut self, n: usize, k: usize, seed: u64) {
+        self.particles.truncate(n);
+        while self.particles.len() < n {
+            self.particles.push(Particle {
+                pos: Vec::new(),
+                vel: Vec::new(),
+                best_pos: Vec::new(),
+                best_val: f64::INFINITY,
+            });
+        }
+        for p in self.particles.iter_mut() {
+            p.best_val = f64::INFINITY;
+        }
+        self.rngs.clear();
+        self.rngs.extend((0..n).map(|p| Pcg64::new(seed, 0x50_50 + p as u64)));
+        self.vals.clear();
+        self.global_best_pos.clear();
+        self.global_best_pos.resize(k, 0.0);
+    }
+}
+
+/// How the swarm evaluates a round of candidate positions. Both paths
+/// produce bitwise-identical value vectors: the serial path maps in
+/// particle order, the parallel path replays the serial cache
+/// semantics (first occurrence of a quantized key evaluates; later
+/// ones reuse it) and fans only the fresh evaluations out.
+enum Objective<'a> {
+    Serial(&'a mut dyn FnMut(&[f64]) -> f64),
+    Parallel { f: &'a (dyn Fn(&[f64]) -> f64 + Sync), threads: usize },
+}
+
+impl Objective<'_> {
+    fn eval_all(
+        &mut self,
+        cache: &mut ObjectiveCache,
+        particles: &[Particle],
+        vals: &mut Vec<f64>,
+    ) {
+        vals.clear();
+        match self {
+            Objective::Serial(f) => {
+                for part in particles {
+                    let v = cache.eval(&part.pos, &mut **f);
+                    vals.push(v);
+                }
+            }
+            Objective::Parallel { f, threads } => {
+                let f: &(dyn Fn(&[f64]) -> f64 + Sync) = *f;
+                let threads = *threads;
+                if cache.disabled() {
+                    vals.extend(par_map(threads, particles, |_, part| f(&part.pos)));
+                    return;
+                }
+                enum Plan {
+                    Cached(f64),
+                    Fresh(usize),
+                }
+                let mut plan: Vec<Plan> = Vec::with_capacity(particles.len());
+                let mut fresh: Vec<usize> = Vec::new();
+                let mut keys: Vec<Vec<u64>> = Vec::new();
+                for (i, part) in particles.iter().enumerate() {
+                    let key = cache.key(&part.pos);
+                    if let Some(v) = cache.get(&key) {
+                        plan.push(Plan::Cached(v));
+                    } else if let Some(j) = keys.iter().position(|k| *k == key) {
+                        // Same key seen earlier this round: the serial
+                        // loop would hit the entry that evaluation
+                        // inserted.
+                        cache.hits += 1;
+                        plan.push(Plan::Fresh(j));
+                    } else {
+                        plan.push(Plan::Fresh(fresh.len()));
+                        fresh.push(i);
+                        keys.push(key);
+                    }
+                }
+                let results = par_map(threads, &fresh, |_, &pi| f(&particles[pi].pos));
+                for (key, &v) in keys.into_iter().zip(&results) {
+                    cache.insert(key, v);
+                }
+                for p in plan {
+                    vals.push(match p {
+                        Plan::Cached(v) => v,
+                        Plan::Fresh(j) => results[j],
+                    });
+                }
+            }
+        }
+    }
+}
+
+impl PsoAllocator {
+    /// The synchronous-update PSO core shared by both `Allocator` entry
+    /// points (see the module docs for why it is evaluation-order-free).
+    fn solve(&self, problem: &AllocationProblem, objective: &mut Objective) -> Vec<f64> {
         let cfg = self.config;
         let k = problem.k();
         let total = problem.total_hz;
         let min_hz = problem.min_hz;
-        let mut rng = Pcg64::new(cfg.seed, 0x50_50);
+        let n = cfg.particles.max(1);
         let mut cache = ObjectiveCache::new(cfg.cache_quantum_hz);
 
         // Warm start (off by default): particle 1 resumes from the last
@@ -192,57 +356,77 @@ impl Allocator for PsoAllocator {
             self.warm_uses.fetch_add(1, Ordering::Relaxed);
         }
 
+        let mut swarm = self.scratch.lock().unwrap().take().unwrap_or_default();
+        swarm.reset(n, k, cfg.seed);
+        let Swarm { particles, vals, rngs, global_best_pos } = &mut swarm;
+
         // ---- initialize swarm ----
-        // Particle 0 starts at the equal split (a strong prior: it is the
-        // paper's baseline), the rest at random simplex points.
-        let mut particles: Vec<Particle> = Vec::with_capacity(cfg.particles);
-        let mut global_best_pos = vec![total / k as f64; k];
-        let mut global_best_val = f64::INFINITY;
-        for p in 0..cfg.particles.max(1) {
-            let mut pos = if p == 0 {
-                vec![total / k as f64; k]
+        // Particle 0 starts at the equal split (a strong prior: it is
+        // the paper's baseline), particle 1 at the warm position when
+        // carried, the rest at random simplex points from their own
+        // streams.
+        for (p, part) in particles.iter_mut().enumerate() {
+            part.pos.clear();
+            if p == 0 {
+                part.pos.resize(k, total / k as f64);
             } else if p == 1 && warm_pos.is_some() {
-                warm_pos.clone().unwrap()
+                part.pos.extend_from_slice(warm_pos.as_deref().unwrap());
             } else {
                 // exponential draws normalized → uniform on the simplex
-                let raw: Vec<f64> = (0..k).map(|_| rng.exponential(1.0)).collect();
-                let sum: f64 = raw.iter().sum();
-                raw.into_iter().map(|r| r / sum * total).collect()
-            };
-            project_to_simplex(&mut pos, total, min_hz);
-            let vel = vec![0.0; k];
-            let val = cache.eval(&pos, objective);
+                let rng = &mut rngs[p];
+                for _ in 0..k {
+                    part.pos.push(rng.exponential(1.0));
+                }
+                let sum: f64 = part.pos.iter().sum();
+                for v in part.pos.iter_mut() {
+                    *v = *v / sum * total;
+                }
+            }
+            project_to_simplex(&mut part.pos, total, min_hz);
+            part.vel.clear();
+            part.vel.resize(k, 0.0);
+        }
+        for v in global_best_pos.iter_mut() {
+            *v = total / k as f64;
+        }
+        let mut global_best_val = f64::INFINITY;
+        objective.eval_all(&mut cache, particles, vals);
+        for (part, &val) in particles.iter_mut().zip(vals.iter()) {
+            part.best_pos.clone_from(&part.pos);
+            part.best_val = val;
             if val < global_best_val {
                 global_best_val = val;
-                global_best_pos.clone_from(&pos);
+                global_best_pos.clone_from(&part.pos);
             }
-            particles.push(Particle { best_pos: pos.clone(), best_val: val, pos, vel });
         }
 
         // ---- iterate ----
         let vel_cap = 0.25 * total; // per-dimension velocity clamp
         let mut stall = 0usize;
         for _ in 0..cfg.iterations {
-            let mut improved = false;
-            for p in particles.iter_mut() {
+            for (p, part) in particles.iter_mut().enumerate() {
+                let rng = &mut rngs[p];
                 for d in 0..k {
                     let r1 = rng.uniform();
                     let r2 = rng.uniform();
-                    let v = cfg.inertia * p.vel[d]
-                        + cfg.cognitive * r1 * (p.best_pos[d] - p.pos[d])
-                        + cfg.social * r2 * (global_best_pos[d] - p.pos[d]);
-                    p.vel[d] = v.clamp(-vel_cap, vel_cap);
-                    p.pos[d] += p.vel[d];
+                    let v = cfg.inertia * part.vel[d]
+                        + cfg.cognitive * r1 * (part.best_pos[d] - part.pos[d])
+                        + cfg.social * r2 * (global_best_pos[d] - part.pos[d]);
+                    part.vel[d] = v.clamp(-vel_cap, vel_cap);
+                    part.pos[d] += part.vel[d];
                 }
-                project_to_simplex(&mut p.pos, total, min_hz);
-                let val = cache.eval(&p.pos, objective);
-                if val < p.best_val {
-                    p.best_val = val;
-                    p.best_pos.clone_from(&p.pos);
+                project_to_simplex(&mut part.pos, total, min_hz);
+            }
+            objective.eval_all(&mut cache, particles, vals);
+            let mut improved = false;
+            for (part, &val) in particles.iter_mut().zip(vals.iter()) {
+                if val < part.best_val {
+                    part.best_val = val;
+                    part.best_pos.clone_from(&part.pos);
                 }
                 if val < global_best_val {
                     global_best_val = val;
-                    global_best_pos.clone_from(&p.pos);
+                    global_best_pos.clone_from(&part.pos);
                     improved = true;
                 }
             }
@@ -259,7 +443,39 @@ impl Allocator for PsoAllocator {
             let fractions: Vec<f64> = global_best_pos.iter().map(|&b| b / total).collect();
             *self.warm.lock().unwrap() = Some(fractions);
         }
-        global_best_pos
+        let best = global_best_pos.clone();
+        *self.scratch.lock().unwrap() = Some(swarm);
+        best
+    }
+}
+
+impl Allocator for PsoAllocator {
+    fn name(&self) -> &'static str {
+        "pso"
+    }
+
+    fn allocate(
+        &self,
+        problem: &AllocationProblem,
+        objective: &mut dyn FnMut(&[f64]) -> f64,
+    ) -> Vec<f64> {
+        self.solve(problem, &mut Objective::Serial(objective))
+    }
+
+    fn allocate_par(
+        &self,
+        problem: &AllocationProblem,
+        objective: &(dyn Fn(&[f64]) -> f64 + Sync),
+    ) -> Vec<f64> {
+        if resolve_threads(self.config.threads) <= 1 {
+            return self.solve(problem, &mut Objective::Serial(&mut |b| objective(b)));
+        }
+        let threads = self.config.threads;
+        self.solve(problem, &mut Objective::Parallel { f: objective, threads })
+    }
+
+    fn parallel_replay_safe(&self) -> bool {
+        !self.config.warm_start
     }
 }
 
@@ -335,6 +551,38 @@ mod tests {
     }
 
     #[test]
+    fn parallel_fitness_is_bit_identical_to_serial() {
+        let p = problem(7);
+        let obj = |b: &[f64]| -> f64 { b.iter().map(|x| (x - 2_000.0).abs().sqrt()).sum() };
+        let serial = PsoAllocator::default().allocate(&p, &mut |b| obj(b));
+        for threads in [0, 2, 8] {
+            let cfg = PsoConfig { threads, ..Default::default() };
+            let par = PsoAllocator::new(cfg).allocate_par(&p, &obj);
+            let a: Vec<u64> = serial.iter().map(|v| v.to_bits()).collect();
+            let b: Vec<u64> = par.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(a, b, "threads={threads}");
+        }
+        // the FnMut entry point matches allocate_par at threads=1 too
+        let one = PsoAllocator::new(PsoConfig { threads: 1, ..Default::default() })
+            .allocate_par(&p, &obj);
+        assert_eq!(serial, one);
+    }
+
+    #[test]
+    fn parallel_fitness_with_cache_matches_serial_cache_semantics() {
+        // A coarse quantum forces key collisions, exercising the
+        // dedupe-then-fan-out replay of the serial memo.
+        let p = problem(5);
+        let cfg = PsoConfig { cache_quantum_hz: 500.0, ..Default::default() };
+        let obj = |b: &[f64]| -> f64 { b.iter().map(|x| x * x).sum() };
+        let serial = PsoAllocator::new(cfg).allocate(&p, &mut |b| obj(b));
+        let par = PsoAllocator::new(PsoConfig { threads: 4, ..cfg }).allocate_par(&p, &obj);
+        let a: Vec<u64> = serial.iter().map(|v| v.to_bits()).collect();
+        let b: Vec<u64> = par.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(a, b);
+    }
+
+    #[test]
     fn warm_start_off_keeps_allocate_stateless() {
         let p = problem(5);
         let alloc = PsoAllocator::default();
@@ -343,6 +591,21 @@ mod tests {
         let b = alloc.allocate(&p, &mut obj);
         assert_eq!(a, b, "without warm_start repeated solves must be identical");
         assert_eq!(alloc.warm_starts(), 0);
+    }
+
+    #[test]
+    fn scratch_reuse_never_leaks_across_problem_shapes() {
+        // Same instance solving K=6 then K=3 then K=6 again: buffer
+        // reuse across different dimensionalities must not perturb the
+        // result (the K=6 answers must match a fresh allocator's).
+        let alloc = PsoAllocator::default();
+        let mut obj = |b: &[f64]| b.iter().map(|x| (x - 4_000.0).abs()).sum::<f64>();
+        let first = alloc.allocate(&problem(6), &mut obj);
+        alloc.allocate(&problem(3), &mut obj);
+        let again = alloc.allocate(&problem(6), &mut obj);
+        assert_eq!(first, again);
+        let fresh = PsoAllocator::default().allocate(&problem(6), &mut obj);
+        assert_eq!(first, fresh);
     }
 
     #[test]

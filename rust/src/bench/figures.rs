@@ -5,7 +5,7 @@ use crate::bandwidth::{Allocator, EqualAllocator, PsoAllocator, PsoConfig};
 use crate::config::ExperimentConfig;
 use crate::coordinator::{profile_batch_delay, ProfileConfig, SolveMode};
 use crate::delay::BatchDelayModel;
-use crate::faults::{FaultScript, MigrationPolicyKind};
+use crate::faults::{FaultScript, MigrationPolicyKind, NO_FAULTS};
 use crate::quality::{PowerLawQuality, QualityModel, TableQuality};
 use crate::routing::RouterKind;
 use crate::runtime::ArtifactStore;
@@ -17,6 +17,7 @@ use crate::sim::{
     ClusterConfig, DynamicConfig, EventClusterConfig,
 };
 use crate::trace::{generate, sweeps, ArrivalTrace};
+use crate::util::exec::par_map;
 use crate::util::fit_power_law;
 
 use super::TableWriter;
@@ -164,8 +165,7 @@ pub fn fig1b(cfg: &ExperimentConfig) -> Vec<(u32, f64, f64)> {
 
 /// Rows: (service, deadline, gen done, tx delay, e2e, steps).
 pub fn fig2a(cfg: &ExperimentConfig) -> Vec<(usize, f64, f64, f64, f64, u32)> {
-    let mut scenario = cfg.scenario.clone();
-    scenario.num_services = 10;
+    let scenario = sweeps::with_num_services(&cfg.scenario, 10);
     let workload = generate(&scenario, cfg.seed);
     let delay = BatchDelayModel::new(cfg.delay.a, cfg.delay.b);
     let quality = PowerLawQuality::paper();
@@ -211,27 +211,32 @@ pub fn fig2a(cfg: &ExperimentConfig) -> Vec<(usize, f64, f64, f64, f64, u32)> {
 // Fig. 2b — mean FID vs number of services
 // ---------------------------------------------------------------------------
 
-/// Rows: (K, [per-scheme mean FID in `schemes()` order]).
+/// Rows: (K, [per-scheme mean FID in `schemes()` order]). The K ×
+/// scheme cells are independent (each builds its own allocator), so
+/// they fan out across `cfg.perf.threads` — rows are assembled in cell
+/// order, bit-identical to the serial sweep.
 pub fn fig2b(cfg: &ExperimentConfig, ks: &[usize], reps: usize) -> Vec<(usize, Vec<f64>)> {
     let delay = BatchDelayModel::new(cfg.delay.a, cfg.delay.b);
     let quality = PowerLawQuality::paper();
     let schemes = schemes();
+    let cells: Vec<(usize, usize)> =
+        ks.iter().flat_map(|&k| (0..schemes.len()).map(move |si| (k, si))).collect();
+    let vals = par_map(cfg.perf.threads, &cells, |_, &(k, si)| {
+        let scenario = sweeps::with_num_services(&cfg.scenario, k);
+        scheme_mean_quality(&schemes[si], cfg, &scenario, &quality, &delay, reps)
+    });
     let mut headers: Vec<&str> = vec!["K"];
     headers.extend(schemes.iter().map(|s| s.name));
     let mut table = TableWriter::new("Fig. 2b — mean FID vs number of services", &headers)
         .with_csv("fig2b_service_sweep");
     let mut rows = Vec::new();
-    for &k in ks {
-        let scenario = sweeps::with_num_services(&cfg.scenario, k);
+    for (ki, &k) in ks.iter().enumerate() {
+        let row_vals: Vec<f64> =
+            (0..schemes.len()).map(|si| vals[ki * schemes.len() + si]).collect();
         let mut cells = vec![k.to_string()];
-        let mut vals = Vec::new();
-        for scheme in &schemes {
-            let q = scheme_mean_quality(scheme, cfg, &scenario, &quality, &delay, reps);
-            cells.push(format!("{q:.2}"));
-            vals.push(q);
-        }
+        cells.extend(row_vals.iter().map(|q| format!("{q:.2}")));
         table.row(&cells);
-        rows.push((k, vals));
+        rows.push((k, row_vals));
     }
     table.finish();
     rows
@@ -241,11 +246,17 @@ pub fn fig2b(cfg: &ExperimentConfig, ks: &[usize], reps: usize) -> Vec<(usize, V
 // Fig. 2c — mean FID vs minimum delay requirement (τmax = 20 s, K = 20)
 // ---------------------------------------------------------------------------
 
-/// Rows: (τmin, [per-scheme mean FID]).
+/// Rows: (τmin, [per-scheme mean FID]). Cells fan out like `fig2b`.
 pub fn fig2c(cfg: &ExperimentConfig, taus: &[f64], reps: usize) -> Vec<(f64, Vec<f64>)> {
     let delay = BatchDelayModel::new(cfg.delay.a, cfg.delay.b);
     let quality = PowerLawQuality::paper();
     let schemes = schemes();
+    let cells: Vec<(f64, usize)> =
+        taus.iter().flat_map(|&tau| (0..schemes.len()).map(move |si| (tau, si))).collect();
+    let vals = par_map(cfg.perf.threads, &cells, |_, &(tau, si)| {
+        let scenario = sweeps::with_min_deadline(&cfg.scenario, tau);
+        scheme_mean_quality(&schemes[si], cfg, &scenario, &quality, &delay, reps)
+    });
     let mut headers: Vec<&str> = vec!["tau_min"];
     headers.extend(schemes.iter().map(|s| s.name));
     let mut table = TableWriter::new(
@@ -254,17 +265,13 @@ pub fn fig2c(cfg: &ExperimentConfig, taus: &[f64], reps: usize) -> Vec<(f64, Vec
     )
     .with_csv("fig2c_min_delay");
     let mut rows = Vec::new();
-    for &tau in taus {
-        let scenario = sweeps::with_min_deadline(&cfg.scenario, tau);
+    for (ti, &tau) in taus.iter().enumerate() {
+        let row_vals: Vec<f64> =
+            (0..schemes.len()).map(|si| vals[ti * schemes.len() + si]).collect();
         let mut cells = vec![format!("{tau:.0}")];
-        let mut vals = Vec::new();
-        for scheme in &schemes {
-            let q = scheme_mean_quality(scheme, cfg, &scenario, &quality, &delay, reps);
-            cells.push(format!("{q:.2}"));
-            vals.push(q);
-        }
+        cells.extend(row_vals.iter().map(|q| format!("{q:.2}")));
         table.row(&cells);
-        rows.push((tau, vals));
+        rows.push((tau, row_vals));
     }
     table.finish();
     rows
@@ -306,15 +313,16 @@ pub fn fig3_dynamic(cfg: &ExperimentConfig, lambdas: &[f64], horizon_s: f64) -> 
         ],
     )
     .with_csv("fig3_dynamic");
-    let mut rows = Vec::new();
-    for &lambda in lambdas {
+    // Each λ is an independent seeded run — the sweep fans out across
+    // `cfg.perf.threads`, rows assembled in λ order.
+    let rows: Vec<Fig3Row> = par_map(cfg.perf.threads, lambdas, |_, &lambda| {
         let mut arrival = cfg.arrival;
         arrival.process = crate::config::ArrivalProcessKind::Poisson;
         arrival.rate_hz = lambda;
         arrival.horizon_s = horizon_s;
         let trace = ArrivalTrace::generate(&cfg.scenario, &arrival, cfg.seed);
         let report = simulate_dynamic(&trace, &scheduler, &allocator, &delay, &quality, &dyn_cfg);
-        let row = Fig3Row {
+        Fig3Row {
             lambda_hz: lambda,
             requests: trace.len(),
             served: report.served(),
@@ -324,9 +332,11 @@ pub fn fig3_dynamic(cfg: &ExperimentConfig, lambdas: &[f64], horizon_s: f64) -> 
             p99_e2e_s: report.e2e_percentile(99.0),
             mean_wait_s: report.mean_wait_s(),
             epochs: report.epochs.len(),
-        };
+        }
+    });
+    for row in &rows {
         table.row(&[
-            format!("{lambda:.2}"),
+            format!("{:.2}", row.lambda_hz),
             row.requests.to_string(),
             row.served.to_string(),
             format!("{:.2}", row.mean_quality),
@@ -336,7 +346,6 @@ pub fn fig3_dynamic(cfg: &ExperimentConfig, lambdas: &[f64], horizon_s: f64) -> 
             format!("{:.2}", row.mean_wait_s),
             row.epochs.to_string(),
         ]);
-        rows.push(row);
     }
     table.finish();
     rows
@@ -379,49 +388,59 @@ pub fn fig_cluster(cfg: &ExperimentConfig, lambdas: &[f64], horizon_s: f64) -> V
         ],
     )
     .with_csv("fig_cluster");
-    let mut rows = Vec::new();
-    for &lambda in lambdas {
-        let mut arrival = cfg.arrival;
-        arrival.process = crate::config::ArrivalProcessKind::Poisson;
-        arrival.rate_hz = lambda;
-        arrival.horizon_s = horizon_s;
-        let trace = ArrivalTrace::generate(&cfg.scenario, &arrival, cfg.seed);
-        for router in RouterKind::all() {
-            let mut settings = cfg.cluster;
-            settings.router = router;
-            let cluster_cfg = ClusterConfig::from_settings(&settings, &cfg.dynamic);
-            let report =
-                simulate_cluster(&trace, &scheduler, &allocator, &delay, &quality, &cluster_cfg);
-            let stats = report.fleet_stats();
-            let max_share = report
-                .servers
-                .iter()
-                .map(|s| s.assigned() as f64 / trace.len().max(1) as f64)
-                .fold(0.0, f64::max);
-            let row = FigClusterRow {
-                lambda_hz: lambda,
-                router,
-                requests: trace.len(),
-                served: report.served(),
-                mean_quality: stats.mean_quality,
-                outage_rate: stats.outage_rate,
-                p50_e2e_s: stats.p50_e2e_s,
-                p99_e2e_s: stats.p99_e2e_s,
-                max_share,
-            };
-            table.row(&[
-                format!("{lambda:.2}"),
-                router.name().to_string(),
-                row.requests.to_string(),
-                row.served.to_string(),
-                format!("{:.2}", row.mean_quality),
-                format!("{:.3}", row.outage_rate),
-                format!("{:.2}", row.p50_e2e_s),
-                format!("{:.2}", row.p99_e2e_s),
-                format!("{:.3}", row.max_share),
-            ]);
-            rows.push(row);
+    // One seeded trace per λ (so router columns stay directly
+    // comparable), then the λ × router cells fan out across
+    // `cfg.perf.threads` and borrow it — no per-cell cloning.
+    let traces: Vec<ArrivalTrace> = lambdas
+        .iter()
+        .map(|&lambda| {
+            let mut arrival = cfg.arrival;
+            arrival.process = crate::config::ArrivalProcessKind::Poisson;
+            arrival.rate_hz = lambda;
+            arrival.horizon_s = horizon_s;
+            ArrivalTrace::generate(&cfg.scenario, &arrival, cfg.seed)
+        })
+        .collect();
+    let cells: Vec<(usize, RouterKind)> = (0..lambdas.len())
+        .flat_map(|li| RouterKind::all().into_iter().map(move |r| (li, r)))
+        .collect();
+    let rows: Vec<FigClusterRow> = par_map(cfg.perf.threads, &cells, |_, &(li, router)| {
+        let trace = &traces[li];
+        let mut settings = cfg.cluster;
+        settings.router = router;
+        let cluster_cfg = ClusterConfig::from_settings(&settings, &cfg.dynamic);
+        let report =
+            simulate_cluster(trace, &scheduler, &allocator, &delay, &quality, &cluster_cfg);
+        let stats = report.fleet_stats();
+        let max_share = report
+            .servers
+            .iter()
+            .map(|s| s.assigned() as f64 / trace.len().max(1) as f64)
+            .fold(0.0, f64::max);
+        FigClusterRow {
+            lambda_hz: lambdas[li],
+            router,
+            requests: trace.len(),
+            served: report.served(),
+            mean_quality: stats.mean_quality,
+            outage_rate: stats.outage_rate,
+            p50_e2e_s: stats.p50_e2e_s,
+            p99_e2e_s: stats.p99_e2e_s,
+            max_share,
         }
+    });
+    for row in &rows {
+        table.row(&[
+            format!("{:.2}", row.lambda_hz),
+            row.router.name().to_string(),
+            row.requests.to_string(),
+            row.served.to_string(),
+            format!("{:.2}", row.mean_quality),
+            format!("{:.3}", row.outage_rate),
+            format!("{:.2}", row.p50_e2e_s),
+            format!("{:.2}", row.p99_e2e_s),
+            format!("{:.3}", row.max_share),
+        ]);
     }
     table.finish();
     rows
@@ -477,71 +496,82 @@ pub fn fig_faults(
         ],
     )
     .with_csv("fig_faults");
-    let mut rows = Vec::new();
-    for (i, &rate) in fault_rates_per_min.iter().enumerate() {
-        let mut arrival = cfg.arrival;
-        arrival.process = crate::config::ArrivalProcessKind::Poisson;
-        arrival.horizon_s = horizon_s;
-        // A distinct seeded trace and script per failure rate: the
-        // sweep covers distinct requests, while the policy columns
-        // inside a rate share both (directly comparable).
-        let trace = ArrivalTrace::generate(&cfg.scenario, &arrival, cfg.seed + i as u64);
-        let faults = if rate <= 0.0 {
-            FaultScript::empty()
-        } else {
-            let mtbf_s = 60.0 / rate;
-            let servers = cfg.cluster.servers;
-            FaultScript::random(servers, horizon_s, mtbf_s, cfg.faults.mttr_s, cfg.seed + i as u64)
+    // A distinct seeded trace and script per failure rate: the sweep
+    // covers distinct requests, while the policy columns inside a rate
+    // share both (directly comparable). The rate × policy cells fan
+    // out across `cfg.perf.threads` and *borrow* the shared trace,
+    // speeds and script — no per-cell cloning.
+    let inputs: Vec<(ArrivalTrace, FaultScript)> = fault_rates_per_min
+        .iter()
+        .enumerate()
+        .map(|(i, &rate)| {
+            let mut arrival = cfg.arrival;
+            arrival.process = crate::config::ArrivalProcessKind::Poisson;
+            arrival.horizon_s = horizon_s;
+            let trace = ArrivalTrace::generate(&cfg.scenario, &arrival, cfg.seed + i as u64);
+            let faults = if rate <= 0.0 {
+                FaultScript::empty()
+            } else {
+                let mtbf_s = 60.0 / rate;
+                let servers = cfg.cluster.servers;
+                FaultScript::random(
+                    servers,
+                    horizon_s,
+                    mtbf_s,
+                    cfg.faults.mttr_s,
+                    cfg.seed + i as u64,
+                )
+            };
+            (trace, faults)
+        })
+        .collect();
+    let cells: Vec<(usize, MigrationPolicyKind)> = (0..fault_rates_per_min.len())
+        .flat_map(|i| MigrationPolicyKind::all().into_iter().map(move |p| (i, p)))
+        .collect();
+    let rows: Vec<FigFaultsRow> = par_map(cfg.perf.threads, &cells, |_, &(i, policy)| {
+        let (trace, faults) = &inputs[i];
+        let event_cfg = EventClusterConfig {
+            speeds: &speeds,
+            router: cfg.cluster.router,
+            dynamic: DynamicConfig::from(&cfg.dynamic),
+            faults,
+            migration: policy,
         };
-        for policy in MigrationPolicyKind::all() {
-            let event_cfg = EventClusterConfig {
-                speeds: speeds.clone(),
-                router: cfg.cluster.router,
-                dynamic: DynamicConfig::from(&cfg.dynamic),
-                faults: faults.clone(),
-                migration: policy,
-            };
-            let report = simulate_event_cluster(
-                &trace,
-                &scheduler,
-                &allocator,
-                &delay,
-                &quality,
-                &event_cfg,
-            );
-            let stats = report.fleet_stats();
-            let rs = report.recovery_stats(cfg.dynamic.window_s);
-            let row = FigFaultsRow {
-                fault_rate_per_min: rate,
-                policy,
-                requests: trace.len(),
-                served: report.served(),
-                dropped: report.dropped(),
-                lost_to_failure: report.lost_to_failure(),
-                migrated: report.migrated(),
-                failures: report.failures(),
-                mean_quality: stats.mean_quality,
-                outage_rate: stats.outage_rate,
-                p99_e2e_s: stats.p99_e2e_s,
-                post_failure_p99_s: rs.post_failure_p99_s,
-                mean_time_to_drain_s: rs.mean_time_to_drain_s,
-            };
-            table.row(&[
-                format!("{rate:.2}"),
-                policy.name().to_string(),
-                row.requests.to_string(),
-                row.served.to_string(),
-                row.lost_to_failure.to_string(),
-                row.migrated.to_string(),
-                row.failures.to_string(),
-                format!("{:.2}", row.mean_quality),
-                format!("{:.3}", row.outage_rate),
-                format!("{:.2}", row.p99_e2e_s),
-                format!("{:.2}", row.post_failure_p99_s),
-                format!("{:.2}", row.mean_time_to_drain_s),
-            ]);
-            rows.push(row);
+        let report =
+            simulate_event_cluster(trace, &scheduler, &allocator, &delay, &quality, &event_cfg);
+        let stats = report.fleet_stats();
+        let rs = report.recovery_stats(cfg.dynamic.window_s);
+        FigFaultsRow {
+            fault_rate_per_min: fault_rates_per_min[i],
+            policy,
+            requests: trace.len(),
+            served: report.served(),
+            dropped: report.dropped(),
+            lost_to_failure: report.lost_to_failure(),
+            migrated: report.migrated(),
+            failures: report.failures(),
+            mean_quality: stats.mean_quality,
+            outage_rate: stats.outage_rate,
+            p99_e2e_s: stats.p99_e2e_s,
+            post_failure_p99_s: rs.post_failure_p99_s,
+            mean_time_to_drain_s: rs.mean_time_to_drain_s,
         }
+    });
+    for row in &rows {
+        table.row(&[
+            format!("{:.2}", row.fault_rate_per_min),
+            row.policy.name().to_string(),
+            row.requests.to_string(),
+            row.served.to_string(),
+            row.lost_to_failure.to_string(),
+            row.migrated.to_string(),
+            row.failures.to_string(),
+            format!("{:.2}", row.mean_quality),
+            format!("{:.3}", row.outage_rate),
+            format!("{:.2}", row.p99_e2e_s),
+            format!("{:.2}", row.post_failure_p99_s),
+            format!("{:.2}", row.mean_time_to_drain_s),
+        ]);
     }
     table.finish();
     rows
@@ -601,66 +631,72 @@ pub fn fig_pipeline(
         ],
     )
     .with_csv("fig_pipeline");
-    let mut rows = Vec::new();
-    for (i, &latency) in solve_latencies.iter().enumerate() {
-        let mut arrival = cfg.arrival;
-        arrival.process = crate::config::ArrivalProcessKind::Burst;
-        arrival.horizon_s = horizon_s;
-        // A distinct seeded trace per solve latency: the sweep covers
-        // distinct requests, while the mode/router cells inside a
-        // latency share one (directly comparable).
-        let trace = ArrivalTrace::generate(&cfg.scenario, &arrival, cfg.seed + i as u64);
-        for mode in SolveMode::all() {
-            for router in routers {
-                let mut dynamic = DynamicConfig::from(&cfg.dynamic);
-                dynamic.solve_latency_s = latency;
-                dynamic.solve_mode = mode;
-                let event_cfg = EventClusterConfig {
-                    speeds: speeds.clone(),
-                    router,
-                    dynamic,
-                    faults: FaultScript::empty(),
-                    migration: MigrationPolicyKind::None,
-                };
-                let report = simulate_event_cluster(
-                    &trace,
-                    &scheduler,
-                    &allocator,
-                    &delay,
-                    &quality,
-                    &event_cfg,
-                );
-                let stats = report.fleet_stats();
-                let total_solve = report.total_epochs() as f64 * latency;
-                let solve_overlap =
-                    if total_solve > 0.0 { report.solve_hidden_s() / total_solve } else { 0.0 };
-                let row = FigPipelineRow {
-                    solve_latency_s: latency,
-                    mode,
-                    router,
-                    requests: trace.len(),
-                    served: report.served(),
-                    mean_quality: stats.mean_quality,
-                    outage_rate: stats.outage_rate,
-                    mean_e2e_censored_s: report.mean_e2e_censored_s(),
-                    p99_e2e_censored_s: report.e2e_censored_percentile(99.0),
-                    solve_overlap,
-                };
-                table.row(&[
-                    format!("{latency:.2}"),
-                    mode.name().to_string(),
-                    router.name().to_string(),
-                    row.requests.to_string(),
-                    row.served.to_string(),
-                    format!("{:.2}", row.mean_quality),
-                    format!("{:.3}", row.outage_rate),
-                    format!("{:.2}", row.mean_e2e_censored_s),
-                    format!("{:.2}", row.p99_e2e_censored_s),
-                    format!("{:.3}", row.solve_overlap),
-                ]);
-                rows.push(row);
-            }
+    // A distinct seeded trace per solve latency: the sweep covers
+    // distinct requests, while the mode/router cells inside a latency
+    // share one (directly comparable). The latency × mode × router
+    // cells fan out across `cfg.perf.threads`, borrowing the shared
+    // trace/speeds and the static all-alive script — no per-cell
+    // cloning.
+    let traces: Vec<ArrivalTrace> = (0..solve_latencies.len())
+        .map(|i| {
+            let mut arrival = cfg.arrival;
+            arrival.process = crate::config::ArrivalProcessKind::Burst;
+            arrival.horizon_s = horizon_s;
+            ArrivalTrace::generate(&cfg.scenario, &arrival, cfg.seed + i as u64)
+        })
+        .collect();
+    let cells: Vec<(usize, SolveMode, RouterKind)> = (0..solve_latencies.len())
+        .flat_map(|i| {
+            SolveMode::all()
+                .into_iter()
+                .flat_map(move |mode| routers.into_iter().map(move |router| (i, mode, router)))
+        })
+        .collect();
+    let rows: Vec<FigPipelineRow> = par_map(cfg.perf.threads, &cells, |_, &(i, mode, router)| {
+        let latency = solve_latencies[i];
+        let trace = &traces[i];
+        let mut dynamic = DynamicConfig::from(&cfg.dynamic);
+        dynamic.solve_latency_s = latency;
+        dynamic.solve_mode = mode;
+        let event_cfg = EventClusterConfig {
+            speeds: &speeds,
+            router,
+            dynamic,
+            faults: &NO_FAULTS,
+            migration: MigrationPolicyKind::None,
+        };
+        let report =
+            simulate_event_cluster(trace, &scheduler, &allocator, &delay, &quality, &event_cfg);
+        let stats = report.fleet_stats();
+        let total_solve = report.total_epochs() as f64 * latency;
+        let solve_overlap =
+            if total_solve > 0.0 { report.solve_hidden_s() / total_solve } else { 0.0 };
+        FigPipelineRow {
+            solve_latency_s: latency,
+            mode,
+            router,
+            requests: trace.len(),
+            served: report.served(),
+            mean_quality: stats.mean_quality,
+            outage_rate: stats.outage_rate,
+            mean_e2e_censored_s: report.mean_e2e_censored_s(),
+            p99_e2e_censored_s: report.e2e_censored_percentile(99.0),
+            solve_overlap,
         }
+    });
+    for row in &rows {
+        table.row(&[
+            format!("{:.2}", row.solve_latency_s),
+            row.mode.name().to_string(),
+            row.router.name().to_string(),
+            row.requests.to_string(),
+            row.served.to_string(),
+            format!("{:.2}", row.mean_quality),
+            format!("{:.3}", row.outage_rate),
+            format!("{:.2}", row.mean_e2e_censored_s),
+            format!("{:.2}", row.p99_e2e_censored_s),
+            format!("{:.3}", row.solve_overlap),
+        ]);
     }
     table.finish();
     println!("(* deadline-censored: dropped requests charge their relative deadline)");

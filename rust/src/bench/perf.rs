@@ -1,0 +1,272 @@
+//! Tracked perf harness — times the three parallelized hot loops
+//! (per-epoch PSO solve, per-server cluster epochs, bench sweep cells)
+//! at `threads = 1` versus `threads = auto`, asserts the outputs are
+//! bit-identical, and emits the machine-readable `BENCH_pr5.json` perf
+//! trajectory at the repository root.
+//!
+//! Two entry points drive it: `aigc-edge perf` (full-size loops) and
+//! `benches/perf_smoke.rs` (CI-size loops; the bit-identity assert is
+//! blocking there, the wall-clock numbers are uploaded as an artifact
+//! with a *soft* threshold — shared CI runners make hard speedup gates
+//! flaky).
+
+use std::path::Path;
+use std::time::Instant;
+
+use crate::bandwidth::{EqualAllocator, PsoAllocator, PsoConfig};
+use crate::config::ExperimentConfig;
+use crate::delay::BatchDelayModel;
+use crate::quality::PowerLawQuality;
+use crate::routing::RouterKind;
+use crate::scheduler::Stacking;
+use crate::sim::{server_speeds, simulate_cluster, solve_joint, ClusterConfig, DynamicConfig};
+use crate::trace::{generate, ArrivalTrace};
+use crate::util::exec::{par_map, resolve_threads};
+
+/// One hot loop's serial-vs-parallel measurement.
+#[derive(Debug, Clone)]
+pub struct PerfRow {
+    pub loop_name: &'static str,
+    /// Wall-clock at `threads = 1`.
+    pub serial_s: f64,
+    /// Wall-clock at `threads = auto`.
+    pub parallel_s: f64,
+    /// Parallel output bitwise equal to serial (must always hold).
+    pub bit_identical: bool,
+}
+
+impl PerfRow {
+    pub fn speedup(&self) -> f64 {
+        if self.parallel_s > 0.0 {
+            self.serial_s / self.parallel_s
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Harness knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct PerfOptions {
+    /// The "parallel" thread count to compare against serial (0 =
+    /// auto — the default and what `BENCH_pr5.json` records).
+    pub threads: usize,
+    /// Shrink every loop to CI size (the `perf_smoke` setting).
+    pub quick: bool,
+}
+
+impl Default for PerfOptions {
+    fn default() -> Self {
+        Self { threads: 0, quick: false }
+    }
+}
+
+fn bits_of(xs: &[f64]) -> Vec<u64> {
+    xs.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Hot loop 1: the per-epoch (P1)∘(P2) solve — PSO particle fitness
+/// fan-out inside `bandwidth::pso`.
+fn measure_pso(cfg: &ExperimentConfig, opts: &PerfOptions) -> PerfRow {
+    let workload = generate(&cfg.scenario, cfg.seed);
+    let delay = BatchDelayModel::new(cfg.delay.a, cfg.delay.b);
+    let quality = PowerLawQuality::paper();
+    let scheduler = Stacking::default();
+    let reps = if opts.quick { 2 } else { 5 };
+    let run = |threads: usize| {
+        let pso = PsoAllocator::new(PsoConfig {
+            particles: cfg.pso.particles,
+            iterations: cfg.pso.iterations,
+            patience: cfg.pso.patience,
+            threads,
+            ..Default::default()
+        });
+        // warm once (untimed) so scratch/thread startup is steady-state
+        let mut alloc = solve_joint(&workload, &scheduler, &pso, &delay, &quality);
+        let start = Instant::now();
+        for _ in 0..reps {
+            alloc = solve_joint(&workload, &scheduler, &pso, &delay, &quality);
+        }
+        (start.elapsed().as_secs_f64(), bits_of(&alloc.outcome.allocation_hz))
+    };
+    let (serial_s, serial_bits) = run(1);
+    let (parallel_s, parallel_bits) = run(opts.threads);
+    PerfRow {
+        loop_name: "pso_solve",
+        serial_s,
+        parallel_s,
+        bit_identical: serial_bits == parallel_bits,
+    }
+}
+
+fn perf_trace(cfg: &ExperimentConfig, rate_hz: f64, horizon_s: f64, seed: u64) -> ArrivalTrace {
+    let mut arrival = cfg.arrival;
+    arrival.process = crate::config::ArrivalProcessKind::Poisson;
+    arrival.rate_hz = rate_hz;
+    arrival.horizon_s = horizon_s;
+    ArrivalTrace::generate(&cfg.scenario, &arrival, seed)
+}
+
+/// Bitwise fingerprint of a cluster run — every per-request float plus
+/// the dispositions, so any divergence (not just aggregate drift)
+/// trips the identity check.
+fn cluster_fingerprint(report: &crate::sim::ClusterReport) -> Vec<u64> {
+    let mut out = Vec::with_capacity(report.outcomes.len() * 4 + 1);
+    for o in &report.outcomes {
+        out.push(o.steps as u64);
+        out.push(o.quality.to_bits());
+        out.push(o.e2e_s.to_bits());
+        out.push(o.resolved_s.to_bits());
+    }
+    out.push(report.horizon_s.to_bits());
+    out
+}
+
+/// Hot loop 2: independent per-server epoch solves in `sim::cluster`.
+fn measure_cluster(cfg: &ExperimentConfig, opts: &PerfOptions) -> PerfRow {
+    let horizon = if opts.quick { 30.0 } else { 90.0 };
+    let trace = perf_trace(cfg, 6.0, horizon, cfg.seed);
+    let delay = BatchDelayModel::new(cfg.delay.a, cfg.delay.b);
+    let quality = PowerLawQuality::paper();
+    let scheduler = Stacking::default();
+    let speeds = server_speeds(4, 0.7, 1.3);
+    let run = |threads: usize| {
+        let mut dynamic = DynamicConfig::from(&cfg.dynamic);
+        dynamic.threads = threads;
+        let cluster = ClusterConfig {
+            speeds: speeds.clone(),
+            router: RouterKind::JoinShortestQueue,
+            dynamic,
+        };
+        let start = Instant::now();
+        let report =
+            simulate_cluster(&trace, &scheduler, &EqualAllocator, &delay, &quality, &cluster);
+        (start.elapsed().as_secs_f64(), cluster_fingerprint(&report))
+    };
+    run(1); // warmup (untimed)
+    let (serial_s, serial_bits) = run(1);
+    let (parallel_s, parallel_bits) = run(opts.threads);
+    PerfRow {
+        loop_name: "cluster_epochs",
+        serial_s,
+        parallel_s,
+        bit_identical: serial_bits == parallel_bits,
+    }
+}
+
+/// Hot loop 3: sweep-cell fan-out (the `fig_cluster`-shaped λ × router
+/// grid, without the table printing).
+fn measure_sweep(cfg: &ExperimentConfig, opts: &PerfOptions) -> PerfRow {
+    let lambdas: &[f64] = if opts.quick { &[1.0, 4.0] } else { &[1.0, 2.0, 4.0, 6.0] };
+    let horizon = if opts.quick { 30.0 } else { 60.0 };
+    let delay = BatchDelayModel::new(cfg.delay.a, cfg.delay.b);
+    let quality = PowerLawQuality::paper();
+    let scheduler = Stacking::default();
+    let traces: Vec<ArrivalTrace> =
+        lambdas.iter().map(|&l| perf_trace(cfg, l, horizon, cfg.seed)).collect();
+    let cells: Vec<(usize, RouterKind)> = (0..lambdas.len())
+        .flat_map(|li| RouterKind::all().into_iter().map(move |r| (li, r)))
+        .collect();
+    let run = |threads: usize| {
+        let start = Instant::now();
+        let fingerprints: Vec<Vec<u64>> = par_map(threads, &cells, |_, &(li, router)| {
+            let mut settings = cfg.cluster;
+            settings.router = router;
+            let cluster = ClusterConfig::from_settings(&settings, &cfg.dynamic);
+            let report = simulate_cluster(
+                &traces[li],
+                &scheduler,
+                &EqualAllocator,
+                &delay,
+                &quality,
+                &cluster,
+            );
+            cluster_fingerprint(&report)
+        });
+        (start.elapsed().as_secs_f64(), fingerprints)
+    };
+    run(1); // warmup (untimed)
+    let (serial_s, serial_bits) = run(1);
+    let (parallel_s, parallel_bits) = run(opts.threads);
+    PerfRow {
+        loop_name: "sweep_cells",
+        serial_s,
+        parallel_s,
+        bit_identical: serial_bits == parallel_bits,
+    }
+}
+
+/// Run the three tracked loops. Every row's `bit_identical` must be
+/// true — callers (CLI, `perf_smoke`) treat a false as a hard failure.
+pub fn run_perf(cfg: &ExperimentConfig, opts: &PerfOptions) -> Vec<PerfRow> {
+    vec![measure_pso(cfg, opts), measure_cluster(cfg, opts), measure_sweep(cfg, opts)]
+}
+
+/// Serialize the rows as the tracked `BENCH_pr5.json` document.
+pub fn bench_json(rows: &[PerfRow], opts: &PerfOptions) -> String {
+    let mut loops = String::new();
+    for (i, r) in rows.iter().enumerate() {
+        if i > 0 {
+            loops.push_str(",\n");
+        }
+        loops.push_str(&format!(
+            "    \"{}\": {{\"serial_s\": {:.6}, \"parallel_s\": {:.6}, \"speedup\": {:.3}, \
+             \"bit_identical\": {}}}",
+            r.loop_name,
+            r.serial_s,
+            r.parallel_s,
+            r.speedup(),
+            r.bit_identical
+        ));
+    }
+    format!(
+        "{{\n  \"pr\": 5,\n  \"quick\": {},\n  \"threads_auto\": {},\n  \"loops\": {{\n{}\n  }}\n}}\n",
+        opts.quick,
+        resolve_threads(opts.threads),
+        loops
+    )
+}
+
+/// Write `BENCH_pr5.json` (default location: the repository root, one
+/// level above the crate).
+pub fn write_bench_json(path: &Path, rows: &[PerfRow], opts: &PerfOptions) -> std::io::Result<()> {
+    std::fs::write(path, bench_json(rows, opts))
+}
+
+/// The tracked trajectory location, `<repo root>/BENCH_pr5.json` —
+/// derived from the compile-time checkout, so only callers that run
+/// where they were built (`cargo bench --bench perf_smoke`, `cargo
+/// test`) should use it; the installed CLI defaults to the invocation
+/// directory instead.
+pub fn default_bench_path() -> std::path::PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("..").join("BENCH_pr5.json")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_harness_is_bit_identical_and_serializes() {
+        let mut cfg = ExperimentConfig::paper();
+        // tiny sizes: this is a correctness test, not a measurement
+        cfg.pso.particles = 6;
+        cfg.pso.iterations = 6;
+        cfg.pso.patience = 3;
+        cfg.scenario.num_services = 8;
+        let opts = PerfOptions { threads: 2, quick: true };
+        let rows = run_perf(&cfg, &opts);
+        assert_eq!(rows.len(), 3);
+        for r in &rows {
+            assert!(r.bit_identical, "{}: parallel output diverged from serial", r.loop_name);
+            assert!(r.serial_s > 0.0 && r.parallel_s > 0.0);
+        }
+        let json = bench_json(&rows, &opts);
+        for key in ["pso_solve", "cluster_epochs", "sweep_cells", "threads_auto", "speedup"] {
+            assert!(json.contains(key), "missing {key} in {json}");
+        }
+        // the emitted document must parse with the in-tree JSON parser
+        let doc = crate::util::json::parse(&json).unwrap();
+        assert!(doc.required("loops").is_ok());
+    }
+}

@@ -11,6 +11,13 @@
 //!             workload under failure injection and live migration
 //!   `profile  [--reps N]` — Fig. 1a measurement
 //!   `figures  [--which 1a|1b|2a|2b|2c|3|cluster|faults|pipeline|all] [--reps N]`
+//!   `perf     [--threads N] [--quick true]` — parallel-fabric perf
+//!             harness (serial vs auto threads, emits BENCH_pr5.json)
+//!
+//! Every subcommand that solves or sweeps accepts `--threads N`
+//! (0 = auto-detect, 1 = serial): the parallel fabric is
+//! bit-identical to serial at any thread count, so the flag only
+//! changes wall-clock, never output.
 
 use std::collections::BTreeMap;
 
@@ -97,14 +104,14 @@ aigc-edge — batch denoising for AIGC serving at the wireless edge
 USAGE:
   aigc-edge serve    [--addr 127.0.0.1:7878] [--config file.toml] [--epoch-ms 200]
   aigc-edge simulate [--config file.toml] [--scheduler stacking|single|greedy|fixed]
-                     [--allocator pso|equal|proportional] [--seed N]
+                     [--allocator pso|equal|proportional] [--seed N] [--threads 0]
   aigc-edge dynamic  [--config file.toml] [--process poisson|burst] [--rate 2.0]
                      [--horizon 300] [--epoch-s 1.0] [--max-batch 32] [--window 30]
                      [--plan-horizon 2.0] [--solve-latency 0.0]
                      [--solve-mode pipelined|synchronous]
                      [--no-admission true] [--trace-out f.csv]
                      [--scheduler stacking|single|greedy|fixed]
-                     [--allocator pso|equal|proportional] [--seed N]
+                     [--allocator pso|equal|proportional] [--seed N] [--threads 0]
   aigc-edge cluster  [--config file.toml] [--servers 4]
                      [--router round-robin|jsq|quality|live]
                      [--speed-min 1.0] [--speed-max 1.0] [--process poisson|burst]
@@ -113,14 +120,20 @@ USAGE:
                      [--solve-latency 0.0] [--solve-mode pipelined|synchronous]
                      [--no-admission true] [--warm-start true]
                      [--scheduler stacking|single|greedy|fixed]
-                     [--allocator pso|equal|proportional] [--seed N]
+                     [--allocator pso|equal|proportional] [--seed N] [--threads 0]
   aigc-edge faults   [--config file.toml] [cluster flags...]
                      [--fault-mode none|random|scheduled] [--mtbf 120] [--mttr 15]
                      [--fault-seed N] [--down \"server:from:until,...\"]
                      [--migration none|requeue|steal]
   aigc-edge profile  [--reps 20]
   aigc-edge figures  [--which all|1a|1b|2a|2b|2c|3|cluster|faults|pipeline] [--reps 3]
+                     [--threads 0]
+  aigc-edge perf     [--config file.toml] [--threads 0] [--quick true]
+                     [--out BENCH_pr5.json] [--seed N]
   aigc-edge help
+
+  --threads N selects the solve/sweep fan-out (0 = auto-detect, 1 =
+  serial, else N workers); outputs are bit-identical at every value.
 ";
 
 #[cfg(test)]

@@ -55,6 +55,8 @@ pub struct ExperimentConfig {
     pub faults: FaultSettings,
     /// Cross-server migration settings (`sim::event`).
     pub migration: MigrationSettings,
+    /// Parallel-execution settings (`util::exec` fan-out).
+    pub perf: PerfSettings,
     /// Directory holding the AOT artifacts (HLO, quality.json, …).
     pub artifacts_dir: PathBuf,
     pub seed: u64,
@@ -220,7 +222,12 @@ impl FaultSettings {
     /// Materialize the fault script for an `n`-server fleet over
     /// `horizon_s` of arrivals. `fallback_seed` (the experiment seed)
     /// drives `random` mode when `seed` is 0.
-    pub fn script(&self, servers: usize, horizon_s: f64, fallback_seed: u64) -> Result<FaultScript> {
+    pub fn script(
+        &self,
+        servers: usize,
+        horizon_s: f64,
+        fallback_seed: u64,
+    ) -> Result<FaultScript> {
         let script = match self.mode {
             FaultModeKind::None => FaultScript::empty(),
             FaultModeKind::Random => {
@@ -241,6 +248,20 @@ pub struct MigrationSettings {
     /// What happens to a dead/overloaded server's queued requests
     /// (`none` | `requeue` | `steal`).
     pub policy: MigrationPolicyKind,
+}
+
+/// Performance settings — the solve/sweep fan-out knob. TOML section
+/// `[perf]` (CLI `--threads`).
+#[derive(Debug, Clone, Copy)]
+pub struct PerfSettings {
+    /// Worker threads for the parallel hot loops (PSO particle
+    /// fitness, per-server epoch solves, bench sweep cells): `0` =
+    /// auto-detect from `available_parallelism`, otherwise the literal
+    /// count (`1` = fully serial). Outputs are bit-identical at every
+    /// value — `util::exec::par_map` is order-preserving and the
+    /// engines only fan out independent solves — so this never needs
+    /// to appear in a replay recipe.
+    pub threads: usize,
 }
 
 impl ExperimentConfig {
@@ -293,6 +314,7 @@ impl ExperimentConfig {
                 down: Vec::new(),
             },
             migration: MigrationSettings { policy: MigrationPolicyKind::RequeueOnDeath },
+            perf: PerfSettings { threads: 0 },
             artifacts_dir: default_artifacts_dir(),
             seed: 2025,
         }
@@ -537,6 +559,16 @@ fn apply_doc(cfg: &mut ExperimentConfig, doc: &TomlDoc) -> Result<()> {
                     cfg.faults.down = FaultScript::parse_spec(spec)?;
                     true
                 }
+                None => false,
+            },
+            "perf.threads" => match value.as_i64() {
+                Some(t) if t >= 0 => {
+                    cfg.perf.threads = t as usize;
+                    true
+                }
+                Some(t) => bail!(
+                    "perf.threads must be 0 (auto-detect) or a positive thread count, got {t}"
+                ),
                 None => false,
             },
             "migration.policy" => match value.as_str() {
@@ -833,6 +865,21 @@ mod tests {
             .unwrap_err()
             .to_string();
         assert!(err.contains("requeue"), "{err}");
+    }
+
+    #[test]
+    fn perf_threads_applies_and_validation_lists_valid_values() {
+        // default: auto-detect
+        assert_eq!(ExperimentConfig::paper().perf.threads, 0);
+        let cfg = ExperimentConfig::from_toml_text("[perf]\nthreads = 4").unwrap();
+        assert_eq!(cfg.perf.threads, 4);
+        let cfg = ExperimentConfig::from_toml_text("[perf]\nthreads = 0").unwrap();
+        assert_eq!(cfg.perf.threads, 0, "0 is explicitly legal: auto-detect");
+        let err = ExperimentConfig::from_toml_text("[perf]\nthreads = -2").unwrap_err().to_string();
+        assert!(err.contains("0 (auto-detect)") && err.contains("positive"), "{err}");
+        let err =
+            ExperimentConfig::from_toml_text("[perf]\nthreads = \"many\"").unwrap_err().to_string();
+        assert!(err.contains("wrong type"), "{err}");
     }
 
     #[test]

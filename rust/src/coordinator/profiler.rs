@@ -50,7 +50,7 @@ pub fn profile_batch_delay(store: &ArtifactStore, config: ProfileConfig) -> Resu
     let mut rng = Pcg64::seeded(config.seed);
 
     let mut samples: Vec<(u32, f64)> = Vec::new();
-    for &bucket in &store.buckets().clone() {
+    for bucket in store.buckets() {
         let bs = bucket as usize;
         let latents: Vec<Vec<f32>> =
             (0..bs).map(|_| (0..dim).map(|_| rng.normal() as f32).collect()).collect();

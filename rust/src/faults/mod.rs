@@ -96,6 +96,11 @@ pub struct FaultScript {
     downs: Vec<DownInterval>,
 }
 
+/// The shared all-alive script — what borrowing callers point at when
+/// they inject no faults (e.g. `EventClusterConfig::fault_free`, the
+/// pipeline sweep). Identical to [`FaultScript::empty`], but `'static`.
+pub static NO_FAULTS: FaultScript = FaultScript { downs: Vec::new() };
+
 impl FaultScript {
     /// No failures: the event engine degenerates to an all-alive fleet.
     pub fn empty() -> Self {

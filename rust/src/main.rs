@@ -50,6 +50,7 @@ fn main() -> Result<()> {
         "faults" => cmd_faults(&args),
         "profile" => cmd_profile(&args),
         "figures" => cmd_figures(&args),
+        "perf" => cmd_perf(&args),
         "help" | "--help" | "-h" => {
             print!("{USAGE}");
             Ok(())
@@ -69,10 +70,26 @@ fn scheduler_from(args: &Args, cfg: &ExperimentConfig) -> Result<Box<dyn BatchSc
     })
 }
 
-/// Allocator selection shared by `simulate` and `dynamic`.
-fn allocator_from(args: &Args) -> Result<Box<dyn Allocator>> {
+/// The solve/sweep fan-out knob: `--threads` overrides `[perf]
+/// threads` from the config. Validation matches the config error:
+/// the message lists the valid values.
+fn threads_from(args: &Args, cfg: &ExperimentConfig) -> Result<usize> {
+    match args.get("threads") {
+        None => Ok(cfg.perf.threads),
+        Some(v) => v.parse::<usize>().map_err(|_| {
+            anyhow::anyhow!(
+                "--threads must be 0 (auto-detect) or a positive thread count, got '{v}'"
+            )
+        }),
+    }
+}
+
+/// Allocator selection shared by `simulate` and `dynamic`. These
+/// single-server commands spend the thread budget inside the solve:
+/// PSO fans its particle fitness out across `threads`.
+fn allocator_from(args: &Args, threads: usize) -> Result<Box<dyn Allocator>> {
     Ok(match args.get_or("allocator", "pso").as_str() {
-        "pso" => Box::new(PsoAllocator::default()),
+        "pso" => Box::new(PsoAllocator::new(PsoConfig { threads, ..Default::default() })),
         "equal" => Box::new(EqualAllocator),
         "proportional" => Box::new(ProportionalAllocator),
         other => bail!("unknown allocator '{other}' (valid: pso, equal, proportional)"),
@@ -82,7 +99,9 @@ fn allocator_from(args: &Args) -> Result<Box<dyn Allocator>> {
 /// Allocator-pool selection for the cluster engines: PSO gets one
 /// instance per server (warm-start state stays on its server —
 /// `--warm-start true` enables the carry); the stateless baselines
-/// share one instance, which is equivalent.
+/// share one instance, which is equivalent. Cluster commands spend the
+/// thread budget at the *engine* level (per-server solve fan-out), so
+/// each PSO instance stays serial — nesting both would oversubscribe.
 fn allocator_pool_from(args: &Args, servers: usize) -> Result<AllocatorPool> {
     let warm_start = match args.get("warm-start") {
         None | Some("false") => false,
@@ -139,11 +158,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
 }
 
 fn cmd_simulate(args: &Args) -> Result<()> {
-    args.expect_only(&["config", "scheduler", "allocator", "seed"])?;
+    args.expect_only(&["config", "scheduler", "allocator", "seed", "threads"])?;
     let mut cfg = load_config(args)?;
     cfg.seed = args.get_u64("seed", cfg.seed)?;
     let scheduler = scheduler_from(args, &cfg)?;
-    let allocator = allocator_from(args)?;
+    let allocator = allocator_from(args, threads_from(args, &cfg)?)?;
     let quality = quality_model(&cfg)?;
     let delay = BatchDelayModel::new(cfg.delay.a, cfg.delay.b);
     let workload = generate(&cfg.scenario, cfg.seed);
@@ -244,13 +263,14 @@ fn cmd_dynamic(args: &Args) -> Result<()> {
         "scheduler",
         "allocator",
         "seed",
+        "threads",
     ])?;
     let mut cfg = load_config(args)?;
     apply_dynamic_flags(args, &mut cfg)?;
     cfg.validate()?;
 
     let scheduler = scheduler_from(args, &cfg)?;
-    let allocator = allocator_from(args)?;
+    let allocator = allocator_from(args, threads_from(args, &cfg)?)?;
     let quality = quality_model(&cfg)?;
     let delay = BatchDelayModel::new(cfg.delay.a, cfg.delay.b);
     let trace = ArrivalTrace::generate(&cfg.scenario, &cfg.arrival, cfg.seed);
@@ -373,6 +393,7 @@ fn cmd_cluster(args: &Args) -> Result<()> {
         "scheduler",
         "allocator",
         "seed",
+        "threads",
     ])?;
     let mut cfg = load_config(args)?;
     apply_dynamic_flags(args, &mut cfg)?;
@@ -384,7 +405,9 @@ fn cmd_cluster(args: &Args) -> Result<()> {
     let quality = quality_model(&cfg)?;
     let delay = BatchDelayModel::new(cfg.delay.a, cfg.delay.b);
     let trace = ArrivalTrace::generate(&cfg.scenario, &cfg.arrival, cfg.seed);
-    let cluster_cfg = ClusterConfig::from_settings(&cfg.cluster, &cfg.dynamic);
+    let mut cluster_cfg = ClusterConfig::from_settings(&cfg.cluster, &cfg.dynamic);
+    // Per-server solve fan-out (bit-identical at any count).
+    cluster_cfg.dynamic.threads = threads_from(args, &cfg)?;
     println!(
         "cluster: {} servers (speeds {:?}) router={} | {:?} rate {} Hz over {}s | epoch {}s | \
          solve {} @ {}s",
@@ -415,10 +438,10 @@ fn cmd_cluster(args: &Args) -> Result<()> {
     // there and everything else keeps the sequential path.
     let view = if cfg.cluster.router == RouterKind::LiveState {
         let event_cfg = EventClusterConfig {
-            speeds: cluster_cfg.speeds.clone(),
+            speeds: &cluster_cfg.speeds,
             router: cfg.cluster.router,
             dynamic: cluster_cfg.dynamic,
-            faults: FaultScript::empty(),
+            faults: &aigc_edge::faults::NO_FAULTS,
             migration: MigrationPolicyKind::None,
         };
         let report = simulate_event_cluster_pooled(
@@ -543,6 +566,7 @@ fn cmd_faults(args: &Args) -> Result<()> {
         "scheduler",
         "allocator",
         "seed",
+        "threads",
         "migration",
         "fault-mode",
         "mtbf",
@@ -575,15 +599,19 @@ fn cmd_faults(args: &Args) -> Result<()> {
     let delay = BatchDelayModel::new(cfg.delay.a, cfg.delay.b);
     let trace = ArrivalTrace::generate(&cfg.scenario, &cfg.arrival, cfg.seed);
     let faults = cfg.faults.script(cfg.cluster.servers, cfg.arrival.horizon_s, cfg.seed)?;
+    let speeds = aigc_edge::sim::server_speeds(
+        cfg.cluster.servers,
+        cfg.cluster.speed_min,
+        cfg.cluster.speed_max,
+    );
+    let mut dynamic = DynamicConfig::from(&cfg.dynamic);
+    // Shared-freeze-instant solve fan-out (bit-identical at any count).
+    dynamic.threads = threads_from(args, &cfg)?;
     let event_cfg = EventClusterConfig {
-        speeds: aigc_edge::sim::server_speeds(
-            cfg.cluster.servers,
-            cfg.cluster.speed_min,
-            cfg.cluster.speed_max,
-        ),
+        speeds: &speeds,
         router: cfg.cluster.router,
-        dynamic: DynamicConfig::from(&cfg.dynamic),
-        faults,
+        dynamic,
+        faults: &faults,
         migration: cfg.migration.policy,
     };
     println!(
@@ -689,9 +717,55 @@ fn cmd_profile(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_perf(args: &Args) -> Result<()> {
+    args.expect_only(&["config", "threads", "quick", "out", "seed"])?;
+    let mut cfg = load_config(args)?;
+    cfg.seed = args.get_u64("seed", cfg.seed)?;
+    let threads = threads_from(args, &cfg)?;
+    let quick = match args.get("quick") {
+        None | Some("false") => false,
+        Some("true") => true,
+        Some(other) => bail!("--quick must be true or false, got '{other}'"),
+    };
+    let opts = bench::PerfOptions { threads, quick };
+    println!(
+        "perf harness: serial (1 thread) vs parallel ({} threads){}",
+        aigc_edge::util::resolve_threads(threads),
+        if quick { " — quick sizes" } else { "" },
+    );
+    let rows = bench::run_perf(&cfg, &opts);
+    let mut table = aigc_edge::bench::TableWriter::new(
+        "parallel solve fabric — wall-clock per hot loop",
+        &["loop", "serial s", "parallel s", "speedup", "bit-identical"],
+    );
+    for r in &rows {
+        table.row(&[
+            r.loop_name.to_string(),
+            format!("{:.4}", r.serial_s),
+            format!("{:.4}", r.parallel_s),
+            format!("{:.2}x", r.speedup()),
+            r.bit_identical.to_string(),
+        ]);
+    }
+    table.finish();
+    if let Some(bad) = rows.iter().find(|r| !r.bit_identical) {
+        bail!("{}: parallel output diverged from serial — determinism bug", bad.loop_name);
+    }
+    // Default to the invocation directory (run from the repo root to
+    // track the trajectory in-tree); the compile-time checkout path is
+    // only trusted by `cargo bench`, which runs where it built.
+    let out = std::path::PathBuf::from(args.get_or("out", "BENCH_pr5.json"));
+    bench::write_bench_json(&out, &rows, &opts)
+        .with_context(|| format!("writing {}", out.display()))?;
+    println!("perf trajectory written to {}", out.display());
+    Ok(())
+}
+
 fn cmd_figures(args: &Args) -> Result<()> {
-    args.expect_only(&["which", "reps", "config"])?;
-    let cfg = load_config(args)?;
+    args.expect_only(&["which", "reps", "config", "threads"])?;
+    let mut cfg = load_config(args)?;
+    // Sweep-cell fan-out (bit-identical at any count).
+    cfg.perf.threads = threads_from(args, &cfg)?;
     let which = args.get_or("which", "all");
     let reps = args.get_usize("reps", 3)?;
     let want = |name: &str| which == "all" || which == name;

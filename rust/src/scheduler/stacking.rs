@@ -15,7 +15,7 @@
 use crate::delay::BatchDelayModel;
 use crate::quality::QualityModel;
 
-use super::types::{Batch, BatchScheduler, Schedule, Service, TaskRef};
+use super::types::{mean_quality_of, Batch, BatchScheduler, Schedule, Service, TaskRef};
 
 /// Tunables for [`Stacking`]. `Default` reproduces the paper's setup.
 #[derive(Debug, Clone, Copy)]
@@ -74,38 +74,69 @@ struct Round {
     size: u32,
 }
 
-/// Mutable per-run state for one `T*` trial.
-struct Trial<'a> {
-    delay: &'a BatchDelayModel,
-    max_steps: u32,
+/// Reusable buffers for the `T*` grid search — one allocation set per
+/// `schedule` call instead of per trial. The grid runs dozens of dry
+/// trials whose schedules are thrown away; re-allocating six vectors
+/// per trial dominated the solve profile (§Perf), so every trial now
+/// resets and reuses this scratch — `tests/hotpath_alloc.rs` pins the
+/// allocation count as O(1) in the grid size.
+#[derive(Debug, Default)]
+struct TrialScratch {
     /// Remaining generation budget τ'_k (Eq. 15 subtracts each batch).
     tau: Vec<f64>,
     /// Completed steps T^c_k.
     done: Vec<u32>,
     /// Still-active service indices (positions into `services`).
     active: Vec<usize>,
-    /// Scratch: services that finished during the current packing pass.
+    /// Services that finished during the current packing pass.
     drained: Vec<bool>,
-    /// Scratch: T^e_k per service, recomputed once per round (the sort
+    /// T^e_k per service, recomputed once per round (the sort
     /// comparator otherwise re-derives it O(K log K) times — §Perf).
     t_extra_cache: Vec<u32>,
+    /// The candidate batch of the current round.
+    packed: Vec<usize>,
+}
+
+impl TrialScratch {
+    /// Re-initialize for a fresh trial over `services`. Every slot a
+    /// trial reads is overwritten here, so reuse never leaks state
+    /// between trials.
+    fn reset(&mut self, services: &[Service], delay: &BatchDelayModel) {
+        let n = services.len();
+        self.tau.clear();
+        self.tau.extend(services.iter().map(|s| s.gen_budget));
+        self.done.clear();
+        self.done.resize(n, 0);
+        self.drained.clear();
+        self.drained.resize(n, false);
+        self.t_extra_cache.clear();
+        self.t_extra_cache.resize(n, 0);
+        // Services whose budget cannot fit even a singleton batch are
+        // outages from the start.
+        self.active.clear();
+        let tau = &self.tau;
+        self.active.extend((0..n).filter(|&k| tau[k] >= delay.g(1)));
+        self.packed.clear();
+    }
+}
+
+/// Mutable per-run state for one `T*` trial, borrowing the reusable
+/// scratch.
+struct Trial<'a> {
+    delay: &'a BatchDelayModel,
+    max_steps: u32,
+    s: &'a mut TrialScratch,
 }
 
 impl<'a> Trial<'a> {
-    fn new(services: &[Service], delay: &'a BatchDelayModel, max_steps: u32) -> Self {
-        let tau: Vec<f64> = services.iter().map(|s| s.gen_budget).collect();
-        // Services whose budget cannot fit even a singleton batch are
-        // outages from the start.
-        let active = (0..services.len()).filter(|&k| tau[k] >= delay.g(1)).collect();
-        Self {
-            delay,
-            max_steps,
-            tau,
-            done: vec![0; services.len()],
-            active,
-            drained: vec![false; services.len()],
-            t_extra_cache: vec![0; services.len()],
-        }
+    fn new(
+        scratch: &'a mut TrialScratch,
+        services: &[Service],
+        delay: &'a BatchDelayModel,
+        max_steps: u32,
+    ) -> Self {
+        scratch.reset(services, delay);
+        Self { delay, max_steps, s: scratch }
     }
 
     /// T^e_k (Eq. 16): tasks service k can still complete, assuming the
@@ -113,11 +144,11 @@ impl<'a> Trial<'a> {
     #[inline]
     fn t_extra(&self, k: usize) -> u32 {
         let per = self.delay.a + self.delay.b;
-        let raw = (self.tau[k] / per).floor();
+        let raw = (self.s.tau[k] / per).floor();
         if raw <= 0.0 {
             0
         } else {
-            (raw as u32).min(self.max_steps.saturating_sub(self.done[k]))
+            (raw as u32).min(self.max_steps.saturating_sub(self.s.done[k]))
         }
     }
 
@@ -127,7 +158,7 @@ impl<'a> Trial<'a> {
     #[inline]
     #[allow(dead_code)]
     fn t_ideal(&self, k: usize) -> u32 {
-        self.done[k] + self.t_extra(k)
+        self.s.done[k] + self.t_extra(k)
     }
 
     /// One clustering → packing → batching round. Returns the executed
@@ -138,25 +169,25 @@ impl<'a> Trial<'a> {
         // Refresh the per-round T^e cache, then drop services that can no
         // longer run any task (their T_k is whatever they completed) or
         // that hit the step cap.
-        let mut active = std::mem::take(&mut self.active);
+        let mut active = std::mem::take(&mut self.s.active);
         for &k in &active {
-            self.t_extra_cache[k] = self.t_extra(k);
+            self.s.t_extra_cache[k] = self.t_extra(k);
         }
         {
-            let cache = &self.t_extra_cache;
+            let cache = &self.s.t_extra_cache;
             active.retain(|&k| cache[k] > 0);
         }
         if active.is_empty() {
-            self.active = active;
+            self.s.active = active;
             return None;
         }
 
         // -------- Clustering (Eqs. 16–18) --------
         // Sort ascending by T'_k; F = {k : T'_k ≤ T*}.
         {
-            let cache = &self.t_extra_cache;
-            let done = &self.done;
-            let tau = &self.tau;
+            let cache = &self.s.t_extra_cache;
+            let done = &self.s.done;
+            let tau = &self.s.tau;
             active.sort_by(|&x, &y| {
                 let tx = done[x] + cache[x];
                 let ty = done[y] + cache[y];
@@ -164,13 +195,13 @@ impl<'a> Trial<'a> {
                     .then(tau[x].partial_cmp(&tau[y]).unwrap_or(std::cmp::Ordering::Equal))
             });
         }
-        self.active = active;
+        self.s.active = active;
         let f_len = {
-            let cache = &self.t_extra_cache;
-            let done = &self.done;
-            self.active.iter().filter(|&&k| done[k] + cache[k] <= t_star).count()
+            let cache = &self.s.t_extra_cache;
+            let done = &self.s.done;
+            self.s.active.iter().filter(|&&k| done[k] + cache[k] <= t_star).count()
         };
-        let k_len = self.active.len();
+        let k_len = self.s.active.len();
 
         // -------- Packing (Eqs. 19–20) --------
         let mut x_n: usize = if f_len > 0 {
@@ -178,14 +209,14 @@ impl<'a> Trial<'a> {
             // strictest K\F services, as long as no service in F loses a
             // step: need T^e_k · (a·X + b) ≤ τ'_k for all k ∈ F, i.e.
             // X ≤ (τ'^min − b·T^{e(max)}) / (a·T^{e(max)}).
-            let te_max = self.active[..f_len]
+            let te_max = self.s.active[..f_len]
                 .iter()
-                .map(|&k| self.t_extra_cache[k])
+                .map(|&k| self.s.t_extra_cache[k])
                 .max()
                 .unwrap_or(0) as f64;
-            let tau_min = self.active[..f_len]
+            let tau_min = self.s.active[..f_len]
                 .iter()
-                .map(|&k| self.tau[k])
+                .map(|&k| self.s.tau[k])
                 .fold(f64::INFINITY, f64::min);
             let cap = if te_max > 0.0 {
                 ((tau_min - delay.b * te_max) / (delay.a * te_max)).floor().max(0.0) as usize
@@ -198,9 +229,10 @@ impl<'a> Trial<'a> {
             // while every service can still reach T*:
             // (a·X + b)·T* ≤ (a+b)·T'_k  for all k, bounded by the min T'.
             let t_prime_min = self
+                .s
                 .active
                 .iter()
-                .map(|&k| self.done[k] + self.t_extra_cache[k])
+                .map(|&k| self.s.done[k] + self.s.t_extra_cache[k])
                 .min()
                 .unwrap() as f64;
             let t_star_f = t_star as f64;
@@ -217,13 +249,16 @@ impl<'a> Trial<'a> {
         // service whose remaining budget is below the (shrinking) batch
         // delay has finished: remove it from the batch AND from K.
         // (In-place retain + a drained mark; the old two-vec partition +
-        // per-drop O(n) active scan showed up in the §Perf profile.)
-        let mut packed: Vec<usize> = self.active[..x_n].to_vec();
+        // per-drop O(n) active scan showed up in the §Perf profile. The
+        // batch buffer itself is scratch, reused across rounds/trials.)
+        let mut packed = std::mem::take(&mut self.s.packed);
+        packed.clear();
+        packed.extend_from_slice(&self.s.active[..x_n]);
         let mut any_drained = false;
         loop {
             let gx = delay.g(packed.len() as u32);
             let before = packed.len();
-            let (tau, drained) = (&self.tau, &mut self.drained);
+            let (tau, drained) = (&self.s.tau, &mut self.s.drained);
             packed.retain(|&k| {
                 if tau[k] >= gx {
                     true
@@ -239,13 +274,14 @@ impl<'a> Trial<'a> {
             }
         }
         if any_drained {
-            let drained = &self.drained;
-            self.active.retain(|&k| !drained[k]);
+            let drained = &self.s.drained;
+            self.s.active.retain(|&k| !drained[k]);
         }
         if packed.is_empty() {
             // Everyone we tried to pack was drained; the next round will
             // re-cluster the remainder.
-            return if self.active.is_empty() {
+            self.s.packed = packed;
+            return if self.s.active.is_empty() {
                 None
             } else {
                 Some(Round { start: now, duration: 0.0, tasks: Vec::new(), size: 0 })
@@ -257,8 +293,8 @@ impl<'a> Trial<'a> {
             packed
                 .iter()
                 .map(|&k| {
-                    self.done[k] += 1;
-                    TaskRef { service: k, step: self.done[k] }
+                    self.s.done[k] += 1;
+                    TaskRef { service: k, step: self.s.done[k] }
                 })
                 .collect()
         } else {
@@ -266,59 +302,80 @@ impl<'a> Trial<'a> {
             // skip the per-task allocation (§Perf: most T* trials lose
             // and their schedules are thrown away).
             for &k in &packed {
-                self.done[k] += 1;
+                self.s.done[k] += 1;
             }
             Vec::new()
         };
 
         // Time passes for every remaining service (Eq. 15).
-        for &k in &self.active {
-            self.tau[k] -= gx;
+        for &k in &self.s.active {
+            self.s.tau[k] -= gx;
         }
         // Drop services that overran their budget (deadline violation) or
         // finished the step cap; their T_k stays at `done`.
-        self.active.retain(|&k| self.tau[k] >= 0.0 && self.done[k] < self.max_steps);
+        {
+            let (tau, done) = (&self.s.tau, &self.s.done);
+            let max_steps = self.max_steps;
+            self.s.active.retain(|&k| tau[k] >= 0.0 && done[k] < max_steps);
+        }
 
-        Some(Round { start: now, duration: gx, tasks, size: packed.len() as u32 })
+        let size = packed.len() as u32;
+        self.s.packed = packed;
+        Some(Round { start: now, duration: gx, tasks, size })
     }
 
-    /// Run the full clustering-packing-batching loop for one `T*`.
-    /// `record = false` computes only the per-service step counts (the
-    /// objective); `record = true` additionally materializes batches and
-    /// completion times.
-    fn run(mut self, t_star: u32, num_services: usize, record: bool) -> Schedule {
-        let mut batches: Vec<Batch> = Vec::new();
-        let mut now = 0.0;
-        let mut completion = vec![0.0; num_services];
+    /// Run the full clustering-packing-batching loop for one `T*`
+    /// without recording: only the per-service step counts (the (P2)
+    /// objective) are computed, left in the scratch's `done` — no
+    /// allocation at all (§Perf).
+    fn run_dry(&mut self, t_star: u32, num_services: usize) {
         // Bound: every non-empty batch advances ≥1 task and tasks are
         // bounded by num_services * max_steps.
         let max_rounds = num_services * self.max_steps as usize + 8;
+        let mut now = 0.0;
         for _ in 0..max_rounds {
-            match self.round(t_star, now, record) {
+            match self.round(t_star, now, false) {
                 None => break,
                 Some(round) => {
                     if round.size == 0 {
                         continue; // services drained during packing
                     }
                     now = round.start + round.duration;
-                    if record {
-                        for t in &round.tasks {
-                            completion[t.service] = now;
-                        }
-                        batches.push(Batch {
-                            start: round.start,
-                            duration: round.duration,
-                            tasks: round.tasks,
-                        });
-                    }
                 }
             }
         }
-        let steps = self.done;
+    }
+
+    /// Run one `T*` with full recording: batches and completion times
+    /// are materialized (the winner trial only).
+    fn run_recorded(&mut self, t_star: u32, num_services: usize) -> Schedule {
+        let mut batches: Vec<Batch> = Vec::new();
+        let mut now = 0.0;
+        let mut completion = vec![0.0; num_services];
+        let max_rounds = num_services * self.max_steps as usize + 8;
+        for _ in 0..max_rounds {
+            match self.round(t_star, now, true) {
+                None => break,
+                Some(round) => {
+                    if round.size == 0 {
+                        continue; // services drained during packing
+                    }
+                    now = round.start + round.duration;
+                    for t in &round.tasks {
+                        completion[t.service] = now;
+                    }
+                    batches.push(Batch {
+                        start: round.start,
+                        duration: round.duration,
+                        tasks: round.tasks,
+                    });
+                }
+            }
+        }
         // Completion time only meaningful for the *final* step of each
         // service — it already is: the last batch containing the service
         // set it.
-        Schedule { batches, steps, completion }
+        Schedule { batches, steps: self.s.done.clone(), completion }
     }
 }
 
@@ -339,24 +396,27 @@ impl BatchScheduler for Stacking {
         let t_star_max = self.derive_t_star_max(services, delay);
         let stride = self.config.t_star_stride.max(1);
         let mut best: Option<(f64, u32)> = None;
-        // Dry-run trials: only step counts are computed; the winning T*
-        // is re-run once with full recording (§Perf).
-        let try_t_star = |t_star: u32, best: &mut Option<(f64, u32)>| {
-            let trial = Trial::new(services, delay, self.config.max_steps);
-            let schedule = trial.run(t_star, services.len(), false);
-            let q = schedule.mean_quality(quality);
-            let better = match best {
-                None => true,
-                Some((best_q, _)) => q < *best_q - 1e-12,
+        let mut scratch = TrialScratch::default();
+        // Dry-run trials: only step counts are computed, into the one
+        // reused scratch; the winning T* is re-run once with full
+        // recording (§Perf).
+        let try_t_star =
+            |t_star: u32, best: &mut Option<(f64, u32)>, scratch: &mut TrialScratch| {
+                let mut trial = Trial::new(scratch, services, delay, self.config.max_steps);
+                trial.run_dry(t_star, services.len());
+                let q = mean_quality_of(&trial.s.done, quality);
+                let better = match best {
+                    None => true,
+                    Some((best_q, _)) => q < *best_q - 1e-12,
+                };
+                if better {
+                    *best = Some((q, t_star));
+                }
             };
-            if better {
-                *best = Some((q, t_star));
-            }
-        };
         // Coarse pass.
         let mut t_star = 1;
         while t_star <= t_star_max {
-            try_t_star(t_star, &mut best);
+            try_t_star(t_star, &mut best, &mut scratch);
             t_star += stride;
         }
         // Fine pass around the coarse winner.
@@ -366,13 +426,13 @@ impl BatchScheduler for Stacking {
             let hi = (center + stride - 1).min(t_star_max);
             for t in lo..=hi {
                 if (t as i64 - 1) % stride as i64 != 0 {
-                    try_t_star(t, &mut best);
+                    try_t_star(t, &mut best, &mut scratch);
                 }
             }
         }
         let (_, winner) = best.expect("at least one T* trial");
-        let mut best_schedule =
-            Trial::new(services, delay, self.config.max_steps).run(winner, services.len(), true);
+        let mut best_schedule = Trial::new(&mut scratch, services, delay, self.config.max_steps)
+            .run_recorded(winner, services.len());
         let mut best_q = best_schedule.mean_quality(quality);
 
         // Dominance guard: the clustering/packing heuristic can lose to

@@ -79,10 +79,7 @@ impl Schedule {
     /// Mean quality over all services — the objective of (P2)
     /// (services with zero steps are charged the outage quality).
     pub fn mean_quality(&self, quality: &dyn QualityModel) -> f64 {
-        if self.steps.is_empty() {
-            return 0.0;
-        }
-        self.steps.iter().map(|&t| quality.quality(t)).sum::<f64>() / self.steps.len() as f64
+        mean_quality_of(&self.steps, quality)
     }
 
     /// Number of services that completed zero steps.
@@ -100,6 +97,17 @@ impl Schedule {
         let task_time: f64 = self.batches.iter().map(|b| delay.a * b.size() as f64).sum();
         task_time / total
     }
+}
+
+/// Mean quality over raw step counts — the single (P2) objective
+/// definition, shared by [`Schedule::mean_quality`] and STACKING's dry
+/// `T*` trials (which score step counts without materializing a
+/// schedule).
+pub(crate) fn mean_quality_of(steps: &[u32], quality: &dyn QualityModel) -> f64 {
+    if steps.is_empty() {
+        return 0.0;
+    }
+    steps.iter().map(|&t| quality.quality(t)).sum::<f64>() / steps.len() as f64
 }
 
 /// Common interface for STACKING and the three baselines.

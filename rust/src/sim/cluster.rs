@@ -36,6 +36,7 @@ use crate::quality::QualityModel;
 use crate::routing::{route_trace, RouterKind, ServerState};
 use crate::scheduler::BatchScheduler;
 use crate::trace::{Arrival, ArrivalTrace};
+use crate::util::exec::par_map;
 
 use super::dynamic::{simulate_dynamic, Disposition, DynamicConfig, DynamicReport, RequestOutcome};
 
@@ -256,33 +257,40 @@ fn run_cluster(
     }
 
     // ---- independent per-server serving loops ----
-    let mut outcomes: Vec<Option<RequestOutcome>> = vec![None; trace.len()];
-    let mut servers = Vec::with_capacity(n);
-    let mut horizon = 0.0f64;
-    for (server, (arrivals, ids)) in per_server.into_iter().zip(assigned_ids).enumerate() {
-        let speed = cfg.speeds[server];
-        let scaled = BatchDelayModel::new(delay.a / speed, delay.b / speed);
-        let sub_trace = ArrivalTrace {
+    // Once dispatch is fixed, the per-server loops cannot observe each
+    // other, so they fan out across `cfg.dynamic.threads` workers —
+    // unless a *shared stateful* allocator (legacy shared warm-start
+    // PSO) makes the serial server order load-bearing, in which case
+    // the fan-out degrades to the serial loop so replay stays exact.
+    let sub_traces: Vec<ArrivalTrace> = per_server
+        .into_iter()
+        .map(|arrivals| ArrivalTrace {
             arrivals,
             total_bandwidth_hz: trace.total_bandwidth_hz,
             content_bits: trace.content_bits,
-        };
-        let report = simulate_dynamic(
-            &sub_trace,
-            scheduler,
-            allocators[server],
-            &scaled,
-            quality,
-            &cfg.dynamic,
-        );
+        })
+        .collect();
+    let par_safe = allocators.iter().all(|a| a.parallel_replay_safe())
+        || crate::bandwidth::distinct_instances(&allocators);
+    let threads = if par_safe { cfg.dynamic.threads } else { 1 };
+    let reports: Vec<DynamicReport> = par_map(threads, &sub_traces, |server, sub_trace| {
+        let speed = cfg.speeds[server];
+        let scaled = BatchDelayModel::new(delay.a / speed, delay.b / speed);
+        simulate_dynamic(sub_trace, scheduler, allocators[server], &scaled, quality, &cfg.dynamic)
+    });
+
+    // ---- merge: map sub-trace outcomes back to global ids ----
+    let mut outcomes: Vec<Option<RequestOutcome>> = vec![None; trace.len()];
+    let mut servers = Vec::with_capacity(n);
+    let mut horizon = 0.0f64;
+    for (server, (report, ids)) in reports.into_iter().zip(assigned_ids).enumerate() {
         horizon = horizon.max(report.horizon_s);
-        // ---- merge: map sub-trace outcomes back to global ids ----
         for outcome in &report.outcomes {
             let global = ids[outcome.id];
             debug_assert!(outcomes[global].is_none(), "request {global} resolved twice");
             outcomes[global] = Some(RequestOutcome { id: global, ..*outcome });
         }
-        servers.push(ServerReport { server, speed, assigned_ids: ids, report });
+        servers.push(ServerReport { server, speed: cfg.speeds[server], assigned_ids: ids, report });
     }
 
     let outcomes: Vec<RequestOutcome> =

@@ -68,6 +68,15 @@ pub struct DynamicConfig {
     /// default — epoch n+1 solves while epoch n executes) or the
     /// paper's synchronous loop. See [`SolveMode`].
     pub solve_mode: SolveMode,
+    /// Engine-level solve fan-out: worker threads for *independent*
+    /// per-server epoch solves (0 = auto, 1 = serial — the default).
+    /// `sim::cluster` runs whole per-server serving loops concurrently;
+    /// `sim::event` fans out per-server solves that share a freeze
+    /// instant. Results are bit-identical at any value (the engines
+    /// only parallelize solves that cannot observe each other —
+    /// `tests/exec_determinism.rs`); `simulate_dynamic` itself is a
+    /// single server and ignores it.
+    pub threads: usize,
 }
 
 impl DynamicConfig {
@@ -99,6 +108,7 @@ impl Default for DynamicConfig {
             plan_horizon_adaptive: false,
             solve_latency_s: 0.0,
             solve_mode: SolveMode::Pipelined,
+            threads: 1,
         }
     }
 }
@@ -106,6 +116,9 @@ impl Default for DynamicConfig {
 impl From<&crate::config::DynamicSettings> for DynamicConfig {
     /// The single mapping from config-file settings to the simulator's
     /// runtime config (used by the CLI and `bench::fig3_dynamic`).
+    /// Engine fan-out stays serial here — the `[perf] threads` knob is
+    /// applied by the caller that owns the fan-out level (the CLI
+    /// parallelizes servers, the bench sweeps parallelize cells).
     fn from(d: &crate::config::DynamicSettings) -> Self {
         Self {
             epoch: EpochPolicy::new(d.epoch_s, d.max_batch),
@@ -115,6 +128,7 @@ impl From<&crate::config::DynamicSettings> for DynamicConfig {
             plan_horizon_adaptive: d.plan_horizon_adaptive,
             solve_latency_s: d.solve_latency_s,
             solve_mode: d.solve_mode,
+            threads: 1,
         }
     }
 }

@@ -75,41 +75,46 @@ use crate::quality::QualityModel;
 use crate::routing::{LiveView, RouteContext, Router, RouterKind, ServerState};
 use crate::scheduler::BatchScheduler;
 use crate::trace::{Arrival, ArrivalTrace, DeviceRequest, Workload};
+use crate::util::exec::par_map;
 
 use super::cluster::{samples, ClusterConfig};
 use super::dynamic::{Disposition, DynamicConfig, EpochRecord, RequestOutcome};
-use super::solve_joint;
+use super::{solve_joint, JointSolution};
 
 /// Sentinel in [`EventReport::assignment`] for a request that was never
 /// dispatched to any server (the whole fleet was down from its arrival
 /// until its deadline).
 pub const UNROUTED: usize = usize::MAX;
 
-/// Settings for one fault-aware cluster run.
+/// Settings for one fault-aware cluster run. Fleet-shaped inputs
+/// (speeds, fault script) are borrowed, not owned: sweeps build one
+/// config per cell — λ × router × policy grids used to clone both per
+/// cell, which was pure churn since every cell reads them immutably.
 #[derive(Debug, Clone)]
-pub struct EventClusterConfig {
+pub struct EventClusterConfig<'a> {
     /// Per-server GPU speed factors (1.0 = the reference delay model).
-    pub speeds: Vec<f64>,
+    pub speeds: &'a [f64],
     /// Dispatch policy.
     pub router: RouterKind,
     /// Per-server serving-loop settings (shared by every server).
     pub dynamic: DynamicConfig,
-    /// Failure trace to inject (empty = all-alive).
-    pub faults: FaultScript,
+    /// Failure trace to inject ([`crate::faults::NO_FAULTS`] =
+    /// all-alive).
+    pub faults: &'a FaultScript,
     /// What happens to a dead/overloaded server's queued requests.
     pub migration: MigrationPolicyKind,
 }
 
-impl EventClusterConfig {
+impl<'a> EventClusterConfig<'a> {
     /// The zero-fault configuration equivalent to `cluster` — the
     /// bit-identity case against
     /// [`simulate_cluster`](super::simulate_cluster).
-    pub fn fault_free(cluster: &ClusterConfig) -> Self {
+    pub fn fault_free(cluster: &'a ClusterConfig) -> Self {
         Self {
-            speeds: cluster.speeds.clone(),
+            speeds: &cluster.speeds,
             router: cluster.router,
             dynamic: cluster.dynamic,
-            faults: FaultScript::empty(),
+            faults: &crate::faults::NO_FAULTS,
             migration: MigrationPolicyKind::None,
         }
     }
@@ -487,6 +492,11 @@ struct Engine<'a> {
     /// shared service estimate, exactly as in `route_trace`.
     delay: &'a BatchDelayModel,
     quality: &'a dyn QualityModel,
+    /// Per-server serving settings; `dynamic.threads` also gates the
+    /// solve fan-out — frozen epochs whose batch starts coincide on
+    /// the shared clock solve concurrently, with (P0) inputs fixed at
+    /// the freeze, so the fan-out is bit-identical to the serial event
+    /// order (see `run`).
     dynamic: DynamicConfig,
     policy: Box<dyn MigrationPolicy>,
     router: Box<dyn Router>,
@@ -548,7 +558,7 @@ impl Engine<'_> {
                     }
                 }
             }
-            let Some((_, class, idx)) = best else {
+            let Some((t, class, idx)) = best else {
                 // Only parked unroutable requests remain and no
                 // recovery can ever free them.
                 self.drain_unroutable();
@@ -557,7 +567,23 @@ impl Engine<'_> {
             match class {
                 0 => self.handle_fault(),
                 1 => self.handle_arrival(),
-                _ => self.handle_server_event(idx),
+                _ => {
+                    // A shared freeze instant: every *frozen* server
+                    // whose batch also starts exactly at `t` would be
+                    // processed back-to-back (ascending id) with no
+                    // intervening event — fault/arrival events at `t`
+                    // would have won the tie-break above — and their
+                    // solves read only their own frozen queues. Fan
+                    // them out together. The scan stops at the first
+                    // non-frozen epoch (a timer freeze, which an
+                    // earlier solve's steal hand-off may still grow).
+                    let batch = self.coincident_ready_solves(t, idx);
+                    if batch.len() >= 2 {
+                        self.solve_batch(t, batch);
+                    } else {
+                        self.handle_server_event(idx);
+                    }
+                }
             }
         }
         debug_assert!(self.unroutable.is_empty());
@@ -732,8 +758,140 @@ impl Engine<'_> {
             None => unreachable!("server event with no epoch"),
         };
         if ready {
-            self.solve_server(idx);
+            self.solve_server(idx, None);
         }
+    }
+
+    /// Servers (ascending id from `idx`) with a *frozen* epoch whose
+    /// batch starts exactly at `t` — the fan-out set for one shared
+    /// freeze instant. Scanning stops at the first same-instant server
+    /// still `Building` (its timer freeze must run in event order:
+    /// an earlier solve's steal hand-off can still join that epoch).
+    /// Returns a single-element batch when fan-out is off, the batch
+    /// would be trivial, or the involved allocators cannot safely solve
+    /// concurrently (one shared stateful instance).
+    fn coincident_ready_solves(&self, t: f64, idx: usize) -> Vec<usize> {
+        if self.dynamic.threads == 1 {
+            return vec![idx];
+        }
+        let mut batch = Vec::new();
+        for s in &self.servers[idx..] {
+            if s.next_event_time() != Some(t) {
+                continue;
+            }
+            match &s.epoch {
+                Some(e) if e.frozen() => batch.push(s.id),
+                _ => break,
+            }
+        }
+        if batch.is_empty() {
+            // The head event at `t` is a timer freeze, not a solve.
+            return vec![idx];
+        }
+        debug_assert_eq!(batch[0], idx);
+        let allocs: Vec<&dyn Allocator> = batch.iter().map(|&i| self.allocators[i]).collect();
+        let safe = allocs.iter().all(|a| a.parallel_replay_safe())
+            || crate::bandwidth::distinct_instances(&allocs);
+        if !safe {
+            return vec![idx];
+        }
+        batch
+    }
+
+    /// Solve a shared-freeze-instant batch: gather every server's (P0)
+    /// input read-only, run the expensive `solve_joint`s concurrently,
+    /// then apply the results in ascending server id — the exact order
+    /// the serial event loop would have used. Applying server i's
+    /// result cannot change server j's frozen solve input (steal
+    /// hand-offs land in j's backlog, not its frozen queue), so this is
+    /// bit-identical to the serial path.
+    fn solve_batch(&mut self, t: f64, batch: Vec<usize>) {
+        let scheduler = self.scheduler;
+        let quality = self.quality;
+        let jobs: Vec<(BatchDelayModel, &dyn Allocator, Option<Workload>)> = batch
+            .iter()
+            .map(|&i| (self.servers[i].delay, self.allocators[i], self.solve_input(i)))
+            .collect();
+        let sols = par_map(self.dynamic.threads, &jobs, |_, (scaled, allocator, input)| {
+            input.as_ref().map(|w| solve_joint(w, scheduler, *allocator, scaled, quality))
+        });
+        for (&idx, sol) in batch.iter().zip(sols) {
+            // An already-applied member can have opened AND re-frozen a
+            // degenerate next epoch whose event lands at or before
+            // `(t, idx)` (empty admissions leave `gpu_free` behind the
+            // clock). The serial loop would process those events here;
+            // they cannot touch the remaining members' frozen solve
+            // inputs (cross-server effects only push into backlogs), so
+            // the gathered solutions stay valid — but the events must
+            // run in their serial position.
+            self.drain_server_events_before(t, idx);
+            self.solve_server(idx, sol);
+        }
+    }
+
+    /// Process (serially) every pending server event strictly ordered
+    /// before `(t, idx)` — see `solve_batch`. Fault/arrival events need
+    /// no draining: everything at or before `t` was consumed before the
+    /// batch was selected.
+    fn drain_server_events_before(&mut self, t: f64, idx: usize) {
+        loop {
+            let mut first: Option<(f64, usize)> = None;
+            for s in &self.servers {
+                if let Some(te) = s.next_event_time() {
+                    let cand = (te, s.id);
+                    if cand < (t, idx) && first.map_or(true, |b| cand < b) {
+                        first = Some(cand);
+                    }
+                }
+            }
+            let Some((_, sid)) = first else { break };
+            self.handle_server_event(sid);
+        }
+    }
+
+    /// Whether a queued request survives admission for a batch starting
+    /// at `t0` — the single admission rule `solve_input` and
+    /// `solve_server` share, so a pre-gathered workload always matches
+    /// the partition the apply step replays.
+    fn admit(&self, q: &Pending, t0: f64, scaled: &BatchDelayModel) -> bool {
+        let residual = q.abs_deadline_s - t0;
+        let min_tx = if self.dynamic.admission {
+            q.link.tx_delay(self.trace.content_bits, self.trace.total_bandwidth_hz)
+        } else {
+            0.0
+        };
+        residual >= scaled.g(1) + min_tx
+    }
+
+    /// Read-only gather of one frozen epoch's (P0) problem: the
+    /// admitted requests' residual deadlines at the batch start,
+    /// horizon-clamped — exactly the workload `solve_server` would
+    /// build. `None` when admission drops the whole queue.
+    fn solve_input(&self, idx: usize) -> Option<Workload> {
+        let s = &self.servers[idx];
+        let e = s.epoch.as_ref().expect("frozen epoch to gather");
+        debug_assert!(e.frozen());
+        let t0 = s.solve_timing(e).batch_start_s;
+        let scaled = s.delay;
+        let plan_horizon = self.dynamic.effective_plan_horizon(e.queue.len());
+        let mut devices: Vec<DeviceRequest> = Vec::new();
+        for q in &e.queue {
+            if self.admit(q, t0, &scaled) {
+                devices.push(DeviceRequest {
+                    id: devices.len(),
+                    deadline: (q.abs_deadline_s - t0).min(plan_horizon),
+                    link: q.link,
+                });
+            }
+        }
+        if devices.is_empty() {
+            return None;
+        }
+        Some(Workload {
+            devices,
+            total_bandwidth_hz: self.trace.total_bandwidth_hz,
+            content_bits: self.trace.content_bits,
+        })
     }
 
     /// One frozen epoch's (P0) solve — simulate_dynamic's loop body,
@@ -742,8 +900,11 @@ impl Engine<'_> {
     /// solve itself ran during `[solve_begin, solve_end]` (overlapped
     /// with the previous batch under the pipelined mode), so the plan
     /// is evaluated against residual deadlines at the batch start —
-    /// the instant it targets.
-    fn solve_server(&mut self, idx: usize) {
+    /// the instant it targets. `presolved` carries the `solve_joint`
+    /// result when `solve_batch` already computed it concurrently (its
+    /// input came from `solve_input`, which gathers the identical
+    /// workload).
+    fn solve_server(&mut self, idx: usize, presolved: Option<JointSolution>) {
         let cfg = self.dynamic;
         let mut e = self.servers[idx].epoch.take().expect("frozen epoch to solve");
         let timing = self.servers[idx].solve_timing(&e);
@@ -763,13 +924,7 @@ impl Engine<'_> {
         let mut admitted: Vec<Pending> = Vec::new();
         let mut dropped_now = 0usize;
         for q in e.queue {
-            let residual = q.abs_deadline_s - t0;
-            let min_tx = if cfg.admission {
-                q.link.tx_delay(self.trace.content_bits, self.trace.total_bandwidth_hz)
-            } else {
-                0.0
-            };
-            if residual < scaled.g(1) + min_tx {
+            if !self.admit(&q, t0, &scaled) {
                 let disposition = if q.deferrals == 0 {
                     Disposition::RejectedOnArrival
                 } else {
@@ -820,23 +975,27 @@ impl Engine<'_> {
         }
 
         // ---- one (P0) solve over residual deadlines ----
-        let plan_horizon = cfg.effective_plan_horizon(queue_depth);
-        let devices: Vec<DeviceRequest> = admitted
-            .iter()
-            .enumerate()
-            .map(|(i, q)| DeviceRequest {
-                id: i,
-                deadline: (q.abs_deadline_s - t0).min(plan_horizon),
-                link: q.link,
-            })
-            .collect();
-        let workload = Workload {
-            devices,
-            total_bandwidth_hz: self.trace.total_bandwidth_hz,
-            content_bits: self.trace.content_bits,
+        let sol = match presolved {
+            Some(sol) => sol,
+            None => {
+                let plan_horizon = cfg.effective_plan_horizon(queue_depth);
+                let devices: Vec<DeviceRequest> = admitted
+                    .iter()
+                    .enumerate()
+                    .map(|(i, q)| DeviceRequest {
+                        id: i,
+                        deadline: (q.abs_deadline_s - t0).min(plan_horizon),
+                        link: q.link,
+                    })
+                    .collect();
+                let workload = Workload {
+                    devices,
+                    total_bandwidth_hz: self.trace.total_bandwidth_hz,
+                    content_bits: self.trace.content_bits,
+                };
+                solve_joint(&workload, self.scheduler, self.allocators[idx], &scaled, self.quality)
+            }
         };
-        let sol =
-            solve_joint(&workload, self.scheduler, self.allocators[idx], &scaled, self.quality);
         let makespan = sol.outcome.schedule.makespan();
 
         // ---- resolve served requests; collect carry-overs ----
@@ -1051,8 +1210,11 @@ impl Engine<'_> {
     fn finish(self) -> EventReport {
         let horizon = self.horizon;
         let fault_events = self.fault_events;
-        let outcomes: Vec<RequestOutcome> =
-            self.outcomes.into_iter().map(|o| o.expect("every request routed and resolved")).collect();
+        let outcomes: Vec<RequestOutcome> = self
+            .outcomes
+            .into_iter()
+            .map(|o| o.expect("every request routed and resolved"))
+            .collect();
         let servers = self
             .servers
             .into_iter()
@@ -1151,7 +1313,7 @@ fn run_event_cluster(
         dynamic: cfg.dynamic,
         policy: cfg.migration.build(),
         router: cfg.router.build(*delay),
-        states: ServerState::fleet(&cfg.speeds),
+        states: ServerState::fleet(cfg.speeds),
         ctx: RouteContext {
             total_bandwidth_hz: trace.total_bandwidth_hz,
             content_bits: trace.content_bits,
@@ -1212,16 +1374,35 @@ mod tests {
         )
     }
 
-    fn cfg(
+    /// Owned fleet inputs behind the borrowing `EventClusterConfig`:
+    /// tests build one of these (mutating `dynamic` freely) and hand
+    /// `view()` to the engine.
+    struct OwnedCfg {
         speeds: Vec<f64>,
         faults: FaultScript,
+        dynamic: DynamicConfig,
+        router: RouterKind,
         migration: MigrationPolicyKind,
-    ) -> EventClusterConfig {
-        EventClusterConfig {
+    }
+
+    impl OwnedCfg {
+        fn view(&self) -> EventClusterConfig<'_> {
+            EventClusterConfig {
+                speeds: &self.speeds,
+                router: self.router,
+                dynamic: self.dynamic,
+                faults: &self.faults,
+                migration: self.migration,
+            }
+        }
+    }
+
+    fn cfg(speeds: Vec<f64>, faults: FaultScript, migration: MigrationPolicyKind) -> OwnedCfg {
+        OwnedCfg {
             speeds,
-            router: RouterKind::JoinShortestQueue,
-            dynamic: DynamicConfig::default(),
             faults,
+            dynamic: DynamicConfig::default(),
+            router: RouterKind::JoinShortestQueue,
             migration,
         }
     }
@@ -1270,7 +1451,7 @@ mod tests {
         for policy in MigrationPolicyKind::all() {
             let script = FaultScript::random(3, 60.0, 25.0, 8.0, 11);
             let c = cfg(server_speeds(3, 0.5, 1.5), script, policy);
-            let a = run(&t, &c);
+            let a = run(&t, &c.view());
             assert_eq!(a.outcomes.len(), t.len(), "{}", policy.name());
             for (i, o) in a.outcomes.iter().enumerate() {
                 assert_eq!(o.id, i, "{}", policy.name());
@@ -1285,7 +1466,7 @@ mod tests {
             }
             assert!(counts.iter().all(|&c| c <= 1), "{}: double resolution", policy.name());
             // bit-identical replay
-            let b = run(&t, &c);
+            let b = run(&t, &c.view());
             assert_eq!(a.migrations.len(), b.migrations.len());
             assert_eq!(a.assignment, b.assignment);
             for (x, y) in a.outcomes.iter().zip(&b.outcomes) {
@@ -1307,11 +1488,12 @@ mod tests {
         let arrivals = vec![mk(0, 1.0), mk(1, 14.9), mk(2, 14.9), mk(3, 14.9), mk(4, 14.9)];
         let t = ArrivalTrace { arrivals, total_bandwidth_hz: 40_000.0, content_bits: 24_000.0 };
         let script = FaultScript::scheduled(vec![down(1, 15.0, 1000.0)]).unwrap();
-        let none = run(&t, &cfg(vec![1.0, 1.0], script.clone(), MigrationPolicyKind::None));
+        let none = run(&t, &cfg(vec![1.0, 1.0], script.clone(), MigrationPolicyKind::None).view());
         assert_eq!(none.lost_to_failure(), 2, "the dead server's open epoch is lost");
         assert_eq!(none.migrated(), 0);
         assert_eq!(none.served(), 3);
-        let requeue = run(&t, &cfg(vec![1.0, 1.0], script, MigrationPolicyKind::RequeueOnDeath));
+        let requeue =
+            run(&t, &cfg(vec![1.0, 1.0], script, MigrationPolicyKind::RequeueOnDeath).view());
         assert_eq!(requeue.lost_to_failure(), 0, "requeue must not strand anything");
         assert_eq!(requeue.migrated(), 2, "both orphans move to the surviving server");
         assert_eq!(requeue.served(), 5, "migration recovers the stranded requests");
@@ -1335,7 +1517,7 @@ mod tests {
         ];
         let t = ArrivalTrace { arrivals, total_bandwidth_hz: 40_000.0, content_bits: 24_000.0 };
         let script = FaultScript::scheduled(vec![down(0, 0.5, 10.0)]).unwrap();
-        let report = run(&t, &cfg(vec![1.0], script, MigrationPolicyKind::RequeueOnDeath));
+        let report = run(&t, &cfg(vec![1.0], script, MigrationPolicyKind::RequeueOnDeath).view());
         assert_eq!(report.outcomes.len(), 2);
         // both arrivals landed while no server was alive, then were
         // re-dispatched at the recovery and served within deadline
@@ -1357,7 +1539,7 @@ mod tests {
         let arrivals = vec![Arrival { id: 0, t_s: 1.0, deadline_s: 5.0, link: Link::new(7.0) }];
         let t = ArrivalTrace { arrivals, total_bandwidth_hz: 40_000.0, content_bits: 24_000.0 };
         let script = FaultScript::scheduled(vec![down(0, 0.0, 1e9)]).unwrap();
-        let report = run(&t, &cfg(vec![1.0], script, MigrationPolicyKind::RequeueOnDeath));
+        let report = run(&t, &cfg(vec![1.0], script, MigrationPolicyKind::RequeueOnDeath).view());
         assert_eq!(report.outcomes.len(), 1);
         assert_eq!(report.outcomes[0].disposition, Disposition::LostToFailure);
         assert_eq!(report.assignment[0], UNROUTED);
@@ -1371,11 +1553,12 @@ mod tests {
         let t = trace(10.0, 50.0, 9);
         let epoch = EpochPolicy::new(0.25, 4);
         let dynamic = DynamicConfig { epoch, ..DynamicConfig::default() };
+        let speeds = vec![0.3, 2.0];
         let c = EventClusterConfig {
-            speeds: vec![0.3, 2.0],
+            speeds: &speeds,
             router: RouterKind::RoundRobin,
             dynamic,
-            faults: FaultScript::empty(),
+            faults: &crate::faults::NO_FAULTS,
             migration: MigrationPolicyKind::StealWhenIdle,
         };
         let report = run(&t, &c);
@@ -1398,7 +1581,8 @@ mod tests {
             content_bits: 24_000.0,
         };
         let script = FaultScript::scheduled(vec![down(0, 1.0, 2.0)]).unwrap();
-        let report = run(&t, &cfg(vec![1.0, 1.0], script, MigrationPolicyKind::RequeueOnDeath));
+        let report =
+            run(&t, &cfg(vec![1.0, 1.0], script, MigrationPolicyKind::RequeueOnDeath).view());
         assert!(report.outcomes.is_empty());
         assert_eq!(report.total_epochs(), 0);
         assert_eq!(report.mean_quality(), 0.0);
@@ -1411,9 +1595,9 @@ mod tests {
         for policy in MigrationPolicyKind::all() {
             let mut c = cfg(server_speeds(3, 0.5, 1.5), script.clone(), policy);
             c.dynamic.solve_mode = SolveMode::Pipelined;
-            let pipelined = run(&t, &c);
+            let pipelined = run(&t, &c.view());
             c.dynamic.solve_mode = SolveMode::Synchronous;
-            let sync = run(&t, &c);
+            let sync = run(&t, &c.view());
             assert_eq!(pipelined.assignment, sync.assignment, "{}", policy.name());
             for (a, b) in pipelined.outcomes.iter().zip(&sync.outcomes) {
                 assert_eq!(a.disposition, b.disposition, "{} request {}", policy.name(), a.id);
@@ -1431,9 +1615,9 @@ mod tests {
         let mut c = cfg(vec![1.0, 1.0], FaultScript::empty(), MigrationPolicyKind::None);
         c.dynamic.solve_latency_s = 0.3;
         c.dynamic.solve_mode = SolveMode::Pipelined;
-        let pipelined = run(&t, &c);
+        let pipelined = run(&t, &c.view());
         c.dynamic.solve_mode = SolveMode::Synchronous;
-        let sync = run(&t, &c);
+        let sync = run(&t, &c.view());
         assert!(pipelined.solve_hidden_s() > 0.0, "overload must hide some solve time");
         assert_eq!(sync.solve_hidden_s(), 0.0, "synchronous solves are never hidden");
         assert!(
@@ -1451,11 +1635,12 @@ mod tests {
     #[test]
     fn live_router_serves_conserves_and_replays() {
         let t = trace(8.0, 50.0, 5);
+        let speeds = server_speeds(3, 0.5, 2.0);
         let c = EventClusterConfig {
-            speeds: server_speeds(3, 0.5, 2.0),
+            speeds: &speeds,
             router: RouterKind::LiveState,
             dynamic: DynamicConfig::default(),
-            faults: FaultScript::empty(),
+            faults: &crate::faults::NO_FAULTS,
             migration: MigrationPolicyKind::None,
         };
         let a = run(&t, &c);
@@ -1472,6 +1657,7 @@ mod tests {
         use crate::bandwidth::{AllocatorPool, PsoAllocator, PsoConfig};
         let t = trace(6.0, 40.0, 2);
         let c = cfg(server_speeds(2, 0.8, 1.2), FaultScript::empty(), MigrationPolicyKind::None);
+        let view = c.view();
         let fresh_pool = || {
             AllocatorPool::per_server(2, |_| {
                 Box::new(PsoAllocator::new(PsoConfig {
@@ -1490,7 +1676,7 @@ mod tests {
                 pool,
                 &BatchDelayModel::paper(),
                 &PowerLawQuality::paper(),
-                &c,
+                &view,
             )
         };
         let a = run_pooled(&fresh_pool());

@@ -6,6 +6,8 @@
 //! generation budgets and reports the mean quality `Q*`, which the
 //! allocator minimizes.
 
+use std::sync::atomic::{AtomicUsize, Ordering};
+
 use crate::bandwidth::{AllocationProblem, Allocator};
 use crate::delay::BatchDelayModel;
 use crate::quality::QualityModel;
@@ -23,6 +25,12 @@ pub struct JointSolution {
 }
 
 /// Solve (P0): outer bandwidth search with inner batch-denoising solve.
+///
+/// The objective handed to the allocator is a pure `Fn` (each inner
+/// (P2) solve depends only on the proposed allocation), so allocators
+/// that support it — PSO with `PsoConfig::threads` — evaluate
+/// candidates concurrently through [`Allocator::allocate_par`]; the
+/// result is bit-identical to the serial path at any thread count.
 pub fn solve_joint(
     workload: &Workload,
     scheduler: &dyn BatchScheduler,
@@ -31,17 +39,17 @@ pub fn solve_joint(
     quality: &dyn QualityModel,
 ) -> JointSolution {
     let problem = AllocationProblem::new(workload.total_bandwidth_hz, workload.links());
-    let mut inner_evals = 0usize;
+    let inner_evals = AtomicUsize::new(0);
     let allocation = {
-        let mut objective = |alloc: &[f64]| -> f64 {
-            inner_evals += 1;
+        let objective = |alloc: &[f64]| -> f64 {
+            inner_evals.fetch_add(1, Ordering::Relaxed);
             let services = gen_budgets(workload, alloc);
             scheduler.schedule(&services, delay, quality).mean_quality(quality)
         };
-        allocator.allocate(&problem, &mut objective)
+        allocator.allocate_par(&problem, &objective)
     };
     let outcome = evaluate(workload, &allocation, scheduler, delay, quality);
-    JointSolution { outcome, inner_evals }
+    JointSolution { outcome, inner_evals: inner_evals.into_inner() }
 }
 
 #[cfg(test)]

@@ -1,0 +1,157 @@
+//! Deterministic parallel execution — the vendored-dependency-free
+//! fan-out fabric behind the hot loops (PSO particle fitness,
+//! per-server epoch solves, bench sweep cells).
+//!
+//! The whole system is built on bit-identical replay, so the fabric's
+//! contract is strict: [`par_map`] is an *order-preserving* chunked map
+//! over [`std::thread::scope`] whose output is bit-identical to the
+//! serial `items.iter().map(f)` at **any** thread count — each item is
+//! mapped exactly once from an immutable reference and written back by
+//! index, so scheduling can reorder the *work* but never the *result*.
+//! Callers therefore treat `threads` as a pure performance knob
+//! (`tests/exec_determinism.rs` pins this across every engine).
+//!
+//! `threads == 0` means "auto": use [`std::thread::available_parallelism`].
+//! `threads == 1` (or ≤ 1 item) degenerates to a plain serial map with
+//! no thread spawned at all.
+
+use std::num::NonZeroUsize;
+
+/// Resolve a `threads` knob: `0` = auto-detect from
+/// [`std::thread::available_parallelism`] (1 if detection fails),
+/// anything else is taken literally.
+pub fn resolve_threads(threads: usize) -> usize {
+    if threads == 0 {
+        std::thread::available_parallelism().map(NonZeroUsize::get).unwrap_or(1)
+    } else {
+        threads
+    }
+}
+
+/// Order-preserving parallel map: `par_map(t, items, f)[i] == f(i, &items[i])`
+/// for every `i`, at every thread count `t` (0 = auto).
+///
+/// Work is split into contiguous chunks, one scoped worker thread per
+/// chunk; a panicking `f` propagates out of the scope join, exactly as
+/// it would from the serial loop. `f` must be pure with respect to the
+/// item it is given (it runs once per item, but on an unspecified
+/// thread and in an unspecified order across chunks).
+pub fn par_map<T, U, F>(threads: usize, items: &[T], f: F) -> Vec<U>
+where
+    T: Sync,
+    U: Send,
+    F: Fn(usize, &T) -> U + Sync,
+{
+    let workers = resolve_threads(threads).min(items.len()).max(1);
+    if workers == 1 {
+        return items.iter().enumerate().map(|(i, x)| f(i, x)).collect();
+    }
+    let mut out: Vec<Option<U>> = Vec::with_capacity(items.len());
+    out.resize_with(items.len(), || None);
+    let chunk = items.len().div_ceil(workers);
+    std::thread::scope(|scope| {
+        for (w, out_chunk) in out.chunks_mut(chunk).enumerate() {
+            let base = w * chunk;
+            let f = &f;
+            scope.spawn(move || {
+                for (j, slot) in out_chunk.iter_mut().enumerate() {
+                    *slot = Some(f(base + j, &items[base + j]));
+                }
+            });
+        }
+    });
+    out.into_iter().map(|o| o.expect("worker filled every slot")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn preserves_order_at_every_thread_count() {
+        let items: Vec<u64> = (0..257).collect();
+        let serial: Vec<u64> = items.iter().enumerate().map(|(i, x)| x * 3 + i as u64).collect();
+        for threads in [0, 1, 2, 3, 8, 64] {
+            let got = par_map(threads, &items, |i, x| x * 3 + i as u64);
+            assert_eq!(got, serial, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn empty_input_yields_empty_output() {
+        let items: Vec<u32> = Vec::new();
+        let out: Vec<u32> = par_map(8, &items, |_, x| *x);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn threads_one_degenerates_to_a_plain_map_on_the_calling_thread() {
+        let caller = std::thread::current().id();
+        let items = vec![1u32, 2, 3, 4];
+        let out = par_map(1, &items, |_, x| {
+            assert_eq!(std::thread::current().id(), caller, "threads=1 must not spawn");
+            x + 1
+        });
+        assert_eq!(out, vec![2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn single_item_never_spawns() {
+        let caller = std::thread::current().id();
+        let items = vec![7u32];
+        let out = par_map(0, &items, |_, x| {
+            assert_eq!(std::thread::current().id(), caller);
+            *x
+        });
+        assert_eq!(out, vec![7]);
+    }
+
+    #[test]
+    fn every_item_mapped_exactly_once() {
+        let items: Vec<usize> = (0..100).collect();
+        let calls = AtomicUsize::new(0);
+        let out = par_map(4, &items, |i, &x| {
+            calls.fetch_add(1, Ordering::Relaxed);
+            assert_eq!(i, x);
+            x
+        });
+        assert_eq!(out.len(), 100);
+        assert_eq!(calls.load(Ordering::Relaxed), 100);
+    }
+
+    #[test]
+    fn worker_panic_propagates_to_the_caller() {
+        let items: Vec<u32> = (0..64).collect();
+        let result = std::panic::catch_unwind(|| {
+            par_map(4, &items, |_, &x| {
+                if x == 37 {
+                    panic!("worker panic for item {x}");
+                }
+                x
+            })
+        });
+        assert!(result.is_err(), "a panicking worker must fail the whole map");
+    }
+
+    #[test]
+    fn serial_panic_also_propagates() {
+        let items = vec![0u32, 1];
+        let result = std::panic::catch_unwind(|| {
+            par_map(1, &items, |_, &x| {
+                if x == 1 {
+                    panic!("boom");
+                }
+                x
+            })
+        });
+        assert!(result.is_err());
+    }
+
+    #[test]
+    fn auto_resolves_to_at_least_one() {
+        assert!(resolve_threads(0) >= 1);
+        assert_eq!(resolve_threads(1), 1);
+        assert_eq!(resolve_threads(5), 5);
+    }
+}

@@ -5,9 +5,11 @@
 //! rest of the system needs: a PCG PRNG, descriptive statistics,
 //! least-squares fitting (linear and power-law — the two fits in the
 //! paper's Fig. 1), a minimal JSON parser for the artifact manifests, a
-//! symmetric eigensolver for Fréchet-distance checks, and a tiny
-//! property-testing harness.
+//! symmetric eigensolver for Fréchet-distance checks, a tiny
+//! property-testing harness, and the deterministic parallel-map fabric
+//! (`exec`) the hot loops fan out through.
 
+pub mod exec;
 pub mod fit;
 pub mod json;
 pub mod linalg;
@@ -15,6 +17,7 @@ pub mod prop;
 pub mod rng;
 pub mod stats;
 
+pub use exec::{par_map, resolve_threads};
 pub use fit::{fit_linear, fit_power_law, LinearFit, PowerLawFit};
 pub use rng::Pcg64;
 

@@ -1,0 +1,249 @@
+//! Thread-count invariance of the parallel solve fabric (ISSUE 5):
+//! every output — PSO allocations, cluster/event epoch traces, full
+//! bench sweeps — is **bitwise identical** at threads ∈ {1, 2, 8}.
+//!
+//! This is the property that makes `threads` a pure performance knob:
+//! `util::exec::par_map` preserves order, PSO's synchronous update is
+//! evaluation-order-free, and the engines only fan out solves that
+//! cannot observe each other. Seeded workloads, warm start on and off,
+//! faults on and off.
+
+use aigc_edge::bandwidth::{Allocator, AllocatorPool, EqualAllocator, PsoAllocator, PsoConfig};
+use aigc_edge::config::{ArrivalProcessKind, ArrivalSettings, ExperimentConfig};
+use aigc_edge::coordinator::SolveMode;
+use aigc_edge::delay::BatchDelayModel;
+use aigc_edge::faults::{FaultScript, MigrationPolicyKind, NO_FAULTS};
+use aigc_edge::quality::PowerLawQuality;
+use aigc_edge::routing::RouterKind;
+use aigc_edge::scheduler::Stacking;
+use aigc_edge::sim::{
+    server_speeds, simulate_cluster, simulate_event_cluster, simulate_event_cluster_pooled,
+    solve_joint, ClusterConfig, DynamicConfig, EventClusterConfig, RequestOutcome,
+};
+use aigc_edge::trace::{generate, ArrivalTrace};
+
+const THREAD_COUNTS: [usize; 3] = [1, 2, 8];
+
+fn trace(rate: f64, horizon: f64, seed: u64) -> ArrivalTrace {
+    let cfg = ExperimentConfig::paper();
+    let arrival = ArrivalSettings {
+        process: ArrivalProcessKind::Poisson,
+        rate_hz: rate,
+        burst_rate_hz: rate,
+        period_s: 60.0,
+        duty: 0.5,
+        horizon_s: horizon,
+        max_requests: 0,
+    };
+    ArrivalTrace::generate(&cfg.scenario, &arrival, seed)
+}
+
+fn outcome_bits(outcomes: &[RequestOutcome]) -> Vec<u64> {
+    let mut out = Vec::with_capacity(outcomes.len() * 5);
+    for o in outcomes {
+        out.push(o.steps as u64);
+        out.push(o.deferrals as u64 ^ ((o.epoch as u64) << 32));
+        out.push(o.quality.to_bits());
+        out.push(o.e2e_s.to_bits());
+        out.push(o.resolved_s.to_bits());
+    }
+    out
+}
+
+#[test]
+fn pso_allocations_bitwise_identical_across_thread_counts() {
+    let quality = PowerLawQuality::paper();
+    let delay = BatchDelayModel::paper();
+    let scheduler = Stacking::default();
+    for seed in [3u64, 7] {
+        let workload = generate(&ExperimentConfig::paper().scenario, seed);
+        for warm_start in [false, true] {
+            let solve_twice = |threads: usize| -> (Vec<u64>, Vec<u64>) {
+                let pso = PsoAllocator::new(PsoConfig {
+                    particles: 10,
+                    iterations: 12,
+                    patience: 6,
+                    warm_start,
+                    threads,
+                    ..Default::default()
+                });
+                // two solves: the second exercises warm start (when on)
+                // and scratch reuse (always)
+                let a = solve_joint(&workload, &scheduler, &pso, &delay, &quality);
+                let b = solve_joint(&workload, &scheduler, &pso, &delay, &quality);
+                let bits = |s: &aigc_edge::sim::JointSolution| -> Vec<u64> {
+                    s.outcome.allocation_hz.iter().map(|x| x.to_bits()).collect()
+                };
+                (bits(&a), bits(&b))
+            };
+            let reference = solve_twice(1);
+            for threads in THREAD_COUNTS {
+                let got = solve_twice(threads);
+                assert_eq!(
+                    got, reference,
+                    "seed {seed} warm={warm_start} threads={threads}: PSO diverged"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn cluster_epoch_traces_identical_across_thread_counts() {
+    let t = trace(6.0, 40.0, 7);
+    let quality = PowerLawQuality::paper();
+    let delay = BatchDelayModel::paper();
+    let scheduler = Stacking::default();
+    for router in RouterKind::all() {
+        let run = |threads: usize| {
+            let mut dynamic = DynamicConfig::default();
+            dynamic.threads = threads;
+            let cfg = ClusterConfig { speeds: server_speeds(3, 0.5, 1.5), router, dynamic };
+            simulate_cluster(&t, &scheduler, &EqualAllocator, &delay, &quality, &cfg)
+        };
+        let reference = run(1);
+        for threads in THREAD_COUNTS {
+            let got = run(threads);
+            let tag = format!("{} threads={threads}", router.name());
+            assert_eq!(got.assignment, reference.assignment, "{tag}");
+            assert_eq!(outcome_bits(&got.outcomes), outcome_bits(&reference.outcomes), "{tag}");
+            assert_eq!(got.horizon_s.to_bits(), reference.horizon_s.to_bits(), "{tag}");
+            for (a, b) in got.servers.iter().zip(&reference.servers) {
+                assert_eq!(a.report.epochs.len(), b.report.epochs.len(), "{tag}");
+                for (x, y) in a.report.epochs.iter().zip(&b.report.epochs) {
+                    assert_eq!(x.t_solve_s.to_bits(), y.t_solve_s.to_bits(), "{tag}");
+                    assert_eq!(x.served, y.served, "{tag}");
+                    assert_eq!(x.makespan_s.to_bits(), y.makespan_s.to_bits(), "{tag}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn event_engine_identical_across_thread_counts_faults_on_and_off() {
+    let t = trace(5.0, 40.0, 11);
+    let quality = PowerLawQuality::paper();
+    let delay = BatchDelayModel::paper();
+    let scheduler = Stacking::default();
+    let speeds = server_speeds(3, 0.5, 1.5);
+    let faulty = FaultScript::random(3, 50.0, 20.0, 6.0, 13);
+    let scripts: [(&str, &FaultScript, MigrationPolicyKind); 3] = [
+        ("no-faults", &NO_FAULTS, MigrationPolicyKind::None),
+        ("faults-requeue", &faulty, MigrationPolicyKind::RequeueOnDeath),
+        ("faults-steal", &faulty, MigrationPolicyKind::StealWhenIdle),
+    ];
+    for (name, faults, migration) in scripts {
+        let lifecycles = [
+            (SolveMode::Pipelined, 0.0),
+            (SolveMode::Pipelined, 0.2),
+            (SolveMode::Synchronous, 0.2),
+        ];
+        for (mode, latency) in lifecycles {
+            let run = |threads: usize| {
+                let mut dynamic = DynamicConfig::default();
+                dynamic.solve_mode = mode;
+                dynamic.solve_latency_s = latency;
+                dynamic.threads = threads;
+                let cfg = EventClusterConfig {
+                    speeds: &speeds,
+                    router: RouterKind::JoinShortestQueue,
+                    dynamic,
+                    faults,
+                    migration,
+                };
+                simulate_event_cluster(&t, &scheduler, &EqualAllocator, &delay, &quality, &cfg)
+            };
+            let reference = run(1);
+            for threads in THREAD_COUNTS {
+                let got = run(threads);
+                let tag = format!("{name} {} L={latency} threads={threads}", mode.name());
+                assert_eq!(got.assignment, reference.assignment, "{tag}");
+                assert_eq!(
+                    outcome_bits(&got.outcomes),
+                    outcome_bits(&reference.outcomes),
+                    "{tag}"
+                );
+                assert_eq!(got.migrations.len(), reference.migrations.len(), "{tag}");
+                assert_eq!(got.horizon_s.to_bits(), reference.horizon_s.to_bits(), "{tag}");
+            }
+        }
+    }
+}
+
+/// Per-server warm-start pools are pairwise-distinct instances, so the
+/// engines may fan their solves out — and must still replay exactly.
+#[test]
+fn pooled_warm_start_event_runs_identical_across_thread_counts() {
+    let t = trace(6.0, 30.0, 5);
+    let quality = PowerLawQuality::paper();
+    let delay = BatchDelayModel::paper();
+    let scheduler = Stacking::default();
+    let speeds = server_speeds(3, 0.6, 1.6);
+    let run = |threads: usize| {
+        let pool = AllocatorPool::per_server(3, |_| {
+            Box::new(PsoAllocator::new(PsoConfig {
+                particles: 6,
+                iterations: 6,
+                patience: 3,
+                warm_start: true,
+                ..Default::default()
+            })) as Box<dyn Allocator>
+        });
+        let mut dynamic = DynamicConfig::default();
+        dynamic.threads = threads;
+        let cfg = EventClusterConfig {
+            speeds: &speeds,
+            router: RouterKind::JoinShortestQueue,
+            dynamic,
+            faults: &NO_FAULTS,
+            migration: MigrationPolicyKind::None,
+        };
+        simulate_event_cluster_pooled(&t, &scheduler, &pool, &delay, &quality, &cfg)
+    };
+    let reference = run(1);
+    for threads in THREAD_COUNTS {
+        let got = run(threads);
+        assert_eq!(got.assignment, reference.assignment, "threads={threads}");
+        assert_eq!(
+            outcome_bits(&got.outcomes),
+            outcome_bits(&reference.outcomes),
+            "threads={threads}"
+        );
+    }
+}
+
+/// Full sweep outputs (the bench layer's fan-out) replay identically:
+/// `FigClusterRow`/`FigPipelineRow` derive `PartialEq`, so row-for-row
+/// equality covers every published number.
+#[test]
+fn bench_sweeps_identical_across_thread_counts() {
+    let mut cfg = ExperimentConfig::paper();
+    cfg.cluster.servers = 2;
+    cfg.cluster.speed_min = 0.6;
+    cfg.cluster.speed_max = 1.4;
+    cfg.arrival.rate_hz = 3.0;
+    cfg.arrival.burst_rate_hz = 9.0;
+    cfg.perf.threads = 1;
+    let cluster_ref = aigc_edge::bench::fig_cluster(&cfg, &[1.0, 4.0], 20.0);
+    let pipeline_ref = aigc_edge::bench::fig_pipeline(&cfg, &[0.0, 0.2], 20.0);
+    let faults_ref = aigc_edge::bench::fig_faults(&cfg, &[0.0, 2.0], 20.0);
+    for threads in [2usize, 8] {
+        cfg.perf.threads = threads;
+        assert_eq!(
+            aigc_edge::bench::fig_cluster(&cfg, &[1.0, 4.0], 20.0),
+            cluster_ref,
+            "fig_cluster threads={threads}"
+        );
+        assert_eq!(
+            aigc_edge::bench::fig_pipeline(&cfg, &[0.0, 0.2], 20.0),
+            pipeline_ref,
+            "fig_pipeline threads={threads}"
+        );
+        assert_eq!(
+            aigc_edge::bench::fig_faults(&cfg, &[0.0, 2.0], 20.0),
+            faults_ref,
+            "fig_faults threads={threads}"
+        );
+    }
+}

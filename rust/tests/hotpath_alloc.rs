@@ -1,0 +1,107 @@
+//! Hot-loop allocation guard (ISSUE 5): a counting global allocator
+//! pins the zero-alloc scratch reuse in the two solve hot paths —
+//! STACKING's per-`T*` grid trials and PSO's per-iteration swarm
+//! update. Both must allocate O(1) amortized per solve: growing the
+//! `T*` grid or the iteration budget by an order of magnitude may not
+//! grow the allocation count with it.
+//!
+//! Everything runs inside ONE `#[test]` — the counter is process-wide,
+//! and concurrent tests in this binary would pollute it.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use aigc_edge::bandwidth::{AllocationProblem, Allocator, PsoAllocator, PsoConfig};
+use aigc_edge::channel::Link;
+use aigc_edge::delay::BatchDelayModel;
+use aigc_edge::quality::PowerLawQuality;
+use aigc_edge::scheduler::{BatchScheduler, Service, Stacking, StackingConfig};
+
+struct CountingAlloc;
+
+static ALLOCS: AtomicUsize = AtomicUsize::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+fn allocs_during<R>(f: impl FnOnce() -> R) -> (usize, R) {
+    let before = ALLOCS.load(Ordering::Relaxed);
+    let r = f();
+    (ALLOCS.load(Ordering::Relaxed) - before, r)
+}
+
+#[test]
+fn solve_hot_loops_allocate_o1_per_epoch() {
+    // ---- STACKING: allocation count must not scale with the T* grid ----
+    // 12 services (below the stdlib sort's allocation threshold, like
+    // every real epoch batch) with equal budgets: the winning schedule
+    // is the same whatever the grid bound, so the only difference
+    // between the two configs is ~10× more dry trials — which must be
+    // allocation-free thanks to the shared TrialScratch.
+    let services: Vec<Service> = (0..12).map(|i| Service::new(i, 8.0)).collect();
+    let delay = BatchDelayModel::paper();
+    let quality = PowerLawQuality::paper();
+    let schedule_with_grid = |t_star_max: u32| {
+        Stacking::new(StackingConfig { t_star_max: Some(t_star_max), ..Default::default() })
+    };
+    let small = schedule_with_grid(24);
+    let large = schedule_with_grid(240);
+    // warm-up (untimed): first calls touch lazy init paths
+    small.schedule(&services, &delay, &quality);
+    large.schedule(&services, &delay, &quality);
+    let (small_allocs, small_sched) =
+        allocs_during(|| small.schedule(&services, &delay, &quality));
+    let (large_allocs, large_sched) =
+        allocs_during(|| large.schedule(&services, &delay, &quality));
+    assert_eq!(small_sched.steps, large_sched.steps, "equal-budget winner must not change");
+    assert!(
+        large_allocs <= small_allocs + 32,
+        "10x the T* grid may not grow allocations: {small_allocs} -> {large_allocs}"
+    );
+
+    // ---- PSO: allocation count must not scale with iterations ----
+    let problem = AllocationProblem::new(
+        40_000.0,
+        (0..6).map(|i| Link::new(5.0 + i as f64 * 0.5)).collect(),
+    );
+    let mut objective = |b: &[f64]| -> f64 { b.iter().map(|x| (x - 5_000.0).abs()).sum() };
+    let pso_with_iters = |iterations: usize| {
+        PsoAllocator::new(PsoConfig {
+            particles: 8,
+            iterations,
+            patience: 0, // no early stop: the iteration counts really differ
+            ..Default::default()
+        })
+    };
+    let short = pso_with_iters(5);
+    let long = pso_with_iters(50);
+    // warm-up: builds each allocator's swarm scratch once
+    short.allocate(&problem, &mut objective);
+    long.allocate(&problem, &mut objective);
+    let (short_allocs, a) = allocs_during(|| short.allocate(&problem, &mut objective));
+    let (long_allocs, b) = allocs_during(|| long.allocate(&problem, &mut objective));
+    assert_eq!(a.len(), b.len());
+    assert!(
+        long_allocs <= short_allocs + 16,
+        "10x the PSO iterations may not grow allocations: {short_allocs} -> {long_allocs}"
+    );
+    // sanity: the steady-state solve is near-zero-alloc in absolute
+    // terms, not just flat (scratch + the returned best position)
+    assert!(long_allocs <= 24, "steady-state PSO solve allocates too much: {long_allocs}");
+}

@@ -58,12 +58,28 @@ fn random_faults(g: &mut Gen, servers: usize, horizon_s: f64) -> FaultScript {
     FaultScript::random(servers, horizon_s * 1.2, mtbf, mttr, g.u64())
 }
 
-fn random_config(g: &mut Gen, faults: FaultScript) -> EventClusterConfig {
+/// A random fleet's owned inputs; the (borrowing) `EventClusterConfig`
+/// is assembled at the call site.
+struct RandomFleet {
+    speeds: Vec<f64>,
+    router: RouterKind,
+    migration: MigrationPolicyKind,
+}
+
+fn random_fleet(g: &mut Gen) -> RandomFleet {
     let n = g.usize_in(1, 5);
     let speeds = g.vec_of(n, |g| g.f64_in(0.3, 2.5));
     let router = *g.pick(&RouterKind::all());
     let migration = *g.pick(&MigrationPolicyKind::all());
-    EventClusterConfig { speeds, router, dynamic: DynamicConfig::default(), faults, migration }
+    RandomFleet { speeds, router, migration }
+}
+
+/// Drop script intervals naming servers outside the fleet.
+fn clamp_to_fleet(faults: &FaultScript, servers: usize) -> FaultScript {
+    FaultScript::scheduled(
+        faults.downs().iter().copied().filter(|d| d.server < servers).collect(),
+    )
+    .unwrap()
 }
 
 fn run(trace: &ArrivalTrace, cfg: &EventClusterConfig) -> EventReport {
@@ -82,12 +98,16 @@ fn no_request_lost_or_double_served_across_failures() {
     forall("fault conservation", 200, |g: &mut Gen| {
         let trace = random_trace(g);
         let faults = random_faults(g, 5, trace.duration_s());
-        let mut cfg = random_config(g, faults);
+        let fleet = random_fleet(g);
         // the script may name servers the fleet doesn't have; clamp it
-        cfg.faults = FaultScript::scheduled(
-            cfg.faults.downs().iter().copied().filter(|d| d.server < cfg.servers()).collect(),
-        )
-        .unwrap();
+        let faults = clamp_to_fleet(&faults, fleet.speeds.len());
+        let cfg = EventClusterConfig {
+            speeds: &fleet.speeds,
+            router: fleet.router,
+            dynamic: DynamicConfig::default(),
+            faults: &faults,
+            migration: fleet.migration,
+        };
         let report = run(&trace, &cfg);
         prop_assert!(g, report.outcomes.len() == trace.len(), "outcome count");
         prop_assert!(
@@ -131,10 +151,10 @@ fn migrated_requests_keep_identity_and_budget() {
         let (mtbf, mttr) = (g.f64_in(2.0, 15.0), g.f64_in(0.5, 6.0));
         let faults = FaultScript::random(n, trace.duration_s() * 1.2, mtbf, mttr, g.u64());
         let cfg = EventClusterConfig {
-            speeds,
+            speeds: &speeds,
             router: *g.pick(&RouterKind::all()),
             dynamic: DynamicConfig::default(),
-            faults,
+            faults: &faults,
             migration: MigrationPolicyKind::RequeueOnDeath,
         };
         let report = run(&trace, &cfg);
@@ -168,11 +188,15 @@ fn replay_is_seed_identical_under_faults() {
     forall("fault replay", 60, |g: &mut Gen| {
         let trace = random_trace(g);
         let faults = random_faults(g, 3, trace.duration_s());
-        let mut cfg = random_config(g, faults);
-        cfg.faults = FaultScript::scheduled(
-            cfg.faults.downs().iter().copied().filter(|d| d.server < cfg.servers()).collect(),
-        )
-        .unwrap();
+        let fleet = random_fleet(g);
+        let faults = clamp_to_fleet(&faults, fleet.speeds.len());
+        let cfg = EventClusterConfig {
+            speeds: &fleet.speeds,
+            router: fleet.router,
+            dynamic: DynamicConfig::default(),
+            faults: &faults,
+            migration: fleet.migration,
+        };
         let a = run(&trace, &cfg);
         let b = run(&trace, &cfg);
         prop_assert!(g, a.assignment == b.assignment, "assignment replay");

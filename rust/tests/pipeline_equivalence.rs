@@ -18,7 +18,7 @@ use aigc_edge::bandwidth::EqualAllocator;
 use aigc_edge::config::{ArrivalProcessKind, ArrivalSettings, ExperimentConfig};
 use aigc_edge::coordinator::SolveMode;
 use aigc_edge::delay::BatchDelayModel;
-use aigc_edge::faults::{FaultScript, MigrationPolicyKind};
+use aigc_edge::faults::{FaultScript, MigrationPolicyKind, NO_FAULTS};
 use aigc_edge::quality::PowerLawQuality;
 use aigc_edge::routing::RouterKind;
 use aigc_edge::scheduler::Stacking;
@@ -95,13 +95,13 @@ fn assert_epochs_identical(tag: &str, a: &[EpochRecord], b: &[EpochRecord]) {
     }
 }
 
-fn event_cfg(
-    speeds: Vec<f64>,
+fn event_cfg<'a>(
+    speeds: &'a [f64],
     router: RouterKind,
     dynamic: DynamicConfig,
-    faults: FaultScript,
+    faults: &'a FaultScript,
     migration: MigrationPolicyKind,
-) -> EventClusterConfig {
+) -> EventClusterConfig<'a> {
     EventClusterConfig { speeds, router, dynamic, faults, migration }
 }
 
@@ -121,20 +121,20 @@ fn seed7_zero_latency_all_routers_all_fleets() {
             let pipelined = run_event(
                 &trace,
                 &event_cfg(
-                    speeds.clone(),
+                    &speeds,
                     router,
                     with_mode(SolveMode::Pipelined, 0.0),
-                    FaultScript::empty(),
+                    &NO_FAULTS,
                     MigrationPolicyKind::None,
                 ),
             );
             let sync = run_event(
                 &trace,
                 &event_cfg(
-                    speeds.clone(),
+                    &speeds,
                     router,
                     with_mode(SolveMode::Synchronous, 0.0),
-                    FaultScript::empty(),
+                    &NO_FAULTS,
                     MigrationPolicyKind::None,
                 ),
             );
@@ -177,10 +177,10 @@ fn seed7_single_server_matches_simulate_dynamic() {
         let ev = run_event(
             &trace,
             &event_cfg(
-                vec![1.0],
+                &[1.0],
                 RouterKind::RoundRobin,
                 dynamic,
-                FaultScript::empty(),
+                &NO_FAULTS,
                 MigrationPolicyKind::None,
             ),
         );
@@ -216,20 +216,20 @@ fn seed7_zero_latency_with_faults_mode_invariant() {
             let pipelined = run_event(
                 &trace,
                 &event_cfg(
-                    server_speeds(3, 0.5, 1.5),
+                    &server_speeds(3, 0.5, 1.5),
                     RouterKind::JoinShortestQueue,
                     with_mode(SolveMode::Pipelined, 0.0),
-                    script.clone(),
+                    &script,
                     policy,
                 ),
             );
             let sync = run_event(
                 &trace,
                 &event_cfg(
-                    server_speeds(3, 0.5, 1.5),
+                    &server_speeds(3, 0.5, 1.5),
                     RouterKind::JoinShortestQueue,
                     with_mode(SolveMode::Synchronous, 0.0),
-                    script.clone(),
+                    &script,
                     policy,
                 ),
             );
@@ -250,20 +250,20 @@ fn seed7_zero_latency_live_router_mode_invariant() {
     let pipelined = run_event(
         &trace,
         &event_cfg(
-            server_speeds(3, 0.5, 1.5),
+            &server_speeds(3, 0.5, 1.5),
             RouterKind::LiveState,
             with_mode(SolveMode::Pipelined, 0.0),
-            FaultScript::empty(),
+            &NO_FAULTS,
             MigrationPolicyKind::None,
         ),
     );
     let sync = run_event(
         &trace,
         &event_cfg(
-            server_speeds(3, 0.5, 1.5),
+            &server_speeds(3, 0.5, 1.5),
             RouterKind::LiveState,
             with_mode(SolveMode::Synchronous, 0.0),
-            FaultScript::empty(),
+            &NO_FAULTS,
             MigrationPolicyKind::None,
         ),
     );
@@ -287,10 +287,10 @@ fn seed7_nonzero_latency_engines_stay_mirrored() {
                 let ev = run_event(
                     &trace,
                     &event_cfg(
-                        server_speeds(3, 0.5, 1.5),
+                        &server_speeds(3, 0.5, 1.5),
                         router,
                         dynamic,
-                        FaultScript::empty(),
+                        &NO_FAULTS,
                         MigrationPolicyKind::None,
                     ),
                 );

@@ -27,7 +27,7 @@ use aigc_edge::bandwidth::{Allocator, AllocatorPool, EqualAllocator, PsoAllocato
 use aigc_edge::config::{ArrivalProcessKind, ArrivalSettings, ExperimentConfig};
 use aigc_edge::coordinator::SolveMode;
 use aigc_edge::delay::BatchDelayModel;
-use aigc_edge::faults::{FaultScript, MigrationPolicyKind};
+use aigc_edge::faults::{MigrationPolicyKind, NO_FAULTS};
 use aigc_edge::prop_assert;
 use aigc_edge::quality::PowerLawQuality;
 use aigc_edge::routing::RouterKind;
@@ -173,10 +173,10 @@ fn per_server_allocator_replay_is_seed_deterministic() {
             })
         };
         let event_cfg = EventClusterConfig {
-            speeds: speeds.clone(),
+            speeds: &speeds,
             router: RouterKind::JoinShortestQueue,
             dynamic,
-            faults: FaultScript::empty(),
+            faults: &NO_FAULTS,
             migration: MigrationPolicyKind::None,
         };
         let run_event = |pool: &AllocatorPool| {
