@@ -1,0 +1,90 @@
+//! The 10⁷-request scale sweep behind `BENCH_pr6.json`.
+//!
+//! Defaults to CI size (10⁵ requests per λ cell); set
+//! `FIG_SCALE_FULL=1` for the full 10⁷-per-cell run (minutes of wall
+//! clock, still flat memory). Three blocking asserts:
+//!
+//! * streaming percentiles within `⌈eps·n⌉ + 1` ranks of exact on a
+//!   materialized 10⁵ stream (agreement);
+//! * sketch support under the O((1/eps)·log(eps·n)) bound in every
+//!   cell (memory flatness — per-request state leaking into the
+//!   streaming path trips this no matter the sweep size);
+//! * bitwise replay of a cell (determinism — the sketch has no
+//!   randomness and no clocks).
+
+use aigc_edge::bench::scale::{
+    default_scale_path, run_scale, scale_json, verify_agreement, ScaleOptions,
+};
+use aigc_edge::config::ExperimentConfig;
+
+fn main() {
+    let full = std::env::var("FIG_SCALE_FULL").map(|v| v == "1").unwrap_or(false);
+    let mut opts = ScaleOptions::default();
+    if full {
+        opts.requests_per_cell = 10_000_000;
+    }
+    let cfg = ExperimentConfig::paper();
+    println!(
+        "fig_scale: {} requests per λ cell over λ = {:?}, sketch eps {}",
+        opts.requests_per_cell,
+        opts.lambdas,
+        opts.sketch_eps
+    );
+
+    // BLOCKING: streaming percentiles must track exact within the
+    // documented rank budget — checked on a materialized stream that
+    // fits in memory (10⁵), independently of the sweep size.
+    let verify_opts = ScaleOptions { requests_per_cell: 100_000, ..opts.clone() };
+    let worst = verify_agreement(&cfg, &verify_opts, verify_opts.lambdas[0])
+        .unwrap_or_else(|e| panic!("sketch-vs-exact agreement failed: {e}"));
+    println!("agreement at 1e5: worst percentile sits {worst} ranks from its exact target");
+
+    let rows = run_scale(&cfg, &opts);
+    for r in &rows {
+        // BLOCKING: flat memory — `support` is the entire per-request
+        // state retained and must obey the logarithmic bound.
+        assert!(
+            r.support <= r.support_bound,
+            "λ={}: sketch support {} exceeds flatness bound {}",
+            r.rate_hz,
+            r.support,
+            r.support_bound
+        );
+        println!(
+            "  λ={:<5} {:>9} req  served {:>9}  outage {:.3}  p50 {:.2}s p95 {:.2}s p99 {:.2}s  support {:>4}/{:<4}  {:>8.2}s wall",
+            r.rate_hz,
+            r.requests,
+            r.served,
+            r.outage_rate,
+            r.p50_e2e_s,
+            r.p95_e2e_s,
+            r.p99_e2e_s,
+            r.support,
+            r.support_bound,
+            r.wall_s
+        );
+    }
+
+    // BLOCKING: replaying a cell must reproduce every output float
+    // bit-for-bit.
+    let small = ScaleOptions {
+        lambdas: vec![opts.lambdas[0]],
+        requests_per_cell: 20_000,
+        ..opts.clone()
+    };
+    let a = &run_scale(&cfg, &small)[0];
+    let b = &run_scale(&cfg, &small)[0];
+    assert_eq!(a.requests, b.requests, "replay diverged on request count");
+    assert!(
+        a.p50_e2e_s.to_bits() == b.p50_e2e_s.to_bits()
+            && a.p95_e2e_s.to_bits() == b.p95_e2e_s.to_bits()
+            && a.p99_e2e_s.to_bits() == b.p99_e2e_s.to_bits(),
+        "replay diverged bitwise"
+    );
+
+    let path = default_scale_path();
+    std::fs::write(&path, scale_json(&rows, &opts))
+        .unwrap_or_else(|e| panic!("writing {}: {e}", path.display()));
+    println!("fig_scale: wrote {}", path.display());
+    println!("fig_scale OK — flat memory, sketch ≡ exact within budget, bitwise replay");
+}

@@ -1,0 +1,329 @@
+//! Scale harness — the 10⁷-request λ sweep behind `BENCH_pr6.json`.
+//!
+//! Each cell streams a Poisson arrival process straight through the
+//! dynamic engine (`simulate_dynamic_streaming`): arrivals are
+//! generated lazily and every resolved request folds into a GK
+//! quantile sketch, so the resident state is the epoch queue plus the
+//! sketch — flat in the request count. Three properties are asserted
+//! by the callers, not just reported:
+//!
+//! * **memory flatness** — the sketch support must stay under the
+//!   O((1/eps)·log(eps·n)) bound at every cell size;
+//! * **agreement** — streaming percentiles must sit within
+//!   `⌈eps·n⌉ + 1` ranks of the exact sorted-vector percentiles on
+//!   the same arrival stream;
+//! * **bit-identity** — re-running a cell reproduces every output
+//!   float bit-for-bit (the sketch is deterministic: no randomness,
+//!   no clocks, batch-merged inserts).
+//!
+//! Two entry points: `benches/fig_scale.rs` (CI size, 10⁵ per cell by
+//! default; `FIG_SCALE_FULL=1` runs the full 10⁷) and `cargo test`
+//! (tiny sizes through the unit tests below).
+
+use std::path::Path;
+use std::time::Instant;
+
+use crate::bandwidth::EqualAllocator;
+use crate::config::{ArrivalProcessKind, ArrivalSettings, ExperimentConfig};
+use crate::delay::BatchDelayModel;
+use crate::metrics::OutcomeAccumulator;
+use crate::quality::PowerLawQuality;
+use crate::scheduler::Stacking;
+use crate::sim::{simulate_dynamic, simulate_dynamic_streaming, Disposition, DynamicConfig};
+use crate::trace::{ArrivalStream, ArrivalTrace};
+
+/// Sweep knobs.
+#[derive(Debug, Clone)]
+pub struct ScaleOptions {
+    /// Target arrivals per λ cell (the horizon is sized as
+    /// `requests / λ`, so the Poisson draw lands near the target).
+    pub requests_per_cell: usize,
+    /// Arrival rates swept.
+    pub lambdas: Vec<f64>,
+    /// Sketch rank-error fraction, in (0, 0.5).
+    pub sketch_eps: f64,
+    pub seed: u64,
+}
+
+impl Default for ScaleOptions {
+    fn default() -> Self {
+        Self {
+            requests_per_cell: 100_000,
+            lambdas: vec![2.0, 6.0, 12.0],
+            sketch_eps: 0.01,
+            seed: 2025,
+        }
+    }
+}
+
+/// One λ cell's streamed summary.
+#[derive(Debug, Clone)]
+pub struct ScaleRow {
+    pub rate_hz: f64,
+    /// Arrivals actually generated (Poisson draw around the target).
+    pub requests: usize,
+    pub served: usize,
+    pub outage_rate: f64,
+    pub p50_e2e_s: f64,
+    pub p95_e2e_s: f64,
+    pub p99_e2e_s: f64,
+    pub mean_wait_s: f64,
+    pub wall_s: f64,
+    /// Sketch footprint after the run — every value still retained.
+    pub support: usize,
+    /// The O((1/eps)·log(eps·n)) bound `support` must stay under.
+    pub support_bound: usize,
+    pub peak_queue_depth: usize,
+}
+
+/// Loose but safe form of the GK footprint bound — the same formula
+/// `util::stats` asserts in its own growth test. Flat for practical
+/// purposes: doubling `n` adds one log step, never a linear term.
+pub fn support_bound(eps: f64, n: u64) -> usize {
+    (12.0 / eps * (2.0 * eps * n as f64 + 4.0).log2()).ceil() as usize + 64
+}
+
+/// The cell's arrival settings: Poisson at `rate_hz`, horizon sized to
+/// hit the per-cell request target.
+fn cell_arrival(cfg: &ExperimentConfig, opts: &ScaleOptions, rate_hz: f64) -> ArrivalSettings {
+    let mut arrival = cfg.arrival;
+    arrival.process = ArrivalProcessKind::Poisson;
+    arrival.rate_hz = rate_hz;
+    arrival.horizon_s = opts.requests_per_cell as f64 / rate_hz;
+    arrival
+}
+
+/// Stream one λ cell through the dynamic engine without ever
+/// materializing the trace.
+pub fn run_cell(cfg: &ExperimentConfig, opts: &ScaleOptions, rate_hz: f64) -> ScaleRow {
+    let arrival = cell_arrival(cfg, opts, rate_hz);
+    let delay = BatchDelayModel::new(cfg.delay.a, cfg.delay.b);
+    let quality = PowerLawQuality::paper();
+    let scheduler = Stacking::default();
+    let dyn_cfg = DynamicConfig::from(&cfg.dynamic);
+    let stream = ArrivalStream::new(&cfg.scenario, &arrival, opts.seed);
+    let (bw, bits) = (stream.total_bandwidth_hz(), stream.content_bits());
+    let start = Instant::now();
+    let report = simulate_dynamic_streaming(
+        stream,
+        bw,
+        bits,
+        &scheduler,
+        &EqualAllocator,
+        &delay,
+        &quality,
+        &dyn_cfg,
+        OutcomeAccumulator::streaming(opts.sketch_eps),
+    );
+    let wall_s = start.elapsed().as_secs_f64();
+    let stats = report.stats();
+    ScaleRow {
+        rate_hz,
+        requests: report.count(),
+        served: report.served(),
+        outage_rate: stats.outage_rate,
+        p50_e2e_s: stats.p50_e2e_s,
+        p95_e2e_s: stats.p95_e2e_s,
+        p99_e2e_s: stats.p99_e2e_s,
+        mean_wait_s: stats.mean_wait_s,
+        wall_s,
+        support: report.accumulator.support_len(),
+        support_bound: support_bound(opts.sketch_eps, report.count() as u64),
+        peak_queue_depth: report.peak_queue_depth,
+    }
+}
+
+/// The full sweep. Callers treat `support > support_bound` in any row
+/// as a hard failure — it means per-request state leaked into the
+/// "streaming" path.
+pub fn run_scale(cfg: &ExperimentConfig, opts: &ScaleOptions) -> Vec<ScaleRow> {
+    opts.lambdas.iter().map(|&l| run_cell(cfg, opts, l)).collect()
+}
+
+/// Streaming-vs-exact agreement on one materialized cell: the scalar
+/// tallies must match exactly, and every reported percentile must be
+/// an actually-served delay whose rank sits within `⌈eps·n⌉ + 1` of
+/// the exact target rank. Returns the worst observed rank distance.
+pub fn verify_agreement(
+    cfg: &ExperimentConfig,
+    opts: &ScaleOptions,
+    rate_hz: f64,
+) -> Result<u64, String> {
+    let arrival = cell_arrival(cfg, opts, rate_hz);
+    let delay = BatchDelayModel::new(cfg.delay.a, cfg.delay.b);
+    let quality = PowerLawQuality::paper();
+    let scheduler = Stacking::default();
+    let dyn_cfg = DynamicConfig::from(&cfg.dynamic);
+    let trace = ArrivalTrace::generate(&cfg.scenario, &arrival, opts.seed);
+    let exact = simulate_dynamic(&trace, &scheduler, &EqualAllocator, &delay, &quality, &dyn_cfg);
+    let streamed = simulate_dynamic_streaming(
+        trace.arrivals.iter().copied(),
+        trace.total_bandwidth_hz,
+        trace.content_bits,
+        &scheduler,
+        &EqualAllocator,
+        &delay,
+        &quality,
+        &dyn_cfg,
+        OutcomeAccumulator::streaming(opts.sketch_eps),
+    );
+    if streamed.count() != exact.outcomes.len() || streamed.served() != exact.served() {
+        return Err(format!(
+            "scalar tallies diverged: streaming {}/{} vs exact {}/{}",
+            streamed.served(),
+            streamed.count(),
+            exact.served(),
+            exact.outcomes.len()
+        ));
+    }
+    let mut sorted: Vec<f64> = exact
+        .outcomes
+        .iter()
+        .filter(|o| o.disposition == Disposition::Served)
+        .map(|o| o.e2e_s)
+        .collect();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    if sorted.is_empty() {
+        return Err("no served requests — the cell cannot exercise the sketch".into());
+    }
+    let n = sorted.len() as u64;
+    let budget = (opts.sketch_eps * n as f64).ceil() as u64 + 1;
+    let stats = streamed.stats();
+    let mut worst = 0u64;
+    for (p, v) in [(50.0, stats.p50_e2e_s), (95.0, stats.p95_e2e_s), (99.0, stats.p99_e2e_s)] {
+        let target = ((p / 100.0) * n as f64).ceil().max(1.0) as u64;
+        // the value's rank interval in the exact sorted delays
+        let lo = sorted.partition_point(|&x| x < v) as u64 + 1;
+        let hi = sorted.partition_point(|&x| x <= v) as u64;
+        if hi < lo {
+            return Err(format!("p{p}: sketch value {v} is not a served sample"));
+        }
+        let dist = if target < lo {
+            lo - target
+        } else if target > hi {
+            target - hi
+        } else {
+            0
+        };
+        if dist > budget {
+            return Err(format!(
+                "p{p}: rank {lo}..{hi} sits {dist} ranks from target {target} (budget {budget})"
+            ));
+        }
+        worst = worst.max(dist);
+    }
+    Ok(worst)
+}
+
+/// Serialize the sweep as the tracked `BENCH_pr6.json` document.
+pub fn scale_json(rows: &[ScaleRow], opts: &ScaleOptions) -> String {
+    let mut cells = String::new();
+    for (i, r) in rows.iter().enumerate() {
+        if i > 0 {
+            cells.push_str(",\n");
+        }
+        cells.push_str(&format!(
+            "    {{\"rate_hz\": {}, \"requests\": {}, \"served\": {}, \"outage_rate\": {:.6}, \
+             \"p50_e2e_s\": {:.6}, \"p95_e2e_s\": {:.6}, \"p99_e2e_s\": {:.6}, \
+             \"wall_s\": {:.3}, \"support\": {}, \"support_bound\": {}, \
+             \"peak_queue_depth\": {}}}",
+            r.rate_hz,
+            r.requests,
+            r.served,
+            r.outage_rate,
+            r.p50_e2e_s,
+            r.p95_e2e_s,
+            r.p99_e2e_s,
+            r.wall_s,
+            r.support,
+            r.support_bound,
+            r.peak_queue_depth
+        ));
+    }
+    format!(
+        "{{\n  \"pr\": 6,\n  \"requests_per_cell\": {},\n  \"sketch_eps\": {},\n  \"seed\": {},\n  \"cells\": [\n{}\n  ]\n}}\n",
+        opts.requests_per_cell,
+        opts.sketch_eps,
+        opts.seed,
+        cells
+    )
+}
+
+/// Write `BENCH_pr6.json`.
+pub fn write_scale_json(
+    path: &Path,
+    rows: &[ScaleRow],
+    opts: &ScaleOptions,
+) -> std::io::Result<()> {
+    std::fs::write(path, scale_json(rows, opts))
+}
+
+/// The tracked trajectory location, `<repo root>/BENCH_pr6.json` —
+/// derived from the compile-time checkout like `perf::default_bench_path`,
+/// so only callers that run where they were built should use it.
+pub fn default_scale_path() -> std::path::PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("..").join("BENCH_pr6.json")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_opts() -> ScaleOptions {
+        ScaleOptions {
+            requests_per_cell: 600,
+            lambdas: vec![4.0, 8.0],
+            sketch_eps: 0.02,
+            seed: 11,
+        }
+    }
+
+    #[test]
+    fn sweep_rows_obey_the_support_bound_and_replay_bitwise() {
+        let cfg = ExperimentConfig::paper();
+        let opts = tiny_opts();
+        let rows = run_scale(&cfg, &opts);
+        assert_eq!(rows.len(), 2);
+        for r in &rows {
+            assert!(r.requests > 0 && r.served > 0, "cell λ={} served nothing", r.rate_hz);
+            assert!(
+                r.support <= r.support_bound,
+                "λ={}: support {} exceeds flatness bound {}",
+                r.rate_hz,
+                r.support,
+                r.support_bound
+            );
+        }
+        let again = run_scale(&cfg, &opts);
+        for (a, b) in rows.iter().zip(&again) {
+            assert_eq!(a.requests, b.requests);
+            assert_eq!(a.served, b.served);
+            assert_eq!(a.p50_e2e_s.to_bits(), b.p50_e2e_s.to_bits());
+            assert_eq!(a.p95_e2e_s.to_bits(), b.p95_e2e_s.to_bits());
+            assert_eq!(a.p99_e2e_s.to_bits(), b.p99_e2e_s.to_bits());
+            assert_eq!(a.support, b.support);
+        }
+    }
+
+    #[test]
+    fn streaming_percentiles_agree_with_exact_within_budget() {
+        let cfg = ExperimentConfig::paper();
+        let worst = verify_agreement(&cfg, &tiny_opts(), 6.0).unwrap();
+        // with eps = 0.02 on ~600 requests the budget is ~13 ranks
+        assert!(worst <= 13, "worst rank distance {worst} exceeds the tiny-cell budget");
+    }
+
+    #[test]
+    fn scale_json_parses_with_in_tree_parser() {
+        let cfg = ExperimentConfig::paper();
+        let mut opts = tiny_opts();
+        opts.lambdas.truncate(1);
+        let rows = run_scale(&cfg, &opts);
+        let json = scale_json(&rows, &opts);
+        for key in ["\"pr\": 6", "requests_per_cell", "support_bound", "cells"] {
+            assert!(json.contains(key), "missing {key} in {json}");
+        }
+        let doc = crate::util::json::parse(&json).unwrap();
+        assert!(doc.required("cells").is_ok());
+    }
+}

@@ -110,6 +110,7 @@ USAGE:
                      [--plan-horizon 2.0] [--solve-latency 0.0]
                      [--solve-mode pipelined|synchronous]
                      [--no-admission true] [--trace-out f.csv]
+                     [--metrics-mode exact|streaming]
                      [--scheduler stacking|single|greedy|fixed]
                      [--allocator pso|equal|proportional] [--seed N] [--threads 0]
   aigc-edge cluster  [--config file.toml] [--servers 4]

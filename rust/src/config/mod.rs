@@ -20,6 +20,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::coordinator::SolveMode;
 use crate::faults::{DownInterval, FaultModeKind, FaultScript, MigrationPolicyKind};
+use crate::metrics::MetricsMode;
 use crate::routing::RouterKind;
 
 use self::toml::{parse, TomlDoc};
@@ -57,6 +58,8 @@ pub struct ExperimentConfig {
     pub migration: MigrationSettings,
     /// Parallel-execution settings (`util::exec` fan-out).
     pub perf: PerfSettings,
+    /// Metrics-aggregation settings (exact vs streaming percentiles).
+    pub metrics: MetricsSettings,
     /// Directory holding the AOT artifacts (HLO, quality.json, …).
     pub artifacts_dir: PathBuf,
     pub seed: u64,
@@ -264,6 +267,21 @@ pub struct PerfSettings {
     pub threads: usize,
 }
 
+/// Metrics-aggregation settings — exact or constant-memory streaming
+/// percentiles. TOML section `[metrics]` (CLI `--metrics-mode`).
+#[derive(Debug, Clone, Copy)]
+pub struct MetricsSettings {
+    /// How percentile-bearing aggregates are computed: `exact` buffers
+    /// and sorts per-request samples (the default — golden fixtures
+    /// and bit-identity guards rely on it); `streaming` folds served
+    /// delays into a GK quantile sketch so memory stays flat over
+    /// 10⁷-request sweeps.
+    pub mode: MetricsMode,
+    /// Rank-error bound ε of the streaming sketch, in (0, 0.5):
+    /// reported percentiles sit within ⌈ε·n⌉ ranks of the exact ones.
+    pub sketch_eps: f64,
+}
+
 impl ExperimentConfig {
     /// The paper's Section-IV setup.
     pub fn paper() -> Self {
@@ -315,6 +333,7 @@ impl ExperimentConfig {
             },
             migration: MigrationSettings { policy: MigrationPolicyKind::RequeueOnDeath },
             perf: PerfSettings { threads: 0 },
+            metrics: MetricsSettings { mode: MetricsMode::Exact, sketch_eps: 0.01 },
             artifacts_dir: default_artifacts_dir(),
             seed: 2025,
         }
@@ -437,6 +456,10 @@ impl ExperimentConfig {
             // against the actual fleet when the script materializes;
             // here we catch the obviously-broken combination early.
             FaultScript::scheduled(f.down.clone())?.validate_servers(c.servers)?;
+        }
+        let m = &self.metrics;
+        if !(m.sketch_eps > 0.0 && m.sketch_eps < 0.5) {
+            bail!("metrics.sketch_eps must be in (0, 0.5), got {}", m.sketch_eps);
         }
         Ok(())
     }
@@ -571,6 +594,19 @@ fn apply_doc(cfg: &mut ExperimentConfig, doc: &TomlDoc) -> Result<()> {
                 ),
                 None => false,
             },
+            "metrics.mode" => match value.as_str() {
+                Some(name) => match MetricsMode::from_name(name) {
+                    Some(mode) => {
+                        cfg.metrics.mode = mode;
+                        true
+                    }
+                    None => bail!(
+                        "metrics.mode must be \"exact\" or \"streaming\", got \"{name}\""
+                    ),
+                },
+                None => false,
+            },
+            "metrics.sketch_eps" => set_f64(&mut cfg.metrics.sketch_eps, value),
             "migration.policy" => match value.as_str() {
                 Some(name) => {
                     cfg.migration.policy = MigrationPolicyKind::from_name(name)?;
@@ -880,6 +916,29 @@ mod tests {
         let err =
             ExperimentConfig::from_toml_text("[perf]\nthreads = \"many\"").unwrap_err().to_string();
         assert!(err.contains("wrong type"), "{err}");
+    }
+
+    #[test]
+    fn metrics_section_applies_and_validation_lists_valid_values() {
+        // default: exact — golden fixtures and bit-identity rely on it
+        let cfg = ExperimentConfig::paper();
+        assert_eq!(cfg.metrics.mode, MetricsMode::Exact);
+        assert_eq!(cfg.metrics.sketch_eps, 0.01);
+        let cfg = ExperimentConfig::from_toml_text(
+            "[metrics]\nmode = \"streaming\"\nsketch_eps = 0.05",
+        )
+        .unwrap();
+        assert_eq!(cfg.metrics.mode, MetricsMode::Streaming);
+        assert_eq!(cfg.metrics.sketch_eps, 0.05);
+        let err = ExperimentConfig::from_toml_text("[metrics]\nmode = \"approx\"")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("exact") && err.contains("streaming"), "{err}");
+        for bad in ["sketch_eps = 0.0", "sketch_eps = 0.5", "sketch_eps = -0.1"] {
+            let toml = format!("[metrics]\n{bad}");
+            let err = ExperimentConfig::from_toml_text(&toml).unwrap_err().to_string();
+            assert!(err.contains("(0, 0.5)"), "{bad}: {err}");
+        }
     }
 
     #[test]

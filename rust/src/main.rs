@@ -15,7 +15,7 @@ use aigc_edge::config::{ArrivalProcessKind, ExperimentConfig};
 use aigc_edge::coordinator::{profile_batch_delay, ProfileConfig, SolveMode};
 use aigc_edge::delay::BatchDelayModel;
 use aigc_edge::faults::{FaultModeKind, FaultScript, MigrationPolicyKind};
-use aigc_edge::metrics::OutcomeStats;
+use aigc_edge::metrics::{MetricsMode, OutcomeAccumulator, OutcomeStats};
 use aigc_edge::quality::{PowerLawQuality, QualityModel, TableQuality};
 use aigc_edge::routing::RouterKind;
 use aigc_edge::runtime::ArtifactStore;
@@ -23,10 +23,10 @@ use aigc_edge::scheduler::{
     BatchScheduler, FixedSizeBatching, GreedyBatching, SingleInstance, Stacking, StackingConfig,
 };
 use aigc_edge::sim::{
-    simulate_cluster_pooled, simulate_dynamic, simulate_event_cluster_pooled, ClusterConfig,
-    Disposition, DynamicConfig, EventClusterConfig,
+    simulate_cluster_pooled, simulate_dynamic, simulate_dynamic_streaming,
+    simulate_event_cluster_pooled, ClusterConfig, Disposition, DynamicConfig, EventClusterConfig,
 };
-use aigc_edge::trace::ArrivalTrace;
+use aigc_edge::trace::{ArrivalStream, ArrivalTrace};
 
 /// Build the STACKING scheduler from config (0 = derive T* bound).
 fn stacking_from(cfg: &ExperimentConfig) -> Stacking {
@@ -259,6 +259,7 @@ fn cmd_dynamic(args: &Args) -> Result<()> {
         "solve-latency",
         "solve-mode",
         "no-admission",
+        "metrics-mode",
         "trace-out",
         "scheduler",
         "allocator",
@@ -267,18 +268,35 @@ fn cmd_dynamic(args: &Args) -> Result<()> {
     ])?;
     let mut cfg = load_config(args)?;
     apply_dynamic_flags(args, &mut cfg)?;
+    if let Some(name) = args.get("metrics-mode") {
+        cfg.metrics.mode = match MetricsMode::from_name(name) {
+            Some(mode) => mode,
+            None => bail!("--metrics-mode must be exact or streaming, got '{name}'"),
+        };
+    }
     cfg.validate()?;
 
     let scheduler = scheduler_from(args, &cfg)?;
     let allocator = allocator_from(args, threads_from(args, &cfg)?)?;
     let quality = quality_model(&cfg)?;
     let delay = BatchDelayModel::new(cfg.delay.a, cfg.delay.b);
+    let dyn_cfg = DynamicConfig::from(&cfg.dynamic);
+    if cfg.metrics.mode == MetricsMode::Streaming {
+        return run_dynamic_streaming(
+            args,
+            &cfg,
+            scheduler.as_ref(),
+            allocator.as_ref(),
+            &delay,
+            quality.as_ref(),
+            &dyn_cfg,
+        );
+    }
     let trace = ArrivalTrace::generate(&cfg.scenario, &cfg.arrival, cfg.seed);
     if let Some(path) = args.get("trace-out") {
         std::fs::write(path, trace.to_csv()).with_context(|| format!("writing trace {path}"))?;
         println!("replayable arrival trace written to {path}");
     }
-    let dyn_cfg = DynamicConfig::from(&cfg.dynamic);
     println!(
         "dynamic scenario: {:?} rate {} Hz over {}s | epoch {}s max-batch {} | plan horizon {}s | \
          solve {} @ {}s | admission {}",
@@ -368,6 +386,69 @@ fn cmd_dynamic(args: &Args) -> Result<()> {
             cfg.dynamic.solve_mode.name(),
         );
     }
+    Ok(())
+}
+
+/// The constant-memory `dynamic` path (`--metrics-mode streaming`):
+/// arrivals are generated lazily and every resolved request folds
+/// straight into a GK quantile sketch, so memory stays flat no matter
+/// how many requests the horizon produces.
+fn run_dynamic_streaming(
+    args: &Args,
+    cfg: &ExperimentConfig,
+    scheduler: &dyn BatchScheduler,
+    allocator: &dyn Allocator,
+    delay: &BatchDelayModel,
+    quality: &dyn QualityModel,
+    dyn_cfg: &DynamicConfig,
+) -> Result<()> {
+    if args.get("trace-out").is_some() {
+        bail!("--trace-out needs --metrics-mode exact (streaming never materializes the trace)");
+    }
+    println!(
+        "dynamic scenario: {:?} rate {} Hz over {}s | epoch {}s max-batch {} | \
+         streaming metrics (GK sketch, eps {})",
+        cfg.arrival.process,
+        cfg.arrival.rate_hz,
+        cfg.arrival.horizon_s,
+        cfg.dynamic.epoch_s,
+        cfg.dynamic.max_batch,
+        cfg.metrics.sketch_eps,
+    );
+    let stream = ArrivalStream::new(&cfg.scenario, &cfg.arrival, cfg.seed);
+    let (bw, bits) = (stream.total_bandwidth_hz(), stream.content_bits());
+    let report = simulate_dynamic_streaming(
+        stream,
+        bw,
+        bits,
+        scheduler,
+        allocator,
+        delay,
+        quality,
+        dyn_cfg,
+        OutcomeAccumulator::streaming(cfg.metrics.sketch_eps),
+    );
+    let stats = report.stats();
+    println!(
+        "served {}/{} ({} dropped) over {} epochs, {:.1}s simulated | sketch support {}",
+        report.served(),
+        report.count(),
+        report.dropped(),
+        report.epochs,
+        report.horizon_s,
+        report.accumulator.support_len(),
+    );
+    println!(
+        "mean FID {:.2} | outage rate {:.3} | e2e p50 {:.2}s p95 {:.2}s p99 {:.2}s | mean wait {:.2}s | throughput {:.2}/s | peak queue {}",
+        stats.mean_quality,
+        stats.outage_rate,
+        stats.p50_e2e_s,
+        stats.p95_e2e_s,
+        stats.p99_e2e_s,
+        stats.mean_wait_s,
+        report.throughput_hz(),
+        report.peak_queue_depth,
+    );
     Ok(())
 }
 

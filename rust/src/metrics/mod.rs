@@ -13,7 +13,38 @@ use std::collections::BTreeMap;
 use std::sync::Mutex;
 use std::time::Instant;
 
-use crate::util::stats::{percentile, Welford};
+use crate::util::rng::Pcg64;
+use crate::util::stats::{percentile, QuantileSketch, Welford};
+
+/// How percentile-bearing aggregates are computed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum MetricsMode {
+    /// Buffer per-request samples and sort — exact percentiles. The
+    /// default: golden fixtures and bit-identity guards rely on it.
+    #[default]
+    Exact,
+    /// Constant-memory scalar sums plus a GK quantile sketch; rank
+    /// error is bounded by the sketch's `eps` and memory stays flat
+    /// over 10⁷-request sweeps.
+    Streaming,
+}
+
+impl MetricsMode {
+    pub fn name(self) -> &'static str {
+        match self {
+            MetricsMode::Exact => "exact",
+            MetricsMode::Streaming => "streaming",
+        }
+    }
+
+    pub fn from_name(name: &str) -> Option<Self> {
+        match name {
+            "exact" => Some(MetricsMode::Exact),
+            "streaming" => Some(MetricsMode::Streaming),
+            _ => None,
+        }
+    }
+}
 
 /// One resolved request as the aggregate layer sees it — the common
 /// denominator of `sim::dynamic` outcomes and server-side telemetry.
@@ -81,6 +112,136 @@ impl OutcomeStats {
             p95_e2e_s: percentile(&served_e2e, 95.0),
             p99_e2e_s: percentile(&served_e2e, 99.0),
             mean_wait_s,
+        }
+    }
+}
+
+/// Incremental aggregation of [`ResolvedSample`]s — the streaming
+/// counterpart of [`OutcomeStats::from_samples`]. Exact mode buffers
+/// the served-delay vector and reproduces `from_samples` bit-for-bit;
+/// streaming mode holds only scalar sums plus a [`QuantileSketch`], so
+/// memory does not grow with the request count.
+#[derive(Debug, Clone)]
+pub struct OutcomeAccumulator {
+    count: usize,
+    served: usize,
+    not_met: usize,
+    quality_sum: f64,
+    wait_sum: f64,
+    e2e: E2eAgg,
+}
+
+#[derive(Debug, Clone)]
+enum E2eAgg {
+    /// Served delays buffered for exact percentiles.
+    Exact(Vec<f64>),
+    /// One sketch per merged source (per-server in a cluster); fleet
+    /// quantiles combine them without a lossy merge, so the combined
+    /// rank error stays within `eps · N`.
+    Sketch(Vec<QuantileSketch>),
+}
+
+impl OutcomeAccumulator {
+    pub fn exact() -> Self {
+        Self::with_agg(E2eAgg::Exact(Vec::new()))
+    }
+
+    pub fn streaming(eps: f64) -> Self {
+        Self::with_agg(E2eAgg::Sketch(vec![QuantileSketch::new(eps)]))
+    }
+
+    pub fn for_mode(mode: MetricsMode, eps: f64) -> Self {
+        match mode {
+            MetricsMode::Exact => Self::exact(),
+            MetricsMode::Streaming => Self::streaming(eps),
+        }
+    }
+
+    fn with_agg(e2e: E2eAgg) -> Self {
+        Self { count: 0, served: 0, not_met: 0, quality_sum: 0.0, wait_sum: 0.0, e2e }
+    }
+
+    pub fn is_streaming(&self) -> bool {
+        matches!(self.e2e, E2eAgg::Sketch(_))
+    }
+
+    pub fn count(&self) -> usize {
+        self.count
+    }
+
+    pub fn served(&self) -> usize {
+        self.served
+    }
+
+    /// Values currently retained for percentile estimation — in
+    /// streaming mode bounded by the sketch, not by the stream.
+    pub fn support_len(&self) -> usize {
+        match &self.e2e {
+            E2eAgg::Exact(v) => v.len(),
+            E2eAgg::Sketch(sketches) => sketches.iter().map(|s| s.support_len()).sum(),
+        }
+    }
+
+    pub fn push(&mut self, s: ResolvedSample) {
+        self.count += 1;
+        self.quality_sum += s.quality;
+        if !s.met {
+            self.not_met += 1;
+        }
+        if s.served {
+            self.served += 1;
+            self.wait_sum += s.wait_s;
+            match &mut self.e2e {
+                E2eAgg::Exact(v) => v.push(s.e2e_s),
+                E2eAgg::Sketch(sketches) => sketches[0].insert(s.e2e_s),
+            }
+        }
+    }
+
+    /// Absorb another accumulator (per-server → fleet). Both sides
+    /// must share a mode.
+    pub fn merge(&mut self, other: OutcomeAccumulator) {
+        self.count += other.count;
+        self.served += other.served;
+        self.not_met += other.not_met;
+        self.quality_sum += other.quality_sum;
+        self.wait_sum += other.wait_sum;
+        match (&mut self.e2e, other.e2e) {
+            (E2eAgg::Exact(a), E2eAgg::Exact(b)) => a.extend_from_slice(&b),
+            (E2eAgg::Sketch(a), E2eAgg::Sketch(b)) => a.extend(b),
+            _ => panic!("cannot merge exact and streaming outcome accumulators"),
+        }
+    }
+
+    /// Served end-to-end delay percentile, `p` in `[0, 100]`.
+    pub fn quantile(&self, p: f64) -> f64 {
+        match &self.e2e {
+            E2eAgg::Exact(v) => percentile(v, p),
+            E2eAgg::Sketch(sketches) => match sketches.as_slice() {
+                [one] => one.quantile(p),
+                many => {
+                    let refs: Vec<&QuantileSketch> = many.iter().collect();
+                    QuantileSketch::combined_quantile(&refs, p)
+                }
+            },
+        }
+    }
+
+    /// The standard summary. In exact mode this is bit-identical to
+    /// [`OutcomeStats::from_samples`] over the same push sequence.
+    pub fn stats(&self) -> OutcomeStats {
+        if self.count == 0 {
+            return OutcomeStats::from_samples(&[]);
+        }
+        OutcomeStats {
+            count: self.count,
+            served: self.served,
+            mean_quality: self.quality_sum / self.count as f64,
+            outage_rate: self.not_met as f64 / self.count as f64,
+            p50_e2e_s: self.quantile(50.0),
+            p95_e2e_s: self.quantile(95.0),
+            p99_e2e_s: self.quantile(99.0),
+            mean_wait_s: if self.served == 0 { 0.0 } else { self.wait_sum / self.served as f64 },
         }
     }
 }
@@ -176,17 +337,38 @@ impl RecoveryStats {
 }
 
 /// A latency series: streaming moments plus a bounded sample reservoir
-/// for percentiles.
-#[derive(Debug, Default)]
+/// for percentiles (Vitter's Algorithm R over a seeded PCG stream, so
+/// every recorder replays deterministically).
+#[derive(Debug)]
 pub struct LatencyRecorder {
     welford: Welford,
     samples: Vec<f64>,
     max_samples: usize,
+    rng: Pcg64,
+}
+
+impl Default for LatencyRecorder {
+    fn default() -> Self {
+        Self::new(4096)
+    }
 }
 
 impl LatencyRecorder {
+    /// Fixed reservoir seed ("LatencyR") so registries stay
+    /// deterministic without callers threading seeds around.
+    const DEFAULT_SEED: u64 = 0x4c61_7465_6e63_7952;
+
     pub fn new(max_samples: usize) -> Self {
-        Self { welford: Welford::new(), samples: Vec::new(), max_samples: max_samples.max(16) }
+        Self::with_seed(max_samples, Self::DEFAULT_SEED)
+    }
+
+    pub fn with_seed(max_samples: usize, seed: u64) -> Self {
+        Self {
+            welford: Welford::new(),
+            samples: Vec::new(),
+            max_samples: max_samples.max(16),
+            rng: Pcg64::seeded(seed),
+        }
     }
 
     pub fn record(&mut self, seconds: f64) {
@@ -194,11 +376,13 @@ impl LatencyRecorder {
         if self.samples.len() < self.max_samples {
             self.samples.push(seconds);
         } else {
-            // Reservoir sampling keeps percentiles unbiased under load.
+            // Algorithm R: the n-th value replaces a uniformly random
+            // slot with probability max_samples / n, which keeps the
+            // reservoir a uniform sample of the whole stream.
             let n = self.welford.count();
-            let idx = (n as usize * 2654435761) % self.welford.count() as usize;
-            if idx < self.max_samples {
-                self.samples[idx] = seconds;
+            let j = self.rng.below(n);
+            if (j as usize) < self.max_samples {
+                self.samples[j as usize] = seconds;
             }
         }
     }
@@ -402,6 +586,156 @@ mod tests {
         }
         assert_eq!(r.count(), 10_000);
         assert!(r.samples.len() <= 64);
+    }
+
+    /// Regression for the degenerate reservoir index
+    /// `(n * 2654435761) % n ≡ 0`, which only ever overwrote slot 0 and
+    /// froze p50/p95/p99 at the first `max_samples` values.
+    #[test]
+    fn reservoir_tracks_full_stream_not_first_prefix() {
+        let k = 256;
+        let n = 10 * k;
+        let mut r = LatencyRecorder::new(k);
+        for i in 0..n {
+            r.record(i as f64);
+        }
+        let hi = (n - 1) as f64;
+        // The frozen prefix put p50 near k/2 = 128; a uniform reservoir
+        // over the ramp tracks the full-stream percentiles (~0.5·n).
+        assert!(r.p50() > 0.3 * hi && r.p50() < 0.7 * hi, "p50={}", r.p50());
+        assert!(r.p95() > 0.8 * hi, "p95={}", r.p95());
+        assert!(r.p99() > 0.85 * hi, "p99={}", r.p99());
+        assert_eq!(r.samples.len(), k);
+    }
+
+    #[test]
+    fn reservoir_replays_bit_identically() {
+        let run = |seed: u64| {
+            let mut r = LatencyRecorder::with_seed(64, seed);
+            for i in 0..5000u64 {
+                r.record((i * 7 % 101) as f64);
+            }
+            (r.p50().to_bits(), r.p95().to_bits(), r.p99().to_bits())
+        };
+        assert_eq!(run(9), run(9));
+        assert_eq!(run(LatencyRecorder::DEFAULT_SEED), {
+            let mut r = LatencyRecorder::new(64);
+            for i in 0..5000u64 {
+                r.record((i * 7 % 101) as f64);
+            }
+            (r.p50().to_bits(), r.p95().to_bits(), r.p99().to_bits())
+        });
+    }
+
+    fn mixed_samples(n: usize) -> Vec<ResolvedSample> {
+        let mut rng = Pcg64::seeded(77);
+        (0..n)
+            .map(|_| {
+                let served = rng.uniform() < 0.9;
+                ResolvedSample {
+                    quality: rng.uniform_in(20.0, 60.0),
+                    met: served && rng.uniform() < 0.95,
+                    served,
+                    e2e_s: if served { rng.exponential(0.5) } else { 0.0 },
+                    wait_s: if served { rng.uniform_in(0.0, 2.0) } else { 0.0 },
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn exact_accumulator_matches_from_samples_bitwise() {
+        let samples = mixed_samples(4000);
+        let mut acc = OutcomeAccumulator::exact();
+        for &s in &samples {
+            acc.push(s);
+        }
+        assert_eq!(acc.stats(), OutcomeStats::from_samples(&samples));
+        assert!(!acc.is_streaming());
+        assert_eq!(acc.support_len(), samples.iter().filter(|s| s.served).count());
+    }
+
+    #[test]
+    fn streaming_accumulator_tracks_exact_within_eps() {
+        let samples = mixed_samples(20_000);
+        let eps = 0.01;
+        let mut acc = OutcomeAccumulator::streaming(eps);
+        for &s in &samples {
+            acc.push(s);
+        }
+        let exact = OutcomeStats::from_samples(&samples);
+        let got = acc.stats();
+        assert_eq!(got.count, exact.count);
+        assert_eq!(got.served, exact.served);
+        assert!((got.mean_quality - exact.mean_quality).abs() < 1e-12);
+        assert!((got.outage_rate - exact.outage_rate).abs() < 1e-12);
+        // The sketch guarantees rank error ≤ ⌈eps·n⌉ over the served
+        // delays; check the returned values against the sorted stream.
+        let mut served: Vec<f64> = samples.iter().filter(|s| s.served).map(|s| s.e2e_s).collect();
+        served.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = served.len() as f64;
+        let budget = (eps * n).ceil() as i64 + 1;
+        for (p, g) in [(50.0, got.p50_e2e_s), (95.0, got.p95_e2e_s), (99.0, got.p99_e2e_s)] {
+            let target = (p / 100.0 * n).ceil().max(1.0) as i64;
+            let rank = served.iter().filter(|&&v| v <= g).count() as i64;
+            assert!((rank - target).abs() <= budget, "p{p}: rank {rank} target {target}");
+        }
+        assert!(acc.support_len() < samples.len() / 4, "support {}", acc.support_len());
+        assert!(acc.is_streaming());
+    }
+
+    #[test]
+    fn accumulator_merge_combines_sources() {
+        let samples = mixed_samples(10_000);
+        let (left, right) = samples.split_at(3000);
+        let mut a = OutcomeAccumulator::exact();
+        let mut b = OutcomeAccumulator::exact();
+        for &s in left {
+            a.push(s);
+        }
+        for &s in right {
+            b.push(s);
+        }
+        a.merge(b);
+        let merged = a.stats();
+        let whole = OutcomeStats::from_samples(&samples);
+        assert_eq!(merged.count, whole.count);
+        assert_eq!(merged.served, whole.served);
+        // Partial sums re-associate, so scalar means match only to fp
+        // tolerance; the sorted percentiles are exactly equal.
+        assert!((merged.mean_quality - whole.mean_quality).abs() < 1e-9);
+        assert!((merged.mean_wait_s - whole.mean_wait_s).abs() < 1e-9);
+        assert_eq!(merged.p50_e2e_s.to_bits(), whole.p50_e2e_s.to_bits());
+        assert_eq!(merged.p95_e2e_s.to_bits(), whole.p95_e2e_s.to_bits());
+        assert_eq!(merged.p99_e2e_s.to_bits(), whole.p99_e2e_s.to_bits());
+        let mut a = OutcomeAccumulator::streaming(0.01);
+        let mut b = OutcomeAccumulator::streaming(0.01);
+        for &s in left {
+            a.push(s);
+        }
+        for &s in right {
+            b.push(s);
+        }
+        a.merge(b);
+        let exact = OutcomeStats::from_samples(&samples);
+        let got = a.stats();
+        assert_eq!(got.count, exact.count);
+        assert!((got.p95_e2e_s - exact.p95_e2e_s).abs() <= 0.2 * exact.p95_e2e_s.max(0.1));
+    }
+
+    #[test]
+    fn empty_accumulators_are_zero() {
+        assert_eq!(OutcomeAccumulator::exact().stats(), OutcomeStats::from_samples(&[]));
+        assert_eq!(OutcomeAccumulator::streaming(0.05).stats(), OutcomeStats::from_samples(&[]));
+    }
+
+    #[test]
+    fn metrics_mode_names_roundtrip() {
+        for mode in [MetricsMode::Exact, MetricsMode::Streaming] {
+            assert_eq!(MetricsMode::from_name(mode.name()), Some(mode));
+        }
+        assert_eq!(MetricsMode::from_name("bogus"), None);
+        assert_eq!(MetricsMode::default(), MetricsMode::Exact);
     }
 
     #[test]

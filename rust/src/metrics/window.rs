@@ -10,7 +10,7 @@
 
 use std::collections::VecDeque;
 
-use crate::util::stats::percentile;
+use crate::util::stats::{percentile, percentile_sorted};
 
 /// A sliding-window series of `(t_s, value)` samples.
 #[derive(Debug, Clone)]
@@ -76,7 +76,23 @@ impl WindowedSeries {
         percentile(&vals, p)
     }
 
+    /// Several percentiles in one pass: collects and sorts the window
+    /// once instead of once per query. Bit-identical to calling
+    /// [`WindowedSeries::percentile`] per entry (same sort, same
+    /// interpolation) — the per-epoch p50/p95/p99 reports rely on that.
+    pub fn percentiles<const N: usize>(&self, ps: [f64; N]) -> [f64; N] {
+        let mut vals: Vec<f64> = self.points.iter().map(|&(_, v)| v).collect();
+        vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        ps.map(|p| percentile_sorted(&vals, p))
+    }
+
+    /// Maximum of the windowed values; 0.0 when empty, like the
+    /// sibling aggregates (an empty window must stay representable in
+    /// JSON reports, and `-inf` is not).
     pub fn max(&self) -> f64 {
+        if self.points.is_empty() {
+            return 0.0;
+        }
         self.points.iter().map(|&(_, v)| v).fold(f64::NEG_INFINITY, f64::max)
     }
 
@@ -222,9 +238,28 @@ mod tests {
     fn empty_series_is_zeroish() {
         let w = WindowedSeries::new(1.0);
         assert_eq!(w.count(), 0);
+        assert_eq!(w.sum(), 0.0);
         assert_eq!(w.mean(), 0.0);
         assert_eq!(w.percentile(99.0), 0.0);
+        // Regression: `max` used to return -inf on an empty window,
+        // which poisoned downstream reports and is unrepresentable in
+        // JSON. All aggregates agree on 0.0 now.
+        assert_eq!(w.max(), 0.0);
+        assert_eq!(w.percentiles([50.0, 95.0, 99.0]), [0.0, 0.0, 0.0]);
         assert_eq!(w.last(), None);
+    }
+
+    #[test]
+    fn batched_percentiles_match_single_queries_bitwise() {
+        let mut w = WindowedSeries::new(100.0);
+        let mut rng = crate::util::rng::Pcg64::seeded(13);
+        for t in 0..500 {
+            w.push(t as f64 * 0.1, rng.exponential(1.5));
+        }
+        let [p50, p95, p99] = w.percentiles([50.0, 95.0, 99.0]);
+        assert_eq!(p50.to_bits(), w.percentile(50.0).to_bits());
+        assert_eq!(p95.to_bits(), w.percentile(95.0).to_bits());
+        assert_eq!(p99.to_bits(), w.percentile(99.0).to_bits());
     }
 
     #[test]

@@ -31,7 +31,7 @@
 
 use crate::bandwidth::{Allocator, AllocatorPool};
 use crate::delay::BatchDelayModel;
-use crate::metrics::{OutcomeStats, ResolvedSample};
+use crate::metrics::{MetricsMode, OutcomeAccumulator, OutcomeStats, ResolvedSample};
 use crate::quality::QualityModel;
 use crate::routing::{route_trace, RouterKind, ServerState};
 use crate::scheduler::BatchScheduler;
@@ -111,6 +111,16 @@ impl ServerReport {
     pub fn stats(&self) -> OutcomeStats {
         OutcomeStats::from_samples(&samples(&self.report.outcomes))
     }
+
+    /// Fold this server's outcomes into a fresh accumulator of the
+    /// given mode — the per-server sketch the fleet summary merges.
+    pub fn accumulator(&self, mode: MetricsMode, eps: f64) -> OutcomeAccumulator {
+        let mut acc = OutcomeAccumulator::for_mode(mode, eps);
+        for o in &self.report.outcomes {
+            acc.push(sample(o));
+        }
+        acc
+    }
 }
 
 /// Complete result of a cluster run.
@@ -125,17 +135,18 @@ pub struct ClusterReport {
     pub horizon_s: f64,
 }
 
+pub(crate) fn sample(o: &RequestOutcome) -> ResolvedSample {
+    ResolvedSample {
+        quality: o.quality,
+        met: o.met,
+        served: o.disposition == Disposition::Served,
+        e2e_s: o.e2e_s,
+        wait_s: o.wait_s,
+    }
+}
+
 pub(crate) fn samples(outcomes: &[RequestOutcome]) -> Vec<ResolvedSample> {
-    outcomes
-        .iter()
-        .map(|o| ResolvedSample {
-            quality: o.quality,
-            met: o.met,
-            served: o.disposition == Disposition::Served,
-            e2e_s: o.e2e_s,
-            wait_s: o.wait_s,
-        })
-        .collect()
+    outcomes.iter().map(sample).collect()
 }
 
 impl ClusterReport {
@@ -164,6 +175,22 @@ impl ClusterReport {
     /// Fleet-wide summary (quality, outage, e2e percentiles, wait).
     pub fn fleet_stats(&self) -> OutcomeStats {
         OutcomeStats::from_samples(&samples(&self.outcomes))
+    }
+
+    /// Fleet summary via per-server accumulators merged in server
+    /// order. With [`MetricsMode::Streaming`] the e2e percentiles come
+    /// from per-server GK sketches combined without a lossy merge —
+    /// no fleet-wide served-delay vector is ever materialized or
+    /// sorted, and the combined rank error stays within `eps · N`.
+    /// Exact mode reproduces [`fleet_stats`](Self::fleet_stats)'s
+    /// percentiles bit-for-bit (means re-associate across servers, so
+    /// those match to fp tolerance only).
+    pub fn fleet_stats_with(&self, mode: MetricsMode, eps: f64) -> OutcomeStats {
+        let mut fleet = OutcomeAccumulator::for_mode(mode, eps);
+        for server in &self.servers {
+            fleet.merge(server.accumulator(mode, eps));
+        }
+        fleet.stats()
     }
 
     /// Deferral (cross-epoch carry-over) events summed over servers.
@@ -413,6 +440,50 @@ mod tests {
         // per-server counts partition the fleet
         let counts: usize = report.servers.iter().map(|s| s.stats().count).sum();
         assert_eq!(counts, t.len());
+    }
+
+    #[test]
+    fn streaming_fleet_stats_track_exact() {
+        let t = trace(8.0, 60.0, 4);
+        let cfg = ClusterConfig {
+            speeds: server_speeds(3, 0.5, 1.5),
+            router: RouterKind::RoundRobin,
+            dynamic: DynamicConfig::default(),
+        };
+        let report = run(&t, &cfg);
+        let exact = report.fleet_stats();
+        // Exact accumulators merged in server order: same percentile
+        // multiset (bit-equal), means re-associated (fp tolerance).
+        let via_acc = report.fleet_stats_with(MetricsMode::Exact, 0.01);
+        assert_eq!(via_acc.count, exact.count);
+        assert_eq!(via_acc.served, exact.served);
+        assert!((via_acc.mean_quality - exact.mean_quality).abs() < 1e-9);
+        assert!((via_acc.mean_wait_s - exact.mean_wait_s).abs() < 1e-9);
+        assert_eq!(via_acc.p50_e2e_s.to_bits(), exact.p50_e2e_s.to_bits());
+        assert_eq!(via_acc.p95_e2e_s.to_bits(), exact.p95_e2e_s.to_bits());
+        assert_eq!(via_acc.p99_e2e_s.to_bits(), exact.p99_e2e_s.to_bits());
+
+        // Per-server sketches combined fleet-wide: scalar aggregates
+        // exact, percentiles within the combined rank bound.
+        let eps = 0.02;
+        let sketched = report.fleet_stats_with(MetricsMode::Streaming, eps);
+        assert_eq!(sketched.count, exact.count);
+        assert_eq!(sketched.served, exact.served);
+        assert!((sketched.mean_quality - exact.mean_quality).abs() < 1e-9);
+        let mut served: Vec<f64> = report
+            .outcomes
+            .iter()
+            .filter(|o| o.disposition == Disposition::Served)
+            .map(|o| o.e2e_s)
+            .collect();
+        served.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = served.len() as f64;
+        let budget = 2 * (eps * n).ceil() as i64 + 2;
+        for (p, g) in [(50.0, sketched.p50_e2e_s), (95.0, sketched.p95_e2e_s)] {
+            let target = (p / 100.0 * n).ceil().max(1.0) as i64;
+            let rank = served.iter().filter(|&&v| v <= g).count() as i64;
+            assert!((rank - target).abs() <= budget, "p{p}: rank {rank} target {target}");
+        }
     }
 
     #[test]

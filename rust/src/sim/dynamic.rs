@@ -30,10 +30,10 @@
 use crate::bandwidth::Allocator;
 use crate::coordinator::{EpochPolicy, SolveMode, SolveTiming};
 use crate::delay::BatchDelayModel;
-use crate::metrics::ServiceWindows;
+use crate::metrics::{OutcomeAccumulator, OutcomeStats, ResolvedSample, ServiceWindows};
 use crate::quality::QualityModel;
 use crate::scheduler::BatchScheduler;
-use crate::trace::{ArrivalTrace, DeviceRequest, Workload};
+use crate::trace::{Arrival, ArrivalTrace, DeviceRequest, Workload};
 use crate::util::stats::percentile;
 
 use super::solve_joint;
@@ -331,6 +331,59 @@ struct Queued {
     deferrals: u32,
 }
 
+/// Where resolved requests and epoch records land. [`simulate_dynamic`]
+/// collects them into a [`DynamicReport`];
+/// [`simulate_dynamic_streaming`] folds them into an
+/// [`OutcomeAccumulator`] so memory stays flat over arbitrarily long
+/// traces. Sinks only observe — they cannot influence the serving loop.
+trait OutcomeSink {
+    fn resolve(&mut self, outcome: RequestOutcome);
+    fn epoch(&mut self, record: EpochRecord);
+}
+
+/// Sink behind [`simulate_dynamic`]: every outcome keyed by arrival id,
+/// every epoch record kept.
+struct CollectingSink {
+    outcomes: Vec<Option<RequestOutcome>>,
+    epochs: Vec<EpochRecord>,
+}
+
+impl OutcomeSink for CollectingSink {
+    fn resolve(&mut self, outcome: RequestOutcome) {
+        debug_assert!(self.outcomes[outcome.id].is_none(), "request {} resolved twice", outcome.id);
+        self.outcomes[outcome.id] = Some(outcome);
+    }
+
+    fn epoch(&mut self, record: EpochRecord) {
+        self.epochs.push(record);
+    }
+}
+
+/// Sink behind [`simulate_dynamic_streaming`]: constant-memory
+/// aggregates only.
+struct StreamingSink {
+    acc: OutcomeAccumulator,
+    epochs: usize,
+    peak_queue_depth: usize,
+}
+
+impl OutcomeSink for StreamingSink {
+    fn resolve(&mut self, o: RequestOutcome) {
+        self.acc.push(ResolvedSample {
+            quality: o.quality,
+            met: o.met,
+            served: o.disposition == Disposition::Served,
+            e2e_s: o.e2e_s,
+            wait_s: o.wait_s,
+        });
+    }
+
+    fn epoch(&mut self, record: EpochRecord) {
+        self.epochs += 1;
+        self.peak_queue_depth = self.peak_queue_depth.max(record.queue_depth);
+    }
+}
+
 /// Run the dynamic simulation of `trace` under the given policies.
 ///
 /// MIRROR CONTRACT: `sim::event` replays this loop's epoch semantics
@@ -341,7 +394,9 @@ struct Queued {
 /// Any behavioural change here must be mirrored in
 /// `sim::event::Engine::{solve_server, open_after_solve}` and
 /// `ServerSim::ingest` — `tests/event_equivalence.rs` and
-/// `tests/pipeline_equivalence.rs` are the guards.
+/// `tests/pipeline_equivalence.rs` are the guards. The loop itself
+/// lives in [`run_dynamic_core`], shared op-for-op with
+/// [`simulate_dynamic_streaming`].
 pub fn simulate_dynamic(
     trace: &ArrivalTrace,
     scheduler: &dyn BatchScheduler,
@@ -350,29 +405,156 @@ pub fn simulate_dynamic(
     quality: &dyn QualityModel,
     cfg: &DynamicConfig,
 ) -> DynamicReport {
-    let n = trace.len();
-    let mut outcomes: Vec<Option<RequestOutcome>> = vec![None; n];
-    let mut epochs: Vec<EpochRecord> = Vec::new();
-    let mut windows = ServiceWindows::new(cfg.window_s);
+    let mut sink = CollectingSink { outcomes: vec![None; trace.len()], epochs: Vec::new() };
+    let horizon = run_dynamic_core(
+        trace.arrivals.iter().copied(),
+        trace.total_bandwidth_hz,
+        trace.content_bits,
+        scheduler,
+        allocator,
+        delay,
+        quality,
+        cfg,
+        &mut sink,
+    );
+    let outcomes: Vec<RequestOutcome> =
+        sink.outcomes.into_iter().map(|o| o.expect("every request resolved")).collect();
+    DynamicReport { outcomes, epochs: sink.epochs, horizon_s: horizon }
+}
 
-    let mut next_arrival = 0usize; // index into trace.arrivals
+/// Constant-memory result of [`simulate_dynamic_streaming`]: streaming
+/// aggregates instead of per-request outcomes and per-epoch records.
+#[derive(Debug, Clone)]
+pub struct StreamingDynamicReport {
+    /// Aggregates over every resolved request (exact or sketch-backed,
+    /// per the accumulator the caller passed in).
+    pub accumulator: OutcomeAccumulator,
+    /// Epoch solves that ran.
+    pub epochs: usize,
+    /// Deepest pre-admission queue any epoch saw.
+    pub peak_queue_depth: usize,
+    /// Total simulated span (last resolution instant).
+    pub horizon_s: f64,
+}
+
+impl StreamingDynamicReport {
+    pub fn count(&self) -> usize {
+        self.accumulator.count()
+    }
+
+    pub fn served(&self) -> usize {
+        self.accumulator.served()
+    }
+
+    pub fn dropped(&self) -> usize {
+        self.count() - self.served()
+    }
+
+    /// The standard summary from the accumulator.
+    pub fn stats(&self) -> OutcomeStats {
+        self.accumulator.stats()
+    }
+
+    /// Served requests per simulated second.
+    pub fn throughput_hz(&self) -> f64 {
+        if self.horizon_s <= 0.0 {
+            0.0
+        } else {
+            self.served() as f64 / self.horizon_s
+        }
+    }
+}
+
+/// [`simulate_dynamic`] over an arrival *iterator* — the serving loop
+/// never materializes the trace or the per-request outcomes, so memory
+/// stays flat no matter how many requests stream through (the
+/// `fig_scale` bench drives 10⁷). Arrivals must be time-sorted with
+/// dense ids starting at 0, exactly like `ArrivalTrace` — both
+/// [`ArrivalStream`](crate::trace::ArrivalStream) and
+/// [`ColumnarReader`](crate::trace::ColumnarReader) guarantee this.
+///
+/// Identical arrivals and config run the same floating-point ops in
+/// the same order as [`simulate_dynamic`]: with an exact accumulator
+/// the resulting [`OutcomeStats`] percentiles are bit-identical to the
+/// collected report's.
+pub fn simulate_dynamic_streaming(
+    arrivals: impl Iterator<Item = Arrival>,
+    total_bandwidth_hz: f64,
+    content_bits: f64,
+    scheduler: &dyn BatchScheduler,
+    allocator: &dyn Allocator,
+    delay: &BatchDelayModel,
+    quality: &dyn QualityModel,
+    cfg: &DynamicConfig,
+    accumulator: OutcomeAccumulator,
+) -> StreamingDynamicReport {
+    let mut sink = StreamingSink { acc: accumulator, epochs: 0, peak_queue_depth: 0 };
+    let horizon = run_dynamic_core(
+        arrivals,
+        total_bandwidth_hz,
+        content_bits,
+        scheduler,
+        allocator,
+        delay,
+        quality,
+        cfg,
+        &mut sink,
+    );
+    StreamingDynamicReport {
+        accumulator: sink.acc,
+        epochs: sink.epochs,
+        peak_queue_depth: sink.peak_queue_depth,
+        horizon_s: horizon,
+    }
+}
+
+/// The serving loop shared by both entry points: generic over where
+/// arrivals come from and where outcomes land, so the buffered and the
+/// streaming entries run the *same* floating-point operations in the
+/// same order — the sinks only observe. Returns the simulated horizon
+/// (last resolution instant).
+fn run_dynamic_core<I, S>(
+    arrivals: I,
+    total_bandwidth_hz: f64,
+    content_bits: f64,
+    scheduler: &dyn BatchScheduler,
+    allocator: &dyn Allocator,
+    delay: &BatchDelayModel,
+    quality: &dyn QualityModel,
+    cfg: &DynamicConfig,
+    sink: &mut S,
+) -> f64
+where
+    I: Iterator<Item = Arrival>,
+    S: OutcomeSink,
+{
+    let mut arrivals = arrivals.peekable();
+    let mut windows = ServiceWindows::new(cfg.window_s);
     let mut queue: Vec<Queued> = Vec::new();
     let mut clock = 0.0f64; // last solve instant
     let mut gpu_free = 0.0f64;
     let mut horizon = 0.0f64;
+    let mut epoch_count = 0usize;
     let outage_q = quality.outage();
 
-    while next_arrival < n || !queue.is_empty() {
+    while arrivals.peek().is_some() || !queue.is_empty() {
         // ---- open the next epoch ----
         // Carry-overs have been waiting since the last solve; otherwise
         // the epoch opens with the next arrival.
-        let open = if queue.is_empty() { trace.arrivals[next_arrival].t_s } else { clock };
+        let open = if queue.is_empty() {
+            arrivals.peek().expect("empty queue implies a pending arrival").t_s
+        } else {
+            clock
+        };
         let mut close = cfg.epoch.close_deadline(open);
         // Backlogged arrivals (t ≤ open) are already waiting: they join
         // unconditionally, like carry-overs. The batch rule below only
         // decides how long to keep waiting for *future* arrivals.
-        while next_arrival < n && trace.arrivals[next_arrival].t_s <= open {
-            let a = trace.arrivals[next_arrival];
+        while let Some(&a) = arrivals.peek() {
+            if a.t_s > open {
+                break;
+            }
+            arrivals.next();
             windows.record_arrival(a.t_s);
             queue.push(Queued {
                 id: a.id,
@@ -382,13 +564,12 @@ pub fn simulate_dynamic(
                 link: a.link,
                 deferrals: 0,
             });
-            next_arrival += 1;
         }
-        while next_arrival < n {
-            let a = trace.arrivals[next_arrival];
+        while let Some(&a) = arrivals.peek() {
             if a.t_s > close {
                 break;
             }
+            arrivals.next();
             windows.record_arrival(a.t_s);
             queue.push(Queued {
                 id: a.id,
@@ -398,7 +579,6 @@ pub fn simulate_dynamic(
                 link: a.link,
                 deferrals: 0,
             });
-            next_arrival += 1;
             if cfg.epoch.should_close(queue.len(), a.t_s - open) {
                 close = a.t_s;
                 break;
@@ -413,7 +593,7 @@ pub fn simulate_dynamic(
         // the batch start — the instant the plan targets.
         let timing = SolveTiming::compute(close, gpu_free, cfg.solve_latency_s, cfg.solve_mode);
         let t0 = timing.batch_start_s;
-        let epoch_index = epochs.len();
+        let epoch_index = epoch_count;
         let queue_depth = queue.len();
 
         // ---- admission control ----
@@ -425,7 +605,7 @@ pub fn simulate_dynamic(
         for q in queue.drain(..) {
             let residual = q.abs_deadline_s - t0;
             let min_tx = if cfg.admission {
-                q.link.tx_delay(trace.content_bits, trace.total_bandwidth_hz)
+                q.link.tx_delay(content_bits, total_bandwidth_hz)
             } else {
                 0.0
             };
@@ -436,7 +616,7 @@ pub fn simulate_dynamic(
                     Disposition::ExpiredInQueue
                 };
                 windows.record_dropped(t0, outage_q);
-                outcomes[q.id] = Some(RequestOutcome {
+                sink.resolve(RequestOutcome {
                     id: q.id,
                     arrival_s: q.arrival_s,
                     deadline_s: q.deadline_s,
@@ -464,7 +644,8 @@ pub fn simulate_dynamic(
             clock = t0;
             windows.record_solve(t0, cfg.solve_latency_s, timing.hidden_s);
             windows.prune(t0);
-            epochs.push(EpochRecord {
+            let [p50_e2e_w, p95_e2e_w, p99_e2e_w] = windows.e2e_s.percentiles([50.0, 95.0, 99.0]);
+            sink.epoch(EpochRecord {
                 index: epoch_index,
                 t_solve_s: t0,
                 queue_depth,
@@ -477,11 +658,12 @@ pub fn simulate_dynamic(
                 arrival_rate_hz: windows.arrivals.rate_hz(),
                 mean_quality_w: windows.quality.mean(),
                 outage_rate_w: windows.outage_rate(),
-                p50_e2e_w: windows.e2e_s.percentile(50.0),
-                p95_e2e_w: windows.e2e_s.percentile(95.0),
-                p99_e2e_w: windows.e2e_s.percentile(99.0),
+                p50_e2e_w,
+                p95_e2e_w,
+                p99_e2e_w,
                 solve_overlap_w: windows.solve_overlap_fraction(),
             });
+            epoch_count += 1;
             continue;
         }
 
@@ -500,11 +682,7 @@ pub fn simulate_dynamic(
                 link: q.link,
             })
             .collect();
-        let workload = Workload {
-            devices,
-            total_bandwidth_hz: trace.total_bandwidth_hz,
-            content_bits: trace.content_bits,
-        };
+        let workload = Workload { devices, total_bandwidth_hz, content_bits };
         let sol = solve_joint(&workload, scheduler, allocator, delay, quality);
         let makespan = sol.outcome.schedule.makespan();
 
@@ -518,7 +696,7 @@ pub fn simulate_dynamic(
                 let e2e = completion - q.arrival_s;
                 let met = svc.met; // e2e vs residual ⇔ completion vs absolute deadline
                 windows.record_served(t0, e2e, svc.quality, met);
-                outcomes[q.id] = Some(RequestOutcome {
+                sink.resolve(RequestOutcome {
                     id: q.id,
                     arrival_s: q.arrival_s,
                     deadline_s: q.deadline_s,
@@ -547,7 +725,8 @@ pub fn simulate_dynamic(
         horizon = horizon.max(gpu_free);
         windows.record_solve(t0, cfg.solve_latency_s, timing.hidden_s);
         windows.prune(t0);
-        epochs.push(EpochRecord {
+        let [p50_e2e_w, p95_e2e_w, p99_e2e_w] = windows.e2e_s.percentiles([50.0, 95.0, 99.0]);
+        sink.epoch(EpochRecord {
             index: epoch_index,
             t_solve_s: t0,
             queue_depth,
@@ -560,16 +739,15 @@ pub fn simulate_dynamic(
             arrival_rate_hz: windows.arrivals.rate_hz(),
             mean_quality_w: windows.quality.mean(),
             outage_rate_w: windows.outage_rate(),
-            p50_e2e_w: windows.e2e_s.percentile(50.0),
-            p95_e2e_w: windows.e2e_s.percentile(95.0),
-            p99_e2e_w: windows.e2e_s.percentile(99.0),
+            p50_e2e_w,
+            p95_e2e_w,
+            p99_e2e_w,
             solve_overlap_w: windows.solve_overlap_fraction(),
         });
+        epoch_count += 1;
     }
 
-    let outcomes: Vec<RequestOutcome> =
-        outcomes.into_iter().map(|o| o.expect("every request resolved")).collect();
-    DynamicReport { outcomes, epochs, horizon_s: horizon }
+    horizon
 }
 
 #[cfg(test)]
@@ -824,6 +1002,87 @@ mod tests {
         );
         // the windowed gauge reports the hiding
         assert!(pipelined.epochs.iter().any(|e| e.solve_overlap_w > 0.0));
+    }
+
+    #[test]
+    fn streaming_entry_matches_collected_report() {
+        let t = trace(6.0, 60.0, 11);
+        let cfg = DynamicConfig::default();
+        let report = run(&t, &cfg);
+        let stream = |acc: OutcomeAccumulator| {
+            simulate_dynamic_streaming(
+                t.arrivals.iter().copied(),
+                t.total_bandwidth_hz,
+                t.content_bits,
+                &Stacking::default(),
+                &EqualAllocator,
+                &BatchDelayModel::paper(),
+                &PowerLawQuality::paper(),
+                &cfg,
+                acc,
+            )
+        };
+        let exact = stream(OutcomeAccumulator::exact());
+        assert_eq!(exact.count(), report.outcomes.len());
+        assert_eq!(exact.served(), report.served());
+        assert_eq!(exact.dropped(), report.dropped());
+        assert_eq!(exact.epochs, report.epochs.len());
+        assert_eq!(exact.peak_queue_depth, report.peak_queue_depth());
+        assert_eq!(exact.horizon_s.to_bits(), report.horizon_s.to_bits());
+        let stats = exact.stats();
+        // Resolution order re-associates the scalar sums, so means
+        // match to fp tolerance; sorted percentiles are bit-equal.
+        assert!((stats.mean_quality - report.mean_quality()).abs() < 1e-9);
+        assert!((stats.outage_rate - report.outage_rate()).abs() < 1e-12);
+        assert_eq!(stats.p50_e2e_s.to_bits(), report.e2e_percentile(50.0).to_bits());
+        assert_eq!(stats.p95_e2e_s.to_bits(), report.e2e_percentile(95.0).to_bits());
+        assert_eq!(stats.p99_e2e_s.to_bits(), report.e2e_percentile(99.0).to_bits());
+
+        // A sketch-backed run pushes the same samples in the same
+        // order: scalar aggregates are bit-equal, percentiles track the
+        // exact ones within the sketch's rank bound.
+        let eps = 0.01;
+        let sketch = stream(OutcomeAccumulator::streaming(eps));
+        assert_eq!(sketch.count(), exact.count());
+        assert_eq!(sketch.served(), exact.served());
+        let sk = sketch.stats();
+        assert_eq!(sk.mean_quality.to_bits(), stats.mean_quality.to_bits());
+        assert_eq!(sk.mean_wait_s.to_bits(), stats.mean_wait_s.to_bits());
+        let mut served: Vec<f64> = report
+            .outcomes
+            .iter()
+            .filter(|o| o.disposition == Disposition::Served)
+            .map(|o| o.e2e_s)
+            .collect();
+        served.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = served.len() as f64;
+        let budget = (eps * n).ceil() as i64 + 1;
+        for (p, g) in [(50.0, sk.p50_e2e_s), (95.0, sk.p95_e2e_s), (99.0, sk.p99_e2e_s)] {
+            let target = (p / 100.0 * n).ceil().max(1.0) as i64;
+            let rank = served.iter().filter(|&&v| v <= g).count() as i64;
+            assert!((rank - target).abs() <= budget, "p{p}: rank {rank} target {target}");
+        }
+    }
+
+    #[test]
+    fn streaming_empty_iterator_is_zero() {
+        let r = simulate_dynamic_streaming(
+            std::iter::empty(),
+            40_000.0,
+            24_000.0,
+            &Stacking::default(),
+            &EqualAllocator,
+            &BatchDelayModel::paper(),
+            &PowerLawQuality::paper(),
+            &DynamicConfig::default(),
+            OutcomeAccumulator::exact(),
+        );
+        assert_eq!(r.count(), 0);
+        assert_eq!(r.epochs, 0);
+        assert_eq!(r.peak_queue_depth, 0);
+        assert_eq!(r.horizon_s, 0.0);
+        assert_eq!(r.throughput_hz(), 0.0);
+        assert_eq!(r.stats(), crate::metrics::OutcomeStats::from_samples(&[]));
     }
 
     #[test]

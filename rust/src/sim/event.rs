@@ -70,14 +70,16 @@ use crate::channel::Link;
 use crate::coordinator::{EpochPhase, EpochPolicy, SolveMode, SolveTiming};
 use crate::delay::BatchDelayModel;
 use crate::faults::{FaultEvent, FaultKind, FaultScript, MigrationPolicy, MigrationPolicyKind};
-use crate::metrics::{OutcomeStats, RecoverySample, RecoveryStats, ServiceWindows};
+use crate::metrics::{
+    MetricsMode, OutcomeAccumulator, OutcomeStats, RecoverySample, RecoveryStats, ServiceWindows,
+};
 use crate::quality::QualityModel;
 use crate::routing::{LiveView, RouteContext, Router, RouterKind, ServerState};
 use crate::scheduler::BatchScheduler;
 use crate::trace::{Arrival, ArrivalTrace, DeviceRequest, Workload};
 use crate::util::exec::par_map;
 
-use super::cluster::{samples, ClusterConfig};
+use super::cluster::{sample, samples, ClusterConfig};
 use super::dynamic::{Disposition, DynamicConfig, EpochRecord, RequestOutcome};
 use super::{solve_joint, JointSolution};
 
@@ -205,6 +207,20 @@ impl EventReport {
     /// Fleet-wide summary (quality, outage, e2e percentiles, wait).
     pub fn fleet_stats(&self) -> OutcomeStats {
         OutcomeStats::from_samples(&samples(&self.outcomes))
+    }
+
+    /// Fleet summary folded through an [`OutcomeAccumulator`] in one
+    /// pass over the outcomes — with [`MetricsMode::Streaming`] the
+    /// e2e percentiles come from a GK sketch, so nothing proportional
+    /// to the request count is materialized or sorted. Exact mode
+    /// pushes in id order and reproduces
+    /// [`fleet_stats`](Self::fleet_stats) bit-for-bit.
+    pub fn fleet_stats_with(&self, mode: MetricsMode, eps: f64) -> OutcomeStats {
+        let mut acc = OutcomeAccumulator::for_mode(mode, eps);
+        for o in &self.outcomes {
+            acc.push(sample(o));
+        }
+        acc.stats()
     }
 
     /// Summary over the requests one server resolved.
@@ -1143,6 +1159,7 @@ impl Engine<'_> {
         solve_hidden_s: f64,
     ) -> EpochRecord {
         let w = &self.servers[idx].windows;
+        let [p50_e2e_w, p95_e2e_w, p99_e2e_w] = w.e2e_s.percentiles([50.0, 95.0, 99.0]);
         EpochRecord {
             index,
             t_solve_s: t0,
@@ -1156,9 +1173,9 @@ impl Engine<'_> {
             arrival_rate_hz: w.arrivals.rate_hz(),
             mean_quality_w: w.quality.mean(),
             outage_rate_w: w.outage_rate(),
-            p50_e2e_w: w.e2e_s.percentile(50.0),
-            p95_e2e_w: w.e2e_s.percentile(95.0),
-            p99_e2e_w: w.e2e_s.percentile(99.0),
+            p50_e2e_w,
+            p95_e2e_w,
+            p99_e2e_w,
             solve_overlap_w: w.solve_overlap_fraction(),
         }
     }
@@ -1442,6 +1459,40 @@ mod tests {
                 assert_eq!(a.deferrals, b.deferrals, "request {}", a.id);
             }
             assert!(ev.migrations.is_empty() && ev.fault_log.is_empty());
+        }
+    }
+
+    #[test]
+    fn accumulator_fleet_stats_match_exact_and_bound_sketch() {
+        let t = trace(5.0, 60.0, 3);
+        let script = FaultScript::random(3, 60.0, 25.0, 8.0, 11);
+        let c = cfg(server_speeds(3, 0.5, 1.5), script, MigrationPolicyKind::RequeueOnDeath);
+        let report = run(&t, &c.view());
+        let exact = report.fleet_stats();
+        // The exact accumulator pushes in id order — the same fold
+        // `from_samples` runs — so the whole summary is bit-identical.
+        assert_eq!(report.fleet_stats_with(MetricsMode::Exact, 0.01), exact);
+        // Sketch-backed summary: scalar aggregates identical, e2e
+        // percentiles within the sketch's rank bound.
+        let eps = 0.02;
+        let sk = report.fleet_stats_with(MetricsMode::Streaming, eps);
+        assert_eq!(sk.count, exact.count);
+        assert_eq!(sk.served, exact.served);
+        assert_eq!(sk.mean_quality.to_bits(), exact.mean_quality.to_bits());
+        assert_eq!(sk.mean_wait_s.to_bits(), exact.mean_wait_s.to_bits());
+        let mut served: Vec<f64> = report
+            .outcomes
+            .iter()
+            .filter(|o| o.disposition == Disposition::Served)
+            .map(|o| o.e2e_s)
+            .collect();
+        served.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = served.len() as f64;
+        let budget = (eps * n).ceil() as i64 + 1;
+        for (p, g) in [(50.0, sk.p50_e2e_s), (95.0, sk.p95_e2e_s), (99.0, sk.p99_e2e_s)] {
+            let target = (p / 100.0 * n).ceil().max(1.0) as i64;
+            let rank = served.iter().filter(|&&v| v <= g).count() as i64;
+            assert!((rank - target).abs() <= budget, "p{p}: rank {rank} target {target}");
         }
     }
 

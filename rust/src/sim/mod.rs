@@ -13,8 +13,8 @@ pub use cluster::{
     ServerReport,
 };
 pub use dynamic::{
-    censored_delays, mean_censored_delay, simulate_dynamic, Disposition, DynamicConfig,
-    DynamicReport, EpochRecord, RequestOutcome,
+    censored_delays, mean_censored_delay, simulate_dynamic, simulate_dynamic_streaming,
+    Disposition, DynamicConfig, DynamicReport, EpochRecord, RequestOutcome, StreamingDynamicReport,
 };
 pub use event::{
     simulate_event_cluster, simulate_event_cluster_pooled, EventClusterConfig, EventReport,

@@ -72,46 +72,12 @@ impl ArrivalTrace {
 
     /// Draw a trace from the configured arrival process. Deterministic
     /// per seed; deadline/η marks use the Section-IV distributions of
-    /// `scenario`.
+    /// `scenario`. Exactly `ArrivalStream::new(..).collect()`, so the
+    /// buffered and streaming paths are bit-identical per seed.
     pub fn generate(scenario: &ScenarioConfig, arrival: &ArrivalSettings, seed: u64) -> Self {
-        let mut rng = Pcg64::new(seed, 0xA221);
-        let mut channels = ChannelGenerator::new(
-            FadingModel::UniformEfficiency { lo: scenario.eta_lo, hi: scenario.eta_hi },
-            rng.next_u64(),
-        );
-        // Thinning envelope: the largest instantaneous rate.
-        let max_rate = match arrival.process {
-            ArrivalProcessKind::Poisson => arrival.rate_hz,
-            ArrivalProcessKind::Burst => arrival.burst_rate_hz.max(arrival.rate_hz),
-        };
-        let mut arrivals = Vec::new();
-        let mut t = 0.0f64;
-        loop {
-            t += rng.exponential(max_rate);
-            if t > arrival.horizon_s {
-                break;
-            }
-            if arrival.max_requests > 0 && arrivals.len() >= arrival.max_requests {
-                break;
-            }
-            // Thinning: accept with probability rate(t)/max_rate. The
-            // uniform draw happens for the Poisson case too so the two
-            // processes consume the stream identically (a trace at
-            // burst==base reproduces plain Poisson exactly).
-            let accept = rng.uniform() < arrival.rate_at(t) / max_rate;
-            if !accept {
-                continue;
-            }
-            let deadline_s = rng.uniform_in(scenario.deadline_lo, scenario.deadline_hi);
-            arrivals.push(Arrival {
-                id: arrivals.len(),
-                t_s: t,
-                deadline_s,
-                link: channels.draw(),
-            });
-        }
+        let stream = ArrivalStream::new(scenario, arrival, seed);
         Self {
-            arrivals,
+            arrivals: stream.collect(),
             total_bandwidth_hz: scenario.total_bandwidth_hz,
             content_bits: scenario.content_bits,
         }
@@ -175,6 +141,100 @@ impl ArrivalTrace {
             arrivals.push(Arrival { id: arrivals.len(), t_s, deadline_s, link: Link::new(eta) });
         }
         Ok(Self { arrivals, total_bandwidth_hz, content_bits })
+    }
+}
+
+/// Lazy arrival generator: yields the identical request stream as
+/// [`ArrivalTrace::generate`] (same RNG draws, in the same order) one
+/// arrival at a time, so a 10⁷-request sweep never materializes a
+/// `Vec<Arrival>` for the whole horizon.
+#[derive(Debug, Clone)]
+pub struct ArrivalStream {
+    rng: Pcg64,
+    channels: ChannelGenerator,
+    settings: ArrivalSettings,
+    deadline_lo: f64,
+    deadline_hi: f64,
+    total_bandwidth_hz: f64,
+    content_bits: f64,
+    /// Thinning envelope: the largest instantaneous rate.
+    max_rate: f64,
+    t: f64,
+    next_id: usize,
+}
+
+impl ArrivalStream {
+    pub fn new(scenario: &ScenarioConfig, arrival: &ArrivalSettings, seed: u64) -> Self {
+        let mut rng = Pcg64::new(seed, 0xA221);
+        let channels = ChannelGenerator::new(
+            FadingModel::UniformEfficiency { lo: scenario.eta_lo, hi: scenario.eta_hi },
+            rng.next_u64(),
+        );
+        let max_rate = match arrival.process {
+            ArrivalProcessKind::Poisson => arrival.rate_hz,
+            ArrivalProcessKind::Burst => arrival.burst_rate_hz.max(arrival.rate_hz),
+        };
+        Self {
+            rng,
+            channels,
+            settings: *arrival,
+            deadline_lo: scenario.deadline_lo,
+            deadline_hi: scenario.deadline_hi,
+            total_bandwidth_hz: scenario.total_bandwidth_hz,
+            content_bits: scenario.content_bits,
+            max_rate,
+            t: 0.0,
+            next_id: 0,
+        }
+    }
+
+    /// Shared scenario constant B (Hz) — carried so streaming consumers
+    /// don't need the originating [`ScenarioConfig`].
+    pub fn total_bandwidth_hz(&self) -> f64 {
+        self.total_bandwidth_hz
+    }
+
+    /// Shared scenario constant S (bits).
+    pub fn content_bits(&self) -> f64 {
+        self.content_bits
+    }
+
+    /// Arrivals yielded so far.
+    pub fn generated(&self) -> usize {
+        self.next_id
+    }
+}
+
+impl Iterator for ArrivalStream {
+    type Item = Arrival;
+
+    fn next(&mut self) -> Option<Arrival> {
+        if self.settings.max_requests > 0 && self.next_id >= self.settings.max_requests {
+            return None;
+        }
+        loop {
+            self.t += self.rng.exponential(self.max_rate);
+            if self.t > self.settings.horizon_s {
+                return None;
+            }
+            // Thinning: accept with probability rate(t)/max_rate. The
+            // uniform draw happens for the Poisson case too so the two
+            // processes consume the stream identically (a trace at
+            // burst==base reproduces plain Poisson exactly).
+            let accept = self.rng.uniform() < self.settings.rate_at(self.t) / self.max_rate;
+            if !accept {
+                continue;
+            }
+            let deadline_s = self.rng.uniform_in(self.deadline_lo, self.deadline_hi);
+            let arrival = Arrival {
+                id: self.next_id,
+                t_s: self.t,
+                deadline_s,
+                link: self.channels.draw(),
+            };
+            self.next_id += 1;
+            return Some(arrival);
+        }
     }
 }
 
@@ -264,6 +324,26 @@ mod tests {
         s.max_requests = 120;
         let trace = ArrivalTrace::generate(&scenario(), &s, 3);
         assert_eq!(trace.len(), 120);
+    }
+
+    #[test]
+    fn stream_matches_generate_bitwise() {
+        let cases = [
+            (ArrivalProcessKind::Poisson, 0),
+            (ArrivalProcessKind::Burst, 0),
+            (ArrivalProcessKind::Poisson, 75),
+        ];
+        for (process, cap) in cases {
+            let mut s = settings(process, 4.0, 150.0);
+            s.max_requests = cap;
+            let trace = ArrivalTrace::generate(&scenario(), &s, 7);
+            let streamed: Vec<Arrival> = ArrivalStream::new(&scenario(), &s, 7).collect();
+            assert_eq!(trace.arrivals, streamed);
+        }
+        let s = settings(ArrivalProcessKind::Poisson, 4.0, 150.0);
+        let stream = ArrivalStream::new(&scenario(), &s, 7);
+        assert_eq!(stream.total_bandwidth_hz(), scenario().total_bandwidth_hz);
+        assert_eq!(stream.content_bits(), scenario().content_bits);
     }
 
     #[test]

@@ -1,0 +1,332 @@
+//! Compact binary columnar encoding for arrival traces.
+//!
+//! The replay CSV is human-greppable but costs ~40 bytes of text per
+//! request and must be fully parsed before the first arrival replays —
+//! hopeless at the 10⁷-request scale the streaming metrics layer
+//! targets. This format stores the same three per-request columns
+//! (`t_s`, `deadline_s`, `eta`) as raw little-endian f64 bit patterns
+//! in fixed-size chunks:
+//!
+//! ```text
+//! [magic 8B "AIGCTRC\0"] [version u32] [chunk_len u32]
+//! [total_bandwidth_hz f64] [content_bits f64] [count u64]
+//! repeated frames: [n u32] [t_s f64 × n] [deadline_s f64 × n] [eta f64 × n]
+//! ```
+//!
+//! Round-trips are bit-identical with the CSV path (both preserve the
+//! exact f64 bits), 24 bytes per request, and [`ColumnarReader`]
+//! replays chunk-by-chunk so a simulation can consume arrivals without
+//! holding the whole `Vec<Arrival>`.
+
+use anyhow::{bail, ensure, Result};
+
+use crate::channel::Link;
+use crate::trace::{Arrival, ArrivalTrace};
+
+const MAGIC: &[u8; 8] = b"AIGCTRC\0";
+const VERSION: u32 = 1;
+const HEADER_LEN: usize = 8 + 4 + 4 + 8 + 8 + 8;
+/// Default requests per frame: 64 KiB of payload per column chunk.
+pub const DEFAULT_CHUNK_LEN: usize = 8192;
+
+fn push_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn push_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn push_f64(out: &mut Vec<u8>, v: f64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn read_u32(bytes: &[u8], pos: &mut usize) -> Result<u32> {
+    ensure!(bytes.len() >= *pos + 4, "columnar trace truncated at byte {}", *pos);
+    let v = u32::from_le_bytes(bytes[*pos..*pos + 4].try_into().unwrap());
+    *pos += 4;
+    Ok(v)
+}
+
+fn read_u64(bytes: &[u8], pos: &mut usize) -> Result<u64> {
+    ensure!(bytes.len() >= *pos + 8, "columnar trace truncated at byte {}", *pos);
+    let v = u64::from_le_bytes(bytes[*pos..*pos + 8].try_into().unwrap());
+    *pos += 8;
+    Ok(v)
+}
+
+fn read_f64(bytes: &[u8], pos: &mut usize) -> Result<f64> {
+    Ok(f64::from_bits(read_u64(bytes, pos)?))
+}
+
+/// Encode a trace with the given chunk length (requests per frame).
+pub fn encode_chunked(trace: &ArrivalTrace, chunk_len: usize) -> Vec<u8> {
+    assert!(chunk_len > 0, "chunk_len must be positive");
+    let n = trace.arrivals.len();
+    let mut out = Vec::with_capacity(HEADER_LEN + n * 24 + (n / chunk_len + 1) * 4);
+    out.extend_from_slice(MAGIC);
+    push_u32(&mut out, VERSION);
+    push_u32(&mut out, chunk_len as u32);
+    push_f64(&mut out, trace.total_bandwidth_hz);
+    push_f64(&mut out, trace.content_bits);
+    push_u64(&mut out, n as u64);
+    for chunk in trace.arrivals.chunks(chunk_len) {
+        push_u32(&mut out, chunk.len() as u32);
+        for a in chunk {
+            push_f64(&mut out, a.t_s);
+        }
+        for a in chunk {
+            push_f64(&mut out, a.deadline_s);
+        }
+        for a in chunk {
+            push_f64(&mut out, a.link.spectral_efficiency);
+        }
+    }
+    out
+}
+
+/// Encode with the default chunk length.
+pub fn encode(trace: &ArrivalTrace) -> Vec<u8> {
+    encode_chunked(trace, DEFAULT_CHUNK_LEN)
+}
+
+/// Decode a complete trace (ids re-densified in arrival order), with
+/// the same validation as the CSV loader: time-sorted arrivals and
+/// positive deadlines/η.
+pub fn decode(bytes: &[u8]) -> Result<ArrivalTrace> {
+    let mut reader = ColumnarReader::new(bytes)?;
+    let mut arrivals = Vec::with_capacity(reader.remaining());
+    for a in &mut reader {
+        arrivals.push(a?);
+    }
+    Ok(ArrivalTrace {
+        arrivals,
+        total_bandwidth_hz: reader.total_bandwidth_hz,
+        content_bits: reader.content_bits,
+    })
+}
+
+/// Chunked replay: yields arrivals one at a time, buffering at most one
+/// frame, so consumers (`sim::dynamic`'s streaming entry) never hold
+/// the whole trace.
+#[derive(Debug)]
+pub struct ColumnarReader<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+    /// Scenario constant B (Hz) from the header.
+    pub total_bandwidth_hz: f64,
+    /// Scenario constant S (bits) from the header.
+    pub content_bits: f64,
+    count: usize,
+    next_id: usize,
+    prev_t: f64,
+    chunk: Vec<Arrival>,
+    chunk_pos: usize,
+    failed: bool,
+}
+
+impl<'a> ColumnarReader<'a> {
+    pub fn new(bytes: &'a [u8]) -> Result<Self> {
+        let mut pos = 0usize;
+        ensure!(bytes.len() >= HEADER_LEN, "columnar trace shorter than its header");
+        ensure!(&bytes[..8] == MAGIC, "not a columnar arrival trace (bad magic)");
+        pos += 8;
+        let version = read_u32(bytes, &mut pos)?;
+        ensure!(version == VERSION, "unsupported columnar trace version {version}");
+        let chunk_len = read_u32(bytes, &mut pos)?;
+        ensure!(chunk_len > 0, "columnar trace declares zero chunk length");
+        let total_bandwidth_hz = read_f64(bytes, &mut pos)?;
+        let content_bits = read_f64(bytes, &mut pos)?;
+        if total_bandwidth_hz <= 0.0 || content_bits <= 0.0 {
+            bail!("columnar trace header missing scenario constants");
+        }
+        let count = read_u64(bytes, &mut pos)? as usize;
+        Ok(Self {
+            bytes,
+            pos,
+            total_bandwidth_hz,
+            content_bits,
+            count,
+            next_id: 0,
+            prev_t: f64::NEG_INFINITY,
+            chunk: Vec::new(),
+            chunk_pos: 0,
+            failed: false,
+        })
+    }
+
+    /// Total arrivals declared by the header.
+    pub fn len(&self) -> usize {
+        self.count
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// Arrivals not yet yielded.
+    pub fn remaining(&self) -> usize {
+        self.count - self.next_id
+    }
+
+    fn load_frame(&mut self) -> Result<()> {
+        let n = read_u32(self.bytes, &mut self.pos)? as usize;
+        ensure!(n > 0, "columnar trace frame at byte {} is empty", self.pos - 4);
+        ensure!(
+            self.next_id + n <= self.count,
+            "columnar trace frames exceed declared count {}",
+            self.count
+        );
+        self.chunk.clear();
+        self.chunk.reserve(n);
+        let t_base = self.pos;
+        for i in 0..n {
+            let mut pos = t_base + 8 * i;
+            let t_s = read_f64(self.bytes, &mut pos)?;
+            let mut pos = t_base + 8 * (n + i);
+            let deadline_s = read_f64(self.bytes, &mut pos)?;
+            let mut pos = t_base + 8 * (2 * n + i);
+            let eta = read_f64(self.bytes, &mut pos)?;
+            if t_s < self.prev_t {
+                bail!("columnar trace: arrivals must be time-sorted (id {})", self.next_id + i);
+            }
+            if deadline_s <= 0.0 || eta <= 0.0 {
+                bail!(
+                    "columnar trace: deadline and eta must be positive (id {})",
+                    self.next_id + i
+                );
+            }
+            self.prev_t = t_s;
+            let arrival = Arrival { id: self.next_id + i, t_s, deadline_s, link: Link::new(eta) };
+            self.chunk.push(arrival);
+        }
+        self.pos = t_base + 24 * n;
+        self.chunk_pos = 0;
+        Ok(())
+    }
+}
+
+impl Iterator for ColumnarReader<'_> {
+    type Item = Result<Arrival>;
+
+    fn next(&mut self) -> Option<Result<Arrival>> {
+        if self.failed || self.next_id >= self.count {
+            return None;
+        }
+        if self.chunk_pos >= self.chunk.len() {
+            if let Err(e) = self.load_frame() {
+                self.failed = true;
+                return Some(Err(e));
+            }
+        }
+        let a = self.chunk[self.chunk_pos];
+        self.chunk_pos += 1;
+        self.next_id += 1;
+        Some(Ok(a))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ArrivalProcessKind, ArrivalSettings, ExperimentConfig};
+
+    fn seed7_trace() -> ArrivalTrace {
+        let cfg = ExperimentConfig::paper();
+        let arrival = ArrivalSettings {
+            process: ArrivalProcessKind::Burst,
+            rate_hz: 3.0,
+            burst_rate_hz: 9.0,
+            period_s: 40.0,
+            duty: 0.25,
+            horizon_s: 120.0,
+            max_requests: 0,
+        };
+        ArrivalTrace::generate(&cfg.scenario, &arrival, 7)
+    }
+
+    #[test]
+    fn roundtrip_is_bit_identical() {
+        let trace = seed7_trace();
+        assert!(trace.len() > 100);
+        let decoded = decode(&encode(&trace)).unwrap();
+        assert_eq!(trace, decoded);
+    }
+
+    #[test]
+    fn roundtrip_matches_csv_roundtrip() {
+        let trace = seed7_trace();
+        let via_csv = ArrivalTrace::from_csv(&trace.to_csv()).unwrap();
+        let via_columnar = decode(&encode(&trace)).unwrap();
+        assert_eq!(via_csv, via_columnar);
+    }
+
+    #[test]
+    fn chunk_length_does_not_change_payload() {
+        let trace = seed7_trace();
+        for chunk_len in [1, 7, 64, 100_000] {
+            let decoded = decode(&encode_chunked(&trace, chunk_len)).unwrap();
+            assert_eq!(trace, decoded, "chunk_len={chunk_len}");
+        }
+    }
+
+    #[test]
+    fn reader_streams_with_bounded_buffer() {
+        let trace = seed7_trace();
+        let bytes = encode_chunked(&trace, 32);
+        let mut reader = ColumnarReader::new(&bytes).unwrap();
+        assert_eq!(reader.len(), trace.len());
+        let mut seen = 0usize;
+        for (a, expect) in (&mut reader).zip(&trace.arrivals) {
+            let a = a.unwrap();
+            assert_eq!(&a, expect);
+            seen += 1;
+        }
+        assert_eq!(seen, trace.len());
+        assert_eq!(reader.remaining(), 0);
+        assert!(reader.next().is_none());
+    }
+
+    #[test]
+    fn empty_trace_roundtrips() {
+        let trace = ArrivalTrace {
+            arrivals: Vec::new(),
+            total_bandwidth_hz: 40_000.0,
+            content_bits: 24_000.0,
+        };
+        let decoded = decode(&encode(&trace)).unwrap();
+        assert_eq!(trace, decoded);
+    }
+
+    #[test]
+    fn size_is_24_bytes_per_request_plus_overhead() {
+        let trace = seed7_trace();
+        let bytes = encode(&trace);
+        let overhead = bytes.len() - 24 * trace.len();
+        assert!(overhead < 64, "overhead {overhead}");
+        assert!(bytes.len() < trace.to_csv().len(), "binary should beat CSV text");
+    }
+
+    #[test]
+    fn rejects_corrupt_inputs() {
+        let trace = seed7_trace();
+        let good = encode(&trace);
+        assert!(decode(&good[..10]).is_err(), "truncated header");
+        assert!(decode(&good[..good.len() - 5]).is_err(), "truncated frame");
+        let mut bad_magic = good.clone();
+        bad_magic[0] = b'X';
+        assert!(decode(&bad_magic).is_err(), "bad magic");
+        let mut bad_version = good.clone();
+        bad_version[8] = 99;
+        assert!(decode(&bad_version).is_err(), "bad version");
+        // Flip a deadline sign inside the first frame: the 40-byte
+        // header ends with the count, frame n follows at byte 40, the
+        // t column at 44, then the deadline column.
+        let mut negative_deadline = good.clone();
+        let n0 = u32::from_le_bytes(good[40..44].try_into().unwrap()) as usize;
+        let deadline0_at = 44 + 8 * n0;
+        let d = f64::from_le_bytes(good[deadline0_at..deadline0_at + 8].try_into().unwrap());
+        negative_deadline[deadline0_at..deadline0_at + 8].copy_from_slice(&(-d).to_le_bytes());
+        assert!(decode(&negative_deadline).is_err(), "negative deadline");
+    }
+}

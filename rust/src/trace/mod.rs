@@ -4,8 +4,10 @@
 //! [`Link`]; generators are seeded so every experiment replays exactly.
 
 pub mod arrival;
+pub mod columnar;
 
-pub use arrival::{Arrival, ArrivalTrace};
+pub use arrival::{Arrival, ArrivalStream, ArrivalTrace};
+pub use columnar::ColumnarReader;
 
 use crate::channel::{ChannelGenerator, Link};
 use crate::config::ScenarioConfig;

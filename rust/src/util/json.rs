@@ -245,9 +245,19 @@ impl<'a> Parser<'a> {
             }
         }
         let text = std::str::from_utf8(&self.bytes[start..self.pos]).unwrap();
-        text.parse::<f64>()
-            .map(Json::Num)
-            .map_err(|_| JsonError { offset: start, message: format!("bad number '{text}'") })
+        let n = text
+            .parse::<f64>()
+            .map_err(|_| JsonError { offset: start, message: format!("bad number '{text}'") })?;
+        // Overflowing literals like `1e999` parse to ±inf; JSON has no
+        // representation for non-finite numbers, so reject them here
+        // instead of letting inf/NaN leak into downstream arithmetic.
+        if !n.is_finite() {
+            return Err(JsonError {
+                offset: start,
+                message: format!("number '{text}' out of f64 range"),
+            });
+        }
+        Ok(Json::Num(n))
     }
 }
 
@@ -287,8 +297,13 @@ impl Json {
     }
 
     pub fn as_usize(&self) -> Option<usize> {
+        // Bound by 2^53: the largest range where every integer is
+        // exactly representable in f64. Beyond that (`1e20`, inf) the
+        // value cannot faithfully round-trip and the `as usize` cast
+        // would silently saturate.
+        const MAX_EXACT: f64 = 9_007_199_254_740_992.0;
         match self {
-            Json::Num(n) if *n >= 0.0 && n.fract() == 0.0 => Some(*n as usize),
+            Json::Num(n) if *n >= 0.0 && *n <= MAX_EXACT && n.fract() == 0.0 => Some(*n as usize),
             _ => None,
         }
     }
@@ -403,5 +418,31 @@ mod tests {
         let v = parse("{}").unwrap();
         let err = v.required("nope").unwrap_err();
         assert!(err.to_string().contains("nope"));
+    }
+
+    #[test]
+    fn rejects_overflowing_number_literals() {
+        // `1e999` parses to inf under `str::parse::<f64>`; the parser
+        // must refuse it with a readable error instead of letting a
+        // non-finite number leak into the document.
+        for text in ["1e999", "-1e999", "[1, 1e999]", "{\"a\": -1e999}"] {
+            let err = parse(text).unwrap_err();
+            assert!(err.to_string().contains("out of f64 range"), "{text}: {err}");
+        }
+        // Large but finite literals still parse.
+        assert_eq!(parse("1e20").unwrap(), Json::Num(1e20));
+    }
+
+    #[test]
+    fn as_usize_bounded_to_exact_integers() {
+        // 1e20 is finite, non-negative and has fract() == 0, but is far
+        // beyond 2^53 — `as usize` would not round-trip, so refuse it.
+        assert_eq!(Json::Num(1e20).as_usize(), None);
+        assert_eq!(Json::Num(f64::INFINITY).as_usize(), None);
+        assert_eq!(Json::Num(-1.0).as_usize(), None);
+        assert_eq!(Json::Num(2.5).as_usize(), None);
+        assert_eq!(Json::Num(9_007_199_254_740_992.0).as_usize(), Some(1 << 53));
+        assert_eq!(Json::Num(64.0).as_usize(), Some(64));
+        assert_eq!(Json::Num(0.0).as_usize(), Some(0));
     }
 }

@@ -101,6 +101,229 @@ impl Welford {
     }
 }
 
+/// One Greenwald–Khanna summary tuple: value `v` covers `g` samples
+/// ending at the running rank, with `delta` extra rank slack.
+#[derive(Debug, Clone, Copy)]
+struct GkTuple {
+    v: f64,
+    g: u64,
+    delta: u64,
+}
+
+/// Deterministic Greenwald–Khanna streaming quantile sketch.
+///
+/// Answers any quantile query with rank error at most `⌈eps · n⌉`
+/// while retaining O((1/eps) · log(eps · n)) values — independent of
+/// the stream length, which is what makes 10⁷-request sweeps possible
+/// without materializing per-request vectors. Inserts are buffered and
+/// folded into the summary in sorted batches; every operation is a
+/// pure function of the insert sequence (no randomness, no clocks), so
+/// whole experiments replay bit-identically at any thread count.
+#[derive(Debug, Clone)]
+pub struct QuantileSketch {
+    eps: f64,
+    /// Samples folded into `entries` (excludes the pending buffer).
+    n: u64,
+    /// Summary tuples, sorted by value.
+    entries: Vec<GkTuple>,
+    /// Pending inserts, folded in sorted batches of `buffer_cap`.
+    buffer: Vec<f64>,
+    buffer_cap: usize,
+}
+
+impl QuantileSketch {
+    /// `eps` is the rank-error fraction, in `(0, 0.5)`.
+    pub fn new(eps: f64) -> Self {
+        assert!(eps > 0.0 && eps < 0.5, "sketch eps must be in (0, 0.5), got {eps}");
+        let buffer_cap = ((0.5 / eps).ceil() as usize).max(16);
+        Self { eps, n: 0, entries: Vec::new(), buffer: Vec::with_capacity(buffer_cap), buffer_cap }
+    }
+
+    pub fn eps(&self) -> f64 {
+        self.eps
+    }
+
+    /// Total samples inserted so far.
+    pub fn count(&self) -> u64 {
+        self.n + self.buffer.len() as u64
+    }
+
+    /// Values currently retained (summary tuples + pending buffer) —
+    /// the sketch's entire memory footprint, bounded by
+    /// O((1/eps) · log(eps · n)).
+    pub fn support_len(&self) -> usize {
+        self.entries.len() + self.buffer.len()
+    }
+
+    pub fn insert(&mut self, x: f64) {
+        debug_assert!(x.is_finite(), "sketch insert of non-finite {x}");
+        self.buffer.push(x);
+        if self.buffer.len() >= self.buffer_cap {
+            self.flush();
+        }
+    }
+
+    /// Quantile estimate for `p` in `[0, 100]` (percentile convention,
+    /// matching [`percentile`]). Returns an actual inserted value whose
+    /// rank is within `⌈eps · n⌉` of the target rank; 0.0 when empty.
+    pub fn quantile(&self, p: f64) -> f64 {
+        let total = self.count();
+        if total == 0 {
+            return 0.0;
+        }
+        let tuples = self.merged_view();
+        let p = p.clamp(0.0, 100.0);
+        let target = ((p / 100.0 * total as f64).ceil() as u64).clamp(1, total);
+        let err = (self.eps * total as f64).floor() as u64;
+        let mut min_rank = 0u64;
+        for t in &tuples {
+            min_rank += t.g;
+            let max_rank = min_rank + t.delta;
+            if max_rank <= target + err && target <= min_rank + err {
+                return t.v;
+            }
+        }
+        tuples.last().unwrap().v
+    }
+
+    /// Lower/upper bounds on the number of inserted samples `≤ x`.
+    /// Used to combine per-server sketches into fleet quantiles.
+    pub fn rank_bounds(&self, x: f64) -> (u64, u64) {
+        let tuples = self.merged_view();
+        let total = self.count();
+        let mut min_rank = 0u64;
+        for t in &tuples {
+            if t.v <= x {
+                min_rank += t.g;
+            } else {
+                let upper = (min_rank + t.g + t.delta).saturating_sub(1);
+                return (min_rank, upper.max(min_rank));
+            }
+        }
+        (min_rank, total)
+    }
+
+    /// Combined quantile across independent sketches (per-server fleet
+    /// summaries) without a lossy merge: walks every retained value and
+    /// picks the candidate whose combined rank interval sits closest to
+    /// the target rank. Rank error is at most `Σᵢ eps·nᵢ = eps · N`.
+    pub fn combined_quantile(sketches: &[&QuantileSketch], p: f64) -> f64 {
+        let total: u64 = sketches.iter().map(|s| s.count()).sum();
+        if total == 0 {
+            return 0.0;
+        }
+        let p = p.clamp(0.0, 100.0);
+        let target = ((p / 100.0 * total as f64).ceil() as u64).clamp(1, total);
+        let views: Vec<Vec<GkTuple>> = sketches.iter().map(|s| s.merged_view()).collect();
+        let mut candidates: Vec<f64> = views.iter().flat_map(|v| v.iter().map(|t| t.v)).collect();
+        candidates.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        candidates.dedup();
+        let m = candidates.len();
+        let mut lower = vec![0u64; m];
+        let mut upper = vec![0u64; m];
+        for (view, s) in views.iter().zip(sketches) {
+            let per_sketch_total = s.count();
+            let mut i = 0;
+            let mut min_rank = 0u64;
+            for (c, &x) in candidates.iter().enumerate() {
+                while i < view.len() && view[i].v <= x {
+                    min_rank += view[i].g;
+                    i += 1;
+                }
+                lower[c] += min_rank;
+                upper[c] += if i < view.len() {
+                    (min_rank + view[i].g + view[i].delta).saturating_sub(1).max(min_rank)
+                } else {
+                    per_sketch_total
+                };
+            }
+        }
+        let mut best = candidates[0];
+        let mut best_gap = u64::MAX;
+        for c in 0..m {
+            let mid = (lower[c] + upper[c]) / 2;
+            let gap = mid.abs_diff(target);
+            if gap < best_gap {
+                best_gap = gap;
+                best = candidates[c];
+            }
+        }
+        best
+    }
+
+    /// Fold the pending buffer into the summary and re-compress.
+    fn flush(&mut self) {
+        if self.buffer.is_empty() {
+            return;
+        }
+        self.buffer.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let (merged, n) = merge_sorted(&self.entries, &self.buffer, self.eps, self.n);
+        self.entries = merged;
+        self.n = n;
+        self.buffer.clear();
+        self.compress();
+    }
+
+    /// The summary as it would look with the pending buffer folded in —
+    /// lets queries borrow `&self` between flushes.
+    fn merged_view(&self) -> Vec<GkTuple> {
+        if self.buffer.is_empty() {
+            return self.entries.clone();
+        }
+        let mut batch = self.buffer.clone();
+        batch.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        merge_sorted(&self.entries, &batch, self.eps, self.n).0
+    }
+
+    /// Greedily fold tuples into their right neighbour while the merged
+    /// tuple still fits the `2·eps·n` error budget. The first and last
+    /// tuples are always kept so min/max stay exact.
+    fn compress(&mut self) {
+        if self.entries.len() < 3 {
+            return;
+        }
+        let threshold = (2.0 * self.eps * self.n as f64).floor() as u64;
+        let mut kept: Vec<GkTuple> = Vec::with_capacity(self.entries.len());
+        let mut acc = *self.entries.last().unwrap();
+        for i in (1..self.entries.len() - 1).rev() {
+            let e = self.entries[i];
+            if e.g + acc.g + acc.delta <= threshold {
+                acc.g += e.g;
+            } else {
+                kept.push(acc);
+                acc = e;
+            }
+        }
+        kept.push(acc);
+        kept.push(self.entries[0]);
+        kept.reverse();
+        self.entries = kept;
+    }
+}
+
+/// Merge a sorted batch of raw samples into a sorted tuple summary,
+/// assigning each new sample the standard GK insertion slack
+/// (`⌊2·eps·n⌋ − 1` in the interior, 0 at the extremes).
+fn merge_sorted(entries: &[GkTuple], batch: &[f64], eps: f64, mut n: u64) -> (Vec<GkTuple>, u64) {
+    let mut merged = Vec::with_capacity(entries.len() + batch.len());
+    let mut i = 0;
+    for &x in batch {
+        while i < entries.len() && entries[i].v <= x {
+            merged.push(entries[i]);
+            i += 1;
+        }
+        n += 1;
+        let delta = if merged.is_empty() || i == entries.len() {
+            0
+        } else {
+            ((2.0 * eps * n as f64).floor() as u64).saturating_sub(1)
+        };
+        merged.push(GkTuple { v: x, g: 1, delta });
+    }
+    merged.extend_from_slice(&entries[i..]);
+    (merged, n)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -155,5 +378,133 @@ mod tests {
         let xs = [3.0, -1.0, 7.0];
         assert_eq!(min(&xs), -1.0);
         assert_eq!(max(&xs), 7.0);
+    }
+
+    /// Rank of `x` in `sorted` (number of samples ≤ x).
+    fn rank_of(sorted: &[f64], x: f64) -> i64 {
+        sorted.iter().filter(|&&v| v <= x).count() as i64
+    }
+
+    fn assert_within_rank_bound(sorted: &[f64], sketch: &QuantileSketch, p: f64, tag: &str) {
+        let n = sorted.len() as f64;
+        let target = (p / 100.0 * n).ceil().max(1.0) as i64;
+        let err = (sketch.eps() * n).ceil() as i64 + 1;
+        let got = sketch.quantile(p);
+        let r = rank_of(sorted, got);
+        assert!(
+            (r - target).abs() <= err,
+            "{tag}: p={p} rank {r} vs target {target} (err budget {err}, value {got})"
+        );
+    }
+
+    #[test]
+    fn sketch_is_exact_below_error_threshold() {
+        let mut s = QuantileSketch::new(0.05);
+        for x in 1..=10 {
+            s.insert(x as f64);
+        }
+        assert_eq!(s.count(), 10);
+        // target rank for p=50 over 10 items is ⌈5⌉ = 5 → value 5.0
+        assert_eq!(s.quantile(50.0), 5.0);
+        assert_eq!(s.quantile(0.0), 1.0);
+        assert_eq!(s.quantile(100.0), 10.0);
+    }
+
+    #[test]
+    fn sketch_empty_returns_zero() {
+        let s = QuantileSketch::new(0.01);
+        assert_eq!(s.quantile(50.0), 0.0);
+        assert_eq!(s.count(), 0);
+        assert_eq!(QuantileSketch::combined_quantile(&[], 50.0), 0.0);
+    }
+
+    #[test]
+    fn sketch_tracks_exact_within_eps() {
+        let eps = 0.01;
+        let n = 20_000;
+        let mut rng = crate::util::rng::Pcg64::seeded(41);
+        // uniform, heavy-tailed, and bimodal streams
+        let uniform: Vec<f64> = (0..n).map(|_| rng.uniform_in(0.0, 10.0)).collect();
+        let exponential: Vec<f64> = (0..n).map(|_| rng.exponential(0.8)).collect();
+        let bimodal: Vec<f64> = (0..n)
+            .map(|_| {
+                if rng.uniform() < 0.3 {
+                    rng.uniform_in(0.0, 1.0)
+                } else {
+                    rng.uniform_in(50.0, 60.0)
+                }
+            })
+            .collect();
+        let streams = [("uniform", uniform), ("exponential", exponential), ("bimodal", bimodal)];
+        for (name, xs) in &streams {
+            let mut sketch = QuantileSketch::new(eps);
+            for &x in xs {
+                sketch.insert(x);
+            }
+            let mut sorted = xs.clone();
+            sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            for p in [1.0, 5.0, 25.0, 50.0, 75.0, 90.0, 95.0, 99.0, 99.9] {
+                assert_within_rank_bound(&sorted, &sketch, p, name);
+            }
+        }
+    }
+
+    #[test]
+    fn sketch_support_stays_logarithmic() {
+        let eps = 0.01;
+        let n = 200_000u64;
+        let mut rng = crate::util::rng::Pcg64::seeded(17);
+        let mut sketch = QuantileSketch::new(eps);
+        for _ in 0..n {
+            sketch.insert(rng.exponential(1.0));
+        }
+        let bound = (12.0 / eps * (2.0 * eps * n as f64 + 4.0).log2()).ceil() as usize + 64;
+        assert!(
+            sketch.support_len() <= bound,
+            "support {} exceeds O((1/eps)·log(eps·n)) bound {bound}",
+            sketch.support_len()
+        );
+    }
+
+    #[test]
+    fn sketch_replays_bit_identically() {
+        let mut rng = crate::util::rng::Pcg64::seeded(23);
+        let xs: Vec<f64> = (0..5000).map(|_| rng.normal()).collect();
+        let run = || {
+            let mut s = QuantileSketch::new(0.02);
+            for &x in &xs {
+                s.insert(x);
+            }
+            [50.0, 95.0, 99.0].map(|p| s.quantile(p).to_bits())
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn combined_quantile_matches_pooled_exact() {
+        let eps = 0.01;
+        let mut rng = crate::util::rng::Pcg64::seeded(31);
+        let mut a = QuantileSketch::new(eps);
+        let mut b = QuantileSketch::new(eps);
+        let mut pooled = Vec::new();
+        for i in 0..30_000 {
+            let x = rng.exponential(0.5);
+            if i % 3 == 0 {
+                a.insert(x);
+            } else {
+                b.insert(x);
+            }
+            pooled.push(x);
+        }
+        pooled.sort_by(|x, y| x.partial_cmp(y).unwrap());
+        let n = pooled.len() as f64;
+        for p in [10.0, 50.0, 95.0, 99.0] {
+            let got = QuantileSketch::combined_quantile(&[&a, &b], p);
+            let target = (p / 100.0 * n).ceil().max(1.0) as i64;
+            // combined rank error ≤ eps·N, plus interval-midpoint slack
+            let err = (2.0 * eps * n).ceil() as i64 + 2;
+            let r = rank_of(&pooled, got);
+            assert!((r - target).abs() <= err, "p={p} rank {r} target {target} err {err}");
+        }
     }
 }

@@ -1,0 +1,214 @@
+//! Integration guards for the constant-memory metrics path (ISSUE 6):
+//! streaming percentiles must replay bit-identically across seeds and
+//! thread counts, track exact percentiles within the documented rank
+//! budget on dissimilar delay distributions, and the columnar trace
+//! must round-trip bit-identically with the CSV path — including
+//! straight through the streaming engine without ever materializing
+//! the `Vec<Arrival>`.
+
+use aigc_edge::bandwidth::EqualAllocator;
+use aigc_edge::config::{ArrivalProcessKind, ArrivalSettings, ExperimentConfig};
+use aigc_edge::delay::BatchDelayModel;
+use aigc_edge::metrics::{MetricsMode, OutcomeAccumulator, OutcomeStats};
+use aigc_edge::quality::PowerLawQuality;
+use aigc_edge::routing::RouterKind;
+use aigc_edge::scheduler::Stacking;
+use aigc_edge::sim::{
+    server_speeds, simulate_cluster, simulate_dynamic, simulate_dynamic_streaming, ClusterConfig,
+    DynamicConfig,
+};
+use aigc_edge::trace::columnar::{decode, encode_chunked};
+use aigc_edge::trace::{ArrivalTrace, ColumnarReader};
+use aigc_edge::util::stats::QuantileSketch;
+use aigc_edge::util::Pcg64;
+
+const THREAD_COUNTS: [usize; 3] = [1, 2, 8];
+const EPS: f64 = 0.02;
+
+fn trace(rate: f64, horizon: f64, seed: u64) -> ArrivalTrace {
+    let cfg = ExperimentConfig::paper();
+    let arrival = ArrivalSettings {
+        process: ArrivalProcessKind::Poisson,
+        rate_hz: rate,
+        burst_rate_hz: rate,
+        period_s: 60.0,
+        duty: 0.5,
+        horizon_s: horizon,
+        max_requests: 0,
+    };
+    ArrivalTrace::generate(&cfg.scenario, &arrival, seed)
+}
+
+fn stats_bits(s: &OutcomeStats) -> [u64; 6] {
+    [
+        s.mean_quality.to_bits(),
+        s.outage_rate.to_bits(),
+        s.p50_e2e_s.to_bits(),
+        s.p95_e2e_s.to_bits(),
+        s.p99_e2e_s.to_bits(),
+        s.mean_wait_s.to_bits(),
+    ]
+}
+
+fn stream_stats(t: &ArrivalTrace, threads: usize) -> (usize, usize, OutcomeStats) {
+    let quality = PowerLawQuality::paper();
+    let delay = BatchDelayModel::paper();
+    let scheduler = Stacking::default();
+    let mut dyn_cfg = DynamicConfig::default();
+    dyn_cfg.threads = threads;
+    let report = simulate_dynamic_streaming(
+        t.arrivals.iter().copied(),
+        t.total_bandwidth_hz,
+        t.content_bits,
+        &scheduler,
+        &EqualAllocator,
+        &delay,
+        &quality,
+        &dyn_cfg,
+        OutcomeAccumulator::streaming(EPS),
+    );
+    (report.count(), report.served(), report.stats())
+}
+
+/// The GK sketch has no randomness and no clocks, so the entire
+/// streaming pipeline is a pure function of the seeded arrival stream:
+/// identical bits on every rerun, at every solver thread count.
+#[test]
+fn streaming_stats_bitwise_identical_across_seeds_and_thread_counts() {
+    for seed in [7u64, 11, 42] {
+        let t = trace(6.0, 60.0, seed);
+        let (count, served, reference) = stream_stats(&t, 1);
+        assert!(count > 0 && served > 0, "seed {seed}: empty run");
+        let (c2, s2, again) = stream_stats(&t, 1);
+        assert_eq!((count, served), (c2, s2), "seed {seed}: replay diverged");
+        assert_eq!(stats_bits(&reference), stats_bits(&again), "seed {seed}: replay diverged");
+        for threads in THREAD_COUNTS {
+            let (ct, st, got) = stream_stats(&t, threads);
+            assert_eq!((count, served), (ct, st), "seed {seed} threads={threads}");
+            assert_eq!(stats_bits(&reference), stats_bits(&got), "seed {seed} threads={threads}");
+        }
+    }
+}
+
+/// Fleet-level streaming summaries (per-server sketches combined by
+/// tandem rank walks) inherit the same thread-count invariance.
+#[test]
+fn cluster_fleet_streaming_stats_identical_across_thread_counts() {
+    let t = trace(6.0, 40.0, 7);
+    let quality = PowerLawQuality::paper();
+    let delay = BatchDelayModel::paper();
+    let scheduler = Stacking::default();
+    let run = |threads: usize| {
+        let mut dynamic = DynamicConfig::default();
+        dynamic.threads = threads;
+        let cfg = ClusterConfig {
+            speeds: server_speeds(3, 0.5, 1.5),
+            router: RouterKind::JoinShortestQueue,
+            dynamic,
+        };
+        let report = simulate_cluster(&t, &scheduler, &EqualAllocator, &delay, &quality, &cfg);
+        report.fleet_stats_with(MetricsMode::Streaming, EPS)
+    };
+    let reference = run(1);
+    assert!(reference.count > 0 && reference.served > 0);
+    for threads in THREAD_COUNTS {
+        let got = run(threads);
+        assert_eq!(
+            (reference.count, reference.served),
+            (got.count, got.served),
+            "threads={threads}"
+        );
+        assert_eq!(stats_bits(&reference), stats_bits(&got), "threads={threads}");
+    }
+}
+
+fn samples(name: &str, n: usize) -> Vec<f64> {
+    let mut rng = Pcg64::seeded(99);
+    (0..n)
+        .map(|_| match name {
+            "uniform" => rng.uniform(),
+            "exponential" => rng.exponential(0.7),
+            _ => {
+                // bimodal: two well-separated uniform humps
+                if rng.uniform() < 0.5 {
+                    1.0 + rng.uniform()
+                } else {
+                    10.0 + 3.0 * rng.uniform()
+                }
+            }
+        })
+        .collect()
+}
+
+/// Rank-error contract on shapes the e2e-delay distribution actually
+/// takes: every reported quantile is an inserted value within
+/// `⌈eps·n⌉ + 1` ranks of the exact target, even across the bimodal
+/// gap where value-space error would be huge.
+#[test]
+fn sketch_tracks_exact_percentiles_on_dissimilar_distributions() {
+    let n = 30_000usize;
+    let budget = (EPS * n as f64).ceil() as u64 + 1;
+    for name in ["uniform", "exponential", "bimodal"] {
+        let xs = samples(name, n);
+        let mut sketch = QuantileSketch::new(EPS);
+        for &x in &xs {
+            sketch.insert(x);
+        }
+        let mut sorted = xs.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        for p in [1.0, 10.0, 50.0, 90.0, 95.0, 99.0, 99.9] {
+            let v = sketch.quantile(p);
+            let target = ((p / 100.0) * n as f64).ceil().max(1.0) as u64;
+            let lo = sorted.partition_point(|&x| x < v) as u64 + 1;
+            let hi = sorted.partition_point(|&x| x <= v) as u64;
+            assert!(lo <= hi, "{name} p{p}: value {v} was never inserted");
+            let dist = if target < lo {
+                lo - target
+            } else if target > hi {
+                target - hi
+            } else {
+                0
+            };
+            assert!(dist <= budget, "{name} p{p}: {dist} ranks off target (budget {budget})");
+        }
+    }
+}
+
+/// The binary columnar format and the CSV format decode to the same
+/// bits, and the chunked `ColumnarReader` drives the streaming engine
+/// to the same tallies and bit-identical percentiles as the exact
+/// engine on the materialized trace.
+#[test]
+fn columnar_replay_matches_csv_and_feeds_the_streaming_engine() {
+    let t = trace(5.0, 90.0, 7);
+    assert!(t.len() > 100, "seed-7 stream too small to be meaningful");
+    let via_csv = ArrivalTrace::from_csv(&t.to_csv()).unwrap();
+    let bytes = encode_chunked(&t, 64);
+    let via_columnar = decode(&bytes).unwrap();
+    assert_eq!(via_csv, via_columnar, "CSV and columnar round-trips diverged");
+
+    let quality = PowerLawQuality::paper();
+    let delay = BatchDelayModel::paper();
+    let scheduler = Stacking::default();
+    let dyn_cfg = DynamicConfig::default();
+    let exact = simulate_dynamic(&t, &scheduler, &EqualAllocator, &delay, &quality, &dyn_cfg);
+    let reader = ColumnarReader::new(&bytes).unwrap();
+    let streamed = simulate_dynamic_streaming(
+        reader.map(|a| a.expect("valid frame")),
+        t.total_bandwidth_hz,
+        t.content_bits,
+        &scheduler,
+        &EqualAllocator,
+        &delay,
+        &quality,
+        &dyn_cfg,
+        OutcomeAccumulator::exact(),
+    );
+    assert_eq!(streamed.count(), exact.outcomes.len());
+    assert_eq!(streamed.served(), exact.served());
+    let stats = streamed.stats();
+    for (p, got) in [(50.0, stats.p50_e2e_s), (95.0, stats.p95_e2e_s), (99.0, stats.p99_e2e_s)] {
+        assert_eq!(got.to_bits(), exact.e2e_percentile(p).to_bits(), "p{p}");
+    }
+    assert_eq!(streamed.horizon_s.to_bits(), exact.horizon_s.to_bits());
+}
