@@ -1,0 +1,162 @@
+//! Checkpointed-denoising showdown behind `BENCH_pr7.json`.
+//! (`harness = false`: criterion is not in the offline vendored set.)
+//!
+//! Acceptance properties asserted here (ISSUE 7):
+//!  * under scheduled mid-trace deaths on a heterogeneous fleet,
+//!    checkpoint-on-death strictly beats requeue-on-death on served
+//!    requests and on the deadline-censored post-failure p99, and
+//!    requeue strictly beats no migration — in-flight work dies with
+//!    its server under every policy, and only the checkpoint column
+//!    salvages the finished step boundaries;
+//!  * the checkpoint column actually resumes work (resumed > 0,
+//!    recovered steps > 0);
+//!  * the whole figure replays bit-identically;
+//!  * with an empty fault script, `CheckpointOnDeath` is bit-identical
+//!    to no migration at a nonzero transfer cost — the checkpoint
+//!    machinery is pure overhead-free bookkeeping until a server dies.
+
+use std::path::Path;
+
+use aigc_edge::bandwidth::EqualAllocator;
+use aigc_edge::bench;
+use aigc_edge::config::ExperimentConfig;
+use aigc_edge::delay::BatchDelayModel;
+use aigc_edge::faults::{FaultScript, MigrationPolicyKind};
+use aigc_edge::quality::PowerLawQuality;
+use aigc_edge::scheduler::Stacking;
+use aigc_edge::sim::{server_speeds, simulate_event_cluster, EventClusterConfig};
+use aigc_edge::trace::ArrivalTrace;
+
+fn main() {
+    let mut cfg = ExperimentConfig::paper();
+    cfg.cluster.servers = 4;
+    cfg.cluster.speed_min = 0.5;
+    cfg.cluster.speed_max = 2.0;
+    cfg.arrival.rate_hz = 6.0;
+    let horizon_s: f64 = std::env::var("BENCH_HORIZON_S")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(400.0);
+
+    // ---- migration-policy showdown on one scheduled fault script ----
+    let rows = bench::fig_checkpoint(&cfg, horizon_s);
+    assert_eq!(rows.len(), MigrationPolicyKind::all().len());
+    assert!(rows[0].requests > 1_000, "showdown too small: {} requests", rows[0].requests);
+    let by = |p: MigrationPolicyKind| rows.iter().find(|r| r.policy == p).unwrap();
+    let none = by(MigrationPolicyKind::None);
+    let requeue = by(MigrationPolicyKind::RequeueOnDeath);
+    let checkpoint = by(MigrationPolicyKind::Checkpoint);
+    assert!(none.lost_to_failure > 0, "the scheduled deaths must strand work");
+    assert!(
+        requeue.served > none.served,
+        "requeue-on-death must strictly beat no-migration on served: {} vs {}",
+        requeue.served,
+        none.served
+    );
+    assert!(
+        checkpoint.served > requeue.served,
+        "checkpoint-on-death must strictly beat requeue-on-death on served: {} vs {}",
+        checkpoint.served,
+        requeue.served
+    );
+    assert!(checkpoint.resumed > 0, "checkpoint salvaged no in-flight requests");
+    assert!(checkpoint.recovered_steps > 0, "checkpoint salvaged no steps");
+    for r in &rows {
+        if r.policy != MigrationPolicyKind::Checkpoint {
+            assert_eq!(r.resumed, 0, "{:?} resumed without checkpoints", r.policy);
+            assert_eq!(r.recovered_steps, 0, "{:?} salvaged steps", r.policy);
+        }
+    }
+    assert!(
+        checkpoint.post_failure_p99_s < requeue.post_failure_p99_s,
+        "checkpoint must strictly beat requeue on the censored post-failure p99: {} vs {}",
+        checkpoint.post_failure_p99_s,
+        requeue.post_failure_p99_s
+    );
+
+    // ---- deterministic replay: identical seed -> bit-identical rows ----
+    let replay = bench::fig_checkpoint(&cfg, horizon_s);
+    assert_eq!(rows, replay, "checkpoint showdown is not deterministic");
+
+    // ---- zero-fault bitwise degeneration ----
+    let scheduler = Stacking::default();
+    let allocator = EqualAllocator;
+    let delay = BatchDelayModel::new(cfg.delay.a, cfg.delay.b);
+    let quality = PowerLawQuality::paper();
+    let mut arrival = cfg.arrival;
+    arrival.horizon_s = 60.0;
+    let short = ArrivalTrace::generate(&cfg.scenario, &arrival, cfg.seed);
+    let speeds = server_speeds(4, 0.5, 2.0);
+    let empty = FaultScript::empty();
+    let run = |migration: MigrationPolicyKind, transfer_s: f64| {
+        let event_cfg = EventClusterConfig {
+            speeds: &speeds,
+            router: cfg.cluster.router,
+            dynamic: (&cfg.dynamic).into(),
+            faults: &empty,
+            migration,
+            resume_transfer_s: transfer_s,
+        };
+        simulate_event_cluster(&short, &scheduler, &allocator, &delay, &quality, &event_cfg)
+    };
+    let baseline = run(MigrationPolicyKind::None, 0.0);
+    let ckpt = run(MigrationPolicyKind::Checkpoint, 0.8);
+    assert_eq!(
+        ckpt.assignment, baseline.assignment,
+        "zero-fault checkpoint dispatch must match no-migration"
+    );
+    assert_eq!(ckpt.resumed_elsewhere(), 0);
+    assert_eq!(ckpt.recovered_steps(), 0);
+    for (a, b) in ckpt.outcomes.iter().zip(&baseline.outcomes) {
+        assert_eq!(a.disposition, b.disposition, "request {}", a.id);
+        assert_eq!(a.steps, b.steps, "request {}", a.id);
+        assert_eq!(a.quality.to_bits(), b.quality.to_bits(), "request {}", a.id);
+        assert_eq!(a.resolved_s.to_bits(), b.resolved_s.to_bits(), "request {}", a.id);
+    }
+    assert_eq!(ckpt.horizon_s.to_bits(), baseline.horizon_s.to_bits());
+
+    // ---- tracked trajectory: BENCH_pr7.json at the repository root ----
+    let mut policies = String::new();
+    for (i, r) in rows.iter().enumerate() {
+        if i > 0 {
+            policies.push_str(",\n");
+        }
+        policies.push_str(&format!(
+            "    \"{}\": {{\n      \"served\": {},\n      \"lost_to_failure\": {},\n      \
+             \"migrated\": {},\n      \"resumed\": {},\n      \"recovered_steps\": {},\n      \
+             \"mean_quality\": {:?},\n      \"p99_e2e_s\": {:?},\n      \
+             \"post_failure_p99_s\": {:?}\n    }}",
+            r.policy.name(),
+            r.served,
+            r.lost_to_failure,
+            r.migrated,
+            r.resumed,
+            r.recovered_steps,
+            r.mean_quality,
+            r.p99_e2e_s,
+            r.post_failure_p99_s,
+        ));
+    }
+    let json = format!(
+        "{{\n  \"pr\": 7,\n  \"horizon_s\": {horizon_s:?},\n  \"requests\": {},\n  \
+         \"policies\": {{\n{policies}\n  }}\n}}\n",
+        rows[0].requests,
+    );
+    let path = Path::new(env!("CARGO_MANIFEST_DIR")).join("..").join("BENCH_pr7.json");
+    std::fs::write(&path, &json).unwrap_or_else(|e| panic!("writing {}: {e}", path.display()));
+    aigc_edge::util::json::parse(&json)
+        .unwrap_or_else(|e| panic!("BENCH_pr7.json does not parse: {e}"));
+    println!(
+        "\nfig_checkpoint OK (served {} -> {} -> {}; resumed {} / {} steps; post-failure p99 \
+         {:.2}s -> {:.2}s -> {:.2}s; wrote {})",
+        none.served,
+        requeue.served,
+        checkpoint.served,
+        checkpoint.resumed,
+        checkpoint.recovered_steps,
+        none.post_failure_p99_s,
+        requeue.post_failure_p99_s,
+        checkpoint.post_failure_p99_s,
+        path.display()
+    );
+}

@@ -112,6 +112,7 @@ fn main() {
             router: cfg.cluster.router,
             dynamic: (&cfg.dynamic).into(),
             faults: &script,
+            resume_transfer_s: cfg.migration.transfer_s,
             migration,
         };
         simulate_event_cluster(&trace, &scheduler, &allocator, &delay, &quality, &event_cfg)

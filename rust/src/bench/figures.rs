@@ -5,7 +5,7 @@ use crate::bandwidth::{Allocator, EqualAllocator, PsoAllocator, PsoConfig};
 use crate::config::ExperimentConfig;
 use crate::coordinator::{profile_batch_delay, ProfileConfig, SolveMode};
 use crate::delay::BatchDelayModel;
-use crate::faults::{FaultScript, MigrationPolicyKind, NO_FAULTS};
+use crate::faults::{DownInterval, FaultScript, MigrationPolicyKind, NO_FAULTS};
 use crate::quality::{PowerLawQuality, QualityModel, TableQuality};
 use crate::routing::RouterKind;
 use crate::runtime::ArtifactStore;
@@ -536,6 +536,7 @@ pub fn fig_faults(
             dynamic: DynamicConfig::from(&cfg.dynamic),
             faults,
             migration: policy,
+            resume_transfer_s: cfg.migration.transfer_s,
         };
         let report =
             simulate_event_cluster(trace, &scheduler, &allocator, &delay, &quality, &event_cfg);
@@ -571,6 +572,112 @@ pub fn fig_faults(
             format!("{:.2}", row.p99_e2e_s),
             format!("{:.2}", row.post_failure_p99_s),
             format!("{:.2}", row.mean_time_to_drain_s),
+        ]);
+    }
+    table.finish();
+    rows
+}
+
+// ---------------------------------------------------------------------------
+// Checkpoint figure (new) — migration policy showdown under scheduled
+// mid-trace deaths, with checkpointed resumes in the comparison set
+// ---------------------------------------------------------------------------
+
+/// One migration-policy column of the checkpoint showdown.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FigCheckpointRow {
+    pub policy: MigrationPolicyKind,
+    pub requests: usize,
+    pub served: usize,
+    pub lost_to_failure: usize,
+    pub migrated: usize,
+    /// Requests finished elsewhere from a dead server's checkpoint.
+    pub resumed: usize,
+    /// Denoising steps salvaged from dead servers' checkpoints.
+    pub recovered_steps: u64,
+    pub mean_quality: f64,
+    pub p99_e2e_s: f64,
+    /// Deadline-censored post-failure p99 (`metrics::RecoveryStats`).
+    pub post_failure_p99_s: f64,
+}
+
+/// Run every migration policy on one seeded trace against one scheduled
+/// fault script — the fastest server dies for good a third of the way
+/// in, the second-fastest drops out for a window at the halfway mark —
+/// so the columns are directly comparable. In-flight work dies with its
+/// server under every policy; only `CheckpointOnDeath` salvages the
+/// finished step boundaries and resumes the remainder elsewhere (after
+/// `cfg.migration.transfer_s` of latent transfer), so on `served` and
+/// on the censored post-failure p99 the expected order is checkpoint ≥
+/// requeue ≥ none (asserted strictly at bench scale by
+/// `benches/fig_checkpoint.rs`).
+pub fn fig_checkpoint(cfg: &ExperimentConfig, horizon_s: f64) -> Vec<FigCheckpointRow> {
+    let delay = BatchDelayModel::new(cfg.delay.a, cfg.delay.b);
+    let quality = PowerLawQuality::paper();
+    let scheduler = Stacking::default();
+    let allocator = EqualAllocator;
+    let servers = cfg.cluster.servers.max(2);
+    let speeds = server_speeds(servers, cfg.cluster.speed_min, cfg.cluster.speed_max);
+    let mut arrival = cfg.arrival;
+    arrival.process = crate::config::ArrivalProcessKind::Poisson;
+    arrival.horizon_s = horizon_s;
+    let trace = ArrivalTrace::generate(&cfg.scenario, &arrival, cfg.seed);
+    // Speeds ascend with the server id, so the highest ids carry the
+    // largest routed share — killing them strands the most work. The
+    // death instants sit away from the epoch grid so they land inside
+    // executing batches, not on their boundaries.
+    let script = FaultScript::scheduled(vec![
+        DownInterval::new(servers - 1, horizon_s / 3.0 + 0.37, horizon_s + 60.0).unwrap(),
+        DownInterval::new(servers - 2, horizon_s / 2.0 + 0.37, horizon_s / 2.0 + 40.37).unwrap(),
+    ])
+    .expect("scheduled checkpoint-showdown script is valid");
+    let mut table = TableWriter::new(
+        "Checkpoint — migration policy showdown under scheduled mid-trace deaths",
+        &[
+            "policy", "requests", "served", "lost", "migrated", "resumed", "steps",
+            "mean FID", "p99 e2e", "post p99",
+        ],
+    )
+    .with_csv("fig_checkpoint");
+    let policies = MigrationPolicyKind::all();
+    let rows: Vec<FigCheckpointRow> = par_map(cfg.perf.threads, &policies, |_, &policy| {
+        let event_cfg = EventClusterConfig {
+            speeds: &speeds,
+            router: cfg.cluster.router,
+            dynamic: DynamicConfig::from(&cfg.dynamic),
+            faults: &script,
+            migration: policy,
+            resume_transfer_s: cfg.migration.transfer_s,
+        };
+        let report =
+            simulate_event_cluster(&trace, &scheduler, &allocator, &delay, &quality, &event_cfg);
+        let stats = report.fleet_stats();
+        let rs = report.recovery_stats(cfg.dynamic.window_s);
+        FigCheckpointRow {
+            policy,
+            requests: trace.len(),
+            served: report.served(),
+            lost_to_failure: report.lost_to_failure(),
+            migrated: report.migrated(),
+            resumed: report.resumed_elsewhere(),
+            recovered_steps: report.recovered_steps(),
+            mean_quality: stats.mean_quality,
+            p99_e2e_s: stats.p99_e2e_s,
+            post_failure_p99_s: rs.post_failure_p99_s,
+        }
+    });
+    for row in &rows {
+        table.row(&[
+            row.policy.name().to_string(),
+            row.requests.to_string(),
+            row.served.to_string(),
+            row.lost_to_failure.to_string(),
+            row.migrated.to_string(),
+            row.resumed.to_string(),
+            row.recovered_steps.to_string(),
+            format!("{:.2}", row.mean_quality),
+            format!("{:.2}", row.p99_e2e_s),
+            format!("{:.2}", row.post_failure_p99_s),
         ]);
     }
     table.finish();
@@ -664,6 +771,7 @@ pub fn fig_pipeline(
             dynamic,
             faults: &NO_FAULTS,
             migration: MigrationPolicyKind::None,
+            resume_transfer_s: 0.0,
         };
         let report =
             simulate_event_cluster(trace, &scheduler, &allocator, &delay, &quality, &event_cfg);
@@ -834,6 +942,53 @@ mod tests {
         assert!(rows.iter().any(|r| r.fault_rate_per_min > 0.0 && r.failures > 0));
         // bit-identical replay
         assert_eq!(rows, fig_faults(&cfg, &[0.0, 2.0], 30.0));
+    }
+
+    #[test]
+    fn fig_checkpoint_policy_order_and_replays() {
+        let mut cfg = ExperimentConfig::paper();
+        cfg.cluster.servers = 3;
+        cfg.cluster.speed_min = 0.5;
+        cfg.cluster.speed_max = 1.5;
+        cfg.arrival.rate_hz = 4.0;
+        let rows = fig_checkpoint(&cfg, 60.0);
+        assert_eq!(rows.len(), MigrationPolicyKind::all().len());
+        let by = |p: MigrationPolicyKind| rows.iter().find(|r| r.policy == p).unwrap();
+        let none = by(MigrationPolicyKind::None);
+        let requeue = by(MigrationPolicyKind::RequeueOnDeath);
+        let checkpoint = by(MigrationPolicyKind::Checkpoint);
+        // the scheduled deaths must strand work without migration
+        assert!(none.lost_to_failure > 0, "deaths stranded nothing: {none:?}");
+        // only the checkpoint column resumes in-flight work
+        for r in &rows {
+            assert_eq!(r.requests, trace_len(&rows));
+            assert!(r.served + r.lost_to_failure <= r.requests);
+            if r.policy != MigrationPolicyKind::Checkpoint {
+                assert_eq!(r.resumed, 0, "{r:?}");
+                assert_eq!(r.recovered_steps, 0, "{r:?}");
+            }
+        }
+        // served dominance: checkpoint >= requeue >= none (strictness
+        // is asserted at bench scale by benches/fig_checkpoint.rs)
+        assert!(
+            checkpoint.served >= requeue.served && requeue.served >= none.served,
+            "served order violated: checkpoint {} requeue {} none {}",
+            checkpoint.served,
+            requeue.served,
+            none.served
+        );
+        assert!(
+            checkpoint.post_failure_p99_s <= requeue.post_failure_p99_s,
+            "checkpoint post-failure p99 {} worse than requeue {}",
+            checkpoint.post_failure_p99_s,
+            requeue.post_failure_p99_s
+        );
+        // bit-identical replay
+        assert_eq!(rows, fig_checkpoint(&cfg, 60.0));
+    }
+
+    fn trace_len(rows: &[FigCheckpointRow]) -> usize {
+        rows[0].requests
     }
 
     #[test]

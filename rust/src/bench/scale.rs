@@ -29,7 +29,7 @@ use crate::delay::BatchDelayModel;
 use crate::metrics::OutcomeAccumulator;
 use crate::quality::PowerLawQuality;
 use crate::scheduler::Stacking;
-use crate::sim::{simulate_dynamic, simulate_dynamic_streaming, Disposition, DynamicConfig};
+use crate::sim::{simulate_dynamic, simulate_dynamic_streaming, DynamicConfig};
 use crate::trace::{ArrivalStream, ArrivalTrace};
 
 /// Sweep knobs.
@@ -179,7 +179,7 @@ pub fn verify_agreement(
     let mut sorted: Vec<f64> = exact
         .outcomes
         .iter()
-        .filter(|o| o.disposition == Disposition::Served)
+        .filter(|o| o.disposition.is_served())
         .map(|o| o.e2e_s)
         .collect();
     sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());

@@ -7,10 +7,12 @@
 //!             arrivals through the event-driven multi-epoch simulator
 //!   `cluster  [--servers N] [--router R] [...]` — the dynamic workload
 //!             sharded across N servers behind a routing policy
-//!   `faults   [--fault-mode M] [--migration P] [...]` — the cluster
-//!             workload under failure injection and live migration
+//!   `faults   [--fault-mode M] [--migration P] [--transfer-s T] [...]`
+//!             — the cluster workload under failure injection and live
+//!             migration (checkpointed resumes under `--migration
+//!             checkpoint`)
 //!   `profile  [--reps N]` — Fig. 1a measurement
-//!   `figures  [--which 1a|1b|2a|2b|2c|3|cluster|faults|pipeline|all] [--reps N]`
+//!   `figures  [--which 1a|1b|2a|2b|2c|3|cluster|faults|pipeline|checkpoint|all] [--reps N]`
 //!   `perf     [--threads N] [--quick true]` — parallel-fabric perf
 //!             harness (serial vs auto threads, emits BENCH_pr5.json)
 //!
@@ -125,9 +127,10 @@ USAGE:
   aigc-edge faults   [--config file.toml] [cluster flags...]
                      [--fault-mode none|random|scheduled] [--mtbf 120] [--mttr 15]
                      [--fault-seed N] [--down \"server:from:until,...\"]
-                     [--migration none|requeue|steal]
+                     [--migration none|requeue|steal|checkpoint] [--transfer-s 0.05]
   aigc-edge profile  [--reps 20]
-  aigc-edge figures  [--which all|1a|1b|2a|2b|2c|3|cluster|faults|pipeline] [--reps 3]
+  aigc-edge figures  [--which all|1a|1b|2a|2b|2c|3|cluster|faults|pipeline|checkpoint]
+                     [--reps 3]
                      [--threads 0]
   aigc-edge perf     [--config file.toml] [--threads 0] [--quick true]
                      [--out BENCH_pr5.json] [--seed N]

@@ -249,8 +249,12 @@ impl FaultSettings {
 #[derive(Debug, Clone, Copy)]
 pub struct MigrationSettings {
     /// What happens to a dead/overloaded server's queued requests
-    /// (`none` | `requeue` | `steal`).
+    /// (`none` | `requeue` | `steal` | `checkpoint`).
     pub policy: MigrationPolicyKind,
+    /// Latent-transfer delay (seconds) charged when a checkpointed
+    /// partial request moves off a dead server; only read under the
+    /// `checkpoint` policy.
+    pub transfer_s: f64,
 }
 
 /// Performance settings — the solve/sweep fan-out knob. TOML section
@@ -331,7 +335,10 @@ impl ExperimentConfig {
                 seed: 0,
                 down: Vec::new(),
             },
-            migration: MigrationSettings { policy: MigrationPolicyKind::RequeueOnDeath },
+            migration: MigrationSettings {
+                policy: MigrationPolicyKind::RequeueOnDeath,
+                transfer_s: 0.05,
+            },
             perf: PerfSettings { threads: 0 },
             metrics: MetricsSettings { mode: MetricsMode::Exact, sketch_eps: 0.01 },
             artifacts_dir: default_artifacts_dir(),
@@ -460,6 +467,13 @@ impl ExperimentConfig {
         let m = &self.metrics;
         if !(m.sketch_eps > 0.0 && m.sketch_eps < 0.5) {
             bail!("metrics.sketch_eps must be in (0, 0.5), got {}", m.sketch_eps);
+        }
+        let mg = &self.migration;
+        if !(mg.transfer_s >= 0.0 && mg.transfer_s.is_finite()) {
+            bail!(
+                "migration.transfer_s must be finite and >= 0 seconds, got {}",
+                mg.transfer_s
+            );
         }
         Ok(())
     }
@@ -614,6 +628,18 @@ fn apply_doc(cfg: &mut ExperimentConfig, doc: &TomlDoc) -> Result<()> {
                 }
                 None => false,
             },
+            // `checkpoint = true` is shorthand for `policy =
+            // "checkpoint"`; `false` leaves the configured policy alone
+            // (the other policies never checkpoint anyway).
+            "migration.checkpoint" => match value.as_bool() {
+                Some(true) => {
+                    cfg.migration.policy = MigrationPolicyKind::Checkpoint;
+                    true
+                }
+                Some(false) => true,
+                None => false,
+            },
+            "migration.transfer_s" => set_f64(&mut cfg.migration.transfer_s, value),
             _ => bail!("unknown config key '{key}'"),
         };
         if !ok {
@@ -880,6 +906,28 @@ mod tests {
         // materializes into a validated script for the configured fleet
         let script = cfg.faults.script(cfg.cluster.servers, 300.0, cfg.seed).unwrap();
         assert_eq!(script.downs().len(), 2);
+    }
+
+    #[test]
+    fn migration_checkpoint_knobs_apply() {
+        let cfg = ExperimentConfig::from_toml_text(
+            "[migration]\ncheckpoint = true\ntransfer_s = 0.4",
+        )
+        .unwrap();
+        assert_eq!(cfg.migration.policy, MigrationPolicyKind::Checkpoint);
+        assert_eq!(cfg.migration.transfer_s, 0.4);
+        // the long-form policy name works too
+        let cfg = ExperimentConfig::from_toml_text("[migration]\npolicy = \"checkpoint\"").unwrap();
+        assert_eq!(cfg.migration.policy, MigrationPolicyKind::Checkpoint);
+        // `checkpoint = false` keeps the configured policy
+        let cfg = ExperimentConfig::from_toml_text(
+            "[migration]\npolicy = \"steal\"\ncheckpoint = false",
+        )
+        .unwrap();
+        assert_eq!(cfg.migration.policy, MigrationPolicyKind::StealWhenIdle);
+        // transfer must be finite and non-negative
+        assert!(ExperimentConfig::from_toml_text("[migration]\ntransfer_s = -1.0").is_err());
+        assert!(ExperimentConfig::from_toml_text("[migration]\ntransfer_s = inf").is_err());
     }
 
     #[test]

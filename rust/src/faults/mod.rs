@@ -17,9 +17,11 @@
 //!   server's queued requests: lose them with the server
 //!   ([`NoMigration`]), hand them back through the
 //!   [`Router`](crate::routing::Router) with their elapsed deadline
-//!   budget preserved ([`RequeueOnDeath`]), or additionally let solve
+//!   budget preserved ([`RequeueOnDeath`]), additionally let solve
 //!   carry-overs re-enter the router whenever an idle sibling exists
-//!   ([`StealWhenIdle`]).
+//!   ([`StealWhenIdle`]), or checkpoint the executing batch at the
+//!   last completed step boundary so partial denoising progress
+//!   resumes on a live sibling ([`CheckpointOnDeath`]).
 //!
 //! Every name parser here returns an error listing the valid names, so
 //! a CLI/TOML typo is diagnosable without reading the source.
@@ -150,12 +152,9 @@ impl FaultScript {
         let mut downs = Vec::new();
         for server in 0..servers {
             let mut rng = Pcg64::new(seed, 0xFA17_0000 + server as u64);
-            let mut t = rng.exponential(1.0 / mtbf_s);
-            while t < horizon_s {
-                let outage = rng.exponential(1.0 / mttr_s);
-                downs.push(DownInterval { server, from_s: t, until_s: t + outage });
-                t += outage + rng.exponential(1.0 / mtbf_s);
-            }
+            downs.extend(renewal_downs(server, horizon_s, mtbf_s, mttr_s, |mean| {
+                rng.exponential(1.0 / mean)
+            }));
         }
         Self::scheduled(downs).expect("renewal intervals are disjoint by construction")
     }
@@ -218,6 +217,41 @@ impl FaultScript {
     }
 }
 
+/// Outage floor for renewal draws. `Pcg64::uniform` can return exactly
+/// 0.0, which makes `exponential` return exactly 0.0 — and a
+/// zero-length `DownInterval` fails `until_s > from_s` validation, so
+/// the unclamped construction could panic inside its own
+/// "disjoint by construction" expect.
+const MIN_OUTAGE_S: f64 = 1e-9;
+
+/// One server's alternating-renewal down intervals: `draw(mean)` is
+/// called for alternating up-gaps (mean `mtbf_s`) and outages (mean
+/// `mttr_s`). Split from [`FaultScript::random`] so the degenerate
+/// zero-length outage draw can be forced in tests. Zero up-gaps are
+/// legal (back-to-back intervals touch); zero outages are clamped to
+/// [`MIN_OUTAGE_S`].
+fn renewal_downs(
+    server: usize,
+    horizon_s: f64,
+    mtbf_s: f64,
+    mttr_s: f64,
+    mut draw: impl FnMut(f64) -> f64,
+) -> Vec<DownInterval> {
+    let mut downs = Vec::new();
+    let mut t = draw(mtbf_s);
+    while t < horizon_s {
+        let outage = draw(mttr_s).max(MIN_OUTAGE_S);
+        let until_s = t + outage;
+        // At extreme `t` even the clamped outage can round away to a
+        // zero-width interval; skip it rather than emit an invalid one.
+        if until_s > t {
+            downs.push(DownInterval { server, from_s: t, until_s });
+        }
+        t += outage + draw(mtbf_s);
+    }
+    downs
+}
+
 /// How the fault script is produced. Lives here (not in `config`) so
 /// the mode set and its names stay next to the implementations.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -269,6 +303,15 @@ pub trait MigrationPolicy {
     /// Hand a solve's carry-overs back to the router whenever an idle
     /// alive sibling exists (`false`: carry-overs stay local).
     fn steal_when_idle(&self) -> bool;
+
+    /// Checkpoint the executing batch at the last completed step
+    /// boundary when its server dies: undelivered requests keep their
+    /// finished denoising steps and re-enter the router as partials
+    /// after a latent-transfer delay (`false`: a death loses the
+    /// undelivered part of the executing batch).
+    fn checkpoint_in_flight(&self) -> bool {
+        false
+    }
 }
 
 /// Queued requests die with their server (the ablation baseline).
@@ -328,6 +371,32 @@ impl MigrationPolicy for StealWhenIdle {
     }
 }
 
+/// Requeue-on-death plus step checkpointing: a dying server's executing
+/// batch is cut at the last completed step boundary, and every
+/// undelivered request resumes on another server with its finished
+/// steps credited (after a latent-transfer delay). Work-conserving
+/// under failures: partial denoising progress survives the crash.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct CheckpointOnDeath;
+
+impl MigrationPolicy for CheckpointOnDeath {
+    fn name(&self) -> &'static str {
+        "checkpoint-on-death"
+    }
+
+    fn requeue_on_death(&self) -> bool {
+        true
+    }
+
+    fn steal_when_idle(&self) -> bool {
+        false
+    }
+
+    fn checkpoint_in_flight(&self) -> bool {
+        true
+    }
+}
+
 /// Which migration policy a cluster runs (config/CLI surface for the
 /// [`MigrationPolicy`] implementations).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -335,6 +404,7 @@ pub enum MigrationPolicyKind {
     None,
     RequeueOnDeath,
     StealWhenIdle,
+    Checkpoint,
 }
 
 impl MigrationPolicyKind {
@@ -344,8 +414,9 @@ impl MigrationPolicyKind {
             "none" | "off" => Ok(Self::None),
             "requeue" | "requeue-on-death" => Ok(Self::RequeueOnDeath),
             "steal" | "steal-when-idle" => Ok(Self::StealWhenIdle),
+            "checkpoint" | "checkpoint-on-death" => Ok(Self::Checkpoint),
             other => {
-                bail!("unknown migration policy '{other}' (valid: none|off, requeue|requeue-on-death, steal|steal-when-idle)")
+                bail!("unknown migration policy '{other}' (valid: none|off, requeue|requeue-on-death, steal|steal-when-idle, checkpoint|checkpoint-on-death)")
             }
         }
     }
@@ -355,12 +426,13 @@ impl MigrationPolicyKind {
             Self::None => "none",
             Self::RequeueOnDeath => "requeue-on-death",
             Self::StealWhenIdle => "steal-when-idle",
+            Self::Checkpoint => "checkpoint-on-death",
         }
     }
 
     /// All policies, in the order the fault sweeps compare them.
-    pub fn all() -> [Self; 3] {
-        [Self::None, Self::RequeueOnDeath, Self::StealWhenIdle]
+    pub fn all() -> [Self; 4] {
+        [Self::None, Self::RequeueOnDeath, Self::StealWhenIdle, Self::Checkpoint]
     }
 
     pub fn build(&self) -> Box<dyn MigrationPolicy> {
@@ -368,6 +440,7 @@ impl MigrationPolicyKind {
             Self::None => Box::new(NoMigration),
             Self::RequeueOnDeath => Box::new(RequeueOnDeath),
             Self::StealWhenIdle => Box::new(StealWhenIdle),
+            Self::Checkpoint => Box::new(CheckpointOnDeath),
         }
     }
 }
@@ -471,5 +544,43 @@ mod tests {
         assert!(!NoMigration.requeue_on_death() && !NoMigration.steal_when_idle());
         assert!(RequeueOnDeath.requeue_on_death() && !RequeueOnDeath.steal_when_idle());
         assert!(StealWhenIdle.requeue_on_death() && StealWhenIdle.steal_when_idle());
+        assert!(!NoMigration.checkpoint_in_flight());
+        assert!(!RequeueOnDeath.checkpoint_in_flight());
+        assert!(!StealWhenIdle.checkpoint_in_flight());
+        assert!(
+            CheckpointOnDeath.requeue_on_death()
+                && !CheckpointOnDeath.steal_when_idle()
+                && CheckpointOnDeath.checkpoint_in_flight()
+        );
+    }
+
+    /// Regression: `Pcg64::uniform` can return exactly 0.0, making an
+    /// exponential outage draw exactly 0.0 — the resulting zero-length
+    /// interval failed validation inside `FaultScript::random`'s
+    /// "disjoint by construction" expect. Force the degenerate draw.
+    #[test]
+    fn renewal_clamps_zero_length_outage_draws() {
+        let mut draws = [5.0, 0.0, 3.0, 1.0, 100.0].into_iter();
+        let downs = renewal_downs(0, 50.0, 60.0, 10.0, |_mean| draws.next().unwrap());
+        assert_eq!(downs.len(), 2);
+        let degenerate = downs[0];
+        assert!(degenerate.duration_s() > 0.0, "zero draw must be clamped");
+        assert!(degenerate.duration_s() <= MIN_OUTAGE_S);
+        // the clamped interval still composes into a valid script
+        FaultScript::scheduled(downs).unwrap();
+        // zero up-gaps are legal: back-to-back intervals touch
+        let mut draws = [1.0, 2.0, 0.0, 2.0, 100.0].into_iter();
+        let touching = renewal_downs(0, 10.0, 60.0, 10.0, |_mean| draws.next().unwrap());
+        assert_eq!(touching.len(), 2);
+        assert_eq!(touching[0].until_s, touching[1].from_s);
+        FaultScript::scheduled(touching).unwrap();
+    }
+
+    #[test]
+    fn random_never_panics_across_seeds() {
+        for seed in 0..200 {
+            let script = FaultScript::random(3, 400.0, 15.0, 4.0, seed);
+            script.validate_servers(3).unwrap();
+        }
     }
 }

@@ -524,6 +524,7 @@ fn cmd_cluster(args: &Args) -> Result<()> {
             dynamic: cluster_cfg.dynamic,
             faults: &aigc_edge::faults::NO_FAULTS,
             migration: MigrationPolicyKind::None,
+            resume_transfer_s: 0.0,
         };
         let report = simulate_event_cluster_pooled(
             &trace,
@@ -649,6 +650,7 @@ fn cmd_faults(args: &Args) -> Result<()> {
         "seed",
         "threads",
         "migration",
+        "transfer-s",
         "fault-mode",
         "mtbf",
         "mttr",
@@ -672,6 +674,7 @@ fn cmd_faults(args: &Args) -> Result<()> {
     if let Some(name) = args.get("migration") {
         cfg.migration.policy = MigrationPolicyKind::from_name(name)?;
     }
+    cfg.migration.transfer_s = args.get_f64("transfer-s", cfg.migration.transfer_s)?;
     cfg.validate()?;
 
     let scheduler = scheduler_from(args, &cfg)?;
@@ -694,6 +697,7 @@ fn cmd_faults(args: &Args) -> Result<()> {
         dynamic,
         faults: &faults,
         migration: cfg.migration.policy,
+        resume_transfer_s: cfg.migration.transfer_s,
     };
     println!(
         "faults: {} servers router={} | mode={} ({} outages, {:.1}s scheduled downtime) | migration={}",
@@ -773,11 +777,13 @@ fn cmd_faults(args: &Args) -> Result<()> {
     let rs = report.recovery_stats(cfg.dynamic.window_s);
     println!(
         "recovery: mean time-to-drain {:.2}s | post-failure p99 (deadline-censored) {:.2}s | \
-         post-failure outage {:.3} over {} requests",
+         post-failure outage {:.3} over {} requests | {} checkpoint-resumed ({} steps salvaged)",
         rs.mean_time_to_drain_s,
         rs.post_failure_p99_s,
         rs.post_failure_outage_rate,
         rs.post_failure_count,
+        rs.resumed,
+        rs.recovered_steps,
     );
     Ok(())
 }
@@ -874,6 +880,9 @@ fn cmd_figures(args: &Args) -> Result<()> {
     }
     if want("faults") {
         bench::fig_faults(&cfg, &[0.0, 0.5, 1.0, 2.0], 200.0);
+    }
+    if want("checkpoint") {
+        bench::fig_checkpoint(&cfg, 200.0);
     }
     if want("pipeline") {
         bench::fig_pipeline(&cfg, &[0.0, 0.1, 0.25, 0.5], 200.0);

@@ -260,6 +260,12 @@ pub struct RecoverySample {
     pub deadline_s: f64,
     pub served: bool,
     pub met: bool,
+    /// Delivered via a checkpoint resume on another server after its
+    /// first server died mid-batch (implies `served`).
+    pub resumed: bool,
+    /// Denoising steps salvaged from the dead server's partial batch
+    /// (non-zero only when `resumed`).
+    pub recovered_steps: u32,
 }
 
 /// Post-failure recovery aggregates for a fault-injected cluster run
@@ -287,6 +293,11 @@ pub struct RecoveryStats {
     pub post_failure_outage_rate: f64,
     /// Requests inside any post-failure window.
     pub post_failure_count: usize,
+    /// Requests served via checkpoint resume after their server died.
+    pub resumed: usize,
+    /// Total denoising steps salvaged from dead servers' partial
+    /// batches across all resumes.
+    pub recovered_steps: u64,
 }
 
 impl RecoveryStats {
@@ -332,6 +343,8 @@ impl RecoveryStats {
             post_failure_p99_s: percentile(&censored, 99.0),
             post_failure_outage_rate,
             post_failure_count: post.len(),
+            resumed: samples.iter().filter(|s| s.resumed).count(),
+            recovered_steps: samples.iter().map(|s| s.recovered_steps as u64).sum(),
         }
     }
 }
@@ -523,6 +536,8 @@ mod tests {
                 deadline_s: deadline,
                 served,
                 met: served,
+                resumed: false,
+                recovered_steps: 0,
             }
         };
         let samples = [
@@ -553,6 +568,30 @@ mod tests {
         assert_eq!(stats.mean_time_to_drain_s, 0.0);
         assert_eq!(stats.post_failure_p99_s, 0.0);
         assert_eq!(stats.post_failure_count, 0);
+        assert_eq!(stats.resumed, 0);
+        assert_eq!(stats.recovered_steps, 0);
+    }
+
+    #[test]
+    fn recovery_stats_count_resumes_and_salvaged_steps() {
+        let base = RecoverySample {
+            arrival_s: 0.0,
+            resolved_s: 2.0,
+            e2e_s: 2.0,
+            deadline_s: 10.0,
+            served: true,
+            met: true,
+            resumed: false,
+            recovered_steps: 0,
+        };
+        let samples = [
+            RecoverySample { resumed: true, recovered_steps: 7, ..base },
+            RecoverySample { resumed: true, recovered_steps: 3, ..base },
+            base,
+        ];
+        let stats = RecoveryStats::compute(&[1.0], 30.0, 2, 0, &samples);
+        assert_eq!(stats.resumed, 2);
+        assert_eq!(stats.recovered_steps, 10);
     }
 
     #[test]

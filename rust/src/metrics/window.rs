@@ -17,12 +17,17 @@ use crate::util::stats::{percentile, percentile_sorted};
 pub struct WindowedSeries {
     window_s: f64,
     points: VecDeque<(f64, f64)>,
+    /// Earliest timestamp ever pushed — anchors the warmup span before
+    /// a full window of time has elapsed.
+    origin_s: Option<f64>,
+    /// Latest instant the series has seen (pushes and prunes).
+    observed_s: f64,
 }
 
 impl WindowedSeries {
     pub fn new(window_s: f64) -> Self {
         assert!(window_s > 0.0, "window must be positive");
-        Self { window_s, points: VecDeque::new() }
+        Self { window_s, points: VecDeque::new(), origin_s: None, observed_s: f64::NEG_INFINITY }
     }
 
     pub fn window_s(&self) -> f64 {
@@ -33,12 +38,14 @@ impl WindowedSeries {
     /// window. Slightly out-of-order timestamps (bounded by the window)
     /// are tolerated: pruning only ever removes from the front.
     pub fn push(&mut self, t_s: f64, value: f64) {
+        self.origin_s = Some(self.origin_s.map_or(t_s, |o| o.min(t_s)));
         self.points.push_back((t_s, value));
         self.prune(t_s);
     }
 
     /// Drop samples strictly older than `now_s - window`.
     pub fn prune(&mut self, now_s: f64) {
+        self.observed_s = self.observed_s.max(now_s);
         let cutoff = now_s - self.window_s;
         while matches!(self.points.front(), Some(&(t, _)) if t < cutoff) {
             self.points.pop_front();
@@ -51,9 +58,21 @@ impl WindowedSeries {
     }
 
     /// Events per second over the window (e.g. arrival rate when every
-    /// event is pushed once).
+    /// event is pushed once). Before a full window of time has elapsed
+    /// the divisor is the elapsed span, not `window_s` — dividing a
+    /// warmup burst by the whole window underreported load to the
+    /// routing telemetry. A single-instant series (zero span) falls
+    /// back to the window divisor rather than reading infinite.
     pub fn rate_hz(&self) -> f64 {
-        self.points.len() as f64 / self.window_s
+        if self.points.is_empty() {
+            return 0.0;
+        }
+        let span = match self.origin_s {
+            Some(origin) => (self.observed_s - origin).min(self.window_s),
+            None => self.window_s,
+        };
+        let divisor = if span > 0.0 { span } else { self.window_s };
+        self.points.len() as f64 / divisor
     }
 
     /// Sum of the windowed values; 0.0 when empty.
@@ -211,6 +230,30 @@ mod tests {
             w.push(10.0 + i as f64 * 0.25, 1.0); // 4 Hz for 5 s
         }
         assert!((w.rate_hz() - 4.0).abs() < 0.5, "rate {}", w.rate_hz());
+    }
+
+    /// Regression: during warmup the rate divided by the full window,
+    /// so 5 arrivals in the first second of a 10 s window read 0.5 Hz
+    /// instead of 5 Hz — starving the live-state router of load signal.
+    #[test]
+    fn rate_uses_elapsed_span_during_warmup() {
+        let mut w = WindowedSeries::new(10.0);
+        for i in 0..5 {
+            w.push(i as f64 * 0.25, 1.0); // 5 events over the first 1 s
+        }
+        assert!((w.rate_hz() - 5.0).abs() < 1e-9, "warmup rate {}", w.rate_hz());
+        // A single instant has zero span: stay finite, fall back to
+        // the window divisor.
+        let mut one = WindowedSeries::new(10.0);
+        one.push(0.0, 1.0);
+        assert!((one.rate_hz() - 0.1).abs() < 1e-12);
+        // Once a full window has elapsed, the divisor is the window
+        // again — steady-state readings are unchanged by the fix.
+        let mut steady = WindowedSeries::new(5.0);
+        for i in 0..80 {
+            steady.push(i as f64 * 0.25, 1.0); // 4 Hz for 20 s
+        }
+        assert!((steady.rate_hz() - 21.0 / 5.0).abs() < 1e-9, "steady rate {}", steady.rate_hz());
     }
 
     #[test]

@@ -214,6 +214,24 @@ pub trait Router {
     /// have been advanced to `arrival.t_s`. Panics if no server is
     /// alive — the cluster layer guarantees at least one.
     fn route(&mut self, arrival: &Arrival, servers: &[ServerState], ctx: &RouteContext) -> usize;
+
+    /// Choose a server for a *resumed* partial request carrying
+    /// `done_steps` already-completed denoising steps (checkpoint
+    /// migration). The default ignores the credit and delegates to
+    /// [`Router::route`] — with `done_steps == 0` every policy must
+    /// behave exactly like a fresh dispatch, so zero-fault runs stay
+    /// bit-identical. Policies that score quality (the marginal-(P0)
+    /// router) override this to credit the finished steps.
+    fn route_resume(
+        &mut self,
+        arrival: &Arrival,
+        done_steps: u32,
+        servers: &[ServerState],
+        ctx: &RouteContext,
+    ) -> usize {
+        let _ = done_steps;
+        self.route(arrival, servers, ctx)
+    }
 }
 
 fn assert_some_alive(servers: &[ServerState]) {
@@ -341,6 +359,40 @@ impl Router for QualityAwareRouter {
                     // loaded server, then the lower id (max_by keeps the
                     // later element on Equal, so order comparisons to
                     // favour `a` strictly).
+                    .then_with(|| {
+                        b.outstanding_work_s(now)
+                            .partial_cmp(&a.outstanding_work_s(now))
+                            .unwrap()
+                    })
+                    .then(b.id.cmp(&a.id))
+            })
+            .unwrap()
+            .id
+    }
+
+    /// Resume-aware marginal-(P0) dispatch: the request already owns
+    /// `done_steps` of denoising, so each server is scored by the
+    /// *total* steps `min(done + predicted, max_steps)` it would end
+    /// with. Past the quality cap extra predicted steps buy nothing, so
+    /// a nearly-finished request prefers the less-loaded server over
+    /// the fastest one. With `done_steps == 0` the score reduces to
+    /// `predict_steps` (already capped) — identical to [`Self::route`].
+    fn route_resume(
+        &mut self,
+        arrival: &Arrival,
+        done_steps: u32,
+        servers: &[ServerState],
+        ctx: &RouteContext,
+    ) -> usize {
+        assert_some_alive(servers);
+        let now = arrival.t_s;
+        servers
+            .iter()
+            .filter(|s| s.alive)
+            .max_by(|a, b| {
+                let sa = (self.predict_steps(arrival, a, ctx) + done_steps).min(self.max_steps);
+                let sb = (self.predict_steps(arrival, b, ctx) + done_steps).min(self.max_steps);
+                sa.cmp(&sb)
                     .then_with(|| {
                         b.outstanding_work_s(now)
                             .partial_cmp(&a.outstanding_work_s(now))
@@ -530,6 +582,46 @@ mod tests {
         s.assign(0.0, 50.0);
         let qa = QualityAwareRouter::new(BatchDelayModel::paper());
         assert_eq!(qa.predict_steps(&arrival(0, 0.0, 5.0), &s, &ctx()), 0);
+    }
+
+    #[test]
+    fn route_resume_with_zero_credit_matches_route() {
+        let t = trace(5.0, 60.0, 11);
+        let delay = BatchDelayModel::paper();
+        for kind in RouterKind::with_live() {
+            let mut servers = ServerState::fleet(&[0.5, 1.0, 1.5]);
+            servers[2].assign(0.0, 4.0);
+            let mut a = kind.build(delay);
+            let mut b = kind.build(delay);
+            let ctx = ctx();
+            for arrival in t.arrivals.iter().take(40) {
+                for s in servers.iter_mut() {
+                    s.advance(arrival.t_s);
+                }
+                let fresh = a.route(arrival, &servers, &ctx);
+                let resumed = b.route_resume(arrival, 0, &servers, &ctx);
+                assert_eq!(fresh, resumed, "{}: zero-credit resume must match", kind.name());
+                servers[fresh].assign(arrival.t_s, delay.g(1) / servers[fresh].speed);
+            }
+        }
+    }
+
+    #[test]
+    fn quality_aware_resume_credits_done_steps() {
+        let servers = ServerState::fleet(&[1.0, 2.0]);
+        let mut qa = QualityAwareRouter::new(BatchDelayModel::paper());
+        qa.max_steps = 30;
+        let a = arrival(0, 0.0, 8.0);
+        // Fresh dispatch: the fast server predicts more steps.
+        assert_eq!(qa.route(&a, &servers, &ctx()), 1);
+        assert_eq!(qa.route_resume(&a, 0, &servers, &ctx()), 1);
+        // A request already near the quality cap saturates both
+        // predictions; the tie then breaks away from raw speed (equal
+        // load here, so to the lower id) — the done-step credit
+        // changed the decision.
+        let slow_pred = qa.predict_steps(&a, &servers[0], &ctx());
+        assert!(slow_pred >= 15, "precondition: slow server saturates with credit 15");
+        assert_eq!(qa.route_resume(&a, 15, &servers, &ctx()), 0);
     }
 
     #[test]

@@ -87,6 +87,20 @@ impl Schedule {
         self.steps.iter().filter(|&&t| t == 0).count()
     }
 
+    /// Denoising steps of `service` completed strictly within `t_rel`
+    /// seconds of the schedule's start: a step counts once its whole
+    /// batch has finished (`end() <= t_rel`) — step boundaries are the
+    /// only checkpointable instants, a half-executed batch contributes
+    /// nothing. This is what a mid-batch server death can salvage.
+    pub fn steps_completed_by(&self, service: usize, t_rel: f64) -> u32 {
+        self.batches
+            .iter()
+            .filter(|b| b.end() <= t_rel)
+            .flat_map(|b| b.tasks.iter())
+            .filter(|task| task.service == service)
+            .count() as u32
+    }
+
     /// GPU busy fraction: Σ g(X_n) is the makespan by construction, so
     /// this reports the fraction of task-time vs. fixed overhead.
     pub fn amortization_ratio(&self, delay: &BatchDelayModel) -> f64 {
@@ -159,6 +173,24 @@ mod tests {
         assert_eq!(s.makespan(), 0.0);
         assert_eq!(s.total_tasks(), 0);
         assert_eq!(s.outages(), 3);
+    }
+
+    #[test]
+    fn steps_completed_by_counts_whole_batches_only() {
+        let s = two_batch_schedule();
+        // nothing before the first batch ends
+        assert_eq!(s.steps_completed_by(0, 0.0), 0);
+        assert_eq!(s.steps_completed_by(0, 0.39), 0);
+        // first batch (ends 0.4) gives each member one step; the
+        // half-done second batch contributes nothing
+        assert_eq!(s.steps_completed_by(0, 0.4), 1);
+        assert_eq!(s.steps_completed_by(1, 0.5), 1);
+        assert_eq!(s.steps_completed_by(0, 0.77), 1);
+        // past the makespan every scheduled step is complete
+        assert_eq!(s.steps_completed_by(0, s.makespan()), 2);
+        assert_eq!(s.steps_completed_by(0, 10.0), s.steps[0]);
+        // a service with zero scheduled steps never completes any
+        assert_eq!(s.steps_completed_by(2, 10.0), 0);
     }
 
     #[test]

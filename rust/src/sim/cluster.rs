@@ -38,7 +38,7 @@ use crate::scheduler::BatchScheduler;
 use crate::trace::{Arrival, ArrivalTrace};
 use crate::util::exec::par_map;
 
-use super::dynamic::{simulate_dynamic, Disposition, DynamicConfig, DynamicReport, RequestOutcome};
+use super::dynamic::{simulate_dynamic, DynamicConfig, DynamicReport, RequestOutcome};
 
 /// Evenly-spaced GPU speed factors for an `n`-server fleet in
 /// `[lo, hi]`. A single server gets the midpoint, so a homogeneous
@@ -139,7 +139,7 @@ pub(crate) fn sample(o: &RequestOutcome) -> ResolvedSample {
     ResolvedSample {
         quality: o.quality,
         met: o.met,
-        served: o.disposition == Disposition::Served,
+        served: o.disposition.is_served(),
         e2e_s: o.e2e_s,
         wait_s: o.wait_s,
     }
@@ -329,6 +329,7 @@ fn run_cluster(
 mod tests {
     use super::*;
     use crate::bandwidth::EqualAllocator;
+    use crate::sim::dynamic::Disposition;
     use crate::config::{ArrivalProcessKind, ArrivalSettings, ExperimentConfig};
     use crate::quality::PowerLawQuality;
     use crate::scheduler::Stacking;

@@ -145,6 +145,20 @@ pub enum Disposition {
     /// Stranded on a failed server and not migrated (`sim::event` with
     /// a fault script; never produced by `simulate_dynamic` itself).
     LostToFailure,
+    /// Served, but its first server died mid-batch: the checkpointed
+    /// partial resumed and finished on another server (`sim::event`
+    /// under `CheckpointOnDeath`; never produced by `simulate_dynamic`
+    /// itself).
+    ResumedElsewhere,
+}
+
+impl Disposition {
+    /// Whether content was actually delivered — the serving-semantic
+    /// predicate every aggregate uses. A checkpoint-resumed request is
+    /// served content like any other; only the path differed.
+    pub fn is_served(self) -> bool {
+        matches!(self, Disposition::Served | Disposition::ResumedElsewhere)
+    }
 }
 
 /// Per-request outcome of a dynamic run.
@@ -173,6 +187,10 @@ pub struct RequestOutcome {
     pub met: bool,
     /// Instant the request left the system (completion or drop time).
     pub resolved_s: f64,
+    /// Denoising steps salvaged from a dead server's checkpoint and
+    /// credited toward `steps` (0 except for
+    /// [`Disposition::ResumedElsewhere`]).
+    pub recovered_steps: u32,
 }
 
 /// Per-epoch record, including sliding-window aggregates sampled at the
@@ -217,7 +235,7 @@ pub struct DynamicReport {
 
 impl DynamicReport {
     pub fn served(&self) -> usize {
-        self.outcomes.iter().filter(|o| o.disposition == Disposition::Served).count()
+        self.outcomes.iter().filter(|o| o.disposition.is_served()).count()
     }
 
     pub fn dropped(&self) -> usize {
@@ -244,7 +262,7 @@ impl DynamicReport {
     fn served_e2e(&self) -> Vec<f64> {
         self.outcomes
             .iter()
-            .filter(|o| o.disposition == Disposition::Served)
+            .filter(|o| o.disposition.is_served())
             .map(|o| o.e2e_s)
             .collect()
     }
@@ -260,7 +278,7 @@ impl DynamicReport {
         let waits: Vec<f64> = self
             .outcomes
             .iter()
-            .filter(|o| o.disposition == Disposition::Served)
+            .filter(|o| o.disposition.is_served())
             .map(|o| o.wait_s)
             .collect();
         if waits.is_empty() {
@@ -306,7 +324,7 @@ impl DynamicReport {
 pub fn censored_delays(outcomes: &[RequestOutcome]) -> Vec<f64> {
     outcomes
         .iter()
-        .map(|o| if o.disposition == Disposition::Served { o.e2e_s } else { o.deadline_s })
+        .map(|o| if o.disposition.is_served() { o.e2e_s } else { o.deadline_s })
         .collect()
 }
 
@@ -372,7 +390,7 @@ impl OutcomeSink for StreamingSink {
         self.acc.push(ResolvedSample {
             quality: o.quality,
             met: o.met,
-            served: o.disposition == Disposition::Served,
+            served: o.disposition.is_served(),
             e2e_s: o.e2e_s,
             wait_s: o.wait_s,
         });
@@ -629,6 +647,7 @@ where
                     epoch: epoch_index,
                     met: false,
                     resolved_s: t0,
+                    recovered_steps: 0,
                 });
                 horizon = horizon.max(t0);
                 dropped_now += 1;
@@ -709,6 +728,7 @@ where
                     epoch: epoch_index,
                     met,
                     resolved_s: completion,
+                    recovered_steps: 0,
                 });
                 horizon = horizon.max(completion);
                 served_now += 1;

@@ -26,9 +26,28 @@
 //!
 //! Migration preserves the elapsed deadline budget: a re-routed request
 //! keeps its original arrival id, arrival instant and absolute
-//! deadline, so waiting on a dead server is never forgiven. A solve
-//! that has already committed (the batch is on the GPU) is atomic —
-//! failures strand queued work, not in-flight work.
+//! deadline, so waiting on a dead server is never forgiven.
+//!
+//! **In-flight work dies with its server.** Under any faulted run the
+//! engine is physically honest about committed batches: a death at `t`
+//! stops the GPU mid-execution, so every batch member not yet
+//! *delivered* by `t` dies with the server. What happens next is the
+//! migration policy's call: the legacy policies lose those victims
+//! (`LostToFailure`), while [`CheckpointOnDeath`] retracts each victim
+//! at its last completed denoising-step boundary
+//! ([`Schedule::steps_completed_by`](crate::scheduler::Schedule)) and,
+//! after a configurable latent-transfer delay
+//! ([`EventClusterConfig::resume_transfer_s`]), hands the *partial*
+//! request back through the router with its original id, arrival
+//! instant and absolute deadline — the resume-aware router
+//! ([`Router::route_resume`]) credits the salvaged steps when
+//! predicting marginal (P0) quality, and the serving solve adds them to
+//! the delivered step count (`Disposition::ResumedElsewhere`,
+//! `RequestOutcome::recovered_steps`). Zero-fault runs never track
+//! in-flight state (the bookkeeping is gated on fault events
+//! remaining), so they stay bit-identical to the fault-free engines.
+//!
+//! [`CheckpointOnDeath`]: crate::faults::CheckpointOnDeath
 //!
 //! Event ordering is total and deterministic: time-ascending, and at
 //! equal instants fault events first, then arrivals, then per-server
@@ -46,7 +65,9 @@
 //! bit-identical to the pre-pipeline engine
 //! (`tests/pipeline_equivalence.rs`). A server dying before its batch
 //! starts (any phase up to `Solved`) strands the queued epoch exactly
-//! as before; a committed batch (`Executing`) is atomic.
+//! as before; a committed batch (`Executing`) is cut at the death
+//! instant — delivered members stand, undelivered members are lost or
+//! checkpointed per the migration policy.
 //!
 //! **Dispatch state.** Before every routing decision the engine
 //! publishes each server's true queue depth and `gpu_free` as a
@@ -75,7 +96,7 @@ use crate::metrics::{
 };
 use crate::quality::QualityModel;
 use crate::routing::{LiveView, RouteContext, Router, RouterKind, ServerState};
-use crate::scheduler::BatchScheduler;
+use crate::scheduler::{BatchScheduler, Schedule};
 use crate::trace::{Arrival, ArrivalTrace, DeviceRequest, Workload};
 use crate::util::exec::par_map;
 
@@ -105,6 +126,12 @@ pub struct EventClusterConfig<'a> {
     pub faults: &'a FaultScript,
     /// What happens to a dead/overloaded server's queued requests.
     pub migration: MigrationPolicyKind,
+    /// Latent-transfer delay charged when a checkpointed partial
+    /// request moves off a dead server: the victim re-enters the router
+    /// at `death + resume_transfer_s` (shipping the denoising latent to
+    /// the new edge server is not free). Only read under
+    /// [`MigrationPolicyKind::Checkpoint`].
+    pub resume_transfer_s: f64,
 }
 
 impl<'a> EventClusterConfig<'a> {
@@ -118,6 +145,7 @@ impl<'a> EventClusterConfig<'a> {
             dynamic: cluster.dynamic,
             faults: &crate::faults::NO_FAULTS,
             migration: MigrationPolicyKind::None,
+            resume_transfer_s: 0.0,
         }
     }
 
@@ -136,6 +164,10 @@ pub enum MigrationReason {
     StealWhenIdle,
     /// Re-dispatched from the unroutable pool when a server recovered.
     Recovery,
+    /// Checkpointed off a dying server mid-batch: the partial request
+    /// (completed steps in hand) resumed on the destination after the
+    /// latent transfer.
+    Checkpoint,
 }
 
 /// One hand-off of a request through the router after its initial
@@ -236,6 +268,18 @@ impl EventReport {
         self.outcomes.iter().filter(|o| o.disposition == Disposition::LostToFailure).count()
     }
 
+    /// Requests whose in-flight work was checkpointed off a dying
+    /// server and finished elsewhere.
+    pub fn resumed_elsewhere(&self) -> usize {
+        self.outcomes.iter().filter(|o| o.disposition == Disposition::ResumedElsewhere).count()
+    }
+
+    /// Denoising steps salvaged from dead servers' checkpoints, summed
+    /// over every resumed request.
+    pub fn recovered_steps(&self) -> u64 {
+        self.outcomes.iter().map(|o| o.recovered_steps as u64).sum()
+    }
+
     /// Successful hand-offs that actually changed servers.
     pub fn migrated(&self) -> usize {
         self.migrations.iter().filter(|m| m.to.is_some() && m.to != m.from).count()
@@ -303,7 +347,9 @@ impl EventReport {
                 resolved_s: o.resolved_s,
                 e2e_s: o.e2e_s,
                 deadline_s: o.deadline_s,
-                served: o.disposition == Disposition::Served,
+                served: o.disposition.is_served(),
+                resumed: o.disposition == Disposition::ResumedElsewhere,
+                recovered_steps: o.recovered_steps,
                 met: o.met,
             })
             .collect();
@@ -334,6 +380,10 @@ struct Pending {
     /// when migrating to a different server, so per-server windows see
     /// each request at most once).
     recorded: bool,
+    /// Denoising steps already completed on earlier (dead) servers and
+    /// carried along in the checkpointed latent — credited on top of
+    /// whatever the serving solve schedules. 0 on the normal path.
+    done_steps: u32,
 }
 
 impl Pending {
@@ -347,8 +397,40 @@ impl Pending {
             link: a.link,
             deferrals: 0,
             recorded: false,
+            done_steps: 0,
         }
     }
+}
+
+/// One undelivered member of a committed batch — everything a mid-batch
+/// death needs to retract it and (under checkpointing) resume it.
+#[derive(Debug, Clone, Copy)]
+struct InFlightReq {
+    /// Queue state as of the batch start (includes prior `done_steps`
+    /// if the request was itself a resume).
+    pending: Pending,
+    /// Absolute delivery instant the optimistic outcome recorded.
+    completion_s: f64,
+    /// Slot in the committed plan (= `TaskRef::service`), for
+    /// step-boundary accounting against the schedule.
+    service_slot: usize,
+}
+
+/// The batch currently committed on a server's GPU. Tracked only while
+/// fault events remain (a zero-fault run allocates none of this), so
+/// that a death can cut the batch at the wall clock instead of
+/// pretending it ran to completion.
+#[derive(Debug, Clone)]
+struct InFlight {
+    /// Batch start (the solve's `t0`).
+    start_s: f64,
+    /// End of the generation phase (`t0 + makespan`); past it only
+    /// transmission tails remain and the batch can no longer be cut.
+    gen_end_s: f64,
+    /// The committed plan, for [`Schedule::steps_completed_by`].
+    schedule: Schedule,
+    /// Members the optimistic resolve already recorded as served.
+    requests: Vec<InFlightReq>,
 }
 
 /// One server's epoch walking the lifecycle state machine
@@ -396,6 +478,11 @@ struct ServerSim {
     /// not-yet-ingested trace arrivals.
     backlog: VecDeque<Pending>,
     gpu_free_s: f64,
+    /// The committed batch on the GPU (`None` in zero-fault runs and
+    /// once the last fault has fired — stale entries are harmless: the
+    /// death-time cut only applies strictly before `gen_end_s`, and a
+    /// later batch always overwrites).
+    in_flight: Option<InFlight>,
     windows: ServiceWindows,
     epochs: Vec<EpochRecord>,
     assigned_ids: Vec<usize>,
@@ -416,6 +503,7 @@ impl ServerSim {
             epoch: None,
             backlog: VecDeque::new(),
             gpu_free_s: 0.0,
+            in_flight: None,
             windows: ServiceWindows::new(dynamic.window_s),
             epochs: Vec::new(),
             assigned_ids: Vec::new(),
@@ -526,6 +614,12 @@ struct Engine<'a> {
     next_arrival: usize,
     /// Requests with no alive server to go to, waiting for a recovery.
     unroutable: VecDeque<Pending>,
+    /// Checkpointed partials in latent transfer: `(resume_s, from,
+    /// request)`. Deaths are consumed in time order and the transfer
+    /// delay is constant, so the queue is non-decreasing in `resume_s`.
+    resume_q: VecDeque<(f64, usize, Pending)>,
+    /// Latent-transfer delay for checkpointed resumes.
+    transfer_s: f64,
     outcomes: Vec<Option<RequestOutcome>>,
     assignment: Vec<usize>,
     migrations: Vec<MigrationRecord>,
@@ -546,13 +640,14 @@ impl Engine<'_> {
         loop {
             let work_left = self.next_arrival < self.trace.len()
                 || self.servers.iter().any(|s| s.epoch.is_some())
-                || !self.unroutable.is_empty();
+                || !self.unroutable.is_empty()
+                || !self.resume_q.is_empty();
             if !work_left {
                 break;
             }
-            // Earliest event wins; ties break fault < arrival < server,
-            // then ascending server id — a fixed total order, so replay
-            // is bit-identical.
+            // Earliest event wins; ties break fault < resume < arrival
+            // < server, then ascending server id — a fixed total order,
+            // so replay is bit-identical.
             let mut best: Option<(f64, u8, usize)> = None;
             if self.next_fault < self.fault_events.len() {
                 let c = (self.fault_events[self.next_fault].t_s, 0u8, 0usize);
@@ -560,15 +655,21 @@ impl Engine<'_> {
                     best = Some(c);
                 }
             }
+            if let Some(&(t_resume, _, _)) = self.resume_q.front() {
+                let c = (t_resume, 1u8, 0usize);
+                if better(c, best) {
+                    best = Some(c);
+                }
+            }
             if self.next_arrival < self.trace.len() {
-                let c = (self.trace.arrivals[self.next_arrival].t_s, 1u8, 0usize);
+                let c = (self.trace.arrivals[self.next_arrival].t_s, 2u8, 0usize);
                 if better(c, best) {
                     best = Some(c);
                 }
             }
             for s in &self.servers {
                 if let Some(t) = s.next_event_time() {
-                    let c = (t, 2u8, s.id);
+                    let c = (t, 3u8, s.id);
                     if better(c, best) {
                         best = Some(c);
                     }
@@ -582,7 +683,8 @@ impl Engine<'_> {
             };
             match class {
                 0 => self.handle_fault(),
-                1 => self.handle_arrival(),
+                1 => self.handle_resume(),
+                2 => self.handle_arrival(),
                 _ => {
                     // A shared freeze instant: every *frozen* server
                     // whose batch also starts exactly at `t` would be
@@ -603,7 +705,21 @@ impl Engine<'_> {
             }
         }
         debug_assert!(self.unroutable.is_empty());
+        debug_assert!(self.resume_q.is_empty());
         debug_assert!(self.servers.iter().all(|s| s.backlog.is_empty()));
+    }
+
+    /// A checkpointed partial finished its latent transfer: hand it
+    /// back through the router with its salvaged steps — unless its
+    /// absolute deadline already passed in transit, in which case it
+    /// expired at the deadline, not at the transfer's end.
+    fn handle_resume(&mut self) {
+        let (t, from, p) = self.resume_q.pop_front().expect("resume event to fire");
+        if p.abs_deadline_s <= t {
+            self.resolve_lost(p, p.abs_deadline_s, None);
+        } else {
+            self.reroute(p, t, MigrationReason::Checkpoint, Some(from));
+        }
     }
 
     fn handle_fault(&mut self) {
@@ -625,7 +741,7 @@ impl Engine<'_> {
         self.fault_log.push(FaultEvent { t_s: t, server: s, kind: FaultKind::Down });
         // Orphan the queued-but-unsolved work: the current epoch
         // (building or frozen-awaiting-solve) and the backlog, in
-        // queue order. In-flight committed solves stand.
+        // queue order.
         let mut orphans: Vec<Pending> = Vec::new();
         if let Some(e) = self.servers[s].epoch.take() {
             orphans.extend(e.queue);
@@ -639,6 +755,58 @@ impl Engine<'_> {
                 self.resolve_lost(p, t, Some(s));
             }
         }
+        // Cut the committed batch at the wall clock: the GPU stopped at
+        // `t`, so members not delivered by then were never actually
+        // served — retract their optimistic outcomes. Checkpointing
+        // salvages each victim at its last completed step boundary and
+        // ships the latent; every other policy loses it outright (there
+        // is no checkpoint to move, and the un-checkpointed latent died
+        // with the GPU).
+        let Some(fl) = self.servers[s].in_flight.take() else { return };
+        if t >= fl.gen_end_s {
+            // Generation finished before the death; only transmission
+            // tails remain and those belong to the edge link, not the
+            // dead GPU.
+            return;
+        }
+        let checkpoint = self.policy.checkpoint_in_flight();
+        let mut retracted = false;
+        for r in fl.requests {
+            if r.completion_s <= t {
+                continue; // delivered before the death — stands
+            }
+            debug_assert!(self.outcomes[r.pending.id].is_some());
+            self.outcomes[r.pending.id] = None;
+            self.servers[s].resolved_ids.retain(|&id| id != r.pending.id);
+            retracted = true;
+            if checkpoint {
+                let done = fl.schedule.steps_completed_by(r.service_slot, t - fl.start_s);
+                let p = Pending { done_steps: r.pending.done_steps + done, ..r.pending };
+                self.resume_q.push_back((t + self.transfer_s, s, p));
+            } else {
+                self.resolve_lost(r.pending, t, Some(s));
+            }
+        }
+        if retracted {
+            // The dead GPU frees at the cut, and the retracted
+            // completions may have been the horizon's high-water mark.
+            self.servers[s].gpu_free_s = t;
+            self.recompute_horizon(t);
+        }
+    }
+
+    /// Re-derive the simulated span from what still stands — resolved
+    /// outcomes and every server's GPU busy-until — after a retraction
+    /// invalidated the running maximum.
+    fn recompute_horizon(&mut self, floor: f64) {
+        let mut h = floor;
+        for o in self.outcomes.iter().flatten() {
+            h = h.max(o.resolved_s);
+        }
+        for s in &self.servers {
+            h = h.max(s.gpu_free_s);
+        }
+        self.horizon = h;
     }
 
     fn revive_server(&mut self, s: usize, t: f64) {
@@ -707,9 +875,11 @@ impl Engine<'_> {
             return;
         }
         // The router sees the *residual* budget — migration never
-        // refunds elapsed time.
+        // refunds elapsed time — and, for a checkpointed partial, the
+        // steps already in hand (`route_resume` is the identity on
+        // `done_steps == 0`, so the legacy paths are untouched).
         let view = Arrival { id: p.id, t_s: t, deadline_s: p.abs_deadline_s - t, link: p.link };
-        let choice = self.router.route(&view, &self.states, &self.ctx);
+        let choice = self.router.route_resume(&view, p.done_steps, &self.states, &self.ctx);
         let name = self.router.name();
         assert!(self.states[choice].alive, "router {name} picked failed server {choice}");
         let service_est_s = self.delay.g(1) / self.states[choice].speed;
@@ -738,7 +908,7 @@ impl Engine<'_> {
             return;
         }
         let view = Arrival { id: p.id, t_s: t, deadline_s: p.abs_deadline_s - t, link: p.link };
-        let choice = self.router.route(&view, &self.states, &self.ctx);
+        let choice = self.router.route_resume(&view, p.done_steps, &self.states, &self.ctx);
         let name = self.router.name();
         assert!(self.states[choice].alive, "router {name} picked failed server {choice}");
         let epoch_policy = self.dynamic.epoch;
@@ -960,6 +1130,7 @@ impl Engine<'_> {
                     epoch: epoch_index,
                     met: false,
                     resolved_s: t0,
+                    recovered_steps: 0,
                 };
                 self.resolve(q.id, outcome, idx);
                 self.horizon = self.horizon.max(t0);
@@ -1014,6 +1185,16 @@ impl Engine<'_> {
         };
         let makespan = sol.outcome.schedule.makespan();
 
+        // Track the committed batch only while fault events remain: a
+        // later death may cut it, and zero-fault runs must not pay (or
+        // perturb) anything for the bookkeeping.
+        let mut in_flight = (self.next_fault < self.fault_events.len()).then(|| InFlight {
+            start_s: t0,
+            gen_end_s: t0 + makespan,
+            schedule: sol.outcome.schedule.clone(),
+            requests: Vec::new(),
+        });
+
         // ---- resolve served requests; collect carry-overs ----
         let mut served_now = 0usize;
         let mut deferred: Vec<Pending> = Vec::new();
@@ -1023,20 +1204,38 @@ impl Engine<'_> {
                 let completion = t0 + svc.e2e_delay;
                 let e2e = completion - q.arrival_s;
                 let met = svc.met;
-                self.servers[idx].windows.record_served(t0, e2e, svc.quality, met);
+                // A checkpointed partial delivers its salvaged steps on
+                // top of this solve's plan: the latent arrived
+                // `done_steps` deep, so the content ships at the
+                // combined step count's quality.
+                let (disposition, steps, quality) = if q.done_steps > 0 {
+                    let total = svc.steps + q.done_steps;
+                    (Disposition::ResumedElsewhere, total, self.quality.quality(total))
+                } else {
+                    (Disposition::Served, svc.steps, svc.quality)
+                };
+                self.servers[idx].windows.record_served(t0, e2e, quality, met);
+                if let Some(fl) = in_flight.as_mut() {
+                    fl.requests.push(InFlightReq {
+                        pending: q,
+                        completion_s: completion,
+                        service_slot: i,
+                    });
+                }
                 let outcome = RequestOutcome {
                     id: q.id,
                     arrival_s: q.arrival_s,
                     deadline_s: q.deadline_s,
-                    disposition: Disposition::Served,
-                    steps: svc.steps,
-                    quality: svc.quality,
+                    disposition,
+                    steps,
+                    quality,
                     e2e_s: e2e,
                     wait_s: t0 - q.arrival_s,
                     deferrals: q.deferrals,
                     epoch: epoch_index,
                     met,
                     resolved_s: completion,
+                    recovered_steps: q.done_steps,
                 };
                 self.resolve(q.id, outcome, idx);
                 self.horizon = self.horizon.max(completion);
@@ -1045,6 +1244,7 @@ impl Engine<'_> {
                 deferred.push(Pending { deferrals: q.deferrals + 1, ..q });
             }
         }
+        self.servers[idx].in_flight = in_flight;
 
         self.servers[idx].gpu_free_s = t0 + makespan;
         self.horizon = self.horizon.max(self.servers[idx].gpu_free_s);
@@ -1206,6 +1406,7 @@ impl Engine<'_> {
             epoch,
             met: false,
             resolved_s: t,
+            recovered_steps: 0,
         };
         debug_assert!(self.outcomes[p.id].is_none(), "request {} resolved twice", p.id);
         self.outcomes[p.id] = Some(outcome);
@@ -1345,6 +1546,8 @@ fn run_event_cluster(
         next_fault: 0,
         next_arrival: 0,
         unroutable: VecDeque::new(),
+        resume_q: VecDeque::new(),
+        transfer_s: cfg.resume_transfer_s,
         outcomes: vec![None; trace.len()],
         assignment: vec![UNROUTED; trace.len()],
         migrations: Vec::new(),
@@ -1400,6 +1603,7 @@ mod tests {
         dynamic: DynamicConfig,
         router: RouterKind,
         migration: MigrationPolicyKind,
+        transfer_s: f64,
     }
 
     impl OwnedCfg {
@@ -1410,6 +1614,7 @@ mod tests {
                 dynamic: self.dynamic,
                 faults: &self.faults,
                 migration: self.migration,
+                resume_transfer_s: self.transfer_s,
             }
         }
     }
@@ -1421,6 +1626,7 @@ mod tests {
             dynamic: DynamicConfig::default(),
             router: RouterKind::JoinShortestQueue,
             migration,
+            transfer_s: 0.0,
         }
     }
 
@@ -1483,7 +1689,7 @@ mod tests {
         let mut served: Vec<f64> = report
             .outcomes
             .iter()
-            .filter(|o| o.disposition == Disposition::Served)
+            .filter(|o| o.disposition.is_served())
             .map(|o| o.e2e_s)
             .collect();
         served.sort_by(|a, b| a.partial_cmp(b).unwrap());
@@ -1611,6 +1817,7 @@ mod tests {
             dynamic,
             faults: &crate::faults::NO_FAULTS,
             migration: MigrationPolicyKind::StealWhenIdle,
+            resume_transfer_s: 0.0,
         };
         let report = run(&t, &c);
         assert_eq!(report.outcomes.len(), t.len());
@@ -1693,6 +1900,7 @@ mod tests {
             dynamic: DynamicConfig::default(),
             faults: &crate::faults::NO_FAULTS,
             migration: MigrationPolicyKind::None,
+            resume_transfer_s: 0.0,
         };
         let a = run(&t, &c);
         assert_eq!(a.outcomes.len(), t.len());
@@ -1701,6 +1909,104 @@ mod tests {
         let b = run(&t, &c);
         assert_eq!(a.assignment, b.assignment, "live routing must replay bit-identically");
         assert_eq!(a.horizon_s.to_bits(), b.horizon_s.to_bits());
+    }
+
+    #[test]
+    fn checkpoint_salvages_in_flight_steps_other_policies_lose_them() {
+        // One request, two reference-speed servers. JSQ sends it to
+        // server 0 (tie to the lower id); its epoch closes at 1.0 and
+        // the batch commits immediately (free GPU). With the paper
+        // delay model g(1) ≈ 0.3783 and the 2 s plan horizon the plan
+        // runs several singleton batches, so at the death instant
+        // t = 1.5 — 0.5 s into execution — exactly one step boundary
+        // has passed (batch 1 ends ≈ 1.378, batch 2 ≈ 1.757).
+        let arrivals = vec![Arrival { id: 0, t_s: 0.0, deadline_s: 10.0, link: Link::new(7.0) }];
+        let t = ArrivalTrace { arrivals, total_bandwidth_hz: 40_000.0, content_bits: 24_000.0 };
+        let script = FaultScript::scheduled(vec![down(0, 1.5, 100.0)]).unwrap();
+
+        let mut ck = cfg(vec![1.0, 1.0], script.clone(), MigrationPolicyKind::Checkpoint);
+        ck.transfer_s = 0.25;
+        let checkpoint = run(&t, &ck.view());
+        assert_eq!(checkpoint.served(), 1, "{:?}", checkpoint.outcomes);
+        let o = &checkpoint.outcomes[0];
+        assert_eq!(o.disposition, Disposition::ResumedElsewhere);
+        assert_eq!(o.recovered_steps, 1, "exactly one step boundary passed before the death");
+        assert!(o.steps > o.recovered_steps, "the resume must add fresh steps on server 1");
+        assert!(o.met, "deadline 10 s leaves ample room after the resume: {o:?}");
+        assert!(
+            o.resolved_s > 1.75,
+            "delivery happens after the 1.5 + 0.25 s latent transfer: {o:?}"
+        );
+        assert_eq!(checkpoint.resumed_elsewhere(), 1);
+        assert_eq!(checkpoint.recovered_steps(), 1);
+        assert!(
+            checkpoint
+                .migrations
+                .iter()
+                .any(|m| m.reason == MigrationReason::Checkpoint && m.to == Some(1)),
+            "{:?}",
+            checkpoint.migrations
+        );
+        let rs = checkpoint.recovery_stats(30.0);
+        assert_eq!(rs.resumed, 1);
+        assert_eq!(rs.recovered_steps, 1);
+
+        // Every non-checkpoint policy loses the cut batch outright —
+        // the strict dominance the checkpoint exists to provide.
+        for policy in [MigrationPolicyKind::None, MigrationPolicyKind::RequeueOnDeath] {
+            let report = run(&t, &cfg(vec![1.0, 1.0], script.clone(), policy).view());
+            assert_eq!(report.served(), 0, "{}: {:?}", policy.name(), report.outcomes);
+            assert_eq!(report.outcomes[0].disposition, Disposition::LostToFailure);
+            assert_eq!(report.outcomes[0].recovered_steps, 0);
+            assert!(checkpoint.served() > report.served(), "{}", policy.name());
+        }
+    }
+
+    #[test]
+    fn checkpoint_resume_expires_when_deadline_passes_in_transit() {
+        // Same shape, but the transfer is so slow the absolute deadline
+        // (10 s) passes mid-transit: the victim expires at its
+        // deadline, not at the transfer's end.
+        let arrivals = vec![Arrival { id: 0, t_s: 0.0, deadline_s: 10.0, link: Link::new(7.0) }];
+        let t = ArrivalTrace { arrivals, total_bandwidth_hz: 40_000.0, content_bits: 24_000.0 };
+        let script = FaultScript::scheduled(vec![down(0, 1.5, 100.0)]).unwrap();
+        let mut c = cfg(vec![1.0, 1.0], script, MigrationPolicyKind::Checkpoint);
+        c.transfer_s = 50.0;
+        let report = run(&t, &c.view());
+        let o = &report.outcomes[0];
+        assert_eq!(o.disposition, Disposition::LostToFailure, "{o:?}");
+        assert_eq!(o.resolved_s.to_bits(), 10.0f64.to_bits(), "expired at the deadline: {o:?}");
+        assert_eq!(report.served(), 0);
+    }
+
+    #[test]
+    fn zero_fault_checkpoint_degenerates_to_none_bitwise() {
+        // With no faults the checkpoint machinery must never engage:
+        // the engine tracks nothing, and the run is bit-identical to
+        // the plain no-migration engine (and hence to the sequential
+        // cluster, by transitivity with the equivalence test above).
+        let t = trace(6.0, 50.0, 7);
+        for router in RouterKind::all() {
+            let mut base =
+                cfg(server_speeds(3, 0.5, 1.5), FaultScript::empty(), MigrationPolicyKind::None);
+            base.router = router;
+            let plain = run(&t, &base.view());
+            base.migration = MigrationPolicyKind::Checkpoint;
+            base.transfer_s = 0.8;
+            let ck = run(&t, &base.view());
+            assert_eq!(plain.assignment, ck.assignment, "{}", router.name());
+            assert_eq!(plain.horizon_s.to_bits(), ck.horizon_s.to_bits(), "{}", router.name());
+            for (a, b) in plain.outcomes.iter().zip(&ck.outcomes) {
+                assert_eq!(a.disposition, b.disposition, "request {}", a.id);
+                assert_eq!(a.steps, b.steps, "request {}", a.id);
+                assert_eq!(a.recovered_steps, 0, "request {}", a.id);
+                assert_eq!(b.recovered_steps, 0, "request {}", a.id);
+                assert_eq!(a.quality.to_bits(), b.quality.to_bits(), "request {}", a.id);
+                assert_eq!(a.e2e_s.to_bits(), b.e2e_s.to_bits(), "request {}", a.id);
+                assert_eq!(a.resolved_s.to_bits(), b.resolved_s.to_bits(), "request {}", a.id);
+            }
+            assert!(ck.migrations.is_empty() && ck.fault_log.is_empty());
+        }
     }
 
     #[test]

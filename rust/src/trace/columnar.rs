@@ -60,8 +60,14 @@ fn read_f64(bytes: &[u8], pos: &mut usize) -> Result<f64> {
 }
 
 /// Encode a trace with the given chunk length (requests per frame).
+/// `chunk_len` must fit the frame header's u32 — silently truncating
+/// it would emit frames the reader cannot reconcile with the count.
 pub fn encode_chunked(trace: &ArrivalTrace, chunk_len: usize) -> Vec<u8> {
     assert!(chunk_len > 0, "chunk_len must be positive");
+    assert!(
+        chunk_len <= u32::MAX as usize,
+        "chunk_len {chunk_len} exceeds the u32 frame header"
+    );
     let n = trace.arrivals.len();
     let mut out = Vec::with_capacity(HEADER_LEN + n * 24 + (n / chunk_len + 1) * 4);
     out.extend_from_slice(MAGIC);
@@ -137,8 +143,18 @@ impl<'a> ColumnarReader<'a> {
         ensure!(chunk_len > 0, "columnar trace declares zero chunk length");
         let total_bandwidth_hz = read_f64(bytes, &mut pos)?;
         let content_bits = read_f64(bytes, &mut pos)?;
-        if total_bandwidth_hz <= 0.0 || content_bits <= 0.0 {
+        // A NaN (e.g. zeroed/absent bytes decoded as garbage) means the
+        // constants are effectively missing; a finite nonpositive value
+        // is present but invalid — report which, so a writer bug is
+        // distinguishable from a truncated/blank header.
+        if !total_bandwidth_hz.is_finite() || !content_bits.is_finite() {
             bail!("columnar trace header missing scenario constants");
+        }
+        if total_bandwidth_hz <= 0.0 || content_bits <= 0.0 {
+            bail!(
+                "columnar trace header has nonpositive scenario constants \
+                 (bandwidth {total_bandwidth_hz} Hz, content {content_bits} bits)"
+            );
         }
         let count = read_u64(bytes, &mut pos)? as usize;
         Ok(Self {
@@ -328,5 +344,44 @@ mod tests {
         let d = f64::from_le_bytes(good[deadline0_at..deadline0_at + 8].try_into().unwrap());
         negative_deadline[deadline0_at..deadline0_at + 8].copy_from_slice(&(-d).to_le_bytes());
         assert!(decode(&negative_deadline).is_err(), "negative deadline");
+    }
+
+    /// Regression: a frame header is a u32, so a chunk length above
+    /// u32::MAX used to truncate silently and emit frames the reader
+    /// could never reconcile with the declared count. It must refuse.
+    #[test]
+    #[should_panic(expected = "u32 frame header")]
+    #[cfg(target_pointer_width = "64")]
+    fn oversized_chunk_len_is_rejected_not_truncated() {
+        let trace = ArrivalTrace {
+            arrivals: Vec::new(),
+            total_bandwidth_hz: 40_000.0,
+            content_bits: 24_000.0,
+        };
+        encode_chunked(&trace, u32::MAX as usize + 1);
+    }
+
+    /// Regression: a present-but-nonpositive scenario constant used to
+    /// be reported as "missing", hiding writer bugs behind the wrong
+    /// diagnosis. The two failure modes must read differently.
+    #[test]
+    fn header_distinguishes_missing_from_nonpositive_constants() {
+        let trace = seed7_trace();
+        let good = encode(&trace);
+        // Bandwidth f64 lives at bytes 16..24 (magic 8, version 4,
+        // chunk_len 4), content bits at 24..32.
+        let mut nonpositive = good.clone();
+        nonpositive[16..24].copy_from_slice(&(-5.0f64).to_le_bytes());
+        let err = decode(&nonpositive).unwrap_err().to_string();
+        assert!(err.contains("nonpositive"), "got: {err}");
+        assert!(!err.contains("missing"), "got: {err}");
+        let mut zeroed = good.clone();
+        zeroed[24..32].copy_from_slice(&0.0f64.to_le_bytes());
+        let err = decode(&zeroed).unwrap_err().to_string();
+        assert!(err.contains("nonpositive"), "zero is present but invalid: {err}");
+        let mut nan = good;
+        nan[16..24].copy_from_slice(&f64::NAN.to_le_bytes());
+        let err = decode(&nan).unwrap_err().to_string();
+        assert!(err.contains("missing"), "NaN reads as absent: {err}");
     }
 }

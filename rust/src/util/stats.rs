@@ -176,14 +176,23 @@ impl QuantileSketch {
         let target = ((p / 100.0 * total as f64).ceil() as u64).clamp(1, total);
         let err = (self.eps * total as f64).floor() as u64;
         let mut min_rank = 0u64;
+        // Track the last tuple admissible by the upper rank bound: if no
+        // tuple satisfies *both* bounds (possible for low-p queries over
+        // wide-delta summaries), it is the closest-from-below answer.
+        // Falling through to `tuples.last()` — the stream maximum — was
+        // the worst possible answer for exactly those queries.
+        let mut admissible: Option<f64> = None;
         for t in &tuples {
             min_rank += t.g;
             let max_rank = min_rank + t.delta;
-            if max_rank <= target + err && target <= min_rank + err {
-                return t.v;
+            if max_rank <= target + err {
+                admissible = Some(t.v);
+                if target <= min_rank + err {
+                    return t.v;
+                }
             }
         }
-        tuples.last().unwrap().v
+        admissible.unwrap_or(tuples[0].v)
     }
 
     /// Lower/upper bounds on the number of inserted samples `≤ x`.
@@ -478,6 +487,85 @@ mod tests {
             [50.0, 95.0, 99.0].map(|p| s.quantile(p).to_bits())
         };
         assert_eq!(run(), run());
+    }
+
+    /// Regression: when no summary tuple satisfied both rank bounds the
+    /// query fell through to the stream MAXIMUM — for a p→0 query the
+    /// worst possible answer. A degenerate all-wide-delta summary (no
+    /// admissible tuple at all) must return the minimum, never the max.
+    #[test]
+    fn sketch_low_p_fallthrough_returns_minimum_not_maximum() {
+        let entries: Vec<GkTuple> =
+            (1..=10).map(|i| GkTuple { v: i as f64, g: 10, delta: 15 }).collect();
+        let sketch =
+            QuantileSketch { eps: 0.1, n: 100, entries, buffer: Vec::new(), buffer_cap: 16 };
+        // err = 10; every tuple has max_rank >= 25 > target + err for
+        // p = 1 (target 1), so nothing is admissible by the upper bound.
+        for p in [0.0, 1.0, 5.0] {
+            let got = sketch.quantile(p);
+            assert_eq!(got, 1.0, "p={p} must answer from the low end, got {got}");
+        }
+    }
+
+    /// Property: over randomized adversarial-but-valid GK summaries
+    /// (first/last tuples exact, every tuple within the `2·eps·n`
+    /// invariant), the distance from the target rank to the returned
+    /// tuple's rank interval never exceeds ⌈eps·n⌉ (+1 floor slack) —
+    /// including the low-p queries that used to fall through.
+    #[test]
+    fn sketch_rank_error_bounded_on_adversarial_summaries() {
+        let mut rng = crate::util::rng::Pcg64::seeded(97);
+        for case in 0..300usize {
+            let eps = [0.02, 0.05, 0.1][case % 3];
+            let m = 3 + rng.below(40) as usize;
+            let gs: Vec<u64> =
+                (0..m).map(|i| if i == 0 { 1 } else { 1 + rng.below(12) }).collect();
+            let n: u64 = gs.iter().sum();
+            let slack = (2.0 * eps * n as f64).floor() as u64;
+            let mut v = 0.0;
+            let mut entries = Vec::with_capacity(m);
+            for (i, &g) in gs.iter().enumerate() {
+                v += 1.0 + 3.0 * rng.uniform();
+                let delta = if i == 0 || i + 1 == m {
+                    0 // extremes are exact, as in every organic summary
+                } else {
+                    rng.below(slack.saturating_sub(g) + 1)
+                };
+                entries.push(GkTuple { v, g, delta });
+            }
+            let sketch = QuantileSketch {
+                eps,
+                n,
+                entries: entries.clone(),
+                buffer: Vec::new(),
+                buffer_cap: 16,
+            };
+            let budget = (eps * n as f64).ceil() as u64 + 1;
+            for p in [0.1, 1.0, 5.0, 10.0, 25.0, 50.0, 75.0, 90.0, 99.0, 100.0] {
+                let got = sketch.quantile(p);
+                let target = ((p / 100.0 * n as f64).ceil() as u64).clamp(1, n);
+                let mut min_rank = 0u64;
+                let mut interval = None;
+                for t in &entries {
+                    min_rank += t.g;
+                    if t.v == got {
+                        interval = Some((min_rank, min_rank + t.delta));
+                        break;
+                    }
+                }
+                let (lo, hi) = interval.expect("query must return a retained value");
+                let dist = if target < lo {
+                    lo - target
+                } else {
+                    target.saturating_sub(hi)
+                };
+                assert!(
+                    dist <= budget,
+                    "case {case} p={p}: rank interval [{lo}, {hi}] vs target {target} \
+                     (budget {budget}, n={n}, eps={eps})"
+                );
+            }
+        }
     }
 
     #[test]

@@ -151,6 +151,7 @@ fn event_engine_identical_across_thread_counts_faults_on_and_off() {
                     dynamic,
                     faults,
                     migration,
+                    resume_transfer_s: 0.1,
                 };
                 simulate_event_cluster(&t, &scheduler, &EqualAllocator, &delay, &quality, &cfg)
             };
@@ -198,6 +199,7 @@ fn pooled_warm_start_event_runs_identical_across_thread_counts() {
             dynamic,
             faults: &NO_FAULTS,
             migration: MigrationPolicyKind::None,
+            resume_transfer_s: 0.0,
         };
         simulate_event_cluster_pooled(&t, &scheduler, &pool, &delay, &quality, &cfg)
     };

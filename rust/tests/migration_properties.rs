@@ -12,7 +12,11 @@
 //! * **determinism** — identical seeds (trace + fleet + faults +
 //!   policy) replay bit-identically;
 //! * **zero-fault degeneration** — an empty script with no migration
-//!   reproduces `simulate_cluster` fleet stats bit-for-bit.
+//!   reproduces `simulate_cluster` fleet stats bit-for-bit;
+//! * **checkpoint conservation** — a resumed request keeps its
+//!   identity and deadline, its salvaged steps never exceed the steps
+//!   it is charged for, and with no faults `CheckpointOnDeath` is
+//!   bit-identical to no migration at any transfer cost.
 
 use aigc_edge::bandwidth::EqualAllocator;
 use aigc_edge::config::{ArrivalProcessKind, ArrivalSettings, ExperimentConfig};
@@ -64,6 +68,7 @@ struct RandomFleet {
     speeds: Vec<f64>,
     router: RouterKind,
     migration: MigrationPolicyKind,
+    transfer_s: f64,
 }
 
 fn random_fleet(g: &mut Gen) -> RandomFleet {
@@ -71,7 +76,8 @@ fn random_fleet(g: &mut Gen) -> RandomFleet {
     let speeds = g.vec_of(n, |g| g.f64_in(0.3, 2.5));
     let router = *g.pick(&RouterKind::all());
     let migration = *g.pick(&MigrationPolicyKind::all());
-    RandomFleet { speeds, router, migration }
+    let transfer_s = g.f64_in(0.0, 1.5);
+    RandomFleet { speeds, router, migration, transfer_s }
 }
 
 /// Drop script intervals naming servers outside the fleet.
@@ -107,6 +113,7 @@ fn no_request_lost_or_double_served_across_failures() {
             dynamic: DynamicConfig::default(),
             faults: &faults,
             migration: fleet.migration,
+            resume_transfer_s: fleet.transfer_s,
         };
         let report = run(&trace, &cfg);
         prop_assert!(g, report.outcomes.len() == trace.len(), "outcome count");
@@ -156,6 +163,7 @@ fn migrated_requests_keep_identity_and_budget() {
             dynamic: DynamicConfig::default(),
             faults: &faults,
             migration: MigrationPolicyKind::RequeueOnDeath,
+            resume_transfer_s: 0.0,
         };
         let report = run(&trace, &cfg);
         for m in &report.migrations {
@@ -174,11 +182,145 @@ fn migrated_requests_keep_identity_and_budget() {
         // delays are charged from the original arrival: a served
         // request's e2e spans arrival -> resolution exactly
         for o in &report.outcomes {
-            if o.disposition == Disposition::Served {
+            if o.disposition.is_served() {
                 let span = o.resolved_s - o.arrival_s;
                 prop_assert!(g, (span - o.e2e_s).abs() < 1e-9, "e2e {} vs span {span}", o.e2e_s);
             }
         }
+        true
+    });
+}
+
+#[test]
+fn checkpointed_resumes_conserve_steps_and_identity() {
+    forall("checkpoint conservation", 200, |g: &mut Gen| {
+        let trace = random_trace(g);
+        let n = g.usize_in(2, 5);
+        let speeds = g.vec_of(n, |g| g.f64_in(0.4, 2.0));
+        let (mtbf, mttr) = (g.f64_in(2.0, 15.0), g.f64_in(0.5, 6.0));
+        let faults = FaultScript::random(n, trace.duration_s() * 1.2, mtbf, mttr, g.u64());
+        let cfg = EventClusterConfig {
+            speeds: &speeds,
+            router: *g.pick(&RouterKind::all()),
+            dynamic: DynamicConfig::default(),
+            faults: &faults,
+            migration: MigrationPolicyKind::Checkpoint,
+            resume_transfer_s: g.f64_in(0.0, 1.5),
+        };
+        let report = run(&trace, &cfg);
+        // conservation still holds with resumes in the mix
+        prop_assert!(
+            g,
+            report.served() + report.dropped() == trace.len(),
+            "served {} + dropped {} != {}",
+            report.served(),
+            report.dropped(),
+            trace.len()
+        );
+        for o in &report.outcomes {
+            let a = &trace.arrivals[o.id];
+            if o.disposition == Disposition::ResumedElsewhere {
+                // a resume only exists when the checkpoint saved work
+                prop_assert!(g, o.recovered_steps > 0, "resume {} salvaged nothing", o.id);
+                // identity and deadline survive the hand-off
+                prop_assert!(g, o.arrival_s.to_bits() == a.t_s.to_bits(), "arrival {}", o.id);
+                prop_assert!(
+                    g,
+                    o.deadline_s.to_bits() == a.deadline_s.to_bits(),
+                    "deadline {}",
+                    o.id
+                );
+                // a resume flagged as met honours the *original*
+                // absolute deadline, not one restarted at the hand-off
+                if o.met {
+                    prop_assert!(
+                        g,
+                        o.resolved_s <= a.t_s + a.deadline_s + 1e-9,
+                        "resume {} resolved {} past deadline {}",
+                        o.id,
+                        o.resolved_s,
+                        a.t_s + a.deadline_s
+                    );
+                }
+            } else {
+                // only resumes carry salvaged steps
+                prop_assert!(g, o.recovered_steps == 0, "non-resume {} recovered", o.id);
+            }
+            // charged steps always include the salvaged prefix
+            prop_assert!(
+                g,
+                o.steps >= o.recovered_steps,
+                "request {}: steps {} < recovered {}",
+                o.id,
+                o.steps,
+                o.recovered_steps
+            );
+            if o.disposition.is_served() {
+                let span = o.resolved_s - o.arrival_s;
+                prop_assert!(g, (span - o.e2e_s).abs() < 1e-9, "e2e {} vs span {span}", o.e2e_s);
+            }
+        }
+        true
+    });
+}
+
+#[test]
+fn non_checkpoint_policies_never_resume() {
+    forall("no phantom resumes", 100, |g: &mut Gen| {
+        let trace = random_trace(g);
+        let faults = random_faults(g, 5, trace.duration_s());
+        let mut fleet = random_fleet(g);
+        if fleet.migration == MigrationPolicyKind::Checkpoint {
+            fleet.migration = MigrationPolicyKind::RequeueOnDeath;
+        }
+        let faults = clamp_to_fleet(&faults, fleet.speeds.len());
+        let cfg = EventClusterConfig {
+            speeds: &fleet.speeds,
+            router: fleet.router,
+            dynamic: DynamicConfig::default(),
+            faults: &faults,
+            migration: fleet.migration,
+            resume_transfer_s: fleet.transfer_s,
+        };
+        let report = run(&trace, &cfg);
+        prop_assert!(g, report.resumed_elsewhere() == 0, "{:?} resumed", fleet.migration);
+        prop_assert!(g, report.recovered_steps() == 0, "{:?} salvaged", fleet.migration);
+        true
+    });
+}
+
+#[test]
+fn zero_fault_checkpoint_matches_none_bitwise() {
+    forall("checkpoint zero-fault degeneration", 60, |g: &mut Gen| {
+        let trace = random_trace(g);
+        let n = g.usize_in(1, 4);
+        let speeds = g.vec_of(n, |g| g.f64_in(0.4, 2.0));
+        let router = *g.pick(&RouterKind::all());
+        let empty = FaultScript::empty();
+        let mk = |migration, transfer_s| EventClusterConfig {
+            speeds: &speeds,
+            router,
+            dynamic: DynamicConfig::default(),
+            faults: &empty,
+            migration,
+            resume_transfer_s: transfer_s,
+        };
+        let none = run(&trace, &mk(MigrationPolicyKind::None, 0.0));
+        let ckpt = run(&trace, &mk(MigrationPolicyKind::Checkpoint, g.f64_in(0.0, 2.0)));
+        prop_assert!(g, none.assignment == ckpt.assignment, "assignment");
+        prop_assert!(g, ckpt.resumed_elsewhere() == 0, "fault-free resumes");
+        for (x, y) in none.outcomes.iter().zip(&ckpt.outcomes) {
+            prop_assert!(g, x.disposition == y.disposition, "disposition {}", x.id);
+            prop_assert!(g, x.steps == y.steps, "steps {}", x.id);
+            prop_assert!(g, x.quality.to_bits() == y.quality.to_bits(), "quality {}", x.id);
+            prop_assert!(
+                g,
+                x.resolved_s.to_bits() == y.resolved_s.to_bits(),
+                "resolution {}",
+                x.id
+            );
+        }
+        prop_assert!(g, none.horizon_s.to_bits() == ckpt.horizon_s.to_bits(), "horizon");
         true
     });
 }
@@ -196,6 +338,7 @@ fn replay_is_seed_identical_under_faults() {
             dynamic: DynamicConfig::default(),
             faults: &faults,
             migration: fleet.migration,
+            resume_transfer_s: fleet.transfer_s,
         };
         let a = run(&trace, &cfg);
         let b = run(&trace, &cfg);

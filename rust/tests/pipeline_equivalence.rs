@@ -102,7 +102,7 @@ fn event_cfg<'a>(
     faults: &'a FaultScript,
     migration: MigrationPolicyKind,
 ) -> EventClusterConfig<'a> {
-    EventClusterConfig { speeds, router, dynamic, faults, migration }
+    EventClusterConfig { speeds, router, dynamic, faults, migration, resume_transfer_s: 0.0 }
 }
 
 fn with_mode(mode: SolveMode, latency: f64) -> DynamicConfig {

@@ -178,6 +178,7 @@ fn per_server_allocator_replay_is_seed_deterministic() {
             dynamic,
             faults: &NO_FAULTS,
             migration: MigrationPolicyKind::None,
+            resume_transfer_s: 0.0,
         };
         let run_event = |pool: &AllocatorPool| {
             simulate_event_cluster_pooled(
