@@ -1,0 +1,195 @@
+//! Trace-serialization shootout: columnar vs CSV vs JSON (the ROADMAP
+//! "serialization on a bench" item), folded into `BENCH_pr8.json`.
+//! (`harness = false`: criterion is not in the offline vendored set.)
+//!
+//! Properties asserted here:
+//!  * every codec round-trips a large generated arrival trace
+//!    *bit-identically* (same f64 bits per column, same scenario
+//!    constants) — replayed simulations cannot drift;
+//!  * the columnar format is the smallest of the three — it exists to
+//!    beat the text codecs, so a regression here is a real bug;
+//!  * encode/decode wall-clock and bytes-per-request are measured and
+//!    reported for all three codecs (throughput is informational —
+//!    shared CI wall-clock is noise, the sizes and round-trips gate).
+//!
+//! Run after `obs_overhead` (CI does): the results merge into the
+//! existing `BENCH_pr8.json` under a `"serialization"` key via
+//! `util::json` (parse → insert → render re-parses losslessly).
+
+use std::path::Path;
+use std::time::Instant;
+
+use aigc_edge::channel::Link;
+use aigc_edge::config::ExperimentConfig;
+use aigc_edge::trace::{columnar, Arrival, ArrivalTrace};
+use aigc_edge::util::json::{self, Json};
+
+/// Columnar JSON codec for a trace (arrays per column). f64 `Display`
+/// is shortest-round-trip, so the bits survive the text round-trip.
+fn to_json(trace: &ArrivalTrace) -> String {
+    let col = |f: &dyn Fn(&Arrival) -> f64| {
+        let mut out = String::from("[");
+        for (i, a) in trace.arrivals.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!("{}", f(a)));
+        }
+        out.push(']');
+        out
+    };
+    format!(
+        "{{\"total_bandwidth_hz\":{},\"content_bits\":{},\"t_s\":{},\"deadline_s\":{},\"eta\":{}}}",
+        trace.total_bandwidth_hz,
+        trace.content_bits,
+        col(&|a| a.t_s),
+        col(&|a| a.deadline_s),
+        col(&|a| a.link.spectral_efficiency),
+    )
+}
+
+fn from_json(text: &str) -> ArrivalTrace {
+    let v = json::parse(text).expect("trace JSON parses");
+    let f = |k: &str| v.get(k).and_then(Json::as_f64).expect("scenario constant");
+    let col = |k: &str| -> Vec<f64> {
+        let arr = v.get(k).and_then(Json::as_arr).expect("column array");
+        arr.iter().map(|x| x.as_f64().expect("column value")).collect()
+    };
+    let (t_s, deadline_s, eta) = (col("t_s"), col("deadline_s"), col("eta"));
+    assert_eq!(t_s.len(), deadline_s.len());
+    assert_eq!(t_s.len(), eta.len());
+    let arrivals = t_s
+        .iter()
+        .zip(&deadline_s)
+        .zip(&eta)
+        .enumerate()
+        .map(|(id, ((&t, &d), &e))| Arrival { id, t_s: t, deadline_s: d, link: Link::new(e) })
+        .collect();
+    ArrivalTrace {
+        arrivals,
+        total_bandwidth_hz: f("total_bandwidth_hz"),
+        content_bits: f("content_bits"),
+    }
+}
+
+fn assert_traces_bitwise(a: &ArrivalTrace, b: &ArrivalTrace, codec: &str) {
+    assert_eq!(a.total_bandwidth_hz.to_bits(), b.total_bandwidth_hz.to_bits(), "{codec}");
+    assert_eq!(a.content_bits.to_bits(), b.content_bits.to_bits(), "{codec}");
+    assert_eq!(a.arrivals.len(), b.arrivals.len(), "{codec}");
+    for (x, y) in a.arrivals.iter().zip(&b.arrivals) {
+        assert_eq!(x.id, y.id, "{codec}");
+        assert_eq!(x.t_s.to_bits(), y.t_s.to_bits(), "{codec} arrival {}", x.id);
+        assert_eq!(x.deadline_s.to_bits(), y.deadline_s.to_bits(), "{codec} arrival {}", x.id);
+        let (ex, ey) = (x.link.spectral_efficiency, y.link.spectral_efficiency);
+        assert_eq!(ex.to_bits(), ey.to_bits(), "{codec} arrival {}", x.id);
+    }
+}
+
+struct CodecRow {
+    name: &'static str,
+    bytes: usize,
+    encode_s: f64,
+    decode_s: f64,
+}
+
+fn main() {
+    let mut cfg = ExperimentConfig::paper();
+    cfg.arrival.rate_hz = 50.0;
+    let horizon_s: f64 = std::env::var("BENCH_HORIZON_S")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(2_000.0);
+    let mut arrival = cfg.arrival;
+    arrival.horizon_s = horizon_s;
+    let trace = ArrivalTrace::generate(&cfg.scenario, &arrival, cfg.seed);
+    assert!(trace.len() > 50_000, "trace too small to bench: {} requests", trace.len());
+
+    // ---- round-trips + measurements ----
+    let mut rows: Vec<CodecRow> = Vec::new();
+    {
+        let t0 = Instant::now();
+        let bytes = columnar::encode(&trace);
+        let encode_s = t0.elapsed().as_secs_f64();
+        let t0 = Instant::now();
+        let back = columnar::decode(&bytes).expect("columnar decode");
+        let decode_s = t0.elapsed().as_secs_f64();
+        assert_traces_bitwise(&trace, &back, "columnar");
+        // Chunked framing reaches the same bytes-per-request envelope.
+        let chunked = columnar::encode_chunked(&trace, 1024);
+        assert_traces_bitwise(&trace, &columnar::decode(&chunked).expect("chunked"), "chunked");
+        rows.push(CodecRow { name: "columnar", bytes: bytes.len(), encode_s, decode_s });
+    }
+    {
+        let t0 = Instant::now();
+        let text = trace.to_csv();
+        let encode_s = t0.elapsed().as_secs_f64();
+        let t0 = Instant::now();
+        let back = ArrivalTrace::from_csv(&text).expect("csv decode");
+        let decode_s = t0.elapsed().as_secs_f64();
+        assert_traces_bitwise(&trace, &back, "csv");
+        rows.push(CodecRow { name: "csv", bytes: text.len(), encode_s, decode_s });
+    }
+    {
+        let t0 = Instant::now();
+        let text = to_json(&trace);
+        let encode_s = t0.elapsed().as_secs_f64();
+        let t0 = Instant::now();
+        let back = from_json(&text);
+        let decode_s = t0.elapsed().as_secs_f64();
+        assert_traces_bitwise(&trace, &back, "json");
+        rows.push(CodecRow { name: "json", bytes: text.len(), encode_s, decode_s });
+    }
+    let by = |name: &str| rows.iter().find(|r| r.name == name).unwrap();
+    assert!(
+        by("columnar").bytes < by("csv").bytes && by("columnar").bytes < by("json").bytes,
+        "columnar must be the smallest codec: {} vs csv {} / json {}",
+        by("columnar").bytes,
+        by("csv").bytes,
+        by("json").bytes
+    );
+
+    // ---- fold into BENCH_pr8.json (after obs_overhead wrote it) ----
+    let n = trace.len() as f64;
+    let mut section = std::collections::BTreeMap::new();
+    section.insert("requests".to_string(), Json::Num(n));
+    for r in &rows {
+        let mut codec = std::collections::BTreeMap::new();
+        codec.insert("bytes".to_string(), Json::Num(r.bytes as f64));
+        codec.insert("bytes_per_request".to_string(), Json::Num(r.bytes as f64 / n));
+        codec.insert("encode_s".to_string(), Json::Num(r.encode_s));
+        codec.insert("decode_s".to_string(), Json::Num(r.decode_s));
+        codec.insert("encode_mreq_per_s".to_string(), Json::Num(n / r.encode_s / 1e6));
+        codec.insert("decode_mreq_per_s".to_string(), Json::Num(n / r.decode_s / 1e6));
+        section.insert(r.name.to_string(), Json::Obj(codec));
+    }
+    let path = Path::new(env!("CARGO_MANIFEST_DIR")).join("..").join("BENCH_pr8.json");
+    let mut root = match std::fs::read_to_string(&path) {
+        Ok(text) => json::parse(&text)
+            .unwrap_or_else(|e| panic!("existing {} does not parse: {e}", path.display())),
+        Err(_) => {
+            let mut fresh = std::collections::BTreeMap::new();
+            fresh.insert("pr".to_string(), Json::Num(8.0));
+            Json::Obj(fresh)
+        }
+    };
+    match &mut root {
+        Json::Obj(map) => {
+            map.insert("serialization".to_string(), Json::Obj(section));
+        }
+        other => panic!("BENCH_pr8.json root is not an object: {other:?}"),
+    }
+    let rendered = root.render();
+    json::parse(&rendered).unwrap_or_else(|e| panic!("merged BENCH_pr8.json does not parse: {e}"));
+    let mut out = rendered;
+    out.push('\n');
+    std::fs::write(&path, &out).unwrap_or_else(|e| panic!("writing {}: {e}", path.display()));
+    println!(
+        "\nfig_serialization OK ({} requests; columnar {} B, csv {} B, json {} B; \
+         all codecs bit-identical; merged into {})",
+        trace.len(),
+        by("columnar").bytes,
+        by("csv").bytes,
+        by("json").bytes,
+        path.display()
+    );
+}

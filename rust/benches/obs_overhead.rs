@@ -1,0 +1,205 @@
+//! Flight-recorder gate behind `BENCH_pr8.json`.
+//! (`harness = false`: criterion is not in the offline vendored set.)
+//!
+//! Acceptance properties asserted here (ISSUE 8):
+//!  * the NullSink default is *bitwise* free: every engine output is
+//!    identical with tracing off and with a full Recorder capture —
+//!    on the sequential cluster engine and on the event engine under
+//!    the seed-7 random fault script with checkpointed migration;
+//!  * every capture passes the lifecycle audit with zero violations
+//!    and conserves the request count;
+//!  * the columnar span file round-trips bit-for-bit;
+//!  * the seed-7 faulted capture replays bit-identically, so its
+//!    perfetto export is byte-identical across runs;
+//!  * full-capture overhead is *measured* and reported (not gated —
+//!    wall-clock on shared CI is noise, bit-identity is the contract).
+
+use std::path::Path;
+use std::time::Instant;
+
+use aigc_edge::bandwidth::EqualAllocator;
+use aigc_edge::config::ExperimentConfig;
+use aigc_edge::delay::BatchDelayModel;
+use aigc_edge::faults::{FaultScript, MigrationPolicyKind};
+use aigc_edge::obs::{audit, perfetto, span, Recorder, TraceEvent};
+use aigc_edge::quality::PowerLawQuality;
+use aigc_edge::scheduler::Stacking;
+use aigc_edge::sim::{
+    server_speeds, simulate_cluster, simulate_cluster_traced, simulate_event_cluster,
+    simulate_event_cluster_traced, ClusterConfig, ClusterReport, EventClusterConfig, EventReport,
+    RequestOutcome,
+};
+use aigc_edge::trace::ArrivalTrace;
+
+fn assert_outcomes_bitwise(plain: &[RequestOutcome], traced: &[RequestOutcome]) {
+    assert_eq!(plain.len(), traced.len());
+    for (a, b) in plain.iter().zip(traced) {
+        assert_eq!(a.disposition, b.disposition, "request {}", a.id);
+        assert_eq!(a.steps, b.steps, "request {}", a.id);
+        assert_eq!(a.quality.to_bits(), b.quality.to_bits(), "request {}", a.id);
+        assert_eq!(a.e2e_s.to_bits(), b.e2e_s.to_bits(), "request {}", a.id);
+        assert_eq!(a.resolved_s.to_bits(), b.resolved_s.to_bits(), "request {}", a.id);
+    }
+}
+
+fn assert_events_bitwise(x: &[TraceEvent], y: &[TraceEvent]) {
+    assert_eq!(x.len(), y.len(), "event counts diverged");
+    for (a, b) in x.iter().zip(y) {
+        assert_eq!(a.t_s.to_bits(), b.t_s.to_bits());
+        assert_eq!((a.server, a.request, a.kind), (b.server, b.request, b.kind));
+    }
+}
+
+fn main() {
+    let mut cfg = ExperimentConfig::paper();
+    cfg.cluster.servers = 4;
+    cfg.cluster.speed_min = 0.5;
+    cfg.cluster.speed_max = 2.0;
+    cfg.arrival.rate_hz = 6.0;
+    let horizon_s: f64 = std::env::var("BENCH_HORIZON_S")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(400.0);
+    let reps: usize = std::env::var("BENCH_REPS").ok().and_then(|s| s.parse().ok()).unwrap_or(3);
+
+    let scheduler = Stacking::default();
+    let allocator = EqualAllocator;
+    let delay = BatchDelayModel::new(cfg.delay.a, cfg.delay.b);
+    let quality = PowerLawQuality::paper();
+    let mut arrival = cfg.arrival;
+    arrival.horizon_s = horizon_s;
+    let trace = ArrivalTrace::generate(&cfg.scenario, &arrival, cfg.seed);
+    assert!(trace.len() > 1_000, "workload too small: {} requests", trace.len());
+    let cluster_cfg = ClusterConfig {
+        speeds: server_speeds(4, 0.5, 2.0),
+        router: cfg.cluster.router,
+        dynamic: (&cfg.dynamic).into(),
+    };
+
+    // ---- sequential cluster: tracing off == full capture, bitwise ----
+    let run_seq =
+        || simulate_cluster(&trace, &scheduler, &allocator, &delay, &quality, &cluster_cfg);
+    let run_seq_traced = |rec: &mut Recorder| -> ClusterReport {
+        simulate_cluster_traced(&trace, &scheduler, &allocator, &delay, &quality, &cluster_cfg, rec)
+    };
+    let plain = run_seq();
+    let mut rec = Recorder::new();
+    let traced = run_seq_traced(&mut rec);
+    assert_eq!(plain.assignment, traced.assignment, "capture changed routing");
+    assert_eq!(plain.horizon_s.to_bits(), traced.horizon_s.to_bits());
+    assert_outcomes_bitwise(&plain.outcomes, &traced.outcomes);
+    assert!(rec.events.len() >= 3 * trace.len(), "capture too sparse: {}", rec.events.len());
+    let seq_audit = audit::audit_expecting(&rec.events, trace.len());
+    assert!(seq_audit.is_clean(), "{}", seq_audit.render());
+
+    // ---- span file round-trip ----
+    let bytes = span::encode(&rec.events);
+    let decoded = span::decode(&bytes).expect("span decode");
+    assert_events_bitwise(&rec.events, &decoded);
+
+    // ---- event engine under the seed-7 fault script ----
+    let faults = FaultScript::random(4, horizon_s, 90.0, 12.0, 7);
+    assert!(!faults.downs().is_empty(), "seed-7 script injected no faults");
+    let event_cfg = EventClusterConfig {
+        speeds: &cluster_cfg.speeds,
+        router: cfg.cluster.router,
+        dynamic: (&cfg.dynamic).into(),
+        faults: &faults,
+        migration: MigrationPolicyKind::Checkpoint,
+        resume_transfer_s: 0.05,
+    };
+    let run_ev =
+        || simulate_event_cluster(&trace, &scheduler, &allocator, &delay, &quality, &event_cfg);
+    let capture_ev = || -> (EventReport, Vec<TraceEvent>) {
+        let mut r = Recorder::new();
+        let rep = simulate_event_cluster_traced(
+            &trace,
+            &scheduler,
+            &allocator,
+            &delay,
+            &quality,
+            &event_cfg,
+            &mut r,
+        );
+        (rep, r.events)
+    };
+    let ev_plain = run_ev();
+    let (ev_traced, events) = capture_ev();
+    assert_eq!(ev_plain.assignment, ev_traced.assignment, "capture changed routing under faults");
+    assert_eq!(ev_plain.horizon_s.to_bits(), ev_traced.horizon_s.to_bits());
+    assert_outcomes_bitwise(&ev_plain.outcomes, &ev_traced.outcomes);
+    let ev_audit = audit::audit_expecting(&events, trace.len());
+    assert!(ev_audit.is_clean(), "{}", ev_audit.render());
+
+    // ---- deterministic replay: byte-identical perfetto timeline ----
+    let (_, events2) = capture_ev();
+    assert_events_bitwise(&events, &events2);
+    let timeline = perfetto::export(&events);
+    assert_eq!(timeline, perfetto::export(&events2), "perfetto export is not deterministic");
+
+    // ---- overhead: NullSink path vs full Recorder capture ----
+    let time = |f: &dyn Fn()| {
+        let mut best = f64::INFINITY;
+        for _ in 0..reps {
+            let t0 = Instant::now();
+            f();
+            best = best.min(t0.elapsed().as_secs_f64());
+        }
+        best
+    };
+    let seq_off_s = time(&|| drop(run_seq()));
+    let seq_on_s = time(&|| {
+        let mut r = Recorder::new();
+        run_seq_traced(&mut r);
+    });
+    let ev_off_s = time(&|| drop(run_ev()));
+    let ev_on_s = time(&|| drop(capture_ev()));
+    let t0 = Instant::now();
+    let span_bytes = span::encode(&events);
+    let encode_s = t0.elapsed().as_secs_f64();
+    let t0 = Instant::now();
+    span::decode(&span_bytes).expect("span decode");
+    let decode_s = t0.elapsed().as_secs_f64();
+    let pct = |off: f64, on: f64| if off > 0.0 { 100.0 * (on - off) / off } else { 0.0 };
+
+    // ---- tracked trajectory: BENCH_pr8.json at the repository root ----
+    let json = format!(
+        "{{\n  \"pr\": 8,\n  \"horizon_s\": {horizon_s:?},\n  \"requests\": {},\n  \
+         \"flight_recorder\": {{\n    \"cluster_events\": {},\n    \"event_engine_events\": {},\n    \
+         \"span_bytes\": {},\n    \"bytes_per_event\": {:?},\n    \"perfetto_bytes\": {},\n    \
+         \"cluster_off_s\": {:?},\n    \"cluster_capture_s\": {:?},\n    \
+         \"cluster_overhead_pct\": {:?},\n    \"event_off_s\": {:?},\n    \
+         \"event_capture_s\": {:?},\n    \"event_overhead_pct\": {:?},\n    \
+         \"span_encode_s\": {:?},\n    \"span_decode_s\": {:?},\n    \
+         \"audit_violations\": {}\n  }}\n}}\n",
+        trace.len(),
+        rec.events.len(),
+        events.len(),
+        span_bytes.len(),
+        span_bytes.len() as f64 / events.len().max(1) as f64,
+        timeline.len(),
+        seq_off_s,
+        seq_on_s,
+        pct(seq_off_s, seq_on_s),
+        ev_off_s,
+        ev_on_s,
+        pct(ev_off_s, ev_on_s),
+        encode_s,
+        decode_s,
+        ev_audit.violations.len(),
+    );
+    let path = Path::new(env!("CARGO_MANIFEST_DIR")).join("..").join("BENCH_pr8.json");
+    std::fs::write(&path, &json).unwrap_or_else(|e| panic!("writing {}: {e}", path.display()));
+    aigc_edge::util::json::parse(&json)
+        .unwrap_or_else(|e| panic!("BENCH_pr8.json does not parse: {e}"));
+    println!(
+        "\nobs_overhead OK ({} + {} events, {} span bytes; capture overhead {:.1}% cluster / \
+         {:.1}% event engine; audits clean; wrote {})",
+        rec.events.len(),
+        events.len(),
+        span_bytes.len(),
+        pct(seq_off_s, seq_on_s),
+        pct(ev_off_s, ev_on_s),
+        path.display()
+    );
+}

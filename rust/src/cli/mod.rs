@@ -11,6 +11,9 @@
 //!             — the cluster workload under failure injection and live
 //!             migration (checkpointed resumes under `--migration
 //!             checkpoint`)
+//!   `trace    --in spans.bin [--perfetto out.json]` — summarize,
+//!             audit and export a flight-recorder span capture
+//!             (written by `--trace-spans` on the simulators)
 //!   `profile  [--reps N]` — Fig. 1a measurement
 //!   `figures  [--which 1a|1b|2a|2b|2c|3|cluster|faults|pipeline|checkpoint|all] [--reps N]`
 //!   `perf     [--threads N] [--quick true]` — parallel-fabric perf
@@ -111,7 +114,7 @@ USAGE:
                      [--horizon 300] [--epoch-s 1.0] [--max-batch 32] [--window 30]
                      [--plan-horizon 2.0] [--solve-latency 0.0]
                      [--solve-mode pipelined|synchronous]
-                     [--no-admission true] [--trace-out f.csv]
+                     [--no-admission true] [--trace-out f.csv] [--trace-spans f.bin]
                      [--metrics-mode exact|streaming]
                      [--scheduler stacking|single|greedy|fixed]
                      [--allocator pso|equal|proportional] [--seed N] [--threads 0]
@@ -121,13 +124,15 @@ USAGE:
                      [--rate 2.0] [--horizon 300] [--epoch-s 1.0] [--max-batch 32]
                      [--plan-horizon 2.0] [--adaptive-horizon true]
                      [--solve-latency 0.0] [--solve-mode pipelined|synchronous]
-                     [--no-admission true] [--warm-start true]
+                     [--no-admission true] [--warm-start true] [--trace-spans f.bin]
                      [--scheduler stacking|single|greedy|fixed]
                      [--allocator pso|equal|proportional] [--seed N] [--threads 0]
   aigc-edge faults   [--config file.toml] [cluster flags...]
                      [--fault-mode none|random|scheduled] [--mtbf 120] [--mttr 15]
                      [--fault-seed N] [--down \"server:from:until,...\"]
                      [--migration none|requeue|steal|checkpoint] [--transfer-s 0.05]
+                     [--trace-spans f.bin]
+  aigc-edge trace    --in spans.bin [--perfetto out.json] [--window 30]
   aigc-edge profile  [--reps 20]
   aigc-edge figures  [--which all|1a|1b|2a|2b|2c|3|cluster|faults|pipeline|checkpoint]
                      [--reps 3]
@@ -138,6 +143,11 @@ USAGE:
 
   --threads N selects the solve/sweep fan-out (0 = auto-detect, 1 =
   serial, else N workers); outputs are bit-identical at every value.
+
+  --trace-spans f.bin captures the flight recorder — every request
+  lifecycle event, sim-clock-stamped — to a columnar span file without
+  changing any output bit. `aigc-edge trace` summarizes, audits and
+  exports it to a perfetto timeline.
 ";
 
 #[cfg(test)]

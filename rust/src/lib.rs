@@ -25,6 +25,7 @@ pub mod coordinator;
 pub mod delay;
 pub mod faults;
 pub mod metrics;
+pub mod obs;
 pub mod quality;
 pub mod routing;
 pub mod runtime;

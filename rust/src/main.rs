@@ -16,6 +16,7 @@ use aigc_edge::coordinator::{profile_batch_delay, ProfileConfig, SolveMode};
 use aigc_edge::delay::BatchDelayModel;
 use aigc_edge::faults::{FaultModeKind, FaultScript, MigrationPolicyKind};
 use aigc_edge::metrics::{MetricsMode, OutcomeAccumulator, OutcomeStats};
+use aigc_edge::obs;
 use aigc_edge::quality::{PowerLawQuality, QualityModel, TableQuality};
 use aigc_edge::routing::RouterKind;
 use aigc_edge::runtime::ArtifactStore;
@@ -23,8 +24,9 @@ use aigc_edge::scheduler::{
     BatchScheduler, FixedSizeBatching, GreedyBatching, SingleInstance, Stacking, StackingConfig,
 };
 use aigc_edge::sim::{
-    simulate_cluster_pooled, simulate_dynamic, simulate_dynamic_streaming,
-    simulate_event_cluster_pooled, ClusterConfig, Disposition, DynamicConfig, EventClusterConfig,
+    simulate_cluster_pooled_traced, simulate_dynamic_streaming, simulate_dynamic_traced,
+    simulate_event_cluster_pooled_traced, ClusterConfig, Disposition, DynamicConfig,
+    EventClusterConfig,
 };
 use aigc_edge::trace::{ArrivalStream, ArrivalTrace};
 
@@ -48,6 +50,7 @@ fn main() -> Result<()> {
         "dynamic" => cmd_dynamic(&args),
         "cluster" => cmd_cluster(&args),
         "faults" => cmd_faults(&args),
+        "trace" => cmd_trace(&args),
         "profile" => cmd_profile(&args),
         "figures" => cmd_figures(&args),
         "perf" => cmd_perf(&args),
@@ -261,6 +264,7 @@ fn cmd_dynamic(args: &Args) -> Result<()> {
         "no-admission",
         "metrics-mode",
         "trace-out",
+        "trace-spans",
         "scheduler",
         "allocator",
         "seed",
@@ -317,13 +321,21 @@ fn cmd_dynamic(args: &Args) -> Result<()> {
         scheduler.name(),
         allocator.name()
     );
-    let report = simulate_dynamic(
+    // Flight recorder: a live Recorder when `--trace-spans` asks for a
+    // capture, the zero-cost NullSink otherwise — same engine path,
+    // bit-identical outputs either way.
+    let span_path = args.get("trace-spans");
+    let mut rec = obs::Recorder::new();
+    let mut null = obs::NullSink;
+    let tracer: &mut dyn obs::TraceSink = if span_path.is_some() { &mut rec } else { &mut null };
+    let report = simulate_dynamic_traced(
         &trace,
         scheduler.as_ref(),
         allocator.as_ref(),
         &delay,
         quality.as_ref(),
         &dyn_cfg,
+        tracer,
     );
 
     // Windowed view: one row every ~window/3 of simulated time.
@@ -386,6 +398,9 @@ fn cmd_dynamic(args: &Args) -> Result<()> {
             cfg.dynamic.solve_mode.name(),
         );
     }
+    if let Some(path) = span_path {
+        write_spans(path, &rec, cfg.dynamic.window_s)?;
+    }
     Ok(())
 }
 
@@ -404,6 +419,9 @@ fn run_dynamic_streaming(
 ) -> Result<()> {
     if args.get("trace-out").is_some() {
         bail!("--trace-out needs --metrics-mode exact (streaming never materializes the trace)");
+    }
+    if args.get("trace-spans").is_some() {
+        bail!("--trace-spans needs --metrics-mode exact (streaming keeps the NullSink fast path)");
     }
     println!(
         "dynamic scenario: {:?} rate {} Hz over {}s | epoch {}s max-batch {} | \
@@ -471,6 +489,7 @@ fn cmd_cluster(args: &Args) -> Result<()> {
         "solve-mode",
         "no-admission",
         "warm-start",
+        "trace-spans",
         "scheduler",
         "allocator",
         "seed",
@@ -511,6 +530,10 @@ fn cmd_cluster(args: &Args) -> Result<()> {
         pool.len(),
         if pool.len() == 1 { "" } else { "s" }
     );
+    let span_path = args.get("trace-spans");
+    let mut rec = obs::Recorder::new();
+    let mut null = obs::NullSink;
+    let tracer: &mut dyn obs::TraceSink = if span_path.is_some() { &mut rec } else { &mut null };
     // The live-state router reads views only the event engine
     // publishes — through the sequential engine it would silently
     // degenerate to virtual JSQ. The zero-fault event engine is
@@ -526,13 +549,14 @@ fn cmd_cluster(args: &Args) -> Result<()> {
             migration: MigrationPolicyKind::None,
             resume_transfer_s: 0.0,
         };
-        let report = simulate_event_cluster_pooled(
+        let report = simulate_event_cluster_pooled_traced(
             &trace,
             scheduler.as_ref(),
             &pool,
             &delay,
             quality.as_ref(),
             &event_cfg,
+            tracer,
         );
         ClusterView {
             rows: report
@@ -551,13 +575,14 @@ fn cmd_cluster(args: &Args) -> Result<()> {
             horizon_s: report.horizon_s,
         }
     } else {
-        let report = simulate_cluster_pooled(
+        let report = simulate_cluster_pooled_traced(
             &trace,
             scheduler.as_ref(),
             &pool,
             &delay,
             quality.as_ref(),
             &cluster_cfg,
+            tracer,
         );
         ClusterView {
             rows: report.servers.iter().map(|s| (s.server, s.speed, s.stats())).collect(),
@@ -606,6 +631,9 @@ fn cmd_cluster(args: &Args) -> Result<()> {
         view.peak_queue,
         view.horizon_s,
     );
+    if let Some(path) = span_path {
+        write_spans(path, &rec, cfg.dynamic.window_s)?;
+    }
     Ok(())
 }
 
@@ -656,6 +684,7 @@ fn cmd_faults(args: &Args) -> Result<()> {
         "mttr",
         "fault-seed",
         "down",
+        "trace-spans",
     ])?;
     let mut cfg = load_config(args)?;
     apply_dynamic_flags(args, &mut cfg)?;
@@ -719,13 +748,18 @@ fn cmd_faults(args: &Args) -> Result<()> {
         pool.len(),
         if pool.len() == 1 { "" } else { "s" }
     );
-    let report = simulate_event_cluster_pooled(
+    let span_path = args.get("trace-spans");
+    let mut rec = obs::Recorder::new();
+    let mut null = obs::NullSink;
+    let tracer: &mut dyn obs::TraceSink = if span_path.is_some() { &mut rec } else { &mut null };
+    let report = simulate_event_cluster_pooled_traced(
         &trace,
         scheduler.as_ref(),
         &pool,
         &delay,
         quality.as_ref(),
         &event_cfg,
+        tracer,
     );
 
     let mut table = aigc_edge::bench::TableWriter::new(
@@ -785,6 +819,47 @@ fn cmd_faults(args: &Args) -> Result<()> {
         rs.resumed,
         rs.recovered_steps,
     );
+    if let Some(path) = span_path {
+        write_spans(path, &rec, cfg.dynamic.window_s)?;
+    }
+    Ok(())
+}
+
+/// Persist a captured flight-recorder stream (`--trace-spans`) in the
+/// columnar span format — emission order, which `aigc-edge trace`
+/// audits — and print the derived telemetry summary.
+fn write_spans(path: &str, rec: &obs::Recorder, window_s: f64) -> Result<()> {
+    let bytes = obs::span::encode(&rec.events);
+    std::fs::write(path, &bytes).with_context(|| format!("writing spans {path}"))?;
+    println!("{} lifecycle events ({} bytes) written to {path}", rec.events.len(), bytes.len());
+    let fleet = obs::telemetry::FleetTelemetry::from_events(&rec.events, window_s);
+    print!("{}", fleet.summary());
+    Ok(())
+}
+
+/// Offline span tooling: summarize, audit, and optionally export a
+/// capture to a perfetto (chrome trace event) timeline. Exits nonzero
+/// when the lifecycle audit finds violations, so CI can gate on it.
+fn cmd_trace(args: &Args) -> Result<()> {
+    args.expect_only(&["in", "perfetto", "window"])?;
+    let path = args.get("in").context("trace needs --in <spans.bin>")?;
+    let bytes = std::fs::read(path).with_context(|| format!("reading {path}"))?;
+    let events = obs::span::decode(&bytes)?;
+    println!("{path}: {} lifecycle events", events.len());
+    print!("{}", obs::telemetry::kind_counts(&events));
+    let window_s = args.get_f64("window", 30.0)?;
+    let fleet = obs::telemetry::FleetTelemetry::from_events(&events, window_s);
+    print!("{}", fleet.summary());
+    let report = obs::audit::audit(&events);
+    print!("{}", report.render());
+    if let Some(out) = args.get("perfetto") {
+        let json = obs::perfetto::export(&events);
+        std::fs::write(out, &json).with_context(|| format!("writing {out}"))?;
+        println!("perfetto timeline written to {out} (load at ui.perfetto.dev)");
+    }
+    if !report.is_clean() {
+        bail!("span audit found {} lifecycle violation(s)", report.violations.len());
+    }
     Ok(())
 }
 

@@ -471,13 +471,25 @@ impl Metrics {
         self.inner.lock().unwrap().latencies.get(name).map(|l| l.mean())
     }
 
-    /// Render a human-readable snapshot.
+    /// Render a human-readable snapshot: the wall-clock `uptime_s`
+    /// line (when the registry tracks a start instant) followed by
+    /// [`render_body`](Self::render_body).
     pub fn render(&self) -> String {
-        let inner = self.inner.lock().unwrap();
         let mut out = String::new();
         if let Some(started) = self.started {
             out.push_str(&format!("uptime_s: {:.1}\n", started.elapsed().as_secs_f64()));
         }
+        out.push_str(&self.render_body());
+        out
+    }
+
+    /// The counter/gauge/latency body of [`render`](Self::render),
+    /// without the wall-clock uptime line — a pure function of the
+    /// registry contents, so protocol tests can assert the STATS reply
+    /// byte-for-byte (`BTreeMap` iteration makes line order stable).
+    pub fn render_body(&self) -> String {
+        let inner = self.inner.lock().unwrap();
+        let mut out = String::new();
         for (name, v) in &inner.counters {
             out.push_str(&format!("counter {name}: {v}\n"));
         }
@@ -787,6 +799,27 @@ mod tests {
         assert!(s.contains("counter a: 1"));
         assert!(s.contains("gauge g"));
         assert!(s.contains("latency lat"));
+    }
+
+    #[test]
+    fn render_body_is_deterministic_and_uptime_separable() {
+        let m = Metrics::new();
+        m.inc("req");
+        m.add("req", 2);
+        m.set_gauge("depth", 4.0);
+        m.record_latency("lat", 0.010);
+        let body = m.render_body();
+        assert_eq!(body, m.render_body(), "body is a pure function of the registry");
+        assert!(!body.contains("uptime_s"), "wall clock stays out of the body");
+        assert!(body.starts_with("counter req: 3\n"), "{body}");
+        assert!(body.contains("gauge depth: 4.000000\n"), "{body}");
+        let full = m.render();
+        assert!(full.starts_with("uptime_s: "), "{full}");
+        assert!(full.ends_with(&body), "render = uptime line + body");
+        // A default registry has no start instant: render == body.
+        let bare = Metrics::default();
+        bare.inc("x");
+        assert_eq!(bare.render(), bare.render_body());
     }
 
     #[test]

@@ -336,6 +336,30 @@ mod tests {
     }
 
     #[test]
+    fn two_epoch_pipelined_schedule_pins_overlap_fraction() {
+        use crate::coordinator::{SolveMode, SolveTiming};
+        // Hand-built two-epoch pipeline. Epoch 0 freezes at 1.0 on an
+        // idle GPU (nothing to hide behind) and executes until 4.0;
+        // epoch 1 freezes at 2.0, so its whole 0.5 s solve hides behind
+        // epoch 0's batch.
+        let e0 = SolveTiming::compute(1.0, 0.0, 0.5, SolveMode::Pipelined);
+        assert_eq!(e0.hidden_s, 0.0);
+        let gpu_free = 4.0; // epoch 0's batch ends here
+        let e1 = SolveTiming::compute(2.0, gpu_free, 0.5, SolveMode::Pipelined);
+        assert_eq!(e1.hidden_s, 0.5);
+        assert_eq!(e1.batch_start_s, gpu_free, "fully hidden solve never delays the batch");
+        let mut s = ServiceWindows::new(100.0);
+        s.record_solve(e0.solve_end_s, 0.5, e0.hidden_s);
+        s.record_solve(e1.solve_end_s, 0.5, e1.hidden_s);
+        // 0.5 hidden out of 1.0 charged — pinned, not approximate.
+        assert_eq!(s.solve_overlap_fraction(), 0.5);
+        // Single-sample edge: only the hidden epoch in the window.
+        let mut one = ServiceWindows::new(100.0);
+        one.record_solve(e1.solve_end_s, 0.5, e1.hidden_s);
+        assert_eq!(one.solve_overlap_fraction(), 1.0);
+    }
+
+    #[test]
     fn solve_overlap_is_windowed() {
         let mut s = ServiceWindows::new(10.0);
         s.record_solve(0.0, 1.0, 1.0);

@@ -1,0 +1,452 @@
+//! Lifecycle-DFA validator for flight-recorder traces.
+//!
+//! A trace is a claim about what the engines did; this module checks
+//! the claim against the service model's invariants:
+//!
+//! * per request, timestamps are monotone non-decreasing in emission
+//!   order — except `Lost`, whose stamp is the request's absolute
+//!   deadline and may be *backdated*: a request parked during a fleet
+//!   outage expires at its deadline, but the engine only discovers
+//!   that at the next recovery or at drain, after later events for the
+//!   same id were already emitted;
+//! * a request's first event is `Arrived`, exactly once;
+//! * admission (and delivery) happen only after arrival;
+//! * exactly one terminal disposition (`Delivered` / `Rejected` /
+//!   `Expired` / `Lost`) per request, and nothing after it;
+//! * `Resumed` only after `RetractedByDeath` (with the checkpoint
+//!   `TransferStart` in between), and retraction only of admitted
+//!   (in-flight) requests;
+//! * per server, epochs freeze in order and each epoch's
+//!   freeze ≤ solve start ≤ solve done ≤ drain;
+//! * conservation of ids — every traced request reaches a terminal,
+//!   and (when the expected population is known) the ids are exactly
+//!   `0..n`.
+//!
+//! `tests/obs_audit.rs` drives this over random traces × routers ×
+//! fault scripts × migration policies on both engines, which is what
+//! makes the recorder itself trustworthy.
+
+use std::collections::BTreeMap;
+
+use crate::obs::{EventKind, TraceEvent, NO_REQUEST};
+
+/// Outcome of an audit pass. `violations` is empty iff the trace
+/// satisfies every lifecycle invariant.
+#[derive(Debug, Clone, Default)]
+pub struct AuditReport {
+    /// Events inspected.
+    pub events: usize,
+    /// Distinct request ids observed.
+    pub requests: usize,
+    /// Human-readable invariant breaches, in discovery order.
+    pub violations: Vec<String>,
+}
+
+impl AuditReport {
+    pub fn is_clean(&self) -> bool {
+        self.violations.is_empty()
+    }
+
+    /// Multi-line summary for the CLI (`aigc-edge trace`).
+    pub fn render(&self) -> String {
+        let mut out = format!(
+            "audit: {} events, {} requests, {} violation(s)\n",
+            self.events,
+            self.requests,
+            self.violations.len()
+        );
+        for v in &self.violations {
+            out.push_str("  violation: ");
+            out.push_str(v);
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[derive(Debug, Default)]
+struct ReqState {
+    arrived: bool,
+    admitted: bool,
+    terminal: Option<&'static str>,
+    /// Retraction seen, resume still outstanding.
+    retracted: bool,
+    /// Checkpoint transfer underway (retracted and shipped).
+    in_transfer: bool,
+    last_t: f64,
+}
+
+#[derive(Debug, Default, Clone, Copy)]
+struct EpochMarks {
+    frozen: Option<f64>,
+    solve_start: Option<f64>,
+    solve_done: Option<f64>,
+    done: Option<f64>,
+}
+
+/// Validate a trace; ids are not required to be dense.
+pub fn audit(events: &[TraceEvent]) -> AuditReport {
+    audit_impl(events, None)
+}
+
+/// Validate a trace that should cover exactly the requests `0..n`.
+pub fn audit_expecting(events: &[TraceEvent], n: usize) -> AuditReport {
+    audit_impl(events, Some(n))
+}
+
+fn audit_impl(events: &[TraceEvent], expect_n: Option<usize>) -> AuditReport {
+    let mut report = AuditReport { events: events.len(), ..Default::default() };
+    let mut reqs: BTreeMap<usize, ReqState> = BTreeMap::new();
+    let mut epochs: BTreeMap<(usize, usize), EpochMarks> = BTreeMap::new();
+
+    for ev in events {
+        if !ev.t_s.is_finite() {
+            report.violations.push(format!(
+                "non-finite timestamp {} on {} (request {})",
+                ev.t_s,
+                ev.kind.name(),
+                ev.request
+            ));
+            continue;
+        }
+        if ev.request == NO_REQUEST {
+            audit_epoch_event(ev, &mut epochs, &mut report.violations);
+            continue;
+        }
+        let id = ev.request;
+        let first = !reqs.contains_key(&id);
+        let st = reqs.entry(id).or_default();
+        if first {
+            st.last_t = ev.t_s;
+            if ev.kind != EventKind::Arrived {
+                report.violations.push(format!(
+                    "request {id}: first event is {}, not arrived",
+                    ev.kind.name()
+                ));
+            }
+        }
+        // `Lost` mirrors the engine's resolution instant, which is the
+        // request's absolute deadline and may precede already-emitted
+        // events (see the module doc) — exempt it from monotonicity.
+        if ev.t_s < st.last_t && ev.kind != EventKind::Lost {
+            report.violations.push(format!(
+                "request {id}: timestamps not monotone ({} at {} after {})",
+                ev.kind.name(),
+                ev.t_s,
+                st.last_t
+            ));
+        }
+        st.last_t = st.last_t.max(ev.t_s);
+        if let Some(term) = st.terminal {
+            report.violations.push(format!(
+                "request {id}: {} after terminal {term}",
+                ev.kind.name()
+            ));
+            continue;
+        }
+        match ev.kind {
+            EventKind::Arrived => {
+                if st.arrived {
+                    report.violations.push(format!("request {id}: duplicate arrival"));
+                }
+                st.arrived = true;
+            }
+            EventKind::Routed { .. } => {
+                if !st.arrived {
+                    report.violations.push(format!("request {id}: routed before arrival"));
+                }
+            }
+            EventKind::Admitted { .. } => {
+                if !st.arrived {
+                    report.violations.push(format!("request {id}: admitted before arrival"));
+                }
+                st.admitted = true;
+            }
+            EventKind::RetractedByDeath { .. } => {
+                if !st.admitted {
+                    report.violations.push(format!("request {id}: retracted but never admitted"));
+                }
+                if st.retracted {
+                    report.violations.push(format!("request {id}: double retraction"));
+                }
+                st.retracted = true;
+                st.in_transfer = false;
+            }
+            EventKind::TransferStart => {
+                if !st.retracted {
+                    report.violations.push(format!("request {id}: transfer without retraction"));
+                }
+                if st.in_transfer {
+                    report.violations.push(format!("request {id}: double transfer start"));
+                }
+                st.in_transfer = true;
+            }
+            EventKind::Resumed { .. } => {
+                if !st.retracted {
+                    report.violations.push(format!("request {id}: resumed without retraction"));
+                }
+                st.retracted = false;
+                st.in_transfer = false;
+            }
+            EventKind::Delivered { .. } => {
+                if !st.admitted {
+                    report.violations.push(format!("request {id}: delivered but never admitted"));
+                }
+                st.terminal = Some("delivered");
+            }
+            EventKind::Rejected => st.terminal = Some("rejected"),
+            EventKind::Expired => st.terminal = Some("expired"),
+            EventKind::Lost => st.terminal = Some("lost"),
+            EventKind::EpochFrozen { .. }
+            | EventKind::SolveStart { .. }
+            | EventKind::SolveDone { .. }
+            | EventKind::BatchStart { .. }
+            | EventKind::EpochDone { .. } => {
+                report.violations.push(format!(
+                    "request {id}: epoch-scope event {} carries a request id",
+                    ev.kind.name()
+                ));
+            }
+        }
+    }
+
+    report.requests = reqs.len();
+    for (id, st) in &reqs {
+        if st.terminal.is_none() {
+            report.violations.push(format!("request {id}: no terminal disposition"));
+        }
+    }
+    if let Some(n) = expect_n {
+        if reqs.len() != n {
+            report.violations.push(format!(
+                "id conservation: expected {n} requests, traced {}",
+                reqs.len()
+            ));
+        }
+        if let Some((&max_id, _)) = reqs.iter().next_back() {
+            if max_id >= n {
+                report.violations.push(format!(
+                    "id conservation: request id {max_id} outside expected 0..{n}"
+                ));
+            }
+        }
+    }
+    audit_epoch_order(&epochs, &mut report.violations);
+    report
+}
+
+fn audit_epoch_event(
+    ev: &TraceEvent,
+    epochs: &mut BTreeMap<(usize, usize), EpochMarks>,
+    violations: &mut Vec<String>,
+) {
+    let (epoch, which) = match ev.kind {
+        EventKind::EpochFrozen { epoch } => (epoch, "epoch_frozen"),
+        EventKind::SolveStart { epoch } => (epoch, "solve_start"),
+        EventKind::SolveDone { epoch } => (epoch, "solve_done"),
+        EventKind::EpochDone { epoch } => (epoch, "epoch_done"),
+        // Batch slices carry no epoch id; their containment is visible
+        // in the perfetto view but not re-derivable here.
+        EventKind::BatchStart { .. } => return,
+        _ => {
+            violations.push(format!(
+                "{} carries the epoch sentinel but is a request event",
+                ev.kind.name()
+            ));
+            return;
+        }
+    };
+    let m = epochs.entry((ev.server, epoch)).or_default();
+    let slot = match which {
+        "epoch_frozen" => &mut m.frozen,
+        "solve_start" => &mut m.solve_start,
+        "solve_done" => &mut m.solve_done,
+        _ => &mut m.done,
+    };
+    if slot.replace(ev.t_s).is_some() {
+        violations.push(format!("server {} epoch {epoch}: duplicate {which}", ev.server));
+    }
+}
+
+fn audit_epoch_order(epochs: &BTreeMap<(usize, usize), EpochMarks>, violations: &mut Vec<String>) {
+    let mut prev: Option<(usize, f64)> = None; // (server, last frozen t)
+    for (&(server, epoch), m) in epochs {
+        if let (Some(f), Some(s)) = (m.frozen, m.solve_start) {
+            if s < f {
+                violations.push(format!(
+                    "server {server} epoch {epoch}: solve starts before freeze"
+                ));
+            }
+        }
+        if let (Some(s), Some(d)) = (m.solve_start, m.solve_done) {
+            if d < s {
+                violations.push(format!("server {server} epoch {epoch}: solve done before start"));
+            }
+        }
+        if let (Some(d), Some(e)) = (m.solve_done, m.done) {
+            if e < d {
+                violations.push(format!(
+                    "server {server} epoch {epoch}: drained before solve done"
+                ));
+            }
+        }
+        if let Some(f) = m.frozen {
+            if let Some((ps, pf)) = prev {
+                if ps == server && f < pf {
+                    violations.push(format!(
+                        "server {server} epoch {epoch}: freezes out of order ({f} after {pf})"
+                    ));
+                }
+            }
+            prev = Some((server, f));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(t_s: f64, request: usize, kind: EventKind) -> TraceEvent {
+        TraceEvent { t_s, server: 0, request, kind }
+    }
+
+    fn epoch_ev(t_s: f64, kind: EventKind) -> TraceEvent {
+        TraceEvent { t_s, server: 0, request: NO_REQUEST, kind }
+    }
+
+    fn good_trace() -> Vec<TraceEvent> {
+        vec![
+            ev(0.0, 0, EventKind::Arrived),
+            ev(0.0, 0, EventKind::Routed { server: 0, score: 1.0 }),
+            ev(0.4, 1, EventKind::Arrived),
+            epoch_ev(1.0, EventKind::EpochFrozen { epoch: 0 }),
+            epoch_ev(1.0, EventKind::SolveStart { epoch: 0 }),
+            epoch_ev(1.2, EventKind::SolveDone { epoch: 0 }),
+            ev(1.2, 0, EventKind::Admitted { epoch: 0 }),
+            ev(1.2, 1, EventKind::Rejected),
+            epoch_ev(1.2, EventKind::BatchStart { bucket: 1, steps: 10 }),
+            epoch_ev(2.0, EventKind::EpochDone { epoch: 0 }),
+            ev(2.5, 0, EventKind::Delivered { steps: 10 }),
+        ]
+    }
+
+    #[test]
+    fn clean_lifecycle_passes() {
+        let report = audit(&good_trace());
+        assert!(report.is_clean(), "{:?}", report.violations);
+        assert_eq!(report.requests, 2);
+        assert!(audit_expecting(&good_trace(), 2).is_clean());
+    }
+
+    #[test]
+    fn checkpoint_lifecycle_passes() {
+        let trace = vec![
+            ev(0.0, 0, EventKind::Arrived),
+            ev(0.0, 0, EventKind::Routed { server: 1, score: 0.0 }),
+            ev(1.0, 0, EventKind::Admitted { epoch: 0 }),
+            ev(1.5, 0, EventKind::RetractedByDeath { done_steps: 3 }),
+            ev(1.5, 0, EventKind::TransferStart),
+            ev(2.0, 0, EventKind::Resumed { server: 0 }),
+            ev(2.0, 0, EventKind::Routed { server: 0, score: 0.0 }),
+            ev(2.5, 0, EventKind::Admitted { epoch: 1 }),
+            ev(3.0, 0, EventKind::Delivered { steps: 10 }),
+        ];
+        let report = audit(&trace);
+        assert!(report.is_clean(), "{:?}", report.violations);
+    }
+
+    #[test]
+    fn flags_missing_arrival() {
+        let trace = vec![
+            ev(1.0, 4, EventKind::Admitted { epoch: 0 }),
+            ev(2.0, 4, EventKind::Delivered { steps: 1 }),
+        ];
+        let report = audit(&trace);
+        assert!(report.violations.iter().any(|v| v.contains("first event")), "{report:?}");
+    }
+
+    #[test]
+    fn flags_double_terminal_and_events_after() {
+        let trace = vec![
+            ev(0.0, 0, EventKind::Arrived),
+            ev(1.0, 0, EventKind::Admitted { epoch: 0 }),
+            ev(2.0, 0, EventKind::Delivered { steps: 5 }),
+            ev(3.0, 0, EventKind::Expired),
+        ];
+        let report = audit(&trace);
+        assert!(report.violations.iter().any(|v| v.contains("after terminal")), "{report:?}");
+    }
+
+    #[test]
+    fn flags_resume_without_retraction() {
+        let trace = vec![
+            ev(0.0, 0, EventKind::Arrived),
+            ev(1.0, 0, EventKind::Resumed { server: 1 }),
+            ev(2.0, 0, EventKind::Lost),
+        ];
+        let report = audit(&trace);
+        assert!(report.violations.iter().any(|v| v.contains("resumed without")), "{report:?}");
+    }
+
+    #[test]
+    fn backdated_lost_is_exempt_from_monotonicity() {
+        // A parked request expires at its deadline (3.0) but the engine
+        // only discovers it at the next recovery (5.0), after having
+        // re-routed it — the Lost stamp legally precedes the Routed one.
+        let trace = vec![
+            ev(0.0, 0, EventKind::Arrived),
+            ev(1.0, 0, EventKind::Admitted { epoch: 0 }),
+            ev(2.0, 0, EventKind::RetractedByDeath { done_steps: 0 }),
+            ev(5.0, 0, EventKind::Routed { server: 1, score: 0.0 }),
+            ev(3.0, 0, EventKind::Lost),
+        ];
+        let report = audit(&trace);
+        assert!(report.is_clean(), "{:?}", report.violations);
+    }
+
+    #[test]
+    fn flags_non_monotone_timestamps() {
+        let trace = vec![
+            ev(5.0, 0, EventKind::Arrived),
+            ev(4.0, 0, EventKind::Admitted { epoch: 0 }),
+            ev(6.0, 0, EventKind::Delivered { steps: 1 }),
+        ];
+        let report = audit(&trace);
+        assert!(report.violations.iter().any(|v| v.contains("monotone")), "{report:?}");
+    }
+
+    #[test]
+    fn flags_missing_terminal_and_id_conservation() {
+        let trace = vec![ev(0.0, 0, EventKind::Arrived)];
+        let report = audit(&trace);
+        assert!(report.violations.iter().any(|v| v.contains("no terminal")), "{report:?}");
+        let report = audit_expecting(&good_trace(), 3);
+        assert!(report.violations.iter().any(|v| v.contains("id conservation")), "{report:?}");
+    }
+
+    #[test]
+    fn flags_epoch_order_breaches() {
+        let trace = vec![
+            epoch_ev(2.0, EventKind::EpochFrozen { epoch: 0 }),
+            epoch_ev(1.0, EventKind::SolveStart { epoch: 0 }),
+            epoch_ev(3.0, EventKind::SolveDone { epoch: 0 }),
+        ];
+        let report = audit(&trace);
+        assert!(report.violations.iter().any(|v| v.contains("before freeze")), "{report:?}");
+        let trace = vec![
+            epoch_ev(2.0, EventKind::EpochFrozen { epoch: 0 }),
+            epoch_ev(1.0, EventKind::EpochFrozen { epoch: 1 }),
+        ];
+        let report = audit(&trace);
+        assert!(report.violations.iter().any(|v| v.contains("out of order")), "{report:?}");
+    }
+
+    #[test]
+    fn render_mentions_counts() {
+        let report = audit(&good_trace());
+        let text = report.render();
+        assert!(text.contains("2 requests"), "{text}");
+        assert!(text.contains("0 violation"), "{text}");
+    }
+}

@@ -1,0 +1,304 @@
+//! Flight recorder: deterministic lifecycle tracing for all three
+//! engines (`sim::dynamic`, `sim::cluster`, `sim::event`).
+//!
+//! Every state transition a request goes through — arrival, routing,
+//! epoch freeze, admission or drop, solve, batch execution, delivery,
+//! fault retraction, checkpoint transfer, resume — is emitted as a
+//! typed, sim-clock-stamped [`TraceEvent`] into a [`TraceSink`]. The
+//! default sink is [`NullSink`], a no-op: engines call it with values
+//! they already computed, so the traced and untraced paths execute the
+//! same float operations in the same order and outputs stay bitwise
+//! identical (gated by `benches/obs_overhead.rs`).
+//!
+//! On top of the raw stream:
+//! * [`span`] — a compact columnar binary span format (same framing
+//!   discipline as `trace::columnar`), written by `--trace-spans`;
+//! * [`perfetto`] — a Chrome-trace-event JSON exporter (servers as
+//!   tracks, epochs as nested spans, per-request flow arrows);
+//! * [`audit`] — a lifecycle-DFA validator doubling as a correctness
+//!   harness (`tests/obs_audit.rs` drives it over random traces ×
+//!   routers × fault scripts × migration policies);
+//! * [`telemetry`] — derived per-server time series (queue depth,
+//!   GPU-busy, solve overlap, bandwidth share) over
+//!   `metrics::window::WindowedSeries`.
+
+pub mod audit;
+pub mod perfetto;
+pub mod span;
+pub mod telemetry;
+
+/// Sentinel request id for epoch-scope events (freeze, solve, batch):
+/// they belong to a server timeline, not to any single request.
+pub const NO_REQUEST: usize = usize::MAX;
+
+/// What happened. Payload fields carry only values the engine had
+/// already computed at the emission site — recording must never force
+/// extra work on the hot path.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum EventKind {
+    /// Request entered the system (trace timestamp `t_s`).
+    Arrived,
+    /// Router picked a server; `score` is the router's figure of merit
+    /// for the choice (0 for routers that don't score, e.g. RR).
+    Routed { server: usize, score: f64 },
+    /// Request made it into a frozen epoch's admitted set.
+    Admitted { epoch: usize },
+    /// Dropped at admission: residual deadline below the service floor.
+    Rejected,
+    /// Dropped at admission: deadline already passed while queued.
+    Expired,
+    /// Epoch closed its arrival window and handed off to the solver.
+    EpochFrozen { epoch: usize },
+    /// Joint (P0) solve for the epoch began.
+    SolveStart { epoch: usize },
+    /// Joint (P0) solve for the epoch finished.
+    SolveDone { epoch: usize },
+    /// A batch bucket started executing on the GPU.
+    BatchStart { bucket: usize, steps: usize },
+    /// Epoch's GPU execution drained (the instant `gpu_free` advances to).
+    EpochDone { epoch: usize },
+    /// Request delivered to the user (end of transmission).
+    Delivered { steps: usize },
+    /// Request lost to a failure with no recovery path.
+    Lost,
+    /// In-flight request pulled back from a dying server's executing
+    /// batch; `done_steps` were salvaged at the last step boundary.
+    RetractedByDeath { done_steps: usize },
+    /// Checkpoint latent transfer to a new server began.
+    TransferStart,
+    /// Checkpointed request re-entered service on `server`.
+    Resumed { server: usize },
+}
+
+impl EventKind {
+    /// Stable wire code for the span format. Append-only: codes are
+    /// persisted in span files and must never be renumbered.
+    pub fn code(self) -> u32 {
+        match self {
+            EventKind::Arrived => 0,
+            EventKind::Routed { .. } => 1,
+            EventKind::Admitted { .. } => 2,
+            EventKind::Rejected => 3,
+            EventKind::Expired => 4,
+            EventKind::EpochFrozen { .. } => 5,
+            EventKind::SolveStart { .. } => 6,
+            EventKind::SolveDone { .. } => 7,
+            EventKind::BatchStart { .. } => 8,
+            EventKind::EpochDone { .. } => 9,
+            EventKind::Delivered { .. } => 10,
+            EventKind::Lost => 11,
+            EventKind::RetractedByDeath { .. } => 12,
+            EventKind::TransferStart => 13,
+            EventKind::Resumed { .. } => 14,
+        }
+    }
+
+    /// Human-readable tag (span summaries, audit messages).
+    pub fn name(self) -> &'static str {
+        match self {
+            EventKind::Arrived => "arrived",
+            EventKind::Routed { .. } => "routed",
+            EventKind::Admitted { .. } => "admitted",
+            EventKind::Rejected => "rejected",
+            EventKind::Expired => "expired",
+            EventKind::EpochFrozen { .. } => "epoch_frozen",
+            EventKind::SolveStart { .. } => "solve_start",
+            EventKind::SolveDone { .. } => "solve_done",
+            EventKind::BatchStart { .. } => "batch_start",
+            EventKind::EpochDone { .. } => "epoch_done",
+            EventKind::Delivered { .. } => "delivered",
+            EventKind::Lost => "lost",
+            EventKind::RetractedByDeath { .. } => "retracted_by_death",
+            EventKind::TransferStart => "transfer_start",
+            EventKind::Resumed { .. } => "resumed",
+        }
+    }
+
+    /// Terminal dispositions: after one of these a request id must
+    /// never appear again (audited).
+    pub fn is_terminal(self) -> bool {
+        match self {
+            EventKind::Delivered { .. } => true,
+            EventKind::Rejected | EventKind::Expired | EventKind::Lost => true,
+            _ => false,
+        }
+    }
+}
+
+/// One lifecycle event. `t_s` is the sim clock (never wall clock), so
+/// traces replay bit-identically across runs. `server` is the fleet
+/// index (0 for the single-server dynamic engine until a cluster merge
+/// remaps it); `request` is the global request id, or [`NO_REQUEST`]
+/// for epoch-scope events.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TraceEvent {
+    pub t_s: f64,
+    pub server: usize,
+    pub request: usize,
+    pub kind: EventKind,
+}
+
+/// Receiver for lifecycle events. Implementations only observe — they
+/// must never influence the serving loop (same contract as
+/// `sim::dynamic::OutcomeSink`).
+pub trait TraceSink {
+    fn record(&mut self, ev: TraceEvent);
+
+    /// `false` for [`NullSink`]: lets emission sites skip loops whose
+    /// only purpose is building events (e.g. per-batch coalescing).
+    /// Single-event sites call [`emit`](Self::emit) unconditionally —
+    /// the payloads are values the engine already had.
+    fn enabled(&self) -> bool {
+        true
+    }
+
+    /// Build and record an event in one call — the form every engine
+    /// emission site uses.
+    fn emit(&mut self, t_s: f64, server: usize, request: usize, kind: EventKind) {
+        self.record(TraceEvent { t_s, server, request, kind });
+    }
+}
+
+/// The default sink: discards everything. With this sink the traced
+/// entry points are observationally identical to the untraced ones.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct NullSink;
+
+impl TraceSink for NullSink {
+    #[inline]
+    fn record(&mut self, _ev: TraceEvent) {}
+
+    #[inline]
+    fn enabled(&self) -> bool {
+        false
+    }
+}
+
+/// In-memory capture, in emission order.
+#[derive(Debug, Default, Clone)]
+pub struct Recorder {
+    pub events: Vec<TraceEvent>,
+}
+
+impl Recorder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Stable time sort. Emission order is deterministic but not
+    /// globally time-sorted (an epoch's `Delivered` stamps lie in the
+    /// future of the commit instant; per-server streams interleave) —
+    /// exporters sort first so timelines read left-to-right. Stability
+    /// preserves the deterministic emission order within a tie.
+    pub fn sort_by_time(&mut self) {
+        self.events.sort_by(|a, b| a.t_s.partial_cmp(&b.t_s).unwrap());
+    }
+}
+
+impl TraceSink for Recorder {
+    fn record(&mut self, ev: TraceEvent) {
+        self.events.push(ev);
+    }
+}
+
+/// Rewrite a per-server capture into fleet coordinates: `server`
+/// replaces the placeholder index and request ids map through
+/// `id_map` (sub-trace id → global id). Epoch-scope events keep
+/// [`NO_REQUEST`]. Used by the cluster engine's merge.
+pub fn remap(events: &mut [TraceEvent], server: usize, id_map: &[usize]) {
+    for ev in events.iter_mut() {
+        ev.server = server;
+        if ev.request != NO_REQUEST {
+            ev.request = id_map[ev.request];
+        }
+        if let EventKind::Routed { server: s, .. } = &mut ev.kind {
+            *s = server;
+        }
+        if let EventKind::Resumed { server: s } = &mut ev.kind {
+            *s = server;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn null_sink_reports_disabled() {
+        let mut s = NullSink;
+        assert!(!s.enabled());
+        s.record(TraceEvent { t_s: 1.0, server: 0, request: 0, kind: EventKind::Arrived });
+    }
+
+    #[test]
+    fn recorder_captures_in_order() {
+        let mut r = Recorder::new();
+        for i in 0..4 {
+            r.record(TraceEvent {
+                t_s: 4.0 - i as f64,
+                server: 0,
+                request: i,
+                kind: EventKind::Arrived,
+            });
+        }
+        assert_eq!(r.events.len(), 4);
+        assert_eq!(r.events[0].t_s, 4.0);
+        r.sort_by_time();
+        assert_eq!(r.events[0].t_s, 1.0);
+        assert_eq!(r.events[3].t_s, 4.0);
+    }
+
+    #[test]
+    fn codes_are_distinct_and_stable() {
+        let kinds = [
+            EventKind::Arrived,
+            EventKind::Routed { server: 0, score: 0.0 },
+            EventKind::Admitted { epoch: 0 },
+            EventKind::Rejected,
+            EventKind::Expired,
+            EventKind::EpochFrozen { epoch: 0 },
+            EventKind::SolveStart { epoch: 0 },
+            EventKind::SolveDone { epoch: 0 },
+            EventKind::BatchStart { bucket: 0, steps: 0 },
+            EventKind::EpochDone { epoch: 0 },
+            EventKind::Delivered { steps: 0 },
+            EventKind::Lost,
+            EventKind::RetractedByDeath { done_steps: 0 },
+            EventKind::TransferStart,
+            EventKind::Resumed { server: 0 },
+        ];
+        let codes: Vec<u32> = kinds.iter().map(|k| k.code()).collect();
+        let mut sorted = codes.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), kinds.len(), "codes must be unique");
+        assert_eq!(codes, (0..kinds.len() as u32).collect::<Vec<_>>(), "codes are dense");
+    }
+
+    #[test]
+    fn remap_rewrites_ids_and_server() {
+        let mut events = vec![
+            TraceEvent { t_s: 0.0, server: 0, request: 0, kind: EventKind::Arrived },
+            TraceEvent {
+                t_s: 0.0,
+                server: 0,
+                request: 1,
+                kind: EventKind::Routed { server: 0, score: 2.5 },
+            },
+            TraceEvent {
+                t_s: 1.0,
+                server: 0,
+                request: NO_REQUEST,
+                kind: EventKind::EpochFrozen { epoch: 0 },
+            },
+        ];
+        remap(&mut events, 3, &[7, 9]);
+        assert_eq!(events[0].request, 7);
+        assert_eq!(events[0].server, 3);
+        assert_eq!(events[1].request, 9);
+        assert_eq!(events[1].kind, EventKind::Routed { server: 3, score: 2.5 });
+        assert_eq!(events[2].request, NO_REQUEST, "epoch events keep the sentinel");
+        assert_eq!(events[2].server, 3);
+    }
+}

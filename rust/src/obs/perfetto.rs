@@ -1,0 +1,211 @@
+//! Chrome-trace-event JSON exporter: load the output in Perfetto
+//! (ui.perfetto.dev) or `chrome://tracing`.
+//!
+//! Layout: one process per server. Thread 0 carries the epoch spans
+//! with their batch slices nested inside, thread 1 the (P0) solve
+//! spans (so pipelined solves visibly overlap the previous epoch's
+//! execution), thread 2 zero-duration per-request anchors joined by
+//! flow arrows route → admit → deliver — a request's hops across
+//! servers (checkpoint migration) show up as arrows between tracks.
+//!
+//! Timestamps are sim-clock seconds scaled to microseconds. The export
+//! is a pure function of the event stream, so a deterministic trace
+//! exports bit-identically across runs (asserted in
+//! `benches/obs_overhead.rs`).
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use crate::obs::{EventKind, TraceEvent, NO_REQUEST};
+
+/// Sim seconds → trace microseconds.
+const US: f64 = 1e6;
+
+fn x_line(pid: usize, tid: usize, ts: f64, dur: f64, name: &str) -> String {
+    format!(
+        "{{\"ph\":\"X\",\"pid\":{pid},\"tid\":{tid},\"ts\":{},\"dur\":{},\"name\":\"{name}\"}}",
+        ts * US,
+        dur * US
+    )
+}
+
+fn flow_line(ph: char, pid: usize, tid: usize, ts: f64, id: usize, last: bool) -> String {
+    let bp = if last { ",\"bp\":\"e\"" } else { "" };
+    format!(
+        "{{\"ph\":\"{ph}\",\"pid\":{pid},\"tid\":{tid},\"ts\":{},\"id\":{id},\
+         \"cat\":\"req\",\"name\":\"r{id}\"{bp}}}",
+        ts * US
+    )
+}
+
+fn meta_process(pid: usize) -> String {
+    format!(
+        "{{\"ph\":\"M\",\"pid\":{pid},\"name\":\"process_name\",\
+         \"args\":{{\"name\":\"server {pid}\"}}}}"
+    )
+}
+
+fn meta_thread(pid: usize, tid: usize, name: &str) -> String {
+    format!(
+        "{{\"ph\":\"M\",\"pid\":{pid},\"tid\":{tid},\"name\":\"thread_name\",\
+         \"args\":{{\"name\":\"{name}\"}}}}"
+    )
+}
+
+/// Render a flight-recorder stream as Chrome trace-event JSON.
+pub fn export(events: &[TraceEvent]) -> String {
+    let mut evs: Vec<TraceEvent> = events.to_vec();
+    evs.sort_by(|a, b| a.t_s.partial_cmp(&b.t_s).unwrap());
+
+    let mut servers: BTreeSet<usize> = BTreeSet::new();
+    // (server, epoch) -> [frozen, solve_start, solve_done, drained]
+    let mut epochs: BTreeMap<(usize, usize), [Option<f64>; 4]> = BTreeMap::new();
+    let mut batches: BTreeMap<usize, Vec<(f64, usize, usize)>> = BTreeMap::new();
+    let mut drains: BTreeMap<usize, Vec<f64>> = BTreeMap::new();
+    let mut requests: BTreeMap<usize, Vec<TraceEvent>> = BTreeMap::new();
+
+    for ev in &evs {
+        servers.insert(ev.server);
+        if let EventKind::Routed { server, .. } = ev.kind {
+            servers.insert(server);
+        }
+        if ev.request != NO_REQUEST {
+            requests.entry(ev.request).or_default().push(*ev);
+            continue;
+        }
+        match ev.kind {
+            EventKind::EpochFrozen { epoch } => {
+                epochs.entry((ev.server, epoch)).or_default()[0] = Some(ev.t_s);
+            }
+            EventKind::SolveStart { epoch } => {
+                epochs.entry((ev.server, epoch)).or_default()[1] = Some(ev.t_s);
+            }
+            EventKind::SolveDone { epoch } => {
+                epochs.entry((ev.server, epoch)).or_default()[2] = Some(ev.t_s);
+            }
+            EventKind::EpochDone { epoch } => {
+                epochs.entry((ev.server, epoch)).or_default()[3] = Some(ev.t_s);
+                drains.entry(ev.server).or_default().push(ev.t_s);
+            }
+            EventKind::BatchStart { bucket, steps } => {
+                batches.entry(ev.server).or_default().push((ev.t_s, bucket, steps));
+            }
+            _ => {}
+        }
+    }
+
+    let mut lines: Vec<String> = Vec::new();
+    for &s in &servers {
+        lines.push(meta_process(s));
+        lines.push(meta_thread(s, 0, "epochs"));
+        lines.push(meta_thread(s, 1, "solve"));
+        lines.push(meta_thread(s, 2, "requests"));
+    }
+    for (&(s, e), marks) in &epochs {
+        if let (Some(frozen), Some(done)) = (marks[0], marks[3]) {
+            lines.push(x_line(s, 0, frozen, done - frozen, &format!("epoch {e}")));
+        }
+        if let (Some(start), Some(done)) = (marks[1], marks[2]) {
+            lines.push(x_line(s, 1, start, done - start, &format!("solve {e}")));
+        }
+    }
+    for (&s, list) in &batches {
+        let empty = Vec::new();
+        let server_drains = drains.get(&s).unwrap_or(&empty);
+        for (i, &(t, bucket, steps)) in list.iter().enumerate() {
+            let next_batch = list.get(i + 1).map(|&(nt, _, _)| nt).unwrap_or(f64::INFINITY);
+            let next_drain =
+                server_drains.iter().copied().find(|&d| d >= t).unwrap_or(f64::INFINITY);
+            let end = next_batch.min(next_drain);
+            let dur = if end.is_finite() { end - t } else { 0.0 };
+            lines.push(x_line(s, 0, t, dur, &format!("batch b{bucket} {steps} steps")));
+        }
+    }
+    for (&r, list) in &requests {
+        let last = list.len() - 1;
+        for (i, ev) in list.iter().enumerate() {
+            let name = format!("{} r{r}", ev.kind.name());
+            lines.push(x_line(ev.server, 2, ev.t_s, 0.0, &name));
+            if list.len() >= 2 {
+                let ph = match i {
+                    0 => 's',
+                    _ if i == last => 'f',
+                    _ => 't',
+                };
+                lines.push(flow_line(ph, ev.server, 2, ev.t_s, r, i == last));
+            }
+        }
+    }
+
+    let mut out = String::from("{\"traceEvents\":[\n");
+    out.push_str(&lines.join(",\n"));
+    out.push_str("\n],\"displayTimeUnit\":\"ms\"}\n");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json;
+
+    fn ev(t_s: f64, server: usize, request: usize, kind: EventKind) -> TraceEvent {
+        TraceEvent { t_s, server, request, kind }
+    }
+
+    fn epoch_ev(t_s: f64, server: usize, kind: EventKind) -> TraceEvent {
+        TraceEvent { t_s, server, request: NO_REQUEST, kind }
+    }
+
+    fn sample() -> Vec<TraceEvent> {
+        vec![
+            ev(0.0, 1, 0, EventKind::Arrived),
+            ev(0.0, 1, 0, EventKind::Routed { server: 1, score: 0.25 }),
+            epoch_ev(0.5, 1, EventKind::EpochFrozen { epoch: 0 }),
+            epoch_ev(0.5, 1, EventKind::SolveStart { epoch: 0 }),
+            epoch_ev(0.6, 1, EventKind::SolveDone { epoch: 0 }),
+            ev(0.6, 1, 0, EventKind::Admitted { epoch: 0 }),
+            epoch_ev(0.6, 1, EventKind::BatchStart { bucket: 1, steps: 8 }),
+            epoch_ev(1.4, 1, EventKind::EpochDone { epoch: 0 }),
+            ev(1.8, 1, 0, EventKind::Delivered { steps: 8 }),
+        ]
+    }
+
+    #[test]
+    fn export_is_valid_json() {
+        let text = export(&sample());
+        let doc = json::parse(&text).expect("perfetto export must parse as JSON");
+        let evs = doc.get("traceEvents").and_then(|v| v.as_arr()).expect("traceEvents array");
+        assert!(evs.len() > 8, "expected metadata + slices, got {}", evs.len());
+        // Every entry has a phase tag.
+        for e in evs {
+            assert!(e.get("ph").and_then(|p| p.as_str()).is_some(), "{e:?}");
+        }
+    }
+
+    #[test]
+    fn export_is_deterministic_and_scaled() {
+        let a = export(&sample());
+        let b = export(&sample());
+        assert_eq!(a, b);
+        // 0.6 s SolveDone ⇒ 600000 µs appears as a number.
+        assert!(a.contains("600000"), "{a}");
+        assert!(a.contains("\"name\":\"epoch 0\""), "{a}");
+        assert!(a.contains("\"name\":\"solve 0\""), "{a}");
+        assert!(a.contains("batch b1 8 steps"), "{a}");
+    }
+
+    #[test]
+    fn flow_arrows_span_route_to_delivery() {
+        let text = export(&sample());
+        assert!(text.contains("\"ph\":\"s\""), "flow start missing: {text}");
+        assert!(text.contains("\"ph\":\"t\""), "flow step missing: {text}");
+        assert!(text.contains("\"ph\":\"f\""), "flow finish missing: {text}");
+        assert!(text.contains("\"name\":\"r0\""), "{text}");
+    }
+
+    #[test]
+    fn empty_trace_exports_empty_array() {
+        let text = export(&[]);
+        let doc = json::parse(&text).unwrap();
+        assert_eq!(doc.get("traceEvents").and_then(|v| v.as_arr()).map(|a| a.len()), Some(0));
+    }
+}

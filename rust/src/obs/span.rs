@@ -1,0 +1,283 @@
+//! Compact columnar binary span format for flight-recorder traces.
+//!
+//! Same framing discipline as `trace::columnar` (magic, version,
+//! chunked column-major frames, little-endian fixed-width fields, f64
+//! bit patterns preserved exactly):
+//!
+//! ```text
+//! [magic 8B "AIGCSPN\0"] [version u32] [chunk_len u32] [count u64]
+//! repeated frames:
+//!   [n u32] [code u32 × n] [t_s f64 × n] [server u64 × n]
+//!   [request u64 × n] [payload_a f64 × n] [payload_b f64 × n]
+//! ```
+//!
+//! 44 bytes per event. Round-trips are bit-identical: every payload is
+//! either an exact small integer (epochs, buckets, steps, ids — far
+//! below 2^53) or a raw f64 (router scores) stored by bit pattern.
+//! This is what `--trace-spans <path>` writes and `aigc-edge trace`
+//! reads back.
+
+use anyhow::{bail, ensure, Result};
+
+use crate::obs::{EventKind, TraceEvent};
+use crate::trace::columnar::{push_f64, push_u32, push_u64, read_f64, read_u32, read_u64};
+
+const MAGIC: &[u8; 8] = b"AIGCSPN\0";
+const VERSION: u32 = 1;
+const HEADER_LEN: usize = 8 + 4 + 4 + 8;
+const ROW_LEN: usize = 4 + 8 + 8 + 8 + 8 + 8;
+/// Events per frame (~360 KiB of payload per frame).
+pub const DEFAULT_CHUNK_LEN: usize = 8192;
+
+/// The two generic payload slots an event's kind-specific fields are
+/// flattened into for the wire.
+fn payload(kind: EventKind) -> (f64, f64) {
+    match kind {
+        EventKind::Arrived
+        | EventKind::Rejected
+        | EventKind::Expired
+        | EventKind::Lost
+        | EventKind::TransferStart => (0.0, 0.0),
+        EventKind::Routed { server, score } => (server as f64, score),
+        EventKind::Admitted { epoch }
+        | EventKind::EpochFrozen { epoch }
+        | EventKind::SolveStart { epoch }
+        | EventKind::SolveDone { epoch }
+        | EventKind::EpochDone { epoch } => (epoch as f64, 0.0),
+        EventKind::BatchStart { bucket, steps } => (bucket as f64, steps as f64),
+        EventKind::Delivered { steps } => (steps as f64, 0.0),
+        EventKind::RetractedByDeath { done_steps } => (done_steps as f64, 0.0),
+        EventKind::Resumed { server } => (server as f64, 0.0),
+    }
+}
+
+fn rebuild(code: u32, a: f64, b: f64) -> Result<EventKind> {
+    Ok(match code {
+        0 => EventKind::Arrived,
+        1 => EventKind::Routed { server: a as usize, score: b },
+        2 => EventKind::Admitted { epoch: a as usize },
+        3 => EventKind::Rejected,
+        4 => EventKind::Expired,
+        5 => EventKind::EpochFrozen { epoch: a as usize },
+        6 => EventKind::SolveStart { epoch: a as usize },
+        7 => EventKind::SolveDone { epoch: a as usize },
+        8 => EventKind::BatchStart { bucket: a as usize, steps: b as usize },
+        9 => EventKind::EpochDone { epoch: a as usize },
+        10 => EventKind::Delivered { steps: a as usize },
+        11 => EventKind::Lost,
+        12 => EventKind::RetractedByDeath { done_steps: a as usize },
+        13 => EventKind::TransferStart,
+        14 => EventKind::Resumed { server: a as usize },
+        other => bail!("span trace: unknown event code {other}"),
+    })
+}
+
+/// Encode a span stream with the given chunk length (events per frame).
+pub fn encode_chunked(events: &[TraceEvent], chunk_len: usize) -> Vec<u8> {
+    assert!(chunk_len > 0, "chunk_len must be positive");
+    assert!(chunk_len <= u32::MAX as usize, "chunk_len {chunk_len} exceeds the u32 frame header");
+    let n = events.len();
+    let mut out = Vec::with_capacity(HEADER_LEN + n * ROW_LEN + (n / chunk_len + 1) * 4);
+    out.extend_from_slice(MAGIC);
+    push_u32(&mut out, VERSION);
+    push_u32(&mut out, chunk_len as u32);
+    push_u64(&mut out, n as u64);
+    for chunk in events.chunks(chunk_len) {
+        push_u32(&mut out, chunk.len() as u32);
+        for ev in chunk {
+            push_u32(&mut out, ev.kind.code());
+        }
+        for ev in chunk {
+            push_f64(&mut out, ev.t_s);
+        }
+        for ev in chunk {
+            push_u64(&mut out, ev.server as u64);
+        }
+        for ev in chunk {
+            push_u64(&mut out, ev.request as u64);
+        }
+        for ev in chunk {
+            push_f64(&mut out, payload(ev.kind).0);
+        }
+        for ev in chunk {
+            push_f64(&mut out, payload(ev.kind).1);
+        }
+    }
+    out
+}
+
+/// Encode with the default chunk length.
+pub fn encode(events: &[TraceEvent]) -> Vec<u8> {
+    encode_chunked(events, DEFAULT_CHUNK_LEN)
+}
+
+/// Decode a complete span stream.
+pub fn decode(bytes: &[u8]) -> Result<Vec<TraceEvent>> {
+    let mut pos = 0usize;
+    ensure!(bytes.len() >= HEADER_LEN, "span trace shorter than its header");
+    ensure!(&bytes[..8] == MAGIC, "not a span trace (bad magic)");
+    pos += 8;
+    let version = read_u32(bytes, &mut pos)?;
+    ensure!(version == VERSION, "unsupported span trace version {version}");
+    let chunk_len = read_u32(bytes, &mut pos)?;
+    ensure!(chunk_len > 0, "span trace declares zero chunk length");
+    let count = read_u64(bytes, &mut pos)? as usize;
+    let mut events = Vec::with_capacity(count);
+    while events.len() < count {
+        let n = read_u32(bytes, &mut pos)? as usize;
+        ensure!(n > 0, "span trace frame at byte {} is empty", pos - 4);
+        ensure!(events.len() + n <= count, "span trace frames exceed declared count {count}");
+        let base = pos;
+        let (codes_at, t_at) = (base, base + 4 * n);
+        let server_at = t_at + 8 * n;
+        let request_at = server_at + 8 * n;
+        let a_at = request_at + 8 * n;
+        let b_at = a_at + 8 * n;
+        for i in 0..n {
+            let mut p = codes_at + 4 * i;
+            let code = read_u32(bytes, &mut p)?;
+            let mut p = t_at + 8 * i;
+            let t_s = read_f64(bytes, &mut p)?;
+            let mut p = server_at + 8 * i;
+            let server = read_u64(bytes, &mut p)? as usize;
+            let mut p = request_at + 8 * i;
+            let request = read_u64(bytes, &mut p)? as usize;
+            let mut p = a_at + 8 * i;
+            let a = read_f64(bytes, &mut p)?;
+            let mut p = b_at + 8 * i;
+            let b = read_f64(bytes, &mut p)?;
+            if !t_s.is_finite() {
+                bail!("span trace: non-finite timestamp at event {}", events.len());
+            }
+            events.push(TraceEvent { t_s, server, request, kind: rebuild(code, a, b)? });
+        }
+        pos = b_at + 8 * n;
+    }
+    ensure!(pos == bytes.len(), "span trace has {} trailing bytes", bytes.len() - pos);
+    Ok(events)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::NO_REQUEST;
+
+    fn sample_events() -> Vec<TraceEvent> {
+        vec![
+            TraceEvent { t_s: 0.25, server: 0, request: 0, kind: EventKind::Arrived },
+            TraceEvent {
+                t_s: 0.25,
+                server: 2,
+                request: 0,
+                kind: EventKind::Routed { server: 2, score: -3.137_218_9e-2 },
+            },
+            TraceEvent {
+                t_s: 1.0,
+                server: 2,
+                request: NO_REQUEST,
+                kind: EventKind::EpochFrozen { epoch: 0 },
+            },
+            TraceEvent {
+                t_s: 1.0,
+                server: 2,
+                request: NO_REQUEST,
+                kind: EventKind::SolveStart { epoch: 0 },
+            },
+            TraceEvent {
+                t_s: 1.1,
+                server: 2,
+                request: NO_REQUEST,
+                kind: EventKind::SolveDone { epoch: 0 },
+            },
+            TraceEvent { t_s: 1.1, server: 2, request: 0, kind: EventKind::Admitted { epoch: 0 } },
+            TraceEvent {
+                t_s: 1.1,
+                server: 2,
+                request: NO_REQUEST,
+                kind: EventKind::BatchStart { bucket: 4, steps: 12 },
+            },
+            TraceEvent {
+                t_s: 1.9,
+                server: 2,
+                request: NO_REQUEST,
+                kind: EventKind::EpochDone { epoch: 0 },
+            },
+            TraceEvent {
+                t_s: 2.4,
+                server: 2,
+                request: 0,
+                kind: EventKind::Delivered { steps: 12 },
+            },
+            TraceEvent {
+                t_s: 3.0,
+                server: 1,
+                request: 5,
+                kind: EventKind::RetractedByDeath { done_steps: 7 },
+            },
+            TraceEvent { t_s: 3.0, server: 1, request: 5, kind: EventKind::TransferStart },
+            TraceEvent { t_s: 3.5, server: 0, request: 5, kind: EventKind::Resumed { server: 0 } },
+            TraceEvent { t_s: 4.0, server: 0, request: 6, kind: EventKind::Rejected },
+            TraceEvent { t_s: 4.0, server: 0, request: 7, kind: EventKind::Expired },
+            TraceEvent { t_s: 4.0, server: 0, request: 8, kind: EventKind::Lost },
+        ]
+    }
+
+    #[test]
+    fn roundtrip_preserves_every_kind_exactly() {
+        let events = sample_events();
+        let decoded = decode(&encode(&events)).unwrap();
+        assert_eq!(events, decoded);
+        // Score must be bit-exact, not just PartialEq-equal.
+        match (&events[1].kind, &decoded[1].kind) {
+            (EventKind::Routed { score: a, .. }, EventKind::Routed { score: b, .. }) => {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+            _ => panic!("kind mismatch"),
+        }
+    }
+
+    #[test]
+    fn chunk_length_does_not_change_payload() {
+        let events = sample_events();
+        for chunk_len in [1, 3, 7, 100_000] {
+            let decoded = decode(&encode_chunked(&events, chunk_len)).unwrap();
+            assert_eq!(events, decoded, "chunk_len={chunk_len}");
+        }
+    }
+
+    #[test]
+    fn empty_stream_roundtrips() {
+        let decoded = decode(&encode(&[])).unwrap();
+        assert!(decoded.is_empty());
+    }
+
+    #[test]
+    fn size_is_44_bytes_per_event_plus_overhead() {
+        let events = sample_events();
+        let bytes = encode(&events);
+        let overhead = bytes.len() - ROW_LEN * events.len();
+        assert!(overhead < 40, "overhead {overhead}");
+    }
+
+    #[test]
+    fn rejects_corrupt_inputs() {
+        let events = sample_events();
+        let good = encode(&events);
+        assert!(decode(&good[..10]).is_err(), "truncated header");
+        assert!(decode(&good[..good.len() - 5]).is_err(), "truncated frame");
+        let mut bad_magic = good.clone();
+        bad_magic[0] = b'X';
+        assert!(decode(&bad_magic).is_err(), "bad magic");
+        let mut bad_version = good.clone();
+        bad_version[8] = 99;
+        assert!(decode(&bad_version).is_err(), "bad version");
+        // The first code u32 lives right after the 24-byte header and
+        // the frame's n u32.
+        let mut bad_code = good.clone();
+        bad_code[28] = 200;
+        assert!(decode(&bad_code).is_err(), "unknown code");
+        let mut trailing = good.clone();
+        trailing.push(0);
+        assert!(decode(&trailing).is_err(), "trailing bytes");
+    }
+}

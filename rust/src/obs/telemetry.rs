@@ -1,0 +1,379 @@
+//! Derived live telemetry: replay a flight-recorder stream into
+//! per-server sliding-window time series.
+//!
+//! Nothing here touches the engines — the series are derived entirely
+//! from the [`TraceEvent`] stream, sampled at event boundaries:
+//!
+//! * **queue depth** — one sample per enqueue/dequeue transition;
+//! * **GPU-busy fraction** — one sample per epoch drain (busy time
+//!   accumulated from batch slices over the inter-drain span);
+//! * **solve overlap** — per solve, the portion of the solve span that
+//!   ran while the GPU was executing batches (the pipeline's hidden
+//!   time), as total/hidden series like
+//!   `metrics::window::ServiceWindows`;
+//! * **bandwidth share** — per-server delivered-request counts, so a
+//!   server's share of the fleet's transmission work is a windowed
+//!   ratio.
+//!
+//! The CLI (`--trace-spans`, `aigc-edge trace`) and the TCP server's
+//! STATS reply both surface [`FleetTelemetry::summary`].
+
+use std::collections::BTreeMap;
+
+use crate::metrics::window::WindowedSeries;
+use crate::obs::{EventKind, TraceEvent, NO_REQUEST};
+
+/// Windowed series for one server's timeline.
+#[derive(Debug, Clone)]
+pub struct ServerTelemetry {
+    /// Queue depth sampled at every enqueue/dequeue boundary.
+    pub queue_depth: WindowedSeries,
+    /// Busy fraction sampled at each epoch drain.
+    pub gpu_busy: WindowedSeries,
+    /// Solve latency charged per solve, seconds.
+    pub solve_total_s: WindowedSeries,
+    /// Portion of each solve hidden behind batch execution, seconds.
+    pub solve_hidden_s: WindowedSeries,
+    /// One sample per delivered request.
+    pub delivered: WindowedSeries,
+}
+
+impl ServerTelemetry {
+    fn new(window_s: f64) -> Self {
+        Self {
+            queue_depth: WindowedSeries::new(window_s),
+            gpu_busy: WindowedSeries::new(window_s),
+            solve_total_s: WindowedSeries::new(window_s),
+            solve_hidden_s: WindowedSeries::new(window_s),
+            delivered: WindowedSeries::new(window_s),
+        }
+    }
+
+    /// Hidden solve time / total solve time over the window (same
+    /// definition as `ServiceWindows::solve_overlap_fraction`).
+    pub fn solve_overlap_fraction(&self) -> f64 {
+        let total = self.solve_total_s.sum();
+        if total <= 0.0 {
+            0.0
+        } else {
+            self.solve_hidden_s.sum() / total
+        }
+    }
+}
+
+/// Per-replay scratch state for one server.
+#[derive(Debug, Default)]
+struct Replay {
+    depth: usize,
+    /// Closed batch-execution intervals not yet aged past all solves.
+    busy: Vec<(f64, f64)>,
+    /// Start of the batch currently executing, if any.
+    open_batch: Option<f64>,
+    /// Busy seconds accumulated in the current inter-drain span.
+    busy_in_span: f64,
+    /// Start of the current inter-drain span.
+    span_start: Option<f64>,
+    /// Start of the in-flight solve, if any.
+    open_solve: Option<f64>,
+}
+
+impl Replay {
+    fn close_batch(&mut self, t: f64) {
+        if let Some(a) = self.open_batch.take() {
+            self.busy.push((a, t));
+            self.busy_in_span += t - a;
+        }
+    }
+
+    fn hidden_overlap(&self, s: f64, d: f64) -> f64 {
+        let mut h = 0.0;
+        for &(a, b) in &self.busy {
+            h += (b.min(d) - a.max(s)).max(0.0);
+        }
+        if let Some(a) = self.open_batch {
+            h += (d - a.max(s)).max(0.0);
+        }
+        h
+    }
+}
+
+/// Move a request between server queues (or out of them entirely),
+/// pushing a depth sample for every queue whose depth changed.
+fn move_queued(
+    queued: &mut BTreeMap<usize, usize>,
+    replay: &mut [Replay],
+    servers: &mut [ServerTelemetry],
+    id: usize,
+    dest: Option<usize>,
+    t: f64,
+) {
+    let prev = match dest {
+        Some(s) => queued.insert(id, s),
+        None => queued.remove(&id),
+    };
+    if prev == dest {
+        return;
+    }
+    if let Some(old) = prev {
+        replay[old].depth = replay[old].depth.saturating_sub(1);
+        servers[old].queue_depth.push(t, replay[old].depth as f64);
+    }
+    if let Some(new) = dest {
+        replay[new].depth += 1;
+        servers[new].queue_depth.push(t, replay[new].depth as f64);
+    }
+}
+
+/// Fleet-wide derived telemetry.
+#[derive(Debug, Clone)]
+pub struct FleetTelemetry {
+    pub window_s: f64,
+    pub servers: Vec<ServerTelemetry>,
+}
+
+impl FleetTelemetry {
+    /// Replay a trace into windowed series. Events are sorted by sim
+    /// time first (emission order stamps deliveries ahead of the
+    /// commit instant). The fleet size is inferred from the largest
+    /// server index observed, including routing destinations.
+    pub fn from_events(events: &[TraceEvent], window_s: f64) -> Self {
+        let mut evs: Vec<TraceEvent> = events.to_vec();
+        evs.sort_by(|a, b| a.t_s.partial_cmp(&b.t_s).unwrap());
+        let n = evs
+            .iter()
+            .map(|e| {
+                let dest = match e.kind {
+                    EventKind::Routed { server, .. } => server,
+                    EventKind::Resumed { server } => server,
+                    _ => 0,
+                };
+                e.server.max(dest) + 1
+            })
+            .max()
+            .unwrap_or(0);
+        let mut servers: Vec<ServerTelemetry> =
+            (0..n).map(|_| ServerTelemetry::new(window_s)).collect();
+        let mut replay: Vec<Replay> = (0..n).map(|_| Replay::default()).collect();
+        // Request id -> server whose queue currently holds it.
+        let mut queued: BTreeMap<usize, usize> = BTreeMap::new();
+
+        for ev in &evs {
+            let s = ev.server;
+            if replay[s].span_start.is_none() {
+                replay[s].span_start = Some(ev.t_s);
+            }
+            match ev.kind {
+                EventKind::Arrived => {
+                    move_queued(
+                        &mut queued,
+                        &mut replay,
+                        &mut servers,
+                        ev.request,
+                        Some(s),
+                        ev.t_s,
+                    );
+                }
+                EventKind::Routed { server: dest, .. } => {
+                    move_queued(
+                        &mut queued,
+                        &mut replay,
+                        &mut servers,
+                        ev.request,
+                        Some(dest),
+                        ev.t_s,
+                    );
+                }
+                EventKind::Admitted { .. }
+                | EventKind::Rejected
+                | EventKind::Expired
+                | EventKind::Lost => {
+                    move_queued(&mut queued, &mut replay, &mut servers, ev.request, None, ev.t_s);
+                }
+                EventKind::SolveStart { .. } => replay[s].open_solve = Some(ev.t_s),
+                EventKind::SolveDone { .. } => {
+                    if let Some(start) = replay[s].open_solve.take() {
+                        let total = ev.t_s - start;
+                        let hidden = replay[s].hidden_overlap(start, ev.t_s);
+                        servers[s].solve_total_s.push(ev.t_s, total);
+                        servers[s].solve_hidden_s.push(ev.t_s, hidden.min(total));
+                        replay[s].busy.retain(|&(_, b)| b > start);
+                    }
+                }
+                EventKind::BatchStart { .. } => {
+                    replay[s].close_batch(ev.t_s);
+                    replay[s].open_batch = Some(ev.t_s);
+                }
+                EventKind::EpochDone { .. } => {
+                    replay[s].close_batch(ev.t_s);
+                    let span_start = replay[s].span_start.unwrap_or(ev.t_s);
+                    let span = ev.t_s - span_start;
+                    if span > 0.0 {
+                        let frac = (replay[s].busy_in_span / span).min(1.0);
+                        servers[s].gpu_busy.push(ev.t_s, frac);
+                    }
+                    replay[s].busy_in_span = 0.0;
+                    replay[s].span_start = Some(ev.t_s);
+                }
+                EventKind::Delivered { .. } => {
+                    move_queued(&mut queued, &mut replay, &mut servers, ev.request, None, ev.t_s);
+                    servers[s].delivered.push(ev.t_s, 1.0);
+                }
+                EventKind::EpochFrozen { .. }
+                | EventKind::RetractedByDeath { .. }
+                | EventKind::TransferStart
+                | EventKind::Resumed { .. } => {}
+            }
+        }
+        Self { window_s, servers }
+    }
+
+    /// This server's share of fleet-wide deliveries in the window;
+    /// 0 when nothing has been delivered anywhere.
+    pub fn bandwidth_share(&self, server: usize) -> f64 {
+        let total: usize = self.servers.iter().map(|s| s.delivered.count()).sum();
+        if total == 0 || server >= self.servers.len() {
+            return 0.0;
+        }
+        self.servers[server].delivered.count() as f64 / total as f64
+    }
+
+    /// Per-server one-liners for CLI summaries and the STATS reply.
+    pub fn summary(&self) -> String {
+        let mut out = String::new();
+        for (i, s) in self.servers.iter().enumerate() {
+            out.push_str(&format!(
+                "server {i}: depth_last {:.0} depth_p95 {:.1} gpu_busy {:.3} \
+                 solve_overlap {:.3} delivered {} bw_share {:.3}\n",
+                s.queue_depth.last().unwrap_or(0.0),
+                s.queue_depth.percentile(95.0),
+                s.gpu_busy.last().unwrap_or(0.0),
+                s.solve_overlap_fraction(),
+                s.delivered.count(),
+                self.bandwidth_share(i)
+            ));
+        }
+        out
+    }
+}
+
+/// Compact per-kind counts for `aigc-edge trace`.
+pub fn kind_counts(events: &[TraceEvent]) -> String {
+    let mut counts: BTreeMap<&'static str, usize> = BTreeMap::new();
+    for ev in events {
+        *counts.entry(ev.kind.name()).or_default() += 1;
+    }
+    let max_id = events.iter().filter(|e| e.request != NO_REQUEST).map(|e| e.request).max();
+    let mut out =
+        format!("events: {} (request ids: {})\n", events.len(), max_id.map_or(0, |m| m + 1));
+    for (name, n) in counts {
+        out.push_str(&format!("  {name}: {n}\n"));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(t_s: f64, server: usize, request: usize, kind: EventKind) -> TraceEvent {
+        TraceEvent { t_s, server, request, kind }
+    }
+
+    fn epoch_ev(t_s: f64, server: usize, kind: EventKind) -> TraceEvent {
+        TraceEvent { t_s, server, request: NO_REQUEST, kind }
+    }
+
+    /// Hand-built two-epoch schedule on one server with pinned values:
+    /// epoch 0 solves in the open ([1.0, 1.5], nothing to hide
+    /// behind), executes [1.5, 3.5]; epoch 1's solve [3.0, 3.4] runs
+    /// entirely inside epoch 0's batch window, so 0.4 of the 0.9 total
+    /// solve seconds are hidden.
+    fn two_epoch_events() -> Vec<TraceEvent> {
+        vec![
+            ev(0.0, 0, 0, EventKind::Arrived),
+            ev(0.2, 0, 1, EventKind::Arrived),
+            epoch_ev(1.0, 0, EventKind::EpochFrozen { epoch: 0 }),
+            epoch_ev(1.0, 0, EventKind::SolveStart { epoch: 0 }),
+            epoch_ev(1.5, 0, EventKind::SolveDone { epoch: 0 }),
+            ev(1.5, 0, 0, EventKind::Admitted { epoch: 0 }),
+            ev(1.5, 0, 1, EventKind::Admitted { epoch: 0 }),
+            epoch_ev(1.5, 0, EventKind::BatchStart { bucket: 2, steps: 10 }),
+            epoch_ev(2.5, 0, EventKind::BatchStart { bucket: 1, steps: 4 }),
+            epoch_ev(3.0, 0, EventKind::SolveStart { epoch: 1 }),
+            epoch_ev(3.4, 0, EventKind::SolveDone { epoch: 1 }),
+            epoch_ev(3.5, 0, EventKind::EpochDone { epoch: 0 }),
+            ev(4.0, 0, 0, EventKind::Delivered { steps: 10 }),
+            ev(4.2, 0, 1, EventKind::Delivered { steps: 10 }),
+        ]
+    }
+
+    #[test]
+    fn two_epoch_schedule_pins_derived_values() {
+        let t = FleetTelemetry::from_events(&two_epoch_events(), 100.0);
+        assert_eq!(t.servers.len(), 1);
+        let s = &t.servers[0];
+        // Queue: 0→1 at arrival 0, →2 at 0.2, →1 and →0 at admission.
+        assert_eq!(s.queue_depth.count(), 4);
+        assert_eq!(s.queue_depth.max(), 2.0);
+        assert_eq!(s.queue_depth.last(), Some(0.0));
+        // GPU busy: batches cover [1.5, 3.5] of the [0.0, 3.5] span.
+        assert_eq!(s.gpu_busy.count(), 1);
+        assert!((s.gpu_busy.last().unwrap() - 2.0 / 3.5).abs() < 1e-12);
+        // Solves: 0.5 s exposed + 0.4 s fully hidden ⇒ 0.4 / 0.9.
+        assert_eq!(s.solve_total_s.count(), 2);
+        assert!((s.solve_total_s.sum() - 0.9).abs() < 1e-12);
+        assert!((s.solve_hidden_s.sum() - 0.4).abs() < 1e-12);
+        assert!((s.solve_overlap_fraction() - 0.4 / 0.9).abs() < 1e-12);
+        // Both deliveries land here ⇒ full bandwidth share.
+        assert_eq!(s.delivered.count(), 2);
+        assert!((t.bandwidth_share(0) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_trace_yields_empty_fleet() {
+        let t = FleetTelemetry::from_events(&[], 10.0);
+        assert!(t.servers.is_empty());
+        assert_eq!(t.bandwidth_share(0), 0.0);
+        assert_eq!(t.summary(), "");
+    }
+
+    #[test]
+    fn single_sample_edges_stay_finite() {
+        let events = vec![ev(2.0, 0, 0, EventKind::Arrived)];
+        let t = FleetTelemetry::from_events(&events, 10.0);
+        let s = &t.servers[0];
+        assert_eq!(s.queue_depth.count(), 1);
+        assert_eq!(s.queue_depth.last(), Some(1.0));
+        assert_eq!(s.gpu_busy.count(), 0);
+        assert_eq!(s.solve_overlap_fraction(), 0.0);
+        assert_eq!(t.bandwidth_share(0), 0.0);
+        let line = t.summary();
+        assert!(line.contains("server 0"), "{line}");
+    }
+
+    #[test]
+    fn routed_moves_depth_between_servers() {
+        let events = vec![
+            ev(0.0, 0, 0, EventKind::Arrived),
+            ev(0.0, 0, 0, EventKind::Routed { server: 1, score: 0.5 }),
+            ev(1.0, 1, 0, EventKind::Admitted { epoch: 0 }),
+            ev(2.0, 1, 0, EventKind::Delivered { steps: 3 }),
+        ];
+        let t = FleetTelemetry::from_events(&events, 100.0);
+        assert_eq!(t.servers.len(), 2);
+        assert_eq!(t.servers[0].queue_depth.last(), Some(0.0));
+        assert_eq!(t.servers[1].queue_depth.last(), Some(0.0));
+        assert_eq!(t.servers[1].queue_depth.max(), 1.0);
+        assert!((t.bandwidth_share(1) - 1.0).abs() < 1e-12);
+        assert_eq!(t.bandwidth_share(0), 0.0);
+    }
+
+    #[test]
+    fn kind_counts_lists_every_kind_once() {
+        let text = kind_counts(&two_epoch_events());
+        assert!(text.contains("arrived: 2"), "{text}");
+        assert!(text.contains("batch_start: 2"), "{text}");
+        assert!(text.contains("delivered: 2"), "{text}");
+        assert!(text.contains("request ids: 2"), "{text}");
+    }
+}

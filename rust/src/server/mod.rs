@@ -21,13 +21,14 @@ use std::time::Duration;
 
 use anyhow::{Context, Result};
 
-pub use protocol::{parse_request, Command, Response};
+pub use protocol::{parse_request, parse_stats_reply, render_stats_reply, Command, Response};
 
 use crate::bandwidth::PsoAllocator;
 use crate::channel::Link;
 use crate::config::ExperimentConfig;
 use crate::coordinator::{Engine, EngineConfig, EpochPolicy};
-use crate::quality::PowerLawQuality;
+use crate::metrics::window::ServiceWindows;
+use crate::quality::{PowerLawQuality, QualityModel};
 use crate::runtime::ArtifactStore;
 use crate::scheduler::Stacking;
 use crate::trace::{DeviceRequest, Workload};
@@ -163,6 +164,10 @@ fn gpu_worker(
     let scheduler = Stacking::default();
     let allocator = PsoAllocator::default();
     let policy = server_cfg.policy();
+    // Live telemetry over the trailing minute — the same window
+    // definitions the simulators report, surfaced as gauges in STATS.
+    let mut windows = ServiceWindows::new(60.0);
+    let started = std::time::Instant::now();
     while !stop.load(Ordering::Relaxed) {
         // Collect an epoch under the shared closing rule. The epoch
         // opens at the FIRST request (same as sim::dynamic), not at
@@ -186,6 +191,7 @@ fn gpu_worker(
                     if epoch.is_empty() {
                         opened = std::time::Instant::now();
                     }
+                    windows.record_arrival(started.elapsed().as_secs_f64());
                     epoch.push(p);
                 }
                 Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {
@@ -219,10 +225,15 @@ fn gpu_worker(
         };
         match engine.serve_epoch(&workload, &scheduler, &allocator, &quality) {
             Ok(report) => {
+                let now = started.elapsed().as_secs_f64();
                 for (pending, req) in epoch.iter().zip(&report.requests) {
                     let resp = if req.steps == 0 {
+                        windows.record_dropped(now, quality.outage());
                         Response::Outage
                     } else {
+                        let e2e = req.planned_gen_s + req.tx_s;
+                        let met = e2e <= pending.deadline;
+                        windows.record_served(now, e2e, req.predicted_quality, met);
                         Response::Done {
                             steps: req.steps,
                             gen_ms: req.planned_gen_s * 1e3,
@@ -232,6 +243,12 @@ fn gpu_worker(
                     };
                     let _ = pending.reply.send(resp);
                 }
+                windows.prune(now);
+                engine.metrics.set_gauge("epoch_batch", epoch.len() as f64);
+                engine.metrics.set_gauge("window_arrival_hz", windows.arrivals.rate_hz());
+                engine.metrics.set_gauge("window_outage_rate", windows.outage_rate());
+                engine.metrics.set_gauge("window_quality_mean", windows.quality.mean());
+                engine.metrics.set_gauge("window_e2e_p95_s", windows.e2e_s.percentile(95.0));
                 *metrics_text.lock().unwrap() = engine.metrics.render();
             }
             Err(e) => {
@@ -269,8 +286,7 @@ fn handle_conn(stream: TcpStream, queue: Sender<Pending>, metrics_text: Arc<Mute
             }
             Ok(Command::Stats) => {
                 let snapshot = metrics_text.lock().unwrap().clone();
-                let _ = write!(writer, "{snapshot}");
-                let _ = writeln!(writer, ".");
+                let _ = write!(writer, "{}", protocol::render_stats_reply(&snapshot));
             }
             Ok(Command::Quit) => break,
             Err(msg) => {

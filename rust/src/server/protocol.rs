@@ -63,6 +63,25 @@ pub fn parse_request(line: &str) -> Result<Command, String> {
     }
 }
 
+/// Frame a metrics snapshot as the wire-level STATS reply: the body's
+/// lines followed by a lone `.` terminator line (the framing
+/// [`Client::stats`](super::Client::stats) reads up to).
+pub fn render_stats_reply(body: &str) -> String {
+    debug_assert!(body.is_empty() || body.ends_with('\n'), "body is newline-terminated lines");
+    format!("{body}.\n")
+}
+
+/// Inverse of [`render_stats_reply`]: strip the terminator and return
+/// the snapshot body. Errors if the terminator is missing or appears
+/// early (a body line of `.` would truncate the client's read).
+pub fn parse_stats_reply(reply: &str) -> Result<String, String> {
+    let body = reply.strip_suffix(".\n").ok_or("STATS reply must end with a '.' terminator")?;
+    if body.lines().any(|l| l.trim_end() == ".") {
+        return Err("terminator line inside STATS body".to_string());
+    }
+    Ok(body.to_string())
+}
+
 impl Response {
     pub fn render(&self) -> String {
         match self {
@@ -133,6 +152,28 @@ mod tests {
         {
             assert_eq!(parse_request(&cmd.render()).unwrap(), cmd);
         }
+    }
+
+    #[test]
+    fn stats_reply_roundtrips_a_rendered_registry() {
+        // The STATS body is Metrics::render_body — deterministic, no
+        // wall clock — so the wire reply round-trips byte-for-byte.
+        let m = crate::metrics::Metrics::default();
+        m.inc("requests");
+        m.add("tasks", 7);
+        m.set_gauge("last_bucket", 8.0);
+        m.record_latency("plan", 0.004);
+        let body = m.render_body();
+        let reply = render_stats_reply(&body);
+        assert!(reply.ends_with(".\n"));
+        assert_eq!(parse_stats_reply(&reply).unwrap(), body);
+        // Empty registry: the reply is just the terminator.
+        let empty = render_stats_reply("");
+        assert_eq!(empty, ".\n");
+        assert_eq!(parse_stats_reply(&empty).unwrap(), "");
+        // Malformed replies are rejected, not mis-framed.
+        assert!(parse_stats_reply("counter a: 1\n").is_err(), "missing terminator");
+        assert!(parse_stats_reply(".\ncounter a: 1\n.\n").is_err(), "early terminator");
     }
 
     #[test]

@@ -32,13 +32,16 @@
 use crate::bandwidth::{Allocator, AllocatorPool};
 use crate::delay::BatchDelayModel;
 use crate::metrics::{MetricsMode, OutcomeAccumulator, OutcomeStats, ResolvedSample};
+use crate::obs::{EventKind, NullSink, Recorder, TraceEvent, TraceSink};
 use crate::quality::QualityModel;
 use crate::routing::{route_trace, RouterKind, ServerState};
 use crate::scheduler::BatchScheduler;
 use crate::trace::{Arrival, ArrivalTrace};
 use crate::util::exec::par_map;
 
-use super::dynamic::{simulate_dynamic, DynamicConfig, DynamicReport, RequestOutcome};
+use super::dynamic::{
+    simulate_dynamic, simulate_dynamic_traced, DynamicConfig, DynamicReport, RequestOutcome,
+};
 
 /// Evenly-spaced GPU speed factors for an `n`-server fleet in
 /// `[lo, hi]`. A single server gets the midpoint, so a homogeneous
@@ -235,8 +238,28 @@ pub fn simulate_cluster(
     quality: &dyn QualityModel,
     cfg: &ClusterConfig,
 ) -> ClusterReport {
+    simulate_cluster_traced(trace, scheduler, allocator, delay, quality, cfg, &mut NullSink)
+}
+
+/// [`simulate_cluster`] with a flight recorder attached. Each server's
+/// serving loop streams its lifecycle into a private capture (emission
+/// inside the `par_map` fan-out never touches the shared sink); the
+/// merge then replays the captures into `tracer` in server order,
+/// remapped to fleet coordinates, inserting a synthesized
+/// [`EventKind::Routed`] after each arrival (the dispatch decision
+/// lives in the routing layer, outside the per-server loop). The sink
+/// only observes: outputs are bit-identical for any sink.
+pub fn simulate_cluster_traced(
+    trace: &ArrivalTrace,
+    scheduler: &dyn BatchScheduler,
+    allocator: &dyn Allocator,
+    delay: &BatchDelayModel,
+    quality: &dyn QualityModel,
+    cfg: &ClusterConfig,
+    tracer: &mut dyn TraceSink,
+) -> ClusterReport {
     let allocators = vec![allocator; cfg.servers().max(1)];
-    run_cluster(trace, scheduler, allocators, delay, quality, cfg)
+    run_cluster(trace, scheduler, allocators, delay, quality, cfg, tracer)
 }
 
 /// [`simulate_cluster`] with per-server allocator instances from an
@@ -253,7 +276,22 @@ pub fn simulate_cluster_pooled(
     quality: &dyn QualityModel,
     cfg: &ClusterConfig,
 ) -> ClusterReport {
-    run_cluster(trace, scheduler, pool.refs(cfg.servers().max(1)), delay, quality, cfg)
+    let allocators = pool.refs(cfg.servers().max(1));
+    run_cluster(trace, scheduler, allocators, delay, quality, cfg, &mut NullSink)
+}
+
+/// [`simulate_cluster_pooled`] with a flight recorder attached.
+pub fn simulate_cluster_pooled_traced(
+    trace: &ArrivalTrace,
+    scheduler: &dyn BatchScheduler,
+    pool: &AllocatorPool,
+    delay: &BatchDelayModel,
+    quality: &dyn QualityModel,
+    cfg: &ClusterConfig,
+    tracer: &mut dyn TraceSink,
+) -> ClusterReport {
+    let allocators = pool.refs(cfg.servers().max(1));
+    run_cluster(trace, scheduler, allocators, delay, quality, cfg, tracer)
 }
 
 fn run_cluster(
@@ -263,6 +301,7 @@ fn run_cluster(
     delay: &BatchDelayModel,
     quality: &dyn QualityModel,
     cfg: &ClusterConfig,
+    tracer: &mut dyn TraceSink,
 ) -> ClusterReport {
     let n = cfg.servers();
     assert!(n >= 1, "cluster needs at least one server");
@@ -300,22 +339,56 @@ fn run_cluster(
     let par_safe = allocators.iter().all(|a| a.parallel_replay_safe())
         || crate::bandwidth::distinct_instances(&allocators);
     let threads = if par_safe { cfg.dynamic.threads } else { 1 };
-    let reports: Vec<DynamicReport> = par_map(threads, &sub_traces, |server, sub_trace| {
-        let speed = cfg.speeds[server];
-        let scaled = BatchDelayModel::new(delay.a / speed, delay.b / speed);
-        simulate_dynamic(sub_trace, scheduler, allocators[server], &scaled, quality, &cfg.dynamic)
-    });
+    // With a live tracer each server fills a private capture inside the
+    // fan-out (the shared sink is never touched concurrently); with
+    // NullSink the untraced loop runs — both call the same core, so the
+    // float stream is identical either way.
+    let capture = tracer.enabled();
+    let results: Vec<(DynamicReport, Vec<TraceEvent>)> =
+        par_map(threads, &sub_traces, |server, sub_trace| {
+            let speed = cfg.speeds[server];
+            let scaled = BatchDelayModel::new(delay.a / speed, delay.b / speed);
+            let alloc = allocators[server];
+            if capture {
+                let mut rec = Recorder::new();
+                let report = simulate_dynamic_traced(
+                    sub_trace,
+                    scheduler,
+                    alloc,
+                    &scaled,
+                    quality,
+                    &cfg.dynamic,
+                    &mut rec,
+                );
+                (report, rec.events)
+            } else {
+                let report =
+                    simulate_dynamic(sub_trace, scheduler, alloc, &scaled, quality, &cfg.dynamic);
+                (report, Vec::new())
+            }
+        });
 
     // ---- merge: map sub-trace outcomes back to global ids ----
     let mut outcomes: Vec<Option<RequestOutcome>> = vec![None; trace.len()];
     let mut servers = Vec::with_capacity(n);
     let mut horizon = 0.0f64;
-    for (server, (report, ids)) in reports.into_iter().zip(assigned_ids).enumerate() {
+    for (server, ((report, mut events), ids)) in results.into_iter().zip(assigned_ids).enumerate() {
         horizon = horizon.max(report.horizon_s);
         for outcome in &report.outcomes {
             let global = ids[outcome.id];
             debug_assert!(outcomes[global].is_none(), "request {global} resolved twice");
             outcomes[global] = Some(RequestOutcome { id: global, ..*outcome });
+        }
+        // Replay this server's capture into the shared sink in fleet
+        // coordinates, splicing the routing layer's dispatch decision
+        // in right after each arrival.
+        crate::obs::remap(&mut events, server, &ids);
+        for ev in events {
+            tracer.record(ev);
+            if ev.kind == EventKind::Arrived {
+                let kind = EventKind::Routed { server, score: 0.0 };
+                tracer.emit(ev.t_s, server, ev.request, kind);
+            }
         }
         servers.push(ServerReport { server, speed: cfg.speeds[server], assigned_ids: ids, report });
     }
@@ -484,6 +557,46 @@ mod tests {
             let target = (p / 100.0 * n).ceil().max(1.0) as i64;
             let rank = served.iter().filter(|&&v| v <= g).count() as i64;
             assert!((rank - target).abs() <= budget, "p{p}: rank {rank} target {target}");
+        }
+    }
+
+    #[test]
+    fn traced_run_is_bit_identical_and_audits_clean() {
+        let t = trace(6.0, 50.0, 7);
+        let cfg = ClusterConfig {
+            speeds: server_speeds(3, 0.5, 1.5),
+            router: RouterKind::JoinShortestQueue,
+            dynamic: DynamicConfig::default(),
+        };
+        let plain = run(&t, &cfg);
+        let mut rec = Recorder::new();
+        let traced = simulate_cluster_traced(
+            &t,
+            &Stacking::default(),
+            &EqualAllocator,
+            &BatchDelayModel::paper(),
+            &PowerLawQuality::paper(),
+            &cfg,
+            &mut rec,
+        );
+        assert_eq!(plain.assignment, traced.assignment);
+        assert_eq!(plain.horizon_s.to_bits(), traced.horizon_s.to_bits());
+        for (a, b) in plain.outcomes.iter().zip(&traced.outcomes) {
+            assert_eq!(a.disposition, b.disposition, "request {}", a.id);
+            assert_eq!(a.quality.to_bits(), b.quality.to_bits(), "request {}", a.id);
+            assert_eq!(a.e2e_s.to_bits(), b.e2e_s.to_bits(), "request {}", a.id);
+        }
+        let audit = crate::obs::audit::audit_expecting(&rec.events, t.len());
+        assert!(audit.is_clean(), "{}", audit.render());
+        // Every arrival carries its dispatch decision, matching the
+        // merged assignment vector.
+        let routed =
+            rec.events.iter().filter(|e| matches!(e.kind, EventKind::Routed { .. })).count();
+        assert_eq!(routed, t.len());
+        for ev in &rec.events {
+            if let EventKind::Routed { server, .. } = ev.kind {
+                assert_eq!(server, traced.assignment[ev.request]);
+            }
         }
     }
 

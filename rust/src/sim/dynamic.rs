@@ -31,6 +31,7 @@ use crate::bandwidth::Allocator;
 use crate::coordinator::{EpochPolicy, SolveMode, SolveTiming};
 use crate::delay::BatchDelayModel;
 use crate::metrics::{OutcomeAccumulator, OutcomeStats, ResolvedSample, ServiceWindows};
+use crate::obs::{EventKind, NullSink, TraceEvent, TraceSink, NO_REQUEST};
 use crate::quality::QualityModel;
 use crate::scheduler::BatchScheduler;
 use crate::trace::{Arrival, ArrivalTrace, DeviceRequest, Workload};
@@ -423,6 +424,25 @@ pub fn simulate_dynamic(
     quality: &dyn QualityModel,
     cfg: &DynamicConfig,
 ) -> DynamicReport {
+    simulate_dynamic_traced(trace, scheduler, allocator, delay, quality, cfg, &mut NullSink)
+}
+
+/// [`simulate_dynamic`] with a flight recorder attached: every
+/// lifecycle transition (arrival, epoch freeze, solve start/done,
+/// admission or drop, batch starts, drain, delivery) is mirrored into
+/// `tracer` as it happens. The recorder only observes values the loop
+/// already computed, so with any sink — including [`NullSink`], which
+/// is what [`simulate_dynamic`] passes — the report is bit-identical
+/// to the untraced run (`benches/obs_overhead.rs` gates this).
+pub fn simulate_dynamic_traced(
+    trace: &ArrivalTrace,
+    scheduler: &dyn BatchScheduler,
+    allocator: &dyn Allocator,
+    delay: &BatchDelayModel,
+    quality: &dyn QualityModel,
+    cfg: &DynamicConfig,
+    tracer: &mut dyn TraceSink,
+) -> DynamicReport {
     let mut sink = CollectingSink { outcomes: vec![None; trace.len()], epochs: Vec::new() };
     let horizon = run_dynamic_core(
         trace.arrivals.iter().copied(),
@@ -434,6 +454,7 @@ pub fn simulate_dynamic(
         quality,
         cfg,
         &mut sink,
+        tracer,
     );
     let outcomes: Vec<RequestOutcome> =
         sink.outcomes.into_iter().map(|o| o.expect("every request resolved")).collect();
@@ -517,12 +538,47 @@ pub fn simulate_dynamic_streaming(
         quality,
         cfg,
         &mut sink,
+        &mut NullSink,
     );
     StreamingDynamicReport {
         accumulator: sink.acc,
         epochs: sink.epochs,
         peak_queue_depth: sink.peak_queue_depth,
         horizon_s: horizon,
+    }
+}
+
+/// Epoch-scope flight-recorder event on the core's single server
+/// (index 0 until a cluster merge remaps it).
+fn mark(tracer: &mut dyn TraceSink, t_s: f64, kind: EventKind) {
+    tracer.record(TraceEvent { t_s, server: 0, request: NO_REQUEST, kind });
+}
+
+/// Emit one `BatchStart` per run of equal-size batches: a run of `n`
+/// same-size batches is `n` denoising steps through one batch-size
+/// bucket — exactly how the runtime engine would execute it. Guarded by
+/// `enabled()` so the untraced path never walks the schedule. Shared
+/// with `sim::event`, which emits per-server.
+pub(crate) fn emit_batches(
+    tracer: &mut dyn TraceSink,
+    server: usize,
+    t0: f64,
+    schedule: &crate::scheduler::Schedule,
+) {
+    if !tracer.enabled() {
+        return;
+    }
+    let batches = &schedule.batches;
+    let mut i = 0;
+    while i < batches.len() {
+        let size = batches[i].size();
+        let mut j = i + 1;
+        while j < batches.len() && batches[j].size() == size {
+            j += 1;
+        }
+        let kind = EventKind::BatchStart { bucket: size as usize, steps: j - i };
+        tracer.emit(t0 + batches[i].start, server, NO_REQUEST, kind);
+        i = j;
     }
 }
 
@@ -541,6 +597,7 @@ fn run_dynamic_core<I, S>(
     quality: &dyn QualityModel,
     cfg: &DynamicConfig,
     sink: &mut S,
+    tracer: &mut dyn TraceSink,
 ) -> f64
 where
     I: Iterator<Item = Arrival>,
@@ -574,6 +631,7 @@ where
             }
             arrivals.next();
             windows.record_arrival(a.t_s);
+            tracer.emit(a.t_s, 0, a.id, EventKind::Arrived);
             queue.push(Queued {
                 id: a.id,
                 arrival_s: a.t_s,
@@ -589,6 +647,7 @@ where
             }
             arrivals.next();
             windows.record_arrival(a.t_s);
+            tracer.emit(a.t_s, 0, a.id, EventKind::Arrived);
             queue.push(Queued {
                 id: a.id,
                 arrival_s: a.t_s,
@@ -613,6 +672,9 @@ where
         let t0 = timing.batch_start_s;
         let epoch_index = epoch_count;
         let queue_depth = queue.len();
+        mark(tracer, close, EventKind::EpochFrozen { epoch: epoch_index });
+        mark(tracer, timing.solve_begin_s, EventKind::SolveStart { epoch: epoch_index });
+        mark(tracer, timing.solve_end_s, EventKind::SolveDone { epoch: epoch_index });
 
         // ---- admission control ----
         // A request is hopeless once its residual budget cannot fit one
@@ -633,6 +695,8 @@ where
                 } else {
                     Disposition::ExpiredInQueue
                 };
+                let kind = if q.deferrals == 0 { EventKind::Rejected } else { EventKind::Expired };
+                tracer.emit(t0, 0, q.id, kind);
                 windows.record_dropped(t0, outage_q);
                 sink.resolve(RequestOutcome {
                     id: q.id,
@@ -652,6 +716,7 @@ where
                 horizon = horizon.max(t0);
                 dropped_now += 1;
             } else {
+                tracer.emit(t0, 0, q.id, EventKind::Admitted { epoch: epoch_index });
                 admitted.push(q);
             }
         }
@@ -661,6 +726,7 @@ where
             // still ran (admission is part of planning), so its cost
             // and overlap are charged like any other epoch's.
             clock = t0;
+            mark(tracer, t0, EventKind::EpochDone { epoch: epoch_index });
             windows.record_solve(t0, cfg.solve_latency_s, timing.hidden_s);
             windows.prune(t0);
             let [p50_e2e_w, p95_e2e_w, p99_e2e_w] = windows.e2e_s.percentiles([50.0, 95.0, 99.0]);
@@ -704,6 +770,7 @@ where
         let workload = Workload { devices, total_bandwidth_hz, content_bits };
         let sol = solve_joint(&workload, scheduler, allocator, delay, quality);
         let makespan = sol.outcome.schedule.makespan();
+        emit_batches(tracer, 0, t0, &sol.outcome.schedule);
 
         // ---- resolve served requests; carry the rest over ----
         let mut served_now = 0usize;
@@ -714,6 +781,8 @@ where
                 let completion = t0 + svc.e2e_delay;
                 let e2e = completion - q.arrival_s;
                 let met = svc.met; // e2e vs residual ⇔ completion vs absolute deadline
+                let done = svc.steps as usize;
+                tracer.emit(completion, 0, q.id, EventKind::Delivered { steps: done });
                 windows.record_served(t0, e2e, svc.quality, met);
                 sink.resolve(RequestOutcome {
                     id: q.id,
@@ -741,6 +810,7 @@ where
         }
 
         gpu_free = t0 + makespan;
+        mark(tracer, gpu_free, EventKind::EpochDone { epoch: epoch_index });
         clock = t0;
         horizon = horizon.max(gpu_free);
         windows.record_solve(t0, cfg.solve_latency_s, timing.hidden_s);
@@ -1118,5 +1188,31 @@ mod tests {
         let heavy = run(&trace(15.0, 40.0, 3), &adaptive);
         let max_makespan = heavy.epochs.iter().map(|e| e.makespan_s).fold(0.0, f64::max);
         assert!(max_makespan <= 2.0 * adaptive.plan_horizon_s + 1.0, "makespan {max_makespan}");
+    }
+
+    #[test]
+    fn traced_run_is_bit_identical_and_audits_clean() {
+        let t = trace(6.0, 60.0, 9);
+        let cfg = DynamicConfig { solve_latency_s: 0.2, ..DynamicConfig::default() };
+        let plain = run(&t, &cfg);
+        let mut rec = crate::obs::Recorder::new();
+        let traced = simulate_dynamic_traced(
+            &t,
+            &Stacking::default(),
+            &EqualAllocator,
+            &BatchDelayModel::paper(),
+            &PowerLawQuality::paper(),
+            &cfg,
+            &mut rec,
+        );
+        assert_eq!(plain.horizon_s.to_bits(), traced.horizon_s.to_bits());
+        for (a, b) in plain.outcomes.iter().zip(&traced.outcomes) {
+            assert_eq!(a.disposition, b.disposition);
+            assert_eq!(a.e2e_s.to_bits(), b.e2e_s.to_bits());
+            assert_eq!(a.quality.to_bits(), b.quality.to_bits());
+        }
+        let audit = crate::obs::audit::audit_expecting(&rec.events, t.len());
+        assert!(audit.is_clean(), "{}", audit.render());
+        assert!(rec.events.len() > 2 * t.len(), "each request leaves several events");
     }
 }

@@ -94,6 +94,7 @@ use crate::faults::{FaultEvent, FaultKind, FaultScript, MigrationPolicy, Migrati
 use crate::metrics::{
     MetricsMode, OutcomeAccumulator, OutcomeStats, RecoverySample, RecoveryStats, ServiceWindows,
 };
+use crate::obs::{EventKind, NullSink, TraceSink, NO_REQUEST};
 use crate::quality::QualityModel;
 use crate::routing::{LiveView, RouteContext, Router, RouterKind, ServerState};
 use crate::scheduler::{BatchScheduler, Schedule};
@@ -101,7 +102,7 @@ use crate::trace::{Arrival, ArrivalTrace, DeviceRequest, Workload};
 use crate::util::exec::par_map;
 
 use super::cluster::{sample, samples, ClusterConfig};
-use super::dynamic::{Disposition, DynamicConfig, EpochRecord, RequestOutcome};
+use super::dynamic::{emit_batches, Disposition, DynamicConfig, EpochRecord, RequestOutcome};
 use super::{solve_joint, JointSolution};
 
 /// Sentinel in [`EventReport::assignment`] for a request that was never
@@ -626,6 +627,14 @@ struct Engine<'a> {
     fault_log: Vec<FaultEvent>,
     horizon: f64,
     outage_q: f64,
+    /// Flight recorder ([`NullSink`] on the untraced entry points).
+    /// Emission happens only in the deterministic serial phases — never
+    /// inside `solve_batch`'s `par_map` closure — so captures replay
+    /// bit-identically. Delivery events are deferred to [`finish`]
+    /// (see [`Engine::emit_deliveries`]).
+    ///
+    /// [`finish`]: Engine::finish
+    tracer: &'a mut dyn TraceSink,
 }
 
 fn better(cand: (f64, u8, usize), best: Option<(f64, u8, usize)>) -> bool {
@@ -636,6 +645,11 @@ fn better(cand: (f64, u8, usize), best: Option<(f64, u8, usize)>) -> bool {
 }
 
 impl Engine<'_> {
+    /// Epoch-scope flight-recorder event on `server`'s timeline.
+    fn mark(&mut self, t_s: f64, server: usize, kind: EventKind) {
+        self.tracer.emit(t_s, server, NO_REQUEST, kind);
+    }
+
     fn run(&mut self) {
         loop {
             let work_left = self.next_arrival < self.trace.len()
@@ -782,8 +796,13 @@ impl Engine<'_> {
             if checkpoint {
                 let done = fl.schedule.steps_completed_by(r.service_slot, t - fl.start_s);
                 let p = Pending { done_steps: r.pending.done_steps + done, ..r.pending };
+                let kind = EventKind::RetractedByDeath { done_steps: p.done_steps as usize };
+                self.tracer.emit(t, s, p.id, kind);
+                self.tracer.emit(t, s, p.id, EventKind::TransferStart);
                 self.resume_q.push_back((t + self.transfer_s, s, p));
             } else {
+                let kind = EventKind::RetractedByDeath { done_steps: 0 };
+                self.tracer.emit(t, s, r.pending.id, kind);
                 self.resolve_lost(r.pending, t, Some(s));
             }
         }
@@ -850,7 +869,10 @@ impl Engine<'_> {
         self.next_arrival += 1;
         self.refresh_states(a.t_s);
         if !self.states.iter().any(|st| st.alive) {
-            // The whole fleet is down: park until a recovery.
+            // The whole fleet is down: park until a recovery. The
+            // arrival is anchored on server 0's timeline — it never
+            // reached any server.
+            self.tracer.emit(a.t_s, 0, a.id, EventKind::Arrived);
             self.unroutable.push_back(Pending::from_arrival(&a));
             return;
         }
@@ -860,6 +882,8 @@ impl Engine<'_> {
         let service_est_s = self.delay.g(1) / self.states[choice].speed;
         self.states[choice].assign(a.t_s, service_est_s);
         self.assignment[a.id] = choice;
+        self.tracer.emit(a.t_s, choice, a.id, EventKind::Arrived);
+        self.tracer.emit(a.t_s, choice, a.id, EventKind::Routed { server: choice, score: 0.0 });
         self.servers[choice].assigned_ids.push(a.id);
         let epoch_policy = self.dynamic.epoch;
         self.servers[choice].ingest(Pending::from_arrival(&a), a.t_s, &epoch_policy);
@@ -885,6 +909,10 @@ impl Engine<'_> {
         let service_est_s = self.delay.g(1) / self.states[choice].speed;
         self.states[choice].assign(t, service_est_s);
         self.migrations.push(MigrationRecord { id: p.id, from, to: Some(choice), t_s: t, reason });
+        self.tracer.emit(t, choice, p.id, EventKind::Routed { server: choice, score: 0.0 });
+        if reason == MigrationReason::Checkpoint {
+            self.tracer.emit(t, choice, p.id, EventKind::Resumed { server: choice });
+        }
         if self.assignment[p.id] == UNROUTED {
             self.assignment[p.id] = choice;
             self.servers[choice].assigned_ids.push(p.id);
@@ -926,6 +954,7 @@ impl Engine<'_> {
             reason,
         };
         self.migrations.push(record);
+        self.tracer.emit(t, choice, p.id, EventKind::Routed { server: choice, score: 0.0 });
         let landed = Pending { enqueued_s: t, recorded: false, ..p };
         self.servers[choice].ingest(landed, t, &epoch_policy);
     }
@@ -1105,6 +1134,9 @@ impl Engine<'_> {
         let epoch_index = self.servers[idx].epochs.len();
         let queue_depth = e.queue.len();
         let scaled = self.servers[idx].delay;
+        self.mark(e.close_s, idx, EventKind::EpochFrozen { epoch: epoch_index });
+        self.mark(timing.solve_begin_s, idx, EventKind::SolveStart { epoch: epoch_index });
+        self.mark(timing.solve_end_s, idx, EventKind::SolveDone { epoch: epoch_index });
 
         // ---- admission control ----
         let mut admitted: Vec<Pending> = Vec::new();
@@ -1116,6 +1148,8 @@ impl Engine<'_> {
                 } else {
                     Disposition::ExpiredInQueue
                 };
+                let kind = if q.deferrals == 0 { EventKind::Rejected } else { EventKind::Expired };
+                self.tracer.emit(t0, idx, q.id, kind);
                 self.servers[idx].windows.record_dropped(t0, self.outage_q);
                 let outcome = RequestOutcome {
                     id: q.id,
@@ -1136,11 +1170,13 @@ impl Engine<'_> {
                 self.horizon = self.horizon.max(t0);
                 dropped_now += 1;
             } else {
+                self.tracer.emit(t0, idx, q.id, EventKind::Admitted { epoch: epoch_index });
                 admitted.push(q);
             }
         }
 
         if admitted.is_empty() {
+            self.mark(t0, idx, EventKind::EpochDone { epoch: epoch_index });
             let w = &mut self.servers[idx].windows;
             w.record_solve(t0, cfg.solve_latency_s, timing.hidden_s);
             w.prune(t0);
@@ -1184,6 +1220,7 @@ impl Engine<'_> {
             }
         };
         let makespan = sol.outcome.schedule.makespan();
+        emit_batches(self.tracer, idx, t0, &sol.outcome.schedule);
 
         // Track the committed batch only while fault events remain: a
         // later death may cut it, and zero-fault runs must not pay (or
@@ -1247,6 +1284,7 @@ impl Engine<'_> {
         self.servers[idx].in_flight = in_flight;
 
         self.servers[idx].gpu_free_s = t0 + makespan;
+        self.mark(t0 + makespan, idx, EventKind::EpochDone { epoch: epoch_index });
         self.horizon = self.horizon.max(self.servers[idx].gpu_free_s);
         let w = &mut self.servers[idx].windows;
         w.record_solve(t0, cfg.solve_latency_s, timing.hidden_s);
@@ -1410,6 +1448,13 @@ impl Engine<'_> {
         };
         debug_assert!(self.outcomes[p.id].is_none(), "request {} resolved twice", p.id);
         self.outcomes[p.id] = Some(outcome);
+        // `t` can be a backdated absolute deadline (a parked request
+        // expires at its deadline, discovered only at the next recovery
+        // or at drain) — the one place the recorder mirrors a
+        // resolution instant that may precede already-emitted events.
+        // `obs::audit` exempts `Lost` from the per-request monotonicity
+        // rule for exactly this reason.
+        self.tracer.emit(t, server.unwrap_or(0), p.id, EventKind::Lost);
         if let Some(s) = server {
             self.servers[s].resolved_ids.push(p.id);
         }
@@ -1425,7 +1470,30 @@ impl Engine<'_> {
         }
     }
 
-    fn finish(self) -> EventReport {
+    /// Emit the `Delivered` events for every outcome still standing.
+    /// Deliveries are deferred to the end of the run because a
+    /// committed batch member's optimistic completion can be retracted
+    /// by a later death — and a flight recorder never un-records. Once
+    /// the event stream is drained, every served outcome is final.
+    /// Iteration is servers-in-order × resolution-order: deterministic.
+    fn emit_deliveries(&mut self) {
+        if !self.tracer.enabled() {
+            return;
+        }
+        for s in 0..self.servers.len() {
+            for i in 0..self.servers[s].resolved_ids.len() {
+                let id = self.servers[s].resolved_ids[i];
+                let o = self.outcomes[id].expect("resolved id has an outcome");
+                if o.disposition.is_served() {
+                    let kind = EventKind::Delivered { steps: o.steps as usize };
+                    self.tracer.emit(o.resolved_s, s, id, kind);
+                }
+            }
+        }
+    }
+
+    fn finish(mut self) -> EventReport {
+        self.emit_deliveries();
         let horizon = self.horizon;
         let fault_events = self.fault_events;
         let outcomes: Vec<RequestOutcome> = self
@@ -1492,8 +1560,25 @@ pub fn simulate_event_cluster(
     quality: &dyn QualityModel,
     cfg: &EventClusterConfig,
 ) -> EventReport {
+    simulate_event_cluster_traced(trace, scheduler, allocator, delay, quality, cfg, &mut NullSink)
+}
+
+/// [`simulate_event_cluster`] with a flight recorder attached: the
+/// full fault-aware lifecycle — routing, retraction, checkpoint
+/// transfer, resume — streams into `tracer`. Like
+/// [`simulate_dynamic_traced`](super::simulate_dynamic_traced), the
+/// sink only observes; outputs are bit-identical for any sink.
+pub fn simulate_event_cluster_traced(
+    trace: &ArrivalTrace,
+    scheduler: &dyn BatchScheduler,
+    allocator: &dyn Allocator,
+    delay: &BatchDelayModel,
+    quality: &dyn QualityModel,
+    cfg: &EventClusterConfig,
+    tracer: &mut dyn TraceSink,
+) -> EventReport {
     let allocators = vec![allocator; cfg.servers().max(1)];
-    run_event_cluster(trace, scheduler, allocators, delay, quality, cfg)
+    run_event_cluster(trace, scheduler, allocators, delay, quality, cfg, tracer)
 }
 
 /// [`simulate_event_cluster`] with per-server allocator instances from
@@ -1506,7 +1591,22 @@ pub fn simulate_event_cluster_pooled(
     quality: &dyn QualityModel,
     cfg: &EventClusterConfig,
 ) -> EventReport {
-    run_event_cluster(trace, scheduler, pool.refs(cfg.servers().max(1)), delay, quality, cfg)
+    let allocators = pool.refs(cfg.servers().max(1));
+    run_event_cluster(trace, scheduler, allocators, delay, quality, cfg, &mut NullSink)
+}
+
+/// [`simulate_event_cluster_pooled`] with a flight recorder attached.
+pub fn simulate_event_cluster_pooled_traced(
+    trace: &ArrivalTrace,
+    scheduler: &dyn BatchScheduler,
+    pool: &AllocatorPool,
+    delay: &BatchDelayModel,
+    quality: &dyn QualityModel,
+    cfg: &EventClusterConfig,
+    tracer: &mut dyn TraceSink,
+) -> EventReport {
+    let allocators = pool.refs(cfg.servers().max(1));
+    run_event_cluster(trace, scheduler, allocators, delay, quality, cfg, tracer)
 }
 
 fn run_event_cluster(
@@ -1516,6 +1616,7 @@ fn run_event_cluster(
     delay: &BatchDelayModel,
     quality: &dyn QualityModel,
     cfg: &EventClusterConfig,
+    tracer: &mut dyn TraceSink,
 ) -> EventReport {
     let n_servers = cfg.servers();
     assert!(n_servers >= 1, "cluster needs at least one server");
@@ -1554,6 +1655,7 @@ fn run_event_cluster(
         fault_log: Vec::new(),
         horizon: 0.0,
         outage_q: quality.outage(),
+        tracer,
     };
     engine.run();
     engine.finish()
@@ -2043,5 +2145,45 @@ mod tests {
             assert_eq!(x.resolved_s.to_bits(), y.resolved_s.to_bits());
         }
         assert_eq!(a.horizon_s.to_bits(), b.horizon_s.to_bits());
+    }
+
+    #[test]
+    fn traced_faulted_run_is_bit_identical_and_audits_clean() {
+        let t = trace(6.0, 60.0, 9);
+        let script = FaultScript::random(3, 60.0, 25.0, 8.0, 11);
+        let mut c = cfg(server_speeds(3, 0.5, 1.5), script, MigrationPolicyKind::Checkpoint);
+        c.transfer_s = 0.5;
+        let plain = run(&t, &c.view());
+        let capture = |rec: &mut crate::obs::Recorder| {
+            simulate_event_cluster_traced(
+                &t,
+                &Stacking::default(),
+                &EqualAllocator,
+                &BatchDelayModel::paper(),
+                &PowerLawQuality::paper(),
+                &c.view(),
+                rec,
+            )
+        };
+        let mut rec = crate::obs::Recorder::new();
+        let traced = capture(&mut rec);
+        assert_eq!(plain.assignment, traced.assignment);
+        assert_eq!(plain.horizon_s.to_bits(), traced.horizon_s.to_bits());
+        for (a, b) in plain.outcomes.iter().zip(&traced.outcomes) {
+            assert_eq!(a.disposition, b.disposition, "request {}", a.id);
+            assert_eq!(a.quality.to_bits(), b.quality.to_bits(), "request {}", a.id);
+            assert_eq!(a.e2e_s.to_bits(), b.e2e_s.to_bits(), "request {}", a.id);
+            assert_eq!(a.resolved_s.to_bits(), b.resolved_s.to_bits(), "request {}", a.id);
+        }
+        let audit = crate::obs::audit::audit_expecting(&rec.events, t.len());
+        assert!(audit.is_clean(), "{}", audit.render());
+        // ...and the capture itself replays bit-identically.
+        let mut rec2 = crate::obs::Recorder::new();
+        capture(&mut rec2);
+        assert_eq!(rec.events.len(), rec2.events.len());
+        for (x, y) in rec.events.iter().zip(&rec2.events) {
+            assert_eq!(x.t_s.to_bits(), y.t_s.to_bits());
+            assert_eq!((x.server, x.request, x.kind), (y.server, y.request, y.kind));
+        }
     }
 }

@@ -9,16 +9,18 @@ pub mod event;
 pub mod joint;
 
 pub use cluster::{
-    server_speeds, simulate_cluster, simulate_cluster_pooled, ClusterConfig, ClusterReport,
-    ServerReport,
+    server_speeds, simulate_cluster, simulate_cluster_pooled, simulate_cluster_pooled_traced,
+    simulate_cluster_traced, ClusterConfig, ClusterReport, ServerReport,
 };
 pub use dynamic::{
     censored_delays, mean_censored_delay, simulate_dynamic, simulate_dynamic_streaming,
-    Disposition, DynamicConfig, DynamicReport, EpochRecord, RequestOutcome, StreamingDynamicReport,
+    simulate_dynamic_traced, Disposition, DynamicConfig, DynamicReport, EpochRecord,
+    RequestOutcome, StreamingDynamicReport,
 };
 pub use event::{
-    simulate_event_cluster, simulate_event_cluster_pooled, EventClusterConfig, EventReport,
-    EventServerReport, MigrationReason, MigrationRecord, UNROUTED,
+    simulate_event_cluster, simulate_event_cluster_pooled, simulate_event_cluster_pooled_traced,
+    simulate_event_cluster_traced, EventClusterConfig, EventReport, EventServerReport,
+    MigrationReason, MigrationRecord, UNROUTED,
 };
 pub use joint::{solve_joint, JointSolution};
 

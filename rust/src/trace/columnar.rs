@@ -29,33 +29,34 @@ const HEADER_LEN: usize = 8 + 4 + 4 + 8 + 8 + 8;
 /// Default requests per frame: 64 KiB of payload per column chunk.
 pub const DEFAULT_CHUNK_LEN: usize = 8192;
 
-fn push_u32(out: &mut Vec<u8>, v: u32) {
+// Shared with `obs::span`, which frames its span streams the same way.
+pub(crate) fn push_u32(out: &mut Vec<u8>, v: u32) {
     out.extend_from_slice(&v.to_le_bytes());
 }
 
-fn push_u64(out: &mut Vec<u8>, v: u64) {
+pub(crate) fn push_u64(out: &mut Vec<u8>, v: u64) {
     out.extend_from_slice(&v.to_le_bytes());
 }
 
-fn push_f64(out: &mut Vec<u8>, v: f64) {
+pub(crate) fn push_f64(out: &mut Vec<u8>, v: f64) {
     out.extend_from_slice(&v.to_le_bytes());
 }
 
-fn read_u32(bytes: &[u8], pos: &mut usize) -> Result<u32> {
+pub(crate) fn read_u32(bytes: &[u8], pos: &mut usize) -> Result<u32> {
     ensure!(bytes.len() >= *pos + 4, "columnar trace truncated at byte {}", *pos);
     let v = u32::from_le_bytes(bytes[*pos..*pos + 4].try_into().unwrap());
     *pos += 4;
     Ok(v)
 }
 
-fn read_u64(bytes: &[u8], pos: &mut usize) -> Result<u64> {
+pub(crate) fn read_u64(bytes: &[u8], pos: &mut usize) -> Result<u64> {
     ensure!(bytes.len() >= *pos + 8, "columnar trace truncated at byte {}", *pos);
     let v = u64::from_le_bytes(bytes[*pos..*pos + 8].try_into().unwrap());
     *pos += 8;
     Ok(v)
 }
 
-fn read_f64(bytes: &[u8], pos: &mut usize) -> Result<f64> {
+pub(crate) fn read_f64(bytes: &[u8], pos: &mut usize) -> Result<f64> {
     Ok(f64::from_bits(read_u64(bytes, pos)?))
 }
 

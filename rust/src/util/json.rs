@@ -333,6 +333,73 @@ impl Json {
     pub fn required<'a>(&'a self, key: &str) -> anyhow::Result<&'a Json> {
         self.get(key).ok_or_else(|| anyhow::anyhow!("missing json field '{key}'"))
     }
+
+    /// Serialize back to JSON text. Deterministic: object keys emit in
+    /// `BTreeMap` order, numbers use Rust's shortest-roundtrip float
+    /// formatting, and there is no insignificant whitespace — so
+    /// `parse(render(v)) == v` and equal values render byte-identically
+    /// (the bench-artifact merge in `benches/fig_serialization.rs`
+    /// relies on both).
+    ///
+    /// # Panics
+    /// On non-finite numbers: the parser refuses them, so a value
+    /// holding inf/NaN was built by broken code and must not
+    /// round-trip silently as `null`.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        self.render_into(&mut out);
+        out
+    }
+
+    fn render_into(&self, out: &mut String) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Num(n) => {
+                assert!(n.is_finite(), "JSON cannot represent non-finite number {n}");
+                out.push_str(&format!("{n}"));
+            }
+            Json::Str(s) => render_string(s, out),
+            Json::Arr(items) => {
+                out.push('[');
+                for (i, v) in items.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    v.render_into(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(map) => {
+                out.push('{');
+                for (i, (k, v)) in map.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    render_string(k, out);
+                    out.push(':');
+                    v.render_into(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+}
+
+fn render_string(s: &str, out: &mut String) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
 }
 
 #[cfg(test)]
@@ -431,6 +498,42 @@ mod tests {
         }
         // Large but finite literals still parse.
         assert_eq!(parse("1e20").unwrap(), Json::Num(1e20));
+    }
+
+    #[test]
+    fn render_roundtrips_and_is_deterministic() {
+        let doc = r#"{
+          "z": [1, 2.5, -3e2, true, null, "a\nb\t\"c\""],
+          "a": {"nested": {"k": 0.1}}, "empty_arr": [], "empty_obj": {}
+        }"#;
+        let v = parse(doc).unwrap();
+        let text = v.render();
+        // Round-trip preserves the value exactly...
+        assert_eq!(parse(&text).unwrap(), v);
+        // ...and rendering is a fixpoint (sorted keys, no whitespace).
+        assert_eq!(parse(&text).unwrap().render(), text);
+        assert!(text.starts_with("{\"a\":"), "keys sort: {text}");
+        assert!(text.contains("\"empty_arr\":[]"), "{text}");
+        assert!(text.contains("\"empty_obj\":{}"), "{text}");
+        assert!(text.contains("-300"), "{text}");
+    }
+
+    #[test]
+    fn render_escapes_and_float_bits_survive() {
+        let v = Json::Str("quote \" slash \\ nl \n ctl \u{1}".into());
+        assert_eq!(parse(&v.render()).unwrap(), v);
+        // Shortest-roundtrip float formatting must reparse bit-exactly.
+        for x in [0.1, 1.0 / 3.0, 6.02e23, -4.9e-14, 9_007_199_254_740_992.0] {
+            let n = Json::Num(x);
+            let back = parse(&n.render()).unwrap().as_f64().unwrap();
+            assert_eq!(back.to_bits(), x.to_bits(), "{x}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "non-finite")]
+    fn render_refuses_non_finite_numbers() {
+        Json::Num(f64::INFINITY).render();
     }
 
     #[test]

@@ -1,0 +1,172 @@
+//! Span-audit correctness harness (the flight recorder's property
+//! suite): every capture either engine can produce — across random
+//! traces × routers × fault scripts × migration policies — must pass
+//! the `obs::audit` lifecycle DFA with zero violations and conserve
+//! the request count. CI runs this under `cargo test`; a single
+//! lifecycle violation anywhere in the sweep fails the job.
+//!
+//! The audit is only a gate if it can actually fail, so the last test
+//! corrupts a clean capture in targeted ways (dropped birth,
+//! duplicated terminal, wrong census) and asserts each is flagged.
+
+use aigc_edge::bandwidth::EqualAllocator;
+use aigc_edge::config::ExperimentConfig;
+use aigc_edge::delay::BatchDelayModel;
+use aigc_edge::faults::{DownInterval, FaultScript, MigrationPolicyKind};
+use aigc_edge::obs::{audit, EventKind, Recorder, TraceEvent};
+use aigc_edge::quality::PowerLawQuality;
+use aigc_edge::routing::RouterKind;
+use aigc_edge::scheduler::Stacking;
+use aigc_edge::sim::{
+    server_speeds, simulate_cluster_traced, simulate_event_cluster_traced, ClusterConfig,
+    DynamicConfig, EventClusterConfig,
+};
+use aigc_edge::trace::ArrivalTrace;
+
+fn trace(rate_hz: f64, horizon_s: f64, seed: u64) -> ArrivalTrace {
+    let mut cfg = ExperimentConfig::paper();
+    cfg.arrival.rate_hz = rate_hz;
+    cfg.arrival.horizon_s = horizon_s;
+    ArrivalTrace::generate(&cfg.scenario, &cfg.arrival, seed)
+}
+
+fn dyn_cfg() -> DynamicConfig {
+    (&ExperimentConfig::paper().dynamic).into()
+}
+
+/// The three fault regimes the `faults` CLI exposes: none, a scheduled
+/// pair of mid-trace outages, and a seeded random MTBF/MTTR script.
+fn scripts(servers: usize, horizon_s: f64, seed: u64) -> Vec<FaultScript> {
+    let downs = vec![
+        DownInterval::new(0, horizon_s * 0.2, horizon_s * 0.35).unwrap(),
+        DownInterval::new(servers - 1, horizon_s * 0.5, horizon_s * 0.65).unwrap(),
+    ];
+    let scheduled = FaultScript::scheduled(downs).unwrap();
+    let random = FaultScript::random(servers, horizon_s, horizon_s / 3.0, horizon_s / 8.0, seed);
+    vec![FaultScript::empty(), scheduled, random]
+}
+
+fn assert_clean(events: &[TraceEvent], n: usize, ctx: &str) {
+    let report = audit::audit_expecting(events, n);
+    assert!(report.is_clean(), "{ctx}:\n{}", report.render());
+    assert!(events.len() >= 2 * n, "{ctx}: capture too sparse ({} events)", events.len());
+}
+
+#[test]
+fn event_engine_captures_audit_clean_across_the_grid() {
+    let scheduler = Stacking::default();
+    let delay = BatchDelayModel::paper();
+    let quality = PowerLawQuality::paper();
+    let servers = 3;
+    let horizon_s = 40.0;
+    let speeds = server_speeds(servers, 0.5, 1.5);
+    for seed in [1u64, 2] {
+        let t = trace(5.0, horizon_s, seed);
+        for router in RouterKind::with_live() {
+            for (si, script) in scripts(servers, horizon_s, seed).iter().enumerate() {
+                for policy in MigrationPolicyKind::all() {
+                    let cfg = EventClusterConfig {
+                        speeds: &speeds,
+                        router,
+                        dynamic: dyn_cfg(),
+                        faults: script,
+                        migration: policy,
+                        resume_transfer_s: 0.25,
+                    };
+                    let mut rec = Recorder::new();
+                    simulate_event_cluster_traced(
+                        &t,
+                        &scheduler,
+                        &EqualAllocator,
+                        &delay,
+                        &quality,
+                        &cfg,
+                        &mut rec,
+                    );
+                    let ctx = format!(
+                        "seed {seed} router {} script {si} policy {}",
+                        router.name(),
+                        policy.name(),
+                    );
+                    assert_clean(&rec.events, t.len(), &ctx);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn sequential_cluster_captures_audit_clean_for_every_virtual_router() {
+    let scheduler = Stacking::default();
+    let delay = BatchDelayModel::paper();
+    let quality = PowerLawQuality::paper();
+    for seed in [1u64, 2] {
+        let t = trace(5.0, 40.0, seed);
+        for router in RouterKind::all() {
+            let cfg = ClusterConfig {
+                speeds: server_speeds(3, 0.5, 1.5),
+                router,
+                dynamic: dyn_cfg(),
+            };
+            let mut rec = Recorder::new();
+            simulate_cluster_traced(
+                &t,
+                &scheduler,
+                &EqualAllocator,
+                &delay,
+                &quality,
+                &cfg,
+                &mut rec,
+            );
+            let ctx = format!("seed {seed} router {}", router.name());
+            assert_clean(&rec.events, t.len(), &ctx);
+            // The merge loop synthesizes exactly one Routed per arrival.
+            let routed = rec.events.iter().filter(|e| matches!(e.kind, EventKind::Routed { .. }));
+            assert_eq!(routed.count(), t.len(), "{ctx}: routing events");
+        }
+    }
+}
+
+#[test]
+fn audit_flags_corrupted_captures() {
+    let t = trace(5.0, 30.0, 3);
+    let speeds = server_speeds(3, 0.5, 1.5);
+    let faults = FaultScript::random(3, 30.0, 10.0, 4.0, 9);
+    let cfg = EventClusterConfig {
+        speeds: &speeds,
+        router: RouterKind::JoinShortestQueue,
+        dynamic: dyn_cfg(),
+        faults: &faults,
+        migration: MigrationPolicyKind::Checkpoint,
+        resume_transfer_s: 0.25,
+    };
+    let mut rec = Recorder::new();
+    simulate_event_cluster_traced(
+        &t,
+        &Stacking::default(),
+        &EqualAllocator,
+        &BatchDelayModel::paper(),
+        &PowerLawQuality::paper(),
+        &cfg,
+        &mut rec,
+    );
+    let events = rec.events;
+    assert!(audit::audit_expecting(&events, t.len()).is_clean());
+
+    // A request whose birth never made it into the stream.
+    let orphaned: Vec<TraceEvent> = events
+        .iter()
+        .copied()
+        .filter(|e| !(e.kind == EventKind::Arrived && e.request == 0))
+        .collect();
+    assert!(!audit::audit_expecting(&orphaned, t.len()).is_clean(), "dropped birth not flagged");
+
+    // A request resolved twice (double-counted by a buggy engine).
+    let dup = events.iter().copied().find(|e| e.kind.is_terminal()).expect("a terminal event");
+    let mut doubled = events.clone();
+    doubled.push(dup);
+    assert!(!audit::audit(&doubled).is_clean(), "duplicated terminal not flagged");
+
+    // A census mismatch: the trace claims more requests than captured.
+    assert!(!audit::audit_expecting(&events, t.len() + 1).is_clean(), "census gap not flagged");
+}
