@@ -21,7 +21,7 @@ use std::time::Instant;
 
 use aigc_edge::channel::Link;
 use aigc_edge::config::ExperimentConfig;
-use aigc_edge::trace::{columnar, Arrival, ArrivalTrace};
+use aigc_edge::trace::{columnar, Arrival, ArrivalTrace, PromptMark};
 use aigc_edge::util::json::{self, Json};
 
 /// Columnar JSON codec for a trace (arrays per column). f64 `Display`
@@ -63,7 +63,15 @@ fn from_json(text: &str) -> ArrivalTrace {
         .zip(&deadline_s)
         .zip(&eta)
         .enumerate()
-        .map(|(id, ((&t, &d), &e))| Arrival { id, t_s: t, deadline_s: d, link: Link::new(e) })
+        .map(|(id, ((&t, &d), &e))| Arrival {
+            id,
+            t_s: t,
+            deadline_s: d,
+            link: Link::new(e),
+            // This bench's JSON codec predates prompt marks; the bench
+            // trace is unmarked, so zero round-trips faithfully.
+            mark: PromptMark::ZERO,
+        })
         .collect();
     ArrivalTrace {
         arrivals,

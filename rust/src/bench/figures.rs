@@ -2,6 +2,7 @@
 //! and returns the rows for assertions in tests/benches.
 
 use crate::bandwidth::{Allocator, EqualAllocator, PsoAllocator, PsoConfig};
+use crate::cache::CacheSettings;
 use crate::config::ExperimentConfig;
 use crate::coordinator::{profile_batch_delay, ProfileConfig, SolveMode};
 use crate::delay::BatchDelayModel;
@@ -811,6 +812,130 @@ pub fn fig_pipeline(
     rows
 }
 
+// ---------------------------------------------------------------------------
+// Generation-cache figure (new) — Zipf skew × capacity × router on the event
+// engine
+// ---------------------------------------------------------------------------
+
+/// One (Zipf `s`, per-server capacity, router) cell of the cache sweep.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FigCacheRow {
+    pub zipf_s: f64,
+    pub capacity: usize,
+    pub router: RouterKind,
+    pub requests: usize,
+    pub served: usize,
+    /// Requests answered straight from a server cache.
+    pub served_from_cache: usize,
+    /// Fleet hit rate: hits / (hits + misses) over marked lookups.
+    pub hit_rate: f64,
+    /// Model catalog loads/swaps charged across the fleet.
+    pub swaps: u64,
+    pub mean_quality: f64,
+    pub outage_rate: f64,
+    /// p99 of the deadline-censored end-to-end delays.
+    pub p99_e2e_censored_s: f64,
+}
+
+/// Sweep prompt-popularity skew (Zipf `s`) × per-server cache capacity
+/// × router (virtual-queue JSQ vs the cache-aware policy) on the
+/// configured fleet through the zero-fault event engine, caches
+/// enabled in every cell. Each skew draws its own seeded marked trace
+/// over a 64-prompt, two-model universe, shared by its capacity ×
+/// router cells so columns are directly comparable. The paper-level
+/// claim — content-addressed reuse plus placement-aware dispatch
+/// strictly beats load-only dispatch on served quality and on the
+/// censored p99 once popularity is skewed — is asserted at bench scale
+/// by `benches/fig_cache.rs` (which also pins bit-identical replay and
+/// writes `BENCH_pr9.json`).
+pub fn fig_cache(
+    cfg: &ExperimentConfig,
+    zipf_exponents: &[f64],
+    capacities: &[usize],
+    horizon_s: f64,
+) -> Vec<FigCacheRow> {
+    let delay = BatchDelayModel::new(cfg.delay.a, cfg.delay.b);
+    let quality = PowerLawQuality::paper();
+    let scheduler = Stacking::default();
+    let allocator = EqualAllocator;
+    let speeds = server_speeds(cfg.cluster.servers, cfg.cluster.speed_min, cfg.cluster.speed_max);
+    let routers = [RouterKind::JoinShortestQueue, RouterKind::CacheAware];
+    let mut table = TableWriter::new(
+        "Generation cache — Zipf skew × capacity × router: reuse per cell",
+        &[
+            "zipf s", "cap", "router", "requests", "served", "cached", "hit rate", "swaps",
+            "mean FID", "outage", "p99 e2e*",
+        ],
+    )
+    .with_csv("fig_cache");
+    let traces: Vec<ArrivalTrace> = (0..zipf_exponents.len())
+        .map(|i| {
+            let mut arrival = cfg.arrival;
+            arrival.process = crate::config::ArrivalProcessKind::Poisson;
+            arrival.horizon_s = horizon_s;
+            arrival.prompt_universe = 64;
+            arrival.zipf_s = zipf_exponents[i];
+            arrival.models = 2;
+            ArrivalTrace::generate(&cfg.scenario, &arrival, cfg.seed + i as u64)
+        })
+        .collect();
+    let cells: Vec<(usize, usize, RouterKind)> = (0..zipf_exponents.len())
+        .flat_map(|i| {
+            capacities
+                .iter()
+                .flat_map(move |&cap| routers.into_iter().map(move |router| (i, cap, router)))
+        })
+        .collect();
+    let rows: Vec<FigCacheRow> = par_map(cfg.perf.threads, &cells, |_, &(i, capacity, router)| {
+        let trace = &traces[i];
+        let mut dynamic = DynamicConfig::from(&cfg.dynamic);
+        dynamic.cache = CacheSettings { enabled: true, capacity, ..cfg.cache };
+        let event_cfg = EventClusterConfig {
+            speeds: &speeds,
+            router,
+            dynamic,
+            faults: &NO_FAULTS,
+            migration: MigrationPolicyKind::None,
+            resume_transfer_s: 0.0,
+        };
+        let report =
+            simulate_event_cluster(trace, &scheduler, &allocator, &delay, &quality, &event_cfg);
+        let stats = report.fleet_stats();
+        let cs = report.cache_stats();
+        FigCacheRow {
+            zipf_s: zipf_exponents[i],
+            capacity,
+            router,
+            requests: trace.len(),
+            served: report.served(),
+            served_from_cache: report.served_from_cache(),
+            hit_rate: cs.hit_rate(),
+            swaps: cs.swaps,
+            mean_quality: stats.mean_quality,
+            outage_rate: stats.outage_rate,
+            p99_e2e_censored_s: report.e2e_censored_percentile(99.0),
+        }
+    });
+    for row in &rows {
+        table.row(&[
+            format!("{:.2}", row.zipf_s),
+            row.capacity.to_string(),
+            row.router.name().to_string(),
+            row.requests.to_string(),
+            row.served.to_string(),
+            row.served_from_cache.to_string(),
+            format!("{:.3}", row.hit_rate),
+            row.swaps.to_string(),
+            format!("{:.2}", row.mean_quality),
+            format!("{:.3}", row.outage_rate),
+            format!("{:.2}", row.p99_e2e_censored_s),
+        ]);
+    }
+    table.finish();
+    println!("(* deadline-censored: dropped requests charge their relative deadline)");
+    rows
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1041,6 +1166,34 @@ mod tests {
         }
         // bit-identical replay
         assert_eq!(rows, fig_pipeline(&cfg, &[0.0, 0.3], 30.0));
+    }
+
+    #[test]
+    fn fig_cache_covers_cells_hits_at_high_skew_and_replays() {
+        let mut cfg = ExperimentConfig::paper();
+        cfg.cluster.servers = 2;
+        cfg.cluster.speed_min = 0.5;
+        cfg.cluster.speed_max = 1.5;
+        cfg.arrival.rate_hz = 5.0;
+        let rows = fig_cache(&cfg, &[0.6, 1.8], &[8, 64], 30.0);
+        assert_eq!(rows.len(), 2 * 2 * 2);
+        for row in &rows {
+            assert!(row.served <= row.requests);
+            assert!(row.served_from_cache <= row.served);
+            assert!((0.0..=1.0).contains(&row.hit_rate));
+            assert!((0.0..=1.0).contains(&row.outage_rate));
+            assert!(row.swaps > 0, "two models on the default single slot must swap: {row:?}");
+        }
+        // High skew with a roomy cache must actually reuse content.
+        let hot = rows
+            .iter()
+            .find(|r| r.zipf_s == 1.8 && r.capacity == 64 && r.router == RouterKind::CacheAware)
+            .unwrap();
+        assert!(hot.served_from_cache > 0, "{hot:?}");
+        assert!(hot.hit_rate > 0.0, "{hot:?}");
+        // bit-identical replay (strict JSQ-dominance is asserted at
+        // bench scale by benches/fig_cache.rs)
+        assert_eq!(rows, fig_cache(&cfg, &[0.6, 1.8], &[8, 64], 30.0));
     }
 
     #[test]

@@ -1,0 +1,495 @@
+//! Deterministic content-addressed generation cache + model catalogs.
+//!
+//! Real AIGC edge fleets see heavy-tailed prompt popularity, so the
+//! biggest latency win available is not a faster denoising loop but
+//! skipping denoising entirely: a [`GenCache`] hit pays only the
+//! paper's transmission phase, turning the (P1) generation cost into a
+//! lookup. Entries are keyed on the arrival's
+//! [`PromptMark`](crate::trace::PromptMark) `(model_id, prompt_id)`
+//! and store the *best step count* generated so far — a re-generation
+//! at higher quality upgrades the entry in place.
+//!
+//! Everything here is deterministic: eviction is either CLOCK
+//! (second-chance, no randomness at all) or seeded-random on the
+//! in-tree PCG — never wall clock — so cache-enabled runs replay
+//! bit-identically per seed. The whole subsystem sits behind the
+//! off-by-default `[cache]` config; with `enabled = false` no engine
+//! constructs any of these types and runs stay bitwise identical to
+//! the pre-cache engines (the same zero-cost discipline as
+//! `obs::NullSink`).
+//!
+//! [`ModelCatalog`] models the placement half: a server holds at most
+//! `model_slots` diffusion models resident; routing a request whose
+//! model is absent charges `load_delay_s` of swap time (tightening the
+//! request's residual deadline) and evicts the oldest-loaded model
+//! round-robin.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Result};
+
+use crate::trace::PromptMark;
+use crate::util::Pcg64;
+
+/// Dedicated PCG stream for cache eviction draws.
+const CACHE_STREAM: u64 = 0xCAC4E;
+
+/// Deterministic eviction policy for a full [`GenCache`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EvictionKind {
+    /// CLOCK / second-chance: a hand sweeps the slot table, clearing
+    /// referenced bits until it finds an unreferenced victim. No
+    /// randomness at all.
+    Clock,
+    /// Seeded-random victim selection on the in-tree PCG.
+    SeededRandom,
+}
+
+impl EvictionKind {
+    pub fn from_name(name: &str) -> Result<Self> {
+        match name {
+            "clock" | "second-chance" => Ok(Self::Clock),
+            "random" | "seeded-random" => Ok(Self::SeededRandom),
+            _ => bail!(
+                "unknown eviction policy '{name}' (expected \"clock\" | \"second-chance\" | \
+                 \"random\" | \"seeded-random\")"
+            ),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Clock => "clock",
+            Self::SeededRandom => "random",
+        }
+    }
+}
+
+/// Generation-cache settings. TOML section `[cache]`; disabled by
+/// default so every existing recipe replays bit-identically.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CacheSettings {
+    /// Master switch: `false` means no engine constructs a cache at
+    /// all (the bit-identity position).
+    pub enabled: bool,
+    /// Entries per server; 0 disables caching but keeps the model
+    /// catalog (placement-only mode).
+    pub capacity: usize,
+    pub eviction: EvictionKind,
+    /// Diffusion models resident per server at once.
+    pub model_slots: usize,
+    /// Seconds charged to load/swap a model that is not resident.
+    pub load_delay_s: f64,
+    /// Seed for the seeded-random eviction draws; 0 = derive from the
+    /// experiment seed at the CLI layer.
+    pub seed: u64,
+}
+
+impl Default for CacheSettings {
+    fn default() -> Self {
+        Self {
+            enabled: false,
+            capacity: 64,
+            eviction: EvictionKind::Clock,
+            model_slots: 1,
+            load_delay_s: 0.5,
+            seed: 0,
+        }
+    }
+}
+
+/// Hit/miss/eviction counters for one cache (or a fleet merge).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub insertions: u64,
+    pub evictions: u64,
+    /// Model catalog loads/swaps charged.
+    pub swaps: u64,
+}
+
+impl CacheStats {
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+
+    pub fn merge(&mut self, other: &CacheStats) {
+        self.hits += other.hits;
+        self.misses += other.misses;
+        self.insertions += other.insertions;
+        self.evictions += other.evictions;
+        self.swaps += other.swaps;
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+struct Slot {
+    key: PromptMark,
+    /// Best step count generated for this key so far (more steps =
+    /// better quality under the paper's monotone quality curve).
+    steps: u32,
+    /// CLOCK second-chance bit, set on every hit.
+    referenced: bool,
+}
+
+/// Capacity-bounded content-addressed cache: `(model, prompt)` → best
+/// generated step count. O(1) lookup via a position index; eviction by
+/// the configured deterministic policy.
+#[derive(Debug, Clone)]
+pub struct GenCache {
+    capacity: usize,
+    slots: Vec<Slot>,
+    index: HashMap<PromptMark, usize>,
+    /// CLOCK hand.
+    hand: usize,
+    rng: Pcg64,
+    eviction: EvictionKind,
+    pub stats: CacheStats,
+}
+
+impl GenCache {
+    pub fn new(capacity: usize, eviction: EvictionKind, seed: u64) -> Self {
+        Self {
+            capacity,
+            slots: Vec::with_capacity(capacity.min(1024)),
+            index: HashMap::new(),
+            hand: 0,
+            rng: Pcg64::new(seed, CACHE_STREAM),
+            eviction,
+            stats: CacheStats::default(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+
+    /// Admission-time probe: `Some(best_steps)` on a hit (refreshing
+    /// the entry's second-chance bit), `None` on a miss. Both update
+    /// the stats.
+    pub fn lookup(&mut self, key: PromptMark) -> Option<u32> {
+        match self.index.get(&key) {
+            Some(&pos) => {
+                self.slots[pos].referenced = true;
+                self.stats.hits += 1;
+                Some(self.slots[pos].steps)
+            }
+            None => {
+                self.stats.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Record a freshly generated result. An existing entry upgrades
+    /// to the better (higher) step count; a new key evicts if the
+    /// cache is at capacity.
+    pub fn insert(&mut self, key: PromptMark, steps: u32) {
+        if self.capacity == 0 {
+            return;
+        }
+        if let Some(&pos) = self.index.get(&key) {
+            if steps > self.slots[pos].steps {
+                self.slots[pos].steps = steps;
+            }
+            self.slots[pos].referenced = true;
+            return;
+        }
+        if self.slots.len() >= self.capacity {
+            self.evict_one();
+        }
+        let pos = self.slots.len();
+        self.slots.push(Slot { key, steps, referenced: false });
+        self.index.insert(key, pos);
+        self.stats.insertions += 1;
+    }
+
+    /// Drop one victim chosen by the configured policy. The freed slot
+    /// is filled by swap-remove, so the index entry of the moved slot
+    /// is repaired in place.
+    fn evict_one(&mut self) {
+        debug_assert!(!self.slots.is_empty());
+        let victim = match self.eviction {
+            EvictionKind::Clock => {
+                // Second chance: clear referenced bits until an
+                // unreferenced slot comes under the hand. Terminates
+                // within two sweeps.
+                loop {
+                    let pos = self.hand % self.slots.len();
+                    self.hand = (pos + 1) % self.slots.len();
+                    if self.slots[pos].referenced {
+                        self.slots[pos].referenced = false;
+                    } else {
+                        break pos;
+                    }
+                }
+            }
+            EvictionKind::SeededRandom => self.rng.below(self.slots.len() as u64) as usize,
+        };
+        let removed = self.slots.swap_remove(victim);
+        self.index.remove(&removed.key);
+        if victim < self.slots.len() {
+            self.index.insert(self.slots[victim].key, victim);
+        }
+        self.stats.evictions += 1;
+    }
+
+    /// Does the cache currently hold `key`? Read-only (no stats, no
+    /// second-chance refresh) — the router's shadow probe.
+    pub fn contains(&self, key: PromptMark) -> bool {
+        self.index.contains_key(&key)
+    }
+
+    /// Counter snapshot for this cache alone (no catalog swaps).
+    pub fn stats(&self) -> CacheStats {
+        self.stats
+    }
+}
+
+/// Which diffusion models a server holds resident. Model 0 is loaded
+/// at boot; replacement is round-robin over the slots (deterministic,
+/// no clocks).
+#[derive(Debug, Clone)]
+pub struct ModelCatalog {
+    slot_count: usize,
+    resident: Vec<u32>,
+    /// Round-robin replacement cursor.
+    next: usize,
+}
+
+impl ModelCatalog {
+    pub fn new(slot_count: usize) -> Self {
+        let slot_count = slot_count.max(1);
+        Self { slot_count, resident: vec![0], next: 0 }
+    }
+
+    pub fn is_resident(&self, model: u32) -> bool {
+        self.resident.contains(&model)
+    }
+
+    /// Make `model` resident, returning `true` iff a load/swap was
+    /// needed (the caller charges the load delay).
+    pub fn ensure_resident(&mut self, model: u32) -> bool {
+        if self.is_resident(model) {
+            return false;
+        }
+        if self.resident.len() < self.slot_count {
+            self.resident.push(model);
+        } else {
+            self.resident[self.next] = model;
+            self.next = (self.next + 1) % self.slot_count;
+        }
+        true
+    }
+}
+
+/// One server's cache state: the generation cache plus the model
+/// catalog, behind the admission-time API the engines call.
+#[derive(Debug, Clone)]
+pub struct ServerCache {
+    pub cache: GenCache,
+    pub catalog: ModelCatalog,
+    load_delay_s: f64,
+}
+
+impl ServerCache {
+    pub fn new(settings: &CacheSettings) -> Self {
+        Self {
+            cache: GenCache::new(settings.capacity, settings.eviction, settings.seed),
+            catalog: ModelCatalog::new(settings.model_slots),
+            load_delay_s: settings.load_delay_s,
+        }
+    }
+
+    /// One per server; every instance seeds identically (the caches
+    /// diverge by content, not by stream).
+    pub fn fleet(settings: &CacheSettings, n: usize) -> Vec<ServerCache> {
+        (0..n).map(|_| ServerCache::new(settings)).collect()
+    }
+
+    /// Admission-time probe: `Some(best_steps)` bypasses the epoch
+    /// batch entirely (a hit needs no GPU and no resident model).
+    pub fn lookup(&mut self, mark: PromptMark) -> Option<u32> {
+        self.cache.lookup(mark)
+    }
+
+    /// Charge for the request's model on a miss: 0.0 when resident,
+    /// `load_delay_s` when a load/swap had to happen.
+    pub fn ensure_resident(&mut self, model: u32) -> f64 {
+        if self.catalog.ensure_resident(model) {
+            self.cache.stats.swaps += 1;
+            self.load_delay_s
+        } else {
+            0.0
+        }
+    }
+
+    /// Record a freshly served generation.
+    pub fn insert(&mut self, mark: PromptMark, steps: u32) {
+        self.cache.insert(mark, steps);
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        self.cache.stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mark(model: u32, prompt: u32) -> PromptMark {
+        PromptMark { model, prompt }
+    }
+
+    fn settings(capacity: usize, eviction: EvictionKind) -> CacheSettings {
+        CacheSettings {
+            enabled: true,
+            capacity,
+            eviction,
+            model_slots: 2,
+            load_delay_s: 0.5,
+            seed: 7,
+        }
+    }
+
+    #[test]
+    fn eviction_names_round_trip_and_bad_name_lists_valid() {
+        for kind in [EvictionKind::Clock, EvictionKind::SeededRandom] {
+            assert_eq!(EvictionKind::from_name(kind.name()).unwrap(), kind);
+        }
+        assert_eq!(EvictionKind::from_name("second-chance").unwrap(), EvictionKind::Clock);
+        assert_eq!(EvictionKind::from_name("seeded-random").unwrap(), EvictionKind::SeededRandom);
+        let err = EvictionKind::from_name("lru").unwrap_err().to_string();
+        assert!(err.contains("clock") && err.contains("random"), "{err}");
+    }
+
+    #[test]
+    fn hit_after_insert_and_best_steps_monotone() {
+        let mut c = GenCache::new(8, EvictionKind::Clock, 1);
+        assert_eq!(c.lookup(mark(0, 1)), None);
+        c.insert(mark(0, 1), 40);
+        assert_eq!(c.lookup(mark(0, 1)), Some(40));
+        // Upgrades keep the best step count; downgrades are ignored.
+        c.insert(mark(0, 1), 25);
+        assert_eq!(c.lookup(mark(0, 1)), Some(40));
+        c.insert(mark(0, 1), 90);
+        assert_eq!(c.lookup(mark(0, 1)), Some(90));
+        assert_eq!(c.stats.insertions, 1, "upgrades are not new insertions");
+        assert_eq!(c.stats.hits, 3);
+        assert_eq!(c.stats.misses, 1);
+        // Distinct models are distinct content even at equal prompts.
+        assert_eq!(c.lookup(mark(1, 1)), None);
+    }
+
+    #[test]
+    fn eviction_never_exceeds_capacity() {
+        for eviction in [EvictionKind::Clock, EvictionKind::SeededRandom] {
+            let mut c = GenCache::new(4, eviction, 9);
+            for p in 0..100u32 {
+                c.insert(mark(0, p), p + 1);
+                assert!(c.len() <= 4, "{eviction:?}");
+            }
+            assert_eq!(c.len(), 4, "{eviction:?}");
+            assert_eq!(c.stats.evictions, 96, "{eviction:?}");
+            // The index stays consistent through swap-removes: every
+            // resident key still resolves to its own steps.
+            let resident: Vec<Slot> = c.slots.clone();
+            for s in resident {
+                assert_eq!(c.lookup(s.key), Some(s.steps), "{eviction:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn zero_capacity_never_stores() {
+        let mut c = GenCache::new(0, EvictionKind::Clock, 3);
+        c.insert(mark(0, 5), 10);
+        assert!(c.is_empty());
+        assert_eq!(c.lookup(mark(0, 5)), None);
+        assert_eq!(c.stats.insertions, 0);
+    }
+
+    #[test]
+    fn clock_second_chance_protects_referenced_entries() {
+        let mut c = GenCache::new(2, EvictionKind::Clock, 1);
+        c.insert(mark(0, 1), 10);
+        c.insert(mark(0, 2), 10);
+        // Touch prompt 1: its referenced bit shields it from the next
+        // eviction, so inserting prompt 3 must evict prompt 2.
+        assert_eq!(c.lookup(mark(0, 1)), Some(10));
+        c.insert(mark(0, 3), 10);
+        assert!(c.contains(mark(0, 1)), "referenced entry survives");
+        assert!(!c.contains(mark(0, 2)), "unreferenced entry is the victim");
+        assert!(c.contains(mark(0, 3)));
+    }
+
+    #[test]
+    fn seeded_random_eviction_is_deterministic_per_seed() {
+        let run = |seed: u64| {
+            let mut c = GenCache::new(8, EvictionKind::SeededRandom, seed);
+            for p in 0..200u32 {
+                c.insert(mark(p % 3, p), p);
+            }
+            let mut keys: Vec<(u32, u32)> =
+                c.slots.iter().map(|s| (s.key.model, s.key.prompt)).collect();
+            keys.sort_unstable();
+            keys
+        };
+        assert_eq!(run(11), run(11));
+        assert_ne!(run(11), run(12), "different seeds pick different victims");
+    }
+
+    #[test]
+    fn model_catalog_round_robin_swap() {
+        let mut cat = ModelCatalog::new(2);
+        assert!(cat.is_resident(0), "model 0 is loaded at boot");
+        assert!(!cat.ensure_resident(0), "resident model costs nothing");
+        assert!(cat.ensure_resident(1), "cold load");
+        assert!(cat.is_resident(0) && cat.is_resident(1));
+        // Slots full: loading 2 replaces round-robin (slot 0 first).
+        assert!(cat.ensure_resident(2));
+        assert!(!cat.is_resident(0));
+        assert!(cat.is_resident(1) && cat.is_resident(2));
+        assert!(cat.ensure_resident(3));
+        assert!(!cat.is_resident(1));
+        assert!(cat.is_resident(2) && cat.is_resident(3));
+    }
+
+    #[test]
+    fn server_cache_charges_swap_delay_once_resident() {
+        let mut sc = ServerCache::new(&settings(8, EvictionKind::Clock));
+        assert_eq!(sc.ensure_resident(0), 0.0, "model 0 is resident at boot");
+        assert_eq!(sc.ensure_resident(1), 0.5, "cold load charges the delay");
+        assert_eq!(sc.ensure_resident(1), 0.0, "now resident");
+        assert_eq!(sc.stats().swaps, 1);
+        sc.insert(mark(1, 9), 33);
+        assert_eq!(sc.lookup(mark(1, 9)), Some(33));
+        assert_eq!(sc.stats().hits, 1);
+        assert!(sc.stats().hit_rate() > 0.0);
+    }
+
+    #[test]
+    fn stats_merge_sums_fields() {
+        let a = CacheStats { hits: 1, misses: 2, insertions: 3, evictions: 4, swaps: 5 };
+        let mut b =
+            CacheStats { hits: 10, misses: 20, insertions: 30, evictions: 40, swaps: 50 };
+        b.merge(&a);
+        assert_eq!(
+            b,
+            CacheStats { hits: 11, misses: 22, insertions: 33, evictions: 44, swaps: 55 }
+        );
+        assert_eq!(CacheStats::default().hit_rate(), 0.0);
+        assert!((b.hit_rate() - 11.0 / 33.0).abs() < 1e-12);
+    }
+}

@@ -15,7 +15,7 @@
 //!             audit and export a flight-recorder span capture
 //!             (written by `--trace-spans` on the simulators)
 //!   `profile  [--reps N]` — Fig. 1a measurement
-//!   `figures  [--which 1a|1b|2a|2b|2c|3|cluster|faults|pipeline|checkpoint|all] [--reps N]`
+//!   `figures  [--which 1a|1b|2a|2b|2c|3|cluster|faults|pipeline|checkpoint|cache|all] [--reps N]`
 //!   `perf     [--threads N] [--quick true]` — parallel-fabric perf
 //!             harness (serial vs auto threads, emits BENCH_pr5.json)
 //!
@@ -119,7 +119,7 @@ USAGE:
                      [--scheduler stacking|single|greedy|fixed]
                      [--allocator pso|equal|proportional] [--seed N] [--threads 0]
   aigc-edge cluster  [--config file.toml] [--servers 4]
-                     [--router round-robin|jsq|quality|live]
+                     [--router round-robin|jsq|quality|live|cache]
                      [--speed-min 1.0] [--speed-max 1.0] [--process poisson|burst]
                      [--rate 2.0] [--horizon 300] [--epoch-s 1.0] [--max-batch 32]
                      [--plan-horizon 2.0] [--adaptive-horizon true]
@@ -134,7 +134,7 @@ USAGE:
                      [--trace-spans f.bin]
   aigc-edge trace    --in spans.bin [--perfetto out.json] [--window 30]
   aigc-edge profile  [--reps 20]
-  aigc-edge figures  [--which all|1a|1b|2a|2b|2c|3|cluster|faults|pipeline|checkpoint]
+  aigc-edge figures  [--which all|1a|1b|2a|2b|2c|3|cluster|faults|pipeline|checkpoint|cache]
                      [--reps 3]
                      [--threads 0]
   aigc-edge perf     [--config file.toml] [--threads 0] [--quick true]

@@ -18,6 +18,7 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Context, Result};
 
+use crate::cache::{CacheSettings, EvictionKind};
 use crate::coordinator::SolveMode;
 use crate::faults::{DownInterval, FaultModeKind, FaultScript, MigrationPolicyKind};
 use crate::metrics::MetricsMode;
@@ -56,6 +57,8 @@ pub struct ExperimentConfig {
     pub faults: FaultSettings,
     /// Cross-server migration settings (`sim::event`).
     pub migration: MigrationSettings,
+    /// Generation-cache + model-placement settings (all engines).
+    pub cache: CacheSettings,
     /// Parallel-execution settings (`util::exec` fan-out).
     pub perf: PerfSettings,
     /// Metrics-aggregation settings (exact vs streaming percentiles).
@@ -135,6 +138,13 @@ pub struct ArrivalSettings {
     pub horizon_s: f64,
     /// Hard cap on generated requests; 0 = until the horizon.
     pub max_requests: usize,
+    /// Distinct prompts in the Zipf popularity law; 1 (with `models`
+    /// = 1) disables prompt marks entirely — zero extra RNG draws.
+    pub prompt_universe: usize,
+    /// Zipf skew s: prompt rank k drawn ∝ k^-s. Higher = heavier head.
+    pub zipf_s: f64,
+    /// Distinct diffusion models, drawn uniformly per request.
+    pub models: u32,
 }
 
 impl ArrivalSettings {
@@ -152,6 +162,13 @@ impl ArrivalSettings {
                 }
             }
         }
+    }
+
+    /// Are the prompt-popularity knobs active? Off (universe 1, one
+    /// model) means every arrival carries `PromptMark::ZERO` with zero
+    /// extra RNG draws — the bit-identity position.
+    pub fn prompts_enabled(&self) -> bool {
+        self.prompt_universe > 1 || self.models > 1
     }
 }
 
@@ -311,6 +328,9 @@ impl ExperimentConfig {
                 duty: 0.25,
                 horizon_s: 300.0,
                 max_requests: 0,
+                prompt_universe: 1,
+                zipf_s: 1.0,
+                models: 1,
             },
             dynamic: DynamicSettings {
                 epoch_s: 1.0,
@@ -339,6 +359,7 @@ impl ExperimentConfig {
                 policy: MigrationPolicyKind::RequeueOnDeath,
                 transfer_s: 0.05,
             },
+            cache: CacheSettings::default(),
             perf: PerfSettings { threads: 0 },
             metrics: MetricsSettings { mode: MetricsMode::Exact, sketch_eps: 0.01 },
             artifacts_dir: default_artifacts_dir(),
@@ -425,6 +446,13 @@ impl ExperimentConfig {
             }
         }
         pos_finite("arrival.horizon_s", a.horizon_s)?;
+        if a.prompt_universe == 0 {
+            bail!("arrival.prompt_universe must be >= 1 (1 disables prompt marks)");
+        }
+        pos_finite("arrival.zipf_s", a.zipf_s)?;
+        if a.models == 0 {
+            bail!("arrival.models must be >= 1");
+        }
         let d = &self.dynamic;
         pos_finite("dynamic.epoch_s", d.epoch_s)?;
         if d.max_batch == 0 {
@@ -473,6 +501,18 @@ impl ExperimentConfig {
             bail!(
                 "migration.transfer_s must be finite and >= 0 seconds, got {}",
                 mg.transfer_s
+            );
+        }
+        let ch = &self.cache;
+        // capacity >= 0 holds by type (usize); 0 is legal placement-only
+        // mode. model_slots and load delay must stay sane.
+        if ch.model_slots == 0 {
+            bail!("cache.model_slots must be >= 1 (every server holds at least one model)");
+        }
+        if !(ch.load_delay_s >= 0.0 && ch.load_delay_s.is_finite()) {
+            bail!(
+                "cache.load_delay_s must be finite and >= 0 seconds, got {}",
+                ch.load_delay_s
             );
         }
         Ok(())
@@ -553,6 +593,9 @@ fn apply_doc(cfg: &mut ExperimentConfig, doc: &TomlDoc) -> Result<()> {
             "arrival.duty" => set_f64(&mut cfg.arrival.duty, value),
             "arrival.horizon_s" => set_f64(&mut cfg.arrival.horizon_s, value),
             "arrival.max_requests" => set_usize(&mut cfg.arrival.max_requests, value),
+            "arrival.prompt_universe" => set_usize(&mut cfg.arrival.prompt_universe, value),
+            "arrival.zipf_s" => set_f64(&mut cfg.arrival.zipf_s, value),
+            "arrival.models" => set_u32(&mut cfg.arrival.models, value),
             "dynamic.epoch_s" => set_f64(&mut cfg.dynamic.epoch_s, value),
             "dynamic.max_batch" => set_usize(&mut cfg.dynamic.max_batch, value),
             "dynamic.admission" => set_bool(&mut cfg.dynamic.admission, value),
@@ -640,6 +683,18 @@ fn apply_doc(cfg: &mut ExperimentConfig, doc: &TomlDoc) -> Result<()> {
                 None => false,
             },
             "migration.transfer_s" => set_f64(&mut cfg.migration.transfer_s, value),
+            "cache.enabled" => set_bool(&mut cfg.cache.enabled, value),
+            "cache.capacity" => set_usize(&mut cfg.cache.capacity, value),
+            "cache.eviction" => match value.as_str() {
+                Some(name) => {
+                    cfg.cache.eviction = EvictionKind::from_name(name)?;
+                    true
+                }
+                None => false,
+            },
+            "cache.model_slots" => set_usize(&mut cfg.cache.model_slots, value),
+            "cache.load_delay_s" => set_f64(&mut cfg.cache.load_delay_s, value),
+            "cache.seed" => set_u64(&mut cfg.cache.seed, value),
             _ => bail!("unknown config key '{key}'"),
         };
         if !ok {
@@ -987,6 +1042,83 @@ mod tests {
             let err = ExperimentConfig::from_toml_text(&toml).unwrap_err().to_string();
             assert!(err.contains("(0, 0.5)"), "{bad}: {err}");
         }
+    }
+
+    #[test]
+    fn arrival_prompt_knobs_apply_with_off_defaults() {
+        // defaults: marks off (the bit-identity position)
+        let cfg = ExperimentConfig::paper();
+        assert_eq!(cfg.arrival.prompt_universe, 1);
+        assert_eq!(cfg.arrival.zipf_s, 1.0);
+        assert_eq!(cfg.arrival.models, 1);
+        assert!(!cfg.arrival.prompts_enabled());
+        let cfg = ExperimentConfig::from_toml_text(
+            "[arrival]\nprompt_universe = 500\nzipf_s = 1.8\nmodels = 4",
+        )
+        .unwrap();
+        assert_eq!(cfg.arrival.prompt_universe, 500);
+        assert_eq!(cfg.arrival.zipf_s, 1.8);
+        assert_eq!(cfg.arrival.models, 4);
+        assert!(cfg.arrival.prompts_enabled());
+    }
+
+    #[test]
+    fn arrival_prompt_validation_rejects_nonsense() {
+        let err = ExperimentConfig::from_toml_text("[arrival]\nprompt_universe = 0")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains(">= 1"), "{err}");
+        assert!(ExperimentConfig::from_toml_text("[arrival]\nzipf_s = 0.0").is_err());
+        assert!(ExperimentConfig::from_toml_text("[arrival]\nzipf_s = -1.0").is_err());
+        assert!(ExperimentConfig::from_toml_text("[arrival]\nmodels = 0").is_err());
+        let mut cfg = ExperimentConfig::paper();
+        cfg.arrival.zipf_s = f64::INFINITY;
+        assert!(cfg.validate().is_err());
+        let mut cfg = ExperimentConfig::paper();
+        cfg.arrival.zipf_s = f64::NAN;
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn cache_section_applies_with_disabled_default() {
+        let cfg = ExperimentConfig::paper();
+        assert!(!cfg.cache.enabled, "cache must default off: bit-identity");
+        let cfg = ExperimentConfig::from_toml_text(
+            r#"
+            [cache]
+            enabled = true
+            capacity = 128
+            eviction = "random"
+            model_slots = 3
+            load_delay_s = 0.75
+            seed = 21
+            "#,
+        )
+        .unwrap();
+        assert!(cfg.cache.enabled);
+        assert_eq!(cfg.cache.capacity, 128);
+        assert_eq!(cfg.cache.eviction, EvictionKind::SeededRandom);
+        assert_eq!(cfg.cache.model_slots, 3);
+        assert_eq!(cfg.cache.load_delay_s, 0.75);
+        assert_eq!(cfg.cache.seed, 21);
+        // capacity 0 is legal placement-only mode
+        assert!(ExperimentConfig::from_toml_text("[cache]\ncapacity = 0").is_ok());
+    }
+
+    #[test]
+    fn cache_validation_errors_list_valid_values() {
+        let err = ExperimentConfig::from_toml_text("[cache]\neviction = \"lru\"")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("clock") && err.contains("random"), "{err}");
+        assert!(ExperimentConfig::from_toml_text("[cache]\nmodel_slots = 0").is_err());
+        assert!(ExperimentConfig::from_toml_text("[cache]\nload_delay_s = -0.5").is_err());
+        assert!(ExperimentConfig::from_toml_text("[cache]\nload_delay_s = inf").is_err());
+        assert!(ExperimentConfig::from_toml_text("[cache]\ncapacity = -3").is_err());
+        let err = ExperimentConfig::from_toml_text("[cache]\nenabled = 2")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("wrong type"), "{err}");
     }
 
     #[test]

@@ -18,6 +18,7 @@
 
 pub mod bandwidth;
 pub mod bench;
+pub mod cache;
 pub mod channel;
 pub mod cli;
 pub mod config;

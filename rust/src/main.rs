@@ -284,7 +284,8 @@ fn cmd_dynamic(args: &Args) -> Result<()> {
     let allocator = allocator_from(args, threads_from(args, &cfg)?)?;
     let quality = quality_model(&cfg)?;
     let delay = BatchDelayModel::new(cfg.delay.a, cfg.delay.b);
-    let dyn_cfg = DynamicConfig::from(&cfg.dynamic);
+    let mut dyn_cfg = DynamicConfig::from(&cfg.dynamic);
+    dyn_cfg.cache = cfg.cache;
     if cfg.metrics.mode == MetricsMode::Streaming {
         return run_dynamic_streaming(
             args,
@@ -506,6 +507,7 @@ fn cmd_cluster(args: &Args) -> Result<()> {
     let delay = BatchDelayModel::new(cfg.delay.a, cfg.delay.b);
     let trace = ArrivalTrace::generate(&cfg.scenario, &cfg.arrival, cfg.seed);
     let mut cluster_cfg = ClusterConfig::from_settings(&cfg.cluster, &cfg.dynamic);
+    cluster_cfg.dynamic.cache = cfg.cache;
     // Per-server solve fan-out (bit-identical at any count).
     cluster_cfg.dynamic.threads = threads_from(args, &cfg)?;
     println!(
@@ -718,6 +720,7 @@ fn cmd_faults(args: &Args) -> Result<()> {
         cfg.cluster.speed_max,
     );
     let mut dynamic = DynamicConfig::from(&cfg.dynamic);
+    dynamic.cache = cfg.cache;
     // Shared-freeze-instant solve fan-out (bit-identical at any count).
     dynamic.threads = threads_from(args, &cfg)?;
     let event_cfg = EventClusterConfig {
@@ -961,6 +964,9 @@ fn cmd_figures(args: &Args) -> Result<()> {
     }
     if want("pipeline") {
         bench::fig_pipeline(&cfg, &[0.0, 0.1, 0.25, 0.5], 200.0);
+    }
+    if want("cache") {
+        bench::fig_cache(&cfg, &[0.6, 1.2, 1.8], &[8, 64], 200.0);
     }
     Ok(())
 }

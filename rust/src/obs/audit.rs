@@ -10,7 +10,9 @@
 //!   that at the next recovery or at drain, after later events for the
 //!   same id were already emitted;
 //! * a request's first event is `Arrived`, exactly once;
-//! * admission (and delivery) happen only after arrival;
+//! * admission (and delivery) happen only after arrival; a `CacheHit`
+//!   counts as the admission decision (the request bypasses the epoch
+//!   batch, so no `Admitted` follows it);
 //! * exactly one terminal disposition (`Delivered` / `Rejected` /
 //!   `Expired` / `Lost`) per request, and nothing after it;
 //! * `Resumed` only after `RetractedByDeath` (with the checkpoint
@@ -188,6 +190,15 @@ fn audit_impl(events: &[TraceEvent], expect_n: Option<usize>) -> AuditReport {
                 st.retracted = false;
                 st.in_transfer = false;
             }
+            EventKind::CacheHit { .. } => {
+                if !st.arrived {
+                    report.violations.push(format!("request {id}: cache hit before arrival"));
+                }
+                // A hit bypasses the epoch batch, so no `Admitted` will
+                // ever come — the hit itself is the admission decision
+                // and licenses the eventual `Delivered`.
+                st.admitted = true;
+            }
             EventKind::Delivered { .. } => {
                 if !st.admitted {
                     report.violations.push(format!("request {id}: delivered but never admitted"));
@@ -354,6 +365,24 @@ mod tests {
         ];
         let report = audit(&trace);
         assert!(report.is_clean(), "{:?}", report.violations);
+    }
+
+    #[test]
+    fn cache_hit_lifecycle_passes_and_requires_arrival() {
+        let trace = vec![
+            ev(0.0, 0, EventKind::Arrived),
+            ev(0.0, 0, EventKind::Routed { server: 0, score: 0.0 }),
+            ev(0.0, 0, EventKind::CacheHit { steps: 40 }),
+            ev(0.6, 0, EventKind::Delivered { steps: 40 }),
+        ];
+        let report = audit(&trace);
+        assert!(report.is_clean(), "{:?}", report.violations);
+        let bad = vec![
+            ev(0.0, 0, EventKind::CacheHit { steps: 40 }),
+            ev(0.6, 0, EventKind::Delivered { steps: 40 }),
+        ];
+        let report = audit(&bad);
+        assert!(report.violations.iter().any(|v| v.contains("first event")), "{report:?}");
     }
 
     #[test]

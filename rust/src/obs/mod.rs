@@ -68,6 +68,10 @@ pub enum EventKind {
     TransferStart,
     /// Checkpointed request re-entered service on `server`.
     Resumed { server: usize },
+    /// Generation-cache hit at admission: the request bypasses the
+    /// epoch batch and pays only transmission; `steps` is the cached
+    /// entry's step count (what the delivered quality is charged at).
+    CacheHit { steps: usize },
 }
 
 impl EventKind {
@@ -90,6 +94,7 @@ impl EventKind {
             EventKind::RetractedByDeath { .. } => 12,
             EventKind::TransferStart => 13,
             EventKind::Resumed { .. } => 14,
+            EventKind::CacheHit { .. } => 15,
         }
     }
 
@@ -111,6 +116,7 @@ impl EventKind {
             EventKind::RetractedByDeath { .. } => "retracted_by_death",
             EventKind::TransferStart => "transfer_start",
             EventKind::Resumed { .. } => "resumed",
+            EventKind::CacheHit { .. } => "cache_hit",
         }
     }
 
@@ -267,6 +273,7 @@ mod tests {
             EventKind::RetractedByDeath { done_steps: 0 },
             EventKind::TransferStart,
             EventKind::Resumed { server: 0 },
+            EventKind::CacheHit { steps: 0 },
         ];
         let codes: Vec<u32> = kinds.iter().map(|k| k.code()).collect();
         let mut sorted = codes.clone();

@@ -48,6 +48,7 @@ fn payload(kind: EventKind) -> (f64, f64) {
         EventKind::Delivered { steps } => (steps as f64, 0.0),
         EventKind::RetractedByDeath { done_steps } => (done_steps as f64, 0.0),
         EventKind::Resumed { server } => (server as f64, 0.0),
+        EventKind::CacheHit { steps } => (steps as f64, 0.0),
     }
 }
 
@@ -68,6 +69,7 @@ fn rebuild(code: u32, a: f64, b: f64) -> Result<EventKind> {
         12 => EventKind::RetractedByDeath { done_steps: a as usize },
         13 => EventKind::TransferStart,
         14 => EventKind::Resumed { server: a as usize },
+        15 => EventKind::CacheHit { steps: a as usize },
         other => bail!("span trace: unknown event code {other}"),
     })
 }

@@ -222,6 +222,9 @@ impl FleetTelemetry {
                 | EventKind::RetractedByDeath { .. }
                 | EventKind::TransferStart
                 | EventKind::Resumed { .. } => {}
+                // A cache hit never queues; delivery (which the queue
+                // replay keys on) follows as its own event.
+                EventKind::CacheHit { .. } => {}
             }
         }
         Self { window_s, servers }

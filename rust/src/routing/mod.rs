@@ -24,6 +24,11 @@
 //!   virtual-queue estimate. Du et al. (arXiv:2301.03220) motivate
 //!   dispatching on live server state; `bench::fig_pipeline` measures
 //!   the stale-vs-live gap.
+//! * [`CacheAwareRouter`] — placement-aware dispatch for marked
+//!   (Zipf-popular) workloads: prefer the server whose generation
+//!   cache likely already holds the `(model, prompt)` key, then
+//!   servers with the model resident, then the plain marginal-(P0)
+//!   estimate; `bench::fig_cache` measures the affinity win.
 //!
 //! Routers see the fleet through [`ServerState`]s — lightweight virtual
 //! queues the splitter advances between arrivals. The event engine
@@ -35,6 +40,7 @@
 
 use std::collections::VecDeque;
 
+use crate::cache::{CacheSettings, ServerCache};
 use crate::delay::BatchDelayModel;
 use crate::trace::{Arrival, ArrivalTrace};
 
@@ -51,6 +57,9 @@ pub enum RouterKind {
     /// published by the event engine ([`LiveView`]); degenerates to
     /// the virtual-queue JSQ estimate where no live view exists.
     LiveState,
+    /// Cache-affinity dispatch: shadow generation caches predict which
+    /// server already holds the arrival's `(model, prompt)` key.
+    CacheAware,
 }
 
 impl RouterKind {
@@ -62,8 +71,9 @@ impl RouterKind {
             "jsq" | "shortest-queue" => Ok(Self::JoinShortestQueue),
             "quality" | "quality-aware" => Ok(Self::QualityAware),
             "live" | "live-state" => Ok(Self::LiveState),
+            "cache" | "cache-aware" => Ok(Self::CacheAware),
             other => anyhow::bail!(
-                "unknown router '{other}' (valid: round-robin|rr, jsq|shortest-queue, quality|quality-aware, live|live-state)"
+                "unknown router '{other}' (valid: round-robin|rr, jsq|shortest-queue, quality|quality-aware, live|live-state, cache|cache-aware)"
             ),
         }
     }
@@ -74,6 +84,7 @@ impl RouterKind {
             Self::JoinShortestQueue => "jsq",
             Self::QualityAware => "quality-aware",
             Self::LiveState => "live",
+            Self::CacheAware => "cache-aware",
         }
     }
 
@@ -83,6 +94,10 @@ impl RouterKind {
     /// equivalence suites iterate this set), whereas the live router
     /// reads event-engine state that the sequential cluster cannot
     /// provide. Use [`Self::with_live`] to sweep all four.
+    /// [`Self::CacheAware`] is excluded from both sets — on unmarked
+    /// traces it matches [`Self::QualityAware`] decision-for-decision,
+    /// and it only means something with `[cache]` settings attached
+    /// (`bench::fig_cache` sweeps it explicitly).
     pub fn all() -> [Self; 3] {
         [Self::RoundRobin, Self::JoinShortestQueue, Self::QualityAware]
     }
@@ -92,16 +107,31 @@ impl RouterKind {
         [Self::RoundRobin, Self::JoinShortestQueue, Self::QualityAware, Self::LiveState]
     }
 
-    /// Instantiate the policy. The delay model parameterizes the
-    /// quality-aware marginal estimate and the live router's per-step
-    /// cost (and the shared per-request service estimate all policies
-    /// charge to a server's virtual queue).
+    /// Instantiate the policy with default (disabled) cache settings.
+    /// The delay model parameterizes the quality-aware marginal
+    /// estimate and the live router's per-step cost (and the shared
+    /// per-request service estimate all policies charge to a server's
+    /// virtual queue).
     pub fn build(&self, delay: BatchDelayModel) -> Box<dyn Router> {
+        self.build_with_cache(delay, CacheSettings::default())
+    }
+
+    /// Instantiate the policy with the cluster's `[cache]` settings.
+    /// Only the cache-aware router reads them (its shadow caches
+    /// mirror the engine caches' capacity/eviction/seed); every other
+    /// policy ignores the parameter, so for them this is exactly
+    /// [`Self::build`].
+    pub fn build_with_cache(
+        &self,
+        delay: BatchDelayModel,
+        cache: CacheSettings,
+    ) -> Box<dyn Router> {
         match self {
             Self::RoundRobin => Box::new(RoundRobinRouter::default()),
             Self::JoinShortestQueue => Box::new(JoinShortestQueueRouter),
             Self::QualityAware => Box::new(QualityAwareRouter::new(delay)),
             Self::LiveState => Box::new(LiveStateRouter::new(delay)),
+            Self::CacheAware => Box::new(CacheAwareRouter::new(delay, cache)),
         }
     }
 }
@@ -464,6 +494,127 @@ impl Router for LiveStateRouter {
     }
 }
 
+/// Placement-aware dispatch for marked (cached) workloads: prefer the
+/// server whose generation cache most likely already holds the
+/// arrival's `(model, prompt)` key, then servers where the model is at
+/// least resident (no swap delay), and only then the plain
+/// marginal-(P0) estimate over the whole fleet.
+///
+/// The router cannot see the engines' real caches at dispatch time (the
+/// same observability gap [`LiveStateRouter`] closes for queues), so it
+/// maintains *shadow* per-server caches fed by its own decisions:
+/// routing a marked request to server `s` inserts the key into `s`'s
+/// shadow — mirroring what the engine's cache does when the request is
+/// served — using the same capacity/eviction/seed as the engine caches
+/// so the prediction tracks the real contents on stable assignments.
+/// Unmarked arrivals delegate to [`QualityAwareRouter`] untouched, so
+/// on a trace without prompt marks this router is decision-for-decision
+/// identical to quality-aware. Deterministic: shadow state is a pure
+/// function of the routing history.
+#[derive(Debug, Clone)]
+pub struct CacheAwareRouter {
+    inner: QualityAwareRouter,
+    settings: CacheSettings,
+    shadow: Vec<ServerCache>,
+}
+
+impl CacheAwareRouter {
+    pub fn new(delay: BatchDelayModel, settings: CacheSettings) -> Self {
+        Self { inner: QualityAwareRouter::new(delay), settings, shadow: Vec::new() }
+    }
+
+    /// Lazily size the shadow fleet to the routed fleet (the router
+    /// learns the server count from its first dispatch).
+    fn sync_fleet(&mut self, n: usize) {
+        while self.shadow.len() < n {
+            self.shadow.push(ServerCache::new(&self.settings));
+        }
+    }
+
+    /// Marginal-(P0) argmax restricted to the candidate subset `ids`
+    /// (all alive, ascending) — the [`QualityAwareRouter`] comparator
+    /// over a pool.
+    fn best_among(
+        &self,
+        arrival: &Arrival,
+        servers: &[ServerState],
+        ctx: &RouteContext,
+        ids: &[usize],
+    ) -> usize {
+        let now = arrival.t_s;
+        *ids.iter()
+            .max_by(|&&a, &&b| {
+                let (a, b) = (&servers[a], &servers[b]);
+                let sa = self.inner.predict_steps(arrival, a, ctx);
+                let sb = self.inner.predict_steps(arrival, b, ctx);
+                sa.cmp(&sb)
+                    .then_with(|| {
+                        b.outstanding_work_s(now).partial_cmp(&a.outstanding_work_s(now)).unwrap()
+                    })
+                    .then(b.id.cmp(&a.id))
+            })
+            .expect("best_among needs a non-empty candidate pool")
+    }
+}
+
+impl Router for CacheAwareRouter {
+    fn name(&self) -> &'static str {
+        "cache-aware"
+    }
+
+    fn route(&mut self, arrival: &Arrival, servers: &[ServerState], ctx: &RouteContext) -> usize {
+        assert_some_alive(servers);
+        if arrival.mark.is_zero() {
+            return self.inner.route(arrival, servers, ctx);
+        }
+        self.sync_fleet(servers.len());
+        let mark = arrival.mark;
+        let alive: Vec<usize> = servers.iter().filter(|s| s.alive).map(|s| s.id).collect();
+        let hits: Vec<usize> =
+            alive.iter().copied().filter(|&i| self.shadow[i].cache.contains(mark)).collect();
+        let resident: Vec<usize> = alive
+            .iter()
+            .copied()
+            .filter(|&i| self.shadow[i].catalog.is_resident(mark.model))
+            .collect();
+        // A predicted hit bypasses the epoch batch entirely in the
+        // engines (transmission only), so hit affinity outranks load;
+        // a resident model at least avoids the swap delay.
+        let pool = if !hits.is_empty() {
+            &hits
+        } else if !resident.is_empty() {
+            &resident
+        } else {
+            &alive
+        };
+        let choice = self.best_among(arrival, servers, ctx, pool);
+        // Mirror what the engine-side cache will do for this request: a
+        // hit refreshes the entry's second-chance bit; a miss loads the
+        // model and (once served) inserts the generated result.
+        let predicted = self.inner.predict_steps(arrival, &servers[choice], ctx).max(1);
+        let shadow = &mut self.shadow[choice];
+        if shadow.lookup(mark).is_none() {
+            shadow.ensure_resident(mark.model);
+            shadow.insert(mark, predicted);
+        }
+        choice
+    }
+
+    /// Resumes delegate to the quality-aware scorer: a checkpointed
+    /// partial generation cannot be served from cache (its identity is
+    /// the in-flight denoising state, not the prompt), so cache
+    /// affinity does not apply and the done-step credit dominates.
+    fn route_resume(
+        &mut self,
+        arrival: &Arrival,
+        done_steps: u32,
+        servers: &[ServerState],
+        ctx: &RouteContext,
+    ) -> usize {
+        self.inner.route_resume(arrival, done_steps, servers, ctx)
+    }
+}
+
 /// Route every arrival of `trace` in time order, advancing the fleet's
 /// virtual queues between arrivals. Returns the per-arrival server
 /// assignment (indexed by arrival id). Each routed request charges the
@@ -499,9 +650,14 @@ mod tests {
     use super::*;
     use crate::channel::Link;
     use crate::config::{ArrivalProcessKind, ArrivalSettings, ExperimentConfig};
+    use crate::trace::PromptMark;
 
     fn arrival(id: usize, t_s: f64, deadline_s: f64) -> Arrival {
-        Arrival { id, t_s, deadline_s, link: Link::new(7.0) }
+        Arrival { id, t_s, deadline_s, link: Link::new(7.0), mark: PromptMark::ZERO }
+    }
+
+    fn marked(id: usize, t_s: f64, deadline_s: f64, model: u32, prompt: u32) -> Arrival {
+        Arrival { id, t_s, deadline_s, link: Link::new(7.0), mark: PromptMark { model, prompt } }
     }
 
     fn ctx() -> RouteContext {
@@ -518,6 +674,9 @@ mod tests {
             duty: 0.5,
             horizon_s: horizon,
             max_requests: 0,
+            prompt_universe: 1,
+            zipf_s: 1.0,
+            models: 1,
         };
         ArrivalTrace::generate(&cfg.scenario, &arrival, seed)
     }
@@ -649,9 +808,13 @@ mod tests {
         assert_eq!(RouterKind::from_name("shortest-queue").unwrap(), RouterKind::JoinShortestQueue);
         assert_eq!(RouterKind::from_name("quality").unwrap(), RouterKind::QualityAware);
         assert_eq!(RouterKind::from_name("live-state").unwrap(), RouterKind::LiveState);
+        assert_eq!(RouterKind::from_name("cache").unwrap(), RouterKind::CacheAware);
+        assert_eq!(RouterKind::from_name("cache-aware").unwrap(), RouterKind::CacheAware);
+        assert_eq!(RouterKind::CacheAware.name(), "cache-aware");
         let err = RouterKind::from_name("bogus").unwrap_err().to_string();
         assert!(err.contains("round-robin") && err.contains("jsq"), "{err}");
         assert!(err.contains("quality-aware") && err.contains("live"), "{err}");
+        assert!(err.contains("cache-aware"), "{err}");
     }
 
     #[test]
@@ -689,6 +852,104 @@ mod tests {
         servers[0].alive = false;
         let mut live = LiveStateRouter::new(BatchDelayModel::paper());
         assert_eq!(live.route(&arrival(0, 1.0, 10.0), &servers, &ctx()), 1);
+    }
+
+    fn cache_settings() -> CacheSettings {
+        CacheSettings { enabled: true, capacity: 8, ..CacheSettings::default() }
+    }
+
+    fn marked_trace(seed: u64) -> ArrivalTrace {
+        let cfg = ExperimentConfig::paper();
+        let arrival = ArrivalSettings {
+            process: ArrivalProcessKind::Poisson,
+            rate_hz: 5.0,
+            burst_rate_hz: 5.0,
+            period_s: 60.0,
+            duty: 0.5,
+            horizon_s: 60.0,
+            max_requests: 0,
+            prompt_universe: 20,
+            zipf_s: 1.4,
+            models: 3,
+        };
+        ArrivalTrace::generate(&cfg.scenario, &arrival, seed)
+    }
+
+    #[test]
+    fn cache_aware_on_unmarked_trace_matches_quality_aware() {
+        let t = trace(5.0, 60.0, 11);
+        assert!(!t.is_marked());
+        let delay = BatchDelayModel::paper();
+        let mut fleet_a = ServerState::fleet(&[0.5, 1.0, 1.5]);
+        let mut fleet_b = ServerState::fleet(&[0.5, 1.0, 1.5]);
+        let mut ca = CacheAwareRouter::new(delay, cache_settings());
+        let a = route_trace(&t, &mut fleet_a, &mut ca, &delay);
+        let b = route_trace(&t, &mut fleet_b, &mut QualityAwareRouter::new(delay), &delay);
+        assert_eq!(a, b, "no prompt marks: identical dispatch");
+    }
+
+    #[test]
+    fn cache_aware_prefers_the_shadow_hit_server_even_under_load() {
+        let mut servers = ServerState::fleet(&[1.0, 1.0]);
+        let mut ca = CacheAwareRouter::new(BatchDelayModel::paper(), cache_settings());
+        // First dispatch of (model 0, prompt 7): no shadow hit anywhere,
+        // equal idle fleet → ties to server 0, which now shadows the key.
+        assert_eq!(ca.route(&marked(0, 0.0, 10.0, 0, 7), &servers, &ctx()), 0);
+        // Bury server 0: quality-aware would now route to server 1 …
+        servers[0].assign(0.0, 50.0);
+        assert_eq!(ca.inner.route(&marked(1, 1.0, 10.0, 0, 7), &servers, &ctx()), 1);
+        // … but a cached generation bypasses the queue entirely, so the
+        // repeat prompt sticks to server 0.
+        assert_eq!(ca.route(&marked(1, 1.0, 10.0, 0, 7), &servers, &ctx()), 0);
+        // A fresh prompt has no hit; model 0 is resident on both boot
+        // catalogs, so it falls back to quality-aware and picks idle 1.
+        assert_eq!(ca.route(&marked(2, 1.0, 10.0, 0, 9), &servers, &ctx()), 1);
+    }
+
+    #[test]
+    fn cache_aware_piles_fresh_prompts_onto_the_model_resident_server() {
+        let mut servers = ServerState::fleet(&[1.0, 1.0]);
+        let mut ca = CacheAwareRouter::new(BatchDelayModel::paper(), cache_settings());
+        // (model 3, prompt 1) swaps model 3 onto server 0's shadow
+        // catalog (single slot: model 0 is evicted).
+        assert_eq!(ca.route(&marked(0, 0.0, 10.0, 3, 1), &servers, &ctx()), 0);
+        // Nudge server 0 busier so plain quality-aware would prefer the
+        // idle server 1 for the next request …
+        servers[0].assign(0.0, 1.0);
+        let fresh = marked(1, 0.5, 10.0, 3, 2);
+        let s0 = ca.inner.predict_steps(&fresh, &servers[0], &ctx());
+        let s1 = ca.inner.predict_steps(&fresh, &servers[1], &ctx());
+        assert!(s1 > s0, "precondition: quality-aware prefers idle ({s1} vs {s0})");
+        assert_eq!(ca.inner.route(&fresh, &servers, &ctx()), 1);
+        // … but only server 0 holds model 3: placement affinity keeps
+        // model-3 prompts where the weights already live.
+        assert_eq!(ca.route(&fresh, &servers, &ctx()), 0);
+    }
+
+    #[test]
+    fn cache_aware_routes_marked_traces_deterministically() {
+        let t = marked_trace(11);
+        assert!(t.is_marked(), "universe 20 × 3 models must mark the trace");
+        let delay = BatchDelayModel::paper();
+        let run = || {
+            let mut fleet = ServerState::fleet(&[0.5, 1.0, 1.5]);
+            let mut r = CacheAwareRouter::new(delay, cache_settings());
+            route_trace(&t, &mut fleet, &mut r, &delay)
+        };
+        let (a, b) = (run(), run());
+        assert_eq!(a.len(), t.len(), "every arrival routed");
+        assert_eq!(a, b, "replay must be identical");
+    }
+
+    #[test]
+    fn cache_aware_skips_failed_servers_for_hits_and_residency() {
+        let mut servers = ServerState::fleet(&[1.0, 1.0]);
+        let mut ca = CacheAwareRouter::new(BatchDelayModel::paper(), cache_settings());
+        assert_eq!(ca.route(&marked(0, 0.0, 10.0, 2, 5), &servers, &ctx()), 0);
+        servers[0].alive = false;
+        // The shadow hit (and the resident model) live on the dead
+        // server; the repeat must reroute to an alive one.
+        assert_eq!(ca.route(&marked(1, 1.0, 10.0, 2, 5), &servers, &ctx()), 1);
     }
 
     #[test]

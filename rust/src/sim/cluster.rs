@@ -30,6 +30,7 @@
 //! bias — asserted by `tests/cluster_dominance.rs`).
 
 use crate::bandwidth::{Allocator, AllocatorPool};
+use crate::cache::CacheStats;
 use crate::delay::BatchDelayModel;
 use crate::metrics::{MetricsMode, OutcomeAccumulator, OutcomeStats, ResolvedSample};
 use crate::obs::{EventKind, NullSink, Recorder, TraceEvent, TraceSink};
@@ -213,6 +214,25 @@ impl ClusterReport {
     pub fn total_epochs(&self) -> usize {
         self.servers.iter().map(|s| s.report.epochs.len()).sum()
     }
+
+    /// Generation-cache counters summed over servers (each server's
+    /// `simulate_dynamic` loop owns a private cache; the fleet view is
+    /// their sum). All zero when `[cache]` is disabled.
+    pub fn cache_stats(&self) -> CacheStats {
+        let mut total = CacheStats::default();
+        for s in &self.servers {
+            total.merge(&s.report.cache_stats);
+        }
+        total
+    }
+
+    /// Requests answered straight from a server's generation cache.
+    pub fn served_from_cache(&self) -> usize {
+        self.outcomes
+            .iter()
+            .filter(|o| o.disposition == super::dynamic::Disposition::ServedFromCache)
+            .count()
+    }
 }
 
 /// Run the cluster simulation of `trace` under the given policies with
@@ -309,7 +329,7 @@ fn run_cluster(
 
     // ---- arrival splitting (the routing layer) ----
     let mut fleet = ServerState::fleet(&cfg.speeds);
-    let mut router = cfg.router.build(*delay);
+    let mut router = cfg.router.build_with_cache(*delay, cfg.dynamic.cache);
     let assignment = route_trace(trace, &mut fleet, router.as_mut(), delay);
 
     let mut per_server: Vec<Vec<Arrival>> = vec![Vec::new(); n];
@@ -402,10 +422,12 @@ fn run_cluster(
 mod tests {
     use super::*;
     use crate::bandwidth::EqualAllocator;
-    use crate::sim::dynamic::Disposition;
+    use crate::cache::CacheSettings;
     use crate::config::{ArrivalProcessKind, ArrivalSettings, ExperimentConfig};
     use crate::quality::PowerLawQuality;
     use crate::scheduler::Stacking;
+    use crate::sim::dynamic::Disposition;
+    use crate::trace::PromptMark;
 
     fn trace(rate: f64, horizon: f64, seed: u64) -> ArrivalTrace {
         let cfg = ExperimentConfig::paper();
@@ -417,6 +439,28 @@ mod tests {
             duty: 0.5,
             horizon_s: horizon,
             max_requests: 0,
+            prompt_universe: 1,
+            zipf_s: 1.0,
+            models: 1,
+        };
+        ArrivalTrace::generate(&cfg.scenario, &arrival, seed)
+    }
+
+    /// Zipf-marked twin of [`trace`]: a small skewed prompt universe so
+    /// repeats (and therefore cache hits) are plentiful.
+    fn marked_trace(rate: f64, horizon: f64, seed: u64) -> ArrivalTrace {
+        let cfg = ExperimentConfig::paper();
+        let arrival = ArrivalSettings {
+            process: ArrivalProcessKind::Poisson,
+            rate_hz: rate,
+            burst_rate_hz: rate,
+            period_s: 60.0,
+            duty: 0.5,
+            horizon_s: horizon,
+            max_requests: 0,
+            prompt_universe: 12,
+            zipf_s: 1.5,
+            models: 2,
         };
         ArrivalTrace::generate(&cfg.scenario, &arrival, seed)
     }
@@ -597,6 +641,62 @@ mod tests {
             if let EventKind::Routed { server, .. } = ev.kind {
                 assert_eq!(server, traced.assignment[ev.request]);
             }
+        }
+    }
+
+    #[test]
+    fn cache_disabled_cluster_ignores_prompt_marks_bitwise() {
+        let marked = marked_trace(6.0, 50.0, 7);
+        let mut stripped = marked.clone();
+        for a in &mut stripped.arrivals {
+            a.mark = PromptMark::ZERO;
+        }
+        for router in RouterKind::all() {
+            let cfg = ClusterConfig {
+                speeds: server_speeds(3, 0.5, 1.5),
+                router,
+                dynamic: DynamicConfig::default(),
+            };
+            let a = run(&marked, &cfg);
+            let b = run(&stripped, &cfg);
+            assert_eq!(a.assignment, b.assignment, "{}", router.name());
+            assert_eq!(a.horizon_s.to_bits(), b.horizon_s.to_bits(), "{}", router.name());
+            for (x, y) in a.outcomes.iter().zip(&b.outcomes) {
+                assert_eq!(x.disposition, y.disposition, "{} request {}", router.name(), x.id);
+                assert_eq!(x.quality.to_bits(), y.quality.to_bits(), "request {}", x.id);
+                assert_eq!(x.e2e_s.to_bits(), y.e2e_s.to_bits(), "request {}", x.id);
+            }
+            assert_eq!(a.served_from_cache(), 0);
+            assert_eq!(a.cache_stats(), CacheStats::default());
+        }
+    }
+
+    #[test]
+    fn cache_enabled_cluster_hits_conserves_and_replays() {
+        let t = marked_trace(6.0, 50.0, 7);
+        let cfg = ClusterConfig {
+            speeds: server_speeds(3, 0.5, 1.5),
+            router: RouterKind::CacheAware,
+            dynamic: DynamicConfig {
+                cache: CacheSettings { enabled: true, capacity: 32, ..CacheSettings::default() },
+                ..DynamicConfig::default()
+            },
+        };
+        let report = run(&t, &cfg);
+        assert_eq!(report.outcomes.len(), t.len());
+        assert_eq!(report.served() + report.dropped(), t.len(), "census conservation");
+        let hits = report.served_from_cache();
+        assert!(hits > 0, "a skewed Zipf trace must hit the cluster caches");
+        assert_eq!(report.cache_stats().hits, hits as u64);
+        // The fleet counters are exactly the per-server sums.
+        let per_server: u64 = report.servers.iter().map(|s| s.report.cache_stats.hits).sum();
+        assert_eq!(per_server, hits as u64);
+        let again = run(&t, &cfg);
+        assert_eq!(report.assignment, again.assignment);
+        assert_eq!(report.horizon_s.to_bits(), again.horizon_s.to_bits());
+        for (x, y) in report.outcomes.iter().zip(&again.outcomes) {
+            assert_eq!(x.disposition, y.disposition);
+            assert_eq!(x.quality.to_bits(), y.quality.to_bits());
         }
     }
 

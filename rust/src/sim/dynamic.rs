@@ -28,13 +28,14 @@
 //! bit-identically, which the `fig3_dynamic` bench asserts.
 
 use crate::bandwidth::Allocator;
+use crate::cache::{CacheSettings, CacheStats, ServerCache};
 use crate::coordinator::{EpochPolicy, SolveMode, SolveTiming};
 use crate::delay::BatchDelayModel;
 use crate::metrics::{OutcomeAccumulator, OutcomeStats, ResolvedSample, ServiceWindows};
 use crate::obs::{EventKind, NullSink, TraceEvent, TraceSink, NO_REQUEST};
 use crate::quality::QualityModel;
 use crate::scheduler::BatchScheduler;
-use crate::trace::{Arrival, ArrivalTrace, DeviceRequest, Workload};
+use crate::trace::{Arrival, ArrivalTrace, DeviceRequest, PromptMark, Workload};
 use crate::util::stats::percentile;
 
 use super::solve_joint;
@@ -78,6 +79,15 @@ pub struct DynamicConfig {
     /// `tests/exec_determinism.rs`); `simulate_dynamic` itself is a
     /// single server and ignores it.
     pub threads: usize,
+    /// Generation cache + model catalog (`[cache]` config). Disabled by
+    /// default: no cache is constructed and runs are bitwise identical
+    /// to the pre-cache engine. Enabled, each serving loop owns one
+    /// [`ServerCache`]: a marked arrival that hits resolves at its
+    /// arrival instant as [`Disposition::ServedFromCache`] (it pays
+    /// only transmission over the full band and never joins an epoch
+    /// batch), while a miss on a non-resident model spends
+    /// `load_delay_s` of its deadline budget on the swap.
+    pub cache: CacheSettings,
 }
 
 impl DynamicConfig {
@@ -110,6 +120,7 @@ impl Default for DynamicConfig {
             solve_latency_s: 0.0,
             solve_mode: SolveMode::Pipelined,
             threads: 1,
+            cache: CacheSettings::default(),
         }
     }
 }
@@ -119,7 +130,10 @@ impl From<&crate::config::DynamicSettings> for DynamicConfig {
     /// runtime config (used by the CLI and `bench::fig3_dynamic`).
     /// Engine fan-out stays serial here — the `[perf] threads` knob is
     /// applied by the caller that owns the fan-out level (the CLI
-    /// parallelizes servers, the bench sweeps parallelize cells).
+    /// parallelizes servers, the bench sweeps parallelize cells). The
+    /// cache stays at its disabled default — `[cache]` lives on
+    /// `ExperimentConfig`, so the caller that owns the experiment
+    /// attaches it (`cfg.cache = experiment.cache`).
     fn from(d: &crate::config::DynamicSettings) -> Self {
         Self {
             epoch: EpochPolicy::new(d.epoch_s, d.max_batch),
@@ -130,6 +144,7 @@ impl From<&crate::config::DynamicSettings> for DynamicConfig {
             solve_latency_s: d.solve_latency_s,
             solve_mode: d.solve_mode,
             threads: 1,
+            cache: CacheSettings::default(),
         }
     }
 }
@@ -151,14 +166,23 @@ pub enum Disposition {
     /// under `CheckpointOnDeath`; never produced by `simulate_dynamic`
     /// itself).
     ResumedElsewhere,
+    /// Served straight from the generation cache at its arrival
+    /// instant: the content already existed at the cached step count,
+    /// so the request paid only transmission and never joined an epoch
+    /// batch (`[cache]` enabled runs only).
+    ServedFromCache,
 }
 
 impl Disposition {
     /// Whether content was actually delivered — the serving-semantic
-    /// predicate every aggregate uses. A checkpoint-resumed request is
-    /// served content like any other; only the path differed.
+    /// predicate every aggregate uses. A checkpoint-resumed or
+    /// cache-served request is served content like any other; only the
+    /// path differed.
     pub fn is_served(self) -> bool {
-        matches!(self, Disposition::Served | Disposition::ResumedElsewhere)
+        matches!(
+            self,
+            Disposition::Served | Disposition::ResumedElsewhere | Disposition::ServedFromCache
+        )
     }
 }
 
@@ -232,6 +256,8 @@ pub struct DynamicReport {
     pub epochs: Vec<EpochRecord>,
     /// Total simulated span (last resolution instant).
     pub horizon_s: f64,
+    /// Generation-cache counters (all zero when `[cache]` is disabled).
+    pub cache_stats: CacheStats,
 }
 
 impl DynamicReport {
@@ -347,6 +373,7 @@ struct Queued {
     abs_deadline_s: f64,
     deadline_s: f64,
     link: crate::channel::Link,
+    mark: PromptMark,
     deferrals: u32,
 }
 
@@ -444,7 +471,7 @@ pub fn simulate_dynamic_traced(
     tracer: &mut dyn TraceSink,
 ) -> DynamicReport {
     let mut sink = CollectingSink { outcomes: vec![None; trace.len()], epochs: Vec::new() };
-    let horizon = run_dynamic_core(
+    let (horizon, cache_stats) = run_dynamic_core(
         trace.arrivals.iter().copied(),
         trace.total_bandwidth_hz,
         trace.content_bits,
@@ -458,7 +485,7 @@ pub fn simulate_dynamic_traced(
     );
     let outcomes: Vec<RequestOutcome> =
         sink.outcomes.into_iter().map(|o| o.expect("every request resolved")).collect();
-    DynamicReport { outcomes, epochs: sink.epochs, horizon_s: horizon }
+    DynamicReport { outcomes, epochs: sink.epochs, horizon_s: horizon, cache_stats }
 }
 
 /// Constant-memory result of [`simulate_dynamic_streaming`]: streaming
@@ -474,6 +501,8 @@ pub struct StreamingDynamicReport {
     pub peak_queue_depth: usize,
     /// Total simulated span (last resolution instant).
     pub horizon_s: f64,
+    /// Generation-cache counters (all zero when `[cache]` is disabled).
+    pub cache_stats: CacheStats,
 }
 
 impl StreamingDynamicReport {
@@ -528,7 +557,7 @@ pub fn simulate_dynamic_streaming(
     accumulator: OutcomeAccumulator,
 ) -> StreamingDynamicReport {
     let mut sink = StreamingSink { acc: accumulator, epochs: 0, peak_queue_depth: 0 };
-    let horizon = run_dynamic_core(
+    let (horizon, cache_stats) = run_dynamic_core(
         arrivals,
         total_bandwidth_hz,
         content_bits,
@@ -545,6 +574,7 @@ pub fn simulate_dynamic_streaming(
         epochs: sink.epochs,
         peak_queue_depth: sink.peak_queue_depth,
         horizon_s: horizon,
+        cache_stats,
     }
 }
 
@@ -582,11 +612,80 @@ pub(crate) fn emit_batches(
     }
 }
 
+/// Ingest one arrival at its arrival instant. With the generation
+/// cache enabled and the arrival marked, a content hit resolves the
+/// request right here — [`Disposition::ServedFromCache`], transmission
+/// over the full band, no epoch batch, no `should_close` contribution —
+/// and returns its completion instant; a miss on a non-resident model
+/// spends `load_delay_s` of the deadline budget on the swap before
+/// queueing. With the cache disabled (`cache == None`) this is exactly
+/// the pre-cache enqueue: same branches, same float ops, bitwise
+/// identical. Shared by both ingest points of [`run_dynamic_core`].
+fn ingest_arrival<S: OutcomeSink>(
+    a: Arrival,
+    epoch_index: usize,
+    total_bandwidth_hz: f64,
+    content_bits: f64,
+    quality: &dyn QualityModel,
+    cache: &mut Option<ServerCache>,
+    queue: &mut Vec<Queued>,
+    windows: &mut ServiceWindows,
+    sink: &mut S,
+    tracer: &mut dyn TraceSink,
+) -> Option<f64> {
+    windows.record_arrival(a.t_s);
+    tracer.emit(a.t_s, 0, a.id, EventKind::Arrived);
+    let mut deadline_s = a.deadline_s;
+    if let Some(c) = cache.as_mut() {
+        if !a.mark.is_zero() {
+            if let Some(steps) = c.lookup(a.mark) {
+                let e2e = a.link.tx_delay(content_bits, total_bandwidth_hz);
+                let completion = a.t_s + e2e;
+                let met = e2e <= a.deadline_s;
+                let q = quality.quality(steps);
+                tracer.emit(a.t_s, 0, a.id, EventKind::CacheHit { steps: steps as usize });
+                tracer.emit(completion, 0, a.id, EventKind::Delivered { steps: steps as usize });
+                windows.record_served(a.t_s, e2e, q, met);
+                sink.resolve(RequestOutcome {
+                    id: a.id,
+                    arrival_s: a.t_s,
+                    deadline_s: a.deadline_s,
+                    disposition: Disposition::ServedFromCache,
+                    steps,
+                    quality: q,
+                    e2e_s: e2e,
+                    wait_s: 0.0,
+                    deferrals: 0,
+                    epoch: epoch_index,
+                    met,
+                    resolved_s: completion,
+                    recovered_steps: 0,
+                });
+                return Some(completion);
+            }
+            // The generation must run here, so the model must be
+            // resident: a swap eats into the residual deadline.
+            deadline_s -= c.ensure_resident(a.mark.model);
+        }
+    }
+    queue.push(Queued {
+        id: a.id,
+        arrival_s: a.t_s,
+        abs_deadline_s: a.t_s + deadline_s,
+        deadline_s,
+        link: a.link,
+        mark: a.mark,
+        deferrals: 0,
+    });
+    None
+}
+
 /// The serving loop shared by both entry points: generic over where
 /// arrivals come from and where outcomes land, so the buffered and the
 /// streaming entries run the *same* floating-point operations in the
 /// same order — the sinks only observe. Returns the simulated horizon
-/// (last resolution instant).
+/// (last resolution instant) and the generation-cache counters (zeros
+/// when `[cache]` is disabled).
 fn run_dynamic_core<I, S>(
     arrivals: I,
     total_bandwidth_hz: f64,
@@ -598,7 +697,7 @@ fn run_dynamic_core<I, S>(
     cfg: &DynamicConfig,
     sink: &mut S,
     tracer: &mut dyn TraceSink,
-) -> f64
+) -> (f64, CacheStats)
 where
     I: Iterator<Item = Arrival>,
     S: OutcomeSink,
@@ -611,6 +710,10 @@ where
     let mut horizon = 0.0f64;
     let mut epoch_count = 0usize;
     let outage_q = quality.outage();
+    // Off-by-default generation cache: `None` constructs nothing and
+    // touches nothing — the bit-identity position.
+    let mut cache: Option<ServerCache> =
+        if cfg.cache.enabled { Some(ServerCache::new(&cfg.cache)) } else { None };
 
     while arrivals.peek().is_some() || !queue.is_empty() {
         // ---- open the next epoch ----
@@ -630,38 +733,52 @@ where
                 break;
             }
             arrivals.next();
-            windows.record_arrival(a.t_s);
-            tracer.emit(a.t_s, 0, a.id, EventKind::Arrived);
-            queue.push(Queued {
-                id: a.id,
-                arrival_s: a.t_s,
-                abs_deadline_s: a.t_s + a.deadline_s,
-                deadline_s: a.deadline_s,
-                link: a.link,
-                deferrals: 0,
-            });
+            if let Some(done) = ingest_arrival(
+                a,
+                epoch_count,
+                total_bandwidth_hz,
+                content_bits,
+                quality,
+                &mut cache,
+                &mut queue,
+                &mut windows,
+                sink,
+                tracer,
+            ) {
+                horizon = horizon.max(done);
+            }
         }
         while let Some(&a) = arrivals.peek() {
             if a.t_s > close {
                 break;
             }
             arrivals.next();
-            windows.record_arrival(a.t_s);
-            tracer.emit(a.t_s, 0, a.id, EventKind::Arrived);
-            queue.push(Queued {
-                id: a.id,
-                arrival_s: a.t_s,
-                abs_deadline_s: a.t_s + a.deadline_s,
-                deadline_s: a.deadline_s,
-                link: a.link,
-                deferrals: 0,
-            });
+            if let Some(done) = ingest_arrival(
+                a,
+                epoch_count,
+                total_bandwidth_hz,
+                content_bits,
+                quality,
+                &mut cache,
+                &mut queue,
+                &mut windows,
+                sink,
+                tracer,
+            ) {
+                horizon = horizon.max(done);
+            }
+            // Cache hits never queue, so they never close an epoch on
+            // batch size — only generation work counts.
             if cfg.epoch.should_close(queue.len(), a.t_s - open) {
                 close = a.t_s;
                 break;
             }
         }
-        debug_assert!(!queue.is_empty());
+        if queue.is_empty() {
+            // Every arrival this epoch was served straight from the
+            // cache: nothing to freeze, solve, or execute.
+            continue;
+        }
 
         // The epoch is frozen at `close`; the lifecycle rule decides
         // when its solve runs (pipelined: immediately, overlapped with
@@ -799,6 +916,13 @@ where
                     resolved_s: completion,
                     recovered_steps: 0,
                 });
+                // A freshly generated result is cacheable content:
+                // later arrivals with the same mark can skip the GPU.
+                if let Some(c) = cache.as_mut() {
+                    if !q.mark.is_zero() {
+                        c.insert(q.mark, svc.steps);
+                    }
+                }
                 horizon = horizon.max(completion);
                 served_now += 1;
             } else {
@@ -837,7 +961,7 @@ where
         epoch_count += 1;
     }
 
-    horizon
+    (horizon, cache.map(|c| c.stats()).unwrap_or_default())
 }
 
 #[cfg(test)]
@@ -859,8 +983,32 @@ mod tests {
             duty: 0.5,
             horizon_s: horizon,
             max_requests: 0,
+            prompt_universe: 1,
+            zipf_s: 1.0,
+            models: 1,
         };
         ArrivalTrace::generate(&cfg.scenario, &arrival, seed)
+    }
+
+    fn marked_trace(rate: f64, horizon: f64, seed: u64) -> ArrivalTrace {
+        let cfg = ExperimentConfig::paper();
+        let arrival = ArrivalSettings {
+            process: ArrivalProcessKind::Poisson,
+            rate_hz: rate,
+            burst_rate_hz: rate,
+            period_s: 60.0,
+            duty: 0.5,
+            horizon_s: horizon,
+            max_requests: 0,
+            prompt_universe: 12,
+            zipf_s: 1.5,
+            models: 2,
+        };
+        ArrivalTrace::generate(&cfg.scenario, &arrival, seed)
+    }
+
+    fn enabled_cache() -> crate::cache::CacheSettings {
+        crate::cache::CacheSettings { enabled: true, capacity: 32, ..Default::default() }
     }
 
     fn run(trace: &ArrivalTrace, cfg: &DynamicConfig) -> DynamicReport {
@@ -1188,6 +1336,109 @@ mod tests {
         let heavy = run(&trace(15.0, 40.0, 3), &adaptive);
         let max_makespan = heavy.epochs.iter().map(|e| e.makespan_s).fold(0.0, f64::max);
         assert!(max_makespan <= 2.0 * adaptive.plan_horizon_s + 1.0, "makespan {max_makespan}");
+    }
+
+    #[test]
+    fn disabled_cache_ignores_prompt_marks_bitwise() {
+        // With `[cache]` off, prompt marks are inert payload: a marked
+        // trace and its mark-stripped twin replay bitwise identically.
+        let marked = marked_trace(6.0, 90.0, 13);
+        assert!(marked.is_marked());
+        let mut stripped = marked.clone();
+        for a in &mut stripped.arrivals {
+            a.mark = crate::trace::PromptMark::ZERO;
+        }
+        let cfg = DynamicConfig::default();
+        assert!(!cfg.cache.enabled, "cache must be opt-in");
+        let a = run(&marked, &cfg);
+        let b = run(&stripped, &cfg);
+        assert_eq!(a.cache_stats, crate::cache::CacheStats::default());
+        assert_eq!(a.horizon_s.to_bits(), b.horizon_s.to_bits());
+        for (x, y) in a.outcomes.iter().zip(&b.outcomes) {
+            assert_eq!(x.disposition, y.disposition);
+            assert_eq!(x.steps, y.steps);
+            assert_eq!(x.e2e_s.to_bits(), y.e2e_s.to_bits());
+            assert_eq!(x.quality.to_bits(), y.quality.to_bits());
+        }
+    }
+
+    #[test]
+    fn cache_hits_bypass_the_batch_and_conserve_census() {
+        let t = marked_trace(6.0, 120.0, 5);
+        let cfg = DynamicConfig { cache: enabled_cache(), ..Default::default() };
+        let report = run(&t, &cfg);
+        assert_eq!(report.outcomes.len(), t.len(), "census conservation");
+        let hits: Vec<_> = report
+            .outcomes
+            .iter()
+            .filter(|o| o.disposition == Disposition::ServedFromCache)
+            .collect();
+        assert!(!hits.is_empty(), "a 12-prompt Zipf(1.5) universe must repeat");
+        assert_eq!(report.cache_stats.hits as usize, hits.len());
+        assert!(report.cache_stats.insertions > 0);
+        assert!(report.cache_stats.hit_rate() > 0.0);
+        for o in &hits {
+            assert!(o.steps > 0, "cached content has a real step count");
+            assert_eq!(o.wait_s, 0.0, "hits never wait on an epoch");
+            assert!(o.e2e_s > 0.0, "transmission is still paid");
+            assert!(o.met, "tx over the full band beats any paper deadline");
+        }
+        // Deterministic replay, hits included.
+        let again = run(&t, &cfg);
+        assert_eq!(report.horizon_s.to_bits(), again.horizon_s.to_bits());
+        for (x, y) in report.outcomes.iter().zip(&again.outcomes) {
+            assert_eq!(x.disposition, y.disposition);
+            assert_eq!(x.e2e_s.to_bits(), y.e2e_s.to_bits());
+            assert_eq!(x.quality.to_bits(), y.quality.to_bits());
+        }
+    }
+
+    #[test]
+    fn model_swaps_charge_deadline_budget() {
+        // Two models on a single-slot catalog: every model flip costs a
+        // swap, visible both in the stats and as tightened deadlines.
+        let t = marked_trace(4.0, 90.0, 9);
+        let cache = crate::cache::CacheSettings {
+            enabled: true,
+            capacity: 0, // placement-only: no hits, swaps still charged
+            ..Default::default()
+        };
+        let cfg = DynamicConfig { cache, ..Default::default() };
+        let report = run(&t, &cfg);
+        assert_eq!(report.cache_stats.hits, 0, "capacity 0 never hits");
+        assert!(report.cache_stats.swaps > 0, "model flips must swap");
+        let baseline = run(&t, &DynamicConfig::default());
+        let tightened = report
+            .outcomes
+            .iter()
+            .zip(&baseline.outcomes)
+            .filter(|(c, b)| c.deadline_s < b.deadline_s)
+            .count();
+        assert!(tightened > 0, "some deadlines must show the swap charge");
+    }
+
+    #[test]
+    fn cache_enabled_traced_run_audits_clean() {
+        let t = marked_trace(6.0, 60.0, 9);
+        let cfg = DynamicConfig { cache: enabled_cache(), ..DynamicConfig::default() };
+        let plain = run(&t, &cfg);
+        let mut rec = crate::obs::Recorder::new();
+        let traced = simulate_dynamic_traced(
+            &t,
+            &Stacking::default(),
+            &EqualAllocator,
+            &BatchDelayModel::paper(),
+            &PowerLawQuality::paper(),
+            &cfg,
+            &mut rec,
+        );
+        assert_eq!(plain.horizon_s.to_bits(), traced.horizon_s.to_bits());
+        assert!(plain.cache_stats.hits > 0, "the audit must see CacheHit events");
+        let cache_hits =
+            rec.events.iter().filter(|e| matches!(e.kind, EventKind::CacheHit { .. })).count();
+        assert_eq!(cache_hits as u64, plain.cache_stats.hits);
+        let audit = crate::obs::audit::audit_expecting(&rec.events, t.len());
+        assert!(audit.is_clean(), "{}", audit.render());
     }
 
     #[test]

@@ -83,10 +83,36 @@
 //! pools the engines coincide bitwise even under warm starts. The
 //! legacy `simulate_event_cluster` entry point shares one instance
 //! fleet-wide, as before.
+//!
+//! **Generation cache.** With `[cache]` enabled each server carries a
+//! [`ServerCache`]: an arrival whose `(model, prompt)` mark hits the
+//! routed server's cache bypasses the epoch batch entirely and is
+//! delivered after transmission alone (`Disposition::ServedFromCache`
+//! — it never joins an epoch, so it neither counts toward the
+//! batch-close rule nor consumes GPU time); a miss whose model is not
+//! resident charges the catalog's load delay by tightening the
+//! request's residual deadline. Fresh generations populate the serving
+//! server's cache at resolution. Disabled (the default) no cache is
+//! constructed and runs are bitwise identical to the pre-cache engine.
+//! Hand-offs (migration, steal, resume) intentionally skip the cache:
+//! a checkpointed partial cannot be served from cache, and the legacy
+//! migration paths must stay byte-comparable across cache configs.
+//!
+//! **Hot-path structure.** The main loop picks each next server event
+//! from a lazily-invalidated min-heap over `(time, server)` — updated
+//! only when a server's epoch state actually changes — instead of
+//! rescanning the whole fleet per iteration; and a mid-batch death
+//! retracts a victim's optimistic resolution through an O(1) position
+//! map + in-place tombstone instead of scanning everything its server
+//! ever resolved. Both are pure data-structure swaps: the event order
+//! and every float op are unchanged (gated bitwise by
+//! `tests/exec_determinism.rs` and `tests/migration_properties.rs`).
 
-use std::collections::VecDeque;
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashMap, VecDeque};
 
 use crate::bandwidth::{Allocator, AllocatorPool};
+use crate::cache::{CacheStats, ServerCache};
 use crate::channel::Link;
 use crate::coordinator::{EpochPhase, EpochPolicy, SolveMode, SolveTiming};
 use crate::delay::BatchDelayModel;
@@ -98,7 +124,7 @@ use crate::obs::{EventKind, NullSink, TraceSink, NO_REQUEST};
 use crate::quality::QualityModel;
 use crate::routing::{LiveView, RouteContext, Router, RouterKind, ServerState};
 use crate::scheduler::{BatchScheduler, Schedule};
-use crate::trace::{Arrival, ArrivalTrace, DeviceRequest, Workload};
+use crate::trace::{Arrival, ArrivalTrace, DeviceRequest, PromptMark, Workload};
 use crate::util::exec::par_map;
 
 use super::cluster::{sample, samples, ClusterConfig};
@@ -109,6 +135,13 @@ use super::{solve_joint, JointSolution};
 /// dispatched to any server (the whole fleet was down from its arrival
 /// until its deadline).
 pub const UNROUTED: usize = usize::MAX;
+
+/// In-progress tombstone in a server's `resolved_ids` for an outcome a
+/// mid-batch death retracted. Written in place (preserving every other
+/// entry's position and the final emission order) and filtered out
+/// before delivery emission and the report — it never escapes the
+/// engine.
+const RETRACTED: usize = usize::MAX;
 
 /// Settings for one fault-aware cluster run. Fleet-shaped inputs
 /// (speeds, fault script) are borrowed, not owned: sweeps build one
@@ -199,6 +232,9 @@ pub struct EventServerReport {
     pub epochs: Vec<EpochRecord>,
     /// Total time this server spent failed.
     pub downtime_s: f64,
+    /// Generation-cache counters for this server — all zero when the
+    /// cache is disabled.
+    pub cache_stats: CacheStats,
 }
 
 /// Complete result of a fault-aware cluster run.
@@ -295,6 +331,20 @@ impl EventReport {
         self.servers.iter().map(|s| s.epochs.len()).sum()
     }
 
+    /// Fleet-wide generation-cache counters (all zero when disabled).
+    pub fn cache_stats(&self) -> CacheStats {
+        let mut total = CacheStats::default();
+        for s in &self.servers {
+            total.merge(&s.cache_stats);
+        }
+        total
+    }
+
+    /// Requests served straight from a generation cache.
+    pub fn served_from_cache(&self) -> usize {
+        self.outcomes.iter().filter(|o| o.disposition == Disposition::ServedFromCache).count()
+    }
+
     /// Deepest per-epoch queue any single server saw.
     pub fn peak_queue_depth(&self) -> usize {
         self.servers
@@ -376,6 +426,9 @@ struct Pending {
     /// Relative deadline τ.
     deadline_s: f64,
     link: Link,
+    /// Content identity `(model, prompt)` — zero on unmarked traces;
+    /// read only by the generation cache.
+    mark: PromptMark,
     deferrals: u32,
     /// Already counted in the current server's arrival window (reset
     /// when migrating to a different server, so per-server windows see
@@ -396,6 +449,7 @@ impl Pending {
             abs_deadline_s: a.t_s + a.deadline_s,
             deadline_s: a.deadline_s,
             link: a.link,
+            mark: a.mark,
             deferrals: 0,
             recorded: false,
             done_steps: 0,
@@ -488,6 +542,12 @@ struct ServerSim {
     epochs: Vec<EpochRecord>,
     assigned_ids: Vec<usize>,
     resolved_ids: Vec<usize>,
+    /// `resolved_ids` position per id, maintained only while fault
+    /// events remain (the only runs where a retraction can happen) so
+    /// a mid-batch death tombstones a victim in O(1) instead of
+    /// scanning everything this server ever resolved. Positions are
+    /// stable: `resolved_ids` is append-only with in-place tombstones.
+    resolved_pos: HashMap<usize, usize>,
     down_since: Option<f64>,
     downtime_s: f64,
 }
@@ -509,6 +569,7 @@ impl ServerSim {
             epochs: Vec::new(),
             assigned_ids: Vec::new(),
             resolved_ids: Vec::new(),
+            resolved_pos: HashMap::new(),
             down_since: None,
             downtime_s: 0.0,
         }
@@ -621,6 +682,17 @@ struct Engine<'a> {
     resume_q: VecDeque<(f64, usize, Pending)>,
     /// Latent-transfer delay for checkpointed resumes.
     transfer_s: f64,
+    /// Per-server generation caches — `None` unless `[cache]` is
+    /// enabled, so disabled runs construct nothing and stay bitwise
+    /// identical to the pre-cache engine.
+    caches: Option<Vec<ServerCache>>,
+    /// Lazily-invalidated min-heap over per-server next-event times,
+    /// keyed `(t.to_bits(), id)` — sim times are non-negative, so the
+    /// bit order is the float order and ties break by ascending id,
+    /// exactly the old full-fleet scan's order. Entries go stale when
+    /// a server's epoch state changes; [`Engine::next_server_event`]
+    /// discards any entry that no longer matches `next_event_time()`.
+    server_events: BinaryHeap<Reverse<(u64, usize)>>,
     outcomes: Vec<Option<RequestOutcome>>,
     assignment: Vec<usize>,
     migrations: Vec<MigrationRecord>,
@@ -648,6 +720,33 @@ impl Engine<'_> {
     /// Epoch-scope flight-recorder event on `server`'s timeline.
     fn mark(&mut self, t_s: f64, server: usize, kind: EventKind) {
         self.tracer.emit(t_s, server, NO_REQUEST, kind);
+    }
+
+    /// Re-index `idx` after anything that can move its next event:
+    /// an ingest (epoch opened or batch-filled early), a timer freeze,
+    /// or a solve opening the next epoch. Stale entries left behind are
+    /// discarded lazily by [`next_server_event`](Self::next_server_event).
+    fn touch(&mut self, idx: usize) {
+        if let Some(t) = self.servers[idx].next_event_time() {
+            debug_assert!(t >= 0.0, "sim clock went negative");
+            self.server_events.push(Reverse((t.to_bits(), idx)));
+        }
+    }
+
+    /// Earliest live `(time, server)` epoch event, or `None` when no
+    /// server has one. Non-destructive for the winning entry (the main
+    /// loop may hand the instant to a fault or arrival instead); stale
+    /// entries are popped on the way.
+    fn next_server_event(&mut self) -> Option<(f64, usize)> {
+        while let Some(&Reverse((bits, idx))) = self.server_events.peek() {
+            match self.servers[idx].next_event_time() {
+                Some(cur) if cur.to_bits() == bits => return Some((cur, idx)),
+                _ => {
+                    self.server_events.pop();
+                }
+            }
+        }
+        None
     }
 
     fn run(&mut self) {
@@ -681,12 +780,10 @@ impl Engine<'_> {
                     best = Some(c);
                 }
             }
-            for s in &self.servers {
-                if let Some(t) = s.next_event_time() {
-                    let c = (t, 3u8, s.id);
-                    if better(c, best) {
-                        best = Some(c);
-                    }
+            if let Some((t, idx)) = self.next_server_event() {
+                let c = (t, 3u8, idx);
+                if better(c, best) {
+                    best = Some(c);
                 }
             }
             let Some((t, class, idx)) = best else {
@@ -791,7 +888,16 @@ impl Engine<'_> {
             }
             debug_assert!(self.outcomes[r.pending.id].is_some());
             self.outcomes[r.pending.id] = None;
-            self.servers[s].resolved_ids.retain(|&id| id != r.pending.id);
+            // O(1) retraction: tombstone the optimistic resolution in
+            // place (positions are stable, emission order preserved)
+            // instead of rescanning everything this server resolved.
+            let sv = &mut self.servers[s];
+            let pos = sv
+                .resolved_pos
+                .remove(&r.pending.id)
+                .expect("in-flight member was resolved while faults remained");
+            debug_assert_eq!(sv.resolved_ids[pos], r.pending.id);
+            sv.resolved_ids[pos] = RETRACTED;
             retracted = true;
             if checkpoint {
                 let done = fl.schedule.steps_completed_by(r.service_slot, t - fl.start_s);
@@ -885,8 +991,57 @@ impl Engine<'_> {
         self.tracer.emit(a.t_s, choice, a.id, EventKind::Arrived);
         self.tracer.emit(a.t_s, choice, a.id, EventKind::Routed { server: choice, score: 0.0 });
         self.servers[choice].assigned_ids.push(a.id);
+        let mut p = Pending::from_arrival(&a);
+        if let Some(caches) = self.caches.as_mut() {
+            if !a.mark.is_zero() {
+                if let Some(steps) = caches[choice].lookup(a.mark) {
+                    self.serve_from_cache(&a, choice, steps);
+                    return;
+                }
+                // Miss on a non-resident model: the load/swap stalls
+                // the request, tightening its residual budget (elapsed
+                // time is never refunded). Mirrors `sim::dynamic`.
+                p.deadline_s -= caches[choice].ensure_resident(a.mark.model);
+                p.abs_deadline_s = a.t_s + p.deadline_s;
+            }
+        }
         let epoch_policy = self.dynamic.epoch;
-        self.servers[choice].ingest(Pending::from_arrival(&a), a.t_s, &epoch_policy);
+        self.servers[choice].ingest(p, a.t_s, &epoch_policy);
+        self.touch(choice);
+    }
+
+    /// A generation-cache hit: the request bypasses the epoch batch
+    /// entirely and pays only the paper's transmission phase over the
+    /// full band, charged at the cached entry's step-count quality. It
+    /// never joins an epoch, so it neither counts toward the
+    /// batch-close rule nor consumes GPU time; `Delivered` is emitted
+    /// with every other delivery in [`Engine::emit_deliveries`].
+    fn serve_from_cache(&mut self, a: &Arrival, choice: usize, steps: u32) {
+        let e2e = a.link.tx_delay(self.ctx.content_bits, self.ctx.total_bandwidth_hz);
+        let completion = a.t_s + e2e;
+        let met = e2e <= a.deadline_s;
+        let quality = self.quality.quality(steps);
+        self.tracer.emit(a.t_s, choice, a.id, EventKind::CacheHit { steps: steps as usize });
+        let w = &mut self.servers[choice].windows;
+        w.record_arrival(a.t_s);
+        w.record_served(a.t_s, e2e, quality, met);
+        let outcome = RequestOutcome {
+            id: a.id,
+            arrival_s: a.t_s,
+            deadline_s: a.deadline_s,
+            disposition: Disposition::ServedFromCache,
+            steps,
+            quality,
+            e2e_s: e2e,
+            wait_s: 0.0,
+            deferrals: 0,
+            epoch: self.servers[choice].epochs.len(),
+            met,
+            resolved_s: completion,
+            recovered_steps: 0,
+        };
+        self.resolve(a.id, outcome, choice);
+        self.horizon = self.horizon.max(completion);
     }
 
     /// Hand a request back through the router at instant `t`, with its
@@ -902,7 +1057,13 @@ impl Engine<'_> {
         // refunds elapsed time — and, for a checkpointed partial, the
         // steps already in hand (`route_resume` is the identity on
         // `done_steps == 0`, so the legacy paths are untouched).
-        let view = Arrival { id: p.id, t_s: t, deadline_s: p.abs_deadline_s - t, link: p.link };
+        let view = Arrival {
+            id: p.id,
+            t_s: t,
+            deadline_s: p.abs_deadline_s - t,
+            link: p.link,
+            mark: p.mark,
+        };
         let choice = self.router.route_resume(&view, p.done_steps, &self.states, &self.ctx);
         let name = self.router.name();
         assert!(self.states[choice].alive, "router {name} picked failed server {choice}");
@@ -920,6 +1081,7 @@ impl Engine<'_> {
         let epoch_policy = self.dynamic.epoch;
         let landed = Pending { enqueued_s: t, recorded: false, ..p };
         self.servers[choice].ingest(landed, t, &epoch_policy);
+        self.touch(choice);
     }
 
     /// Hand a solve's carry-over to the router under steal-when-idle.
@@ -935,13 +1097,20 @@ impl Engine<'_> {
             self.unroutable.push_back(p);
             return;
         }
-        let view = Arrival { id: p.id, t_s: t, deadline_s: p.abs_deadline_s - t, link: p.link };
+        let view = Arrival {
+            id: p.id,
+            t_s: t,
+            deadline_s: p.abs_deadline_s - t,
+            link: p.link,
+            mark: p.mark,
+        };
         let choice = self.router.route_resume(&view, p.done_steps, &self.states, &self.ctx);
         let name = self.router.name();
         assert!(self.states[choice].alive, "router {name} picked failed server {choice}");
         let epoch_policy = self.dynamic.epoch;
         if choice == from {
             self.servers[from].ingest(Pending { enqueued_s: t, ..p }, t, &epoch_policy);
+            self.touch(from);
             return;
         }
         let service_est_s = self.delay.g(1) / self.states[choice].speed;
@@ -957,6 +1126,7 @@ impl Engine<'_> {
         self.tracer.emit(t, choice, p.id, EventKind::Routed { server: choice, score: 0.0 });
         let landed = Pending { enqueued_s: t, recorded: false, ..p };
         self.servers[choice].ingest(landed, t, &epoch_policy);
+        self.touch(choice);
     }
 
     fn handle_server_event(&mut self, idx: usize) {
@@ -974,6 +1144,10 @@ impl Engine<'_> {
         };
         if ready {
             self.solve_server(idx, None);
+        } else {
+            // The freeze moved this server's next event from the epoch
+            // timer to its batch start — re-index.
+            self.touch(idx);
         }
     }
 
@@ -1194,6 +1368,7 @@ impl Engine<'_> {
             );
             self.servers[idx].epochs.push(rec);
             self.open_after_solve(idx, t0, Vec::new());
+            self.touch(idx);
             return;
         }
 
@@ -1275,6 +1450,14 @@ impl Engine<'_> {
                     recovered_steps: q.done_steps,
                 };
                 self.resolve(q.id, outcome, idx);
+                // A fresh full generation populates this server's
+                // cache (resumes ship a partial latent — not reusable
+                // content — so they never seed an entry).
+                if q.done_steps == 0 && !q.mark.is_zero() {
+                    if let Some(caches) = self.caches.as_mut() {
+                        caches[idx].insert(q.mark, svc.steps);
+                    }
+                }
                 self.horizon = self.horizon.max(completion);
                 served_now += 1;
             } else {
@@ -1316,6 +1499,7 @@ impl Engine<'_> {
         } else {
             self.open_after_solve(idx, t0, deferred);
         }
+        self.touch(idx);
     }
 
     /// Open the server's next epoch after a solve at `t0`, replaying
@@ -1421,7 +1605,15 @@ impl Engine<'_> {
     fn resolve(&mut self, id: usize, outcome: RequestOutcome, server: usize) {
         debug_assert!(self.outcomes[id].is_none(), "request {id} resolved twice");
         self.outcomes[id] = Some(outcome);
-        self.servers[server].resolved_ids.push(id);
+        let sv = &mut self.servers[server];
+        if self.next_fault < self.fault_events.len() {
+            // A later death may retract this resolution — remember its
+            // position so the retraction is O(1). Zero-fault runs (and
+            // the tail past the last fault) skip the bookkeeping
+            // entirely, like the in-flight tracking.
+            sv.resolved_pos.insert(id, sv.resolved_ids.len());
+        }
+        sv.resolved_ids.push(id);
     }
 
     /// Drop a request its dead server stranded (no migration, or no
@@ -1483,6 +1675,9 @@ impl Engine<'_> {
         for s in 0..self.servers.len() {
             for i in 0..self.servers[s].resolved_ids.len() {
                 let id = self.servers[s].resolved_ids[i];
+                if id == RETRACTED {
+                    continue;
+                }
                 let o = self.outcomes[id].expect("resolved id has an outcome");
                 if o.disposition.is_served() {
                     let kind = EventKind::Delivered { steps: o.steps as usize };
@@ -1496,6 +1691,7 @@ impl Engine<'_> {
         self.emit_deliveries();
         let horizon = self.horizon;
         let fault_events = self.fault_events;
+        let caches = self.caches;
         let outcomes: Vec<RequestOutcome> = self
             .outcomes
             .into_iter()
@@ -1521,13 +1717,18 @@ impl Engine<'_> {
                         horizon.min(recovery).max(since) - since
                     })
                     .unwrap_or(0.0);
+                // Tombstones never escape: retracted slots are cut
+                // here, preserving the resolution order of the rest.
+                let mut resolved_ids = s.resolved_ids;
+                resolved_ids.retain(|&id| id != RETRACTED);
                 EventServerReport {
                     server: s.id,
                     speed: s.speed,
                     assigned_ids: s.assigned_ids,
-                    resolved_ids: s.resolved_ids,
+                    resolved_ids,
                     epochs: s.epochs,
                     downtime_s: s.downtime_s + tail,
+                    cache_stats: caches.as_ref().map(|c| c[s.id].stats()).unwrap_or_default(),
                 }
             })
             .collect();
@@ -1619,6 +1820,7 @@ fn run_event_cluster(
     tracer: &mut dyn TraceSink,
 ) -> EventReport {
     let n_servers = cfg.servers();
+    let cache = cfg.dynamic.cache;
     assert!(n_servers >= 1, "cluster needs at least one server");
     assert_eq!(allocators.len(), n_servers, "one allocator reference per server");
     cfg.faults.validate_servers(n_servers).expect("fault script must fit the fleet");
@@ -1631,7 +1833,7 @@ fn run_event_cluster(
         quality,
         dynamic: cfg.dynamic,
         policy: cfg.migration.build(),
-        router: cfg.router.build(*delay),
+        router: cfg.router.build_with_cache(*delay, cache),
         states: ServerState::fleet(cfg.speeds),
         ctx: RouteContext {
             total_bandwidth_hz: trace.total_bandwidth_hz,
@@ -1649,6 +1851,8 @@ fn run_event_cluster(
         unroutable: VecDeque::new(),
         resume_q: VecDeque::new(),
         transfer_s: cfg.resume_transfer_s,
+        caches: cache.enabled.then(|| ServerCache::fleet(&cache, n_servers)),
+        server_events: BinaryHeap::new(),
         outcomes: vec![None; trace.len()],
         assignment: vec![UNROUTED; trace.len()],
         migrations: Vec::new(),
@@ -1665,6 +1869,7 @@ fn run_event_cluster(
 mod tests {
     use super::*;
     use crate::bandwidth::EqualAllocator;
+    use crate::cache::CacheSettings;
     use crate::config::{ArrivalProcessKind, ArrivalSettings, ExperimentConfig};
     use crate::faults::DownInterval;
     use crate::quality::PowerLawQuality;
@@ -1681,8 +1886,39 @@ mod tests {
             duty: 0.5,
             horizon_s: horizon,
             max_requests: 0,
+            prompt_universe: 1,
+            zipf_s: 1.0,
+            models: 1,
         };
         ArrivalTrace::generate(&cfg.scenario, &arrival, seed)
+    }
+
+    /// A trace whose arrivals carry Zipf prompt marks over a small,
+    /// skewed universe — plenty of repeats for the cache to hit.
+    fn marked_trace(rate: f64, horizon: f64, seed: u64) -> ArrivalTrace {
+        let cfg = ExperimentConfig::paper();
+        let arrival = ArrivalSettings {
+            process: ArrivalProcessKind::Poisson,
+            rate_hz: rate,
+            burst_rate_hz: rate,
+            period_s: 60.0,
+            duty: 0.5,
+            horizon_s: horizon,
+            max_requests: 0,
+            prompt_universe: 12,
+            zipf_s: 1.5,
+            models: 2,
+        };
+        ArrivalTrace::generate(&cfg.scenario, &arrival, seed)
+    }
+
+    fn enabled_cache() -> CacheSettings {
+        CacheSettings { enabled: true, capacity: 32, ..CacheSettings::default() }
+    }
+
+    /// One unmarked arrival on the reference 7.0 dB link.
+    fn one(id: usize, t_s: f64, deadline_s: f64) -> Arrival {
+        Arrival { id, t_s, deadline_s, link: Link::new(7.0), mark: PromptMark::ZERO }
     }
 
     fn run(trace: &ArrivalTrace, cfg: &EventClusterConfig) -> EventReport {
@@ -1843,7 +2079,7 @@ mod tests {
         // t = 14.9 split 2/2 under JSQ (ties to the lower id), then
         // server 1 dies at t = 15 with its epoch still open — exactly
         // two requests are stranded.
-        let mk = |id, t| Arrival { id, t_s: t, deadline_s: 20.0, link: Link::new(7.0) };
+        let mk = |id, t| one(id, t, 20.0);
         let arrivals = vec![mk(0, 1.0), mk(1, 14.9), mk(2, 14.9), mk(3, 14.9), mk(4, 14.9)];
         let t = ArrivalTrace { arrivals, total_bandwidth_hz: 40_000.0, content_bits: 24_000.0 };
         let script = FaultScript::scheduled(vec![down(1, 15.0, 1000.0)]).unwrap();
@@ -1870,10 +2106,7 @@ mod tests {
 
     #[test]
     fn whole_fleet_outage_parks_and_recovers() {
-        let arrivals = vec![
-            Arrival { id: 0, t_s: 1.0, deadline_s: 30.0, link: Link::new(7.0) },
-            Arrival { id: 1, t_s: 2.0, deadline_s: 30.0, link: Link::new(7.0) },
-        ];
+        let arrivals = vec![one(0, 1.0, 30.0), one(1, 2.0, 30.0)];
         let t = ArrivalTrace { arrivals, total_bandwidth_hz: 40_000.0, content_bits: 24_000.0 };
         let script = FaultScript::scheduled(vec![down(0, 0.5, 10.0)]).unwrap();
         let report = run(&t, &cfg(vec![1.0], script, MigrationPolicyKind::RequeueOnDeath).view());
@@ -1895,7 +2128,7 @@ mod tests {
 
     #[test]
     fn permanent_total_outage_drops_everything_as_lost() {
-        let arrivals = vec![Arrival { id: 0, t_s: 1.0, deadline_s: 5.0, link: Link::new(7.0) }];
+        let arrivals = vec![one(0, 1.0, 5.0)];
         let t = ArrivalTrace { arrivals, total_bandwidth_hz: 40_000.0, content_bits: 24_000.0 };
         let script = FaultScript::scheduled(vec![down(0, 0.0, 1e9)]).unwrap();
         let report = run(&t, &cfg(vec![1.0], script, MigrationPolicyKind::RequeueOnDeath).view());
@@ -2022,7 +2255,7 @@ mod tests {
         // runs several singleton batches, so at the death instant
         // t = 1.5 — 0.5 s into execution — exactly one step boundary
         // has passed (batch 1 ends ≈ 1.378, batch 2 ≈ 1.757).
-        let arrivals = vec![Arrival { id: 0, t_s: 0.0, deadline_s: 10.0, link: Link::new(7.0) }];
+        let arrivals = vec![one(0, 0.0, 10.0)];
         let t = ArrivalTrace { arrivals, total_bandwidth_hz: 40_000.0, content_bits: 24_000.0 };
         let script = FaultScript::scheduled(vec![down(0, 1.5, 100.0)]).unwrap();
 
@@ -2069,7 +2302,7 @@ mod tests {
         // Same shape, but the transfer is so slow the absolute deadline
         // (10 s) passes mid-transit: the victim expires at its
         // deadline, not at the transfer's end.
-        let arrivals = vec![Arrival { id: 0, t_s: 0.0, deadline_s: 10.0, link: Link::new(7.0) }];
+        let arrivals = vec![one(0, 0.0, 10.0)];
         let t = ArrivalTrace { arrivals, total_bandwidth_hz: 40_000.0, content_bits: 24_000.0 };
         let script = FaultScript::scheduled(vec![down(0, 1.5, 100.0)]).unwrap();
         let mut c = cfg(vec![1.0, 1.0], script, MigrationPolicyKind::Checkpoint);
@@ -2185,5 +2418,98 @@ mod tests {
             assert_eq!(x.t_s.to_bits(), y.t_s.to_bits());
             assert_eq!((x.server, x.request, x.kind), (y.server, y.request, y.kind));
         }
+    }
+
+    #[test]
+    fn marked_trace_with_cache_disabled_is_bitwise_identical() {
+        // Prompt marks ride along in the trace but a cache-disabled
+        // run must never read them: bitwise identical to the same
+        // trace with every mark stripped, even under faults.
+        let marked = marked_trace(6.0, 60.0, 9);
+        let mut stripped = marked.clone();
+        for a in &mut stripped.arrivals {
+            a.mark = PromptMark::ZERO;
+        }
+        let script = FaultScript::random(3, 60.0, 25.0, 8.0, 11);
+        let c = cfg(server_speeds(3, 0.5, 1.5), script, MigrationPolicyKind::Checkpoint);
+        let a = run(&marked, &c.view());
+        let b = run(&stripped, &c.view());
+        assert_eq!(a.assignment, b.assignment);
+        assert_eq!(a.horizon_s.to_bits(), b.horizon_s.to_bits());
+        for (x, y) in a.outcomes.iter().zip(&b.outcomes) {
+            assert_eq!(x.disposition, y.disposition, "request {}", x.id);
+            assert_eq!(x.quality.to_bits(), y.quality.to_bits(), "request {}", x.id);
+            assert_eq!(x.resolved_s.to_bits(), y.resolved_s.to_bits(), "request {}", x.id);
+        }
+        assert_eq!(a.served_from_cache(), 0);
+        assert_eq!(a.cache_stats(), crate::cache::CacheStats::default());
+    }
+
+    #[test]
+    fn cache_enabled_run_hits_conserves_replays_and_audits_clean() {
+        let t = marked_trace(6.0, 60.0, 9);
+        let script = FaultScript::random(3, 60.0, 25.0, 8.0, 11);
+        let mut c = cfg(server_speeds(3, 0.5, 1.5), script, MigrationPolicyKind::Checkpoint);
+        c.router = RouterKind::CacheAware;
+        c.dynamic.cache = enabled_cache();
+        c.transfer_s = 0.5;
+        let report = run(&t, &c.view());
+        assert_eq!(report.outcomes.len(), t.len());
+        assert_eq!(report.served() + report.dropped(), t.len(), "census conservation");
+        let hits = report.served_from_cache();
+        assert!(hits > 0, "a skewed Zipf trace must produce cache hits");
+        assert_eq!(report.cache_stats().hits, hits as u64);
+        for o in &report.outcomes {
+            if o.disposition == Disposition::ServedFromCache {
+                assert_eq!(o.wait_s, 0.0, "hits bypass the epoch queue: {o:?}");
+                assert!(o.steps > 0, "{o:?}");
+                assert!(o.met, "transmission alone fits the paper deadlines: {o:?}");
+            }
+        }
+        // Bit-identical replay, and the flight recorder agrees.
+        let again = run(&t, &c.view());
+        assert_eq!(report.assignment, again.assignment);
+        assert_eq!(report.horizon_s.to_bits(), again.horizon_s.to_bits());
+        for (x, y) in report.outcomes.iter().zip(&again.outcomes) {
+            assert_eq!(x.disposition, y.disposition);
+            assert_eq!(x.quality.to_bits(), y.quality.to_bits());
+            assert_eq!(x.resolved_s.to_bits(), y.resolved_s.to_bits());
+        }
+        let mut rec = crate::obs::Recorder::new();
+        let traced = simulate_event_cluster_traced(
+            &t,
+            &Stacking::default(),
+            &EqualAllocator,
+            &BatchDelayModel::paper(),
+            &PowerLawQuality::paper(),
+            &c.view(),
+            &mut rec,
+        );
+        assert_eq!(traced.horizon_s.to_bits(), report.horizon_s.to_bits());
+        let cache_hits = rec
+            .events
+            .iter()
+            .filter(|e| matches!(e.kind, EventKind::CacheHit { .. }))
+            .count();
+        assert_eq!(cache_hits, hits, "one CacheHit event per cache-served request");
+        let audit = crate::obs::audit::audit_expecting(&rec.events, t.len());
+        assert!(audit.is_clean(), "{}", audit.render());
+    }
+
+    #[test]
+    fn model_swaps_tighten_deadlines_in_placement_only_mode() {
+        // capacity 0 keeps the model catalog but never stores content:
+        // no hits, only load/swap charges on the two-model trace.
+        let t = marked_trace(6.0, 50.0, 5);
+        let mut c =
+            cfg(server_speeds(2, 0.8, 1.2), FaultScript::empty(), MigrationPolicyKind::None);
+        c.dynamic.cache = CacheSettings { capacity: 0, ..enabled_cache() };
+        let report = run(&t, &c.view());
+        assert_eq!(report.served_from_cache(), 0, "nothing can hit a zero-capacity cache");
+        assert!(report.cache_stats().swaps > 0, "two models on one slot must swap");
+        assert!(
+            report.outcomes.iter().zip(&t.arrivals).any(|(o, a)| o.deadline_s < a.deadline_s),
+            "some residual deadline must be tightened by a model load"
+        );
     }
 }

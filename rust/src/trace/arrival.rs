@@ -14,12 +14,90 @@
 //!
 //! Every arrival carries the paper's per-request marks: a relative
 //! deadline τ ~ U[lo, hi] and a downlink with η ~ U[eta_lo, eta_hi].
+//! When the prompt-popularity knobs are on, each arrival additionally
+//! carries a `(model_id, prompt_id)` [`PromptMark`] drawn from a
+//! seeded Zipf law — the content identity the generation cache keys
+//! on. With the knobs at their defaults every mark is
+//! [`PromptMark::ZERO`], zero extra RNG draws happen, and traces
+//! serialize in the unversioned-v1 formats unchanged.
 
 use anyhow::{bail, Context, Result};
 
 use crate::channel::{ChannelGenerator, FadingModel, Link};
 use crate::config::{ArrivalProcessKind, ArrivalSettings, ScenarioConfig};
 use crate::util::Pcg64;
+
+/// Content identity of a request: which diffusion model serves it and
+/// which prompt (bucketed into a finite universe) it asks for. Two
+/// requests with equal marks want the identical content — the unit the
+/// generation cache is addressed by.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub struct PromptMark {
+    pub model: u32,
+    pub prompt: u32,
+}
+
+impl PromptMark {
+    /// The unmarked identity (model 0, prompt 0) every arrival carries
+    /// when prompt popularity is disabled.
+    pub const ZERO: PromptMark = PromptMark { model: 0, prompt: 0 };
+
+    pub fn is_zero(&self) -> bool {
+        *self == Self::ZERO
+    }
+}
+
+/// Seeded Zipf popularity law over prompt ids (and a uniform model
+/// choice): prompt k (1-based rank) is drawn with probability
+/// k^-s / Σ j^-s. Runs on its own PCG stream so enabling marks never
+/// perturbs the arrival-time/deadline/channel draws.
+#[derive(Debug, Clone)]
+pub struct PromptLaw {
+    rng: Pcg64,
+    /// Cumulative normalized Zipf weights; `cumulative[k]` is
+    /// P(prompt ≤ k), with the last entry pinned to 1.0.
+    cumulative: Vec<f64>,
+    models: u32,
+}
+
+/// Dedicated PCG stream for prompt marks (arrivals use 0xA221).
+const PROMPT_STREAM: u64 = 0xA227;
+
+impl PromptLaw {
+    pub fn new(universe: usize, zipf_s: f64, models: u32, seed: u64) -> Self {
+        assert!(universe >= 1, "prompt universe must be at least 1");
+        assert!(zipf_s.is_finite() && zipf_s > 0.0, "zipf_s must be finite and positive");
+        assert!(models >= 1, "at least one model");
+        let mut cumulative: Vec<f64> = (1..=universe).map(|k| (k as f64).powf(-zipf_s)).collect();
+        let total: f64 = cumulative.iter().sum();
+        let mut acc = 0.0;
+        for w in cumulative.iter_mut() {
+            acc += *w / total;
+            *w = acc;
+        }
+        // Guard the tail against rounding so every uniform lands.
+        *cumulative.last_mut().expect("universe >= 1") = 1.0;
+        Self { rng: Pcg64::new(seed, PROMPT_STREAM), cumulative, models }
+    }
+
+    /// Build the law for `settings` iff its prompt knobs are active.
+    pub fn from_settings(settings: &ArrivalSettings, seed: u64) -> Option<Self> {
+        if settings.prompts_enabled() {
+            Some(Self::new(settings.prompt_universe, settings.zipf_s, settings.models, seed))
+        } else {
+            None
+        }
+    }
+
+    /// Draw one mark: a Zipf-ranked prompt id (0 = most popular) and a
+    /// uniform model id.
+    pub fn draw(&mut self) -> PromptMark {
+        let u = self.rng.uniform();
+        let prompt = self.cumulative.partition_point(|&c| c <= u) as u32;
+        let model = if self.models > 1 { self.rng.below(self.models as u64) as u32 } else { 0 };
+        PromptMark { model, prompt }
+    }
+}
 
 /// One dynamically-arriving request.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -32,6 +110,9 @@ pub struct Arrival {
     /// `t_s + deadline_s`).
     pub deadline_s: f64,
     pub link: Link,
+    /// Content identity; [`PromptMark::ZERO`] unless the prompt
+    /// popularity knobs are on.
+    pub mark: PromptMark,
 }
 
 /// A complete, replayable arrival trace plus the shared wireless
@@ -83,17 +164,42 @@ impl ArrivalTrace {
         }
     }
 
+    /// Any arrival carrying a non-zero prompt mark? Marked traces
+    /// serialize in the v2 formats; unmarked ones keep writing the v1
+    /// bytes so pre-existing captures and fixtures stay byte-identical.
+    pub fn is_marked(&self) -> bool {
+        self.arrivals.iter().any(|a| !a.mark.is_zero())
+    }
+
     /// Serialize to the replay CSV (`t_s,deadline_s,eta` per line, with
-    /// a header carrying the scenario constants).
+    /// a header carrying the scenario constants). Traces with prompt
+    /// marks write the versioned v2 header and two extra columns
+    /// (`model,prompt`); unmarked traces write v1 byte-for-byte as
+    /// before.
     pub fn to_csv(&self) -> String {
         let mut out = String::new();
+        let marked = self.is_marked();
+        let version = if marked { 2 } else { 1 };
         out.push_str(&format!(
-            "# aigc-edge arrival trace v1 total_bandwidth_hz={} content_bits={}\n",
+            "# aigc-edge arrival trace v{version} total_bandwidth_hz={} content_bits={}\n",
             self.total_bandwidth_hz, self.content_bits
         ));
-        out.push_str("t_s,deadline_s,eta\n");
-        for a in &self.arrivals {
-            out.push_str(&format!("{},{},{}\n", a.t_s, a.deadline_s, a.link.spectral_efficiency));
+        if marked {
+            out.push_str("t_s,deadline_s,eta,model,prompt\n");
+            for a in &self.arrivals {
+                out.push_str(&format!(
+                    "{},{},{},{},{}\n",
+                    a.t_s, a.deadline_s, a.link.spectral_efficiency, a.mark.model, a.mark.prompt
+                ));
+            }
+        } else {
+            out.push_str("t_s,deadline_s,eta\n");
+            for a in &self.arrivals {
+                out.push_str(&format!(
+                    "{},{},{}\n",
+                    a.t_s, a.deadline_s, a.link.spectral_efficiency
+                ));
+            }
         }
         out
     }
@@ -123,14 +229,26 @@ impl ArrivalTrace {
                 continue;
             }
             let fields: Vec<&str> = line.split(',').collect();
-            if fields.len() != 3 {
-                bail!("trace line {}: expected t,deadline,eta, got '{line}'", i + 2);
+            if fields.len() != 3 && fields.len() != 5 {
+                bail!(
+                    "trace line {}: expected t,deadline,eta[,model,prompt], got '{line}'",
+                    i + 2
+                );
             }
             let t_s: f64 = fields[0].parse().with_context(|| format!("line {}: bad t", i + 2))?;
             let deadline_s: f64 =
                 fields[1].parse().with_context(|| format!("line {}: bad deadline", i + 2))?;
             let eta: f64 =
                 fields[2].parse().with_context(|| format!("line {}: bad eta", i + 2))?;
+            let mark = if fields.len() == 5 {
+                let model: u32 =
+                    fields[3].parse().with_context(|| format!("line {}: bad model", i + 2))?;
+                let prompt: u32 =
+                    fields[4].parse().with_context(|| format!("line {}: bad prompt", i + 2))?;
+                PromptMark { model, prompt }
+            } else {
+                PromptMark::ZERO
+            };
             if t_s < prev_t {
                 bail!("trace line {}: arrivals must be time-sorted", i + 2);
             }
@@ -138,7 +256,13 @@ impl ArrivalTrace {
                 bail!("trace line {}: deadline and eta must be positive", i + 2);
             }
             prev_t = t_s;
-            arrivals.push(Arrival { id: arrivals.len(), t_s, deadline_s, link: Link::new(eta) });
+            arrivals.push(Arrival {
+                id: arrivals.len(),
+                t_s,
+                deadline_s,
+                link: Link::new(eta),
+                mark,
+            });
         }
         Ok(Self { arrivals, total_bandwidth_hz, content_bits })
     }
@@ -152,6 +276,9 @@ impl ArrivalTrace {
 pub struct ArrivalStream {
     rng: Pcg64,
     channels: ChannelGenerator,
+    /// Zipf prompt/model marks; `None` when the knobs are off, so
+    /// disabled runs make zero extra draws.
+    prompts: Option<PromptLaw>,
     settings: ArrivalSettings,
     deadline_lo: f64,
     deadline_hi: f64,
@@ -177,6 +304,7 @@ impl ArrivalStream {
         Self {
             rng,
             channels,
+            prompts: PromptLaw::from_settings(arrival, seed),
             settings: *arrival,
             deadline_lo: scenario.deadline_lo,
             deadline_hi: scenario.deadline_hi,
@@ -226,11 +354,13 @@ impl Iterator for ArrivalStream {
                 continue;
             }
             let deadline_s = self.rng.uniform_in(self.deadline_lo, self.deadline_hi);
+            let mark = self.prompts.as_mut().map(|p| p.draw()).unwrap_or(PromptMark::ZERO);
             let arrival = Arrival {
                 id: self.next_id,
                 t_s: self.t,
                 deadline_s,
                 link: self.channels.draw(),
+                mark,
             };
             self.next_id += 1;
             return Some(arrival);
@@ -252,6 +382,9 @@ mod tests {
             duty: 0.25,
             horizon_s: horizon,
             max_requests: 0,
+            prompt_universe: 1,
+            zipf_s: 1.0,
+            models: 1,
         }
     }
 
@@ -353,6 +486,78 @@ mod tests {
         assert!(trace.len() > 50);
         let replayed = ArrivalTrace::from_csv(&trace.to_csv()).unwrap();
         assert_eq!(trace, replayed);
+    }
+
+    #[test]
+    fn disabled_prompts_draw_nothing_and_stay_unmarked() {
+        // universe = 1, models = 1 is the off position: the trace must
+        // be bit-identical to one generated before marks existed —
+        // same times, deadlines, links — and every mark is ZERO.
+        let off = settings(ArrivalProcessKind::Poisson, 4.0, 200.0);
+        let mut on = off;
+        on.prompt_universe = 100;
+        on.zipf_s = 1.2;
+        on.models = 3;
+        let base = ArrivalTrace::generate(&scenario(), &off, 7);
+        let marked = ArrivalTrace::generate(&scenario(), &on, 7);
+        assert!(base.arrivals.iter().all(|a| a.mark.is_zero()));
+        assert!(!base.is_marked());
+        assert!(marked.is_marked());
+        assert_eq!(base.len(), marked.len(), "marks must not perturb arrival times");
+        for (a, b) in base.arrivals.iter().zip(&marked.arrivals) {
+            assert_eq!(a.t_s.to_bits(), b.t_s.to_bits());
+            assert_eq!(a.deadline_s.to_bits(), b.deadline_s.to_bits());
+            assert_eq!(
+                a.link.spectral_efficiency.to_bits(),
+                b.link.spectral_efficiency.to_bits()
+            );
+        }
+    }
+
+    #[test]
+    fn zipf_marks_are_skewed_deterministic_and_in_range() {
+        let mut s = settings(ArrivalProcessKind::Poisson, 10.0, 400.0);
+        s.prompt_universe = 50;
+        s.zipf_s = 1.5;
+        s.models = 4;
+        let a = ArrivalTrace::generate(&scenario(), &s, 11);
+        let b = ArrivalTrace::generate(&scenario(), &s, 11);
+        assert_eq!(a, b, "marks replay bit-identically per seed");
+        assert!(a.len() > 1000);
+        let mut counts = vec![0usize; 50];
+        let mut model_seen = vec![false; 4];
+        for arr in &a.arrivals {
+            assert!((arr.mark.prompt as usize) < 50);
+            assert!((arr.mark.model as usize) < 4);
+            counts[arr.mark.prompt as usize] += 1;
+            model_seen[arr.mark.model as usize] = true;
+        }
+        assert!(model_seen.iter().all(|&m| m), "all models drawn");
+        // Zipf s=1.5 over 50: rank 0 carries ~38% of the mass; the
+        // head must dominate the tail decisively.
+        let head = counts[0] as f64 / a.len() as f64;
+        assert!(head > 0.25, "head share {head}");
+        let tail: usize = counts[25..].iter().sum();
+        assert!(counts[0] > tail, "rank-0 ({}) must outweigh the tail half ({tail})", counts[0]);
+    }
+
+    #[test]
+    fn marked_csv_roundtrip_is_exact_and_versioned() {
+        let mut s = settings(ArrivalProcessKind::Poisson, 3.0, 120.0);
+        s.prompt_universe = 20;
+        s.zipf_s = 1.1;
+        s.models = 2;
+        let trace = ArrivalTrace::generate(&scenario(), &s, 13);
+        assert!(trace.is_marked());
+        let csv = trace.to_csv();
+        assert!(csv.starts_with("# aigc-edge arrival trace v2"), "{}", &csv[..60]);
+        assert!(csv.contains("t_s,deadline_s,eta,model,prompt"));
+        let replayed = ArrivalTrace::from_csv(&csv).unwrap();
+        assert_eq!(trace, replayed);
+        // Unmarked traces keep the v1 bytes.
+        let plain_settings = settings(ArrivalProcessKind::Poisson, 3.0, 120.0);
+        let plain = ArrivalTrace::generate(&scenario(), &plain_settings, 13);
+        assert!(plain.to_csv().starts_with("# aigc-edge arrival trace v1"));
     }
 
     #[test]

@@ -17,14 +17,21 @@
 //! exact f64 bits), 24 bytes per request, and [`ColumnarReader`]
 //! replays chunk-by-chunk so a simulation can consume arrivals without
 //! holding the whole `Vec<Arrival>`.
+//!
+//! Traces carrying prompt marks write version 2: each frame appends
+//! two u32 columns (`model × n`, `prompt × n`, 32 bytes per request
+//! total). Unmarked traces keep emitting the version-1 bytes
+//! unchanged, and the reader accepts both.
 
 use anyhow::{bail, ensure, Result};
 
 use crate::channel::Link;
-use crate::trace::{Arrival, ArrivalTrace};
+use crate::trace::{Arrival, ArrivalTrace, PromptMark};
 
 const MAGIC: &[u8; 8] = b"AIGCTRC\0";
 const VERSION: u32 = 1;
+/// Version written when any arrival carries a non-zero prompt mark.
+const VERSION_MARKED: u32 = 2;
 const HEADER_LEN: usize = 8 + 4 + 4 + 8 + 8 + 8;
 /// Default requests per frame: 64 KiB of payload per column chunk.
 pub const DEFAULT_CHUNK_LEN: usize = 8192;
@@ -70,9 +77,11 @@ pub fn encode_chunked(trace: &ArrivalTrace, chunk_len: usize) -> Vec<u8> {
         "chunk_len {chunk_len} exceeds the u32 frame header"
     );
     let n = trace.arrivals.len();
-    let mut out = Vec::with_capacity(HEADER_LEN + n * 24 + (n / chunk_len + 1) * 4);
+    let marked = trace.is_marked();
+    let stride = if marked { 32 } else { 24 };
+    let mut out = Vec::with_capacity(HEADER_LEN + n * stride + (n / chunk_len + 1) * 4);
     out.extend_from_slice(MAGIC);
-    push_u32(&mut out, VERSION);
+    push_u32(&mut out, if marked { VERSION_MARKED } else { VERSION });
     push_u32(&mut out, chunk_len as u32);
     push_f64(&mut out, trace.total_bandwidth_hz);
     push_f64(&mut out, trace.content_bits);
@@ -87,6 +96,14 @@ pub fn encode_chunked(trace: &ArrivalTrace, chunk_len: usize) -> Vec<u8> {
         }
         for a in chunk {
             push_f64(&mut out, a.link.spectral_efficiency);
+        }
+        if marked {
+            for a in chunk {
+                push_u32(&mut out, a.mark.model);
+            }
+            for a in chunk {
+                push_u32(&mut out, a.mark.prompt);
+            }
         }
     }
     out
@@ -127,6 +144,8 @@ pub struct ColumnarReader<'a> {
     count: usize,
     next_id: usize,
     prev_t: f64,
+    /// Version-2 stream: frames carry the two u32 mark columns.
+    marked: bool,
     chunk: Vec<Arrival>,
     chunk_pos: usize,
     failed: bool,
@@ -139,7 +158,10 @@ impl<'a> ColumnarReader<'a> {
         ensure!(&bytes[..8] == MAGIC, "not a columnar arrival trace (bad magic)");
         pos += 8;
         let version = read_u32(bytes, &mut pos)?;
-        ensure!(version == VERSION, "unsupported columnar trace version {version}");
+        ensure!(
+            version == VERSION || version == VERSION_MARKED,
+            "unsupported columnar trace version {version}"
+        );
         let chunk_len = read_u32(bytes, &mut pos)?;
         ensure!(chunk_len > 0, "columnar trace declares zero chunk length");
         let total_bandwidth_hz = read_f64(bytes, &mut pos)?;
@@ -166,6 +188,7 @@ impl<'a> ColumnarReader<'a> {
             count,
             next_id: 0,
             prev_t: f64::NEG_INFINITY,
+            marked: version == VERSION_MARKED,
             chunk: Vec::new(),
             chunk_pos: 0,
             failed: false,
@@ -204,6 +227,15 @@ impl<'a> ColumnarReader<'a> {
             let deadline_s = read_f64(self.bytes, &mut pos)?;
             let mut pos = t_base + 8 * (2 * n + i);
             let eta = read_f64(self.bytes, &mut pos)?;
+            let mark = if self.marked {
+                let mut pos = t_base + 24 * n + 4 * i;
+                let model = read_u32(self.bytes, &mut pos)?;
+                let mut pos = t_base + 24 * n + 4 * (n + i);
+                let prompt = read_u32(self.bytes, &mut pos)?;
+                PromptMark { model, prompt }
+            } else {
+                PromptMark::ZERO
+            };
             if t_s < self.prev_t {
                 bail!("columnar trace: arrivals must be time-sorted (id {})", self.next_id + i);
             }
@@ -214,10 +246,11 @@ impl<'a> ColumnarReader<'a> {
                 );
             }
             self.prev_t = t_s;
-            let arrival = Arrival { id: self.next_id + i, t_s, deadline_s, link: Link::new(eta) };
+            let arrival =
+                Arrival { id: self.next_id + i, t_s, deadline_s, link: Link::new(eta), mark };
             self.chunk.push(arrival);
         }
-        self.pos = t_base + 24 * n;
+        self.pos = t_base + if self.marked { 32 * n } else { 24 * n };
         self.chunk_pos = 0;
         Ok(())
     }
@@ -258,6 +291,26 @@ mod tests {
             duty: 0.25,
             horizon_s: 120.0,
             max_requests: 0,
+            prompt_universe: 1,
+            zipf_s: 1.0,
+            models: 1,
+        };
+        ArrivalTrace::generate(&cfg.scenario, &arrival, 7)
+    }
+
+    fn marked_trace() -> ArrivalTrace {
+        let cfg = ExperimentConfig::paper();
+        let arrival = ArrivalSettings {
+            process: ArrivalProcessKind::Poisson,
+            rate_hz: 4.0,
+            burst_rate_hz: 4.0,
+            period_s: 40.0,
+            duty: 0.25,
+            horizon_s: 120.0,
+            max_requests: 0,
+            prompt_universe: 30,
+            zipf_s: 1.3,
+            models: 3,
         };
         ArrivalTrace::generate(&cfg.scenario, &arrival, 7)
     }
@@ -322,6 +375,34 @@ mod tests {
         let overhead = bytes.len() - 24 * trace.len();
         assert!(overhead < 64, "overhead {overhead}");
         assert!(bytes.len() < trace.to_csv().len(), "binary should beat CSV text");
+    }
+
+    #[test]
+    fn marked_trace_roundtrips_as_version_2() {
+        let trace = marked_trace();
+        assert!(trace.is_marked());
+        let bytes = encode(&trace);
+        let version = u32::from_le_bytes(bytes[8..12].try_into().unwrap());
+        assert_eq!(version, VERSION_MARKED);
+        let decoded = decode(&bytes).unwrap();
+        assert_eq!(trace, decoded);
+        // 32 bytes per request once the two u32 mark columns ride along.
+        let overhead = bytes.len() - 32 * trace.len();
+        assert!(overhead < 64, "overhead {overhead}");
+        // Chunking still never changes the payload.
+        for chunk_len in [1, 7, 64] {
+            let decoded = decode(&encode_chunked(&trace, chunk_len)).unwrap();
+            assert_eq!(trace, decoded, "chunk_len={chunk_len}");
+        }
+    }
+
+    #[test]
+    fn unmarked_trace_still_writes_version_1_bytes() {
+        let trace = seed7_trace();
+        let bytes = encode(&trace);
+        let version = u32::from_le_bytes(bytes[8..12].try_into().unwrap());
+        assert_eq!(version, VERSION, "unmarked traces must stay loadable by v1 readers");
+        assert_eq!(bytes.len(), HEADER_LEN + 24 * trace.len() + 4 * trace.len().div_ceil(8192));
     }
 
     #[test]

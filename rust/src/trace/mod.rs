@@ -6,7 +6,7 @@
 pub mod arrival;
 pub mod columnar;
 
-pub use arrival::{Arrival, ArrivalStream, ArrivalTrace};
+pub use arrival::{Arrival, ArrivalStream, ArrivalTrace, PromptLaw, PromptMark};
 pub use columnar::ColumnarReader;
 
 use crate::channel::{ChannelGenerator, Link};

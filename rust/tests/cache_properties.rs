@@ -1,0 +1,336 @@
+//! Property suite for the content-addressed generation cache
+//! (ISSUE 9): randomized marked traces, fleets, cache settings and
+//! fault scripts through all three engines, asserting the invariants
+//! the cache must never break.
+//!
+//! Invariants (each over ≥ 60 randomized runs):
+//! * **bitwise invisibility** — with the cache disabled (the default),
+//!   a prompt-marked trace and its mark-stripped twin produce
+//!   bit-identical reports on `simulate_dynamic`, `simulate_cluster`
+//!   and `simulate_event_cluster` across every router and fault
+//!   script, and every cache counter stays zero;
+//! * **hit determinism** — identical seeds (trace + fleet + cache +
+//!   faults) replay cache-enabled runs bit-identically, hits included;
+//! * **census conservation** — with hits in the mix every arrival
+//!   still resolves exactly once, `ServedFromCache` outcomes bypass
+//!   the epoch (zero wait, nonzero steps, a real mark), and the hit
+//!   counter equals the `ServedFromCache` census even under faults
+//!   (a hit resolves at the arrival instant, so a later death cannot
+//!   retract it);
+//! * **bounded eviction** — a `GenCache` never holds more than
+//!   `capacity` entries at any instant, under either eviction policy,
+//!   and its counters balance (`insertions - evictions == len`).
+
+use aigc_edge::bandwidth::EqualAllocator;
+use aigc_edge::cache::{CacheSettings, CacheStats, EvictionKind, GenCache};
+use aigc_edge::config::{ArrivalProcessKind, ArrivalSettings, ExperimentConfig};
+use aigc_edge::delay::BatchDelayModel;
+use aigc_edge::faults::{FaultScript, MigrationPolicyKind};
+use aigc_edge::prop_assert;
+use aigc_edge::quality::PowerLawQuality;
+use aigc_edge::routing::RouterKind;
+use aigc_edge::scheduler::Stacking;
+use aigc_edge::sim::{
+    simulate_cluster, simulate_dynamic, simulate_event_cluster, ClusterConfig, Disposition,
+    DynamicConfig, EventClusterConfig, EventReport, RequestOutcome,
+};
+use aigc_edge::trace::{ArrivalTrace, PromptMark};
+use aigc_edge::util::prop::{forall, Gen};
+
+/// A random prompt-marked trace: skewed popularity over a small
+/// universe so cache-enabled runs actually hit.
+fn random_marked_trace(g: &mut Gen) -> ArrivalTrace {
+    let mut scenario = ExperimentConfig::paper().scenario;
+    scenario.deadline_lo = g.f64_in(1.0, 6.0);
+    scenario.deadline_hi = scenario.deadline_lo + g.f64_in(1.0, 12.0);
+    let burst = g.bool();
+    let rate = g.f64_in(1.0, 8.0);
+    let arrival = ArrivalSettings {
+        process: if burst { ArrivalProcessKind::Burst } else { ArrivalProcessKind::Poisson },
+        rate_hz: rate,
+        burst_rate_hz: rate * g.f64_in(1.0, 3.0),
+        period_s: g.f64_in(2.0, 15.0),
+        duty: g.f64_in(0.1, 1.0),
+        horizon_s: g.f64_in(4.0, 12.0),
+        max_requests: 0,
+        prompt_universe: g.usize_in(2, 24),
+        zipf_s: g.f64_in(0.4, 2.0),
+        models: g.usize_in(1, 3) as u32,
+    };
+    ArrivalTrace::generate(&scenario, &arrival, g.u64())
+}
+
+/// The same trace with every prompt mark erased — what the pre-cache
+/// codebase would have generated.
+fn strip_marks(trace: &ArrivalTrace) -> ArrivalTrace {
+    let mut t = trace.clone();
+    for a in &mut t.arrivals {
+        a.mark = PromptMark::ZERO;
+    }
+    t
+}
+
+/// Random enabled cache settings (capacity ≥ 1 so hits are possible).
+fn random_cache(g: &mut Gen) -> CacheSettings {
+    CacheSettings {
+        enabled: true,
+        capacity: g.usize_in(1, 48),
+        eviction: if g.bool() { EvictionKind::Clock } else { EvictionKind::SeededRandom },
+        model_slots: g.usize_in(1, 3),
+        load_delay_s: g.f64_in(0.0, 1.0),
+        seed: g.u64(),
+    }
+}
+
+/// Every router, including the cache-aware one (excluded from
+/// `RouterKind::all()` because it is pointless on unmarked traces —
+/// here the traces are marked).
+fn random_router(g: &mut Gen) -> RouterKind {
+    let mut pool = RouterKind::with_live().to_vec();
+    pool.push(RouterKind::CacheAware);
+    *g.pick(&pool)
+}
+
+/// A random fault script over the trace span (sometimes empty).
+fn random_faults(g: &mut Gen, servers: usize, horizon_s: f64) -> FaultScript {
+    if g.f64_in(0.0, 1.0) < 0.2 {
+        return FaultScript::empty();
+    }
+    let mtbf = g.f64_in(2.0, 30.0);
+    let mttr = g.f64_in(0.5, 10.0);
+    FaultScript::random(servers, horizon_s * 1.2, mtbf, mttr, g.u64())
+}
+
+fn run_event(trace: &ArrivalTrace, cfg: &EventClusterConfig) -> EventReport {
+    simulate_event_cluster(
+        trace,
+        &Stacking::default(),
+        &EqualAllocator,
+        &BatchDelayModel::paper(),
+        &PowerLawQuality::paper(),
+        cfg,
+    )
+}
+
+/// Bitwise comparison of two outcome vectors; `prop_assert!` returns
+/// `false` out of this helper, so call sites must forward the result.
+fn outcomes_bitwise(g: &mut Gen, a: &[RequestOutcome], b: &[RequestOutcome], ctx: &str) -> bool {
+    prop_assert!(g, a.len() == b.len(), "{ctx}: outcome count {} vs {}", a.len(), b.len());
+    for (x, y) in a.iter().zip(b) {
+        prop_assert!(g, x.id == y.id, "{ctx}: id {} vs {}", x.id, y.id);
+        prop_assert!(g, x.disposition == y.disposition, "{ctx}: disposition {}", x.id);
+        prop_assert!(g, x.steps == y.steps, "{ctx}: steps {}", x.id);
+        prop_assert!(g, x.met == y.met, "{ctx}: met {}", x.id);
+        prop_assert!(g, x.deferrals == y.deferrals, "{ctx}: deferrals {}", x.id);
+        prop_assert!(g, x.recovered_steps == y.recovered_steps, "{ctx}: recovered {}", x.id);
+        prop_assert!(g, x.quality.to_bits() == y.quality.to_bits(), "{ctx}: quality {}", x.id);
+        prop_assert!(g, x.e2e_s.to_bits() == y.e2e_s.to_bits(), "{ctx}: e2e {}", x.id);
+        prop_assert!(g, x.wait_s.to_bits() == y.wait_s.to_bits(), "{ctx}: wait {}", x.id);
+        prop_assert!(g, x.resolved_s.to_bits() == y.resolved_s.to_bits(), "{ctx}: t {}", x.id);
+    }
+    true
+}
+
+#[test]
+fn disabled_cache_is_bitwise_invisible_on_every_engine() {
+    forall("cache-off bitwise invisibility", 60, |g: &mut Gen| {
+        let marked = random_marked_trace(g);
+        let stripped = strip_marks(&marked);
+        let router = random_router(g);
+        let n = g.usize_in(1, 4);
+        let speeds = g.vec_of(n, |g| g.f64_in(0.4, 2.0));
+        // DynamicConfig::default() carries CacheSettings::default(),
+        // which is disabled — exactly the pre-cache position.
+        let dynamic = DynamicConfig::default();
+
+        // single-server engine
+        let sched = Stacking::default();
+        let delay = BatchDelayModel::paper();
+        let quality = PowerLawQuality::paper();
+        let dm = simulate_dynamic(&marked, &sched, &EqualAllocator, &delay, &quality, &dynamic);
+        let ds = simulate_dynamic(&stripped, &sched, &EqualAllocator, &delay, &quality, &dynamic);
+        if !outcomes_bitwise(g, &dm.outcomes, &ds.outcomes, "dynamic") {
+            return false;
+        }
+        prop_assert!(g, dm.cache_stats == CacheStats::default(), "dynamic cache counters");
+        prop_assert!(g, dm.horizon_s.to_bits() == ds.horizon_s.to_bits(), "dynamic horizon");
+
+        // sharded cluster engine
+        let cluster = ClusterConfig { speeds: speeds.clone(), router, dynamic };
+        let cm = simulate_cluster(&marked, &sched, &EqualAllocator, &delay, &quality, &cluster);
+        let cs = simulate_cluster(&stripped, &sched, &EqualAllocator, &delay, &quality, &cluster);
+        if !outcomes_bitwise(g, &cm.outcomes, &cs.outcomes, "cluster") {
+            return false;
+        }
+        prop_assert!(g, cm.assignment == cs.assignment, "cluster assignment");
+        prop_assert!(g, cm.cache_stats() == CacheStats::default(), "cluster cache counters");
+
+        // fault-aware event engine
+        let faults = random_faults(g, n, marked.duration_s());
+        let migration = *g.pick(&MigrationPolicyKind::all());
+        let ecfg = EventClusterConfig {
+            speeds: &speeds,
+            router,
+            dynamic,
+            faults: &faults,
+            migration,
+            resume_transfer_s: g.f64_in(0.0, 1.0),
+        };
+        let em = run_event(&marked, &ecfg);
+        let es = run_event(&stripped, &ecfg);
+        if !outcomes_bitwise(g, &em.outcomes, &es.outcomes, "event") {
+            return false;
+        }
+        prop_assert!(g, em.assignment == es.assignment, "event assignment");
+        prop_assert!(g, em.horizon_s.to_bits() == es.horizon_s.to_bits(), "event horizon");
+        prop_assert!(g, em.served_from_cache() == 0, "cache-off served hits");
+        prop_assert!(g, em.cache_stats() == CacheStats::default(), "event cache counters");
+        true
+    });
+}
+
+#[test]
+fn enabled_cache_replays_bitwise_per_seed() {
+    forall("cache hit determinism", 60, |g: &mut Gen| {
+        let trace = random_marked_trace(g);
+        let n = g.usize_in(1, 4);
+        let speeds = g.vec_of(n, |g| g.f64_in(0.4, 2.0));
+        let faults = random_faults(g, n, trace.duration_s());
+        let dynamic = DynamicConfig { cache: random_cache(g), ..DynamicConfig::default() };
+        let cfg = EventClusterConfig {
+            speeds: &speeds,
+            router: random_router(g),
+            dynamic,
+            faults: &faults,
+            migration: *g.pick(&MigrationPolicyKind::all()),
+            resume_transfer_s: g.f64_in(0.0, 1.0),
+        };
+        let a = run_event(&trace, &cfg);
+        let b = run_event(&trace, &cfg);
+        if !outcomes_bitwise(g, &a.outcomes, &b.outcomes, "replay") {
+            return false;
+        }
+        prop_assert!(g, a.assignment == b.assignment, "assignment replay");
+        prop_assert!(g, a.horizon_s.to_bits() == b.horizon_s.to_bits(), "horizon replay");
+        prop_assert!(g, a.cache_stats() == b.cache_stats(), "cache counter replay");
+        prop_assert!(g, a.served_from_cache() == b.served_from_cache(), "hit census replay");
+        true
+    });
+}
+
+#[test]
+fn census_conserves_with_cache_hits_in_the_mix() {
+    forall("cache census conservation", 80, |g: &mut Gen| {
+        let trace = random_marked_trace(g);
+        let n = g.usize_in(1, 4);
+        let speeds = g.vec_of(n, |g| g.f64_in(0.4, 2.0));
+        let faults = random_faults(g, n, trace.duration_s());
+        let dynamic = DynamicConfig { cache: random_cache(g), ..DynamicConfig::default() };
+        let cfg = EventClusterConfig {
+            speeds: &speeds,
+            router: random_router(g),
+            dynamic,
+            faults: &faults,
+            migration: *g.pick(&MigrationPolicyKind::all()),
+            resume_transfer_s: g.f64_in(0.0, 1.0),
+        };
+        let report = run_event(&trace, &cfg);
+        prop_assert!(g, report.outcomes.len() == trace.len(), "outcome count");
+        prop_assert!(
+            g,
+            report.served() + report.dropped() == trace.len(),
+            "served {} + dropped {} != {}",
+            report.served(),
+            report.dropped(),
+            trace.len()
+        );
+        // every id resolved at most once, fleet-wide, hits included
+        let mut counts = vec![0usize; trace.len()];
+        for s in &report.servers {
+            for &id in &s.resolved_ids {
+                prop_assert!(g, id < trace.len(), "tombstone leaked: {id}");
+                counts[id] += 1;
+            }
+        }
+        for (id, &c) in counts.iter().enumerate() {
+            prop_assert!(g, c <= 1, "request {id} resolved by {c} servers");
+        }
+        // a hit resolves at its arrival instant, so a later server
+        // death can never retract it: the hit counter and the
+        // ServedFromCache census agree even under faults
+        let stats = report.cache_stats();
+        prop_assert!(
+            g,
+            stats.hits as usize == report.served_from_cache(),
+            "hits {} vs census {}",
+            stats.hits,
+            report.served_from_cache()
+        );
+        let mut per_server = CacheStats::default();
+        for s in &report.servers {
+            per_server.merge(&s.cache_stats);
+        }
+        prop_assert!(g, per_server == stats, "fleet stats != sum of per-server stats");
+        for o in &report.outcomes {
+            if o.disposition != Disposition::ServedFromCache {
+                continue;
+            }
+            let a = &trace.arrivals[o.id];
+            prop_assert!(g, !a.mark.is_zero(), "hit {} on an unmarked arrival", o.id);
+            prop_assert!(g, o.wait_s == 0.0, "hit {} waited {}", o.id, o.wait_s);
+            prop_assert!(g, o.steps > 0, "hit {} served zero steps", o.id);
+            prop_assert!(g, o.recovered_steps == 0, "hit {} salvaged steps", o.id);
+            prop_assert!(g, o.disposition.is_served(), "hit {} not counted served", o.id);
+            let span = o.resolved_s - o.arrival_s;
+            prop_assert!(g, (span - o.e2e_s).abs() < 1e-9, "hit {} e2e mismatch", o.id);
+        }
+        true
+    });
+}
+
+#[test]
+fn eviction_never_exceeds_capacity() {
+    forall("bounded eviction", 150, |g: &mut Gen| {
+        let capacity = g.usize_in(0, 16);
+        let eviction = if g.bool() { EvictionKind::Clock } else { EvictionKind::SeededRandom };
+        let mut cache = GenCache::new(capacity, eviction, g.u64());
+        let ops = g.usize_in(1, 200);
+        for _ in 0..ops {
+            let mark = PromptMark {
+                model: g.usize_in(0, 2) as u32,
+                prompt: g.usize_in(1, 24) as u32,
+            };
+            if g.bool() {
+                let steps = g.usize_in(1, 50) as u32;
+                cache.insert(mark, steps);
+                if capacity > 0 {
+                    prop_assert!(g, cache.contains(mark), "fresh insert evicted itself");
+                    prop_assert!(g, cache.lookup(mark).is_some(), "fresh insert not found");
+                }
+            } else {
+                let hit = cache.lookup(mark);
+                prop_assert!(g, hit.is_some() == cache.contains(mark), "lookup vs contains");
+            }
+            prop_assert!(
+                g,
+                cache.len() <= capacity,
+                "{} entries in a capacity-{capacity} cache",
+                cache.len()
+            );
+        }
+        prop_assert!(
+            g,
+            cache.stats().insertions >= cache.stats().evictions,
+            "more evictions than insertions"
+        );
+        prop_assert!(
+            g,
+            (cache.stats().insertions - cache.stats().evictions) as usize == cache.len(),
+            "counters don't balance: {} - {} != {}",
+            cache.stats().insertions,
+            cache.stats().evictions,
+            cache.len()
+        );
+        true
+    });
+}

@@ -28,6 +28,9 @@ fn trace(rate: f64, horizon: f64, seed: u64) -> ArrivalTrace {
         duty: 0.5,
         horizon_s: horizon,
         max_requests: 0,
+        prompt_universe: 1,
+        zipf_s: 1.0,
+        models: 1,
     };
     ArrivalTrace::generate(&cfg.scenario, &arrival, seed)
 }

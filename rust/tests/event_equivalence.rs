@@ -29,6 +29,9 @@ fn seed7_trace(rate: f64, horizon: f64) -> ArrivalTrace {
         duty: 0.5,
         horizon_s: horizon,
         max_requests: 0,
+        prompt_universe: 1,
+        zipf_s: 1.0,
+        models: 1,
     };
     ArrivalTrace::generate(&cfg.scenario, &arrival, 7)
 }

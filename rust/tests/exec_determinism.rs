@@ -12,7 +12,7 @@ use aigc_edge::bandwidth::{Allocator, AllocatorPool, EqualAllocator, PsoAllocato
 use aigc_edge::config::{ArrivalProcessKind, ArrivalSettings, ExperimentConfig};
 use aigc_edge::coordinator::SolveMode;
 use aigc_edge::delay::BatchDelayModel;
-use aigc_edge::faults::{FaultScript, MigrationPolicyKind, NO_FAULTS};
+use aigc_edge::faults::{DownInterval, FaultScript, MigrationPolicyKind, NO_FAULTS};
 use aigc_edge::quality::PowerLawQuality;
 use aigc_edge::routing::RouterKind;
 use aigc_edge::scheduler::Stacking;
@@ -34,6 +34,9 @@ fn trace(rate: f64, horizon: f64, seed: u64) -> ArrivalTrace {
         duty: 0.5,
         horizon_s: horizon,
         max_requests: 0,
+        prompt_universe: 1,
+        zipf_s: 1.0,
+        models: 1,
     };
     ArrivalTrace::generate(&cfg.scenario, &arrival, seed)
 }
@@ -172,6 +175,62 @@ fn event_engine_identical_across_thread_counts_faults_on_and_off() {
     }
 }
 
+/// The event engine's main loop picks its next server event from a
+/// lazily-invalidated min-heap instead of rescanning every server per
+/// step. Tie instants are where that structure could bite — epoch
+/// closes aligned across servers, faults scheduled exactly on those
+/// boundaries — so hammer a tie-heavy script under every router ×
+/// migration policy and require bit-identical replay plus census
+/// conservation.
+#[test]
+fn event_heap_schedule_replays_bitwise_under_tie_heavy_scripts() {
+    let t = trace(8.0, 30.0, 17);
+    let quality = PowerLawQuality::paper();
+    let delay = BatchDelayModel::paper();
+    let scheduler = Stacking::default();
+    let speeds = server_speeds(4, 0.5, 2.0);
+    // Default epochs close on the integer grid; these down intervals
+    // start and end exactly there, so fault, resume, and server events
+    // repeatedly share an instant and only the fault < resume <
+    // arrival < server (then lowest server id) tie order separates
+    // them.
+    let script = FaultScript::scheduled(vec![
+        DownInterval::new(1, 5.0, 9.0).unwrap(),
+        DownInterval::new(2, 5.0, 12.0).unwrap(),
+        DownInterval::new(3, 10.0, 11.0).unwrap(),
+    ])
+    .unwrap();
+    let routers = [
+        RouterKind::JoinShortestQueue,
+        RouterKind::QualityAware,
+        RouterKind::LiveState,
+        RouterKind::CacheAware,
+    ];
+    for router in routers {
+        for migration in MigrationPolicyKind::all() {
+            let run = || {
+                let cfg = EventClusterConfig {
+                    speeds: &speeds,
+                    router,
+                    dynamic: DynamicConfig::default(),
+                    faults: &script,
+                    migration,
+                    resume_transfer_s: 0.2,
+                };
+                simulate_event_cluster(&t, &scheduler, &EqualAllocator, &delay, &quality, &cfg)
+            };
+            let a = run();
+            let b = run();
+            let tag = format!("{} {}", router.name(), migration.name());
+            assert_eq!(a.served() + a.dropped(), t.len(), "{tag}: census leak");
+            assert_eq!(a.assignment, b.assignment, "{tag}");
+            assert_eq!(outcome_bits(&a.outcomes), outcome_bits(&b.outcomes), "{tag}");
+            assert_eq!(a.migrations.len(), b.migrations.len(), "{tag}");
+            assert_eq!(a.horizon_s.to_bits(), b.horizon_s.to_bits(), "{tag}");
+        }
+    }
+}
+
 /// Per-server warm-start pools are pairwise-distinct instances, so the
 /// engines may fan their solves out — and must still replay exactly.
 #[test]
@@ -230,6 +289,7 @@ fn bench_sweeps_identical_across_thread_counts() {
     let cluster_ref = aigc_edge::bench::fig_cluster(&cfg, &[1.0, 4.0], 20.0);
     let pipeline_ref = aigc_edge::bench::fig_pipeline(&cfg, &[0.0, 0.2], 20.0);
     let faults_ref = aigc_edge::bench::fig_faults(&cfg, &[0.0, 2.0], 20.0);
+    let cache_ref = aigc_edge::bench::fig_cache(&cfg, &[1.5], &[16], 20.0);
     for threads in [2usize, 8] {
         cfg.perf.threads = threads;
         assert_eq!(
@@ -246,6 +306,11 @@ fn bench_sweeps_identical_across_thread_counts() {
             aigc_edge::bench::fig_faults(&cfg, &[0.0, 2.0], 20.0),
             faults_ref,
             "fig_faults threads={threads}"
+        );
+        assert_eq!(
+            aigc_edge::bench::fig_cache(&cfg, &[1.5], &[16], 20.0),
+            cache_ref,
+            "fig_cache threads={threads}"
         );
     }
 }

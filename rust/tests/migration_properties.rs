@@ -48,6 +48,9 @@ fn random_trace(g: &mut Gen) -> ArrivalTrace {
         duty: g.f64_in(0.1, 1.0),
         horizon_s: g.f64_in(3.0, 12.0),
         max_requests: 0,
+        prompt_universe: 1,
+        zipf_s: 1.0,
+        models: 1,
     };
     ArrivalTrace::generate(&scenario, &arrival, g.u64())
 }
@@ -125,10 +128,13 @@ fn no_request_lost_or_double_served_across_failures() {
             report.dropped(),
             trace.len()
         );
-        // every id resolved exactly once, and by at most one server
+        // every id resolved exactly once, and by at most one server;
+        // death-retracted slots are tombstoned in place inside the
+        // engine and must never escape into the report
         let mut counts = vec![0usize; trace.len()];
         for s in &report.servers {
             for &id in &s.resolved_ids {
+                prop_assert!(g, id < trace.len(), "tombstone leaked into resolved_ids: {id}");
                 counts[id] += 1;
             }
         }

@@ -51,6 +51,9 @@ fn random_trace(g: &mut Gen, deadline_lo: f64, rate_lo: f64, rate_hi: f64) -> Ar
         duty: 0.5,
         horizon_s: g.f64_in(20.0, 40.0),
         max_requests: 0,
+        prompt_universe: 1,
+        zipf_s: 1.0,
+        models: 1,
     };
     ArrivalTrace::generate(&scenario, &arrival, g.u64())
 }

@@ -34,6 +34,9 @@ fn random_trace(g: &mut Gen) -> ArrivalTrace {
         duty: g.f64_in(0.1, 1.0),
         horizon_s: g.f64_in(3.0, 15.0),
         max_requests: 0,
+        prompt_universe: 1,
+        zipf_s: 1.0,
+        models: 1,
     };
     ArrivalTrace::generate(&scenario, &arrival, g.u64())
 }
