@@ -1,0 +1,209 @@
+//! Fleet-scale dispatch gates behind `BENCH_pr10.json`.
+//! (`harness = false`: criterion is not in the offline vendored set.)
+//!
+//! Acceptance properties asserted here (ISSUE 10):
+//!  * indexed routing is decision-identical to the O(N) reference scan
+//!    for every RouterKind in the sweep, including `route_resume`
+//!    probes with fresh, partial and saturating step credits;
+//!  * per-arrival routing cost — the index's deterministic op counters,
+//!    not wall clock — grows sub-linearly in fleet size across
+//!    N ∈ {4, 64, 512, 4096};
+//!  * the whole sweep replays bit-identically;
+//!  * at engine level, `simulate_event_cluster` (indexed) and
+//!    `simulate_event_cluster_scan` produce bitwise-identical runs on
+//!    a faulted, cache-enabled, checkpoint-migrating cluster — the
+//!    reroute/steal/resume dispatch sites included.
+
+use std::path::Path;
+
+use aigc_edge::bandwidth::EqualAllocator;
+use aigc_edge::bench;
+use aigc_edge::cache::CacheSettings;
+use aigc_edge::config::{ArrivalProcessKind, ArrivalSettings, ExperimentConfig};
+use aigc_edge::delay::BatchDelayModel;
+use aigc_edge::faults::{FaultScript, MigrationPolicyKind};
+use aigc_edge::quality::PowerLawQuality;
+use aigc_edge::routing::RouterKind;
+use aigc_edge::scheduler::Stacking;
+use aigc_edge::sim::{
+    server_speeds, simulate_event_cluster, simulate_event_cluster_scan, EventClusterConfig,
+    EventReport,
+};
+use aigc_edge::trace::ArrivalTrace;
+
+fn assert_bitwise(a: &EventReport, b: &EventReport, tag: &str) {
+    assert_eq!(a.assignment, b.assignment, "{tag}: assignment diverged");
+    assert_eq!(a.horizon_s.to_bits(), b.horizon_s.to_bits(), "{tag}: horizon diverged");
+    assert_eq!(a.migrations.len(), b.migrations.len(), "{tag}: migrations diverged");
+    for (x, y) in a.outcomes.iter().zip(&b.outcomes) {
+        assert_eq!(x.disposition, y.disposition, "{tag}: request {}", x.id);
+        assert_eq!(x.steps, y.steps, "{tag}: request {}", x.id);
+        assert_eq!(x.quality.to_bits(), y.quality.to_bits(), "{tag}: request {}", x.id);
+        assert_eq!(x.resolved_s.to_bits(), y.resolved_s.to_bits(), "{tag}: request {}", x.id);
+    }
+}
+
+fn main() {
+    let max_requests: usize = std::env::var("BENCH_FLEET_REQUESTS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(2000);
+    let sizes = [4usize, 64, 512, 4096];
+    let kinds = [RouterKind::JoinShortestQueue, RouterKind::QualityAware, RouterKind::CacheAware];
+
+    // ---- the sweep: decision identity + deterministic op counts ----
+    let rows = bench::fig_fleet(&sizes, &kinds, max_requests, 10);
+    assert_eq!(rows.len(), sizes.len() * kinds.len());
+    let by = |n: usize, router: RouterKind| {
+        rows.iter()
+            .find(|r| r.n == n && r.router == router)
+            .unwrap_or_else(|| panic!("missing cell ({n}, {})", router.name()))
+    };
+    for r in &rows {
+        assert!(
+            r.identical,
+            "indexed routing diverged from the scan: {} at N={}",
+            r.router.name(),
+            r.n
+        );
+        assert!(
+            r.resume_identical,
+            "indexed route_resume diverged from the scan: {} at N={}",
+            r.router.name(),
+            r.n
+        );
+        assert_eq!(r.arrivals, max_requests, "trace did not fill the request cap");
+    }
+
+    // ---- sub-linear per-arrival cost in N ----
+    // The fleet grows 1024x from N=4 to N=4096; a linear scan grows its
+    // per-arrival cost by the same factor. The index must hold the
+    // growth to ~log-like territory — two orders of magnitude below
+    // linear — and stay under an absolute per-arrival ceiling.
+    for router in kinds {
+        let small = by(4, router).ops_per_arrival;
+        let large = by(4096, router).ops_per_arrival;
+        assert!(
+            large <= small * 64.0,
+            "{}: per-arrival ops grew {:.1}x from N=4 ({small:.2}) to N=4096 ({large:.2}) — not \
+             sub-linear (linear would be 1024x)",
+            router.name(),
+            large / small
+        );
+        assert!(
+            large <= 128.0,
+            "{}: {large:.2} ops per arrival at N=4096 exceeds the absolute ceiling",
+            router.name()
+        );
+    }
+
+    // ---- bitwise replay ----
+    let replay = bench::fig_fleet(&sizes, &kinds, max_requests, 10);
+    for (a, b) in rows.iter().zip(&replay) {
+        assert_eq!(a.key(), b.key(), "fleet sweep is not deterministic");
+    }
+
+    // ---- engine-level bitwise identity under faults ----
+    // Checkpoint migration on a faulted, cache-enabled cluster drives
+    // every dispatch site: arrivals, death reroutes, checkpoint
+    // resumes, recovery re-dispatches.
+    let cfg = ExperimentConfig::paper();
+    let arrival = ArrivalSettings {
+        process: ArrivalProcessKind::Poisson,
+        rate_hz: 8.0,
+        burst_rate_hz: 8.0,
+        period_s: 60.0,
+        duty: 0.5,
+        horizon_s: 90.0,
+        max_requests: 0,
+        prompt_universe: 32,
+        zipf_s: 1.4,
+        models: 3,
+    };
+    let marked = ArrivalTrace::generate(&cfg.scenario, &arrival, 17);
+    let scheduler = Stacking::default();
+    let allocator = EqualAllocator;
+    let delay = BatchDelayModel::paper();
+    let quality = PowerLawQuality::paper();
+    let speeds = server_speeds(8, 0.5, 2.0);
+    let mut engine_cells = 0usize;
+    let engine_kinds = [
+        RouterKind::JoinShortestQueue,
+        RouterKind::QualityAware,
+        RouterKind::LiveState,
+        RouterKind::CacheAware,
+    ];
+    for router in engine_kinds {
+        let script = FaultScript::random(8, 90.0, 30.0, 10.0, 23);
+        let mut dynamic: aigc_edge::sim::DynamicConfig = (&cfg.dynamic).into();
+        if router == RouterKind::CacheAware {
+            dynamic.cache =
+                CacheSettings { enabled: true, capacity: 16, ..CacheSettings::default() };
+        }
+        let event_cfg = EventClusterConfig {
+            speeds: &speeds,
+            router,
+            dynamic,
+            faults: &script,
+            migration: MigrationPolicyKind::Checkpoint,
+            resume_transfer_s: 0.5,
+        };
+        let indexed =
+            simulate_event_cluster(&marked, &scheduler, &allocator, &delay, &quality, &event_cfg);
+        let scan = simulate_event_cluster_scan(
+            &marked,
+            &scheduler,
+            &allocator,
+            &delay,
+            &quality,
+            &event_cfg,
+        );
+        assert_bitwise(&indexed, &scan, router.name());
+        engine_cells += 1;
+    }
+
+    // ---- tracked trajectory: BENCH_pr10.json at the repository root ----
+    let mut cells = String::new();
+    for (i, r) in rows.iter().enumerate() {
+        if i > 0 {
+            cells.push_str(",\n");
+        }
+        cells.push_str(&format!(
+            "    \"n{}_{}\": {{\n      \"identical\": {},\n      \"resume_identical\": {},\n      \
+             \"queries\": {},\n      \"examined\": {},\n      \"settles\": {},\n      \
+             \"ops_per_arrival\": {:?},\n      \"assignment_fnv\": {},\n      \
+             \"indexed_ms\": {:?},\n      \"scan_ms\": {:?}\n    }}",
+            r.n,
+            r.router.name(),
+            r.identical,
+            r.resume_identical,
+            r.queries,
+            r.examined,
+            r.settles,
+            r.ops_per_arrival,
+            r.assignment_fnv,
+            r.indexed_ms,
+            r.scan_ms,
+        ));
+    }
+    let json = format!(
+        "{{\n  \"pr\": 10,\n  \"arrivals\": {max_requests},\n  \"engine_cells\": {engine_cells},\n  \
+         \"cells\": {{\n{cells}\n  }}\n}}\n"
+    );
+    let path = Path::new(env!("CARGO_MANIFEST_DIR")).join("..").join("BENCH_pr10.json");
+    std::fs::write(&path, &json).unwrap_or_else(|e| panic!("writing {}: {e}", path.display()));
+    aigc_edge::util::json::parse(&json)
+        .unwrap_or_else(|e| panic!("BENCH_pr10.json does not parse: {e}"));
+
+    let jsq = by(4096, RouterKind::JoinShortestQueue);
+    let qa = by(4096, RouterKind::QualityAware);
+    println!(
+        "\nfig_fleet OK ({} cells identical incl. resumes; N=4096 ops/arrival: jsq {:.2}, \
+         quality {:.2}; {} engine cells bitwise; wrote {})",
+        rows.len(),
+        jsq.ops_per_arrival,
+        qa.ops_per_arrival,
+        engine_cells,
+        path.display()
+    );
+}

@@ -1,0 +1,213 @@
+//! Fleet-size routing sweep behind `BENCH_pr10.json`: indexed dispatch
+//! versus the O(N) reference scan across N ∈ {4, 64, 512, 4096} for
+//! every routing policy that has an index fast path.
+//!
+//! Two things are measured per (N, router) cell, on the same arrival
+//! trace:
+//!  * **decision identity** — the per-arrival assignment from
+//!    [`route_arrivals`] (indexed) is compared element-for-element to
+//!    [`route_trace_scan`] (the executable specification), and a panel
+//!    of `route_resume` probes (fresh, small and saturating step
+//!    credits) is cross-checked the same way;
+//!  * **work** — the index's deterministic op counters
+//!    ([`IndexStats`](crate::routing::IndexStats): queries, entries
+//!    examined, heap settles), which
+//!    are what the sub-linearity gate in `benches/fig_fleet.rs` reads
+//!    (wall-clock is recorded for the curious but never gated — CI
+//!    machines are noisy).
+
+use std::time::Instant;
+
+use crate::cache::CacheSettings;
+use crate::config::{ArrivalProcessKind, ArrivalSettings, ExperimentConfig};
+use crate::delay::BatchDelayModel;
+use crate::routing::{
+    route_arrivals, route_trace_scan, FleetIndex, RouteContext, Router, RouterKind, ServerState,
+};
+use crate::sim::server_speeds;
+use crate::trace::ArrivalTrace;
+
+/// One (fleet size, router) cell of the sweep.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FigFleetRow {
+    pub n: usize,
+    pub router: RouterKind,
+    /// Routed arrivals (identical across cells — one shared trace).
+    pub arrivals: usize,
+    /// Indexed assignment == scan assignment, element for element.
+    pub identical: bool,
+    /// Every `route_resume` probe picked the scan's server.
+    pub resume_identical: bool,
+    /// [`IndexStats`](crate::routing::IndexStats) totals over the
+    /// indexed pass (plus probes).
+    pub queries: u64,
+    pub examined: u64,
+    pub settles: u64,
+    /// (examined + settles) / queries — the gated cost proxy.
+    pub ops_per_arrival: f64,
+    /// FNV-1a over the indexed assignment — replay fingerprint.
+    pub assignment_fnv: u64,
+    /// Wall-clock, informational only (never gated).
+    pub indexed_ms: f64,
+    pub scan_ms: f64,
+}
+
+impl FigFleetRow {
+    /// The deterministic projection of the row — everything except
+    /// wall-clock. Bitwise replay is gated on this.
+    pub fn key(&self) -> (usize, &'static str, usize, bool, bool, u64, u64, u64, u64) {
+        (
+            self.n,
+            self.router.name(),
+            self.arrivals,
+            self.identical,
+            self.resume_identical,
+            self.queries,
+            self.examined,
+            self.settles,
+            self.assignment_fnv,
+        )
+    }
+}
+
+fn fnv1a(values: &[usize]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &v in values {
+        for b in (v as u64).to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+    h
+}
+
+/// A marked trace shared by every cell: prompt marks ride along so the
+/// cache-aware router's shadow machinery is exercised; the virtual-view
+/// policies ignore them.
+fn sweep_trace(max_requests: usize, seed: u64) -> ArrivalTrace {
+    let cfg = ExperimentConfig::paper();
+    let arrival = ArrivalSettings {
+        process: ArrivalProcessKind::Poisson,
+        rate_hz: 40.0,
+        burst_rate_hz: 40.0,
+        period_s: 60.0,
+        duty: 0.5,
+        // 4x headroom over the cap so the trace always fills it.
+        horizon_s: max_requests as f64 / 10.0,
+        max_requests,
+        prompt_universe: 128,
+        zipf_s: 1.2,
+        models: 4,
+    };
+    ArrivalTrace::generate(&cfg.scenario, &arrival, seed)
+}
+
+fn build(router: RouterKind, delay: BatchDelayModel) -> Box<dyn Router> {
+    let cache = CacheSettings { enabled: true, capacity: 16, ..CacheSettings::default() };
+    router.build_with_cache(delay, cache)
+}
+
+/// Run the sweep: every `fleet_sizes` × `routers` cell on one shared
+/// trace of `max_requests` arrivals. Deterministic up to wall-clock.
+pub fn fig_fleet(
+    fleet_sizes: &[usize],
+    routers: &[RouterKind],
+    max_requests: usize,
+    seed: u64,
+) -> Vec<FigFleetRow> {
+    let trace = sweep_trace(max_requests, seed);
+    let delay = BatchDelayModel::paper();
+    let ctx = RouteContext {
+        total_bandwidth_hz: trace.total_bandwidth_hz,
+        content_bits: trace.content_bits,
+    };
+    let mut rows = Vec::with_capacity(fleet_sizes.len() * routers.len());
+    for &n in fleet_sizes {
+        let speeds = server_speeds(n, 0.5, 2.0);
+        for &router in routers {
+            // Separate router instances per pass: stateful policies
+            // (the cache-aware shadow) must evolve independently.
+            let mut indexed_router = build(router, delay);
+            let mut scan_router = build(router, delay);
+
+            let mut fleet = ServerState::fleet(&speeds);
+            let mut index = FleetIndex::new(&fleet);
+            let mut assignment = Vec::with_capacity(trace.len());
+            let t0 = Instant::now();
+            route_arrivals(
+                &trace.arrivals,
+                &mut fleet,
+                indexed_router.as_mut(),
+                &delay,
+                &ctx,
+                &mut index,
+                &mut assignment,
+            );
+            let indexed_ms = t0.elapsed().as_secs_f64() * 1e3;
+
+            let mut scan_fleet = ServerState::fleet(&speeds);
+            let t0 = Instant::now();
+            let scan_assignment =
+                route_trace_scan(&trace, &mut scan_fleet, scan_router.as_mut(), &delay);
+            let scan_ms = t0.elapsed().as_secs_f64() * 1e3;
+
+            let identical = assignment == scan_assignment;
+
+            // Resume probes: a late arrival re-entering the router with
+            // a step credit (0 = fresh dispatch must match `route`;
+            // 7 = partial; 500 = near-saturating). Both passes left
+            // their fleets in identical states iff `identical`, so the
+            // probe comparison is meaningful exactly then.
+            let mut resume_identical = true;
+            if let Some(last) = trace.arrivals.last() {
+                for done in [0u32, 7, 500] {
+                    let probe = *last;
+                    let r = indexed_router.as_mut();
+                    let via_index = r.route_resume_indexed(&probe, done, &fleet, &ctx, &mut index);
+                    let via_scan = scan_router.route_resume(&probe, done, &scan_fleet, &ctx);
+                    resume_identical &= via_index == via_scan;
+                }
+            }
+
+            let stats = index.stats;
+            let ops = (stats.examined + stats.settles) as f64 / (stats.queries.max(1)) as f64;
+            rows.push(FigFleetRow {
+                n,
+                router,
+                arrivals: trace.len(),
+                identical,
+                resume_identical,
+                queries: stats.queries,
+                examined: stats.examined,
+                settles: stats.settles,
+                ops_per_arrival: ops,
+                assignment_fnv: fnv1a(&assignment),
+                indexed_ms,
+                scan_ms,
+            });
+        }
+    }
+    rows
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn small_sweep_is_identical_and_deterministic() {
+        let kinds =
+            [RouterKind::JoinShortestQueue, RouterKind::QualityAware, RouterKind::CacheAware];
+        let a = fig_fleet(&[3, 9], &kinds, 200, 5);
+        assert_eq!(a.len(), 6);
+        for row in &a {
+            assert!(row.identical, "{} n={}", row.router.name(), row.n);
+            assert!(row.resume_identical, "{} n={}", row.router.name(), row.n);
+            assert!(row.queries >= 200, "{} n={}", row.router.name(), row.n);
+        }
+        let b = fig_fleet(&[3, 9], &kinds, 200, 5);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.key(), y.key());
+        }
+    }
+}

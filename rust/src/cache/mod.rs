@@ -193,31 +193,33 @@ impl GenCache {
 
     /// Record a freshly generated result. An existing entry upgrades
     /// to the better (higher) step count; a new key evicts if the
-    /// cache is at capacity.
-    pub fn insert(&mut self, key: PromptMark, steps: u32) {
+    /// cache is at capacity. Returns the evicted key, if any, so
+    /// mirrors (the cache-aware router's inverted owner index) can
+    /// stay membership-exact without rescanning.
+    pub fn insert(&mut self, key: PromptMark, steps: u32) -> Option<PromptMark> {
         if self.capacity == 0 {
-            return;
+            return None;
         }
         if let Some(&pos) = self.index.get(&key) {
             if steps > self.slots[pos].steps {
                 self.slots[pos].steps = steps;
             }
             self.slots[pos].referenced = true;
-            return;
+            return None;
         }
-        if self.slots.len() >= self.capacity {
-            self.evict_one();
-        }
+        let evicted =
+            if self.slots.len() >= self.capacity { Some(self.evict_one()) } else { None };
         let pos = self.slots.len();
         self.slots.push(Slot { key, steps, referenced: false });
         self.index.insert(key, pos);
         self.stats.insertions += 1;
+        evicted
     }
 
-    /// Drop one victim chosen by the configured policy. The freed slot
-    /// is filled by swap-remove, so the index entry of the moved slot
-    /// is repaired in place.
-    fn evict_one(&mut self) {
+    /// Drop one victim chosen by the configured policy, returning its
+    /// key. The freed slot is filled by swap-remove, so the index
+    /// entry of the moved slot is repaired in place.
+    fn evict_one(&mut self) -> PromptMark {
         debug_assert!(!self.slots.is_empty());
         let victim = match self.eviction {
             EvictionKind::Clock => {
@@ -242,6 +244,7 @@ impl GenCache {
             self.index.insert(self.slots[victim].key, victim);
         }
         self.stats.evictions += 1;
+        removed.key
     }
 
     /// Does the cache currently hold `key`? Read-only (no stats, no
@@ -277,19 +280,36 @@ impl ModelCatalog {
         self.resident.contains(&model)
     }
 
+    /// The models currently resident, in load order.
+    pub fn resident_models(&self) -> &[u32] {
+        &self.resident
+    }
+
     /// Make `model` resident, returning `true` iff a load/swap was
     /// needed (the caller charges the load delay).
     pub fn ensure_resident(&mut self, model: u32) -> bool {
+        self.ensure_resident_reporting(model).0
+    }
+
+    /// [`ensure_resident`](Self::ensure_resident) that also reports
+    /// which model (if any) lost residency, so mirrors of the catalog
+    /// can stay membership-exact without rescanning.
+    pub fn ensure_resident_reporting(&mut self, model: u32) -> (bool, Option<u32>) {
         if self.is_resident(model) {
-            return false;
+            return (false, None);
         }
         if self.resident.len() < self.slot_count {
             self.resident.push(model);
-        } else {
-            self.resident[self.next] = model;
-            self.next = (self.next + 1) % self.slot_count;
+            return (true, None);
         }
-        true
+        let out = self.resident[self.next];
+        self.resident[self.next] = model;
+        self.next = (self.next + 1) % self.slot_count;
+        // Only report a model that truly left: a multi-slot catalog
+        // could in principle still hold `out` elsewhere.
+        let evicted =
+            if out != model && !self.resident.contains(&out) { Some(out) } else { None };
+        (true, evicted)
     }
 }
 
@@ -326,17 +346,25 @@ impl ServerCache {
     /// Charge for the request's model on a miss: 0.0 when resident,
     /// `load_delay_s` when a load/swap had to happen.
     pub fn ensure_resident(&mut self, model: u32) -> f64 {
-        if self.catalog.ensure_resident(model) {
+        self.ensure_resident_reporting(model).0
+    }
+
+    /// [`ensure_resident`](Self::ensure_resident) that also reports
+    /// the model (if any) that lost residency in the swap.
+    pub fn ensure_resident_reporting(&mut self, model: u32) -> (f64, Option<u32>) {
+        let (loaded, evicted) = self.catalog.ensure_resident_reporting(model);
+        if loaded {
             self.cache.stats.swaps += 1;
-            self.load_delay_s
+            (self.load_delay_s, evicted)
         } else {
-            0.0
+            (0.0, None)
         }
     }
 
-    /// Record a freshly served generation.
-    pub fn insert(&mut self, mark: PromptMark, steps: u32) {
-        self.cache.insert(mark, steps);
+    /// Record a freshly served generation, reporting the evicted key
+    /// (if any) so shadow mirrors can stay membership-exact.
+    pub fn insert(&mut self, mark: PromptMark, steps: u32) -> Option<PromptMark> {
+        self.cache.insert(mark, steps)
     }
 
     pub fn stats(&self) -> CacheStats {
@@ -448,6 +476,23 @@ mod tests {
         };
         assert_eq!(run(11), run(11));
         assert_ne!(run(11), run(12), "different seeds pick different victims");
+    }
+
+    #[test]
+    fn insert_reports_evicted_key_and_catalog_reports_swapped_model() {
+        let mut c = GenCache::new(2, EvictionKind::Clock, 1);
+        assert_eq!(c.insert(mark(0, 1), 10), None);
+        assert_eq!(c.insert(mark(0, 2), 10), None);
+        assert_eq!(c.insert(mark(0, 1), 50), None, "upgrade in place evicts nothing");
+        assert_eq!(c.lookup(mark(0, 1)), Some(50));
+        // Prompt 1 carries the referenced bit, so prompt 2 is evicted.
+        assert_eq!(c.insert(mark(0, 3), 10), Some(mark(0, 2)));
+
+        let mut cat = ModelCatalog::new(2);
+        assert_eq!(cat.ensure_resident_reporting(1), (true, None), "free slot evicts nothing");
+        assert_eq!(cat.ensure_resident_reporting(2), (true, Some(0)));
+        assert_eq!(cat.ensure_resident_reporting(2), (false, None));
+        assert_eq!(cat.resident_models(), &[2, 1][..]);
     }
 
     #[test]

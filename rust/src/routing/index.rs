@@ -1,0 +1,453 @@
+//! `FleetIndex` — a deterministic ordered index over the fleet's
+//! virtual queues, so routers can find their argmin/argmax without an
+//! O(N) scan per arrival.
+//!
+//! Same trick as the event engine's lazy server-event heap (PR 9):
+//! every key is a non-negative finite `f64`, whose IEEE-754 bit
+//! pattern orders exactly like the value, so a
+//! `BTreeSet<(u64, usize)>` keyed `(value.to_bits(), id)` is a
+//! deterministic total order with the same lowest-id tie-break the
+//! scan comparators use.
+//!
+//! Three coordinated structures:
+//!
+//! * **idle/busy split over `busy_until`.** A server whose
+//!   `busy_until ≤ now` has exactly zero outstanding work (the
+//!   subtraction in `outstanding_work_s` clamps at `+0.0`), so the
+//!   idle side needs no float key at all and orders by id. The busy
+//!   side orders by `busy_until`, which orders like
+//!   `outstanding_work_s(now)` for every `now ≤ busy_until`:
+//!   subtracting the same float from two floats is monotone under IEEE
+//!   rounding — non-strictly, though: two *distinct* `busy_until`
+//!   values can round to the *same* outstanding work, so the routers
+//!   scan the whole equal-outstanding prefix (ascending id does not in
+//!   general agree with ascending `busy_until` inside it) instead of
+//!   blindly taking the first entry.
+//!   [`FleetIndex::settle`] migrates entries busy→idle
+//!   as `now` advances; each assignment re-inserts at most one busy
+//!   entry, so settling is amortized O(log N) per touch.
+//! * **speed ladder.** A static position order sorted by GPU speed,
+//!   with a min-id segment tree over the *idle* positions. An idle
+//!   server's quality prediction depends on its speed alone and is
+//!   monotone non-decreasing in it, so `QualityAwareRouter`
+//!   binary-searches the ladder for the slowest speed still reaching
+//!   the top score and takes the min-id idle server at or above that
+//!   position — the exact scan winner among idle servers, O(log N).
+//! * **live half.** The event engine publishes each server's true
+//!   `gpu_free` and queue cost (computed by the shared
+//!   [`super::live_queue_cost_s`], so the key is bit-identical to the
+//!   term `LiveStateRouter::backlog_s` adds); the same idle/busy
+//!   split over `gpu_free` gives the live router its backlog argmin
+//!   with a lower-bound prune.
+//!
+//! Contract: query times are non-decreasing, and every mutation of a
+//! server's `busy_until`/`alive` (assign, kill, revive) is reported
+//! through [`FleetIndex::touch`] / [`FleetIndex::remove`] before the
+//! next query. `route_trace` and `sim::event` maintain exactly that.
+
+use std::collections::BTreeSet;
+
+use super::ServerState;
+
+/// Deterministic operation counters — the currency of the fleet-size
+/// bench. `benches/fig_fleet.rs` gates sub-linear growth on these, not
+/// on wall clock (CI runners are too noisy to gate time).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct IndexStats {
+    /// Routing decisions answered through the index.
+    pub queries: u64,
+    /// Candidate evaluations across all queries: exact scores, speed
+    /// ladder probes, and candidate-pool members examined.
+    pub examined: u64,
+    /// Busy→idle migrations performed by settle passes.
+    pub settles: u64,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum Slot {
+    /// Dead or never inserted — in neither set.
+    Out,
+    Idle,
+    Busy(u64),
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum LiveSlot {
+    Out,
+    /// GPU free at the settle watermark; keyed by published queue cost.
+    Idle { cost: u64 },
+    Busy { free: u64, cost: u64 },
+}
+
+/// Ordered index over a fleet's virtual queues (and, in the event
+/// engine, the published live views). See the module docs for the
+/// ordering and maintenance contract.
+#[derive(Debug, Clone)]
+pub struct FleetIndex {
+    slots: Vec<Slot>,
+    /// Alive servers with zero outstanding work, by id (the id *is*
+    /// the JSQ tie-break once outstanding work ties at exactly 0).
+    idle: BTreeSet<usize>,
+    /// Alive servers with outstanding work: `(busy_until bits, id)`.
+    busy: BTreeSet<(u64, usize)>,
+    /// Monotone settle watermark, as bits of the last settle time.
+    now_bits: u64,
+    /// Server ids sorted by `(speed, id)` ascending — static.
+    ladder: Vec<usize>,
+    /// Speed at each ladder position — static.
+    ladder_speed: Vec<f64>,
+    /// Ladder position of each server id — static.
+    pos_of: Vec<usize>,
+    /// Ladder positions of the idle servers.
+    idle_pos: BTreeSet<usize>,
+    /// Min-id segment tree over idle ladder positions
+    /// (`usize::MAX` = no idle server in that range).
+    seg: Vec<usize>,
+    seg_base: usize,
+    live_slots: Vec<LiveSlot>,
+    /// Published-view servers whose GPU is already free, keyed
+    /// `(queue-cost bits, id)` — the cost *is* their backlog.
+    live_idle: BTreeSet<(u64, usize)>,
+    /// Published-view servers whose GPU is still busy, keyed
+    /// `(gpu_free bits, id)`.
+    live_busy: BTreeSet<(u64, usize)>,
+    live_active: bool,
+    pub stats: IndexStats,
+}
+
+impl FleetIndex {
+    /// Build the index over `servers` (dead servers are left out; the
+    /// speed ladder still covers them so a revived server re-enters
+    /// with its position intact).
+    pub fn new(servers: &[ServerState]) -> Self {
+        let n = servers.len();
+        let mut ladder: Vec<usize> = (0..n).collect();
+        ladder.sort_by(|&a, &b| servers[a].speed.total_cmp(&servers[b].speed).then(a.cmp(&b)));
+        let mut pos_of = vec![0usize; n];
+        for (p, &id) in ladder.iter().enumerate() {
+            pos_of[id] = p;
+        }
+        let ladder_speed: Vec<f64> = ladder.iter().map(|&id| servers[id].speed).collect();
+        let seg_base = n.next_power_of_two().max(1);
+        let mut index = Self {
+            slots: vec![Slot::Out; n],
+            idle: BTreeSet::new(),
+            busy: BTreeSet::new(),
+            now_bits: 0,
+            ladder,
+            ladder_speed,
+            pos_of,
+            idle_pos: BTreeSet::new(),
+            seg: vec![usize::MAX; 2 * seg_base],
+            seg_base,
+            live_slots: vec![LiveSlot::Out; n],
+            live_idle: BTreeSet::new(),
+            live_busy: BTreeSet::new(),
+            live_active: false,
+            stats: IndexStats::default(),
+        };
+        for s in servers {
+            index.touch(s);
+        }
+        index
+    }
+
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+
+    pub fn reset_stats(&mut self) {
+        self.stats = IndexStats::default();
+    }
+
+    fn seg_set(&mut self, pos: usize, val: usize) {
+        let mut i = self.seg_base + pos;
+        self.seg[i] = val;
+        while i > 1 {
+            i /= 2;
+            self.seg[i] = self.seg[2 * i].min(self.seg[2 * i + 1]);
+        }
+    }
+
+    /// Minimum id over idle ladder positions in `[pos_lo, n)`.
+    pub fn min_idle_id_from(&self, pos_lo: usize) -> Option<usize> {
+        let mut best = usize::MAX;
+        let (mut l, mut r) = (self.seg_base + pos_lo, self.seg_base + self.len());
+        while l < r {
+            if l & 1 == 1 {
+                best = best.min(self.seg[l]);
+                l += 1;
+            }
+            if r & 1 == 1 {
+                r -= 1;
+                best = best.min(self.seg[r]);
+            }
+            l /= 2;
+            r /= 2;
+        }
+        (best != usize::MAX).then_some(best)
+    }
+
+    fn set_idle(&mut self, id: usize) {
+        self.idle.insert(id);
+        let pos = self.pos_of[id];
+        self.idle_pos.insert(pos);
+        self.seg_set(pos, id);
+        self.slots[id] = Slot::Idle;
+    }
+
+    fn clear_main(&mut self, id: usize) {
+        match self.slots[id] {
+            Slot::Out => {}
+            Slot::Idle => {
+                self.idle.remove(&id);
+                let pos = self.pos_of[id];
+                self.idle_pos.remove(&pos);
+                self.seg_set(pos, usize::MAX);
+            }
+            Slot::Busy(bits) => {
+                self.busy.remove(&(bits, id));
+            }
+        }
+        self.slots[id] = Slot::Out;
+    }
+
+    fn clear_live(&mut self, id: usize) {
+        match self.live_slots[id] {
+            LiveSlot::Out => {}
+            LiveSlot::Idle { cost } => {
+                self.live_idle.remove(&(cost, id));
+            }
+            LiveSlot::Busy { free, .. } => {
+                self.live_busy.remove(&(free, id));
+            }
+        }
+        self.live_slots[id] = LiveSlot::Out;
+    }
+
+    /// Re-index one server after its virtual queue or liveness changed
+    /// (call right after `assign`, and on revive).
+    pub fn touch(&mut self, s: &ServerState) {
+        let id = s.id;
+        self.clear_main(id);
+        if !s.alive {
+            return;
+        }
+        let bits = s.busy_until_bits();
+        if bits <= self.now_bits {
+            self.set_idle(id);
+        } else {
+            self.busy.insert((bits, id));
+            self.slots[id] = Slot::Busy(bits);
+        }
+    }
+
+    /// Drop a server from every set (server death).
+    pub fn remove(&mut self, id: usize) {
+        self.clear_main(id);
+        self.clear_live(id);
+    }
+
+    /// Advance the watermark to `now_s` (non-negative, non-decreasing
+    /// across calls) and migrate every busy entry whose `busy_until`
+    /// has passed to the idle side. Amortized O(log N) per `touch`:
+    /// each busy entry settles at most once.
+    pub fn settle(&mut self, now_s: f64) {
+        self.now_bits = self.now_bits.max(now_s.to_bits());
+        while let Some(&(bits, id)) = self.busy.first() {
+            if bits > self.now_bits {
+                break;
+            }
+            self.busy.remove(&(bits, id));
+            self.set_idle(id);
+            self.stats.settles += 1;
+        }
+    }
+
+    /// Lowest-id alive server with zero outstanding work at the
+    /// settled watermark — the JSQ argmin whenever any server is idle
+    /// (idle servers all hold exactly `+0.0`, the global minimum, and
+    /// the scan breaks that tie by id).
+    pub fn first_idle(&self) -> Option<usize> {
+        self.idle.first().copied()
+    }
+
+    /// Lowest-id idle server, else the least-`busy_until` busy server.
+    /// A cheap head probe — note the busy fallback is *not* in general
+    /// the exact JSQ argmin: distinct `busy_until` values can round to
+    /// equal outstanding work, where the scan tie-breaks by id. The
+    /// routers scan the equal-outstanding busy prefix instead
+    /// (`super::indexed_jsq_argmin`). `None` iff every server is dead.
+    pub fn first(&self) -> Option<usize> {
+        self.idle.first().copied().or_else(|| self.busy.first().map(|&(_, id)| id))
+    }
+
+    /// Highest idle ladder position (fastest idle server), if any.
+    pub fn last_idle_pos(&self) -> Option<usize> {
+        self.idle_pos.last().copied()
+    }
+
+    /// Static speed at a ladder position (positions order by speed
+    /// ascending, ties by id).
+    pub fn speed_at(&self, pos: usize) -> f64 {
+        self.ladder_speed[pos]
+    }
+
+    /// Busy servers in ascending `(busy_until, id)` order — equivalently
+    /// ascending `(outstanding_work_s(now), id)` for the settled `now`.
+    pub fn busy_entries(&self) -> impl Iterator<Item = (f64, usize)> + '_ {
+        self.busy.iter().map(|&(bits, id)| (f64::from_bits(bits), id))
+    }
+
+    /// Whether the event engine has ever published a live view here.
+    pub fn live_active(&self) -> bool {
+        self.live_active
+    }
+
+    /// Publish one server's live view (event engine only). `cost_s`
+    /// must be computed with [`super::live_queue_cost_s`] so it is
+    /// bit-identical to the queue term of `LiveStateRouter::backlog_s`.
+    pub fn publish_live(&mut self, id: usize, alive: bool, gpu_free_s: f64, cost_s: f64) {
+        self.live_active = true;
+        self.clear_live(id);
+        if !alive {
+            return;
+        }
+        let cost = cost_s.to_bits();
+        let free = gpu_free_s.to_bits();
+        if free <= self.now_bits {
+            self.live_idle.insert((cost, id));
+            self.live_slots[id] = LiveSlot::Idle { cost };
+        } else {
+            self.live_busy.insert((free, id));
+            self.live_slots[id] = LiveSlot::Busy { free, cost };
+        }
+    }
+
+    /// Advance the watermark and migrate live entries whose GPU has
+    /// freed. Mirrors [`Self::settle`] on the live half.
+    pub fn settle_live(&mut self, now_s: f64) {
+        self.now_bits = self.now_bits.max(now_s.to_bits());
+        while let Some(&(free, id)) = self.live_busy.first() {
+            if free > self.now_bits {
+                break;
+            }
+            self.live_busy.remove(&(free, id));
+            let cost = match self.live_slots[id] {
+                LiveSlot::Busy { cost, .. } => cost,
+                state => unreachable!("live busy entry {id} in state {state:?}"),
+            };
+            self.live_idle.insert((cost, id));
+            self.live_slots[id] = LiveSlot::Idle { cost };
+            self.stats.settles += 1;
+        }
+    }
+
+    /// The settled-GPU server with the least published backlog (its
+    /// backlog is exactly its queue cost), lowest id on ties.
+    pub fn live_idle_first(&self) -> Option<(f64, usize)> {
+        self.live_idle.first().map(|&(cost, id)| (f64::from_bits(cost), id))
+    }
+
+    /// Busy-GPU servers in ascending `(gpu_free, id)` order. For each,
+    /// `(gpu_free − now).max(0.0)` lower-bounds its true backlog.
+    pub fn live_busy_entries(&self) -> impl Iterator<Item = (f64, usize)> + '_ {
+        self.live_busy.iter().map(|&(free, id)| (f64::from_bits(free), id))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fleet(speeds: &[f64]) -> Vec<ServerState> {
+        ServerState::fleet(speeds)
+    }
+
+    #[test]
+    fn fresh_fleet_is_all_idle_and_first_is_lowest_id() {
+        let servers = fleet(&[1.0, 2.0, 0.5]);
+        let ix = FleetIndex::new(&servers);
+        assert_eq!(ix.first(), Some(0));
+        assert_eq!(ix.min_idle_id_from(0), Some(0));
+    }
+
+    #[test]
+    fn busy_orders_by_busy_until_and_settles_back() {
+        let mut servers = fleet(&[1.0, 1.0, 1.0]);
+        let mut ix = FleetIndex::new(&servers);
+        servers[0].assign(0.0, 5.0);
+        ix.touch(&servers[0]);
+        servers[2].assign(0.0, 2.0);
+        ix.touch(&servers[2]);
+        servers[1].assign(0.0, 9.0);
+        ix.touch(&servers[1]);
+        ix.settle(1.0);
+        // everyone busy: least busy_until first
+        assert_eq!(ix.first(), Some(2));
+        let order: Vec<usize> = ix.busy_entries().map(|(_, id)| id).collect();
+        assert_eq!(order, vec![2, 0, 1]);
+        // t=6: servers 2 and 0 settle; lowest idle id wins
+        ix.settle(6.0);
+        assert_eq!(ix.first(), Some(0));
+        assert_eq!(ix.stats.settles, 2);
+    }
+
+    #[test]
+    fn speed_ladder_min_id_query_tracks_idle_membership() {
+        // speeds: id 0 → 0.5 (pos 0), id 1 → 1.0 (pos 1), id 2 → 1.0
+        // (pos 2, id tie-break), id 3 → 2.0 (pos 3)
+        let mut servers = fleet(&[0.5, 1.0, 1.0, 2.0]);
+        let mut ix = FleetIndex::new(&servers);
+        assert_eq!(ix.last_idle_pos(), Some(3));
+        assert_eq!(ix.speed_at(3), 2.0);
+        assert_eq!(ix.min_idle_id_from(1), Some(1));
+        // bury id 1: the min id at positions ≥ 1 becomes 2
+        servers[1].assign(0.0, 4.0);
+        ix.touch(&servers[1]);
+        assert_eq!(ix.min_idle_id_from(1), Some(2));
+        // kill id 3: fastest idle position drops to id 2's
+        servers[3].alive = false;
+        ix.remove(3);
+        assert_eq!(ix.last_idle_pos(), Some(2));
+        assert_eq!(ix.min_idle_id_from(3), None);
+    }
+
+    #[test]
+    fn dead_servers_leave_every_set_and_revive_reenters() {
+        let mut servers = fleet(&[1.0, 1.0]);
+        let mut ix = FleetIndex::new(&servers);
+        servers[0].alive = false;
+        ix.remove(0);
+        assert_eq!(ix.first(), Some(1));
+        servers[0].alive = true;
+        ix.touch(&servers[0]);
+        assert_eq!(ix.first(), Some(0));
+    }
+
+    #[test]
+    fn live_half_splits_on_gpu_free_and_settles() {
+        let servers = fleet(&[1.0, 1.0, 1.0]);
+        let mut ix = FleetIndex::new(&servers);
+        assert!(!ix.live_active());
+        ix.settle(1.0);
+        ix.publish_live(0, true, 0.5, 3.0); // free ≤ watermark → idle, backlog 3
+        ix.publish_live(1, true, 4.0, 0.25); // still busy until 4
+        ix.publish_live(2, true, 9.0, 0.0);
+        assert!(ix.live_active());
+        assert_eq!(ix.live_idle_first(), Some((3.0, 0)));
+        let busy: Vec<usize> = ix.live_busy_entries().map(|(_, id)| id).collect();
+        assert_eq!(busy, vec![1, 2]);
+        // GPU 1 frees at t=4: its published cost keys the idle side,
+        // undercutting server 0's backlog.
+        ix.settle_live(4.5);
+        assert_eq!(ix.live_idle_first(), Some((0.25, 1)));
+        // death removes the live entry too
+        ix.publish_live(1, false, 4.0, 0.25);
+        assert_eq!(ix.live_idle_first(), Some((3.0, 0)));
+    }
+}

@@ -37,12 +37,57 @@
 //! live router falls back to the virtual estimate. Every policy is
 //! deterministic: identical traces and fleet configs replay to
 //! bit-identical assignments (asserted by `tests/routing_properties.rs`).
+//!
+//! # Indexed dispatch and the bound-and-prune contract
+//!
+//! Every policy also implements [`Router::route_indexed`] against a
+//! [`FleetIndex`] (an ordered index over the same virtual queues, kept
+//! current by `route_trace` and `sim::event` at every state-mutation
+//! site), with one hard contract: **the indexed decision is the same
+//! server the O(N) scan would pick, on every fleet, every time** —
+//! not approximately, bit-for-bit (`tests/routing_index.rs` is the
+//! forall suite; `benches/fig_fleet.rs` gates it at fleet sizes up to
+//! 4096). The scan paths stay as the executable specification.
+//!
+//! How each policy meets it:
+//!
+//! * JSQ / live-state: the index splits idle from busy. Any idle
+//!   server holds the global minimum (exactly `+0.0` outstanding), so
+//!   the lowest-id idle entry wins outright; otherwise the busy side
+//!   is walked in `(busy_until, id)` order — which is the outstanding-
+//!   work order only *non-strictly* (distinct `busy_until` values can
+//!   round to equal outstanding work), so the walk covers the whole
+//!   equal-minimum prefix with the scan's exact comparator before
+//!   stopping. O(log N + ties) amortized.
+//! * Quality-aware (and the cache-aware fallback): bound-and-prune.
+//!   Candidates are visited in ascending outstanding-work order, the
+//!   exact tie-break order of the scan, so the first candidate
+//!   reaching a score is the scan winner among equals and a candidate
+//!   is only skipped when an *admissible* upper bound on its score —
+//!   `predict_steps` with the transmission term dropped and the
+//!   fleet-minimum scaled step cost `min_s g(1)/speed` in the
+//!   denominator, both of which only overestimate through monotone
+//!   float ops — cannot beat the incumbent strictly. Idle servers
+//!   (exactly zero wait, empty queue) score as a monotone function of
+//!   speed alone, so their winner falls to an O(log N) binary search
+//!   over the index's static speed ladder.
+//! * Cache-aware: the hit/residency pools come from inverted
+//!   mark→servers and model→servers indexes maintained on every
+//!   shadow insert/evict, replacing the per-route O(N) `contains`
+//!   scan; pool scoring reuses a scratch buffer, so the route hot
+//!   path allocates nothing (`tests/hotpath_alloc.rs`).
 
 use std::collections::VecDeque;
 
+use std::collections::HashMap;
+
 use crate::cache::{CacheSettings, ServerCache};
 use crate::delay::BatchDelayModel;
-use crate::trace::{Arrival, ArrivalTrace};
+use crate::trace::{Arrival, ArrivalTrace, PromptMark};
+
+pub mod index;
+
+pub use index::{FleetIndex, IndexStats};
 
 /// Which routing policy a cluster runs. Lives here (not in `config`) so
 /// the policy set and its names stay next to the implementations.
@@ -214,6 +259,22 @@ impl ServerState {
         self.pending.len()
     }
 
+    /// Requests estimated still queued or running at `now_s`, without
+    /// mutating the queue — exactly what [`Self::queue_len`] would
+    /// return right after `advance(now_s)`. `pending` is sorted
+    /// ascending (each `assign` pushes a strictly larger completion
+    /// instant), so the drained prefix is a partition point. Lets the
+    /// route hot path skip the per-arrival advance-every-server loop.
+    pub fn queue_len_at(&self, now_s: f64) -> usize {
+        self.pending.len() - self.pending.partition_point(|&done| done <= now_s)
+    }
+
+    /// Bit pattern of the virtual-queue drain instant — the
+    /// [`FleetIndex`] key (non-negative, so bit order = float order).
+    fn busy_until_bits(&self) -> u64 {
+        self.busy_until_s.to_bits()
+    }
+
     /// Charge a routed request to the virtual queue.
     pub fn assign(&mut self, now_s: f64, service_est_s: f64) {
         self.busy_until_s = self.busy_until_s.max(now_s) + service_est_s;
@@ -262,10 +323,82 @@ pub trait Router {
         let _ = done_steps;
         self.route(arrival, servers, ctx)
     }
+
+    /// [`Router::route`] answered through a [`FleetIndex`] kept current
+    /// by the caller. Contract: returns **exactly** the server
+    /// [`Router::route`] would return on the same state (the module
+    /// docs spell out how each policy guarantees it). The default
+    /// ignores the index and runs the scan, so external policies stay
+    /// correct without opting in.
+    fn route_indexed(
+        &mut self,
+        arrival: &Arrival,
+        servers: &[ServerState],
+        ctx: &RouteContext,
+        index: &mut FleetIndex,
+    ) -> usize {
+        let _ = index;
+        self.route(arrival, servers, ctx)
+    }
+
+    /// [`Router::route_resume`] answered through a [`FleetIndex`];
+    /// same decision-identity contract as [`Router::route_indexed`].
+    fn route_resume_indexed(
+        &mut self,
+        arrival: &Arrival,
+        done_steps: u32,
+        servers: &[ServerState],
+        ctx: &RouteContext,
+        index: &mut FleetIndex,
+    ) -> usize {
+        let _ = index;
+        self.route_resume(arrival, done_steps, servers, ctx)
+    }
 }
 
 fn assert_some_alive(servers: &[ServerState]) {
     assert!(servers.iter().any(|s| s.alive), "routing with every server failed");
+}
+
+/// Exact `(outstanding_work_s, id)` argmin through the index — the
+/// JSQ scan decision, bit for bit. Any idle server wins outright
+/// (outstanding exactly `+0.0`, lowest id first). Among busy servers
+/// the index orders by `busy_until`, which orders outstanding work
+/// only *non-strictly* (distinct `busy_until` can round to equal
+/// outstanding work), so the equal-minimum prefix is scanned for the
+/// lowest id instead of taking the head entry on faith — O(log N +
+/// |prefix|), and the prefix is length 1 outside rounding collisions.
+fn indexed_jsq_argmin(now: f64, index: &mut FleetIndex) -> Option<usize> {
+    index.settle(now);
+    index.stats.queries += 1;
+    if let Some(id) = index.first_idle() {
+        index.stats.examined += 1;
+        return Some(id);
+    }
+    let mut examined: u64 = 0;
+    let mut best: Option<(f64, usize)> = None;
+    for (busy_until, id) in index.busy_entries() {
+        let out = (busy_until - now).max(0.0);
+        match best {
+            Some((best_out, best_id)) => {
+                // `out` is non-decreasing along the iteration; past
+                // the equal-minimum prefix nothing can win.
+                if out > best_out {
+                    break;
+                }
+                examined += 1;
+                if id < best_id {
+                    best = Some((out, id));
+                }
+            }
+            None => {
+                examined += 1;
+                best = Some((out, id));
+            }
+        }
+    }
+    index.stats.examined += examined;
+    best.map(|(_, id)| id)
 }
 
 /// Cyclic dispatch over alive servers.
@@ -312,12 +445,37 @@ impl Router for JoinShortestQueueRouter {
             .filter(|s| s.alive)
             .min_by(|a, b| {
                 a.outstanding_work_s(now)
-                    .partial_cmp(&b.outstanding_work_s(now))
-                    .unwrap()
+                    .total_cmp(&b.outstanding_work_s(now))
                     .then(a.id.cmp(&b.id))
             })
             .unwrap()
             .id
+    }
+
+    /// O(log N + |equal-minimum prefix|) via [`indexed_jsq_argmin`]:
+    /// any idle server (outstanding exactly `+0.0`) wins outright;
+    /// otherwise the equal-outstanding busy prefix is scanned for the
+    /// lowest id, reproducing the scan decision bit for bit even when
+    /// distinct `busy_until` values round to equal outstanding work.
+    fn route_indexed(
+        &mut self,
+        arrival: &Arrival,
+        _servers: &[ServerState],
+        _ctx: &RouteContext,
+        index: &mut FleetIndex,
+    ) -> usize {
+        indexed_jsq_argmin(arrival.t_s, index).expect("routing with every server failed")
+    }
+
+    fn route_resume_indexed(
+        &mut self,
+        arrival: &Arrival,
+        _done_steps: u32,
+        servers: &[ServerState],
+        ctx: &RouteContext,
+        index: &mut FleetIndex,
+    ) -> usize {
+        self.route_indexed(arrival, servers, ctx, index)
     }
 }
 
@@ -341,11 +499,16 @@ pub struct QualityAwareRouter {
     /// Cap on the step prediction (matches the schedulers' default
     /// `max_steps`; past it extra steps buy ~no quality).
     pub max_steps: u32,
+    /// Fleet-wide minimum scaled singleton step cost `min_s g(1)/speed`
+    /// — the admissible denominator of the bound-and-prune upper
+    /// bound. Computed once from the first indexed fleet (speeds are
+    /// static for a router's lifetime).
+    g1_floor: Option<f64>,
 }
 
 impl QualityAwareRouter {
     pub fn new(delay: BatchDelayModel) -> Self {
-        Self { delay, max_steps: 1000 }
+        Self { delay, max_steps: 1000, g1_floor: None }
     }
 
     /// Predicted denoising steps for `arrival` on `server` (0 means a
@@ -358,7 +521,7 @@ impl QualityAwareRouter {
     ) -> u32 {
         let now = arrival.t_s;
         let wait = server.outstanding_work_s(now);
-        let share = ctx.total_bandwidth_hz / (server.queue_len() + 1) as f64;
+        let share = ctx.total_bandwidth_hz / (server.queue_len_at(now) + 1) as f64;
         let tx = arrival.link.tx_delay(ctx.content_bits, share);
         let budget = arrival.deadline_s - wait - tx;
         let scaled = BatchDelayModel::new(self.delay.a / server.speed, self.delay.b / server.speed);
@@ -367,6 +530,127 @@ impl QualityAwareRouter {
         }
         // Singleton steps: T · g_s(1) ≤ budget.
         ((budget / scaled.g(1)).floor() as u32).min(self.max_steps)
+    }
+
+    /// [`Self::predict_steps`] specialised to a settled server: zero
+    /// outstanding work and an empty virtual queue, so the prediction
+    /// depends on the GPU speed alone — and is monotone non-decreasing
+    /// in it (every op below is monotone under IEEE rounding). Mirrors
+    /// `predict_steps` operation for operation so the result is
+    /// bit-identical to scoring an actual idle server of this speed.
+    fn idle_steps(&self, arrival: &Arrival, speed: f64, ctx: &RouteContext) -> u32 {
+        let share = ctx.total_bandwidth_hz / (0 + 1) as f64;
+        let tx = arrival.link.tx_delay(ctx.content_bits, share);
+        let budget = arrival.deadline_s - 0.0 - tx;
+        let scaled = BatchDelayModel::new(self.delay.a / speed, self.delay.b / speed);
+        if budget < scaled.g(1) {
+            return 0;
+        }
+        ((budget / scaled.g(1)).floor() as u32).min(self.max_steps)
+    }
+
+    /// The cached fleet-wide minimum of the scaled singleton step cost.
+    /// Taken over *all* servers (dead included), so it lower-bounds
+    /// every alive candidate's denominator — admissible under faults.
+    fn fleet_g1_floor(&mut self, servers: &[ServerState]) -> f64 {
+        match self.g1_floor {
+            Some(v) => v,
+            None => {
+                let v = servers
+                    .iter()
+                    .map(|s| {
+                        BatchDelayModel::new(self.delay.a / s.speed, self.delay.b / s.speed).g(1)
+                    })
+                    .fold(f64::INFINITY, f64::min);
+                self.g1_floor = Some(v);
+                v
+            }
+        }
+    }
+
+    /// Bound-and-prune argmax of `(score, −outstanding, −id)`, where
+    /// `score = min(predict_steps + done, max_steps)` — the exact scan
+    /// comparator of [`Self::route`] / [`Self::route_resume`].
+    ///
+    /// Idle servers first: all tie at zero wait, so the scan winner
+    /// among them is the lowest id inside the top-score speed class —
+    /// found by binary search over the index's static speed ladder
+    /// (scores are monotone in speed) plus a min-id range query.
+    /// Then busy servers in ascending `(busy_until, id)` index order.
+    /// That orders `wait` only *non-strictly* (distinct `busy_until`
+    /// can round to equal waits), so the incumbent is tracked as the
+    /// full scan key `(score, wait, id)` and a candidate replaces it
+    /// exactly when the scan comparator says so: higher score, or
+    /// equal score and smaller wait, or both equal and lower id.
+    /// The loop stops once the admissible upper bound
+    /// `min(⌊(deadline − wait)/g1_floor⌋ + done, max_steps)`
+    /// (transmission dropped, fastest-GPU step cost) strictly loses to
+    /// the incumbent — `ub < best_score`, or `ub == best_score` with
+    /// `wait > best_wait`: `wait` is non-decreasing along the
+    /// iteration, so every later candidate loses the same comparison.
+    fn indexed_argmax(
+        &mut self,
+        arrival: &Arrival,
+        done: u32,
+        servers: &[ServerState],
+        ctx: &RouteContext,
+        index: &mut FleetIndex,
+    ) -> usize {
+        let now = arrival.t_s;
+        index.settle(now);
+        index.stats.queries += 1;
+        let g1_floor = self.fleet_g1_floor(servers);
+        let max_steps = self.max_steps;
+        let score = |steps: u32| (steps + done).min(max_steps);
+        let mut examined: u64 = 0;
+        // Incumbent as the scan's full argmax key: (score, wait, id).
+        let mut best: Option<(u32, f64, usize)> = None;
+        if let Some(top_pos) = index.last_idle_pos() {
+            let top = score(self.idle_steps(arrival, index.speed_at(top_pos), ctx));
+            examined += 1;
+            // Least ladder position whose (static) speed reaches the
+            // top score; every idle position at or above it scores
+            // exactly `top`, every one below scores strictly less.
+            let (mut lo, mut hi) = (0usize, top_pos);
+            while lo < hi {
+                let mid = lo + (hi - lo) / 2;
+                examined += 1;
+                if score(self.idle_steps(arrival, index.speed_at(mid), ctx)) < top {
+                    lo = mid + 1;
+                } else {
+                    hi = mid;
+                }
+            }
+            let id = index.min_idle_id_from(lo).expect("idle class is non-empty");
+            best = Some((top, 0.0, id));
+        }
+        for (busy_until, id) in index.busy_entries() {
+            let wait = (busy_until - now).max(0.0);
+            if let Some((best_score, best_wait, _)) = best {
+                let head = (arrival.deadline_s - wait) / g1_floor;
+                let ub_steps =
+                    if head >= max_steps as f64 { max_steps } else { head.floor() as u32 };
+                let ub = score(ub_steps);
+                if ub < best_score || (ub == best_score && wait > best_wait) {
+                    break;
+                }
+            }
+            examined += 1;
+            let s = score(self.predict_steps(arrival, &servers[id], ctx));
+            let better = match best {
+                None => true,
+                Some((best_score, best_wait, best_id)) => s
+                    .cmp(&best_score)
+                    .then(best_wait.total_cmp(&wait))
+                    .then(best_id.cmp(&id))
+                    .is_gt(),
+            };
+            if better {
+                best = Some((s, wait, id));
+            }
+        }
+        index.stats.examined += examined;
+        best.expect("routing with every server failed").2
     }
 }
 
@@ -390,14 +674,24 @@ impl Router for QualityAwareRouter {
                     // later element on Equal, so order comparisons to
                     // favour `a` strictly).
                     .then_with(|| {
-                        b.outstanding_work_s(now)
-                            .partial_cmp(&a.outstanding_work_s(now))
-                            .unwrap()
+                        b.outstanding_work_s(now).total_cmp(&a.outstanding_work_s(now))
                     })
                     .then(b.id.cmp(&a.id))
             })
             .unwrap()
             .id
+    }
+
+    fn route_indexed(
+        &mut self,
+        arrival: &Arrival,
+        servers: &[ServerState],
+        ctx: &RouteContext,
+        index: &mut FleetIndex,
+    ) -> usize {
+        // `score` with done = 0 is `predict_steps` itself (already
+        // capped at `max_steps`), so this is exactly the fresh scan.
+        self.indexed_argmax(arrival, 0, servers, ctx, index)
     }
 
     /// Resume-aware marginal-(P0) dispatch: the request already owns
@@ -424,14 +718,23 @@ impl Router for QualityAwareRouter {
                 let sb = (self.predict_steps(arrival, b, ctx) + done_steps).min(self.max_steps);
                 sa.cmp(&sb)
                     .then_with(|| {
-                        b.outstanding_work_s(now)
-                            .partial_cmp(&a.outstanding_work_s(now))
-                            .unwrap()
+                        b.outstanding_work_s(now).total_cmp(&a.outstanding_work_s(now))
                     })
                     .then(b.id.cmp(&a.id))
             })
             .unwrap()
             .id
+    }
+
+    fn route_resume_indexed(
+        &mut self,
+        arrival: &Arrival,
+        done_steps: u32,
+        servers: &[ServerState],
+        ctx: &RouteContext,
+        index: &mut FleetIndex,
+    ) -> usize {
+        self.indexed_argmax(arrival, done_steps, servers, ctx, index)
     }
 }
 
@@ -448,6 +751,15 @@ impl Router for QualityAwareRouter {
 /// `route_trace`), it falls back to the virtual outstanding-work
 /// estimate — i.e. it degenerates to [`JoinShortestQueueRouter`].
 /// Ties break toward the lowest id for determinism.
+/// The queue term of [`LiveStateRouter::backlog_s`]: one scaled
+/// singleton step per actually-queued request. A free function so the
+/// event engine keys the [`FleetIndex`] live half with the *same*
+/// expression the router scores with — bit-identical by construction,
+/// not by parallel maintenance.
+pub fn live_queue_cost_s(delay: &BatchDelayModel, queue_depth: usize, speed: f64) -> f64 {
+    queue_depth as f64 * delay.g(1) / speed
+}
+
 #[derive(Debug, Clone)]
 pub struct LiveStateRouter {
     delay: BatchDelayModel,
@@ -465,7 +777,7 @@ impl LiveStateRouter {
         match server.live {
             Some(view) => {
                 let busy = (view.gpu_free_s - now_s).max(0.0);
-                busy + view.queue_depth as f64 * self.delay.g(1) / server.speed
+                busy + live_queue_cost_s(&self.delay, view.queue_depth, server.speed)
             }
             None => server.outstanding_work_s(now_s),
         }
@@ -484,13 +796,79 @@ impl Router for LiveStateRouter {
             .iter()
             .filter(|s| s.alive)
             .min_by(|a, b| {
-                self.backlog_s(a, now)
-                    .partial_cmp(&self.backlog_s(b, now))
-                    .unwrap()
-                    .then(a.id.cmp(&b.id))
+                self.backlog_s(a, now).total_cmp(&self.backlog_s(b, now)).then(a.id.cmp(&b.id))
             })
             .unwrap()
             .id
+    }
+
+    /// Backlog argmin through the index's live half. Settled-GPU
+    /// servers are keyed by their queue cost — exactly their backlog
+    /// (the busy term is a hard `+0.0`) — so the first entry is their
+    /// winner; busy-GPU servers are visited in ascending `gpu_free`
+    /// order, whose `(gpu_free − now).max(0.0)` lower-bounds their
+    /// backlog (the queue cost only adds on, through a monotone
+    /// rounding), so iteration stops once that bound alone exceeds
+    /// the incumbent. Exact backlogs come from [`Self::backlog_s`] on
+    /// the published views, i.e. the scan's own numbers. Without a
+    /// published live half (no event engine) every view is `None` and
+    /// the scan degenerates to the virtual JSQ argmin —
+    /// [`indexed_jsq_argmin`] on the work half of the index.
+    fn route_indexed(
+        &mut self,
+        arrival: &Arrival,
+        servers: &[ServerState],
+        _ctx: &RouteContext,
+        index: &mut FleetIndex,
+    ) -> usize {
+        let now = arrival.t_s;
+        if !index.live_active() {
+            debug_assert!(
+                servers.iter().all(|s| s.live.is_none()),
+                "live views published without FleetIndex::publish_live"
+            );
+            return indexed_jsq_argmin(now, index).expect("routing with every server failed");
+        }
+        index.stats.queries += 1;
+        index.settle_live(now);
+        let mut examined: u64 = 0;
+        let mut best: Option<(f64, usize)> = index.live_idle_first();
+        if best.is_some() {
+            examined += 1;
+        }
+        for (gpu_free, id) in index.live_busy_entries() {
+            if let Some((incumbent, _)) = best {
+                if (gpu_free - now).max(0.0) > incumbent {
+                    break;
+                }
+            }
+            examined += 1;
+            let backlog = self.backlog_s(&servers[id], now);
+            let better = match best {
+                None => true,
+                Some((incumbent, incumbent_id)) => {
+                    backlog.total_cmp(&incumbent).then(id.cmp(&incumbent_id)).is_lt()
+                }
+            };
+            if better {
+                best = Some((backlog, id));
+            }
+        }
+        index.stats.examined += examined;
+        best.expect("routing with every server failed").1
+    }
+
+    fn route_resume_indexed(
+        &mut self,
+        arrival: &Arrival,
+        _done_steps: u32,
+        servers: &[ServerState],
+        ctx: &RouteContext,
+        index: &mut FleetIndex,
+    ) -> usize {
+        // The scan's `route_resume` default ignores the credit and
+        // delegates to `route`; mirror that exactly.
+        self.route_indexed(arrival, servers, ctx, index)
     }
 }
 
@@ -516,19 +894,88 @@ pub struct CacheAwareRouter {
     inner: QualityAwareRouter,
     settings: CacheSettings,
     shadow: Vec<ServerCache>,
+    /// Inverted index: which servers' shadow caches hold each key.
+    /// Maintained on every shadow insert/evict ([`Self::note_dispatch`])
+    /// so membership always equals `shadow[i].cache.contains(mark)` —
+    /// the hit pool without the O(N) contains scan. Owner lists stay
+    /// sorted ascending, matching the scan's candidate order.
+    mark_owners: HashMap<PromptMark, Vec<usize>>,
+    /// Inverted index: which servers' shadow catalogs hold each model
+    /// resident — the residency pool without the O(N) scan.
+    model_owners: HashMap<u32, Vec<usize>>,
+    /// Reusable candidate buffer: the route hot path allocates nothing
+    /// once warm (`tests/hotpath_alloc.rs`).
+    scratch: Vec<usize>,
+}
+
+/// Insert into / remove from a sorted owner list (owner lists are tiny
+/// — bounded by the fleet servers actually holding the key).
+fn add_owner(list: &mut Vec<usize>, id: usize) {
+    if let Err(pos) = list.binary_search(&id) {
+        list.insert(pos, id);
+    }
+}
+
+fn remove_owner(list: &mut Vec<usize>, id: usize) {
+    if let Ok(pos) = list.binary_search(&id) {
+        list.remove(pos);
+    }
 }
 
 impl CacheAwareRouter {
     pub fn new(delay: BatchDelayModel, settings: CacheSettings) -> Self {
-        Self { inner: QualityAwareRouter::new(delay), settings, shadow: Vec::new() }
+        Self {
+            inner: QualityAwareRouter::new(delay),
+            settings,
+            shadow: Vec::new(),
+            mark_owners: HashMap::new(),
+            model_owners: HashMap::new(),
+            scratch: Vec::new(),
+        }
     }
 
     /// Lazily size the shadow fleet to the routed fleet (the router
-    /// learns the server count from its first dispatch).
+    /// learns the server count from its first dispatch). Boot-resident
+    /// models enter the inverted model index here.
     fn sync_fleet(&mut self, n: usize) {
         while self.shadow.len() < n {
-            self.shadow.push(ServerCache::new(&self.settings));
+            let id = self.shadow.len();
+            let cache = ServerCache::new(&self.settings);
+            for &model in cache.catalog.resident_models() {
+                add_owner(self.model_owners.entry(model).or_default(), id);
+            }
+            self.shadow.push(cache);
         }
+    }
+
+    /// Mirror what the engine-side cache will do for the routed
+    /// request — shared by the scan and indexed paths so both evolve
+    /// the shadow state (and the inverted indexes over it)
+    /// identically: a hit refreshes the entry's second-chance bit; a
+    /// miss loads the model and inserts the generated result,
+    /// reporting any eviction back into the owner lists.
+    fn note_dispatch(
+        &mut self,
+        arrival: &Arrival,
+        servers: &[ServerState],
+        ctx: &RouteContext,
+        choice: usize,
+    ) {
+        let mark = arrival.mark;
+        let predicted = self.inner.predict_steps(arrival, &servers[choice], ctx).max(1);
+        let shadow = &mut self.shadow[choice];
+        if shadow.lookup(mark).is_some() {
+            return;
+        }
+        let (_, evicted_model) = shadow.ensure_resident_reporting(mark.model);
+        if let Some(evicted) = shadow.insert(mark, predicted) {
+            remove_owner(self.mark_owners.entry(evicted).or_default(), choice);
+        }
+        if let Some(model) = evicted_model {
+            remove_owner(self.model_owners.entry(model).or_default(), choice);
+        }
+        add_owner(self.model_owners.entry(mark.model).or_default(), choice);
+        add_owner(self.mark_owners.entry(mark).or_default(), choice);
     }
 
     /// Marginal-(P0) argmax restricted to the candidate subset `ids`
@@ -549,7 +996,7 @@ impl CacheAwareRouter {
                 let sb = self.inner.predict_steps(arrival, b, ctx);
                 sa.cmp(&sb)
                     .then_with(|| {
-                        b.outstanding_work_s(now).partial_cmp(&a.outstanding_work_s(now)).unwrap()
+                        b.outstanding_work_s(now).total_cmp(&a.outstanding_work_s(now))
                     })
                     .then(b.id.cmp(&a.id))
             })
@@ -588,15 +1035,7 @@ impl Router for CacheAwareRouter {
             &alive
         };
         let choice = self.best_among(arrival, servers, ctx, pool);
-        // Mirror what the engine-side cache will do for this request: a
-        // hit refreshes the entry's second-chance bit; a miss loads the
-        // model and (once served) inserts the generated result.
-        let predicted = self.inner.predict_steps(arrival, &servers[choice], ctx).max(1);
-        let shadow = &mut self.shadow[choice];
-        if shadow.lookup(mark).is_none() {
-            shadow.ensure_resident(mark.model);
-            shadow.insert(mark, predicted);
-        }
+        self.note_dispatch(arrival, servers, ctx, choice);
         choice
     }
 
@@ -613,15 +1052,121 @@ impl Router for CacheAwareRouter {
     ) -> usize {
         self.inner.route_resume(arrival, done_steps, servers, ctx)
     }
+
+    /// The scan's hit/residency pools, rebuilt from the inverted
+    /// owner indexes instead of an O(N) shadow scan: owner lists are
+    /// sorted ascending and membership equals the contains/is_resident
+    /// predicates exactly (every shadow mutation goes through
+    /// [`Self::note_dispatch`]), so filtering them by liveness yields
+    /// the scan's candidate vectors element for element — into a
+    /// reused scratch buffer. Empty pools fall through to the
+    /// quality-aware bound-and-prune over the whole alive fleet.
+    fn route_indexed(
+        &mut self,
+        arrival: &Arrival,
+        servers: &[ServerState],
+        ctx: &RouteContext,
+        index: &mut FleetIndex,
+    ) -> usize {
+        if arrival.mark.is_zero() {
+            return self.inner.route_indexed(arrival, servers, ctx, index);
+        }
+        self.sync_fleet(servers.len());
+        let mark = arrival.mark;
+        let mut pool = std::mem::take(&mut self.scratch);
+        pool.clear();
+        if let Some(owners) = self.mark_owners.get(&mark) {
+            pool.extend(owners.iter().copied().filter(|&i| servers[i].alive));
+        }
+        if pool.is_empty() {
+            if let Some(owners) = self.model_owners.get(&mark.model) {
+                pool.extend(owners.iter().copied().filter(|&i| servers[i].alive));
+            }
+        }
+        let choice = if pool.is_empty() {
+            self.inner.route_indexed(arrival, servers, ctx, index)
+        } else {
+            index.stats.queries += 1;
+            index.stats.examined += pool.len() as u64;
+            self.best_among(arrival, servers, ctx, &pool)
+        };
+        self.scratch = pool;
+        self.note_dispatch(arrival, servers, ctx, choice);
+        choice
+    }
+
+    fn route_resume_indexed(
+        &mut self,
+        arrival: &Arrival,
+        done_steps: u32,
+        servers: &[ServerState],
+        ctx: &RouteContext,
+        index: &mut FleetIndex,
+    ) -> usize {
+        self.inner.route_resume_indexed(arrival, done_steps, servers, ctx, index)
+    }
 }
 
-/// Route every arrival of `trace` in time order, advancing the fleet's
-/// virtual queues between arrivals. Returns the per-arrival server
-/// assignment (indexed by arrival id). Each routed request charges the
-/// destination's virtual queue with the singleton-step service estimate
-/// `g(1) / speed` — the same estimate for every policy, so comparisons
-/// across routers differ only in the dispatch rule.
+/// Route every arrival of `trace` in time order through a
+/// [`FleetIndex`], maintained incrementally: only the chosen server is
+/// touched per arrival, so the whole pass is O(arrivals · log N)
+/// instead of the scan's O(arrivals · N). Returns the per-arrival
+/// server assignment (indexed by arrival id) — **bit-identical** to
+/// [`route_trace_scan`] for every policy (`benches/fig_fleet.rs`
+/// gates it). Each routed request charges the destination's virtual
+/// queue with the singleton-step service estimate `g(1) / speed` —
+/// the same estimate for every policy, so comparisons across routers
+/// differ only in the dispatch rule.
 pub fn route_trace(
+    trace: &ArrivalTrace,
+    servers: &mut [ServerState],
+    router: &mut dyn Router,
+    delay: &BatchDelayModel,
+) -> Vec<usize> {
+    let ctx = RouteContext {
+        total_bandwidth_hz: trace.total_bandwidth_hz,
+        content_bits: trace.content_bits,
+    };
+    let mut index = FleetIndex::new(servers);
+    let mut assignment = Vec::with_capacity(trace.len());
+    route_arrivals(&trace.arrivals, servers, router, delay, &ctx, &mut index, &mut assignment);
+    assignment
+}
+
+/// The incremental core of [`route_trace`]: route a batch of arrivals
+/// (ascending `t_s`, continuing from whatever the fleet and `index`
+/// already hold) and append the choices to `assignment`. Allocation-
+/// free once the fleet, index and output buffer are warm
+/// (`tests/hotpath_alloc.rs` holds it to that). The only per-arrival
+/// fleet mutation is the chosen server: `advance` there is lazy
+/// garbage collection of its drained virtual queue (decisions read
+/// [`ServerState::queue_len_at`], which never needs it), and `touch`
+/// re-indexes it after the charge.
+pub fn route_arrivals(
+    arrivals: &[Arrival],
+    servers: &mut [ServerState],
+    router: &mut dyn Router,
+    delay: &BatchDelayModel,
+    ctx: &RouteContext,
+    index: &mut FleetIndex,
+    assignment: &mut Vec<usize>,
+) {
+    for arrival in arrivals {
+        let choice = router.route_indexed(arrival, servers, ctx, index);
+        assert!(servers[choice].alive, "router {} picked failed server {choice}", router.name());
+        servers[choice].advance(arrival.t_s);
+        let service_est_s = delay.g(1) / servers[choice].speed;
+        servers[choice].assign(arrival.t_s, service_est_s);
+        index.touch(&servers[choice]);
+        assignment.push(choice);
+    }
+}
+
+/// The O(arrivals · N) reference implementation of [`route_trace`]:
+/// advance every server, run the full-fleet scan, charge the choice.
+/// Kept verbatim as the executable specification the indexed path is
+/// gated against (`benches/fig_fleet.rs`, `tests/routing_index.rs`).
+pub fn route_trace_scan(
     trace: &ArrivalTrace,
     servers: &mut [ServerState],
     router: &mut dyn Router,
@@ -699,6 +1244,42 @@ mod tests {
         assert_eq!(jsq.route(&arrival(0, 1.0, 10.0), &servers, &ctx()), 1);
         // after the work drains, ties break to the lowest id
         assert_eq!(jsq.route(&arrival(1, 9.0, 10.0), &servers, &ctx()), 0);
+    }
+
+    #[test]
+    fn queue_len_at_matches_queue_len_after_advance() {
+        let mut s = ServerState::new(0, 1.0);
+        for i in 0..6 {
+            s.assign(i as f64 * 0.5, 2.0);
+        }
+        for &t in &[0.0, 1.9, 2.0, 2.1, 5.0, 40.0] {
+            let predicted = s.queue_len_at(t);
+            let mut advanced = s.clone();
+            advanced.advance(t);
+            assert_eq!(predicted, advanced.queue_len(), "t={t}");
+        }
+    }
+
+    #[test]
+    fn indexed_route_trace_matches_scan_for_every_kind() {
+        let t = trace(5.0, 60.0, 11);
+        let delay = BatchDelayModel::paper();
+        for kind in RouterKind::with_live() {
+            let mut scan_fleet = ServerState::fleet(&[0.5, 1.0, 1.5, 2.0]);
+            let mut indexed_fleet = scan_fleet.clone();
+            let scan = route_trace_scan(&t, &mut scan_fleet, kind.build(delay).as_mut(), &delay);
+            let indexed = route_trace(&t, &mut indexed_fleet, kind.build(delay).as_mut(), &delay);
+            assert_eq!(scan, indexed, "{}: indexed dispatch must match the scan", kind.name());
+        }
+        // and the cache-aware router on a genuinely marked trace
+        let mt = marked_trace(11);
+        let mut scan_fleet = ServerState::fleet(&[0.5, 1.0, 1.5, 2.0]);
+        let mut indexed_fleet = scan_fleet.clone();
+        let mut scan_router = CacheAwareRouter::new(delay, cache_settings());
+        let mut indexed_router = CacheAwareRouter::new(delay, cache_settings());
+        let scan = route_trace_scan(&mt, &mut scan_fleet, &mut scan_router, &delay);
+        let indexed = route_trace(&mt, &mut indexed_fleet, &mut indexed_router, &delay);
+        assert_eq!(scan, indexed, "cache-aware: indexed dispatch must match the scan");
     }
 
     #[test]

@@ -328,6 +328,10 @@ fn run_cluster(
     assert_eq!(allocators.len(), n, "one allocator reference per server");
 
     // ---- arrival splitting (the routing layer) ----
+    // `route_trace` dispatches through the incremental `FleetIndex`
+    // (O(arrivals · log N)); decision-identical to the old full-fleet
+    // scan by the `route_indexed` contract, so assignments — and
+    // everything downstream — are unchanged bit for bit.
     let mut fleet = ServerState::fleet(&cfg.speeds);
     let mut router = cfg.router.build_with_cache(*delay, cfg.dynamic.cache);
     let assignment = route_trace(trace, &mut fleet, router.as_mut(), delay);

@@ -122,7 +122,9 @@ use crate::metrics::{
 };
 use crate::obs::{EventKind, NullSink, TraceSink, NO_REQUEST};
 use crate::quality::QualityModel;
-use crate::routing::{LiveView, RouteContext, Router, RouterKind, ServerState};
+use crate::routing::{
+    live_queue_cost_s, FleetIndex, LiveView, RouteContext, Router, RouterKind, ServerState,
+};
 use crate::scheduler::{BatchScheduler, Schedule};
 use crate::trace::{Arrival, ArrivalTrace, DeviceRequest, PromptMark, Workload};
 use crate::util::exec::par_map;
@@ -669,6 +671,19 @@ struct Engine<'a> {
     /// The router's virtual-queue view of the fleet (liveness is kept
     /// current by fault events — the non-stale part of the view).
     states: Vec<ServerState>,
+    /// Ordered dispatch index over `states` (work half) and the
+    /// published live views (live half) — maintained at every state
+    /// mutation so `route_indexed` sees exactly what the scan would.
+    index: FleetIndex,
+    /// Route through the O(N) scan path instead of the index —
+    /// [`simulate_event_cluster_scan`]'s executable specification for
+    /// the bitwise-identity gates. The index is maintained either way.
+    scan_routing: bool,
+    /// Dirty-set incremental live publication: servers whose engine
+    /// state changed since the last dispatch. `live_dirty` dedups,
+    /// `dirty` is the drain list.
+    live_dirty: Vec<bool>,
+    dirty: Vec<usize>,
     ctx: RouteContext,
     servers: Vec<ServerSim>,
     fault_events: Vec<FaultEvent>,
@@ -847,6 +862,8 @@ impl Engine<'_> {
             return;
         }
         self.states[s].alive = false;
+        self.index.remove(s);
+        self.mark_dirty(s);
         self.servers[s].alive = false;
         self.servers[s].down_since = Some(t);
         self.fault_log.push(FaultEvent { t_s: t, server: s, kind: FaultKind::Down });
@@ -915,7 +932,10 @@ impl Engine<'_> {
         if retracted {
             // The dead GPU frees at the cut, and the retracted
             // completions may have been the horizon's high-water mark.
+            // Re-mark dirty: the orphan reroutes above may already have
+            // drained this server's flag with the pre-cut `gpu_free`.
             self.servers[s].gpu_free_s = t;
+            self.mark_dirty(s);
             self.recompute_horizon(t);
         }
     }
@@ -939,6 +959,8 @@ impl Engine<'_> {
             return;
         }
         self.states[s].alive = true;
+        self.index.touch(&self.states[s]);
+        self.mark_dirty(s);
         self.servers[s].alive = true;
         if let Some(since) = self.servers[s].down_since.take() {
             self.servers[s].downtime_s += t - since;
@@ -959,21 +981,43 @@ impl Engine<'_> {
         }
     }
 
-    /// Bring the router's fleet view to instant `t`: advance the
-    /// virtual queues and publish each server's true queue depth and
-    /// `gpu_free` as its [`LiveView`]. Virtual-view policies ignore
-    /// the live half, so publishing it never perturbs them.
-    fn refresh_states(&mut self, t: f64) {
-        for (st, srv) in self.states.iter_mut().zip(&self.servers) {
-            st.advance(t);
+    /// Flag a server's engine state (queue depth, `gpu_free`,
+    /// liveness) as changed since the last dispatch, so the next
+    /// [`Engine::refresh_states`] republishes its [`LiveView`].
+    /// Over-marking is safe (republication is idempotent on unchanged
+    /// state); *under*-marking would hand the router a stale view.
+    fn mark_dirty(&mut self, s: usize) {
+        if !self.live_dirty[s] {
+            self.live_dirty[s] = true;
+            self.dirty.push(s);
+        }
+    }
+
+    /// Bring the router's fleet view current — incrementally: only
+    /// servers whose engine state changed since the last dispatch
+    /// (the dirty set) get their true queue depth and `gpu_free`
+    /// republished, to both the [`ServerState::live`] view and the
+    /// index's live half. Virtual-view policies ignore the live half,
+    /// so publishing it never perturbs them. The per-dispatch
+    /// advance-every-server loop is gone: decisions read
+    /// [`ServerState::queue_len_at`] / `outstanding_work_s`, which
+    /// never need it, and the virtual queue is GC'd lazily on the
+    /// chosen server at charge time.
+    fn refresh_states(&mut self) {
+        for s in self.dirty.drain(..) {
+            self.live_dirty[s] = false;
+            let srv = &self.servers[s];
+            let st = &mut self.states[s];
             st.live = Some(LiveView { queue_depth: srv.queued(), gpu_free_s: srv.gpu_free_s });
+            let cost = live_queue_cost_s(self.delay, srv.queued(), st.speed);
+            self.index.publish_live(s, st.alive, srv.gpu_free_s, cost);
         }
     }
 
     fn handle_arrival(&mut self) {
         let a = self.trace.arrivals[self.next_arrival];
         self.next_arrival += 1;
-        self.refresh_states(a.t_s);
+        self.refresh_states();
         if !self.states.iter().any(|st| st.alive) {
             // The whole fleet is down: park until a recovery. The
             // arrival is anchored on server 0's timeline — it never
@@ -982,11 +1026,18 @@ impl Engine<'_> {
             self.unroutable.push_back(Pending::from_arrival(&a));
             return;
         }
-        let choice = self.router.route(&a, &self.states, &self.ctx);
+        let choice = if self.scan_routing {
+            self.router.route(&a, &self.states, &self.ctx)
+        } else {
+            self.router.route_indexed(&a, &self.states, &self.ctx, &mut self.index)
+        };
         let name = self.router.name();
         assert!(self.states[choice].alive, "router {name} picked failed server {choice}");
         let service_est_s = self.delay.g(1) / self.states[choice].speed;
+        self.states[choice].advance(a.t_s);
         self.states[choice].assign(a.t_s, service_est_s);
+        self.index.touch(&self.states[choice]);
+        self.mark_dirty(choice);
         self.assignment[a.id] = choice;
         self.tracer.emit(a.t_s, choice, a.id, EventKind::Arrived);
         self.tracer.emit(a.t_s, choice, a.id, EventKind::Routed { server: choice, score: 0.0 });
@@ -1047,7 +1098,7 @@ impl Engine<'_> {
     /// Hand a request back through the router at instant `t`, with its
     /// elapsed deadline budget preserved.
     fn reroute(&mut self, p: Pending, t: f64, reason: MigrationReason, from: Option<usize>) {
-        self.refresh_states(t);
+        self.refresh_states();
         if !self.states.iter().any(|st| st.alive) {
             self.migrations.push(MigrationRecord { id: p.id, from, to: None, t_s: t, reason });
             self.unroutable.push_back(p);
@@ -1064,11 +1115,24 @@ impl Engine<'_> {
             link: p.link,
             mark: p.mark,
         };
-        let choice = self.router.route_resume(&view, p.done_steps, &self.states, &self.ctx);
+        let choice = if self.scan_routing {
+            self.router.route_resume(&view, p.done_steps, &self.states, &self.ctx)
+        } else {
+            self.router.route_resume_indexed(
+                &view,
+                p.done_steps,
+                &self.states,
+                &self.ctx,
+                &mut self.index,
+            )
+        };
         let name = self.router.name();
         assert!(self.states[choice].alive, "router {name} picked failed server {choice}");
         let service_est_s = self.delay.g(1) / self.states[choice].speed;
+        self.states[choice].advance(t);
         self.states[choice].assign(t, service_est_s);
+        self.index.touch(&self.states[choice]);
+        self.mark_dirty(choice);
         self.migrations.push(MigrationRecord { id: p.id, from, to: Some(choice), t_s: t, reason });
         self.tracer.emit(t, choice, p.id, EventKind::Routed { server: choice, score: 0.0 });
         if reason == MigrationReason::Checkpoint {
@@ -1089,7 +1153,7 @@ impl Engine<'_> {
     /// router may keep the request home — that is a local carry-over,
     /// not a migration (no record, no fresh virtual-queue charge).
     fn steal_hand_off(&mut self, p: Pending, t: f64, from: usize) {
-        self.refresh_states(t);
+        self.refresh_states();
         let reason = MigrationReason::StealWhenIdle;
         if !self.states.iter().any(|st| st.alive) {
             let record = MigrationRecord { id: p.id, from: Some(from), to: None, t_s: t, reason };
@@ -1104,17 +1168,31 @@ impl Engine<'_> {
             link: p.link,
             mark: p.mark,
         };
-        let choice = self.router.route_resume(&view, p.done_steps, &self.states, &self.ctx);
+        let choice = if self.scan_routing {
+            self.router.route_resume(&view, p.done_steps, &self.states, &self.ctx)
+        } else {
+            self.router.route_resume_indexed(
+                &view,
+                p.done_steps,
+                &self.states,
+                &self.ctx,
+                &mut self.index,
+            )
+        };
         let name = self.router.name();
         assert!(self.states[choice].alive, "router {name} picked failed server {choice}");
         let epoch_policy = self.dynamic.epoch;
         if choice == from {
             self.servers[from].ingest(Pending { enqueued_s: t, ..p }, t, &epoch_policy);
+            self.mark_dirty(from);
             self.touch(from);
             return;
         }
         let service_est_s = self.delay.g(1) / self.states[choice].speed;
+        self.states[choice].advance(t);
         self.states[choice].assign(t, service_est_s);
+        self.index.touch(&self.states[choice]);
+        self.mark_dirty(choice);
         let record = MigrationRecord {
             id: p.id,
             from: Some(from),
@@ -1296,6 +1374,10 @@ impl Engine<'_> {
     fn solve_server(&mut self, idx: usize, presolved: Option<JointSolution>) {
         let cfg = self.dynamic;
         let mut e = self.servers[idx].epoch.take().expect("frozen epoch to solve");
+        // Queue depth and (later) `gpu_free` change across the solve;
+        // no dispatch can interleave before both are final, so one
+        // mark up front covers the whole event.
+        self.mark_dirty(idx);
         let timing = self.servers[idx].solve_timing(&e);
         // Walk the remaining lifecycle explicitly: the solve finished
         // (PlanPending → Solved) and the batch is now starting
@@ -1779,7 +1861,26 @@ pub fn simulate_event_cluster_traced(
     tracer: &mut dyn TraceSink,
 ) -> EventReport {
     let allocators = vec![allocator; cfg.servers().max(1)];
-    run_event_cluster(trace, scheduler, allocators, delay, quality, cfg, tracer)
+    run_event_cluster(trace, scheduler, allocators, delay, quality, cfg, tracer, false)
+}
+
+/// [`simulate_event_cluster`] forced onto the O(N)-scan routing path:
+/// every dispatch runs the routers' full-fleet reference scans instead
+/// of the [`FleetIndex`] fast paths (the index is still maintained, so
+/// engine state evolves identically). The decision-identity contract
+/// makes the two entry points bitwise interchangeable —
+/// `benches/fig_fleet.rs` and `tests/routing_index.rs` gate exactly
+/// that.
+pub fn simulate_event_cluster_scan(
+    trace: &ArrivalTrace,
+    scheduler: &dyn BatchScheduler,
+    allocator: &dyn Allocator,
+    delay: &BatchDelayModel,
+    quality: &dyn QualityModel,
+    cfg: &EventClusterConfig,
+) -> EventReport {
+    let allocators = vec![allocator; cfg.servers().max(1)];
+    run_event_cluster(trace, scheduler, allocators, delay, quality, cfg, &mut NullSink, true)
 }
 
 /// [`simulate_event_cluster`] with per-server allocator instances from
@@ -1793,7 +1894,7 @@ pub fn simulate_event_cluster_pooled(
     cfg: &EventClusterConfig,
 ) -> EventReport {
     let allocators = pool.refs(cfg.servers().max(1));
-    run_event_cluster(trace, scheduler, allocators, delay, quality, cfg, &mut NullSink)
+    run_event_cluster(trace, scheduler, allocators, delay, quality, cfg, &mut NullSink, false)
 }
 
 /// [`simulate_event_cluster_pooled`] with a flight recorder attached.
@@ -1807,7 +1908,7 @@ pub fn simulate_event_cluster_pooled_traced(
     tracer: &mut dyn TraceSink,
 ) -> EventReport {
     let allocators = pool.refs(cfg.servers().max(1));
-    run_event_cluster(trace, scheduler, allocators, delay, quality, cfg, tracer)
+    run_event_cluster(trace, scheduler, allocators, delay, quality, cfg, tracer, false)
 }
 
 fn run_event_cluster(
@@ -1818,6 +1919,7 @@ fn run_event_cluster(
     quality: &dyn QualityModel,
     cfg: &EventClusterConfig,
     tracer: &mut dyn TraceSink,
+    scan_routing: bool,
 ) -> EventReport {
     let n_servers = cfg.servers();
     let cache = cfg.dynamic.cache;
@@ -1825,6 +1927,8 @@ fn run_event_cluster(
     assert_eq!(allocators.len(), n_servers, "one allocator reference per server");
     cfg.faults.validate_servers(n_servers).expect("fault script must fit the fleet");
 
+    let states = ServerState::fleet(cfg.speeds);
+    let index = FleetIndex::new(&states);
     let mut engine = Engine {
         trace,
         scheduler,
@@ -1834,7 +1938,13 @@ fn run_event_cluster(
         dynamic: cfg.dynamic,
         policy: cfg.migration.build(),
         router: cfg.router.build_with_cache(*delay, cache),
-        states: ServerState::fleet(cfg.speeds),
+        states,
+        index,
+        scan_routing,
+        // Everything starts dirty: the first dispatch publishes the
+        // whole fleet, exactly like the old publish-all loop did.
+        live_dirty: vec![true; n_servers],
+        dirty: (0..n_servers).collect(),
         ctx: RouteContext {
             total_bandwidth_hz: trace.total_bandwidth_hz,
             content_bits: trace.content_bits,
@@ -1923,6 +2033,17 @@ mod tests {
 
     fn run(trace: &ArrivalTrace, cfg: &EventClusterConfig) -> EventReport {
         simulate_event_cluster(
+            trace,
+            &Stacking::default(),
+            &EqualAllocator,
+            &BatchDelayModel::paper(),
+            &PowerLawQuality::paper(),
+            cfg,
+        )
+    }
+
+    fn run_scan(trace: &ArrivalTrace, cfg: &EventClusterConfig) -> EventReport {
+        simulate_event_cluster_scan(
             trace,
             &Stacking::default(),
             &EqualAllocator,
@@ -2070,6 +2191,58 @@ mod tests {
                 assert_eq!(x.resolved_s.to_bits(), y.resolved_s.to_bits());
             }
             assert_eq!(a.horizon_s.to_bits(), b.horizon_s.to_bits());
+        }
+    }
+
+    /// The whole observable engine output, bit for bit — what the
+    /// indexed-vs-scan gates compare.
+    fn assert_reports_bitwise(a: &EventReport, b: &EventReport, tag: &str) {
+        assert_eq!(a.assignment, b.assignment, "{tag}: assignment");
+        assert_eq!(a.horizon_s.to_bits(), b.horizon_s.to_bits(), "{tag}: horizon");
+        assert_eq!(a.fault_log.len(), b.fault_log.len(), "{tag}: fault log");
+        assert_eq!(a.migrations.len(), b.migrations.len(), "{tag}: migrations");
+        for (x, y) in a.migrations.iter().zip(&b.migrations) {
+            assert_eq!((x.id, x.from, x.to, x.reason), (y.id, y.from, y.to, y.reason), "{tag}");
+            assert_eq!(x.t_s.to_bits(), y.t_s.to_bits(), "{tag}: migration instant");
+        }
+        for (x, y) in a.outcomes.iter().zip(&b.outcomes) {
+            assert_eq!(x.id, y.id, "{tag}");
+            assert_eq!(x.disposition, y.disposition, "{tag}: request {}", x.id);
+            assert_eq!(x.steps, y.steps, "{tag}: request {}", x.id);
+            assert_eq!(x.quality.to_bits(), y.quality.to_bits(), "{tag}: request {}", x.id);
+            assert_eq!(x.e2e_s.to_bits(), y.e2e_s.to_bits(), "{tag}: request {}", x.id);
+            assert_eq!(x.resolved_s.to_bits(), y.resolved_s.to_bits(), "{tag}: request {}", x.id);
+            assert_eq!(x.epoch, y.epoch, "{tag}: request {}", x.id);
+            assert_eq!(x.deferrals, y.deferrals, "{tag}: request {}", x.id);
+        }
+    }
+
+    /// The tentpole contract at engine level: indexed dispatch and the
+    /// O(N) scan produce bitwise-identical runs — every router × every
+    /// migration policy, under a fault script exercising death
+    /// reroutes, steals, checkpoint resumes and whole-fleet outages,
+    /// and (for cache-aware) with the engine caches live.
+    #[test]
+    fn indexed_routing_matches_scan_engine_bitwise_under_faults() {
+        let t = marked_trace(6.0, 60.0, 13);
+        for policy in MigrationPolicyKind::all() {
+            for router in RouterKind::with_live() {
+                let script = FaultScript::random(3, 60.0, 25.0, 8.0, 11);
+                let mut c = cfg(server_speeds(3, 0.5, 1.5), script, policy);
+                c.router = router;
+                let a = run(&t, &c.view());
+                let b = run_scan(&t, &c.view());
+                let tag = format!("{}/{}", router.name(), policy.name());
+                assert_reports_bitwise(&a, &b, &tag);
+            }
+            let script = FaultScript::random(3, 60.0, 25.0, 8.0, 11);
+            let mut c = cfg(server_speeds(3, 0.5, 1.5), script, policy);
+            c.router = RouterKind::CacheAware;
+            c.dynamic.cache = enabled_cache();
+            let a = run(&t, &c.view());
+            let b = run_scan(&t, &c.view());
+            let tag = format!("cache-aware/{}", policy.name());
+            assert_reports_bitwise(&a, &b, &tag);
         }
     }
 

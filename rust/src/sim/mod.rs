@@ -19,8 +19,8 @@ pub use dynamic::{
 };
 pub use event::{
     simulate_event_cluster, simulate_event_cluster_pooled, simulate_event_cluster_pooled_traced,
-    simulate_event_cluster_traced, EventClusterConfig, EventReport, EventServerReport,
-    MigrationReason, MigrationRecord, UNROUTED,
+    simulate_event_cluster_scan, simulate_event_cluster_traced, EventClusterConfig, EventReport,
+    EventServerReport, MigrationReason, MigrationRecord, UNROUTED,
 };
 pub use joint::{solve_joint, JointSolution};
 

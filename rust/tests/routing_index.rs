@@ -1,0 +1,235 @@
+//! ISSUE 10 forall suite: indexed routing is decision-identical to
+//! the O(N) reference scan. Three layers, all deterministic:
+//!
+//!  * pointwise — random fleets (random speeds, queue histories,
+//!    kill/revive churn) probed with random arrivals: `route_indexed`
+//!    and `route_resume_indexed` must pick exactly the scan's server,
+//!    for every policy and step credit;
+//!  * trace — `route_trace` (indexed, incremental) versus
+//!    `route_trace_scan` (the executable specification) over marked
+//!    random traces: identical assignment vectors;
+//!  * engine — `simulate_event_cluster` (indexed dispatch) versus
+//!    `simulate_event_cluster_scan` under random fault scripts and
+//!    migration policies: bitwise-identical reports, reroutes and
+//!    checkpoint resumes included.
+
+use aigc_edge::bandwidth::EqualAllocator;
+use aigc_edge::cache::CacheSettings;
+use aigc_edge::channel::Link;
+use aigc_edge::config::{ArrivalProcessKind, ArrivalSettings, ExperimentConfig};
+use aigc_edge::delay::BatchDelayModel;
+use aigc_edge::faults::{FaultScript, MigrationPolicyKind};
+use aigc_edge::quality::PowerLawQuality;
+use aigc_edge::routing::{
+    route_trace, route_trace_scan, FleetIndex, RouteContext, Router, RouterKind, ServerState,
+};
+use aigc_edge::scheduler::Stacking;
+use aigc_edge::sim::{
+    server_speeds, simulate_event_cluster, simulate_event_cluster_scan, DynamicConfig,
+    EventClusterConfig, EventReport,
+};
+use aigc_edge::trace::{Arrival, ArrivalTrace, PromptMark};
+use aigc_edge::util::Pcg64;
+
+fn all_kinds() -> [RouterKind; 5] {
+    [
+        RouterKind::RoundRobin,
+        RouterKind::JoinShortestQueue,
+        RouterKind::QualityAware,
+        RouterKind::LiveState,
+        RouterKind::CacheAware,
+    ]
+}
+
+fn ctx() -> RouteContext {
+    RouteContext { total_bandwidth_hz: 40_000.0, content_bits: 24_000.0 }
+}
+
+/// Two identically-configured instances of one policy: stateful
+/// routers (round-robin rotation, cache-aware shadows) must evolve in
+/// lockstep on the indexed and scan sides for the comparison to mean
+/// anything.
+fn build_pair(kind: RouterKind) -> (Box<dyn Router>, Box<dyn Router>) {
+    let delay = BatchDelayModel::paper();
+    let cache = CacheSettings { enabled: true, capacity: 8, ..CacheSettings::default() };
+    (kind.build_with_cache(delay, cache), kind.build_with_cache(delay, cache))
+}
+
+fn random_probe(rng: &mut Pcg64, id: usize, now: f64) -> Arrival {
+    Arrival {
+        id,
+        t_s: now,
+        deadline_s: rng.uniform_in(1.0, 15.0),
+        link: Link::new(rng.uniform_in(3.0, 12.0)),
+        mark: PromptMark { model: rng.below(3) as u32, prompt: rng.below(9) as u32 },
+    }
+}
+
+/// Random kill/revive/assign churn, reported to the index exactly as
+/// the hot paths report their mutations. Leaves at least one server
+/// alive (routing an all-dead fleet is a panic by contract, on both
+/// paths).
+fn churn(rng: &mut Pcg64, fleet: &mut [ServerState], index: &mut FleetIndex, now: f64) {
+    for _ in 0..1 + rng.below(4) {
+        let id = rng.below(fleet.len() as u64) as usize;
+        match rng.below(6) {
+            0 => {
+                fleet[id].alive = false;
+                index.remove(id);
+            }
+            1 => {
+                fleet[id].alive = true;
+                index.touch(&fleet[id]);
+            }
+            _ => {
+                if fleet[id].alive {
+                    fleet[id].advance(now);
+                    fleet[id].assign(now, rng.uniform_in(0.05, 2.0));
+                    index.touch(&fleet[id]);
+                }
+            }
+        }
+    }
+    if !fleet.iter().any(|s| s.alive) {
+        fleet[0].alive = true;
+        index.touch(&fleet[0]);
+    }
+}
+
+#[test]
+fn pointwise_indexed_decisions_match_scan_on_random_fleets() {
+    let ctx = ctx();
+    let delay = BatchDelayModel::paper();
+    for n in [1usize, 2, 5, 17, 48] {
+        for (k, kind) in all_kinds().into_iter().enumerate() {
+            let mut rng = Pcg64::new(0xF0E + n as u64, 11 + k as u64);
+            let speeds: Vec<f64> = (0..n).map(|_| rng.uniform_in(0.25, 4.0)).collect();
+            let mut fleet = ServerState::fleet(&speeds);
+            let mut index = FleetIndex::new(&fleet);
+            let (mut idx_router, mut scan_router) = build_pair(kind);
+            let mut now = 0.0;
+            for round in 0..40 {
+                now += rng.uniform_in(0.0, 0.5);
+                churn(&mut rng, &mut fleet, &mut index, now);
+                let probe = random_probe(&mut rng, round, now);
+                let tag = format!("{} n={n} round={round}", kind.name());
+                let via_index = idx_router.route_indexed(&probe, &fleet, &ctx, &mut index);
+                let via_scan = scan_router.route(&probe, &fleet, &ctx);
+                assert_eq!(via_index, via_scan, "{tag}");
+                for done in [0u32, 3, 999] {
+                    let ri =
+                        idx_router.route_resume_indexed(&probe, done, &fleet, &ctx, &mut index);
+                    let rs = scan_router.route_resume(&probe, done, &fleet, &ctx);
+                    assert_eq!(ri, rs, "{tag} resume credit {done}");
+                }
+                // Charge the agreed choice so the fleet, the index and
+                // both routers' internal state stay in lockstep.
+                fleet[via_index].advance(now);
+                fleet[via_index].assign(now, delay.g(1) / fleet[via_index].speed);
+                index.touch(&fleet[via_index]);
+            }
+        }
+    }
+}
+
+fn marked_trace(max_requests: usize, seed: u64) -> ArrivalTrace {
+    let cfg = ExperimentConfig::paper();
+    let arrival = ArrivalSettings {
+        process: ArrivalProcessKind::Poisson,
+        rate_hz: 30.0,
+        burst_rate_hz: 30.0,
+        period_s: 60.0,
+        duty: 0.5,
+        horizon_s: max_requests as f64,
+        max_requests,
+        prompt_universe: 64,
+        zipf_s: 1.3,
+        models: 3,
+    };
+    ArrivalTrace::generate(&cfg.scenario, &arrival, seed)
+}
+
+#[test]
+fn route_trace_matches_scan_over_marked_traces() {
+    let delay = BatchDelayModel::paper();
+    for (n, seed) in [(2usize, 1u64), (7, 2), (33, 3)] {
+        let trace = marked_trace(400, seed);
+        let speeds = server_speeds(n, 0.5, 2.0);
+        for kind in all_kinds() {
+            let (mut idx_router, mut scan_router) = build_pair(kind);
+            let mut fleet = ServerState::fleet(&speeds);
+            let indexed = route_trace(&trace, &mut fleet, idx_router.as_mut(), &delay);
+            let mut scan_fleet = ServerState::fleet(&speeds);
+            let scan = route_trace_scan(&trace, &mut scan_fleet, scan_router.as_mut(), &delay);
+            assert_eq!(indexed, scan, "{} n={n} seed={seed}", kind.name());
+        }
+    }
+}
+
+fn assert_reports_bitwise(a: &EventReport, b: &EventReport, tag: &str) {
+    assert_eq!(a.assignment, b.assignment, "{tag}: assignment");
+    assert_eq!(a.horizon_s.to_bits(), b.horizon_s.to_bits(), "{tag}: horizon");
+    assert_eq!(a.migrations.len(), b.migrations.len(), "{tag}: migration count");
+    for (x, y) in a.migrations.iter().zip(&b.migrations) {
+        assert_eq!((x.id, x.from, x.to), (y.id, y.from, y.to), "{tag}: migration");
+        assert_eq!(x.t_s.to_bits(), y.t_s.to_bits(), "{tag}: migration instant");
+    }
+    for (x, y) in a.outcomes.iter().zip(&b.outcomes) {
+        assert_eq!(x.disposition, y.disposition, "{tag}: request {}", x.id);
+        assert_eq!(x.steps, y.steps, "{tag}: request {}", x.id);
+        assert_eq!(x.quality.to_bits(), y.quality.to_bits(), "{tag}: request {}", x.id);
+        assert_eq!(x.resolved_s.to_bits(), y.resolved_s.to_bits(), "{tag}: request {}", x.id);
+    }
+}
+
+#[test]
+fn engines_bitwise_identical_under_random_fault_scripts() {
+    let cfg = ExperimentConfig::paper();
+    let scheduler = Stacking::default();
+    let allocator = EqualAllocator;
+    let delay = BatchDelayModel::paper();
+    let quality = PowerLawQuality::paper();
+    let pairs = [
+        (RouterKind::JoinShortestQueue, MigrationPolicyKind::RequeueOnDeath),
+        (RouterKind::QualityAware, MigrationPolicyKind::StealWhenIdle),
+        (RouterKind::LiveState, MigrationPolicyKind::Checkpoint),
+        (RouterKind::CacheAware, MigrationPolicyKind::Checkpoint),
+    ];
+    for seed in [3u64, 9] {
+        let trace = marked_trace(350, seed);
+        let speeds = server_speeds(5, 0.5, 1.75);
+        for (router, migration) in pairs {
+            let script = FaultScript::random(5, 60.0, 20.0, 7.0, seed + 31);
+            let mut dynamic: DynamicConfig = (&cfg.dynamic).into();
+            if router == RouterKind::CacheAware {
+                dynamic.cache =
+                    CacheSettings { enabled: true, capacity: 8, ..CacheSettings::default() };
+            }
+            let event_cfg = EventClusterConfig {
+                speeds: &speeds,
+                router,
+                dynamic,
+                faults: &script,
+                migration,
+                resume_transfer_s: 0.4,
+            };
+            let indexed = simulate_event_cluster(
+                &trace,
+                &scheduler,
+                &allocator,
+                &delay,
+                &quality,
+                &event_cfg,
+            );
+            let scan = simulate_event_cluster_scan(
+                &trace,
+                &scheduler,
+                &allocator,
+                &delay,
+                &quality,
+                &event_cfg,
+            );
+            assert_reports_bitwise(&indexed, &scan, &format!("{} seed={seed}", router.name()));
+        }
+    }
+}

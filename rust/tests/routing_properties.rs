@@ -10,13 +10,17 @@
 //! * **determinism** — identical seed (trace + fleet + policy) implies
 //!   an identical per-server assignment;
 //! * **JSQ minimality** — join-shortest-queue never routes to a server
-//!   with strictly more outstanding work than some alive alternative.
+//!   with strictly more outstanding work than some alive alternative;
+//! * **total_cmp pin (ISSUE 10)** — the router scans' migration from
+//!   `partial_cmp(..).unwrap()` to `f64::total_cmp` reorders nothing
+//!   on the finite, non-negative keys those comparators actually see.
 
+use aigc_edge::channel::Link;
 use aigc_edge::config::{ArrivalProcessKind, ArrivalSettings, ExperimentConfig};
 use aigc_edge::delay::BatchDelayModel;
 use aigc_edge::prop_assert;
 use aigc_edge::routing::{route_trace, RouteContext, RouterKind, ServerState};
-use aigc_edge::trace::ArrivalTrace;
+use aigc_edge::trace::{Arrival, ArrivalTrace, PromptMark};
 use aigc_edge::util::prop::{forall, Gen};
 
 /// A random small trace: Poisson or burst, a handful of seconds long.
@@ -151,6 +155,79 @@ fn jsq_never_routes_to_a_strictly_longer_queue() {
             );
             let est = delay.g(1) / servers[choice].speed;
             servers[choice].assign(arrival.t_s, est);
+        }
+        true
+    });
+}
+
+#[test]
+fn total_cmp_matches_partial_cmp_on_router_comparator_inputs() {
+    // ISSUE 10 migrated every router scan from the NaN-panicking
+    // `partial_cmp(..).unwrap()` to `f64::total_cmp`. On the values
+    // those comparators actually see — finite, non-negative work /
+    // backlog seconds, never -0.0 (IEEE subtraction of equal operands
+    // yields +0.0, and the clamp's other arm is the +0.0 literal) —
+    // the two orders coincide; pinning that equivalence means the swap
+    // can never reorder a scan.
+    forall("total_cmp == partial_cmp on finite non-negative keys", 400, |g| {
+        let sample = |g: &mut Gen| -> f64 {
+            match g.usize_in(0, 3) {
+                0 => 0.0,
+                1 => g.usize_in(0, 12) as f64 * 0.25, // lattice: frequent exact ties
+                _ => g.f64_in(0.0, 50.0),
+            }
+        };
+        let a = sample(g);
+        let b = sample(g);
+        prop_assert!(
+            g,
+            a.total_cmp(&b) == a.partial_cmp(&b).unwrap(),
+            "total_cmp({a}, {b}) = {:?} but partial_cmp = {:?}",
+            a.total_cmp(&b),
+            a.partial_cmp(&b).unwrap()
+        );
+        true
+    });
+}
+
+#[test]
+fn jsq_scan_order_pinned_to_the_partial_cmp_reference() {
+    // The executable half of the pin: on random busy/failed fleets,
+    // the total_cmp JSQ scan must pick exactly the server the
+    // pre-ISSUE-10 `partial_cmp(..).unwrap()` argmin picks.
+    forall("jsq total_cmp scan == partial_cmp argmin", 250, |g| {
+        let mut servers = random_fleet(g);
+        let delay = BatchDelayModel::paper();
+        let mut router = RouterKind::JoinShortestQueue.build(delay);
+        let ctx = RouteContext { total_bandwidth_hz: 40_000.0, content_bits: 24_000.0 };
+        let mut now = 0.0;
+        for round in 0..25usize {
+            now += g.f64_in(0.0, 0.4);
+            let id = g.usize_in(0, servers.len() - 1);
+            if servers[id].alive && g.bool() {
+                servers[id].advance(now);
+                servers[id].assign(now, g.f64_in(0.05, 1.5));
+            }
+            let probe = Arrival {
+                id: round,
+                t_s: now,
+                deadline_s: 5.0,
+                link: Link::new(7.0),
+                mark: PromptMark::ZERO,
+            };
+            let choice = router.route(&probe, &servers, &ctx);
+            let reference = servers
+                .iter()
+                .filter(|s| s.alive)
+                .map(|s| (s.outstanding_work_s(now), s.id))
+                .min_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)))
+                .map(|(_, id)| id)
+                .unwrap();
+            prop_assert!(
+                g,
+                choice == reference,
+                "round {round}: total_cmp scan chose {choice}, partial_cmp argmin {reference}"
+            );
         }
         true
     });
